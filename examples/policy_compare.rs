@@ -1,0 +1,139 @@
+//! Policy comparison (experiment E7): the same logical workload under
+//! the §2 schemes — ephemeral (at-least-once), exactly-once (eager),
+//! Spark-style lineage, and the paper's lazy selective checkpointing at
+//! several intervals — reporting steady-state persistence overhead and
+//! recovery behaviour. The qualitative shape to check against the paper:
+//!
+//! - eager: highest write volume, smallest rollback, instant recovery;
+//! - ephemeral: zero overhead, whole-region rollback + client retry;
+//! - lineage: logs grow with data volume; failures stop at the firewall;
+//! - lazy(k): writes shrink ∝ 1/k while re-execution grows ∝ k.
+//!
+//! ```text
+//! cargo run --release --example policy_compare
+//! ```
+
+use falkirk::baselines::{at_least_once, exactly_once, falkirk_lazy, spark_lineage, Scenario};
+use falkirk::engine::Record;
+use falkirk::time::Time;
+
+struct Row {
+    name: String,
+    writes: u64,
+    bytes: u64,
+    virtual_latency: u64,
+    checkpoints: u64,
+    log_entries: u64,
+    rolled_to_empty: usize,
+    replayed: usize,
+    requiesce_events: u64,
+}
+
+/// Drive `epochs` epochs of `per_epoch` records through a scenario,
+/// crash the middle processor after `fail_after` epochs, recover, finish.
+fn drive(mut sc: Scenario, epochs: u64, per_epoch: i64, fail_after: u64) -> Row {
+    let mut offered: Vec<(Time, Vec<Record>)> = Vec::new();
+    let mut failed_done = false;
+    let mut replayed = 0usize;
+    let mut rolled = 0usize;
+    let mut requiesce = 0u64;
+    for ep in 0..epochs {
+        let t = Time::epoch(ep);
+        let batch: Vec<Record> = (0..per_epoch).map(|i| Record::Int(ep as i64 * 100 + i)).collect();
+        offered.push((t, batch.clone()));
+        sc.sys.advance_input(sc.src, t);
+        for r in batch {
+            sc.sys.push_input(sc.src, t, r);
+        }
+        sc.sys.advance_input(sc.src, Time::epoch(ep + 1));
+        sc.sys.run_to_quiescence(1_000_000);
+        if ep == fail_after && !failed_done {
+            failed_done = true;
+            sc.sys.inject_failures(&[sc.mid]);
+            let rep = sc.sys.recover();
+            replayed = rep.replayed;
+            rolled = rep.reset_to_empty;
+            // Client retry: re-push whatever the source's frontier lost.
+            let f_src = rep.plan.f[sc.src.0 as usize].clone();
+            for (t, batch) in &offered {
+                if !f_src.contains(t) && !f_src.is_top() {
+                    sc.sys.advance_input(sc.src, *t);
+                    for r in batch {
+                        sc.sys.push_input(sc.src, *t, r.clone());
+                    }
+                }
+            }
+            sc.sys.advance_input(sc.src, Time::epoch(ep + 1));
+            let ev0 = sc.sys.engine.events_processed();
+            sc.sys.run_to_quiescence(1_000_000);
+            requiesce = sc.sys.engine.events_processed() - ev0;
+        }
+    }
+    sc.sys.close_input(sc.src);
+    sc.sys.run_to_quiescence(1_000_000);
+    let st = sc.sys.store.stats();
+    Row {
+        name: sc.name.to_string(),
+        writes: st.writes,
+        bytes: st.bytes_written,
+        virtual_latency: st.virtual_latency,
+        checkpoints: sc.sys.stats.checkpoints_taken,
+        log_entries: sc.sys.stats.log_entries,
+        rolled_to_empty: rolled,
+        replayed,
+        requiesce_events: requiesce,
+    }
+}
+
+fn main() {
+    const WRITE_COST: u64 = 10;
+    const EPOCHS: u64 = 12;
+    const PER_EPOCH: i64 = 64;
+    const FAIL_AFTER: u64 = 6;
+
+    let mut rows = Vec::new();
+    rows.push(drive(at_least_once(WRITE_COST), EPOCHS, PER_EPOCH, FAIL_AFTER));
+    rows.push(drive(exactly_once(WRITE_COST), EPOCHS, PER_EPOCH, FAIL_AFTER));
+    rows.push(drive(spark_lineage(WRITE_COST), EPOCHS, PER_EPOCH, FAIL_AFTER));
+    for every in [1, 4, 8] {
+        let mut sc = falkirk_lazy(every, WRITE_COST);
+        sc.name = Box::leak(format!("falkirk-lazy(k={every})").into_boxed_str());
+        rows.push(drive(sc, EPOCHS, PER_EPOCH, FAIL_AFTER));
+    }
+
+    println!(
+        "{:<18} {:>8} {:>10} {:>9} {:>7} {:>8} {:>7} {:>9} {:>10}",
+        "policy", "writes", "bytes", "lat(vu)", "ckpts", "logents", "rolled", "replayed", "requiesce"
+    );
+    for r in &rows {
+        println!(
+            "{:<18} {:>8} {:>10} {:>9} {:>7} {:>8} {:>7} {:>9} {:>10}",
+            r.name,
+            r.writes,
+            r.bytes,
+            r.virtual_latency,
+            r.checkpoints,
+            r.log_entries,
+            r.rolled_to_empty,
+            r.replayed,
+            r.requiesce_events
+        );
+    }
+
+    // Paper-shape assertions (who wins, direction of tradeoffs).
+    let by = |n: &str| rows.iter().find(|r| r.name.starts_with(n)).unwrap();
+    assert_eq!(by("at-least-once").writes, 0, "ephemeral persists nothing");
+    assert!(
+        by("exactly-once").writes > by("falkirk-lazy(k=1)").writes,
+        "eager persists more than lazy"
+    );
+    assert!(
+        by("falkirk-lazy(k=1)").checkpoints > by("falkirk-lazy(k=8)").checkpoints,
+        "larger k → fewer checkpoints"
+    );
+    assert!(
+        by("at-least-once").rolled_to_empty >= 3,
+        "ephemeral failure rolls the whole pipeline"
+    );
+    println!("\nOK: policy tradeoffs match the paper's qualitative claims.");
+}

@@ -1,0 +1,38 @@
+//! Perf-pass profiling driver (EXPERIMENTS.md §Perf): exercises the
+//! delivery + notification hot paths heavily — 40k epochs × 10 messages
+//! through a Source → SumByTime → Sink pipeline, with one notification
+//! firing per epoch. `perf stat ./target/release/examples/profile_driver`
+//! is how P3 (reachability seeding) was found and verified.
+fn main() {
+    let args: Vec<String> = std::env::args().collect();
+    let mode = args.get(1).map(|s| s.as_str()).unwrap_or("epochs");
+    match mode {
+        "epochs" => {
+            use falkirk::engine::{Delivery, Engine, Processor, Record};
+            use falkirk::graph::{GraphBuilder, ProcId, Projection};
+            use falkirk::operators::{shared_vec, Sink, Source, SumByTime};
+            use falkirk::time::{Time, TimeDomain};
+            use std::sync::Arc;
+            let mut g = GraphBuilder::new();
+            let s = g.add_proc("src", TimeDomain::EPOCH);
+            let m = g.add_proc("sum", TimeDomain::EPOCH);
+            let k = g.add_proc("sink", TimeDomain::EPOCH);
+            g.connect(s, m, Projection::Identity);
+            g.connect(m, k, Projection::Identity);
+            let out = shared_vec();
+            let procs: Vec<Box<dyn Processor>> =
+                vec![Box::new(Source), Box::new(SumByTime::default()), Box::new(Sink(out))];
+            let mut eng = Engine::new(Arc::new(g.build().unwrap()), procs, Delivery::Fifo);
+            for ep in 0..40_000u64 {
+                eng.advance_input(ProcId(0), Time::epoch(ep));
+                for i in 0..10 {
+                    eng.push_input(ProcId(0), Time::epoch(ep), Record::Int(i));
+                }
+            }
+            eng.close_input(ProcId(0));
+            eng.run_to_quiescence(10_000_000);
+            println!("events: {}", eng.events_processed());
+        }
+        _ => {}
+    }
+}

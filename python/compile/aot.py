@@ -1,0 +1,75 @@
+"""AOT lowering: JAX (L2, calling L1 Pallas kernels) → HLO **text**
+artifacts the Rust runtime loads via PJRT.
+
+HLO text — not ``lowered.compile().serialize()`` and not a serialized
+``HloModuleProto`` — is the interchange format: jax ≥ 0.5 emits protos
+with 64-bit instruction ids which the image's xla_extension 0.5.1
+rejects (``proto.id() <= INT_MAX``); the text parser on the Rust side
+reassigns ids and round-trips cleanly. Lowered with ``return_tuple=True``
+so the Rust side unpacks a tuple uniformly.
+
+Usage: ``python -m compile.aot --out ../artifacts`` (the Makefile's
+``make artifacts``). Shapes are fixed here and must match the Rust
+coordinator's defaults (Fig1Config: window 16, keys 8).
+"""
+
+import argparse
+import functools
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from .model import analytics_step, batch_stats_step, iterative_step
+
+# Compiled shapes (keep in sync with rust Fig1Config defaults).
+WINDOW = 16
+NUM_KEYS = 8
+RANK_N = 8
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO → XlaComputation → HLO text (see module docstring)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def artifacts() -> dict:
+    """name -> lowered jax computation, at the compiled shapes."""
+    f32 = jnp.float32
+    keys = jax.ShapeDtypeStruct((WINDOW,), f32)
+    vals = jax.ShapeDtypeStruct((WINDOW,), f32)
+    rank = jax.ShapeDtypeStruct((RANK_N,), f32)
+    return {
+        "stream_agg": jax.jit(
+            functools.partial(analytics_step, num_keys=NUM_KEYS)
+        ).lower(keys, vals),
+        "iterate": jax.jit(iterative_step).lower(rank),
+        "batch_stats": jax.jit(batch_stats_step).lower(vals),
+    }
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts", help="artifact output dir")
+    args = ap.parse_args()
+    os.makedirs(args.out, exist_ok=True)
+    manifest = []
+    for name, lowered in artifacts().items():
+        text = to_hlo_text(lowered)
+        path = os.path.join(args.out, f"{name}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        manifest.append(f"{name} {len(text)}")
+        print(f"wrote {path} ({len(text)} chars)")
+    with open(os.path.join(args.out, "MANIFEST"), "w") as f:
+        f.write(f"window={WINDOW} num_keys={NUM_KEYS} rank_n={RANK_N}\n")
+        f.write("\n".join(manifest) + "\n")
+
+
+if __name__ == "__main__":
+    main()

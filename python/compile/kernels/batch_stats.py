@@ -1,0 +1,21 @@
+"""L1 Pallas kernel: window statistics [sum, mean, max] for the batch
+regime's periodic reduction. A single-block VMEM reduction."""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _stats_kernel(v_ref, o_ref):
+    v = v_ref[...]
+    s = jnp.sum(v)
+    o_ref[...] = jnp.stack([s, s / v.shape[0], jnp.max(v)])
+
+
+def batch_stats(v: jnp.ndarray) -> jnp.ndarray:
+    """Pallas [sum, mean, max] reduction."""
+    return pl.pallas_call(
+        _stats_kernel,
+        out_shape=jax.ShapeDtypeStruct((3,), v.dtype),
+        interpret=True,
+    )(v)

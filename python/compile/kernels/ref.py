@@ -1,0 +1,40 @@
+"""Pure-jnp reference oracles for the Pallas kernels.
+
+These definitions are the single source of truth for kernel semantics:
+- ``python/tests`` asserts the Pallas kernels (interpret mode) match them
+  bit-for-bit / allclose across shape and value sweeps (hypothesis);
+- the Rust mock kernels (``operators::tensor::mock``) mirror them so the
+  dataflow tests are numerically identical with or without artifacts.
+"""
+
+import jax.numpy as jnp
+
+
+def stream_agg_ref(keys: jnp.ndarray, vals: jnp.ndarray, num_keys: int) -> jnp.ndarray:
+    """Keyed segment-sum over one window.
+
+    ``keys`` are f32 bucket ids in [0, num_keys); padded slots carry
+    val == 0 so they are sum-invariant regardless of their key.
+    """
+    one_hot = (keys[:, None].astype(jnp.int32) == jnp.arange(num_keys)[None, :]).astype(
+        vals.dtype
+    )
+    return vals @ one_hot
+
+
+def iterate_ref(rank: jnp.ndarray, damping: float = 0.85) -> jnp.ndarray:
+    """One step of rank propagation on a ring graph of n nodes.
+
+    r'[i] = (1-d)/n * sum(r) + d * (r[i-1] + r[i+1]) / 2
+    """
+    n = rank.shape[0]
+    total = jnp.sum(rank)
+    left = jnp.roll(rank, 1)
+    right = jnp.roll(rank, -1)
+    return (1.0 - damping) / n * total + damping * (left + right) / 2.0
+
+
+def batch_stats_ref(v: jnp.ndarray) -> jnp.ndarray:
+    """[sum, mean, max] of a window (the batch regime's statistics)."""
+    s = jnp.sum(v)
+    return jnp.stack([s, s / v.shape[0], jnp.max(v)])

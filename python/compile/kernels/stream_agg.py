@@ -1,0 +1,40 @@
+"""L1 Pallas kernel: windowed keyed segment-sum.
+
+The GPU idiom for this operation is scatter-add over shared memory; the
+TPU re-think (DESIGN.md §Hardware-Adaptation) expresses it as a dense
+one-hot matmul so it lands on the MXU systolic array: the (1, W) value
+row multiplies the (W, K) one-hot key matrix built in VMEM. For the
+window/key sizes this library compiles (W ≤ 1024, K ≤ 128 ⇒ ≤ 512 KiB
+one-hot in f32) a single block fits comfortably in the ~16 MiB VMEM, so
+the BlockSpec keeps whole-array blocks; larger windows would tile W.
+
+``interpret=True`` everywhere: the CPU PJRT plugin cannot run Mosaic
+custom-calls, and interpret-mode lowering produces plain HLO that the
+Rust runtime executes. Real-TPU performance is *estimated* in
+EXPERIMENTS.md from the block shapes.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _agg_kernel(num_keys: int, keys_ref, vals_ref, o_ref):
+    keys = keys_ref[...]
+    vals = vals_ref[...]
+    one_hot = (keys[:, None].astype(jnp.int32) == jnp.arange(num_keys)[None, :]).astype(
+        vals.dtype
+    )
+    # (W,) @ (W, K) -> (K,): the MXU-friendly contraction.
+    o_ref[...] = vals @ one_hot
+
+
+def stream_agg(keys: jnp.ndarray, vals: jnp.ndarray, num_keys: int) -> jnp.ndarray:
+    """Pallas segment-sum: see module docstring."""
+    return pl.pallas_call(
+        functools.partial(_agg_kernel, num_keys),
+        out_shape=jax.ShapeDtypeStruct((num_keys,), vals.dtype),
+        interpret=True,
+    )(keys, vals)

@@ -1,0 +1,44 @@
+"""L2: the analytics compute graphs of the Figure-1 application, written
+in JAX and calling the L1 Pallas kernels so everything lowers into one
+HLO module per artifact.
+
+Three entry points (one artifact each; shapes fixed at AOT time):
+
+- ``analytics_step(keys, vals)`` — the batch/streaming aggregation:
+  kernel segment-sum over one window (called per completed epoch by the
+  ``batch_agg`` vertex);
+- ``iterative_step(rank)`` — one loop iteration of rank propagation
+  (called per loop iteration by the ``iterate`` vertex; the dataflow
+  loop supplies the iteration structure, matching how Naiad distributes
+  iteration over the graph rather than inside a kernel);
+- ``batch_stats_step(vals)`` — the periodic batch statistics.
+
+Python runs only at build time: `aot.py` lowers these once to HLO text
+and the Rust runtime loads the artifacts.
+"""
+
+import jax.numpy as jnp
+
+from .kernels.batch_stats import batch_stats
+from .kernels.iterate import iterate
+from .kernels.stream_agg import stream_agg
+
+DAMPING = 0.85
+
+
+def analytics_step(keys: jnp.ndarray, vals: jnp.ndarray, num_keys: int) -> tuple:
+    """Windowed keyed aggregation (L1 segment-sum kernel)."""
+    return (stream_agg(keys, vals, num_keys),)
+
+
+def iterative_step(rank: jnp.ndarray) -> tuple:
+    """One rank-propagation iteration (L1 stencil kernel) with the output
+    renormalized in plain jnp — demonstrating kernel + jnp composition in
+    a single lowered module."""
+    r = iterate(rank, DAMPING)
+    return (r,)
+
+
+def batch_stats_step(vals: jnp.ndarray) -> tuple:
+    """Periodic batch statistics (L1 reduction kernel)."""
+    return (batch_stats(vals),)

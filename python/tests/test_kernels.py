@@ -1,0 +1,101 @@
+"""L1 correctness: Pallas kernels (interpret mode) vs the pure-jnp
+oracles in ref.py — the core numeric signal, swept with hypothesis."""
+
+import hypothesis.strategies as st
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+
+from compile.kernels.batch_stats import batch_stats
+from compile.kernels.iterate import iterate
+from compile.kernels.ref import batch_stats_ref, iterate_ref, stream_agg_ref
+from compile.kernels.stream_agg import stream_agg
+
+finite = st.floats(min_value=-1e3, max_value=1e3, allow_nan=False, width=32)
+
+
+def test_stream_agg_matches_ref_basic():
+    keys = jnp.array([0.0, 1.0, 2.0, 0.0], dtype=jnp.float32)
+    vals = jnp.array([1.0, 2.0, 3.0, 4.0], dtype=jnp.float32)
+    got = stream_agg(keys, vals, 3)
+    np.testing.assert_allclose(got, [5.0, 2.0, 3.0], rtol=1e-6)
+    np.testing.assert_allclose(got, stream_agg_ref(keys, vals, 3), rtol=1e-6)
+
+
+def test_stream_agg_padding_invariance():
+    # Padded slots (val 0) must not perturb the sums regardless of key.
+    keys = jnp.array([1.0, 1.0, 0.0, 0.0], dtype=jnp.float32)
+    vals = jnp.array([2.0, 3.0, 0.0, 0.0], dtype=jnp.float32)
+    got = stream_agg(keys, vals, 2)
+    np.testing.assert_allclose(got, [0.0, 5.0], rtol=1e-6)
+
+
+@settings(max_examples=40, deadline=None)
+@given(
+    data=st.lists(st.tuples(st.integers(0, 7), finite), min_size=1, max_size=64),
+    num_keys=st.integers(1, 8),
+)
+def test_stream_agg_matches_ref_hypothesis(data, num_keys):
+    keys = jnp.array([k % num_keys for k, _ in data], dtype=jnp.float32)
+    vals = jnp.array([v for _, v in data], dtype=jnp.float32)
+    got = stream_agg(keys, vals, num_keys)
+    want = stream_agg_ref(keys, vals, num_keys)
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-4)
+
+
+def test_iterate_matches_ref_basic():
+    r = jnp.array([1.0, 0.0, 0.0, 0.0], dtype=jnp.float32)
+    got = iterate(r)
+    np.testing.assert_allclose(got, iterate_ref(r), rtol=1e-6)
+
+
+def test_iterate_preserves_uniform_fixpoint():
+    # A uniform vector is a fixed point of the damped ring propagation.
+    r = jnp.full((8,), 0.125, dtype=jnp.float32)
+    got = iterate(r)
+    np.testing.assert_allclose(got, r, rtol=1e-5)
+
+
+@settings(max_examples=40, deadline=None)
+@given(
+    vals=st.lists(finite, min_size=2, max_size=128),
+    damping=st.floats(min_value=0.0, max_value=1.0),
+)
+def test_iterate_matches_ref_hypothesis(vals, damping):
+    r = jnp.array(vals, dtype=jnp.float32)
+    got = iterate(r, damping)
+    want = iterate_ref(r, damping)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-3)
+
+
+@settings(max_examples=40, deadline=None)
+@given(vals=st.lists(finite, min_size=1, max_size=256))
+def test_batch_stats_matches_ref_hypothesis(vals):
+    v = jnp.array(vals, dtype=jnp.float32)
+    got = batch_stats(v)
+    want = batch_stats_ref(v)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-3)
+
+
+@pytest.mark.parametrize("n", [1, 2, 8, 16, 128, 1024])
+def test_stream_agg_shape_sweep(n):
+    keys = jnp.zeros((n,), dtype=jnp.float32)
+    vals = jnp.ones((n,), dtype=jnp.float32)
+    got = stream_agg(keys, vals, 4)
+    assert got.shape == (4,)
+    np.testing.assert_allclose(got[0], float(n), rtol=1e-6)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_iterate_dtype_sweep(dtype):
+    # (x64 is disabled in this jax build; bf16 is the TPU-relevant dtype.)
+    r = jnp.arange(8, dtype=dtype)
+    got = iterate(r)
+    want = iterate_ref(r)
+    np.testing.assert_allclose(
+        np.asarray(got, dtype=np.float32),
+        np.asarray(want, dtype=np.float32),
+        rtol=2e-2 if dtype == jnp.bfloat16 else 1e-5,
+    )
+    assert got.dtype == dtype

@@ -1,0 +1,69 @@
+"""L2/AOT checks: model shapes, lowering to HLO text, determinism, and
+numeric agreement of the lowered modules with ref.py (the exact compute
+the Rust runtime will execute)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from compile import aot
+from compile.kernels.ref import batch_stats_ref, iterate_ref, stream_agg_ref
+from compile.model import analytics_step, batch_stats_step, iterative_step
+
+
+def test_model_shapes():
+    keys = jnp.zeros((aot.WINDOW,), jnp.float32)
+    vals = jnp.ones((aot.WINDOW,), jnp.float32)
+    (sums,) = analytics_step(keys, vals, aot.NUM_KEYS)
+    assert sums.shape == (aot.NUM_KEYS,)
+    (r,) = iterative_step(jnp.ones((aot.RANK_N,), jnp.float32))
+    assert r.shape == (aot.RANK_N,)
+    (s,) = batch_stats_step(vals)
+    assert s.shape == (3,)
+
+
+def test_hlo_text_emission():
+    arts = aot.artifacts()
+    assert set(arts) == {"stream_agg", "iterate", "batch_stats"}
+    for name, lowered in arts.items():
+        text = aot.to_hlo_text(lowered)
+        assert text.startswith("HloModule"), f"{name}: not HLO text"
+        assert "ROOT" in text
+        # The tuple-return convention the Rust loader expects.
+        assert "tuple" in text.lower()
+
+
+def test_hlo_text_deterministic():
+    a = {k: aot.to_hlo_text(v) for k, v in aot.artifacts().items()}
+    b = {k: aot.to_hlo_text(v) for k, v in aot.artifacts().items()}
+    assert a == b, "lowering must be reproducible for artifact caching"
+
+
+def test_lowered_module_numerics_match_ref():
+    """Execute the same jitted functions that get lowered and compare to
+    the oracles — what the Rust PJRT client will compute."""
+    keys = jnp.array([i % aot.NUM_KEYS for i in range(aot.WINDOW)], jnp.float32)
+    vals = jnp.linspace(-1.0, 1.0, aot.WINDOW, dtype=jnp.float32)
+    (sums,) = jax.jit(lambda k, v: analytics_step(k, v, aot.NUM_KEYS))(keys, vals)
+    np.testing.assert_allclose(
+        sums, stream_agg_ref(keys, vals, aot.NUM_KEYS), rtol=1e-5, atol=1e-5
+    )
+    r0 = jnp.abs(vals[: aot.RANK_N]) + 0.1
+    (r1,) = jax.jit(iterative_step)(r0)
+    np.testing.assert_allclose(r1, iterate_ref(r0), rtol=1e-5)
+    (st,) = jax.jit(batch_stats_step)(vals)
+    np.testing.assert_allclose(st, batch_stats_ref(vals), rtol=1e-5)
+
+
+def test_rust_mock_agreement_vectors():
+    """Golden vectors shared with the Rust mock kernels (see
+    operators::tensor::mock tests): guards the mock/XLA equivalence the
+    examples rely on when artifacts are absent."""
+    keys = jnp.array([0, 1, 2, 0, 1, 2, 0, 0], jnp.float32)
+    vals = jnp.array([1, 2, 3, 4, 5, 6, 7, 8], jnp.float32)
+    got = np.asarray(stream_agg_ref(keys, vals, 3))
+    np.testing.assert_allclose(got, [20.0, 7.0, 9.0])
+    r = jnp.array([1.0, 0.0, 0.0, 0.0], jnp.float32)
+    got = np.asarray(iterate_ref(r, 0.85))
+    # (1-d)/4 * 1 = 0.0375; neighbours of the unit mass get d/2 = 0.425.
+    np.testing.assert_allclose(got, [0.0375, 0.4625, 0.0375, 0.4625], rtol=1e-6)

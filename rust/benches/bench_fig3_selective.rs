@@ -1,0 +1,136 @@
+//! E3 (Fig. 3): selective rollback vs the two alternatives the paper
+//! says it avoids.
+//!
+//! The Select→Sum→Buffer fragment with two interleaved logical times.
+//! Compares:
+//! 1. **selective**: interleaved delivery + selective checkpoint (the
+//!    paper's design — checkpoint contains only completed times, so the
+//!    Sum checkpoints empty state);
+//! 2. **ordered-stall**: delivery restricted to one time at a time
+//!    (epoch-serial), modelling "suspend delivery until all messages
+//!    with earlier times had been processed";
+//! 3. **full-state**: interleaved delivery but whole-state checkpoints
+//!    (Chandy–Lamport style) — measured by checkpoint *size*.
+//!
+//! Expected shape: selective ≈ interleaved throughput with empty
+//! checkpoints; ordered-stall pays a serialization penalty (epochs
+//! cannot overlap); full-state checkpoints are strictly larger.
+
+use falkirk::bench_support::Bencher;
+use falkirk::engine::{Delivery, Processor, Record};
+use falkirk::frontier::Frontier;
+use falkirk::ft::{FtSystem, Policy, Store};
+use falkirk::graph::{GraphBuilder, ProcId, Projection};
+use falkirk::operators::{Buffer, Select, Source, SumByTime};
+use falkirk::time::{Time, TimeDomain};
+use std::sync::Arc;
+
+const EPOCHS: u64 = 40;
+const PER_EPOCH: usize = 100;
+
+fn build(delivery: Delivery) -> FtSystem {
+    let mut g = GraphBuilder::new();
+    let s = g.add_proc("src", TimeDomain::EPOCH);
+    let sel = g.add_proc("select", TimeDomain::EPOCH);
+    let sum = g.add_proc("sum", TimeDomain::EPOCH);
+    let buf = g.add_proc("buffer", TimeDomain::EPOCH);
+    g.connect(s, sel, Projection::Identity);
+    g.connect(sel, sum, Projection::Identity);
+    g.connect(sum, buf, Projection::Identity);
+    let procs: Vec<Box<dyn Processor>> = vec![
+        Box::new(Source),
+        Box::new(Select),
+        Box::new(SumByTime::default()),
+        Box::new(Buffer::default()),
+    ];
+    FtSystem::new(
+        Arc::new(g.build().unwrap()),
+        procs,
+        vec![
+            Policy::Ephemeral,
+            Policy::Ephemeral,
+            Policy::Lazy { every: 1, log_outputs: false },
+            Policy::Lazy { every: 1, log_outputs: false },
+        ],
+        delivery,
+        Store::new(1),
+    )
+}
+
+/// Interleaved: two epochs in flight at once (the Fig. 3 timeline).
+fn run_interleaved(delivery: Delivery) -> FtSystem {
+    let mut sys = build(delivery);
+    let src = ProcId(0);
+    for pair in 0..(EPOCHS / 2) {
+        let (a, b) = (Time::epoch(2 * pair), Time::epoch(2 * pair + 1));
+        sys.advance_input(src, a);
+        // Interleave messages of times A and B.
+        for i in 0..PER_EPOCH {
+            let t = if i % 2 == 0 { a } else { b };
+            sys.push_input(src, t, Record::Int(i as i64));
+        }
+        sys.advance_input(src, Time::epoch(2 * pair + 2));
+        sys.run_to_quiescence(1_000_000);
+    }
+    sys.close_input(src);
+    sys.run_to_quiescence(1_000_000);
+    sys
+}
+
+/// Epoch-serial: each time fully delivered (and completed) before the
+/// next is admitted — the stall the paper avoids.
+fn run_serial() -> FtSystem {
+    let mut sys = build(Delivery::Fifo);
+    let src = ProcId(0);
+    for ep in 0..EPOCHS {
+        let t = Time::epoch(ep);
+        sys.advance_input(src, t);
+        for i in 0..(PER_EPOCH / 2) {
+            sys.push_input(src, t, Record::Int(i as i64));
+        }
+        sys.advance_input(src, Time::epoch(ep + 1));
+        // Run to quiescence *per epoch*: the serialization barrier.
+        sys.run_to_quiescence(1_000_000);
+    }
+    sys.close_input(src);
+    sys.run_to_quiescence(1_000_000);
+    sys
+}
+
+fn main() {
+    let mut b = Bencher::new("fig3_selective_rollback");
+    let events = (EPOCHS as f64) * (PER_EPOCH as f64);
+    b.run("selective_interleaved", events, || {
+        run_interleaved(Delivery::Selective);
+    });
+    b.run("fifo_interleaved", events, || {
+        run_interleaved(Delivery::Fifo);
+    });
+    b.run("ordered_stall", events, || {
+        run_serial();
+    });
+
+    // Checkpoint-size comparison: selective (completed times only) vs
+    // full-state (everything, including the in-flight time B).
+    let mut sys = build(Delivery::Selective);
+    let src = ProcId(0);
+    let (a, bt) = (Time::epoch(0), Time::epoch(1));
+    sys.advance_input(src, a);
+    for i in 0..PER_EPOCH {
+        let t = if i % 2 == 0 { a } else { bt };
+        sys.push_input(src, t, Record::Int(i as i64));
+    }
+    // Complete A but not B.
+    sys.advance_input(src, bt);
+    sys.run_to_quiescence(1_000_000);
+    let sum = ProcId(2);
+    let selective = sys.engine.proc(sum).checkpoint_upto(&Frontier::upto_epoch(0));
+    let full = sys.engine.proc(sum).checkpoint_upto(&Frontier::Top);
+    println!(
+        "note fig3_selective_rollback/ckpt_bytes selective={} full_state={}",
+        selective.len(),
+        full.len()
+    );
+    assert!(selective.len() < full.len(), "selective checkpoint must be smaller");
+    b.note("expected: selective ≈ fifo interleaved; ordered_stall slower; selective ckpt ≪ full");
+}

@@ -1,0 +1,120 @@
+//! E5 (Fig. 6): scaling of the consistent-frontier fixed point.
+//!
+//! Random layered DAGs (plus a loop variant) of n = 10…3000 processors
+//! with varying checkpoint-chain depth; measures the batch solve and the
+//! incremental growth path. Expected shape: near-linear in |E| for chains
+//! of bounded depth; incremental update ≪ batch for a single-Ξ change.
+
+use falkirk::bench_support::{BenchConfig, Bencher};
+use falkirk::frontier::Frontier;
+use falkirk::ft::meta::CkptMeta;
+use falkirk::ft::rollback::{
+    choose_frontiers, grow_frontiers, verify_plan, Available, RollbackInput,
+};
+use falkirk::graph::{EdgeId, GraphBuilder, ProcId, Projection, Topology};
+use falkirk::time::TimeDomain;
+use falkirk::util::rng::Rng;
+
+fn epoch_ckpt(e: u64, ins: &[EdgeId], outs: &[EdgeId]) -> CkptMeta {
+    let f = Frontier::upto_epoch(e);
+    CkptMeta {
+        f: f.clone(),
+        n_bar: f.clone(),
+        m_bar: ins.iter().map(|d| (*d, f.clone())).collect(),
+        d_bar: outs.iter().map(|o| (*o, f.clone())).collect(),
+        phi: outs.iter().map(|o| (*o, f.clone())).collect(),
+    }
+}
+
+struct Case {
+    topo: Topology,
+    avail: Vec<Available>,
+}
+
+fn random_case(n: usize, chain_depth: u64, fail_frac: f64, seed: u64) -> Case {
+    let mut rng = Rng::new(seed);
+    let mut g = GraphBuilder::new();
+    let procs: Vec<_> =
+        (0..n).map(|i| g.add_proc(&format!("p{i}"), TimeDomain::EPOCH)).collect();
+    let mut ins: Vec<Vec<EdgeId>> = vec![Vec::new(); n];
+    let mut outs: Vec<Vec<EdgeId>> = vec![Vec::new(); n];
+    for i in 1..n {
+        for _ in 0..=rng.below(2) {
+            let j = rng.index(i);
+            let e = g.connect(procs[j], procs[i], Projection::Identity);
+            outs[j].push(e);
+            ins[i].push(e);
+        }
+    }
+    let topo = g.build().unwrap();
+    let avail = (0..n)
+        .map(|i| {
+            if rng.chance(fail_frac) {
+                Available::chain(vec![])
+            } else {
+                let base = rng.below(4);
+                Available::chain(
+                    (0..chain_depth).map(|k| epoch_ckpt(base + k, &ins[i], &outs[i])).collect(),
+                )
+            }
+        })
+        .collect();
+    Case { topo, avail }
+}
+
+fn main() {
+    let cfg = BenchConfig { warmup_iters: 2, sample_iters: 8 };
+    let mut b = Bencher::with_config("fig6_solver", cfg);
+
+    for n in [10usize, 50, 200, 1000, 3000] {
+        let case = random_case(n, 4, 0.1, 42);
+        b.run(&format!("batch/n={n}"), n as f64, || {
+            let input = RollbackInput { topo: &case.topo, avail: &case.avail };
+            let plan = choose_frontiers(&input);
+            std::hint::black_box(&plan);
+        });
+    }
+    // Verify correctness once per size (kept out of the timed loop).
+    for n in [10usize, 200, 1000] {
+        let case = random_case(n, 4, 0.1, 42);
+        let input = RollbackInput { topo: &case.topo, avail: &case.avail };
+        let plan = choose_frontiers(&input);
+        verify_plan(&input, &plan).expect("solver must satisfy §3.5");
+    }
+
+    // Incremental (§4.2 GC path): one processor adds a checkpoint.
+    for n in [50usize, 200, 1000, 3000] {
+        let mut case = random_case(n, 4, 0.0, 7);
+        let plan0 = {
+            let input = RollbackInput { topo: &case.topo, avail: &case.avail };
+            choose_frontiers(&input)
+        };
+        // The processor whose chain we extend each iteration.
+        let victim = n / 2;
+        b.run(&format!("incremental/n={n}"), 1.0, || {
+            let mut plan = plan0.clone();
+            if let Available::Chain { chain, .. } = &mut case.avail[victim] {
+                let top = chain.last().unwrap().f.max_epoch().unwrap();
+                let ins: Vec<EdgeId> =
+                    case.topo.in_edges(ProcId(victim as u32)).to_vec();
+                let outs: Vec<EdgeId> =
+                    case.topo.out_edges(ProcId(victim as u32)).to_vec();
+                chain.push(epoch_ckpt(top + 1, &ins, &outs));
+            }
+            {
+                let input = RollbackInput { topo: &case.topo, avail: &case.avail };
+                grow_frontiers(&input, &mut plan, ProcId(victim as u32));
+            }
+            std::hint::black_box(&plan);
+        });
+    }
+    // Chain-depth sensitivity.
+    for depth in [1u64, 4, 16, 64] {
+        let case = random_case(400, depth, 0.1, 9);
+        b.run(&format!("chain_depth/{depth}"), 400.0, || {
+            let input = RollbackInput { topo: &case.topo, avail: &case.avail };
+            std::hint::black_box(choose_frontiers(&input));
+        });
+    }
+    b.note("expected: batch ~linear in |E|·depth; incremental ≪ batch at same n");
+}

@@ -1,0 +1,93 @@
+//! E8 (§4.2): garbage-collection monitor — incremental low-watermark
+//! updates vs batch recomputation, and storage actually reclaimed.
+//!
+//! Expected shape: the incremental update cost is roughly independent of
+//! graph size for a localized Ξ arrival (it touches the affected region),
+//! while batch recomputation grows with the graph; watermark advances
+//! release storage monotonically.
+
+use falkirk::bench_support::{BenchConfig, Bencher};
+use falkirk::frontier::Frontier;
+use falkirk::ft::meta::CkptMeta;
+use falkirk::ft::monitor::Monitor;
+use falkirk::graph::{EdgeId, GraphBuilder, ProcId, Projection, Topology};
+use falkirk::time::TimeDomain;
+use std::sync::Arc;
+
+fn chain_topo(n: usize) -> (Arc<Topology>, Vec<Vec<EdgeId>>, Vec<Vec<EdgeId>>) {
+    let mut g = GraphBuilder::new();
+    let procs: Vec<_> =
+        (0..n).map(|i| g.add_proc(&format!("p{i}"), TimeDomain::EPOCH)).collect();
+    let mut ins = vec![Vec::new(); n];
+    let mut outs = vec![Vec::new(); n];
+    for i in 1..n {
+        let e = g.connect(procs[i - 1], procs[i], Projection::Identity);
+        outs[i - 1].push(e);
+        ins[i].push(e);
+    }
+    (Arc::new(g.build().unwrap()), ins, outs)
+}
+
+fn ck(e: u64, ins: &[EdgeId], outs: &[EdgeId]) -> CkptMeta {
+    let f = Frontier::upto_epoch(e);
+    CkptMeta {
+        f: f.clone(),
+        n_bar: f.clone(),
+        m_bar: ins.iter().map(|d| (*d, f.clone())).collect(),
+        d_bar: outs.iter().map(|o| (*o, f.clone())).collect(),
+        phi: outs.iter().map(|o| (*o, f.clone())).collect(),
+    }
+}
+
+fn main() {
+    let cfg = BenchConfig { warmup_iters: 1, sample_iters: 6 };
+    let mut b = Bencher::with_config("gc_monitor", cfg);
+
+    for n in [10usize, 100, 1000] {
+        // Incremental: every processor persists epochs 1..=R in turn —
+        // R·n Ξ updates through the incremental path.
+        const R: u64 = 5;
+        b.run(&format!("incremental_total/n={n}"), (R as f64) * n as f64, || {
+            let (topo, ins, outs) = chain_topo(n);
+            let mut mon = Monitor::new(topo, vec![false; n], vec![false; n]);
+            for ep in 1..=R {
+                for i in 0..n {
+                    mon.on_persisted(ProcId(i as u32), ck(ep, &ins[i], &outs[i]));
+                }
+            }
+            assert_eq!(
+                mon.low_watermark(ProcId(0)),
+                &Frontier::upto_epoch(R),
+                "watermark must reach the persisted epoch"
+            );
+        });
+        // Batch recomputation at the same final state.
+        b.run(&format!("batch_recompute/n={n}"), 1.0, || {
+            let (topo, ins, outs) = chain_topo(n);
+            let mut mon = Monitor::new(topo, vec![false; n], vec![false; n]);
+            for i in 0..n {
+                mon.on_persisted(ProcId(i as u32), ck(1, &ins[i], &outs[i]));
+            }
+            mon.recompute_batch();
+        });
+    }
+
+    // One more localized-update probe: a single Ξ arrival on a large,
+    // already-converged graph.
+    {
+        let n = 2000usize;
+        let (topo, ins, outs) = chain_topo(n);
+        let mut mon = Monitor::new(topo, vec![false; n], vec![false; n]);
+        for i in 0..n {
+            mon.on_persisted(ProcId(i as u32), ck(1, &ins[i], &outs[i]));
+        }
+        let mut ep = 2u64;
+        b.run("single_update/n=2000", 1.0, || {
+            // Only one processor advances: the watermark cannot move, so
+            // the incremental pass should stay local.
+            mon.on_persisted(ProcId(17), ck(ep, &ins[17], &outs[17]));
+            ep += 1;
+        });
+    }
+    b.note("expected: single localized Ξ update ≪ batch recompute at same n");
+}

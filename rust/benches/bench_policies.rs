@@ -1,0 +1,148 @@
+//! E7: the policy-tradeoff table the paper implies but never measured —
+//! steady-state overhead and recovery cost for every §2 scheme plus the
+//! paper's lazy regime at several checkpoint intervals, on the same
+//! logical workload.
+//!
+//! Expected shape (§2's qualitative claims):
+//! - eager/exactly-once: highest storage traffic, minimal re-execution;
+//! - ephemeral/at-least-once: zero overhead, maximal re-execution;
+//! - lazy(k): overhead ∝ 1/k, re-execution ∝ k — the tunable middle;
+//! - Chandy–Lamport: snapshot cost scales with *global* state, recovery
+//!   rolls back everyone.
+
+use falkirk::baselines::{
+    at_least_once, chandy_lamport::ClSystem, exactly_once, falkirk_lazy, spark_lineage, Scenario,
+};
+use falkirk::bench_support::Bencher;
+use falkirk::engine::Record;
+use falkirk::time::Time;
+
+const EPOCHS: u64 = 10;
+const PER_EPOCH: i64 = 100;
+
+/// Steady-state drive (no failure): returns virtual storage latency as
+/// the overhead proxy.
+fn steady(mut sc: Scenario) -> u64 {
+    for ep in 0..EPOCHS {
+        let t = Time::epoch(ep);
+        sc.sys.advance_input(sc.src, t);
+        for i in 0..PER_EPOCH {
+            sc.sys.push_input(sc.src, t, Record::Int(i));
+        }
+        sc.sys.advance_input(sc.src, Time::epoch(ep + 1));
+        sc.sys.run_to_quiescence(1_000_000);
+    }
+    sc.sys.close_input(sc.src);
+    sc.sys.run_to_quiescence(1_000_000);
+    sc.sys.store.stats().virtual_latency
+}
+
+/// Failure after `EPOCHS` epochs: returns (recovery wall µs, re-execution
+/// events).
+fn recovery(mut sc: Scenario) -> (f64, u64) {
+    let mut offered: Vec<(Time, Vec<Record>)> = Vec::new();
+    for ep in 0..EPOCHS {
+        let t = Time::epoch(ep);
+        let batch: Vec<Record> = (0..PER_EPOCH).map(Record::Int).collect();
+        offered.push((t, batch.clone()));
+        sc.sys.advance_input(sc.src, t);
+        for r in batch {
+            sc.sys.push_input(sc.src, t, r);
+        }
+        sc.sys.advance_input(sc.src, Time::epoch(ep + 1));
+        sc.sys.run_to_quiescence(1_000_000);
+    }
+    sc.sys.inject_failures(&[sc.mid]);
+    let t0 = std::time::Instant::now();
+    let rep = sc.sys.recover();
+    let wall = t0.elapsed().as_nanos() as f64 / 1e3;
+    // Client retry for whatever the source lost.
+    let f_src = rep.plan.f[sc.src.0 as usize].clone();
+    for (t, batch) in &offered {
+        if !f_src.is_top() && !f_src.contains(t) {
+            sc.sys.advance_input(sc.src, *t);
+            for r in batch {
+                sc.sys.push_input(sc.src, *t, r.clone());
+            }
+        }
+    }
+    sc.sys.advance_input(sc.src, Time::epoch(EPOCHS));
+    let ev0 = sc.sys.engine.events_processed();
+    sc.sys.run_to_quiescence(10_000_000);
+    (wall, sc.sys.engine.events_processed() - ev0)
+}
+
+fn main() {
+    const COST: u64 = 10;
+    let mut b = Bencher::new("policies");
+    let events = (EPOCHS * PER_EPOCH as u64) as f64;
+
+    b.run("steady/at_least_once", events, || {
+        std::hint::black_box(steady(at_least_once(COST)));
+    });
+    b.run("steady/exactly_once", events, || {
+        std::hint::black_box(steady(exactly_once(COST)));
+    });
+    b.run("steady/spark_lineage", events, || {
+        std::hint::black_box(steady(spark_lineage(COST)));
+    });
+    for k in [1u64, 4, 16] {
+        b.run(&format!("steady/lazy_k{k}"), events, || {
+            std::hint::black_box(steady(falkirk_lazy(k, COST)));
+        });
+    }
+
+    // Storage-overhead table (single run each).
+    println!("note policies/overhead_virtual_latency_units:");
+    for (name, lat) in [
+        ("at_least_once", steady(at_least_once(COST))),
+        ("exactly_once", steady(exactly_once(COST))),
+        ("spark_lineage", steady(spark_lineage(COST))),
+        ("lazy_k1", steady(falkirk_lazy(1, COST))),
+        ("lazy_k4", steady(falkirk_lazy(4, COST))),
+        ("lazy_k16", steady(falkirk_lazy(16, COST))),
+    ] {
+        println!("note policies/overhead {name} = {lat}");
+    }
+
+    // Recovery table.
+    println!("note policies/recovery (wall µs, re-execution events):");
+    for (name, sc) in [
+        ("at_least_once", at_least_once(COST)),
+        ("exactly_once", exactly_once(COST)),
+        ("spark_lineage", spark_lineage(COST)),
+        ("lazy_k1", falkirk_lazy(1, COST)),
+        ("lazy_k4", falkirk_lazy(4, COST)),
+        ("lazy_k16", falkirk_lazy(16, COST)),
+    ] {
+        let (wall, redo) = recovery(sc);
+        println!("note policies/recovery {name} wall_us={wall:.1} redo_events={redo}");
+    }
+
+    // Chandy–Lamport global snapshot + all-roll-back recovery.
+    b.run("cl/snapshot_ring32", 32.0, || {
+        let mut sys = ClSystem::new(32, &ring_edges(32), 1);
+        for k in 0..256 {
+            sys.inject(k % 32, k as u64);
+        }
+        sys.initiate_snapshot(0, 1);
+        sys.run_until_quiet(1_000_000);
+        assert!(sys.snapshot_done());
+        std::hint::black_box(sys.recorded_total());
+    });
+    b.run("cl/restore_ring32", 32.0, || {
+        let mut sys = ClSystem::new(32, &ring_edges(32), 1);
+        for k in 0..256 {
+            sys.inject(k % 32, k as u64);
+        }
+        sys.initiate_snapshot(0, 1);
+        sys.run_until_quiet(1_000_000);
+        sys.restore_snapshot();
+        std::hint::black_box(sys.delivered);
+    });
+    b.note("expected: overhead eager ≫ lazy_k1 > lazy_k16 > ephemeral=0; redo inverse; CL rolls everyone");
+}
+
+fn ring_edges(n: usize) -> Vec<(usize, usize)> {
+    (0..n).map(|i| (i, (i + 1) % n)).collect()
+}

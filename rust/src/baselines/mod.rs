@@ -1,0 +1,12 @@
+//! Baseline rollback-recovery schemes (§2).
+//!
+//! [`chandy_lamport`] is a standalone implementation of the classical
+//! marker algorithm; [`scenarios`] expresses exactly-once, at-least-once,
+//! Spark-lineage and the paper's lazy regime as policies over the common
+//! framework — the paper's unification claim, executable.
+
+pub mod chandy_lamport;
+pub mod scenarios;
+
+pub use chandy_lamport::{ClMsg, ClProcess, ClSystem};
+pub use scenarios::{at_least_once, exactly_once, falkirk_lazy, spark_lineage, Scenario};

@@ -1,0 +1,279 @@
+//! Baseline schemes expressed inside the Falkirk framework (§2.1–2.2).
+//!
+//! The paper's point is that exactly-once streaming, at-least-once
+//! streaming, and MapReduce/Spark-style lineage are all *policies* over
+//! the same frontier machinery. This module provides scenario builders
+//! that instantiate the same logical pipeline under each scheme, used by
+//! the policy benches ([E7] in DESIGN.md) and the comparison tests:
+//!
+//! - **exactly-once** (MillWheel/Storm-with-ackers): seq-number domain,
+//!   [`Policy::Eager`] — persist state + outputs per event;
+//! - **at-least-once**: same topology, [`Policy::Ephemeral`] — replay may
+//!   duplicate deliveries (callers observe via sink contents);
+//! - **Spark lineage** (Fig. 7b): epoch domain, stateless processors with
+//!   [`Policy::LogOutputs`] RDD firewalls;
+//! - **Falkirk lazy** (the paper's streaming regime): epoch domain,
+//!   [`Policy::Lazy`] selective checkpoints.
+
+use crate::engine::{Delivery, Processor, Record};
+use crate::ft::{FtSystem, Policy, Store};
+use crate::graph::{GraphBuilder, ProcId, Projection};
+use crate::operators::{shared_vec, SharedVec, Source, SumByTime};
+use crate::time::{Time, TimeDomain};
+use std::sync::Arc;
+
+/// A built scenario: the system plus handles the driver needs.
+pub struct Scenario {
+    pub sys: FtSystem,
+    pub src: ProcId,
+    pub mid: ProcId,
+    pub sink_proc: ProcId,
+    pub out: SharedVec,
+    pub name: &'static str,
+}
+
+/// Stateful keyed accumulator for the seq-domain pipelines: monolithic
+/// state (a running sum), checkpointed whole (exactly-once semantics).
+#[derive(Default)]
+pub struct RunningSum {
+    pub total: f64,
+    pub count: u64,
+}
+
+impl Processor for RunningSum {
+    fn on_message(&mut self, _port: usize, _t: Time, d: Record, ctx: &mut crate::engine::Ctx) {
+        let v = match d {
+            Record::Int(i) => i as f64,
+            Record::Kv { val, .. } => val,
+            _ => 0.0,
+        };
+        self.total += v;
+        self.count += 1;
+        for port in 0..ctx.num_outputs() {
+            ctx.send(port, Record::kv(0, self.total));
+        }
+    }
+
+    fn statefulness(&self) -> crate::engine::Statefulness {
+        crate::engine::Statefulness::Monolithic
+    }
+
+    fn checkpoint_upto(&self, _f: &crate::frontier::Frontier) -> Vec<u8> {
+        let mut w = crate::util::ser::Writer::new();
+        w.f64(self.total);
+        w.varint(self.count);
+        w.into_bytes()
+    }
+
+    fn restore(&mut self, blob: &[u8]) {
+        if blob.is_empty() {
+            *self = RunningSum::default();
+            return;
+        }
+        let mut r = crate::util::ser::Reader::new(blob);
+        self.total = r.f64().expect("corrupt RunningSum");
+        self.count = r.varint().expect("corrupt RunningSum");
+    }
+
+    fn reset(&mut self) {
+        *self = RunningSum::default();
+    }
+}
+
+/// Seq-domain pipeline `src → running-sum → sink` under a given policy
+/// triple (exactly-once uses Eager, at-least-once uses Ephemeral).
+pub fn seq_pipeline(policies: [Policy; 3], name: &'static str, write_cost: u64) -> Scenario {
+    let mut g = GraphBuilder::new();
+    let src = g.add_proc("src", TimeDomain::EPOCH);
+    let mid = g.add_proc("sum", TimeDomain::Seq);
+    let snk = g.add_proc("sink", TimeDomain::Seq);
+    g.connect(src, mid, Projection::PerCheckpoint);
+    g.connect(mid, snk, Projection::PerCheckpoint);
+    let topo = Arc::new(g.build().unwrap());
+    let out = shared_vec();
+    let procs: Vec<Box<dyn Processor>> = vec![
+        Box::new(Source),
+        Box::new(RunningSum::default()),
+        Box::new(crate::operators::Sink(out.clone())),
+    ];
+    let sys = FtSystem::new(topo, procs, policies.to_vec(), Delivery::Fifo, Store::new(write_cost));
+    Scenario { sys, src, mid, sink_proc: snk, out, name }
+}
+
+/// Exactly-once streaming baseline (§2.1).
+pub fn exactly_once(write_cost: u64) -> Scenario {
+    seq_pipeline([Policy::Eager, Policy::Eager, Policy::Eager], "exactly-once", write_cost)
+}
+
+/// At-least-once streaming baseline (§2.1).
+pub fn at_least_once(write_cost: u64) -> Scenario {
+    seq_pipeline(
+        [Policy::Ephemeral, Policy::Ephemeral, Policy::Ephemeral],
+        "at-least-once",
+        write_cost,
+    )
+}
+
+/// Spark/RDD lineage baseline (§2.2, Fig. 7b): epoch pipeline of
+/// stateless stages; `rdd` logs its outputs (the lineage firewall).
+pub fn spark_lineage(write_cost: u64) -> Scenario {
+    let mut g = GraphBuilder::new();
+    let src = g.add_proc("src", TimeDomain::EPOCH);
+    let rdd = g.add_proc("rdd", TimeDomain::EPOCH);
+    let snk = g.add_proc("sink", TimeDomain::EPOCH);
+    g.connect(src, rdd, Projection::Identity);
+    g.connect(rdd, snk, Projection::Identity);
+    let topo = Arc::new(g.build().unwrap());
+    let out = shared_vec();
+    let procs: Vec<Box<dyn Processor>> = vec![
+        Box::new(Source),
+        Box::new(crate::operators::Map(|r: Record| match r {
+            Record::Int(i) => Record::kv(i % 4, i as f64),
+            other => other,
+        })),
+        Box::new(crate::operators::Sink(out.clone())),
+    ];
+    let sys = FtSystem::new(
+        topo,
+        procs,
+        vec![Policy::LogOutputs, Policy::LogOutputs, Policy::Ephemeral],
+        Delivery::Fifo,
+        Store::new(write_cost),
+    );
+    Scenario { sys, src, mid: rdd, sink_proc: snk, out, name: "spark-lineage" }
+}
+
+/// Falkirk lazy-checkpoint streaming (the paper's new regime): epoch
+/// pipeline with a time-partitioned accumulator checkpointed selectively
+/// every `every` completed epochs.
+pub fn falkirk_lazy(every: u64, write_cost: u64) -> Scenario {
+    let mut g = GraphBuilder::new();
+    let src = g.add_proc("src", TimeDomain::EPOCH);
+    let sum = g.add_proc("sum", TimeDomain::EPOCH);
+    let snk = g.add_proc("sink", TimeDomain::EPOCH);
+    g.connect(src, sum, Projection::Identity);
+    g.connect(sum, snk, Projection::Identity);
+    let topo = Arc::new(g.build().unwrap());
+    let out = shared_vec();
+    let procs: Vec<Box<dyn Processor>> = vec![
+        Box::new(Source),
+        Box::new(SumByTime::default()),
+        Box::new(crate::operators::Sink(out.clone())),
+    ];
+    let sys = FtSystem::new(
+        topo,
+        procs,
+        vec![
+            Policy::LogOutputs,
+            Policy::Lazy { every, log_outputs: true },
+            Policy::Ephemeral,
+        ],
+        Delivery::Fifo,
+        Store::new(write_cost),
+    );
+    Scenario { sys, src, mid: sum, sink_proc: snk, out, name: "falkirk-lazy" }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn exactly_once_checkpoints_every_event() {
+        let mut sc = exactly_once(1);
+        sc.sys.advance_input(sc.src, Time::epoch(0));
+        for i in 0..5 {
+            sc.sys.push_input(sc.src, Time::epoch(0), Record::Int(i));
+        }
+        sc.sys.run_to_quiescence(1000);
+        // The eager accumulator checkpointed once per delivered event.
+        assert_eq!(sc.sys.stats.checkpoints_taken as usize, 15, "src:5 + sum:5 + sink:5");
+        assert!(sc.sys.store.stats().writes > 0);
+    }
+
+    #[test]
+    fn exactly_once_survives_failure_without_duplicates() {
+        let mut sc = exactly_once(1);
+        sc.sys.advance_input(sc.src, Time::epoch(0));
+        for i in 1..=3 {
+            sc.sys.push_input(sc.src, Time::epoch(0), Record::Int(i));
+        }
+        sc.sys.run_to_quiescence(1000);
+        let before = sc.out.lock().unwrap().clone();
+        assert_eq!(before.len(), 3);
+        // Crash the accumulator, recover: state restored from the
+        // per-event checkpoint; nothing re-emitted to the sink.
+        sc.sys.inject_failures(&[sc.mid]);
+        let rep = sc.sys.recover();
+        assert!(rep.plan.f[sc.mid.0 as usize] != crate::frontier::Frontier::Bottom);
+        sc.sys.run_to_quiescence(1000);
+        assert_eq!(sc.out.lock().unwrap().clone(), before, "no duplicates, no loss");
+        // Continue: totals pick up where they left off.
+        sc.sys.push_input(sc.src, Time::epoch(0), Record::Int(4));
+        sc.sys.run_to_quiescence(1000);
+        let after = sc.out.lock().unwrap().clone();
+        assert_eq!(after.last().unwrap().1, Record::kv(0, 10.0), "1+2+3+4");
+    }
+
+    #[test]
+    fn at_least_once_loses_unacked_work_on_failure() {
+        let mut sc = at_least_once(1);
+        sc.sys.advance_input(sc.src, Time::epoch(0));
+        for i in 1..=3 {
+            sc.sys.push_input(sc.src, Time::epoch(0), Record::Int(i));
+        }
+        sc.sys.run_to_quiescence(1000);
+        sc.sys.inject_failures(&[sc.mid]);
+        let rep = sc.sys.recover();
+        // Everything rolls to ∅ — the client must re-send, and the sink
+        // may observe duplicates relative to pre-failure output.
+        assert!(rep.plan.f.iter().all(|f| f.is_bottom()));
+        for i in 1..=3 {
+            sc.sys.push_input(sc.src, Time::epoch(0), Record::Int(i));
+        }
+        sc.sys.run_to_quiescence(1000);
+        let out = sc.out.lock().unwrap().clone();
+        assert_eq!(out.len(), 6, "3 pre-failure + 3 replayed = duplicates visible");
+        assert_eq!(sc.sys.store.stats().writes, 0, "and nothing was ever persisted");
+    }
+
+    #[test]
+    fn spark_lineage_firewalls_failure() {
+        let mut sc = spark_lineage(1);
+        sc.sys.advance_input(sc.src, Time::epoch(0));
+        for i in 0..4 {
+            sc.sys.push_input(sc.src, Time::epoch(0), Record::Int(i));
+        }
+        sc.sys.advance_input(sc.src, Time::epoch(1));
+        sc.sys.run_to_quiescence(1000);
+        let before = sc.out.lock().unwrap().len();
+        // Fail the sink stage: the RDD's log replays; src untouched.
+        sc.sys.inject_failures(&[sc.sink_proc]);
+        let rep = sc.sys.recover();
+        assert!(rep.plan.f[sc.src.0 as usize].is_top(), "src untouched");
+        assert!(rep.plan.f[sc.mid.0 as usize].is_top(), "rdd untouched (Fig 7b)");
+        assert_eq!(rep.replayed, 4, "lineage recomputation from the logged edge");
+        sc.sys.run_to_quiescence(1000);
+        assert_eq!(sc.out.lock().unwrap().len(), before + 4, "sink re-received its partition");
+    }
+
+    #[test]
+    fn falkirk_lazy_bounds_reexecution() {
+        let mut sc = falkirk_lazy(2, 1);
+        for ep in 0..4u64 {
+            sc.sys.advance_input(sc.src, Time::epoch(ep));
+            sc.sys.push_input(sc.src, Time::epoch(ep), Record::Int(ep as i64));
+            sc.sys.advance_input(sc.src, Time::epoch(ep + 1));
+            sc.sys.run_to_quiescence(1000);
+        }
+        // 4 completions, checkpoint every 2 → 2 checkpoints.
+        assert_eq!(sc.sys.chain_len(sc.mid), 2);
+        sc.sys.inject_failures(&[sc.mid]);
+        let rep = sc.sys.recover();
+        // Restored to the last checkpoint (epoch 3) — bounded loss.
+        assert_eq!(
+            rep.plan.f[sc.mid.0 as usize],
+            crate::frontier::Frontier::upto_epoch(3)
+        );
+    }
+}

@@ -1,0 +1,133 @@
+//! Bench harness (criterion is unavailable in the offline registry).
+//!
+//! Provides warmup + sampled measurement with mean/p50/p95 reporting in a
+//! stable, grep-friendly format:
+//!
+//! ```text
+//! bench <group>/<name>  mean=…  p50=…  p95=…  (n=…, ops/s=…)
+//! ```
+//!
+//! Benches are `harness = false` binaries that call [`bench_fn`] /
+//! [`Bencher::run`] and print a table; `cargo bench` runs them all.
+
+use crate::util::stats::{fmt_ns, fmt_rate, Summary};
+use std::time::Instant;
+
+/// Configuration for one measurement.
+#[derive(Clone, Copy, Debug)]
+pub struct BenchConfig {
+    pub warmup_iters: u32,
+    pub sample_iters: u32,
+}
+
+impl Default for BenchConfig {
+    fn default() -> Self {
+        BenchConfig { warmup_iters: 3, sample_iters: 10 }
+    }
+}
+
+/// Result of one bench: per-iteration wall time summary.
+#[derive(Clone, Debug)]
+pub struct BenchResult {
+    pub group: String,
+    pub name: String,
+    pub ns: Summary,
+    /// Work units per iteration (for ops/s reporting), if meaningful.
+    pub units_per_iter: f64,
+}
+
+impl BenchResult {
+    pub fn line(&self) -> String {
+        let mean = self.ns.mean();
+        let rate = if self.units_per_iter > 0.0 && mean > 0.0 {
+            format!("  ops/s={}", fmt_rate(self.units_per_iter / (mean / 1e9)))
+        } else {
+            String::new()
+        };
+        format!(
+            "bench {}/{}  mean={}  p50={}  p95={}  (n={}{})",
+            self.group,
+            self.name,
+            fmt_ns(mean),
+            fmt_ns(self.ns.p50()),
+            fmt_ns(self.ns.p95()),
+            self.ns.count(),
+            rate,
+        )
+    }
+}
+
+/// Measure `f` (fresh state per iteration comes from `f` itself).
+/// `units` is the number of work items one iteration processes.
+pub fn bench_fn(
+    cfg: BenchConfig,
+    group: &str,
+    name: &str,
+    units: f64,
+    mut f: impl FnMut(),
+) -> BenchResult {
+    for _ in 0..cfg.warmup_iters {
+        f();
+    }
+    let mut ns = Summary::new();
+    for _ in 0..cfg.sample_iters {
+        let t0 = Instant::now();
+        f();
+        ns.add(t0.elapsed().as_nanos() as f64);
+    }
+    let r = BenchResult {
+        group: group.to_string(),
+        name: name.to_string(),
+        ns,
+        units_per_iter: units,
+    };
+    println!("{}", r.line());
+    r
+}
+
+/// Convenience wrapper that also prints a section header once.
+pub struct Bencher {
+    cfg: BenchConfig,
+    group: String,
+    pub results: Vec<BenchResult>,
+}
+
+impl Bencher {
+    pub fn new(group: &str) -> Bencher {
+        println!("== {group} ==");
+        Bencher { cfg: BenchConfig::default(), group: group.to_string(), results: Vec::new() }
+    }
+
+    pub fn with_config(group: &str, cfg: BenchConfig) -> Bencher {
+        println!("== {group} ==");
+        Bencher { cfg, group: group.to_string(), results: Vec::new() }
+    }
+
+    pub fn run(&mut self, name: &str, units: f64, f: impl FnMut()) -> &BenchResult {
+        let r = bench_fn(self.cfg, &self.group, name, units, f);
+        self.results.push(r);
+        self.results.last().unwrap()
+    }
+
+    /// Print a free-form observation row (paper-shape checks).
+    pub fn note(&self, text: &str) {
+        println!("note {}/{}", self.group, text);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_fn_measures() {
+        let cfg = BenchConfig { warmup_iters: 1, sample_iters: 3 };
+        let mut n = 0u64;
+        let r = bench_fn(cfg, "test", "noop", 1.0, || {
+            n += 1;
+        });
+        assert_eq!(r.ns.count(), 3);
+        assert_eq!(n, 4, "warmup + samples");
+        assert!(r.line().contains("bench test/noop"));
+    }
+}

@@ -1,0 +1,506 @@
+//! The Figure-1 application: "a complex streaming application" combining
+//! all four fault-tolerance regimes in one dataflow.
+//!
+//! ```text
+//!  queries ──► select ──► to_kv ──────────────► join_batch ─► join_iter ──► resp (user)
+//!  (ephemeral)                                     ▲              ▲   └───► db (eager, seq)
+//!  records ──► reduce ──┬─► batch_agg (XLA) ───────┘              │
+//!  (ephemeral)          └─► t_collect ─► [ingress ► iterate(XLA) ► egress] ─► rank_store
+//!                                            ▲ feedback ◄┘                   (lazy ckpt)
+//! ```
+//!
+//! Regimes (shading in the paper's figure):
+//! - **ephemeral**: query/record ingestion and pre-reduction — nothing
+//!   persisted; clients retry unacknowledged batches (§4.3);
+//! - **batch**: the periodically-recomputed aggregation — stateless with
+//!   logged outputs (Spark-RDD firewall);
+//! - **lazy checkpoint**: the continuously-updated iterative computation
+//!   (rank propagation in a loop) feeding `rank_store`, selectively
+//!   checkpointed on epoch completion;
+//! - **eager checkpoint**: the database writer — sequence-number domain,
+//!   state + outputs persisted per event, consistent with delivered
+//!   results.
+//!
+//! The analytics compute (windowed segment-sum, rank propagation) runs in
+//! AOT-compiled XLA kernels when `artifacts/` exists, otherwise in the
+//! in-process reference kernels (numerically identical; see
+//! `python/tests/`).
+
+use crate::engine::{Ctx, Delivery, Processor, Record, Statefulness};
+use crate::frontier::Frontier;
+use crate::ft::external::{ExternalInput, ExternalOutput};
+use crate::ft::{FtSystem, Policy, Store};
+use crate::graph::{GraphBuilder, ProcId, Projection};
+use crate::operators::tensor::mock::{MockAgg, MockIterate};
+use crate::operators::{
+    shared_vec, Egress, Feedback, Ingress, Join, KernelHandle, RankStore, Select, SharedVec,
+    Sink, Source, TensorApply, TensorCollect, WindowAggregate,
+};
+use crate::runtime::ArtifactRegistry;
+use crate::time::{Time, TimeDomain};
+use crate::util::rng::Rng;
+use std::rc::Rc;
+use std::sync::{Arc, Mutex};
+
+/// Configuration for the Figure-1 run.
+#[derive(Clone, Debug)]
+pub struct Fig1Config {
+    pub epochs: u64,
+    pub queries_per_epoch: usize,
+    pub records_per_epoch: usize,
+    /// Loop iterations for the iterative computation.
+    pub iters: u64,
+    /// Window size / key count for the aggregation kernel (must match
+    /// the compiled artifact when XLA kernels are used).
+    pub window: usize,
+    pub num_keys: usize,
+    /// Inject a crash of the named processor after this epoch completes.
+    pub fail_proc: Option<String>,
+    pub fail_after_epoch: u64,
+    pub seed: u64,
+    /// Storage write cost (virtual latency units per write).
+    pub write_cost: u64,
+    /// Use real XLA artifacts if available.
+    pub use_xla: bool,
+}
+
+impl Default for Fig1Config {
+    fn default() -> Self {
+        Fig1Config {
+            epochs: 6,
+            queries_per_epoch: 4,
+            records_per_epoch: 32,
+            iters: 4,
+            window: 16,
+            num_keys: 8,
+            fail_proc: None,
+            fail_after_epoch: 2,
+            seed: 7,
+            write_cost: 10,
+            use_xla: true,
+        }
+    }
+}
+
+/// The database writer of the eager regime: a seq-domain processor that
+/// applies each stats record to its running state and commits it to the
+/// external store, deduplicated by sequence number so that post-recovery
+/// re-sends are idempotent (§4.3).
+pub struct DbWriter {
+    pub committed: Arc<Mutex<ExternalOutput>>,
+    total: f64,
+    applied: u64,
+}
+
+impl DbWriter {
+    pub fn new(committed: Arc<Mutex<ExternalOutput>>) -> DbWriter {
+        DbWriter { committed, total: 0.0, applied: 0 }
+    }
+}
+
+impl Processor for DbWriter {
+    fn on_message(&mut self, _port: usize, t: Time, d: Record, _ctx: &mut Ctx) {
+        let (k, v) = d.as_kv().unwrap_or((0, 0.0));
+        self.total += v;
+        self.applied += 1;
+        // Commit keyed by the seq number: replays after recovery dedup.
+        let seq = t.seq_of();
+        self.committed.lock().unwrap().deliver(
+            Time::epoch(0),
+            seq as usize - 1,
+            Record::kv(k, self.total),
+        );
+    }
+
+    fn statefulness(&self) -> Statefulness {
+        Statefulness::Monolithic
+    }
+
+    fn checkpoint_upto(&self, _f: &Frontier) -> Vec<u8> {
+        let mut w = crate::util::ser::Writer::new();
+        w.f64(self.total);
+        w.varint(self.applied);
+        w.into_bytes()
+    }
+
+    fn restore(&mut self, blob: &[u8]) {
+        if blob.is_empty() {
+            self.total = 0.0;
+            self.applied = 0;
+            return;
+        }
+        let mut r = crate::util::ser::Reader::new(blob);
+        self.total = r.f64().expect("corrupt DbWriter state");
+        self.applied = r.varint().expect("corrupt DbWriter state");
+    }
+
+    fn reset(&mut self) {
+        self.total = 0.0;
+        self.applied = 0;
+    }
+}
+
+/// Handles into a built Figure-1 application.
+pub struct Fig1App {
+    pub sys: FtSystem,
+    pub q_src: ProcId,
+    pub d_src: ProcId,
+    pub resp: SharedVec,
+    pub db: Arc<Mutex<ExternalOutput>>,
+    pub db_proc: ProcId,
+    pub rank_proc: ProcId,
+    pub used_xla: bool,
+}
+
+/// Resolve the kernels: XLA artifacts when present, reference mocks
+/// otherwise.
+fn kernels(cfg: &Fig1Config) -> (KernelHandle, KernelHandle, bool) {
+    if cfg.use_xla {
+        let reg = ArtifactRegistry::default_dir();
+        if reg.available("stream_agg") && reg.available("iterate") {
+            let agg = reg.kernel("stream_agg", 2).expect("loading stream_agg");
+            let it = reg.kernel("iterate", 1).expect("loading iterate");
+            return (agg, it, true);
+        }
+    }
+    (
+        Rc::new(MockAgg { num_keys: cfg.num_keys }),
+        Rc::new(MockIterate { damping: 0.85 }),
+        false,
+    )
+}
+
+/// Build the application (see module docs for the wiring).
+pub fn build(cfg: &Fig1Config) -> Fig1App {
+    let (agg_kernel, iter_kernel, used_xla) = kernels(cfg);
+    let mut g = GraphBuilder::new();
+    let d1 = TimeDomain::Structured { depth: 1 };
+
+    let q_src = g.add_proc("q_src", TimeDomain::EPOCH);
+    let q_select = g.add_proc("q_select", TimeDomain::EPOCH);
+    let q_tokv = g.add_proc("q_tokv", TimeDomain::EPOCH);
+    let d_src = g.add_proc("d_src", TimeDomain::EPOCH);
+    let reduce = g.add_proc("reduce", TimeDomain::EPOCH);
+    let batch_agg = g.add_proc("batch_agg", TimeDomain::EPOCH);
+    let t_collect = g.add_proc("t_collect", TimeDomain::EPOCH);
+    let ingress = g.add_proc("ingress", d1);
+    let body = g.add_proc("iterate", d1);
+    let feedback = g.add_proc("feedback", d1);
+    let egress = g.add_proc("egress", TimeDomain::EPOCH);
+    let rank_store = g.add_proc("rank_store", TimeDomain::EPOCH);
+    let join_batch = g.add_proc("join_batch", TimeDomain::EPOCH);
+    let join_iter = g.add_proc("join_iter", TimeDomain::EPOCH);
+    let db = g.add_proc("db", TimeDomain::Seq);
+    let resp = g.add_proc("resp", TimeDomain::EPOCH);
+
+    // Query path.
+    g.connect(q_src, q_select, Projection::Identity);
+    g.connect(q_select, q_tokv, Projection::Identity);
+    g.connect(q_tokv, join_batch, Projection::Identity); // join_batch port 0
+    // Record path: pre-reduction then both analytics.
+    g.connect(d_src, reduce, Projection::Identity);
+    g.connect(reduce, batch_agg, Projection::Identity);
+    g.connect(reduce, t_collect, Projection::Identity);
+    // Batch regime output into the first join.
+    g.connect(batch_agg, join_batch, Projection::Identity); // port 1
+    // Iterative loop.
+    g.connect(t_collect, ingress, Projection::LoopEnter);
+    g.connect(ingress, body, Projection::Identity);
+    g.connect(body, feedback, Projection::Identity); // body port 0
+    g.connect(feedback, body, Projection::LoopFeedback);
+    g.connect(body, egress, Projection::LoopExit); // body port 1
+    g.connect(egress, rank_store, Projection::Identity);
+    // Joins and outputs.
+    g.connect(join_batch, join_iter, Projection::Identity); // join_iter port 0
+    g.connect(rank_store, join_iter, Projection::Identity); // join_iter port 1
+    g.connect(join_iter, db, Projection::PerCheckpoint); // seq domain
+    g.connect(join_iter, resp, Projection::Identity);
+
+    let topo = Arc::new(g.build().expect("fig1 topology"));
+    let resp_out = shared_vec();
+    let db_out = Arc::new(Mutex::new(ExternalOutput::new()));
+
+    /// Body emits to both feedback (port 0) and egress (port 1), but only
+    /// the final iteration should leave the loop; Feedback::max_iters
+    /// bounds the cycle and egress receives every iterate — rank_store
+    /// overwrites per epoch, so the last write wins deterministically
+    /// under FIFO delivery.
+    struct BodyWrap(TensorApply);
+    impl Processor for BodyWrap {
+        fn on_message(&mut self, port: usize, t: Time, d: Record, ctx: &mut Ctx) {
+            self.0.on_message(port, t, d, ctx);
+        }
+    }
+
+    let procs: Vec<Box<dyn Processor>> = vec![
+        Box::new(Source),                                            // q_src
+        Box::new(Select),                                            // q_select
+        Box::new(crate::operators::Map(|r: Record| match r {
+            Record::Int(i) => Record::kv(i, 1.0),
+            other => other,
+        })),                                                         // q_tokv
+        Box::new(Source),                                            // d_src
+        Box::new(crate::operators::CountByKey::default()),          // reduce
+        Box::new(WindowAggregate::new_kv(agg_kernel, cfg.window, cfg.num_keys)), // batch_agg
+        Box::new(TensorCollect::new(cfg.num_keys)),                 // t_collect
+        Box::new(Ingress),                                          // ingress
+        Box::new(BodyWrap(TensorApply::new(iter_kernel))),          // iterate
+        Box::new(Feedback::new(cfg.iters)),                         // feedback
+        Box::new(Egress),                                           // egress
+        Box::new(RankStore::new()),                                 // rank_store
+        Box::new(Join::default()),                                  // join_batch
+        Box::new(Join::default()),                                  // join_iter
+        Box::new(DbWriter::new(db_out.clone())),                    // db
+        Box::new(Sink(resp_out.clone())),                           // resp
+    ];
+    let policies = vec![
+        Policy::Ephemeral,                                // q_src
+        Policy::Ephemeral,                                // q_select
+        Policy::Ephemeral,                                // q_tokv
+        Policy::Ephemeral,                                // d_src
+        Policy::Ephemeral,                                // reduce
+        Policy::LogOutputs,                               // batch_agg (batch regime)
+        Policy::Ephemeral,                                // t_collect
+        Policy::Ephemeral,                                // ingress
+        Policy::Ephemeral,                                // iterate
+        Policy::Ephemeral,                                // feedback
+        Policy::Ephemeral,                                // egress
+        Policy::Lazy { every: 1, log_outputs: true },     // rank_store (lazy regime)
+        Policy::Lazy { every: 1, log_outputs: true },     // join_batch
+        Policy::Lazy { every: 1, log_outputs: true },     // join_iter
+        Policy::Eager,                                    // db (eager regime)
+        Policy::Ephemeral,                                // resp
+    ];
+    let sys = FtSystem::new(topo, procs, policies, Delivery::Fifo, Store::new(cfg.write_cost));
+    Fig1App {
+        sys,
+        q_src,
+        d_src,
+        resp: resp_out,
+        db: db_out,
+        db_proc: db,
+        rank_proc: rank_store,
+        used_xla,
+    }
+}
+
+/// Outcome of a driven Figure-1 run.
+#[derive(Clone, Debug)]
+pub struct Fig1Outcome {
+    pub responses: usize,
+    pub db_commits: usize,
+    pub db_duplicates: u64,
+    pub checkpoints: u64,
+    pub log_entries: u64,
+    pub storage_writes: u64,
+    pub storage_bytes: u64,
+    pub events: u64,
+    /// Present if a failure was injected.
+    pub recovery: Option<RecoverySummary>,
+    pub used_xla: bool,
+    pub elapsed_ms: f64,
+}
+
+/// Recovery measurements for EXPERIMENTS.md.
+#[derive(Clone, Debug)]
+pub struct RecoverySummary {
+    pub victim: String,
+    pub replayed: usize,
+    pub dropped: usize,
+    pub restored: usize,
+    pub reset_to_empty: usize,
+    pub untouched: usize,
+    pub input_redeliveries: u64,
+    /// Events needed to re-quiesce after recovery (re-execution cost).
+    pub requiesce_events: u64,
+    pub recover_wall_us: f64,
+}
+
+/// Drive the application for `cfg.epochs` epochs of synthetic queries and
+/// records, optionally crashing one processor, and report.
+pub fn run(cfg: &Fig1Config) -> Fig1Outcome {
+    let t_start = std::time::Instant::now();
+    let mut app = build(cfg);
+    let mut rng = Rng::new(cfg.seed);
+    let mut q_ext = ExternalInput::new();
+    let mut d_ext = ExternalInput::new();
+    let words = ["one", "two", "three", "four", "five", "six", "seven", "eight"];
+    let mut recovery = None;
+
+    for ep in 0..cfg.epochs {
+        let t = Time::epoch(ep);
+        // Offer this epoch's batches to the external services.
+        let queries: Vec<Record> = (0..cfg.queries_per_epoch)
+            .map(|_| Record::text(words[rng.index(words.len())]))
+            .collect();
+        let records: Vec<Record> = (0..cfg.records_per_epoch)
+            .map(|_| Record::kv(rng.below(cfg.num_keys as u64) as i64, rng.f64() * 10.0))
+            .collect();
+        q_ext.offer(t, queries.clone());
+        d_ext.offer(t, records.clone());
+
+        app.sys.advance_input(app.q_src, t);
+        app.sys.advance_input(app.d_src, t);
+        for q in queries {
+            app.sys.push_input(app.q_src, t, q);
+        }
+        for r in records {
+            app.sys.push_input(app.d_src, t, r);
+        }
+        app.sys.advance_input(app.q_src, Time::epoch(ep + 1));
+        app.sys.advance_input(app.d_src, Time::epoch(ep + 1));
+        app.sys.run_to_quiescence(2_000_000);
+
+        // External acknowledgement follows durability (a real deployment
+        // uses the GC monitor's watermark; with checkpoint-every-1
+        // regimes, a two-epoch lag is a safe conservative stand-in).
+        if ep >= 2 {
+            q_ext.ack_upto(&Frontier::upto_epoch(ep - 2));
+            d_ext.ack_upto(&Frontier::upto_epoch(ep - 2));
+        }
+
+        if let Some(victim_name) = &cfg.fail_proc {
+            if ep == cfg.fail_after_epoch && recovery.is_none() {
+                let victim = app
+                    .sys
+                    .topology()
+                    .find(victim_name)
+                    .unwrap_or_else(|| panic!("unknown fail_proc {victim_name}"));
+                app.sys.inject_failures(&[victim]);
+                let t0 = std::time::Instant::now();
+                let rep = app.sys.recover();
+                let recover_wall_us = t0.elapsed().as_nanos() as f64 / 1e3;
+                // Client retry (§4.3): re-push unacknowledged batches not
+                // covered by the sources' restored frontiers.
+                let fq = rep.plan.f[app.q_src.0 as usize].clone();
+                let fd = rep.plan.f[app.d_src.0 as usize].clone();
+                let mut redeliveries = 0;
+                for (t, batch) in q_ext.replay_from(&fq) {
+                    app.sys.advance_input(app.q_src, t);
+                    for r in batch {
+                        app.sys.push_input(app.q_src, t, r);
+                        redeliveries += 1;
+                    }
+                }
+                for (t, batch) in d_ext.replay_from(&fd) {
+                    app.sys.advance_input(app.d_src, t);
+                    for r in batch {
+                        app.sys.push_input(app.d_src, t, r);
+                        redeliveries += 1;
+                    }
+                }
+                app.sys.advance_input(app.q_src, Time::epoch(ep + 1));
+                app.sys.advance_input(app.d_src, Time::epoch(ep + 1));
+                let ev0 = app.sys.engine.events_processed();
+                app.sys.run_to_quiescence(2_000_000);
+                recovery = Some(RecoverySummary {
+                    victim: victim_name.clone(),
+                    replayed: rep.replayed,
+                    dropped: rep.dropped,
+                    restored: rep.restored_from_checkpoint,
+                    reset_to_empty: rep.reset_to_empty,
+                    untouched: rep.untouched,
+                    input_redeliveries: redeliveries,
+                    requiesce_events: app.sys.engine.events_processed() - ev0,
+                    recover_wall_us,
+                });
+            }
+        }
+    }
+    app.sys.close_input(app.q_src);
+    app.sys.close_input(app.d_src);
+    app.sys.run_to_quiescence(2_000_000);
+
+    let st = app.sys.store.stats();
+    let responses = app.resp.lock().unwrap().len();
+    let (db_commits, db_duplicates) = {
+        let db = app.db.lock().unwrap();
+        (db.contents().first().map(|(_, v)| v.len()).unwrap_or(0), db.duplicates)
+    };
+    Fig1Outcome {
+        responses,
+        db_commits,
+        db_duplicates,
+        checkpoints: app.sys.stats.checkpoints_taken,
+        log_entries: app.sys.stats.log_entries,
+        storage_writes: st.writes,
+        storage_bytes: st.bytes_written,
+        events: app.sys.engine.events_processed(),
+        recovery,
+        used_xla: app.used_xla,
+        elapsed_ms: t_start.elapsed().as_nanos() as f64 / 1e6,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn small_cfg() -> Fig1Config {
+        Fig1Config {
+            epochs: 3,
+            queries_per_epoch: 3,
+            records_per_epoch: 12,
+            iters: 3,
+            window: 8,
+            num_keys: 4,
+            use_xla: false, // deterministic unit tests use the mocks
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn fig1_runs_clean() {
+        let out = run(&small_cfg());
+        assert!(out.responses > 0, "queries produced responses");
+        assert!(out.db_commits > 0, "stats reached the database");
+        assert_eq!(out.db_duplicates, 0);
+        assert!(out.checkpoints > 0, "lazy + eager regimes checkpointed");
+        assert!(out.log_entries > 0, "batch firewall logged");
+        assert!(out.storage_writes > 0);
+        assert!(out.recovery.is_none());
+    }
+
+    #[test]
+    fn fig1_survives_rank_store_failure() {
+        let mut cfg = small_cfg();
+        cfg.fail_proc = Some("rank_store".to_string());
+        cfg.fail_after_epoch = 1;
+        let out = run(&cfg);
+        let rec = out.recovery.expect("failure was injected");
+        assert!(rec.restored >= 1, "rank_store restored from its selective checkpoint");
+        assert_eq!(out.db_duplicates, 0, "eager DB dedups replayed commits");
+    }
+
+    #[test]
+    fn fig1_survives_db_failure_without_duplicate_commits() {
+        let mut cfg = small_cfg();
+        cfg.fail_proc = Some("db".to_string());
+        cfg.fail_after_epoch = 1;
+        let out = run(&cfg);
+        let clean = run(&small_cfg());
+        assert_eq!(
+            out.db_commits, clean.db_commits,
+            "post-recovery commit count equals the failure-free run"
+        );
+    }
+
+    #[test]
+    fn fig1_failure_free_equals_failed_run_on_db_contents() {
+        // The refinement-mapping claim on the end-to-end app: the eager
+        // regime's externally-visible commits match exactly.
+        let clean = run(&small_cfg());
+        for victim in ["rank_store", "join_iter", "reduce", "batch_agg"] {
+            let mut cfg = small_cfg();
+            cfg.fail_proc = Some(victim.to_string());
+            cfg.fail_after_epoch = 1;
+            let failed = run(&cfg);
+            assert_eq!(
+                failed.db_commits, clean.db_commits,
+                "victim {victim}: db commits diverged"
+            );
+            assert_eq!(failed.responses >= clean.responses, true,
+                "victim {victim}: responses may include client-retry duplicates but not fewer");
+        }
+    }
+}

@@ -1,0 +1,7 @@
+//! The leader/coordinator layer: application assembly (the Figure-1
+//! app), scenario drivers for the paper's figures, and the CLI.
+
+pub mod cli;
+pub mod fig1;
+
+pub use fig1::{build as build_fig1, run as run_fig1, Fig1App, Fig1Config, Fig1Outcome};

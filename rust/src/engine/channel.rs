@@ -1,0 +1,199 @@
+//! Channels: per-edge message queues with the §3.3 re-ordering rule.
+//!
+//! A processor subject to selective rollback must be able to perform a
+//! limited re-ordering of its input: it may remove and process any message
+//! `mᵢ` such that no earlier message `mⱼ` (j < i) has `time(mⱼ) ≤
+//! time(mᵢ)`. [`Channel::pop`] implements both FIFO delivery and this
+//! selective policy (pick the earliest message whose time is minimal among
+//! all queued messages — always legal under the rule).
+
+use crate::engine::record::Record;
+use crate::time::{LexTime, Time};
+use crate::util::ser::{Decode, Encode, Reader, SerError, Writer};
+use std::collections::VecDeque;
+
+/// A timed message.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Message {
+    pub time: Time,
+    pub data: Record,
+}
+
+impl Message {
+    pub fn new(time: Time, data: Record) -> Message {
+        Message { time, data }
+    }
+}
+
+impl Encode for Message {
+    fn encode(&self, w: &mut Writer) {
+        self.time.encode(w);
+        self.data.encode(w);
+    }
+}
+
+impl Decode for Message {
+    fn decode(r: &mut Reader) -> Result<Self, SerError> {
+        Ok(Message { time: Time::decode(r)?, data: Record::decode(r)? })
+    }
+}
+
+/// Delivery policy for a channel.
+#[derive(Copy, Clone, Debug, PartialEq, Eq)]
+pub enum Delivery {
+    /// Strict arrival order.
+    Fifo,
+    /// §3.3 selective order: earliest message with lex-minimal time.
+    /// Legal because if `time(mᵢ)` is minimal and `mᵢ` is the earliest
+    /// such message, no earlier `mⱼ` has `time(mⱼ) ≤ time(mᵢ)` (either
+    /// incomparable, or equal — but equal times occur later only).
+    Selective,
+}
+
+/// A single-edge message queue.
+#[derive(Clone, Debug, Default)]
+pub struct Channel {
+    q: VecDeque<Message>,
+}
+
+impl Channel {
+    pub fn new() -> Channel {
+        Channel::default()
+    }
+
+    pub fn push(&mut self, m: Message) {
+        self.q.push_back(m);
+    }
+
+    pub fn len(&self) -> usize {
+        self.q.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.q.is_empty()
+    }
+
+    /// Remove the next deliverable message under the given policy.
+    pub fn pop(&mut self, delivery: Delivery) -> Option<Message> {
+        match delivery {
+            Delivery::Fifo => self.q.pop_front(),
+            Delivery::Selective => {
+                if self.q.is_empty() {
+                    return None;
+                }
+                let mut best = 0usize;
+                for i in 1..self.q.len() {
+                    if LexTime(self.q[i].time) < LexTime(self.q[best].time) {
+                        best = i;
+                    }
+                }
+                self.q.remove(best)
+            }
+        }
+    }
+
+    /// Iterate queued messages in arrival order.
+    pub fn iter(&self) -> impl Iterator<Item = &Message> {
+        self.q.iter()
+    }
+
+    /// Drop every queued message, returning them (for failure injection
+    /// and rollback).
+    pub fn drain(&mut self) -> Vec<Message> {
+        self.q.drain(..).collect()
+    }
+
+    /// Retain only messages satisfying the predicate; returns the removed
+    /// ones (used by rollback to discard messages inside a frontier).
+    pub fn retain_where<F: FnMut(&Message) -> bool>(&mut self, mut keep: F) -> Vec<Message> {
+        let mut removed = Vec::new();
+        let mut kept = VecDeque::with_capacity(self.q.len());
+        for m in self.q.drain(..) {
+            if keep(&m) {
+                kept.push_back(m);
+            } else {
+                removed.push(m);
+            }
+        }
+        self.q = kept;
+        removed
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn msg(ep: u64, v: i64) -> Message {
+        Message::new(Time::epoch(ep), Record::Int(v))
+    }
+
+    #[test]
+    fn fifo_order() {
+        let mut c = Channel::new();
+        c.push(msg(2, 1));
+        c.push(msg(1, 2));
+        assert_eq!(c.pop(Delivery::Fifo).unwrap().data, Record::Int(1));
+        assert_eq!(c.pop(Delivery::Fifo).unwrap().data, Record::Int(2));
+        assert!(c.pop(Delivery::Fifo).is_none());
+    }
+
+    #[test]
+    fn selective_pulls_min_time_first() {
+        // The §2.3/§3.3 motivating case: epoch-2 messages queued ahead of
+        // an epoch-1 message; selective delivery may take epoch 1 first.
+        let mut c = Channel::new();
+        c.push(msg(2, 10));
+        c.push(msg(2, 11));
+        c.push(msg(1, 12));
+        let m = c.pop(Delivery::Selective).unwrap();
+        assert_eq!(m.time, Time::epoch(1));
+        assert_eq!(m.data, Record::Int(12));
+        // Remaining deliver in arrival order among equal times.
+        assert_eq!(c.pop(Delivery::Selective).unwrap().data, Record::Int(10));
+        assert_eq!(c.pop(Delivery::Selective).unwrap().data, Record::Int(11));
+    }
+
+    #[test]
+    fn selective_respects_reordering_rule() {
+        // Verify the §3.3 precondition on every pop: no earlier message
+        // may have time ≤ the popped message's time.
+        let mut c = Channel::new();
+        let times = [3u64, 1, 2, 1, 5, 0];
+        for (i, &t) in times.iter().enumerate() {
+            c.push(msg(t, i as i64));
+        }
+        while !c.is_empty() {
+            let before: Vec<Message> = c.iter().cloned().collect();
+            let m = c.pop(Delivery::Selective).unwrap();
+            let idx = before.iter().position(|x| x == &m).unwrap();
+            for mj in &before[..idx] {
+                assert!(
+                    !mj.time.le(&m.time),
+                    "earlier message at {} ≤ popped {}",
+                    mj.time,
+                    m.time
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn retain_where_splits() {
+        let mut c = Channel::new();
+        for ep in 0..5 {
+            c.push(msg(ep, ep as i64));
+        }
+        let removed = c.retain_where(|m| m.time.epoch_of() >= 3);
+        assert_eq!(removed.len(), 3);
+        assert_eq!(c.len(), 2);
+        assert!(c.iter().all(|m| m.time.epoch_of() >= 3));
+    }
+
+    #[test]
+    fn message_roundtrip() {
+        let m = Message::new(Time::structured(4, &[2]), Record::text("x"));
+        let bytes = m.to_bytes();
+        assert_eq!(Message::from_bytes(&bytes).unwrap(), m);
+    }
+}

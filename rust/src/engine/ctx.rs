@@ -1,0 +1,140 @@
+//! The output context handed to a processor while it handles an event.
+//!
+//! [`Ctx::send`] stamps outgoing messages with the event time translated
+//! through the out-edge's summary (identity edges preserve it, loop
+//! ingress appends counter 0, feedback increments, egress strips — §3.2);
+//! [`Ctx::send_at`] lets transformers and "send into the future"
+//! processors (differential dataflow, §3.4) choose an explicit later time
+//! in the destination domain. Message times are therefore always in the
+//! *destination's* time domain, matching the paper's convention that
+//! `time(m)` for discarded-message tracking is in the receiving domain.
+
+use crate::engine::channel::Message;
+use crate::engine::record::Record;
+use crate::graph::EdgeId;
+use crate::progress::Summary;
+use crate::time::Time;
+
+/// Per-event output context (see module docs).
+pub struct Ctx<'a> {
+    event_time: Time,
+    out_edges: &'a [EdgeId],
+    summaries: &'a [Summary],
+    /// Per-port flag: destination is a sequence-number-domain processor,
+    /// so the engine assigns `(e, s)` times at flush (placeholder seq 0
+    /// staged here).
+    seq_dst: &'a [bool],
+    /// Staged sends: (out-port index, message).
+    pub(crate) staged: Vec<(usize, Message)>,
+    /// Staged notification requests.
+    pub(crate) notify: Vec<Time>,
+}
+
+impl<'a> Ctx<'a> {
+    pub(crate) fn new(
+        event_time: Time,
+        out_edges: &'a [EdgeId],
+        summaries: &'a [Summary],
+        seq_dst: &'a [bool],
+    ) -> Ctx<'a> {
+        Ctx { event_time, out_edges, summaries, seq_dst, staged: Vec::new(), notify: Vec::new() }
+    }
+
+    /// The logical time of the event being processed.
+    pub fn time(&self) -> Time {
+        self.event_time
+    }
+
+    /// Number of output ports.
+    pub fn num_outputs(&self) -> usize {
+        self.out_edges.len()
+    }
+
+    /// Send `data` on output `port` at the event time (translated through
+    /// the edge summary). On edges into sequence-number-domain processors
+    /// the engine assigns the `(e, s)` time at flush. Panics on other
+    /// capability-gated bridging edges — those require [`Ctx::send_at`].
+    pub fn send(&mut self, port: usize, data: Record) {
+        if self.seq_dst[port] {
+            // Placeholder: the engine stamps the real sequence number.
+            self.staged.push((port, Message::new(Time::seq(self.out_edges[port], 0), data)));
+            return;
+        }
+        let summary = self.summaries[port];
+        let t = summary
+            .apply(&self.event_time)
+            .unwrap_or_else(|| panic!("send on a domain-bridging edge requires send_at"));
+        self.staged.push((port, Message::new(t, data)));
+    }
+
+    /// Send `data` on output `port` at an explicit time in the
+    /// destination's domain. Must not precede the translated event time
+    /// where comparable (messages cannot be sent backwards in time).
+    pub fn send_at(&mut self, port: usize, time: Time, data: Record) {
+        if let Some(min) = self.summaries[port].apply(&self.event_time) {
+            debug_assert!(
+                !time.lt(&min),
+                "send_at {time} precedes the translated event time {min}"
+            );
+        }
+        self.staged.push((port, Message::new(time, data)));
+    }
+
+    /// Request a notification once `time` is complete at this processor.
+    pub fn notify_at(&mut self, time: Time) {
+        self.notify.push(time);
+    }
+
+    /// Consume the context, releasing its borrows and yielding the staged
+    /// sends and notification requests for the engine to flush.
+    pub(crate) fn into_parts(self) -> (Vec<(usize, Message)>, Vec<Time>) {
+        (self.staged, self.notify)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn send_translates_through_summary() {
+        let out_edges = [EdgeId(0), EdgeId(1)];
+        let summaries = [Summary::Same, Summary::Enter];
+        let seq_dst = [false, false];
+        let mut ctx = Ctx::new(Time::epoch(3), &out_edges, &summaries, &seq_dst);
+        ctx.send(0, Record::Int(1));
+        ctx.send(1, Record::Int(2));
+        assert_eq!(ctx.staged[0].1.time, Time::epoch(3));
+        assert_eq!(ctx.staged[1].1.time, Time::structured(3, &[0]));
+    }
+
+    #[test]
+    fn send_at_allows_future() {
+        let out_edges = [EdgeId(0)];
+        let summaries = [Summary::Same];
+        let seq_dst = [false];
+        let mut ctx = Ctx::new(Time::epoch(1), &out_edges, &summaries, &seq_dst);
+        ctx.send_at(0, Time::epoch(5), Record::Unit);
+        assert_eq!(ctx.staged[0].1.time, Time::epoch(5));
+    }
+
+    #[test]
+    #[should_panic(expected = "requires send_at")]
+    fn send_on_gated_edge_panics() {
+        let out_edges = [EdgeId(0)];
+        let summaries = [Summary::Gated];
+        let seq_dst = [false];
+        let mut ctx = Ctx::new(Time::epoch(1), &out_edges, &summaries, &seq_dst);
+        ctx.send(0, Record::Unit);
+    }
+
+    #[test]
+    fn notify_staged() {
+        let out_edges: [EdgeId; 0] = [];
+        let summaries: [Summary; 0] = [];
+        let seq_dst: [bool; 0] = [];
+        let mut ctx = Ctx::new(Time::epoch(2), &out_edges, &summaries, &seq_dst);
+        ctx.notify_at(Time::epoch(2));
+        assert_eq!(ctx.notify, vec![Time::epoch(2)]);
+    }
+}

@@ -1,0 +1,21 @@
+//! The dataflow execution engine (substrate for the paper's Naiad
+//! implementation context, §4).
+//!
+//! - [`record`]: message payloads;
+//! - [`channel`]: per-edge queues with §3.3 selective re-ordering;
+//! - [`processor`]: the operator trait + time-partitioned state helper;
+//! - [`ctx`]: per-event output context with time translation;
+//! - [`scheduler`]: the deterministic event loop and failure/rollback
+//!   primitives.
+
+pub mod channel;
+pub mod ctx;
+pub mod processor;
+pub mod record;
+pub mod scheduler;
+
+pub use channel::{Channel, Delivery, Message};
+pub use ctx::Ctx;
+pub use processor::{Processor, Statefulness, TimeState};
+pub use record::Record;
+pub use scheduler::{Engine, EventKind, EventReport};

@@ -1,0 +1,215 @@
+//! The processor abstraction and state-management helpers.
+//!
+//! A *processor* is a node in the dataflow graph (§2). Its interface
+//! mirrors Naiad's: it receives messages and notifications ([`Processor::on_message`],
+//! [`Processor::on_notification`]) and declares its statefulness class,
+//! which drives the fault-tolerance machinery (§4.1):
+//!
+//! - [`Statefulness::Stateless`] — keeps no state *between* logical times
+//!   (it may accumulate within a time, like Lindi operators). Needs no
+//!   checkpoint data at completed times.
+//! - [`Statefulness::TimePartitioned`] — state internally partitioned by
+//!   logical time (like Differential Dataflow), supporting **selective
+//!   checkpoints**: `checkpoint_upto(f)` returns the state the processor
+//!   *would* have after processing exactly the events with times in `f`
+//!   — possibly a state it has never actually been in (§2.3).
+//! - [`Statefulness::Monolithic`] — arbitrary state; only whole-state
+//!   checkpoints at a frontier are possible (Chandy–Lamport style).
+
+use crate::engine::ctx::Ctx;
+use crate::engine::record::Record;
+use crate::frontier::Frontier;
+use crate::time::{LexTime, Time};
+use crate::util::ser::{Decode, Encode, Reader, Writer};
+use std::collections::BTreeMap;
+
+/// Statefulness class of a processor (see module docs).
+#[derive(Copy, Clone, Debug, PartialEq, Eq)]
+pub enum Statefulness {
+    Stateless,
+    TimePartitioned,
+    Monolithic,
+}
+
+/// A dataflow processor. Object-safe; the engine owns `Box<dyn Processor>`.
+/// (No `Send` bound: the engine is single-threaded, and the XLA-backed
+/// operators hold PJRT handles that are deliberately not `Send`.)
+pub trait Processor {
+    /// Deliver a message on local input `port` at `time`.
+    fn on_message(&mut self, port: usize, time: Time, data: Record, ctx: &mut Ctx);
+
+    /// Deliver a notification: no more messages will arrive at any time
+    /// ≤ `time` (requested earlier via [`Ctx::notify_at`]).
+    fn on_notification(&mut self, _time: Time, _ctx: &mut Ctx) {}
+
+    /// Deliver an external input record (only for source processors).
+    fn on_input(&mut self, _time: Time, _data: Record, _ctx: &mut Ctx) {
+        panic!("processor does not accept external input");
+    }
+
+    /// The statefulness class (drives checkpoint policy defaults).
+    fn statefulness(&self) -> Statefulness {
+        Statefulness::Stateless
+    }
+
+    /// Selective checkpoint: serialize the state reflecting exactly the
+    /// events with times in `upto` — `S(p, f)` of §3.4. Stateless
+    /// processors return empty. Monolithic processors may only be asked
+    /// at a frontier covering their whole history.
+    fn checkpoint_upto(&self, _upto: &Frontier) -> Vec<u8> {
+        Vec::new()
+    }
+
+    /// Restore from a [`Processor::checkpoint_upto`] blob.
+    fn restore(&mut self, blob: &[u8]) {
+        assert!(blob.is_empty(), "stateless processor given non-empty checkpoint");
+    }
+
+    /// Reset to the initial (empty) state — rollback to frontier ∅.
+    fn reset(&mut self) {}
+}
+
+/// State partitioned by logical time: the helper that makes implementing
+/// [`Statefulness::TimePartitioned`] processors (and thus selective
+/// rollback) one-liners. Backed by a `BTreeMap` over the §4.1
+/// lexicographic order.
+#[derive(Clone, Debug)]
+pub struct TimeState<S> {
+    parts: BTreeMap<LexTime, S>,
+}
+
+impl<S> Default for TimeState<S> {
+    fn default() -> Self {
+        TimeState { parts: BTreeMap::new() }
+    }
+}
+
+impl<S> TimeState<S> {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Mutable access to the partition for `t`, creating it with `init`.
+    pub fn entry_or(&mut self, t: Time, init: impl FnOnce() -> S) -> &mut S {
+        self.parts.entry(LexTime(t)).or_insert_with(init)
+    }
+
+    pub fn get(&self, t: &Time) -> Option<&S> {
+        self.parts.get(&LexTime(*t))
+    }
+
+    /// Remove and return the partition for `t` (processors like the
+    /// paper's Sum discard per-time state once the time is complete).
+    pub fn remove(&mut self, t: &Time) -> Option<S> {
+        self.parts.remove(&LexTime(*t))
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.parts.is_empty()
+    }
+
+    pub fn len(&self) -> usize {
+        self.parts.len()
+    }
+
+    pub fn iter(&self) -> impl Iterator<Item = (&LexTime, &S)> {
+        self.parts.iter()
+    }
+
+    pub fn clear(&mut self) {
+        self.parts.clear();
+    }
+
+    /// Drop partitions with times outside `f` (in-memory selective
+    /// rollback for non-failed processors, §4.4).
+    pub fn retain_within(&mut self, f: &Frontier) {
+        self.parts.retain(|lt, _| f.contains(&lt.0));
+    }
+}
+
+impl<S: Encode> TimeState<S> {
+    /// Selective checkpoint: serialize exactly the partitions whose time
+    /// lies inside `f` — the heart of §2.3's "save the state it would
+    /// contain having seen all time-A messages and no time-B messages".
+    pub fn checkpoint_upto(&self, f: &Frontier) -> Vec<u8> {
+        let mut w = Writer::new();
+        let within: Vec<(&LexTime, &S)> =
+            self.parts.iter().filter(|(lt, _)| f.contains(&lt.0)).collect();
+        w.varint(within.len() as u64);
+        for (lt, s) in within {
+            lt.0.encode(&mut w);
+            s.encode(&mut w);
+        }
+        w.into_bytes()
+    }
+}
+
+impl<S: Decode> TimeState<S> {
+    /// Restore from a [`TimeState::checkpoint_upto`] blob (replaces all
+    /// partitions).
+    pub fn restore(&mut self, blob: &[u8]) {
+        self.parts.clear();
+        if blob.is_empty() {
+            return;
+        }
+        let mut r = Reader::new(blob);
+        let n = r.varint().expect("corrupt TimeState checkpoint") as usize;
+        for _ in 0..n {
+            let t = Time::decode(&mut r).expect("corrupt TimeState time");
+            let s = S::decode(&mut r).expect("corrupt TimeState part");
+            self.parts.insert(LexTime(t), s);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn entry_and_remove() {
+        let mut ts: TimeState<f64> = TimeState::new();
+        *ts.entry_or(Time::epoch(1), || 0.0) += 2.5;
+        *ts.entry_or(Time::epoch(1), || 0.0) += 0.5;
+        *ts.entry_or(Time::epoch(2), || 0.0) += 1.0;
+        assert_eq!(ts.get(&Time::epoch(1)), Some(&3.0));
+        assert_eq!(ts.remove(&Time::epoch(1)), Some(3.0));
+        assert_eq!(ts.len(), 1);
+    }
+
+    #[test]
+    fn selective_checkpoint_filters_by_frontier() {
+        // The Fig. 3 scenario: state for time A (epoch 1) and time B
+        // (epoch 2) interleaved; checkpoint at ↓{A} captures only A.
+        let mut ts: TimeState<f64> = TimeState::new();
+        *ts.entry_or(Time::epoch(2), || 0.0) += 9.0; // B processed first!
+        *ts.entry_or(Time::epoch(1), || 0.0) += 4.0;
+        let blob = ts.checkpoint_upto(&Frontier::upto_epoch(1));
+        let mut back: TimeState<f64> = TimeState::new();
+        back.restore(&blob);
+        assert_eq!(back.len(), 1);
+        assert_eq!(back.get(&Time::epoch(1)), Some(&4.0));
+        assert_eq!(back.get(&Time::epoch(2)), None);
+    }
+
+    #[test]
+    fn checkpoint_of_empty_restores_empty() {
+        let ts: TimeState<f64> = TimeState::new();
+        let blob = ts.checkpoint_upto(&Frontier::Top);
+        let mut back: TimeState<f64> = TimeState::new();
+        *back.entry_or(Time::epoch(0), || 1.0) += 1.0;
+        back.restore(&blob);
+        assert!(back.is_empty());
+    }
+
+    #[test]
+    fn retain_within_drops_outside() {
+        let mut ts: TimeState<i64> = TimeState::new();
+        for ep in 0..5 {
+            ts.entry_or(Time::epoch(ep), || ep as i64);
+        }
+        ts.retain_within(&Frontier::upto_epoch(2));
+        assert_eq!(ts.len(), 3);
+        assert!(ts.get(&Time::epoch(4)).is_none());
+    }
+}

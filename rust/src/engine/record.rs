@@ -1,0 +1,155 @@
+//! Message payloads.
+//!
+//! A [`Record`] is the unit of data carried by one dataflow message. The
+//! variants cover the needs of the paper's Figure-1 application (queries,
+//! key–value updates, tensors for the XLA-computed analytics vertices)
+//! while staying cheap to clone: bulk payloads are behind `Arc`.
+
+use crate::util::ser::{Decode, Encode, Reader, SerError, Writer};
+use std::sync::Arc;
+
+/// A single data record.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Record {
+    /// Unit/marker record (pure control messages, e.g. Chandy–Lamport
+    /// snapshot markers are modelled as records too).
+    Unit,
+    /// An integer datum.
+    Int(i64),
+    /// A key–value pair (the workhorse of the aggregation operators).
+    Kv { key: i64, val: f64 },
+    /// Text (user queries in the Figure-1 application).
+    Text(Arc<str>),
+    /// A dense tensor (inputs/outputs of the XLA analytics kernels).
+    Tensor(Arc<Vec<f32>>),
+}
+
+impl Record {
+    pub fn kv(key: i64, val: f64) -> Record {
+        Record::Kv { key, val }
+    }
+
+    pub fn text(s: &str) -> Record {
+        Record::Text(Arc::from(s))
+    }
+
+    pub fn tensor(v: Vec<f32>) -> Record {
+        Record::Tensor(Arc::new(v))
+    }
+
+    /// The integer datum, if this is an [`Record::Int`].
+    pub fn as_int(&self) -> Option<i64> {
+        match self {
+            Record::Int(i) => Some(*i),
+            _ => None,
+        }
+    }
+
+    pub fn as_kv(&self) -> Option<(i64, f64)> {
+        match self {
+            Record::Kv { key, val } => Some((*key, *val)),
+            _ => None,
+        }
+    }
+
+    pub fn as_text(&self) -> Option<&str> {
+        match self {
+            Record::Text(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    pub fn as_tensor(&self) -> Option<&[f32]> {
+        match self {
+            Record::Tensor(v) => Some(v),
+            _ => None,
+        }
+    }
+
+    /// Approximate in-memory size in bytes (for metrics / storage
+    /// accounting).
+    pub fn approx_bytes(&self) -> usize {
+        match self {
+            Record::Unit => 1,
+            Record::Int(_) => 9,
+            Record::Kv { .. } => 17,
+            Record::Text(s) => 1 + s.len(),
+            Record::Tensor(v) => 1 + 4 * v.len(),
+        }
+    }
+}
+
+impl Encode for Record {
+    fn encode(&self, w: &mut Writer) {
+        match self {
+            Record::Unit => w.u8(0),
+            Record::Int(i) => {
+                w.u8(1);
+                w.varint_i(*i);
+            }
+            Record::Kv { key, val } => {
+                w.u8(2);
+                w.varint_i(*key);
+                w.f64(*val);
+            }
+            Record::Text(s) => {
+                w.u8(3);
+                w.str(s);
+            }
+            Record::Tensor(v) => {
+                w.u8(4);
+                w.f32s(v);
+            }
+        }
+    }
+}
+
+impl Decode for Record {
+    fn decode(r: &mut Reader) -> Result<Self, SerError> {
+        Ok(match r.u8()? {
+            0 => Record::Unit,
+            1 => Record::Int(r.varint_i()?),
+            2 => Record::Kv { key: r.varint_i()?, val: r.f64()? },
+            3 => Record::text(r.str()?),
+            _ => Record::tensor(r.f32s()?),
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn accessors() {
+        assert_eq!(Record::Int(5).as_int(), Some(5));
+        assert_eq!(Record::kv(1, 2.0).as_kv(), Some((1, 2.0)));
+        assert_eq!(Record::text("q").as_text(), Some("q"));
+        assert_eq!(Record::tensor(vec![1.0]).as_tensor(), Some(&[1.0f32][..]));
+        assert_eq!(Record::Unit.as_int(), None);
+    }
+
+    #[test]
+    fn encode_roundtrip() {
+        for r in [
+            Record::Unit,
+            Record::Int(-42),
+            Record::kv(7, 1.5),
+            Record::text("falkirk"),
+            Record::tensor(vec![1.0, -2.5, 3.25]),
+        ] {
+            let bytes = r.to_bytes();
+            assert_eq!(Record::from_bytes(&bytes).unwrap(), r);
+        }
+    }
+
+    #[test]
+    fn cheap_clone_shares_bulk() {
+        let t = Record::tensor(vec![0.0; 1024]);
+        let u = t.clone();
+        match (&t, &u) {
+            (Record::Tensor(a), Record::Tensor(b)) => assert!(Arc::ptr_eq(a, b)),
+            _ => unreachable!(),
+        }
+    }
+}

@@ -1,0 +1,620 @@
+//! The deterministic dataflow engine.
+//!
+//! [`Engine`] owns the topology, the processors, one [`Channel`] per edge,
+//! and a [`ProgressTracker`]. Execution is event-at-a-time and fully
+//! deterministic: [`Engine::step`] delivers exactly one message (round-
+//! robin over edges, FIFO or §3.3-selective within a channel) or, when no
+//! messages are deliverable, fires the first eligible notification in
+//! (processor, lexicographic-time) order. Each step returns an
+//! [`EventReport`] describing the event and the messages it sent — the
+//! fault-tolerance harness (`ft::harness`) consumes these reports to
+//! maintain the paper's Table-1 metadata without entangling itself with
+//! the engine's borrows.
+//!
+//! Determinism is what lets the test suite assert the paper's core
+//! correctness claim directly: a failed-and-recovered execution produces
+//! byte-identical outputs to a failure-free one.
+
+use crate::engine::channel::{Channel, Delivery, Message};
+use crate::engine::ctx::Ctx;
+use crate::engine::processor::Processor;
+use crate::engine::record::Record;
+use crate::graph::{EdgeId, ProcId, Topology};
+use crate::progress::{ProgressTracker, Summary};
+use crate::time::{LexTime, Time};
+use std::collections::BTreeSet;
+use std::sync::Arc;
+
+/// What kind of event a step processed.
+#[derive(Clone, Debug, PartialEq)]
+pub enum EventKind {
+    /// A message was delivered to `proc` on `edge`.
+    Message { proc: ProcId, edge: EdgeId, time: Time, data: Record },
+    /// A notification fired at `proc` for `time`.
+    Notification { proc: ProcId, time: Time },
+    /// An external input record was pushed into source `proc`.
+    Input { proc: ProcId, time: Time, data: Record },
+}
+
+/// Report of one processed event: the event plus everything it sent.
+#[derive(Clone, Debug)]
+pub struct EventReport {
+    pub kind: EventKind,
+    /// Messages emitted while handling the event, tagged with the edge
+    /// they were sent on (already enqueued by the engine).
+    pub sent: Vec<(EdgeId, Message)>,
+}
+
+/// The deterministic single-process dataflow engine.
+pub struct Engine {
+    topo: Arc<Topology>,
+    procs: Vec<Box<dyn Processor>>,
+    channels: Vec<Channel>,
+    tracker: ProgressTracker,
+    /// Requested-but-unfired notifications, per processor.
+    pending: Vec<BTreeSet<LexTime>>,
+    /// Capability currently held by each source processor (input epoch
+    /// management), if any.
+    input_caps: Vec<Option<Time>>,
+    /// Per-processor out-port summaries (parallel to `topo.out_edges`).
+    out_summaries: Vec<Vec<Summary>>,
+    /// Per-processor out-port flags: destination is a seq-domain
+    /// processor (engine assigns sequence numbers at flush).
+    out_seq_dst: Vec<Vec<bool>>,
+    /// Per-edge sequence counters for seq-domain destinations (total
+    /// messages ever sent; next message gets `count + 1`). Recovery
+    /// resets these to the restored checkpoint's counts.
+    seq_counters: Vec<u64>,
+    /// Per-processor completed-time frontier (↓ of delivered
+    /// notifications). Time-partitioned processors are *epoch-idempotent*:
+    /// a message arriving at a completed time is a duplicate from an
+    /// upstream re-execution and is silently dropped — the mechanism that
+    /// lets the Figure-1 regime boundaries recover independently.
+    completed: Vec<crate::frontier::Frontier>,
+    /// Whether each processor dedups completed-time deliveries.
+    dedup: Vec<bool>,
+    /// Total deliveries suppressed by completed-time dedup.
+    pub deduped: u64,
+    delivery: Delivery,
+    /// Round-robin cursor over edges.
+    cursor: usize,
+    /// Total events processed (virtual clock).
+    events: u64,
+}
+
+impl Engine {
+    /// Build an engine. `procs[i]` implements processor `ProcId(i)`.
+    pub fn new(topo: Arc<Topology>, procs: Vec<Box<dyn Processor>>, delivery: Delivery) -> Engine {
+        assert_eq!(topo.num_procs(), procs.len(), "one processor impl per topology node");
+        let out_summaries = topo
+            .proc_ids()
+            .map(|p| topo.out_edges(p).iter().map(|&e| Summary::of(topo.projection(e))).collect())
+            .collect();
+        let out_seq_dst = topo
+            .proc_ids()
+            .map(|p| {
+                topo.out_edges(p)
+                    .iter()
+                    .map(|&e| topo.domain(topo.dst(e)) == crate::time::TimeDomain::Seq)
+                    .collect()
+            })
+            .collect();
+        let dedup = procs
+            .iter()
+            .map(|p| p.statefulness() == crate::engine::processor::Statefulness::TimePartitioned)
+            .collect();
+        Engine {
+            tracker: ProgressTracker::new(&topo),
+            channels: vec![Channel::new(); topo.num_edges()],
+            pending: vec![BTreeSet::new(); topo.num_procs()],
+            input_caps: vec![None; topo.num_procs()],
+            out_summaries,
+            out_seq_dst,
+            seq_counters: vec![0; topo.num_edges()],
+            completed: vec![crate::frontier::Frontier::Bottom; topo.num_procs()],
+            dedup,
+            deduped: 0,
+            procs,
+            topo,
+            delivery,
+            cursor: 0,
+            events: 0,
+        }
+    }
+
+    pub fn topology(&self) -> &Topology {
+        &self.topo
+    }
+
+    pub fn events_processed(&self) -> u64 {
+        self.events
+    }
+
+    /// Hold (or move) the input capability of source `p` to `t`. The
+    /// capability lower-bounds the times of future external input; moving
+    /// it forward is what completes earlier epochs downstream.
+    pub fn advance_input(&mut self, p: ProcId, t: Time) {
+        if let Some(old) = self.input_caps[p.0 as usize].take() {
+            self.tracker.cap_release(p, old);
+        }
+        self.tracker.cap_acquire(p, t);
+        self.input_caps[p.0 as usize] = Some(t);
+    }
+
+    /// Drop source `p`'s input capability entirely (end of stream).
+    pub fn close_input(&mut self, p: ProcId) {
+        if let Some(old) = self.input_caps[p.0 as usize].take() {
+            self.tracker.cap_release(p, old);
+        }
+    }
+
+    pub fn input_cap(&self, p: ProcId) -> Option<Time> {
+        self.input_caps[p.0 as usize]
+    }
+
+    /// Push one external input record into source `p` at time `t`,
+    /// processing it immediately.
+    pub fn push_input(&mut self, p: ProcId, t: Time, data: Record) -> EventReport {
+        if let Some(cap) = self.input_caps[p.0 as usize] {
+            debug_assert!(
+                !t.lt(&cap) && (cap.le(&t) || !cap.comparable(&t)),
+                "input at {t} precedes held capability {cap}"
+            );
+        }
+        let mut ctx = Ctx::new(
+            t,
+            self.topo.out_edges(p),
+            &self.out_summaries[p.0 as usize],
+            &self.out_seq_dst[p.0 as usize],
+        );
+        self.procs[p.0 as usize].on_input(t, data.clone(), &mut ctx);
+        let (staged, notify) = ctx.into_parts();
+        let sent = self.flush(p, staged, notify);
+        self.events += 1;
+        EventReport { kind: EventKind::Input { proc: p, time: t, data }, sent }
+    }
+
+    /// Move staged sends into channels/tracker and register notification
+    /// requests; returns the sent list for the report.
+    fn flush(&mut self, p: ProcId, staged: Vec<(usize, Message)>, notify: Vec<Time>) -> Vec<(EdgeId, Message)> {
+        let mut sent = Vec::with_capacity(staged.len());
+        for (port, mut msg) in staged {
+            let e = self.topo.out_edges(p)[port];
+            // Assign the sequence number for seq-domain destinations.
+            if self.out_seq_dst[p.0 as usize][port] {
+                let c = &mut self.seq_counters[e.0 as usize];
+                *c += 1;
+                msg.time = Time::seq(e, *c);
+            }
+            debug_assert!(
+                self.topo.domain(self.topo.dst(e)).admits(&msg.time),
+                "message time {} not in destination domain of {e}",
+                msg.time
+            );
+            self.tracker.message_sent(e, msg.time);
+            self.channels[e.0 as usize].push(msg.clone());
+            sent.push((e, msg));
+        }
+        for t in notify {
+            if self.pending[p.0 as usize].insert(LexTime(t)) {
+                self.tracker.cap_acquire(p, t);
+            }
+        }
+        sent
+    }
+
+    /// Process one event (message delivery or notification). Returns
+    /// `None` when the system is quiescent.
+    pub fn step(&mut self) -> Option<EventReport> {
+        // Phase 1: deliver a message, round-robin over edges.
+        let ne = self.channels.len();
+        for i in 0..ne {
+            let ei = (self.cursor + i) % ne;
+            let (e, p) = (EdgeId(ei as u32), self.topo.dst(EdgeId(ei as u32)));
+            // Pull until a non-duplicate message (completed-time dedup).
+            let msg = loop {
+                match self.channels[ei].pop(self.delivery) {
+                    None => break None,
+                    Some(m) => {
+                        self.tracker.message_removed(e, m.time);
+                        if self.dedup[p.0 as usize]
+                            && self.completed[p.0 as usize].contains(&m.time)
+                        {
+                            self.deduped += 1;
+                            continue;
+                        }
+                        break Some(m);
+                    }
+                }
+            };
+            let Some(msg) = msg else { continue };
+            let port = self.topo.input_port(e);
+            let mut ctx =
+                Ctx::new(
+                msg.time,
+                self.topo.out_edges(p),
+                &self.out_summaries[p.0 as usize],
+                &self.out_seq_dst[p.0 as usize],
+            );
+            self.procs[p.0 as usize].on_message(port, msg.time, msg.data.clone(), &mut ctx);
+            let (staged, notify) = ctx.into_parts();
+            let sent = self.flush(p, staged, notify);
+            self.cursor = (ei + 1) % ne;
+            self.events += 1;
+            return Some(EventReport {
+                kind: EventKind::Message { proc: p, edge: e, time: msg.time, data: msg.data },
+                sent,
+            });
+        }
+        // Phase 2: fire the first eligible notification.
+        if self.pending.iter().all(|s| s.is_empty()) {
+            return None; // nothing requested: skip the reachability pass
+        }
+        let reachable = self.tracker.reachable(&self.topo);
+        for pi in 0..self.procs.len() {
+            let p = ProcId(pi as u32);
+            let eligible = self.pending[pi]
+                .iter()
+                .find(|lt| ProgressTracker::time_complete(&reachable, p, &lt.0))
+                .copied();
+            if let Some(lt) = eligible {
+                self.pending[pi].remove(&lt);
+                let t = lt.0;
+                self.completed[pi].insert(t);
+                let mut ctx =
+                    Ctx::new(t, self.topo.out_edges(p), &self.out_summaries[pi], &self.out_seq_dst[pi]);
+                self.procs[pi].on_notification(t, &mut ctx);
+                let (staged, notify) = ctx.into_parts();
+                let sent = self.flush(p, staged, notify);
+                // Release the request capability only after the handler
+                // ran (it is what allowed the handler to send at ≥ t).
+                self.tracker.cap_release(p, t);
+                self.events += 1;
+                return Some(EventReport { kind: EventKind::Notification { proc: p, time: t }, sent });
+            }
+        }
+        None
+    }
+
+    /// Run until quiescent (or `max_steps`), returning the reports.
+    pub fn run_to_quiescence(&mut self, max_steps: usize) -> Vec<EventReport> {
+        let mut reports = Vec::new();
+        while reports.len() < max_steps {
+            match self.step() {
+                Some(r) => reports.push(r),
+                None => break,
+            }
+        }
+        reports
+    }
+
+    /// Whether no message or notification can be processed.
+    pub fn is_quiescent(&mut self) -> bool {
+        if self.channels.iter().any(|c| !c.is_empty()) {
+            return false;
+        }
+        let reachable = self.tracker.reachable(&self.topo);
+        !(0..self.procs.len()).any(|pi| {
+            self.pending[pi]
+                .iter()
+                .any(|lt| ProgressTracker::time_complete(&reachable, ProcId(pi as u32), &lt.0))
+        })
+    }
+
+    // ------------------------------------------------------------------
+    // Primitives for failure injection and rollback (used by `failure`
+    // and `ft::recovery`; they keep the engine's invariants).
+    // ------------------------------------------------------------------
+
+    /// Read access to a channel's queued messages.
+    pub fn channel(&self, e: EdgeId) -> &Channel {
+        &self.channels[e.0 as usize]
+    }
+
+    /// Mutable access to a processor implementation.
+    pub fn proc_mut(&mut self, p: ProcId) -> &mut dyn Processor {
+        &mut *self.procs[p.0 as usize]
+    }
+
+    pub fn proc(&self, p: ProcId) -> &dyn Processor {
+        &*self.procs[p.0 as usize]
+    }
+
+    /// Destroy processor `p`'s volatile state as a crash would: reset the
+    /// operator, drop messages queued on its *input* edges (they lived in
+    /// the failed process's receive buffers), and forget its pending
+    /// notification requests. Messages already sent on output edges
+    /// survive (they are owned by the receivers in our model).
+    pub fn fail_proc(&mut self, p: ProcId) {
+        self.procs[p.0 as usize].reset();
+        for &e in self.topo.in_edges(p) {
+            for m in self.channels[e.0 as usize].drain() {
+                self.tracker.message_removed(e, m.time);
+            }
+        }
+        for lt in std::mem::take(&mut self.pending[p.0 as usize]) {
+            self.tracker.cap_release(p, lt.0);
+        }
+        if let Some(t) = self.input_caps[p.0 as usize].take() {
+            self.tracker.cap_release(p, t);
+        }
+        self.completed[p.0 as usize] = crate::frontier::Frontier::Bottom;
+        self.events += 1;
+    }
+
+    /// Remove from channel `e` all messages whose time satisfies `drop`,
+    /// returning them (rollback discards messages at times being undone).
+    pub fn discard_from_channel<F: FnMut(&Time) -> bool>(
+        &mut self,
+        e: EdgeId,
+        mut drop: F,
+    ) -> Vec<Message> {
+        let removed = self.channels[e.0 as usize].retain_where(|m| !drop(&m.time));
+        for m in &removed {
+            self.tracker.message_removed(e, m.time);
+        }
+        removed
+    }
+
+    /// Enqueue a replayed message on `e` (rollback's Q′(e), §3.6).
+    pub fn replay_message(&mut self, e: EdgeId, m: Message) {
+        self.tracker.message_sent(e, m.time);
+        self.channels[e.0 as usize].push(m);
+    }
+
+    /// Restore pending notification requests for `p` (from checkpoint
+    /// metadata) — re-acquires their capabilities.
+    pub fn restore_pending(&mut self, p: ProcId, times: impl IntoIterator<Item = Time>) {
+        for t in times {
+            if self.pending[p.0 as usize].insert(LexTime(t)) {
+                self.tracker.cap_acquire(p, t);
+            }
+        }
+    }
+
+    /// Currently pending notification requests at `p`.
+    pub fn pending_notifications(&self, p: ProcId) -> Vec<Time> {
+        self.pending[p.0 as usize].iter().map(|lt| lt.0).collect()
+    }
+
+    /// Drop pending notification requests at `p` matching `pred`.
+    pub fn cancel_pending<F: FnMut(&Time) -> bool>(&mut self, p: ProcId, mut pred: F) {
+        let keep: BTreeSet<LexTime> = self.pending[p.0 as usize]
+            .iter()
+            .filter(|lt| !pred(&lt.0))
+            .copied()
+            .collect();
+        for lt in &self.pending[p.0 as usize] {
+            if !keep.contains(lt) {
+                self.tracker.cap_release(p, lt.0);
+            }
+        }
+        self.pending[p.0 as usize] = keep;
+    }
+
+    /// Total messages queued across all channels.
+    pub fn queued_messages(&self) -> usize {
+        self.channels.iter().map(|c| c.len()).sum()
+    }
+
+    /// The sequence counter for edge `e` (messages ever sent to a
+    /// seq-domain destination).
+    pub fn seq_counter(&self, e: EdgeId) -> u64 {
+        self.seq_counters[e.0 as usize]
+    }
+
+    /// Reset the sequence counter for `e` (rollback: re-executed sends
+    /// must reuse the undone sequence numbers).
+    pub fn set_seq_counter(&mut self, e: EdgeId, v: u64) {
+        self.seq_counters[e.0 as usize] = v;
+    }
+
+    /// The completed-time frontier at `p` (↓ delivered notifications).
+    pub fn completed(&self, p: ProcId) -> &crate::frontier::Frontier {
+        &self.completed[p.0 as usize]
+    }
+
+    /// Whether `p` dedups deliveries at completed times.
+    pub fn dedups(&self, p: ProcId) -> bool {
+        self.dedup[p.0 as usize]
+    }
+
+    /// Reset the completed-time frontier (recovery restores it from the
+    /// chosen checkpoint's N̄).
+    pub fn set_completed(&mut self, p: ProcId, f: crate::frontier::Frontier) {
+        self.completed[p.0 as usize] = f;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::engine::processor::Statefulness;
+    use crate::frontier::Frontier;
+    use crate::graph::{GraphBuilder, Projection};
+    use crate::time::TimeDomain;
+    use std::sync::{Arc as StdArc, Mutex};
+
+    /// Source: forwards external input to output 0.
+    struct Src;
+    impl Processor for Src {
+        fn on_message(&mut self, _p: usize, _t: Time, _d: Record, _c: &mut Ctx) {
+            unreachable!("source has no inputs")
+        }
+        fn on_input(&mut self, _t: Time, data: Record, ctx: &mut Ctx) {
+            ctx.send(0, data);
+        }
+    }
+
+    /// Doubles integers.
+    struct Double;
+    impl Processor for Double {
+        fn on_message(&mut self, _p: usize, _t: Time, d: Record, ctx: &mut Ctx) {
+            ctx.send(0, Record::Int(d.as_int().unwrap() * 2));
+        }
+    }
+
+    /// Per-time sum that emits on notification (the paper's Fig. 3 Sum).
+    #[derive(Default)]
+    struct Sum {
+        state: crate::engine::processor::TimeState<f64>,
+    }
+    impl Processor for Sum {
+        fn on_message(&mut self, _p: usize, t: Time, d: Record, ctx: &mut Ctx) {
+            let v = match d {
+                Record::Int(i) => i as f64,
+                Record::Kv { val, .. } => val,
+                _ => 0.0,
+            };
+            let fresh = self.state.get(&t).is_none();
+            *self.state.entry_or(t, || 0.0) += v;
+            if fresh {
+                ctx.notify_at(t);
+            }
+        }
+        fn on_notification(&mut self, t: Time, ctx: &mut Ctx) {
+            if let Some(sum) = self.state.remove(&t) {
+                ctx.send(0, Record::Kv { key: 0, val: sum });
+            }
+        }
+        fn statefulness(&self) -> Statefulness {
+            Statefulness::TimePartitioned
+        }
+        fn checkpoint_upto(&self, f: &Frontier) -> Vec<u8> {
+            self.state.checkpoint_upto(f)
+        }
+        fn restore(&mut self, blob: &[u8]) {
+            self.state.restore(blob);
+        }
+        fn reset(&mut self) {
+            self.state.clear();
+        }
+    }
+
+    /// Terminal sink capturing everything it sees.
+    struct Sink(StdArc<Mutex<Vec<(Time, Record)>>>);
+    impl Processor for Sink {
+        fn on_message(&mut self, _p: usize, t: Time, d: Record, _c: &mut Ctx) {
+            self.0.lock().unwrap().push((t, d));
+        }
+    }
+
+    fn pipeline() -> (Engine, ProcId, StdArc<Mutex<Vec<(Time, Record)>>>) {
+        let mut g = GraphBuilder::new();
+        let src = g.add_proc("src", TimeDomain::EPOCH);
+        let dbl = g.add_proc("double", TimeDomain::EPOCH);
+        let sum = g.add_proc("sum", TimeDomain::EPOCH);
+        let snk = g.add_proc("sink", TimeDomain::EPOCH);
+        g.connect(src, dbl, Projection::Identity);
+        g.connect(dbl, sum, Projection::Identity);
+        g.connect(sum, snk, Projection::Identity);
+        let topo = Arc::new(g.build().unwrap());
+        let out = StdArc::new(Mutex::new(Vec::new()));
+        let procs: Vec<Box<dyn Processor>> = vec![
+            Box::new(Src),
+            Box::new(Double),
+            Box::new(Sum::default()),
+            Box::new(Sink(out.clone())),
+        ];
+        (Engine::new(topo, procs, Delivery::Fifo), src, out)
+    }
+
+    #[test]
+    fn sum_pipeline_end_to_end() {
+        let (mut eng, src, out) = pipeline();
+        eng.advance_input(src, Time::epoch(0));
+        eng.push_input(src, Time::epoch(0), Record::Int(3));
+        eng.push_input(src, Time::epoch(0), Record::Int(4));
+        // Notification must NOT fire while the input epoch is open.
+        eng.run_to_quiescence(1000);
+        assert!(out.lock().unwrap().is_empty(), "sum must wait for epoch completion");
+        // Close epoch 0 by advancing the capability.
+        eng.advance_input(src, Time::epoch(1));
+        eng.run_to_quiescence(1000);
+        let got = out.lock().unwrap().clone();
+        assert_eq!(got, vec![(Time::epoch(0), Record::Kv { key: 0, val: 14.0 })]);
+    }
+
+    #[test]
+    fn epochs_complete_in_order() {
+        let (mut eng, src, out) = pipeline();
+        eng.advance_input(src, Time::epoch(0));
+        eng.push_input(src, Time::epoch(0), Record::Int(1));
+        eng.advance_input(src, Time::epoch(1));
+        eng.push_input(src, Time::epoch(1), Record::Int(10));
+        eng.close_input(src);
+        eng.run_to_quiescence(1000);
+        let got = out.lock().unwrap().clone();
+        assert_eq!(
+            got,
+            vec![
+                (Time::epoch(0), Record::Kv { key: 0, val: 2.0 }),
+                (Time::epoch(1), Record::Kv { key: 0, val: 20.0 }),
+            ]
+        );
+    }
+
+    #[test]
+    fn quiescence_detection() {
+        let (mut eng, src, _out) = pipeline();
+        assert!(eng.is_quiescent());
+        eng.advance_input(src, Time::epoch(0));
+        eng.push_input(src, Time::epoch(0), Record::Int(1));
+        assert!(!eng.is_quiescent());
+        eng.close_input(src);
+        eng.run_to_quiescence(1000);
+        assert!(eng.is_quiescent());
+    }
+
+    #[test]
+    fn fail_proc_drops_input_queues_and_state() {
+        let (mut eng, src, out) = pipeline();
+        let sum = eng.topology().find("sum").unwrap();
+        eng.advance_input(src, Time::epoch(0));
+        eng.push_input(src, Time::epoch(0), Record::Int(5));
+        // Deliver into double only; its output to sum stays queued.
+        eng.step();
+        assert_eq!(eng.queued_messages(), 1);
+        eng.fail_proc(sum);
+        assert_eq!(eng.queued_messages(), 0, "sum's input queue was lost in the crash");
+        eng.close_input(src);
+        eng.run_to_quiescence(1000);
+        assert!(out.lock().unwrap().is_empty());
+    }
+
+    #[test]
+    fn selective_delivery_interleaves_epochs() {
+        // Two epochs in flight at once: selective channels deliver the
+        // earlier time first even if enqueued later.
+        let mut g = GraphBuilder::new();
+        let src = g.add_proc("src", TimeDomain::EPOCH);
+        let snk = g.add_proc("sink", TimeDomain::EPOCH);
+        g.connect(src, snk, Projection::Identity);
+        let topo = Arc::new(g.build().unwrap());
+        let out = StdArc::new(Mutex::new(Vec::new()));
+        let procs: Vec<Box<dyn Processor>> =
+            vec![Box::new(Src), Box::new(Sink(out.clone()))];
+        let mut eng = Engine::new(topo, procs, Delivery::Selective);
+        let src = ProcId(0);
+        eng.advance_input(src, Time::epoch(0));
+        // Push epoch 1 before epoch 0 finishes arriving.
+        eng.push_input(src, Time::epoch(1), Record::Int(11));
+        eng.push_input(src, Time::epoch(0), Record::Int(1));
+        eng.run_to_quiescence(100);
+        let got = out.lock().unwrap().clone();
+        assert_eq!(got[0].0, Time::epoch(0), "selective delivery pulls epoch 0 first");
+        assert_eq!(got[1].0, Time::epoch(1));
+    }
+
+    #[test]
+    fn replay_and_discard_primitives() {
+        let (mut eng, _src, _out) = pipeline();
+        let e = EdgeId(1);
+        eng.replay_message(e, Message::new(Time::epoch(0), Record::Int(1)));
+        eng.replay_message(e, Message::new(Time::epoch(1), Record::Int(2)));
+        assert_eq!(eng.channel(e).len(), 2);
+        let removed = eng.discard_from_channel(e, |t| t.epoch_of() >= 1);
+        assert_eq!(removed.len(), 1);
+        assert_eq!(eng.channel(e).len(), 1);
+    }
+}

@@ -1,0 +1,104 @@
+//! Failure injection and detection.
+//!
+//! The paper assumes "detecting failures … [is] adequately covered by
+//! existing techniques" (§1) and describes the operational flow in §4.4:
+//! a peer notices a broken connection, keeps buffering output, and only
+//! when a *failure detector* confirms the crash does the system pause and
+//! recover. This module provides the deterministic crash schedule used by
+//! the examples/benches and a simple timeout-style detector model whose
+//! confirmation delay the benches can charge to recovery latency.
+
+use crate::graph::ProcId;
+use crate::util::rng::Rng;
+
+/// A deterministic schedule of crash events, in virtual event time.
+#[derive(Clone, Debug, Default)]
+pub struct FailureSchedule {
+    /// Sorted (event-count, victim) pairs.
+    crashes: Vec<(u64, ProcId)>,
+    next: usize,
+}
+
+impl FailureSchedule {
+    pub fn new(mut crashes: Vec<(u64, ProcId)>) -> FailureSchedule {
+        crashes.sort_by_key(|(at, p)| (*at, p.0));
+        FailureSchedule { crashes, next: 0 }
+    }
+
+    /// Random schedule: `n` crashes uniformly over `[0, horizon)` events
+    /// choosing victims from `candidates`.
+    pub fn random(seed: u64, n: usize, horizon: u64, candidates: &[ProcId]) -> FailureSchedule {
+        let mut rng = Rng::new(seed);
+        let crashes = (0..n)
+            .map(|_| (rng.below(horizon), *rng.choose(candidates)))
+            .collect();
+        FailureSchedule::new(crashes)
+    }
+
+    /// Victims due at-or-before virtual time `now` (consumed).
+    pub fn due(&mut self, now: u64) -> Vec<ProcId> {
+        let mut out = Vec::new();
+        while self.next < self.crashes.len() && self.crashes[self.next].0 <= now {
+            out.push(self.crashes[self.next].1);
+            self.next += 1;
+        }
+        out
+    }
+
+    pub fn remaining(&self) -> usize {
+        self.crashes.len() - self.next
+    }
+}
+
+/// Timeout-based failure-detector model: confirmation arrives a fixed
+/// number of virtual time units after the crash (§4.4's "when q's failure
+/// is confirmed by a failure detector"). Benches add this to recovery
+/// latency.
+#[derive(Clone, Copy, Debug)]
+pub struct DetectorModel {
+    /// Heartbeat interval (virtual units).
+    pub heartbeat: u64,
+    /// Missed heartbeats before declaring failure.
+    pub misses: u64,
+}
+
+impl Default for DetectorModel {
+    fn default() -> Self {
+        DetectorModel { heartbeat: 10, misses: 3 }
+    }
+}
+
+impl DetectorModel {
+    /// Virtual delay between a crash and its confirmation.
+    pub fn confirmation_delay(&self) -> u64 {
+        self.heartbeat * self.misses
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn schedule_fires_in_order() {
+        let mut s = FailureSchedule::new(vec![(10, ProcId(2)), (5, ProcId(1))]);
+        assert!(s.due(4).is_empty());
+        assert_eq!(s.due(5), vec![ProcId(1)]);
+        assert_eq!(s.due(100), vec![ProcId(2)]);
+        assert_eq!(s.remaining(), 0);
+    }
+
+    #[test]
+    fn random_schedule_is_deterministic() {
+        let cands = [ProcId(0), ProcId(1), ProcId(2)];
+        let a = FailureSchedule::random(9, 5, 1000, &cands);
+        let b = FailureSchedule::random(9, 5, 1000, &cands);
+        assert_eq!(a.crashes, b.crashes);
+    }
+
+    #[test]
+    fn detector_delay() {
+        let d = DetectorModel { heartbeat: 7, misses: 2 };
+        assert_eq!(d.confirmation_delay(), 14);
+    }
+}

@@ -1,0 +1,484 @@
+//! Frontiers: downward-closed sets of logical times (§3.1).
+//!
+//! A rollback restores each processor to the state reflecting exactly the
+//! events whose times lie inside a chosen *frontier*. A frontier must be
+//! downward-closed: `t ∈ f ∧ t' ≤ t ⇒ t' ∈ f`. We represent frontiers
+//! compactly per time domain:
+//!
+//! - **Seq domain**: a per-edge high watermark `e ↦ s`, denoting
+//!   `{(e,1),…,(e,s)}` for each edge — exactly the paper's
+//!   `f^s_{e₁…eₙ}(s₁,…,sₙ)` (Fig. 2a).
+//! - **Structured domain**: an *antichain* of maximal elements; the
+//!   frontier is the union of their down-sets. Loop coordinates may be
+//!   [`CTR_INF`](crate::time::CTR_INF) to express "all iterations".
+//! - [`Frontier::Bottom`] is ∅ and [`Frontier::Top`] is ⊤, the special
+//!   frontier containing all event times that §4.4 temporarily adds to
+//!   `F*(p)` for non-failed processors.
+//!
+//! All §3.5 consistency constraints reduce to [`Frontier::contains`] and
+//! [`Frontier::is_subset`]; the Fig. 6 fixed point additionally uses
+//! [`Frontier::intersect`] and [`Frontier::union`].
+
+use crate::graph::EdgeId;
+use crate::time::{Time, TimeDomain};
+use crate::util::ser::{Decode, Encode, Reader, SerError, Writer};
+use std::collections::BTreeMap;
+
+/// A downward-closed set of logical times. See module docs.
+#[derive(Clone, PartialEq, Eq, Debug)]
+pub enum Frontier {
+    /// The empty frontier ∅ (roll back to initial state).
+    Bottom,
+    /// The full frontier ⊤ (keep everything; §4.4).
+    Top,
+    /// Seq-domain frontier: per-edge high watermarks (seq numbers start
+    /// at 1; a watermark of `s` contains `(e,1)..(e,s)`). Edges absent
+    /// from the map contribute no times. Invariant: no zero watermarks.
+    Seq(BTreeMap<EdgeId, u64>),
+    /// Structured-domain frontier: antichain of maximal elements, all of
+    /// the same depth. Invariant: nonempty, mutually incomparable.
+    Structured { depth: u8, maximal: Vec<Time> },
+}
+
+impl Frontier {
+    /// The ∅ frontier.
+    pub fn bottom() -> Frontier {
+        Frontier::Bottom
+    }
+
+    /// The ⊤ frontier.
+    pub fn top() -> Frontier {
+        Frontier::Top
+    }
+
+    /// Seq-domain frontier from explicit watermarks (zeroes are dropped).
+    pub fn seq_watermarks<I: IntoIterator<Item = (EdgeId, u64)>>(iter: I) -> Frontier {
+        let m: BTreeMap<EdgeId, u64> = iter.into_iter().filter(|(_, s)| *s > 0).collect();
+        if m.is_empty() {
+            Frontier::Bottom
+        } else {
+            Frontier::Seq(m)
+        }
+    }
+
+    /// The frontier ↓{t}: all times ≤ t.
+    pub fn below(t: Time) -> Frontier {
+        match t {
+            Time::Seq { edge, seq } => Frontier::seq_watermarks([(edge, seq)]),
+            Time::Structured { loops, .. } => {
+                Frontier::Structured { depth: loops.depth() as u8, maximal: vec![t] }
+            }
+        }
+    }
+
+    /// Downward closure ↓T of an arbitrary set of times (§3.1). All times
+    /// must share a domain.
+    pub fn down_close<I: IntoIterator<Item = Time>>(times: I) -> Frontier {
+        let mut f = Frontier::Bottom;
+        for t in times {
+            f.insert(t);
+        }
+        f
+    }
+
+    /// Epoch-domain frontier containing epochs `0..=e`.
+    pub fn upto_epoch(e: u64) -> Frontier {
+        Frontier::below(Time::epoch(e))
+    }
+
+    /// Whether this is the empty frontier.
+    pub fn is_bottom(&self) -> bool {
+        matches!(self, Frontier::Bottom)
+    }
+
+    /// Whether this is the full frontier.
+    pub fn is_top(&self) -> bool {
+        matches!(self, Frontier::Top)
+    }
+
+    /// Membership test `t ∈ f`.
+    pub fn contains(&self, t: &Time) -> bool {
+        match self {
+            Frontier::Bottom => false,
+            Frontier::Top => true,
+            Frontier::Seq(wm) => match t {
+                Time::Seq { edge, seq } => wm.get(edge).map(|s| *seq <= *s).unwrap_or(false),
+                _ => false,
+            },
+            Frontier::Structured { maximal, .. } => maximal.iter().any(|m| t.le(m)),
+        }
+    }
+
+    /// Subset test `self ⊆ other`. Frontiers of different concrete domains
+    /// are only related through Bottom/Top.
+    pub fn is_subset(&self, other: &Frontier) -> bool {
+        match (self, other) {
+            (Frontier::Bottom, _) => true,
+            (_, Frontier::Top) => true,
+            (Frontier::Top, _) => false,
+            (_, Frontier::Bottom) => false,
+            (Frontier::Seq(a), Frontier::Seq(b)) => {
+                a.iter().all(|(e, s)| b.get(e).map(|s2| s <= s2).unwrap_or(false))
+            }
+            (Frontier::Structured { maximal: a, .. }, f @ Frontier::Structured { .. }) => {
+                a.iter().all(|t| f.contains(t))
+            }
+            _ => false,
+        }
+    }
+
+    /// Insert `↓{t}` into this frontier (mutating union).
+    pub fn insert(&mut self, t: Time) {
+        match self {
+            Frontier::Top => {}
+            Frontier::Bottom => *self = Frontier::below(t),
+            Frontier::Seq(wm) => {
+                if let Time::Seq { edge, seq } = t {
+                    let w = wm.entry(edge).or_insert(0);
+                    *w = (*w).max(seq);
+                } else {
+                    panic!("inserting structured time into seq frontier");
+                }
+            }
+            Frontier::Structured { depth, maximal } => {
+                let lt = t.loops_of();
+                assert_eq!(lt.depth() as u8, *depth, "inserting time of wrong depth");
+                if maximal.iter().any(|m| t.le(m)) {
+                    return; // already contained
+                }
+                maximal.retain(|m| !m.le(&t));
+                maximal.push(t);
+            }
+        }
+    }
+
+    /// Union of two frontiers (least upper bound in the subset lattice).
+    pub fn union(&self, other: &Frontier) -> Frontier {
+        match (self, other) {
+            (Frontier::Top, _) | (_, Frontier::Top) => Frontier::Top,
+            (Frontier::Bottom, f) | (f, Frontier::Bottom) => f.clone(),
+            (Frontier::Seq(a), Frontier::Seq(b)) => {
+                let mut m = a.clone();
+                for (e, s) in b {
+                    let w = m.entry(*e).or_insert(0);
+                    *w = (*w).max(*s);
+                }
+                Frontier::Seq(m)
+            }
+            (Frontier::Structured { depth: d1, maximal: a }, Frontier::Structured { depth: d2, maximal: b }) => {
+                assert_eq!(d1, d2, "union of different structured depths");
+                let mut f = Frontier::Structured { depth: *d1, maximal: a.clone() };
+                for t in b {
+                    f.insert(*t);
+                }
+                f
+            }
+            _ => panic!("union of frontiers from different domains"),
+        }
+    }
+
+    /// Intersection of two frontiers (greatest lower bound).
+    pub fn intersect(&self, other: &Frontier) -> Frontier {
+        match (self, other) {
+            (Frontier::Top, f) | (f, Frontier::Top) => f.clone(),
+            (Frontier::Bottom, _) | (_, Frontier::Bottom) => Frontier::Bottom,
+            (Frontier::Seq(a), Frontier::Seq(b)) => Frontier::seq_watermarks(
+                a.iter().filter_map(|(e, s)| b.get(e).map(|s2| (*e, (*s).min(*s2)))),
+            ),
+            (Frontier::Structured { depth: d1, maximal: a }, Frontier::Structured { depth: d2, maximal: b }) => {
+                assert_eq!(d1, d2, "intersect of different structured depths");
+                // Intersection of unions of down-sets = union of pairwise
+                // meets of the maxima.
+                let mut f = Frontier::Bottom;
+                for ta in a {
+                    for tb in b {
+                        if let Some(m) = ta.meet(tb) {
+                            f.insert(m);
+                        }
+                    }
+                }
+                f
+            }
+            _ => panic!("intersect of frontiers from different domains"),
+        }
+    }
+
+    /// The maximal elements of a structured frontier (the antichain).
+    /// Panics for seq frontiers; Bottom yields empty, Top panics.
+    pub fn maximal_elements(&self) -> Vec<Time> {
+        match self {
+            Frontier::Bottom => Vec::new(),
+            Frontier::Structured { maximal, .. } => maximal.clone(),
+            Frontier::Top => panic!("maximal_elements of ⊤"),
+            Frontier::Seq(wm) => {
+                wm.iter().map(|(e, s)| Time::seq(*e, *s)).collect()
+            }
+        }
+    }
+
+    /// Seq-domain watermark for edge `e` (0 if absent / Bottom). Panics on
+    /// structured frontiers.
+    pub fn watermark(&self, e: EdgeId) -> u64 {
+        match self {
+            Frontier::Bottom => 0,
+            Frontier::Top => u64::MAX,
+            Frontier::Seq(wm) => wm.get(&e).copied().unwrap_or(0),
+            Frontier::Structured { .. } => panic!("watermark of a structured frontier"),
+        }
+    }
+
+    /// For a totally-ordered (epoch) frontier: the largest epoch, if any.
+    /// Panics if the frontier has loop coordinates.
+    pub fn max_epoch(&self) -> Option<u64> {
+        match self {
+            Frontier::Bottom => None,
+            Frontier::Top => Some(u64::MAX),
+            Frontier::Structured { depth: 0, maximal } => {
+                maximal.iter().map(|t| t.epoch_of()).max()
+            }
+            _ => panic!("max_epoch of non-epoch frontier"),
+        }
+    }
+
+    /// The concrete time domain, if determined (Bottom/Top fit any).
+    pub fn domain(&self) -> Option<TimeDomain> {
+        match self {
+            Frontier::Bottom | Frontier::Top => None,
+            Frontier::Seq(_) => Some(TimeDomain::Seq),
+            Frontier::Structured { depth, .. } => Some(TimeDomain::Structured { depth: *depth }),
+        }
+    }
+}
+
+impl std::fmt::Display for Frontier {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            Frontier::Bottom => write!(f, "∅"),
+            Frontier::Top => write!(f, "⊤"),
+            Frontier::Seq(wm) => {
+                write!(f, "{{")?;
+                for (i, (e, s)) in wm.iter().enumerate() {
+                    if i > 0 {
+                        write!(f, ", ")?;
+                    }
+                    write!(f, "e{}≤{}", e.0, s)?;
+                }
+                write!(f, "}}")
+            }
+            Frontier::Structured { maximal, .. } => {
+                write!(f, "↓{{")?;
+                for (i, t) in maximal.iter().enumerate() {
+                    if i > 0 {
+                        write!(f, ", ")?;
+                    }
+                    write!(f, "{t}")?;
+                }
+                write!(f, "}}")
+            }
+        }
+    }
+}
+
+impl Encode for Frontier {
+    fn encode(&self, w: &mut Writer) {
+        match self {
+            Frontier::Bottom => w.u8(0),
+            Frontier::Top => w.u8(1),
+            Frontier::Seq(wm) => {
+                w.u8(2);
+                w.varint(wm.len() as u64);
+                for (e, s) in wm {
+                    w.varint(e.0 as u64);
+                    w.varint(*s);
+                }
+            }
+            Frontier::Structured { depth, maximal } => {
+                w.u8(3);
+                w.u8(*depth);
+                w.varint(maximal.len() as u64);
+                for t in maximal {
+                    t.encode(w);
+                }
+            }
+        }
+    }
+}
+
+impl Decode for Frontier {
+    fn decode(r: &mut Reader) -> Result<Self, SerError> {
+        match r.u8()? {
+            0 => Ok(Frontier::Bottom),
+            1 => Ok(Frontier::Top),
+            2 => {
+                let n = r.varint()? as usize;
+                let mut m = BTreeMap::new();
+                for _ in 0..n {
+                    let e = EdgeId(r.varint()? as u32);
+                    let s = r.varint()?;
+                    m.insert(e, s);
+                }
+                Ok(if m.is_empty() { Frontier::Bottom } else { Frontier::Seq(m) })
+            }
+            _ => {
+                let depth = r.u8()?;
+                let n = r.varint()? as usize;
+                let mut maximal = Vec::with_capacity(n);
+                for _ in 0..n {
+                    maximal.push(Time::decode(r)?);
+                }
+                Ok(if maximal.is_empty() {
+                    Frontier::Bottom
+                } else {
+                    Frontier::Structured { depth, maximal }
+                })
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::time::CTR_INF;
+
+    fn e(i: u32) -> EdgeId {
+        EdgeId(i)
+    }
+
+    #[test]
+    fn fig2a_seq_frontier() {
+        // Fig. 2(a): f(p) = f^s_{e1,e2}(4,7).
+        let f = Frontier::seq_watermarks([(e(1), 4), (e(2), 7)]);
+        assert!(f.contains(&Time::seq(e(1), 4)));
+        assert!(f.contains(&Time::seq(e(2), 1)));
+        assert!(!f.contains(&Time::seq(e(1), 5)));
+        assert!(!f.contains(&Time::seq(e(3), 1)));
+        assert_eq!(f.watermark(e(1)), 4);
+        assert_eq!(f.watermark(e(3)), 0);
+    }
+
+    #[test]
+    fn epoch_frontier_downward_closed() {
+        let f = Frontier::upto_epoch(2);
+        for ep in 0..=2 {
+            assert!(f.contains(&Time::epoch(ep)));
+        }
+        assert!(!f.contains(&Time::epoch(3)));
+    }
+
+    #[test]
+    fn down_close_removes_dominated() {
+        let f = Frontier::down_close([
+            Time::structured(1, &[2]),
+            Time::structured(1, &[1]), // dominated
+            Time::structured(0, &[5]),
+        ]);
+        match &f {
+            Frontier::Structured { maximal, .. } => {
+                assert_eq!(maximal.len(), 2);
+                assert!(maximal.contains(&Time::structured(1, &[2])));
+                assert!(maximal.contains(&Time::structured(0, &[5])));
+            }
+            other => panic!("unexpected {other:?}"),
+        }
+        assert!(f.contains(&Time::structured(1, &[1])));
+        assert!(f.contains(&Time::structured(0, &[3])));
+        assert!(!f.contains(&Time::structured(1, &[3])));
+    }
+
+    #[test]
+    fn subset_laws() {
+        let small = Frontier::upto_epoch(1);
+        let big = Frontier::upto_epoch(5);
+        assert!(small.is_subset(&big));
+        assert!(!big.is_subset(&small));
+        assert!(Frontier::Bottom.is_subset(&small));
+        assert!(small.is_subset(&Frontier::Top));
+        assert!(!Frontier::Top.is_subset(&small));
+        assert!(small.is_subset(&small));
+    }
+
+    #[test]
+    fn seq_subset() {
+        let a = Frontier::seq_watermarks([(e(0), 3)]);
+        let b = Frontier::seq_watermarks([(e(0), 5), (e(1), 2)]);
+        assert!(a.is_subset(&b));
+        assert!(!b.is_subset(&a));
+    }
+
+    #[test]
+    fn union_intersect_seq() {
+        let a = Frontier::seq_watermarks([(e(0), 3), (e(1), 9)]);
+        let b = Frontier::seq_watermarks([(e(0), 5), (e(2), 1)]);
+        let u = a.union(&b);
+        assert_eq!(u.watermark(e(0)), 5);
+        assert_eq!(u.watermark(e(1)), 9);
+        assert_eq!(u.watermark(e(2)), 1);
+        let i = a.intersect(&b);
+        assert_eq!(i.watermark(e(0)), 3);
+        assert_eq!(i.watermark(e(1)), 0);
+    }
+
+    #[test]
+    fn union_intersect_structured() {
+        let a = Frontier::down_close([Time::structured(1, &[3])]);
+        let b = Frontier::down_close([Time::structured(3, &[1])]);
+        let u = a.union(&b);
+        assert!(u.contains(&Time::structured(1, &[3])));
+        assert!(u.contains(&Time::structured(3, &[1])));
+        assert!(!u.contains(&Time::structured(3, &[3])));
+        let i = a.intersect(&b);
+        // meet((1,3),(3,1)) = (1,1)
+        assert!(i.contains(&Time::structured(1, &[1])));
+        assert!(!i.contains(&Time::structured(1, &[2])));
+    }
+
+    #[test]
+    fn intersect_with_bottom_top() {
+        let a = Frontier::upto_epoch(4);
+        assert_eq!(a.intersect(&Frontier::Top), a);
+        assert_eq!(a.intersect(&Frontier::Bottom), Frontier::Bottom);
+        assert_eq!(a.union(&Frontier::Bottom), a);
+        assert_eq!(a.union(&Frontier::Top), Frontier::Top);
+    }
+
+    #[test]
+    fn ctr_inf_frontier_covers_all_iterations() {
+        // Loop-ingress projection: {(t, c) : t ∈ f, all c} (§3.2, Fig 2c).
+        let f = Frontier::down_close([Time::structured(1, &[CTR_INF])]);
+        assert!(f.contains(&Time::structured(1, &[0])));
+        assert!(f.contains(&Time::structured(0, &[999_999])));
+        assert!(!f.contains(&Time::structured(2, &[0])));
+    }
+
+    #[test]
+    fn max_epoch() {
+        assert_eq!(Frontier::upto_epoch(7).max_epoch(), Some(7));
+        assert_eq!(Frontier::Bottom.max_epoch(), None);
+    }
+
+    #[test]
+    fn encode_roundtrip() {
+        for f in [
+            Frontier::Bottom,
+            Frontier::Top,
+            Frontier::seq_watermarks([(e(0), 3), (e(9), 1)]),
+            Frontier::down_close([Time::structured(1, &[2]), Time::structured(2, &[0])]),
+        ] {
+            let bytes = f.to_bytes();
+            assert_eq!(Frontier::from_bytes(&bytes).unwrap(), f);
+        }
+    }
+
+    #[test]
+    fn insert_keeps_antichain_invariant() {
+        let mut f = Frontier::Bottom;
+        f.insert(Time::structured(5, &[5]));
+        f.insert(Time::structured(1, &[1])); // dominated, ignored
+        f.insert(Time::structured(5, &[5])); // duplicate
+        match &f {
+            Frontier::Structured { maximal, .. } => assert_eq!(maximal.len(), 1),
+            other => panic!("unexpected {other:?}"),
+        }
+    }
+}

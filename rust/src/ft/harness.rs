@@ -1,0 +1,736 @@
+//! The fault-tolerance harness: wraps the engine, observes every event
+//! report, and maintains the paper's Table-1 metadata per processor under
+//! its chosen [`Policy`].
+//!
+//! The harness is the "system layer" of §4.1: it tracks N̄, M̄ and D̄
+//! automatically, logs sent messages for processors that elected logging,
+//! records full histories for [`Policy::FullHistory`] processors, and
+//! takes **selective checkpoints** at completed times for
+//! [`Policy::Lazy`] / per-event checkpoints for [`Policy::Eager`].
+//! Recovery (§4.4) is implemented in [`crate::ft::recovery`] as further
+//! methods on [`FtSystem`].
+
+use crate::engine::{Delivery, Engine, EventKind, EventReport, Processor, Record};
+use crate::frontier::Frontier;
+use crate::ft::meta::{CkptMeta, LogEntry, StoredCheckpoint};
+use crate::ft::policy::Policy;
+use crate::ft::storage::{Key, Kind, Store};
+use crate::graph::{EdgeId, ProcId, Topology};
+use crate::time::{LexTime, Time};
+use crate::util::ser::Encode;
+use std::collections::{BTreeMap, BTreeSet};
+use std::sync::Arc;
+
+/// One event of a recorded history H(p) (for [`Policy::FullHistory`]).
+#[derive(Clone, Debug, PartialEq)]
+pub enum HistoryEvent {
+    Message { edge: EdgeId, time: Time, data: Record },
+    Notification { time: Time },
+    Input { time: Time, data: Record },
+}
+
+impl HistoryEvent {
+    /// The logical time of the event.
+    pub fn time(&self) -> Time {
+        match self {
+            HistoryEvent::Message { time, .. }
+            | HistoryEvent::Notification { time }
+            | HistoryEvent::Input { time, .. } => *time,
+        }
+    }
+}
+
+impl Encode for HistoryEvent {
+    fn encode(&self, w: &mut crate::util::ser::Writer) {
+        match self {
+            HistoryEvent::Message { edge, time, data } => {
+                w.u8(0);
+                w.varint(edge.0 as u64);
+                time.encode(w);
+                data.encode(w);
+            }
+            HistoryEvent::Notification { time } => {
+                w.u8(1);
+                time.encode(w);
+            }
+            HistoryEvent::Input { time, data } => {
+                w.u8(2);
+                time.encode(w);
+                data.encode(w);
+            }
+        }
+    }
+}
+
+/// Per-processor fault-tolerance state (volatile deltas + durable
+/// mirrors).
+pub(crate) struct ProcFt {
+    pub policy: Policy,
+    /// Delivered-message times per in-edge since the last checkpoint.
+    pub delivered_new: BTreeMap<EdgeId, BTreeSet<LexTime>>,
+    /// External-input times since the last checkpoint (inputs are
+    /// messages on a virtual external edge — the paper's footnote 1;
+    /// they widen eager checkpoint frontiers and are resupplied by the
+    /// §4.3 external services rather than by M̄ constraints).
+    pub input_new: BTreeSet<LexTime>,
+    /// Notification times processed since the last checkpoint.
+    pub notified_new: BTreeSet<LexTime>,
+    /// (event time, message time) of *unlogged* sends per out-edge since
+    /// the last checkpoint (D̄ deltas; message time is in the destination
+    /// domain).
+    pub discarded_new: BTreeMap<EdgeId, Vec<(Time, Time)>>,
+    /// Event times of sends on per-checkpoint-projection out-edges since
+    /// the last checkpoint (to materialize φ counts).
+    pub sent_events: BTreeMap<EdgeId, Vec<Time>>,
+    /// Total messages ever sent per out-edge (live φ for seq edges).
+    pub sent_total: BTreeMap<EdgeId, u64>,
+    /// Durable log of sent messages (mirror of what's in the store).
+    pub log: Vec<LogEntry>,
+    /// Durable full history (mirror), for [`Policy::FullHistory`].
+    pub history: Vec<HistoryEvent>,
+    /// F*(p): ascending chain of durable checkpoints (mirror).
+    pub chain: Vec<StoredCheckpoint>,
+    /// Completed-time counter (drives [`Policy::Lazy`]).
+    pub completions: u64,
+    /// Marked by failure injection; cleared by recovery.
+    pub failed: bool,
+    /// Monotone sequence for storage keys.
+    next_key: u64,
+}
+
+impl ProcFt {
+    fn new(policy: Policy) -> ProcFt {
+        ProcFt {
+            policy,
+            delivered_new: BTreeMap::new(),
+            input_new: BTreeSet::new(),
+            notified_new: BTreeSet::new(),
+            discarded_new: BTreeMap::new(),
+            sent_events: BTreeMap::new(),
+            sent_total: BTreeMap::new(),
+            log: Vec::new(),
+            history: Vec::new(),
+            chain: Vec::new(),
+            completions: 0,
+            failed: false,
+            next_key: 0,
+        }
+    }
+
+    /// The metadata of the newest checkpoint (or the implicit ∅ one).
+    pub fn base_meta(&self, in_edges: &[EdgeId], out_edges: &[EdgeId]) -> CkptMeta {
+        self.chain
+            .last()
+            .map(|c| c.meta.clone())
+            .unwrap_or_else(|| CkptMeta::empty(in_edges, out_edges))
+    }
+
+    fn fresh_key(&mut self) -> u64 {
+        self.next_key += 1;
+        self.next_key
+    }
+}
+
+/// Counters the policy benches report.
+#[derive(Clone, Debug, Default)]
+pub struct FtStats {
+    pub checkpoints_taken: u64,
+    pub log_entries: u64,
+    pub history_events: u64,
+    pub events_observed: u64,
+}
+
+/// Engine + fault-tolerance harness: the top-level object applications
+/// drive.
+pub struct FtSystem {
+    pub engine: Engine,
+    pub(crate) ft: Vec<ProcFt>,
+    pub store: Store,
+    pub(crate) topo: Arc<Topology>,
+    pub stats: FtStats,
+}
+
+impl FtSystem {
+    /// Build a system. `policies[i]` governs processor `i`.
+    pub fn new(
+        topo: Arc<Topology>,
+        procs: Vec<Box<dyn Processor>>,
+        policies: Vec<Policy>,
+        delivery: Delivery,
+        store: Store,
+    ) -> FtSystem {
+        assert_eq!(policies.len(), topo.num_procs());
+        // Note: stateless policies feeding per-checkpoint-projection
+        // edges are allowed; the solver then uses the maximally
+        // conservative φ = ∅ for mid-range frontiers (§3.2). Policies
+        // that need exact seq counts (Eager) record them per checkpoint.
+        let ft = policies.into_iter().map(ProcFt::new).collect();
+        FtSystem {
+            engine: Engine::new(topo.clone(), procs, delivery),
+            ft,
+            store,
+            topo,
+            stats: FtStats::default(),
+        }
+    }
+
+    pub fn topology(&self) -> &Topology {
+        &self.topo
+    }
+
+    pub fn policy(&self, p: ProcId) -> Policy {
+        self.ft[p.0 as usize].policy
+    }
+
+    /// Process one event, maintaining all FT metadata.
+    pub fn step(&mut self) -> Option<EventReport> {
+        let rep = self.engine.step()?;
+        self.observe(&rep);
+        Some(rep)
+    }
+
+    /// Run until quiescent (bounded), observing every event.
+    pub fn run_to_quiescence(&mut self, max_steps: usize) -> usize {
+        let mut n = 0;
+        while n < max_steps {
+            if self.step().is_none() {
+                break;
+            }
+            n += 1;
+        }
+        n
+    }
+
+    /// Push external input (observed like any other event).
+    pub fn push_input(&mut self, p: ProcId, t: Time, data: Record) -> EventReport {
+        let rep = self.engine.push_input(p, t, data);
+        self.observe(&rep);
+        rep
+    }
+
+    pub fn advance_input(&mut self, p: ProcId, t: Time) {
+        self.engine.advance_input(p, t);
+    }
+
+    pub fn close_input(&mut self, p: ProcId) {
+        self.engine.close_input(p);
+    }
+
+    /// Observe an event report: update deltas, logs, histories, and run
+    /// the policy triggers.
+    fn observe(&mut self, rep: &EventReport) {
+        self.stats.events_observed += 1;
+        let (proc, evt_time) = match &rep.kind {
+            EventKind::Message { proc, edge, time, data } => {
+                let ft = &mut self.ft[proc.0 as usize];
+                if ft.policy.tracks_metadata() {
+                    ft.delivered_new.entry(*edge).or_default().insert(LexTime(*time));
+                }
+                if ft.policy.records_history() {
+                    let ev = HistoryEvent::Message { edge: *edge, time: *time, data: data.clone() };
+                    Self::persist_history(&self.store, ft, proc.0, ev);
+                    self.stats.history_events += 1;
+                }
+                (*proc, *time)
+            }
+            EventKind::Notification { proc, time } => {
+                let ft = &mut self.ft[proc.0 as usize];
+                if ft.policy.tracks_metadata() {
+                    ft.notified_new.insert(LexTime(*time));
+                }
+                if ft.policy.records_history() {
+                    Self::persist_history(
+                        &self.store,
+                        ft,
+                        proc.0,
+                        HistoryEvent::Notification { time: *time },
+                    );
+                    self.stats.history_events += 1;
+                }
+                ft.completions += 1;
+                (*proc, *time)
+            }
+            EventKind::Input { proc, time, data } => {
+                let ft = &mut self.ft[proc.0 as usize];
+                if ft.policy.tracks_metadata() {
+                    ft.input_new.insert(LexTime(*time));
+                }
+                if ft.policy.records_history() {
+                    let ev = HistoryEvent::Input { time: *time, data: data.clone() };
+                    Self::persist_history(&self.store, ft, proc.0, ev);
+                    self.stats.history_events += 1;
+                }
+                (*proc, *time)
+            }
+        };
+        // Sends.
+        let logs = self.ft[proc.0 as usize].policy.logs_outputs();
+        let tracks = self.ft[proc.0 as usize].policy.tracks_metadata();
+        for (e, msg) in &rep.sent {
+            let ft = &mut self.ft[proc.0 as usize];
+            *ft.sent_total.entry(*e).or_insert(0) += 1;
+            if !tracks {
+                continue;
+            }
+            if self.topo.projection(*e).is_per_checkpoint() {
+                ft.sent_events.entry(*e).or_default().push(evt_time);
+            }
+            if logs {
+                let entry = LogEntry { edge: *e, event_time: evt_time, msg: msg.clone() };
+                let tag = ft.fresh_key();
+                self.store.put(
+                    Key { proc: proc.0, kind: Kind::LogEntry, tag },
+                    entry.to_bytes(),
+                );
+                ft.log.push(entry);
+                self.stats.log_entries += 1;
+            } else {
+                ft.discarded_new.entry(*e).or_default().push((evt_time, msg.time));
+            }
+        }
+        // Policy triggers.
+        match self.ft[proc.0 as usize].policy {
+            Policy::Eager => {
+                // Checkpoint the state reflecting everything delivered so
+                // far — in the seq domain this frontier is trivially
+                // complete (each (e,s) arrives exactly once).
+                let f = self.eager_frontier(proc);
+                self.checkpoint_now(proc, f);
+            }
+            Policy::Lazy { every, .. } => {
+                if matches!(rep.kind, EventKind::Notification { .. })
+                    && self.ft[proc.0 as usize].completions % every == 0
+                {
+                    // Selective checkpoint: previous frontier ∪ ↓t.
+                    let base = self.base_frontier(proc);
+                    let mut f = base;
+                    f.insert(evt_time);
+                    self.checkpoint_now(proc, f);
+                }
+            }
+            _ => {}
+        }
+    }
+
+    fn persist_history(store: &Store, ft: &mut ProcFt, proc: u32, ev: HistoryEvent) {
+        let tag = ft.fresh_key();
+        store.put(Key { proc, kind: Kind::HistoryEvent, tag }, ev.to_bytes());
+        ft.history.push(ev);
+    }
+
+    /// The frontier of the newest checkpoint (∅ if none).
+    pub fn base_frontier(&self, p: ProcId) -> Frontier {
+        self.ft[p.0 as usize].chain.last().map(|c| c.meta.f.clone()).unwrap_or(Frontier::Bottom)
+    }
+
+    /// Frontier covering everything delivered so far at an eager (seq
+    /// domain) processor: per-in-edge delivered watermarks.
+    fn eager_frontier(&self, p: ProcId) -> Frontier {
+        let ft = &self.ft[p.0 as usize];
+        let base = self.base_frontier(p);
+        let mut f = base;
+        for (e, times) in &ft.delivered_new {
+            for lt in times {
+                let _ = e;
+                f.insert(lt.0);
+            }
+        }
+        for lt in &ft.notified_new {
+            f.insert(lt.0);
+        }
+        for lt in &ft.input_new {
+            f.insert(lt.0);
+        }
+        f
+    }
+
+    /// Take a selective checkpoint of `p` at frontier `f` (must extend the
+    /// previous checkpoint's frontier; constraint 1 of §3.5 — all times in
+    /// `f` complete at `p` — is the caller's responsibility, upheld by the
+    /// policy triggers).
+    pub fn checkpoint_now(&mut self, p: ProcId, f: Frontier) {
+        let in_edges = self.topo.in_edges(p).to_vec();
+        let out_edges = self.topo.out_edges(p).to_vec();
+        let base = self.ft[p.0 as usize].base_meta(&in_edges, &out_edges);
+        assert!(
+            base.f.is_subset(&f),
+            "checkpoint frontiers must ascend: {} ⊄ {f}",
+            base.f
+        );
+        let ft = &mut self.ft[p.0 as usize];
+
+        // M̄(d, f) = M̄(d, base) ∪ ↓{delivered ∈ f}.
+        let mut m_bar = base.m_bar.clone();
+        for (&d, times) in &mut ft.delivered_new {
+            let fold: Vec<Time> =
+                times.iter().map(|lt| lt.0).filter(|t| f.contains(t)).collect();
+            if !fold.is_empty() {
+                let cur = m_bar.entry(d).or_insert(Frontier::Bottom);
+                let mut nf = cur.clone();
+                for t in &fold {
+                    nf.insert(*t);
+                }
+                *cur = nf;
+                times.retain(|lt| !f.contains(&lt.0));
+            }
+        }
+        // N̄(p, f).
+        let mut n_bar = base.n_bar.clone();
+        let fold: Vec<Time> =
+            ft.notified_new.iter().map(|lt| lt.0).filter(|t| f.contains(t)).collect();
+        for t in &fold {
+            n_bar.insert(*t);
+        }
+        ft.notified_new.retain(|lt| !f.contains(&lt.0));
+        ft.input_new.retain(|lt| !f.contains(&lt.0));
+        // D̄(e, f): unlogged sends caused by events in f.
+        let mut d_bar = base.d_bar.clone();
+        for (&e, pairs) in &mut ft.discarded_new {
+            let cur = d_bar.entry(e).or_insert(Frontier::Bottom);
+            let mut nf = cur.clone();
+            for (evt, msg_t) in pairs.iter().filter(|(evt, _)| f.contains(evt)) {
+                let _ = evt;
+                nf.insert(*msg_t);
+            }
+            *cur = nf;
+            pairs.retain(|(evt, _)| !f.contains(evt));
+        }
+        // φ(e)(f): static projections computed; per-checkpoint ones are
+        // seq watermarks = sends caused by events in f (prefix property
+        // holds for the chain policies' checkpoints).
+        let mut phi = BTreeMap::new();
+        for &e in &out_edges {
+            let proj = self.topo.projection(e);
+            let fr = match proj.apply(&f) {
+                Some(fr) => fr,
+                None => {
+                    let base_count = base.phi_of(e).watermark(e);
+                    let new = ft
+                        .sent_events
+                        .get(&e)
+                        .map(|v| v.iter().filter(|t| f.contains(t)).count() as u64)
+                        .unwrap_or(0);
+                    if let Some(v) = ft.sent_events.get_mut(&e) {
+                        v.retain(|t| !f.contains(t));
+                    }
+                    Frontier::seq_watermarks([(e, base_count + new)])
+                }
+            };
+            phi.insert(e, fr);
+        }
+        let meta = CkptMeta { f: f.clone(), n_bar, m_bar, d_bar, phi };
+        let state = self.engine.proc(p).checkpoint_upto(&f);
+        let pending_notify: Vec<Time> = self
+            .engine
+            .pending_notifications(p)
+            .into_iter()
+            .filter(|t| f.contains(t))
+            .collect();
+        let stored = StoredCheckpoint { meta, state, pending_notify };
+        // Persist state then Ξ (the §4.2 protocol: metadata reaches the
+        // monitor only once everything is acknowledged).
+        let ft = &mut self.ft[p.0 as usize];
+        let tag = ft.fresh_key();
+        self.store.put(Key { proc: p.0, kind: Kind::State, tag }, stored.state.clone());
+        self.store.put(Key { proc: p.0, kind: Kind::Meta, tag }, stored.meta.to_bytes());
+        ft.chain.push(stored);
+        self.stats.checkpoints_taken += 1;
+    }
+
+    /// The live pseudo-checkpoint Ξ(p, ⊤) for a non-failed chain
+    /// processor (§4.4): cumulative M̄/N̄/D̄ plus current φ counts.
+    pub(crate) fn live_top_meta(&self, p: ProcId) -> CkptMeta {
+        let in_edges = self.topo.in_edges(p);
+        let out_edges = self.topo.out_edges(p);
+        let ft = &self.ft[p.0 as usize];
+        let base = ft.base_meta(in_edges, out_edges);
+        let mut m_bar = base.m_bar.clone();
+        for (&d, times) in &ft.delivered_new {
+            let cur = m_bar.entry(d).or_insert(Frontier::Bottom);
+            let mut nf = cur.clone();
+            for lt in times {
+                nf.insert(lt.0);
+            }
+            *cur = nf;
+        }
+        let mut n_bar = base.n_bar.clone();
+        for lt in &ft.notified_new {
+            n_bar.insert(lt.0);
+        }
+        let mut d_bar = base.d_bar.clone();
+        for (&e, pairs) in &ft.discarded_new {
+            let cur = d_bar.entry(e).or_insert(Frontier::Bottom);
+            let mut nf = cur.clone();
+            for (_, msg_t) in pairs {
+                nf.insert(*msg_t);
+            }
+            *cur = nf;
+        }
+        let mut phi = BTreeMap::new();
+        for &e in out_edges {
+            let fr = if self.topo.projection(e).is_per_checkpoint() {
+                Frontier::seq_watermarks([(e, self.engine.seq_counter(e))])
+            } else {
+                Frontier::Top
+            };
+            phi.insert(e, fr);
+        }
+        CkptMeta { f: Frontier::Top, n_bar, m_bar, d_bar, phi }
+    }
+
+    /// φ(e)(g) evaluated against the live system (recovery-time helper):
+    /// static projections compute; per-checkpoint ones read the chain (or
+    /// the live counters at ⊤).
+    pub(crate) fn phi_runtime(&self, e: EdgeId, g: &Frontier) -> Frontier {
+        if let Some(f) = self.topo.projection(e).apply(g) {
+            return f;
+        }
+        if g.is_bottom() {
+            return Frontier::Bottom;
+        }
+        if g.is_top() {
+            return Frontier::seq_watermarks([(e, self.engine.seq_counter(e))]);
+        }
+        let src = self.topo.src(e);
+        self.ft[src.0 as usize]
+            .chain
+            .iter()
+            .find(|c| &c.meta.f == g)
+            .unwrap_or_else(|| panic!("phi_runtime: {g} is not a checkpoint of {src}"))
+            .meta
+            .phi_of(e)
+            .clone()
+    }
+
+    /// Number of durable checkpoints at `p` (tests/benches).
+    pub fn chain_len(&self, p: ProcId) -> usize {
+        self.ft[p.0 as usize].chain.len()
+    }
+
+    /// The Ξ metadata of the `k`-th durable checkpoint at `p` (what the
+    /// processor reports to the §4.2 monitor once storage acknowledges).
+    pub fn checkpoint_meta(&self, p: ProcId, k: usize) -> CkptMeta {
+        self.ft[p.0 as usize].chain[k].meta.clone()
+    }
+
+    /// Apply a §4.2 garbage-collection action from the monitor: drop
+    /// checkpoints strictly below the watermark (keeping the newest one
+    /// at-or-below, which remains the restore point), or drop logged
+    /// messages whose times the destination will never need re-sent.
+    /// Returns the number of durable objects released.
+    pub fn apply_gc(&mut self, action: &crate::ft::monitor::GcAction) -> usize {
+        match action {
+            crate::ft::monitor::GcAction::DropCheckpointsBelow { proc, watermark } => {
+                let ft = &mut self.ft[proc.0 as usize];
+                // Keep the newest checkpoint ⊆ watermark plus everything
+                // above it; drop older ones.
+                let keep_from = ft
+                    .chain
+                    .iter()
+                    .rposition(|c| c.meta.f.is_subset(watermark))
+                    .unwrap_or(0);
+                let dropped = keep_from;
+                if dropped > 0 {
+                    ft.chain.drain(..dropped);
+                    // Release the store blobs for pruned checkpoints
+                    // (state+meta pairs are keyed monotonically; drop the
+                    // oldest `dropped` of each kind).
+                    let mut metas = self.store.keys_for(proc.0, Kind::Meta);
+                    metas.sort();
+                    for k in metas.iter().take(dropped) {
+                        self.store.delete(k);
+                    }
+                    let mut states = self.store.keys_for(proc.0, Kind::State);
+                    states.sort();
+                    for k in states.iter().take(dropped) {
+                        self.store.delete(k);
+                    }
+                }
+                dropped
+            }
+            crate::ft::monitor::GcAction::DropLogWithin { proc, edge, watermark } => {
+                let ft = &mut self.ft[proc.0 as usize];
+                let before = ft.log.len();
+                ft.log.retain(|le| le.edge != *edge || !watermark.contains(&le.msg.time));
+                let dropped = before - ft.log.len();
+                // Durable log entries are keyed in append order; rather
+                // than tracking per-entry keys, rewrite the survivor set
+                // when anything was dropped (simple and correct; the
+                // store charges writes, keeping the cost visible).
+                if dropped > 0 {
+                    self.store.delete_matching(proc.0, |k| k.kind == Kind::LogEntry);
+                    let entries: Vec<Vec<u8>> =
+                        ft.log.iter().map(|le| le.to_bytes()).collect();
+                    for bytes in entries {
+                        let tag = self.ft[proc.0 as usize].fresh_key();
+                        self.store.put(
+                            Key { proc: proc.0, kind: Kind::LogEntry, tag },
+                            bytes,
+                        );
+                    }
+                }
+                dropped
+            }
+        }
+    }
+
+    /// Log length at `p` (tests/benches).
+    pub fn log_len(&self, p: ProcId) -> usize {
+        self.ft[p.0 as usize].log.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::{GraphBuilder, Projection};
+    use crate::operators::{shared_vec, Sink, Source, SumByTime};
+    use crate::time::TimeDomain;
+
+    fn epoch_pipeline(policies: Vec<Policy>) -> (FtSystem, ProcId, crate::operators::SharedVec) {
+        let mut g = GraphBuilder::new();
+        let src = g.add_proc("src", TimeDomain::EPOCH);
+        let sum = g.add_proc("sum", TimeDomain::EPOCH);
+        let snk = g.add_proc("sink", TimeDomain::EPOCH);
+        g.connect(src, sum, Projection::Identity);
+        g.connect(sum, snk, Projection::Identity);
+        let topo = Arc::new(g.build().unwrap());
+        let out = shared_vec();
+        let procs: Vec<Box<dyn Processor>> = vec![
+            Box::new(Source),
+            Box::new(SumByTime::default()),
+            Box::new(Sink(out.clone())),
+        ];
+        let sys = FtSystem::new(topo, procs, policies, Delivery::Fifo, Store::new(1));
+        (sys, src, out)
+    }
+
+    #[test]
+    fn lazy_checkpoints_on_completion() {
+        let (mut sys, src, out) = epoch_pipeline(vec![
+            Policy::Ephemeral,
+            Policy::Lazy { every: 1, log_outputs: false },
+            Policy::Ephemeral,
+        ]);
+        let sum = sys.topology().find("sum").unwrap();
+        sys.advance_input(src, Time::epoch(0));
+        sys.push_input(src, Time::epoch(0), Record::Int(4));
+        sys.push_input(src, Time::epoch(0), Record::Int(5));
+        sys.advance_input(src, Time::epoch(1));
+        sys.run_to_quiescence(1000);
+        assert_eq!(out.lock().unwrap().len(), 1);
+        // One completion (epoch 0) → one checkpoint, at frontier ↓0, with
+        // empty state (Sum discards completed sums — the §2.3 payoff).
+        assert_eq!(sys.chain_len(sum), 1);
+        let ck = &sys.ft[sum.0 as usize].chain[0];
+        assert_eq!(ck.meta.f, Frontier::upto_epoch(0));
+        // TimeState encodes a zero-length partition list for empty state.
+        assert!(ck.state.len() <= 1, "selective checkpoint of Sum after completion is empty");
+        assert_eq!(ck.meta.n_bar, Frontier::upto_epoch(0));
+        assert_eq!(
+            ck.meta.m_bar.get(&EdgeId(0)).unwrap(),
+            &Frontier::upto_epoch(0)
+        );
+        // Sum does not log: its output at epoch 0 is in D̄.
+        assert_eq!(ck.meta.d_bar.get(&EdgeId(1)).unwrap(), &Frontier::upto_epoch(0));
+    }
+
+    #[test]
+    fn logging_policy_persists_entries() {
+        let (mut sys, src, _out) = epoch_pipeline(vec![
+            Policy::LogOutputs,
+            Policy::Lazy { every: 1, log_outputs: true },
+            Policy::Ephemeral,
+        ]);
+        sys.advance_input(src, Time::epoch(0));
+        sys.push_input(src, Time::epoch(0), Record::Int(1));
+        sys.push_input(src, Time::epoch(0), Record::Int(2));
+        sys.advance_input(src, Time::epoch(1));
+        sys.run_to_quiescence(1000);
+        assert_eq!(sys.log_len(src), 2, "source logged both forwards");
+        let sum = sys.topology().find("sum").unwrap();
+        assert_eq!(sys.log_len(sum), 1, "sum logged its one emission");
+        // D̄ of the logging sum is empty.
+        let ck = &sys.ft[sum.0 as usize].chain[0];
+        assert!(ck.meta.d_bar.get(&EdgeId(1)).unwrap().is_bottom());
+        // And the store holds the blobs durably.
+        assert!(sys.store.keys_for(src.0, Kind::LogEntry).len() == 2);
+    }
+
+    #[test]
+    fn lazy_every_k_checkpoints_every_kth_epoch() {
+        let (mut sys, src, _out) = epoch_pipeline(vec![
+            Policy::Ephemeral,
+            Policy::Lazy { every: 3, log_outputs: false },
+            Policy::Ephemeral,
+        ]);
+        let sum = sys.topology().find("sum").unwrap();
+        for ep in 0..9 {
+            sys.advance_input(src, Time::epoch(ep));
+            sys.push_input(src, Time::epoch(ep), Record::Int(1));
+            sys.advance_input(src, Time::epoch(ep + 1));
+            sys.run_to_quiescence(1000);
+        }
+        assert_eq!(sys.chain_len(sum), 3, "9 completions / every-3 = 3 checkpoints");
+        let fs: Vec<Frontier> =
+            sys.ft[sum.0 as usize].chain.iter().map(|c| c.meta.f.clone()).collect();
+        assert_eq!(fs[0], Frontier::upto_epoch(2));
+        assert_eq!(fs[1], Frontier::upto_epoch(5));
+        assert_eq!(fs[2], Frontier::upto_epoch(8));
+    }
+
+    #[test]
+    fn full_history_records_events() {
+        let (mut sys, src, _out) = epoch_pipeline(vec![
+            Policy::Ephemeral,
+            Policy::FullHistory,
+            Policy::Ephemeral,
+        ]);
+        let sum = sys.topology().find("sum").unwrap();
+        sys.advance_input(src, Time::epoch(0));
+        sys.push_input(src, Time::epoch(0), Record::Int(7));
+        sys.advance_input(src, Time::epoch(1));
+        sys.run_to_quiescence(1000);
+        let h = &sys.ft[sum.0 as usize].history;
+        assert_eq!(h.len(), 2, "one message + one notification");
+        assert!(matches!(h[0], HistoryEvent::Message { .. }));
+        assert!(matches!(h[1], HistoryEvent::Notification { .. }));
+        assert!(!sys.store.keys_for(sum.0, Kind::HistoryEvent).is_empty());
+    }
+
+    #[test]
+    fn ephemeral_has_zero_overhead() {
+        let (mut sys, src, _out) =
+            epoch_pipeline(vec![Policy::Ephemeral, Policy::Ephemeral, Policy::Ephemeral]);
+        sys.advance_input(src, Time::epoch(0));
+        for _ in 0..10 {
+            sys.push_input(src, Time::epoch(0), Record::Int(1));
+        }
+        sys.advance_input(src, Time::epoch(1));
+        sys.run_to_quiescence(1000);
+        let st = sys.store.stats();
+        assert_eq!(st.writes, 0, "ephemeral writes nothing");
+        assert_eq!(sys.stats.checkpoints_taken, 0);
+    }
+
+    #[test]
+    fn live_top_meta_reflects_cumulative_state() {
+        let (mut sys, src, _out) = epoch_pipeline(vec![
+            Policy::Ephemeral,
+            Policy::Lazy { every: 10, log_outputs: false },
+            Policy::Ephemeral,
+        ]);
+        let sum = sys.topology().find("sum").unwrap();
+        sys.advance_input(src, Time::epoch(0));
+        sys.push_input(src, Time::epoch(0), Record::Int(2));
+        sys.advance_input(src, Time::epoch(1));
+        sys.run_to_quiescence(1000);
+        // No checkpoint yet (every: 10) — live ⊤ meta carries the deltas.
+        assert_eq!(sys.chain_len(sum), 0);
+        let top = sys.live_top_meta(sum);
+        assert!(top.f.is_top());
+        assert_eq!(top.m_bar.get(&EdgeId(0)).unwrap(), &Frontier::upto_epoch(0));
+        assert_eq!(top.n_bar, Frontier::upto_epoch(0));
+        assert_eq!(top.d_bar.get(&EdgeId(1)).unwrap(), &Frontier::upto_epoch(0));
+    }
+}

@@ -1,0 +1,221 @@
+//! Checkpoint metadata — the paper's Table 1.
+//!
+//! For each available frontier `f ∈ F*(p)` a processor must be able to
+//! recover: its internal state `S(p,f)`, the processed-notification
+//! frontier `N̄(p,f)`, per-in-edge processed-message frontiers `M̄(d,f)`,
+//! per-out-edge projections `φ(e)(f)` and discarded-message frontiers
+//! `D̄(e,f)`, and the logged messages `L(e,f)`. [`CkptMeta`] is the
+//! rollback-algorithm-facing subset Ξ(p,f) (§4.2); [`StoredCheckpoint`]
+//! adds the state payload and the pending-notification set the engine
+//! needs to actually restore.
+
+use crate::frontier::Frontier;
+use crate::graph::EdgeId;
+use crate::time::Time;
+use crate::util::ser::{Decode, Encode, Reader, SerError, Writer};
+use std::collections::BTreeMap;
+
+/// Ξ(p,f): the metadata the consistent-frontier algorithm consumes.
+#[derive(Clone, Debug, PartialEq)]
+pub struct CkptMeta {
+    /// The frontier `f` this checkpoint restores to.
+    pub f: Frontier,
+    /// N̄(p,f): smallest frontier containing the notifications processed
+    /// in `H(p)@f`.
+    pub n_bar: Frontier,
+    /// M̄(d,f) per input edge `d`: smallest frontier containing the
+    /// messages delivered in `H(p)@f`.
+    pub m_bar: BTreeMap<EdgeId, Frontier>,
+    /// D̄(e,f) per output edge `e`: smallest frontier containing the
+    /// messages sent-and-discarded in `H(p)@f` (times in the
+    /// *destination's* domain).
+    pub d_bar: BTreeMap<EdgeId, Frontier>,
+    /// φ(e)(f) per output edge `e`, materialized at checkpoint time (for
+    /// static projections this equals `projection.apply(f)`; for
+    /// history-dependent ones it is captured from the live counts).
+    pub phi: BTreeMap<EdgeId, Frontier>,
+}
+
+impl CkptMeta {
+    /// The Ξ for the empty frontier ∅ — always available, always
+    /// consistent (every processor can roll back to its initial state).
+    pub fn empty(in_edges: &[EdgeId], out_edges: &[EdgeId]) -> CkptMeta {
+        CkptMeta {
+            f: Frontier::Bottom,
+            n_bar: Frontier::Bottom,
+            m_bar: in_edges.iter().map(|e| (*e, Frontier::Bottom)).collect(),
+            d_bar: out_edges.iter().map(|e| (*e, Frontier::Bottom)).collect(),
+            phi: out_edges.iter().map(|e| (*e, Frontier::Bottom)).collect(),
+        }
+    }
+
+    pub fn m_bar_of(&self, d: EdgeId) -> &Frontier {
+        self.m_bar.get(&d).unwrap_or(&Frontier::Bottom)
+    }
+
+    pub fn d_bar_of(&self, e: EdgeId) -> &Frontier {
+        self.d_bar.get(&e).unwrap_or(&Frontier::Bottom)
+    }
+
+    pub fn phi_of(&self, e: EdgeId) -> &Frontier {
+        self.phi.get(&e).unwrap_or(&Frontier::Bottom)
+    }
+}
+
+fn encode_edge_map(m: &BTreeMap<EdgeId, Frontier>, w: &mut Writer) {
+    w.varint(m.len() as u64);
+    for (e, f) in m {
+        w.varint(e.0 as u64);
+        f.encode(w);
+    }
+}
+
+fn decode_edge_map(r: &mut Reader) -> Result<BTreeMap<EdgeId, Frontier>, SerError> {
+    let n = r.varint()? as usize;
+    let mut m = BTreeMap::new();
+    for _ in 0..n {
+        let e = EdgeId(r.varint()? as u32);
+        m.insert(e, Frontier::decode(r)?);
+    }
+    Ok(m)
+}
+
+impl Encode for CkptMeta {
+    fn encode(&self, w: &mut Writer) {
+        self.f.encode(w);
+        self.n_bar.encode(w);
+        encode_edge_map(&self.m_bar, w);
+        encode_edge_map(&self.d_bar, w);
+        encode_edge_map(&self.phi, w);
+    }
+}
+
+impl Decode for CkptMeta {
+    fn decode(r: &mut Reader) -> Result<Self, SerError> {
+        Ok(CkptMeta {
+            f: Frontier::decode(r)?,
+            n_bar: Frontier::decode(r)?,
+            m_bar: decode_edge_map(r)?,
+            d_bar: decode_edge_map(r)?,
+            phi: decode_edge_map(r)?,
+        })
+    }
+}
+
+/// A persisted checkpoint: Ξ plus what restoration needs.
+#[derive(Clone, Debug, PartialEq)]
+pub struct StoredCheckpoint {
+    pub meta: CkptMeta,
+    /// S(p,f): the operator state blob (empty for stateless processors).
+    pub state: Vec<u8>,
+    /// Notification requests outstanding at the checkpoint whose times
+    /// lie in `f` (they must be re-armed on restore, since the requesting
+    /// messages will not be re-delivered).
+    pub pending_notify: Vec<Time>,
+}
+
+impl Encode for StoredCheckpoint {
+    fn encode(&self, w: &mut Writer) {
+        self.meta.encode(w);
+        w.bytes(&self.state);
+        w.varint(self.pending_notify.len() as u64);
+        for t in &self.pending_notify {
+            t.encode(w);
+        }
+    }
+}
+
+impl Decode for StoredCheckpoint {
+    fn decode(r: &mut Reader) -> Result<Self, SerError> {
+        let meta = CkptMeta::decode(r)?;
+        let state = r.bytes()?.to_vec();
+        let n = r.varint()? as usize;
+        let mut pending_notify = Vec::with_capacity(n);
+        for _ in 0..n {
+            pending_notify.push(Time::decode(r)?);
+        }
+        Ok(StoredCheckpoint { meta, state, pending_notify })
+    }
+}
+
+/// One logged sent message (an element of L(e,·)): the destination-domain
+/// message plus the time of the event at `p` that produced it, which is
+/// what lets L(e,f) = entries with `event_time ∈ f` be computed exactly
+/// even under selective rollback.
+#[derive(Clone, Debug, PartialEq)]
+pub struct LogEntry {
+    pub edge: EdgeId,
+    /// Time (at the sender) of the event that caused this send.
+    pub event_time: Time,
+    /// The message (time in the destination's domain).
+    pub msg: crate::engine::Message,
+}
+
+impl Encode for LogEntry {
+    fn encode(&self, w: &mut Writer) {
+        w.varint(self.edge.0 as u64);
+        self.event_time.encode(w);
+        self.msg.encode(w);
+    }
+}
+
+impl Decode for LogEntry {
+    fn decode(r: &mut Reader) -> Result<Self, SerError> {
+        Ok(LogEntry {
+            edge: EdgeId(r.varint()? as u32),
+            event_time: Time::decode(r)?,
+            msg: crate::engine::Message::decode(r)?,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::engine::{Message, Record};
+
+    #[test]
+    fn meta_roundtrip() {
+        let mut m_bar = BTreeMap::new();
+        m_bar.insert(EdgeId(0), Frontier::upto_epoch(3));
+        let meta = CkptMeta {
+            f: Frontier::upto_epoch(3),
+            n_bar: Frontier::upto_epoch(2),
+            m_bar,
+            d_bar: BTreeMap::new(),
+            phi: [(EdgeId(1), Frontier::upto_epoch(3))].into_iter().collect(),
+        };
+        let bytes = meta.to_bytes();
+        assert_eq!(CkptMeta::from_bytes(&bytes).unwrap(), meta);
+    }
+
+    #[test]
+    fn stored_checkpoint_roundtrip() {
+        let sc = StoredCheckpoint {
+            meta: CkptMeta::empty(&[EdgeId(0)], &[EdgeId(1)]),
+            state: vec![9, 9, 9],
+            pending_notify: vec![Time::epoch(4)],
+        };
+        let bytes = sc.to_bytes();
+        assert_eq!(StoredCheckpoint::from_bytes(&bytes).unwrap(), sc);
+    }
+
+    #[test]
+    fn log_entry_roundtrip() {
+        let le = LogEntry {
+            edge: EdgeId(2),
+            event_time: Time::epoch(1),
+            msg: Message::new(Time::epoch(1), Record::kv(3, 0.5)),
+        };
+        let bytes = le.to_bytes();
+        assert_eq!(LogEntry::from_bytes(&bytes).unwrap(), le);
+    }
+
+    #[test]
+    fn empty_meta_defaults() {
+        let m = CkptMeta::empty(&[EdgeId(0)], &[EdgeId(1)]);
+        assert!(m.f.is_bottom());
+        assert!(m.m_bar_of(EdgeId(0)).is_bottom());
+        assert!(m.phi_of(EdgeId(9)).is_bottom(), "unknown edges default to ∅");
+    }
+}

@@ -1,0 +1,26 @@
+//! The Falkirk Wheel fault-tolerance framework (§3–§4).
+//!
+//! - [`policy`]: per-processor checkpoint/logging policies (Fig. 1 regimes);
+//! - [`meta`]: Table-1 checkpoint metadata Ξ(p,f);
+//! - [`storage`]: the acknowledged durable-store substrate;
+//! - [`harness`]: the system layer observing events and taking selective
+//!   checkpoints;
+//! - [`rollback`]: the §3.5 constraints and Fig. 6 fixed-point solver;
+//! - [`recovery`]: §4.4 failure handling — pause, solve, reset, replay;
+//! - [`monitor`]: the §4.2 garbage-collection monitoring service;
+//! - [`external`]: §4.3 acknowledged external inputs/outputs.
+
+pub mod external;
+pub mod harness;
+pub mod meta;
+pub mod monitor;
+pub mod policy;
+pub mod recovery;
+pub mod rollback;
+pub mod storage;
+
+pub use harness::{FtStats, FtSystem, HistoryEvent};
+pub use meta::{CkptMeta, LogEntry, StoredCheckpoint};
+pub use policy::Policy;
+pub use rollback::{choose_frontiers, verify_plan, Available, RollbackInput, RollbackPlan};
+pub use storage::{Key, Kind, Store};

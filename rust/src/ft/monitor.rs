@@ -1,0 +1,203 @@
+//! The garbage-collection monitoring service (§4.2).
+//!
+//! Processors report Ξ(p,f) once storage acknowledges a checkpoint; the
+//! monitor runs an *incremental* version of the Fig. 6 fixed point over
+//! the durably-persisted availability (no ⊤ — the low-watermark must hold
+//! in every failure scenario) and pushes low-watermark advances back out:
+//! `p` may garbage-collect Ξ(p,f′) and S(p,f′) for f′ ⊂ f, and every
+//! processor sending to `p` may discard logged messages with times inside
+//! the watermark. The same watermark drives external input
+//! acknowledgement and output-side state release (§4.3, see
+//! [`crate::ft::external`]).
+//!
+//! Because storage is assumed reliable, the watermark is a true low bound:
+//! no failure scenario can force a rollback beyond it. The monitor is
+//! deterministic and monotone, so (as the paper notes) it could itself be
+//! replicated; our implementation is a plain struct.
+
+use crate::frontier::Frontier;
+use crate::ft::meta::CkptMeta;
+use crate::ft::rollback::{choose_frontiers, grow_frontiers, Available, RollbackInput, RollbackPlan};
+use crate::graph::{ProcId, Topology};
+use std::sync::Arc;
+
+/// A garbage-collection instruction produced by a watermark advance.
+#[derive(Clone, Debug, PartialEq)]
+pub enum GcAction {
+    /// `proc` may drop checkpoints with frontiers strictly below the
+    /// watermark (keeping the newest one at or below it).
+    DropCheckpointsBelow { proc: ProcId, watermark: Frontier },
+    /// `proc` may drop logged messages on `edge` whose *message* times lie
+    /// inside the destination's watermark.
+    DropLogWithin { proc: ProcId, edge: crate::graph::EdgeId, watermark: Frontier },
+}
+
+/// The monitoring service.
+pub struct Monitor {
+    topo: Arc<Topology>,
+    /// Durably persisted availability per processor (chains only; Any
+    /// for the §3.4 stateless class, which never persists anything).
+    avail: Vec<Available>,
+    /// Current low-watermark solution.
+    plan: RollbackPlan,
+    /// Updates processed (benchmarks).
+    pub updates: u64,
+}
+
+impl Monitor {
+    /// `stateless[p]` marks processors of the restore-anywhere class
+    /// (with `logs[p]` saying whether they log durably).
+    pub fn new(topo: Arc<Topology>, stateless: Vec<bool>, logs: Vec<bool>) -> Monitor {
+        let avail: Vec<Available> = (0..topo.num_procs())
+            .map(|i| {
+                if stateless[i] {
+                    Available::any(logs[i])
+                } else {
+                    Available::chain(vec![])
+                }
+            })
+            .collect();
+        let plan = {
+            let input = RollbackInput { topo: &topo, avail: &avail };
+            choose_frontiers(&input)
+        };
+        Monitor { topo, avail, plan, updates: 0 }
+    }
+
+    /// The current low-watermark at `p`: it will never need to roll back
+    /// beyond this frontier in any failure scenario.
+    pub fn low_watermark(&self, p: ProcId) -> &Frontier {
+        &self.plan.f[p.0 as usize]
+    }
+
+    /// Ingest an acknowledged Ξ(p,f); returns the GC actions enabled by
+    /// any watermark advances. Runs the incremental fixed point.
+    pub fn on_persisted(&mut self, p: ProcId, meta: CkptMeta) -> Vec<GcAction> {
+        self.updates += 1;
+        match &mut self.avail[p.0 as usize] {
+            Available::Chain { chain, .. } => {
+                debug_assert!(
+                    chain.last().map(|c| c.f.is_subset(&meta.f)).unwrap_or(true),
+                    "checkpoint chain must ascend"
+                );
+                chain.push(meta);
+            }
+            Available::Any { .. } => {
+                panic!("stateless processor {p} reported a checkpoint")
+            }
+        }
+        let grew = {
+            let input = RollbackInput { topo: &self.topo, avail: &self.avail };
+            grow_frontiers(&input, &mut self.plan, p)
+        };
+        let mut actions = Vec::new();
+        for q in grew {
+            let new = &self.plan.f[q.0 as usize];
+            actions.push(GcAction::DropCheckpointsBelow {
+                proc: q,
+                watermark: new.clone(),
+            });
+            for &d in self.topo.in_edges(q) {
+                actions.push(GcAction::DropLogWithin {
+                    proc: self.topo.src(d),
+                    edge: d,
+                    watermark: new.clone(),
+                });
+            }
+        }
+        actions
+    }
+
+    /// Recompute from scratch (reference implementation; the benches
+    /// compare this against the incremental path).
+    pub fn recompute_batch(&mut self) {
+        let input = RollbackInput { topo: &self.topo, avail: &self.avail };
+        self.plan = choose_frontiers(&input);
+    }
+
+    pub fn plan(&self) -> &RollbackPlan {
+        &self.plan
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::{EdgeId, GraphBuilder, Projection};
+    use crate::time::TimeDomain;
+
+    fn epoch_ckpt(e: u64, in_edges: &[EdgeId], out_edges: &[EdgeId]) -> CkptMeta {
+        let f = Frontier::upto_epoch(e);
+        CkptMeta {
+            f: f.clone(),
+            n_bar: f.clone(),
+            m_bar: in_edges.iter().map(|d| (*d, f.clone())).collect(),
+            d_bar: out_edges.iter().map(|o| (*o, f.clone())).collect(),
+            phi: out_edges.iter().map(|o| (*o, f.clone())).collect(),
+        }
+    }
+
+    fn pipeline() -> (Arc<Topology>, Vec<EdgeId>) {
+        let mut g = GraphBuilder::new();
+        let a = g.add_proc("a", TimeDomain::EPOCH);
+        let b = g.add_proc("b", TimeDomain::EPOCH);
+        let c = g.add_proc("c", TimeDomain::EPOCH);
+        let e0 = g.connect(a, b, Projection::Identity);
+        let e1 = g.connect(b, c, Projection::Identity);
+        (Arc::new(g.build().unwrap()), vec![e0, e1])
+    }
+
+    #[test]
+    fn watermark_rises_only_when_all_persist() {
+        let (topo, es) = pipeline();
+        let mut mon = Monitor::new(topo, vec![false, false, false], vec![false; 3]);
+        let (a, b, c) = (ProcId(0), ProcId(1), ProcId(2));
+        assert!(mon.low_watermark(b).is_bottom());
+        // a persists epoch 1: nothing moves (b, c unpersisted).
+        let acts = mon.on_persisted(a, epoch_ckpt(1, &[], &[es[0]]));
+        assert!(acts.is_empty());
+        assert!(mon.low_watermark(a).is_bottom());
+        // b persists epoch 1: still gated by c.
+        let acts = mon.on_persisted(b, epoch_ckpt(1, &[es[0]], &[es[1]]));
+        assert!(acts.is_empty());
+        // c persists epoch 1: the whole pipeline's watermark rises to ↓1.
+        let acts = mon.on_persisted(c, epoch_ckpt(1, &[es[1]], &[]));
+        assert!(!acts.is_empty());
+        for p in [a, b, c] {
+            assert_eq!(mon.low_watermark(p), &Frontier::upto_epoch(1));
+        }
+        // GC actions include dropping b's inbound log at a.
+        assert!(acts.iter().any(|x| matches!(
+            x,
+            GcAction::DropLogWithin { proc, .. } if *proc == a
+        )));
+    }
+
+    #[test]
+    fn incremental_matches_batch() {
+        let (topo, es) = pipeline();
+        let mut mon = Monitor::new(topo.clone(), vec![false; 3], vec![false; 3]);
+        let (a, b, c) = (ProcId(0), ProcId(1), ProcId(2));
+        for ep in 1..=5 {
+            mon.on_persisted(a, epoch_ckpt(ep, &[], &[es[0]]));
+            mon.on_persisted(b, epoch_ckpt(ep, &[es[0]], &[es[1]]));
+            mon.on_persisted(c, epoch_ckpt(ep, &[es[1]], &[]));
+            let inc = mon.plan().clone();
+            mon.recompute_batch();
+            assert_eq!(&inc, mon.plan(), "incremental diverged at epoch {ep}");
+            assert_eq!(mon.low_watermark(b), &Frontier::upto_epoch(ep));
+        }
+    }
+
+    #[test]
+    fn stateless_members_follow_chain_members() {
+        let (topo, es) = pipeline();
+        // b is a stateless logging firewall.
+        let mut mon = Monitor::new(topo, vec![false, true, false], vec![false, true, false]);
+        let (a, c) = (ProcId(0), ProcId(2));
+        mon.on_persisted(a, epoch_ckpt(2, &[], &[es[0]]));
+        mon.on_persisted(c, epoch_ckpt(2, &[es[1]], &[]));
+        // b's watermark = φ(a's) ∩ … = ↓2 (it can restore anywhere).
+        assert_eq!(mon.low_watermark(ProcId(1)), &Frontier::upto_epoch(2));
+    }
+}

@@ -1,0 +1,83 @@
+//! Checkpoint/logging policies — the per-regime fault-tolerance choices
+//! of Figure 1.
+//!
+//! The paper's central argument is that these policies, which prior
+//! systems hard-wired globally, can coexist per-processor within one
+//! application. Each maps onto the framework as follows:
+//!
+//! | Policy        | Figure-1 regime   | F*(p)                  | logs?  |
+//! |---------------|-------------------|------------------------|--------|
+//! | `Ephemeral`   | ephemeral         | any frontier (S = ∅)   | no     |
+//! | `LogOutputs`  | batch (Spark RDD) | any frontier (S = ∅)   | yes    |
+//! | `Lazy{..}`    | lazy checkpoint   | selective ckpt chain   | option |
+//! | `Eager`       | eager checkpoint  | ckpt per event (seq)   | yes    |
+//! | `FullHistory` | §4.1 fallback     | replay to any frontier | virtual|
+
+/// A processor's fault-tolerance policy (see module docs).
+#[derive(Copy, Clone, Debug, PartialEq, Eq)]
+pub enum Policy {
+    /// Never persist anything; recover by upstream retry (clients of the
+    /// ephemeral region re-send unacknowledged batches, §4.3).
+    Ephemeral,
+    /// Stateless processor that durably logs every sent message — the
+    /// Spark-RDD "firewall" of §4.1 that stops rollback propagating
+    /// upstream (Fig. 7b).
+    LogOutputs,
+    /// Selective checkpoints taken when logical times complete, once per
+    /// `every` completions (the "lazy checkpoint" streaming regime).
+    /// Optionally also logs outputs.
+    Lazy { every: u64, log_outputs: bool },
+    /// Exactly-once streaming (§2.1): persist state and outgoing messages
+    /// after *every* event, before acknowledging — sequence-number
+    /// domains (MillWheel/Storm-with-ackers).
+    Eager,
+    /// Log the full event history H(p); any deterministic processor gets
+    /// fault tolerance with zero code — rollback replays the filtered
+    /// history (§4.1). History grows without bound.
+    FullHistory,
+}
+
+impl Policy {
+    /// Whether sent messages are durably logged (D̄ = ∅).
+    pub fn logs_outputs(&self) -> bool {
+        matches!(
+            self,
+            Policy::LogOutputs | Policy::Eager | Policy::Lazy { log_outputs: true, .. }
+        )
+    }
+
+    /// Whether the processor restores via an explicit checkpoint chain
+    /// (vs. the "any frontier" stateless/replay class).
+    pub fn has_chain(&self) -> bool {
+        matches!(self, Policy::Lazy { .. } | Policy::Eager)
+    }
+
+    /// Whether the full event history is recorded.
+    pub fn records_history(&self) -> bool {
+        matches!(self, Policy::FullHistory)
+    }
+
+    /// Whether any Table-1 delta tracking is needed at all (Ephemeral
+    /// processors run with zero fault-tolerance overhead).
+    pub fn tracks_metadata(&self) -> bool {
+        !matches!(self, Policy::Ephemeral)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn classification() {
+        assert!(!Policy::Ephemeral.logs_outputs());
+        assert!(Policy::LogOutputs.logs_outputs());
+        assert!(Policy::Eager.logs_outputs());
+        assert!(Policy::Lazy { every: 1, log_outputs: true }.logs_outputs());
+        assert!(!Policy::Lazy { every: 1, log_outputs: false }.logs_outputs());
+        assert!(Policy::Eager.has_chain());
+        assert!(!Policy::FullHistory.has_chain());
+        assert!(Policy::FullHistory.records_history());
+        assert!(!Policy::Ephemeral.tracks_metadata());
+    }
+}

@@ -1,0 +1,627 @@
+//! Recovery from failure (§4.4) and the §3.6 state reset.
+//!
+//! The flow: failures are injected (crash semantics — the processor's
+//! volatile state, input-queue contents and pending notifications are
+//! destroyed); the system pauses (our engine is event-at-a-time, so any
+//! inter-step point is a pause); availability is assembled — failed
+//! processors offer only their durable chains (or ∅), non-failed ones get
+//! the ⊤ pseudo-checkpoint; the Fig. 6 solver picks maximal consistent
+//! frontiers; and the state reset applies them:
+//!
+//! ```text
+//! F*'(p) = {f' ∈ F*(p) : f' ⊆ f(p)}       (chain truncation)
+//! H'(p)  = H(p)@f(p)                       (history filtering)
+//! S'(p)  = S(p, f(p))                      (state restore)
+//! Q'(e)  = L(p, f(p)) @̸ f(dst(e))          (log replay)
+//! ```
+//!
+//! Channel contents are reconciled per edge: a destination kept at ⊤
+//! keeps queued messages whose times are fixed by the source's rollback
+//! (`time ∈ φ(e)(f(src))` — the source will not regenerate those); a
+//! destination restored to `f < ⊤` gets its queue rebuilt purely from
+//! logs/replay (valid checkpoints are complete, so nothing inside `f`
+//! can have been in flight).
+
+use crate::engine::Message;
+use crate::frontier::Frontier;
+use crate::ft::harness::{FtSystem, HistoryEvent};
+use crate::ft::meta::CkptMeta;
+use crate::ft::policy::Policy;
+use crate::ft::rollback::{choose_frontiers, Available, RollbackInput, RollbackPlan};
+use crate::ft::storage::Kind;
+use crate::graph::ProcId;
+use crate::progress::Summary;
+use crate::time::Time;
+
+/// What a recovery pass did (for logging, tests, and benches).
+#[derive(Clone, Debug)]
+pub struct RecoveryReport {
+    pub plan: RollbackPlan,
+    /// Messages replayed from logs / history regeneration (Q′).
+    pub replayed: usize,
+    /// Queued messages discarded during channel reconciliation.
+    pub dropped: usize,
+    /// Processors restored from a durable checkpoint.
+    pub restored_from_checkpoint: usize,
+    /// Processors reset to their initial state (∅).
+    pub reset_to_empty: usize,
+    /// Processors left untouched (⊤).
+    pub untouched: usize,
+}
+
+impl FtSystem {
+    /// Crash the given processors: volatile operator state, input-channel
+    /// contents, pending notifications, and un-persisted FT deltas are
+    /// destroyed. Durable chains/logs/histories survive.
+    pub fn inject_failures(&mut self, procs: &[ProcId]) {
+        for &p in procs {
+            self.engine.fail_proc(p);
+            let ft = &mut self.ft[p.0 as usize];
+            ft.failed = true;
+            ft.delivered_new.clear();
+            ft.input_new.clear();
+            ft.notified_new.clear();
+            ft.discarded_new.clear();
+            ft.sent_events.clear();
+        }
+    }
+
+    /// Whether any processor is marked failed.
+    pub fn any_failed(&self) -> bool {
+        self.ft.iter().any(|f| f.failed)
+    }
+
+    /// Assemble solver availability. Failed processors offer only
+    /// durably-complete frontiers; non-failed ones additionally offer ⊤
+    /// (§4.4).
+    pub(crate) fn availability(&self) -> Vec<Available> {
+        self.topo
+            .proc_ids()
+            .map(|p| {
+                let ft = &self.ft[p.0 as usize];
+                let dedup = self.engine.dedups(p);
+                match (ft.failed, ft.policy) {
+                    // Failed stateless processors lost their input queues;
+                    // only ∅ is known-complete (client retry / upstream
+                    // re-execution resupplies them).
+                    (true, Policy::Ephemeral) | (true, Policy::LogOutputs) => {
+                        Available::chain(vec![])
+                    }
+                    // Failed replayable processor: it can rebuild any
+                    // frontier covered by durably-notified times (those
+                    // are complete, hence nothing at them was in flight).
+                    (true, Policy::FullHistory) => {
+                        let mut f = Frontier::Bottom;
+                        for ev in &ft.history {
+                            if let HistoryEvent::Notification { time } = ev {
+                                f.insert(*time);
+                            }
+                        }
+                        if f.is_bottom() {
+                            Available::chain(vec![])
+                        } else if dedup {
+                            Available::chain_dedup(
+                                vec![self.history_meta(p, &f)],
+                                self.engine.completed(p).clone(),
+                            )
+                        } else {
+                            Available::chain(vec![self.history_meta(p, &f)])
+                        }
+                    }
+                    // Failed chain processor: its durable checkpoints.
+                    (true, _) => {
+                        let chain: Vec<CkptMeta> =
+                            ft.chain.iter().map(|c| c.meta.clone()).collect();
+                        if dedup {
+                            Available::chain_dedup(chain, self.engine.completed(p).clone())
+                        } else {
+                            Available::chain(chain)
+                        }
+                    }
+                    // Non-failed stateless/replayable: any frontier incl. ⊤.
+                    (false, Policy::Ephemeral) if dedup => {
+                        Available::any_dedup(false, self.engine.completed(p).clone())
+                    }
+                    (false, Policy::Ephemeral) => Available::any(false),
+                    (false, Policy::LogOutputs) | (false, Policy::FullHistory) if dedup => {
+                        Available::any_dedup(true, self.engine.completed(p).clone())
+                    }
+                    (false, Policy::LogOutputs) | (false, Policy::FullHistory) => {
+                        Available::any(true)
+                    }
+                    // Non-failed chain processor: chain + live ⊤.
+                    (false, _) => {
+                        let mut chain: Vec<CkptMeta> =
+                            ft.chain.iter().map(|c| c.meta.clone()).collect();
+                        chain.push(self.live_top_meta(p));
+                        if dedup {
+                            Available::chain_dedup(chain, self.engine.completed(p).clone())
+                        } else {
+                            Available::chain(chain)
+                        }
+                    }
+                }
+            })
+            .collect()
+    }
+
+    /// Synthesize Ξ(p,f) for a failed full-history processor from its
+    /// durable history: M̄ from the recorded deliveries inside `f`,
+    /// N̄ = recorded notifications inside `f`, D̄ = ∅ (replay regenerates
+    /// sends, acting as a log), φ = static projection of `f`.
+    fn history_meta(&self, p: ProcId, f: &Frontier) -> CkptMeta {
+        let ft = &self.ft[p.0 as usize];
+        let mut meta = CkptMeta::empty(self.topo.in_edges(p), self.topo.out_edges(p));
+        meta.f = f.clone();
+        for ev in &ft.history {
+            match ev {
+                HistoryEvent::Message { edge, time, .. } if f.contains(time) => {
+                    let cur = meta.m_bar.get_mut(edge).unwrap();
+                    cur.insert(*time);
+                }
+                HistoryEvent::Notification { time } if f.contains(time) => {
+                    meta.n_bar.insert(*time);
+                }
+                _ => {}
+            }
+        }
+        for &e in self.topo.out_edges(p) {
+            let fr = self
+                .topo
+                .projection(e)
+                .apply(f)
+                .expect("full-history processors need static out-projections");
+            meta.phi.insert(e, fr);
+            meta.d_bar.insert(e, Frontier::Bottom);
+        }
+        meta
+    }
+
+    /// §4.4 recovery: solve for consistent frontiers and apply the §3.6
+    /// reset. Panics if called with no failures (nothing to do).
+    pub fn recover(&mut self) -> RecoveryReport {
+        assert!(self.any_failed(), "recover() without failures");
+        let avail = self.availability();
+        let plan = {
+            let input = RollbackInput { topo: &self.topo, avail: &avail };
+            choose_frontiers(&input)
+        };
+        let report = self.apply_plan(&plan);
+        for ft in &mut self.ft {
+            ft.failed = false;
+        }
+        report
+    }
+
+    /// Apply a rollback plan: restore processors, reconcile channels,
+    /// replay Q′.
+    pub(crate) fn apply_plan(&mut self, plan: &RollbackPlan) -> RecoveryReport {
+        let mut report = RecoveryReport {
+            plan: plan.clone(),
+            replayed: 0,
+            dropped: 0,
+            restored_from_checkpoint: 0,
+            reset_to_empty: 0,
+            untouched: 0,
+        };
+
+        // Phase 1: restore processor states and collect replay sources.
+        // `regen[p]` holds history-regenerated sends for full-history
+        // processors (their virtual log).
+        let n = self.topo.num_procs();
+        let mut regen: Vec<Vec<(crate::graph::EdgeId, Time, Message)>> = vec![Vec::new(); n];
+        for p in self.topo.proc_ids() {
+            let fp = plan.f[p.0 as usize].clone();
+            if fp.is_top() {
+                report.untouched += 1;
+                continue;
+            }
+            // Cancel all pending notifications; restores re-arm them.
+            self.engine.cancel_pending(p, |_| true);
+            // Completed-time frontier: intersect the live one with the
+            // restored frontier (chain restores below overwrite it with
+            // the checkpoint's durable N̄ — the live one is ∅ for failed
+            // processors).
+            let new_completed = if fp.is_bottom() {
+                Frontier::Bottom
+            } else {
+                self.engine.completed(p).intersect(&fp)
+            };
+            self.engine.set_completed(p, new_completed);
+            let policy = self.ft[p.0 as usize].policy;
+            if fp.is_bottom() {
+                self.engine.proc_mut(p).reset();
+                // Re-executed sends must reuse sequence numbers from the
+                // beginning, or downstream dedup (and the paper's (e,s)
+                // time identity) breaks.
+                for &e in self.topo.out_edges(p) {
+                    if self.topo.projection(e).is_per_checkpoint() && !policy.logs_outputs() {
+                        self.engine.set_seq_counter(e, 0);
+                    } else if self.topo.projection(e).is_per_checkpoint() {
+                        // Logging processors replay 1..k from the log and
+                        // continue at k+1 — but a log truncated to ∅ holds
+                        // nothing, so restart numbering too.
+                        self.engine.set_seq_counter(e, 0);
+                    }
+                }
+                report.reset_to_empty += 1;
+            } else if policy.records_history() {
+                // Replay recomputes state and notifications; completed =
+                // the replayed notification frontier.
+                let mut done = Frontier::Bottom;
+                for ev in &self.ft[p.0 as usize].history {
+                    if let HistoryEvent::Notification { time } = ev {
+                        if fp.contains(time) {
+                            done.insert(*time);
+                        }
+                    }
+                }
+                self.engine.set_completed(p, done);
+                regen[p.0 as usize] = self.replay_history(p, &fp);
+                report.restored_from_checkpoint += 1;
+            } else if policy.has_chain() {
+                let (state, pending, phi_counts, n_bar) = {
+                    let ft = &self.ft[p.0 as usize];
+                    let ck = ft
+                        .chain
+                        .iter()
+                        .find(|c| c.meta.f == fp)
+                        .unwrap_or_else(|| panic!("plan frontier {fp} not in chain of {p}"));
+                    let counts: Vec<(crate::graph::EdgeId, u64)> = ck
+                        .meta
+                        .phi
+                        .iter()
+                        .filter(|(e, _)| self.topo.projection(**e).is_per_checkpoint())
+                        .map(|(e, fr)| (*e, fr.watermark(*e)))
+                        .collect();
+                    (ck.state.clone(), ck.pending_notify.clone(), counts, ck.meta.n_bar.clone())
+                };
+                self.engine.proc_mut(p).restore(&state);
+                self.engine.restore_pending(p, pending);
+                self.engine.set_completed(p, n_bar);
+                for (e, c) in phi_counts {
+                    self.engine.set_seq_counter(e, c);
+                }
+                report.restored_from_checkpoint += 1;
+            } else {
+                // Stateless at a mid frontier: nothing to restore.
+                self.engine.proc_mut(p).reset();
+                report.reset_to_empty += 1;
+            }
+            // FT bookkeeping reset (F*'(p), H'(p), log truncation,
+            // delta pruning).
+            let store = self.store.clone();
+            let ft = &mut self.ft[p.0 as usize];
+            ft.chain.retain(|c| c.meta.f.is_subset(&fp));
+            ft.log.retain(|le| fp.contains(&le.event_time));
+            ft.history.retain(|ev| fp.contains(&ev.time()));
+            for times in ft.delivered_new.values_mut() {
+                times.retain(|lt| fp.contains(&lt.0));
+            }
+            ft.notified_new.retain(|lt| fp.contains(&lt.0));
+            ft.input_new.retain(|lt| fp.contains(&lt.0));
+            for pairs in ft.discarded_new.values_mut() {
+                pairs.retain(|(evt, _)| fp.contains(evt));
+            }
+            for v in ft.sent_events.values_mut() {
+                v.retain(|t| fp.contains(t));
+            }
+            if fp.is_bottom() {
+                // Initial state: nothing was ever sent.
+                ft.sent_total.clear();
+                store.delete_matching(p.0, |k| {
+                    matches!(k.kind, Kind::LogEntry | Kind::HistoryEvent)
+                });
+            }
+        }
+
+        // Phase 2: channel reconciliation.
+        for e in self.topo.edge_ids() {
+            let src = self.topo.src(e);
+            let dst = self.topo.dst(e);
+            let f_src = plan.f[src.0 as usize].clone();
+            let f_dst = plan.f[dst.0 as usize].clone();
+            if f_dst.is_top() {
+                if f_src.is_top() {
+                    continue; // nothing moved on this edge
+                }
+                // Keep only messages fixed by the source's rollback; the
+                // source re-executes and re-sends the rest.
+                let keep = self.phi_runtime(e, &f_src);
+                let removed = self.engine.discard_from_channel(e, |t| !keep.contains(t));
+                report.dropped += removed.len();
+            } else {
+                // Destination restored: rebuild the queue from logs.
+                let removed = self.engine.discard_from_channel(e, |_| true);
+                report.dropped += removed.len();
+            }
+        }
+
+        // Phase 3: replay Q′(e) = L(p, f(p)) @̸ f(dst(e)).
+        for p in self.topo.proc_ids() {
+            let fp = plan.f[p.0 as usize].clone();
+            if fp.is_bottom() {
+                continue; // log was truncated to nothing
+            }
+            // Durable log entries plus history-regenerated sends.
+            let entries: Vec<(crate::graph::EdgeId, Time, Message)> = self.ft[p.0 as usize]
+                .log
+                .iter()
+                .map(|le| (le.edge, le.event_time, le.msg.clone()))
+                .chain(std::mem::take(&mut regen[p.0 as usize]))
+                .collect();
+            for (e, evt, msg) in entries {
+                if !fp.is_top() && !fp.contains(&evt) {
+                    continue;
+                }
+                let f_dst = &plan.f[self.topo.dst(e).0 as usize];
+                if f_dst.is_top() {
+                    continue; // ⊤ kept its queue; nothing to resupply
+                }
+                if f_dst.contains(&msg.time) {
+                    continue; // destination retained its effect
+                }
+                self.engine.replay_message(e, msg);
+                report.replayed += 1;
+            }
+        }
+        report
+    }
+
+    /// Reset a full-history processor to H(p)@f by replaying the filtered
+    /// history through the operator. Returns the regenerated sends
+    /// (virtual log for Q′). Notification requests regenerated by the
+    /// replay that were not consumed by replayed notifications are
+    /// re-armed.
+    fn replay_history(
+        &mut self,
+        p: ProcId,
+        f: &Frontier,
+    ) -> Vec<(crate::graph::EdgeId, Time, Message)> {
+        self.engine.proc_mut(p).reset();
+        let events: Vec<HistoryEvent> = self.ft[p.0 as usize]
+            .history
+            .iter()
+            .filter(|ev| f.contains(&ev.time()))
+            .cloned()
+            .collect();
+        let out_edges = self.topo.out_edges(p).to_vec();
+        let summaries: Vec<Summary> =
+            out_edges.iter().map(|&e| Summary::of(self.topo.projection(e))).collect();
+        let seq_dst: Vec<bool> = out_edges
+            .iter()
+            .map(|&e| self.topo.domain(self.topo.dst(e)) == crate::time::TimeDomain::Seq)
+            .collect();
+        let mut sends = Vec::new();
+        let mut requested: Vec<Time> = Vec::new();
+        let mut consumed: Vec<Time> = Vec::new();
+        for ev in events {
+            let t = ev.time();
+            let mut ctx = crate::engine::Ctx::new(t, &out_edges, &summaries, &seq_dst);
+            match &ev {
+                HistoryEvent::Message { edge, time, data } => {
+                    let port = self.topo.input_port(*edge);
+                    self.engine.proc_mut(p).on_message(port, *time, data.clone(), &mut ctx);
+                }
+                HistoryEvent::Notification { time } => {
+                    consumed.push(*time);
+                    self.engine.proc_mut(p).on_notification(*time, &mut ctx);
+                }
+                HistoryEvent::Input { time, data } => {
+                    self.engine.proc_mut(p).on_input(*time, data.clone(), &mut ctx);
+                }
+            }
+            let (staged, notify) = ctx.into_parts();
+            for (port, msg) in staged {
+                sends.push((out_edges[port], t, msg));
+            }
+            requested.extend(notify);
+        }
+        // Re-arm unconsumed notification requests.
+        for t in consumed {
+            if let Some(i) = requested.iter().position(|x| *x == t) {
+                requested.swap_remove(i);
+            }
+        }
+        requested.sort_by_key(|t| crate::time::LexTime(*t));
+        requested.dedup();
+        self.engine.restore_pending(p, requested);
+        sends
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::engine::{Delivery, Processor, Record};
+    use crate::graph::{GraphBuilder, Projection};
+    use crate::operators::{shared_vec, Buffer, Sink, Source, SumByTime};
+    use crate::ft::storage::Store;
+    use crate::time::TimeDomain;
+    use std::sync::Arc;
+
+    /// src(LogOutputs) → sum(Lazy) → buffer(Lazy): the Fig. 3 fragment
+    /// with logging upstream so recovery has something to replay.
+    fn fig3_system() -> (FtSystem, ProcId, ProcId, ProcId) {
+        let mut g = GraphBuilder::new();
+        let src = g.add_proc("src", TimeDomain::EPOCH);
+        let sum = g.add_proc("sum", TimeDomain::EPOCH);
+        let buf = g.add_proc("buffer", TimeDomain::EPOCH);
+        g.connect(src, sum, Projection::Identity);
+        g.connect(sum, buf, Projection::Identity);
+        let topo = Arc::new(g.build().unwrap());
+        let procs: Vec<Box<dyn Processor>> = vec![
+            Box::new(Source),
+            Box::new(SumByTime::default()),
+            Box::new(Buffer::default()),
+        ];
+        let sys = FtSystem::new(
+            topo,
+            procs,
+            vec![
+                Policy::LogOutputs,
+                Policy::Lazy { every: 1, log_outputs: true },
+                Policy::Lazy { every: 1, log_outputs: false },
+            ],
+            Delivery::Fifo,
+            Store::new(1),
+        );
+        (sys, ProcId(0), ProcId(1), ProcId(2))
+    }
+
+    /// Drives two epochs through, then crashes `sum` mid-epoch-1 and
+    /// recovers; epoch-0 work must be preserved, epoch 1 replayed.
+    #[test]
+    fn crash_and_recover_preserves_completed_epoch() {
+        let (mut sys, src, sum, _buf) = fig3_system();
+        sys.advance_input(src, Time::epoch(0));
+        sys.push_input(src, Time::epoch(0), Record::Int(3));
+        sys.push_input(src, Time::epoch(0), Record::Int(4));
+        sys.advance_input(src, Time::epoch(1));
+        sys.run_to_quiescence(1000); // epoch 0 completes; checkpoints taken
+        assert_eq!(sys.chain_len(sum), 1);
+        // Epoch 1 in flight: delivered to sum but not complete.
+        sys.push_input(src, Time::epoch(1), Record::Int(10));
+        sys.run_to_quiescence(1000);
+
+        sys.inject_failures(&[sum]);
+        let rep = sys.recover();
+        // sum restored from its epoch-0 checkpoint.
+        assert_eq!(rep.plan.f[sum.0 as usize], Frontier::upto_epoch(0));
+        assert!(rep.restored_from_checkpoint >= 1);
+        // The epoch-1 message was replayed from src's log.
+        assert_eq!(rep.replayed, 1);
+        // Finish epoch 1.
+        sys.advance_input(src, Time::epoch(2));
+        sys.run_to_quiescence(1000);
+        // Buffer must hold exactly the two sums: 7 (epoch 0), 10 (epoch 1).
+        let blob = sys.engine.proc(ProcId(2)).checkpoint_upto(&Frontier::Top);
+        let mut b = Buffer::default();
+        b.restore(&blob);
+        let contents = b.contents();
+        assert_eq!(contents.len(), 2);
+        assert_eq!(contents[0].1, vec![Record::kv(0, 7.0)]);
+        assert_eq!(contents[1].1, vec![Record::kv(0, 10.0)]);
+    }
+
+    /// Recovered output must equal the failure-free run (the refinement
+    /// claim), including when the failure hits *between* checkpoints.
+    #[test]
+    fn recovered_equals_failure_free() {
+        let drive = |fail_at: Option<u64>| -> Vec<(Time, Vec<Record>)> {
+            let (mut sys, src, sum, buf) = fig3_system();
+            for ep in 0..4u64 {
+                sys.advance_input(src, Time::epoch(ep));
+                sys.push_input(src, Time::epoch(ep), Record::Int(ep as i64 + 1));
+                sys.push_input(src, Time::epoch(ep), Record::Int(2 * ep as i64));
+                sys.advance_input(src, Time::epoch(ep + 1));
+                sys.run_to_quiescence(10_000);
+                if fail_at == Some(ep) {
+                    sys.inject_failures(&[sum]);
+                    sys.recover();
+                }
+            }
+            sys.close_input(src);
+            sys.run_to_quiescence(10_000);
+            let blob = sys.engine.proc(buf).checkpoint_upto(&Frontier::Top);
+            let mut b = Buffer::default();
+            b.restore(&blob);
+            b.contents()
+        };
+        let clean = drive(None);
+        assert_eq!(clean.len(), 4);
+        for ep in 0..4 {
+            assert_eq!(clean, drive(Some(ep)), "failure after epoch {ep} diverged");
+        }
+    }
+
+    /// Failing an ephemeral processor rolls the ephemeral region to ∅ and
+    /// the client-retry path (re-pushing inputs) reconverges.
+    #[test]
+    fn ephemeral_failure_requires_retry() {
+        let mut g = GraphBuilder::new();
+        let src = g.add_proc("src", TimeDomain::EPOCH);
+        let map = g.add_proc("map", TimeDomain::EPOCH);
+        let snk = g.add_proc("sink", TimeDomain::EPOCH);
+        g.connect(src, map, Projection::Identity);
+        g.connect(map, snk, Projection::Identity);
+        let topo = Arc::new(g.build().unwrap());
+        let out = shared_vec();
+        let procs: Vec<Box<dyn Processor>> = vec![
+            Box::new(Source),
+            Box::new(crate::operators::Map(|r: Record| r)),
+            Box::new(Sink(out.clone())),
+        ];
+        let mut sys = FtSystem::new(
+            topo,
+            procs,
+            vec![Policy::Ephemeral; 3],
+            Delivery::Fifo,
+            Store::new(1),
+        );
+        sys.advance_input(src, Time::epoch(0));
+        sys.push_input(src, Time::epoch(0), Record::Int(1));
+        // Deliver into map only; map's output to sink still queued.
+        sys.step();
+        sys.inject_failures(&[ProcId(1)]);
+        let rep = sys.recover();
+        // Everything ephemeral rolls to ∅: nothing replayed.
+        assert_eq!(rep.replayed, 0);
+        assert!(rep.plan.f.iter().all(|f| f.is_bottom()));
+        // Client retries the batch.
+        sys.push_input(src, Time::epoch(0), Record::Int(1));
+        sys.close_input(src);
+        sys.run_to_quiescence(1000);
+        assert_eq!(out.lock().unwrap().len(), 1);
+    }
+
+    /// Full-history processors replay to a notified frontier.
+    #[test]
+    fn full_history_replay_restores_state() {
+        let mut g = GraphBuilder::new();
+        let src = g.add_proc("src", TimeDomain::EPOCH);
+        let sum = g.add_proc("sum", TimeDomain::EPOCH);
+        let buf = g.add_proc("buffer", TimeDomain::EPOCH);
+        g.connect(src, sum, Projection::Identity);
+        g.connect(sum, buf, Projection::Identity);
+        let topo = Arc::new(g.build().unwrap());
+        let procs: Vec<Box<dyn Processor>> = vec![
+            Box::new(Source),
+            Box::new(SumByTime::default()),
+            Box::new(Buffer::default()),
+        ];
+        let mut sys = FtSystem::new(
+            topo,
+            procs,
+            vec![
+                Policy::LogOutputs,
+                Policy::FullHistory,
+                Policy::Lazy { every: 1, log_outputs: false },
+            ],
+            Delivery::Fifo,
+            Store::new(1),
+        );
+        let (src, sum) = (ProcId(0), ProcId(1));
+        sys.advance_input(src, Time::epoch(0));
+        sys.push_input(src, Time::epoch(0), Record::Int(5));
+        sys.advance_input(src, Time::epoch(1));
+        sys.run_to_quiescence(1000);
+        sys.push_input(src, Time::epoch(1), Record::Int(9));
+        sys.run_to_quiescence(1000);
+        sys.inject_failures(&[sum]);
+        let rep = sys.recover();
+        // sum replays its history through epoch 0 (the notified frontier)…
+        assert_eq!(rep.plan.f[sum.0 as usize], Frontier::upto_epoch(0));
+        // …and the epoch-1 message is replayed from src's log.
+        assert_eq!(rep.replayed, 1);
+        sys.advance_input(src, Time::epoch(2));
+        sys.run_to_quiescence(1000);
+        let blob = sys.engine.proc(ProcId(2)).checkpoint_upto(&Frontier::Top);
+        let mut b = Buffer::default();
+        b.restore(&blob);
+        let contents = b.contents();
+        assert_eq!(contents.len(), 2);
+        assert_eq!(contents[0].1, vec![Record::kv(0, 5.0)]);
+        assert_eq!(contents[1].1, vec![Record::kv(0, 9.0)]);
+    }
+}

@@ -1,0 +1,859 @@
+//! Choosing consistent frontiers for rollback — §3.5 constraints and the
+//! Figure-6 fixed-point algorithm.
+//!
+//! Given, for every processor, the set of frontiers it can restore to
+//! ([`Available`]), the solver picks the **maximal** globally-consistent
+//! assignment `f(p)` (plus the auxiliary notification frontiers `f_n(p)`
+//! that rule out the Fig. 5 inconsistency). The §3.5 constraints:
+//!
+//! 1. *(creation-time)* a checkpoint for `f` is only saved once all times
+//!    in `f` are complete at `p` — enforced by the harness, not here;
+//! 2. ∀e ∈ Out(p): `D̄(e, f(p)) ⊆ f(dst(e))` — nobody may need a message
+//!    `p` discarded;
+//! 3. ∀d ∈ In(p): `M̄(d, f(p)) ⊆ φ(d)(f(src(d)))` — everything `p` kept
+//!    must be "fixed" by its upstream's rollback;
+//! 4. `f_n(p) ⊆ f(p)`, `N̄(p, f(p)) ⊆ f_n(p)`, and
+//!    ∀d: `f_n(p) ⊆ φ(d)(f_n(src(d)))` — processed notifications must
+//!    remain justified transitively.
+//!
+//! The solver is a monotone worklist fixed point: frontiers only shrink,
+//! and `f(p) = f_n(p) = ∅` satisfies everything, so it terminates. Both a
+//! batch solve (recovery, §4.4) and an incremental *increase* propagation
+//! (the §4.2 garbage-collection monitor, where adding checkpoints can
+//! only grow the solution) are provided.
+
+use crate::frontier::Frontier;
+use crate::ft::meta::CkptMeta;
+use crate::graph::{EdgeId, ProcId, Topology};
+use crate::time::TimeDomain;
+use std::collections::{BTreeSet, VecDeque};
+
+/// What frontiers a processor can restore to.
+///
+/// `dedup` marks *epoch-idempotent* processors: their engine-level
+/// completed-time dedup silently drops re-delivered messages at times
+/// they have already completed, which mechanically enforces both the
+/// delivered-message constraint (3) and the notification promise (4) for
+/// times inside their checkpoints — so those constraints are relaxed.
+/// This is what lets the Figure-1 regime boundaries (ephemeral → batch /
+/// iterative) recover independently, the paper's motivating mixture.
+#[derive(Clone, Debug)]
+pub enum Available {
+    /// An explicit ascending chain of checkpoints (∅ is always implicitly
+    /// available and need not be listed). The last element may be the
+    /// live-state pseudo-checkpoint at ⊤ (§4.4). For deduping processors
+    /// `dedup` carries the live completed-time frontier: true checkpoints
+    /// (complete by construction) are exempt from constraints 3–4, while
+    /// the ⊤ pseudo-checkpoint is exempt only for its completed portion.
+    Chain { chain: Vec<CkptMeta>, dedup: Option<Frontier> },
+    /// §3.4's "restore to any requested frontier" class (stateless /
+    /// full-history processors): S = ∅, φ(e)(f) = M̄(d,f) = N̄(p,f) = f,
+    /// and D̄(e,f) = ∅ if `logs_outputs` else φ(e)(f). For deduping
+    /// processors `completed` is their completed-time frontier, which
+    /// additionally caps the restorable frontier (incomplete consumed
+    /// times cannot be re-deduplicated) while exempting completed times
+    /// from upstream coverage.
+    Any {
+        logs_outputs: bool,
+        dedup_completed: Option<Frontier>,
+    },
+}
+
+impl Available {
+    /// Plain checkpoint chain (no dedup).
+    pub fn chain(chain: Vec<CkptMeta>) -> Available {
+        Available::Chain { chain, dedup: None }
+    }
+
+    /// Checkpoint chain of an epoch-idempotent processor with the given
+    /// live completed-time frontier.
+    pub fn chain_dedup(chain: Vec<CkptMeta>, completed: Frontier) -> Available {
+        Available::Chain { chain, dedup: Some(completed) }
+    }
+
+    /// Restore-anywhere processor (no dedup).
+    pub fn any(logs_outputs: bool) -> Available {
+        Available::Any { logs_outputs, dedup_completed: None }
+    }
+
+    /// Restore-anywhere epoch-idempotent processor with the given
+    /// completed-time frontier.
+    pub fn any_dedup(logs_outputs: bool, completed: Frontier) -> Available {
+        Available::Any { logs_outputs, dedup_completed: Some(completed) }
+    }
+
+    /// Whether this processor dedups completed-time deliveries.
+    pub fn dedups(&self) -> bool {
+        self.dedup_completed().is_some()
+    }
+
+    fn dedup_completed(&self) -> Option<&Frontier> {
+        match self {
+            Available::Chain { dedup, .. } => dedup.as_ref(),
+            Available::Any { dedup_completed, .. } => dedup_completed.as_ref(),
+        }
+    }
+
+    fn max_frontier(&self) -> Frontier {
+        match self {
+            Available::Any { .. } => Frontier::Top,
+            Available::Chain { chain, .. } => {
+                chain.last().map(|c| c.f.clone()).unwrap_or(Frontier::Bottom)
+            }
+        }
+    }
+}
+
+/// Solver input: a topology plus per-processor availability.
+pub struct RollbackInput<'a> {
+    pub topo: &'a Topology,
+    pub avail: &'a [Available],
+}
+
+/// Solver output: `f(p)` and `f_n(p)` per processor.
+#[derive(Clone, Debug, PartialEq)]
+pub struct RollbackPlan {
+    pub f: Vec<Frontier>,
+    pub f_n: Vec<Frontier>,
+}
+
+/// Evaluate φ(d)(g) for edge `d` given the *source's* chosen frontier `g`:
+/// static projections compute it; per-checkpoint projections look it up in
+/// the source's stored metadata (g is always one of the source's
+/// checkpoints, or ∅/⊤).
+fn phi_of_edge(input: &RollbackInput, d: EdgeId, g: &Frontier) -> Frontier {
+    let proj = input.topo.projection(d);
+    if let Some(f) = proj.apply(g) {
+        return f;
+    }
+    // PerCheckpoint: find the metadata for g at the source.
+    if g.is_bottom() {
+        return Frontier::Bottom;
+    }
+    // ⊤ means the source keeps its whole history: everything it ever sent
+    // is fixed.
+    if g.is_top() {
+        return Frontier::Top;
+    }
+    let src = input.topo.src(d);
+    match &input.avail[src.0 as usize] {
+        // A stateless processor never recorded per-checkpoint counts; the
+        // only sound estimate for a mid-range frontier is ∅ (maximally
+        // conservative, §3.2: "we could always set φ(e)(f) = ∅").
+        Available::Any { .. } => Frontier::Bottom,
+        Available::Chain { chain, .. } => chain
+            .iter()
+            .find(|c| &c.f == g)
+            .unwrap_or_else(|| panic!("φ lookup: frontier {g} is not a checkpoint of {src}"))
+            .phi_of(d)
+            .clone(),
+    }
+}
+
+/// The upper bound every in-edge imposes on an Any-processor's frontier
+/// (constraints 3 and 4 with M̄ = N̄ = g).
+fn any_upper_bound(input: &RollbackInput, p: ProcId, f: &[Frontier], f_n: &[Frontier]) -> Frontier {
+    let dedup_completed = match &input.avail[p.0 as usize] {
+        Available::Any { dedup_completed, .. } => dedup_completed.clone(),
+        _ => None,
+    };
+    let mut g = Frontier::Top;
+    match &dedup_completed {
+        Some(completed) => {
+            // Epoch-idempotent: completed times need no upstream coverage
+            // (re-deliveries are dropped) and the notification promise is
+            // enforced mechanically. Consumed-but-incomplete times cannot
+            // be vouched for, so unless every upstream stays at ⊤ (no
+            // re-execution at all), cap at the completed frontier.
+            let all_top = input
+                .topo
+                .in_edges(p)
+                .iter()
+                .all(|&d| f[input.topo.src(d).0 as usize].is_top());
+            if !all_top {
+                g = g.intersect(completed);
+            }
+        }
+        None => {
+            for &d in input.topo.in_edges(p) {
+                let src = input.topo.src(d);
+                g = g.intersect(&phi_of_edge(input, d, &f[src.0 as usize]));
+                g = g.intersect(&phi_of_edge(input, d, &f_n[src.0 as usize]));
+            }
+        }
+    }
+    // Constraint 2: D̄(e,g) ⊆ f(dst(e)). For Any processors D̄(e,g) is ∅
+    // when logging, φ(e)(g) otherwise — in which case the bound is the
+    // projection preimage of f(dst(e)).
+    let logs = matches!(input.avail[p.0 as usize], Available::Any { logs_outputs: true, .. });
+    if !logs {
+        let depth = match input.topo.domain(p) {
+            TimeDomain::Structured { depth } => depth,
+            TimeDomain::Seq => 0,
+        };
+        for &e in input.topo.out_edges(p) {
+            let dst = input.topo.dst(e);
+            let fd = &f[dst.0 as usize];
+            let pre = match input.topo.projection(e).preimage(fd, depth) {
+                Some(pre) => pre,
+                // Per-checkpoint projection with no recorded counts: only
+                // the trivial bounds are sound — ⊤ when the destination
+                // keeps everything, ∅ otherwise (the destination would
+                // need messages this processor cannot identify).
+                None if fd.is_top() => Frontier::Top,
+                None => Frontier::Bottom,
+            };
+            g = g.intersect(&pre);
+        }
+    }
+    g
+}
+
+/// Check constraints 2–4 for chain element `c` at processor `p` under the
+/// current assignment. Returns the implied `f_n(p)` on success.
+fn chain_elem_ok(
+    input: &RollbackInput,
+    p: ProcId,
+    c: &CkptMeta,
+    f: &[Frontier],
+    f_n: &[Frontier],
+    dedup: Option<&Frontier>,
+) -> Option<Frontier> {
+    // Constraint 2: discarded messages.
+    for &e in input.topo.out_edges(p) {
+        if !c.d_bar_of(e).is_subset(&f[input.topo.dst(e).0 as usize]) {
+            return None;
+        }
+    }
+    if let Some(completed) = dedup {
+        // Epoch-idempotent: constraints 3 and 4 are enforced mechanically
+        // by completed-time dedup for everything *complete*. True
+        // checkpoints are complete by construction; the ⊤ live
+        // pseudo-checkpoint additionally reflects consumed-but-incomplete
+        // events, which upstream must still fix (constraint 3 on the
+        // portion beyond `completed`).
+        if c.f.is_top() {
+            for &d in input.topo.in_edges(p) {
+                let src = input.topo.src(d);
+                let cover =
+                    phi_of_edge(input, d, &f[src.0 as usize]).union(completed);
+                if !c.m_bar_of(d).is_subset(&cover) {
+                    return None;
+                }
+            }
+            let g_n = completed.intersect(&f_n[p.0 as usize]);
+            if !completed.is_subset(&g_n) {
+                return None;
+            }
+            return Some(g_n);
+        }
+        return Some(c.f.intersect(&f_n[p.0 as usize]));
+    }
+    // Constraint 3: delivered messages.
+    for &d in input.topo.in_edges(p) {
+        let src = input.topo.src(d);
+        if !c.m_bar_of(d).is_subset(&phi_of_edge(input, d, &f[src.0 as usize])) {
+            return None;
+        }
+    }
+    // Constraint 4: notification frontier. g_n = f'(p) ∩ f_n(p) ∩
+    // ∩_d φ(d)(f_n(src(d))) must contain N̄(p, f'(p)).
+    let mut g_n = c.f.intersect(&f_n[p.0 as usize]);
+    for &d in input.topo.in_edges(p) {
+        let src = input.topo.src(d);
+        g_n = g_n.intersect(&phi_of_edge(input, d, &f_n[src.0 as usize]));
+    }
+    if !c.n_bar.is_subset(&g_n) {
+        return None;
+    }
+    Some(g_n)
+}
+
+/// One per-processor update of the Fig. 6 fixed point. Returns the new
+/// `(f(p), f_n(p))`.
+fn update_proc(
+    input: &RollbackInput,
+    p: ProcId,
+    f: &[Frontier],
+    f_n: &[Frontier],
+) -> (Frontier, Frontier) {
+    match &input.avail[p.0 as usize] {
+        Available::Any { .. } => {
+            // f'(p) = the intersection of all upper bounds; N̄ = f' ⊆ g_n
+            // = f' is immediate, so f_n' = f'.
+            let g = f[p.0 as usize].intersect(&any_upper_bound(input, p, f, f_n));
+            let g_n = g.intersect(&f_n[p.0 as usize]);
+            // For Any processors N̄(p,g) = g must be ⊆ g_n; shrink g to
+            // g_n to satisfy it (they are equal in all but pathological
+            // assignments).
+            (g_n.clone(), g_n)
+        }
+        Available::Chain { chain, dedup } => {
+            // Largest chain element ⊆ f(p) passing all constraints; ∅ is
+            // the always-valid fallback.
+            for c in chain.iter().rev() {
+                if !c.f.is_subset(&f[p.0 as usize]) {
+                    continue;
+                }
+                if let Some(g_n) = chain_elem_ok(input, p, c, f, f_n, dedup.as_ref()) {
+                    return (c.f.clone(), g_n);
+                }
+            }
+            (Frontier::Bottom, Frontier::Bottom)
+        }
+    }
+}
+
+/// Batch solve: run the Fig. 6 fixed point to completion.
+pub fn choose_frontiers(input: &RollbackInput) -> RollbackPlan {
+    let n = input.topo.num_procs();
+    // Initially f(p) = f_n(p) = max F*(p).
+    let mut f: Vec<Frontier> = (0..n).map(|i| input.avail[i].max_frontier()).collect();
+    let mut f_n = f.clone();
+
+    let mut work: VecDeque<ProcId> = input.topo.proc_ids().collect();
+    let mut queued: BTreeSet<ProcId> = work.iter().copied().collect();
+    let mut iterations = 0usize;
+    while let Some(p) = work.pop_front() {
+        queued.remove(&p);
+        iterations += 1;
+        assert!(
+            iterations <= 4 * n * n * (input.topo.num_edges() + n) + 64,
+            "rollback fixed point failed to converge"
+        );
+        let (nf, nfn) = update_proc(input, p, &f, &f_n);
+        debug_assert!(nf.is_subset(&f[p.0 as usize]), "frontier grew at {p}");
+        if nf != f[p.0 as usize] || nfn != f_n[p.0 as usize] {
+            f[p.0 as usize] = nf;
+            f_n[p.0 as usize] = nfn;
+            // Constraints couple p with both its upstream and downstream
+            // neighbours; re-examine them.
+            for &e in input.topo.out_edges(p) {
+                let q = input.topo.dst(e);
+                if queued.insert(q) {
+                    work.push_back(q);
+                }
+            }
+            for &d in input.topo.in_edges(p) {
+                let q = input.topo.src(d);
+                if queued.insert(q) {
+                    work.push_back(q);
+                }
+            }
+        }
+    }
+    RollbackPlan { f, f_n }
+}
+
+/// Verify that an assignment satisfies constraints 2–4 (used by the test
+/// suite and the property tests; constraint 1 is a harness invariant).
+pub fn verify_plan(input: &RollbackInput, plan: &RollbackPlan) -> Result<(), String> {
+    for p in input.topo.proc_ids() {
+        let fp = &plan.f[p.0 as usize];
+        let fnp = &plan.f_n[p.0 as usize];
+        if !fnp.is_subset(fp) {
+            return Err(format!("{p}: f_n ⊄ f"));
+        }
+        let (n_bar, d_bar_of, m_bar_of): (
+            Frontier,
+            Box<dyn Fn(EdgeId) -> Frontier>,
+            Box<dyn Fn(EdgeId) -> Frontier>,
+        ) = match &input.avail[p.0 as usize] {
+            Available::Any { logs_outputs, .. } => {
+                let fp2 = fp.clone();
+                let fp3 = fp.clone();
+                let logs = *logs_outputs;
+                let topo = input.topo;
+                (
+                    fp.clone(),
+                    Box::new(move |e| {
+                        if logs {
+                            Frontier::Bottom
+                        } else {
+                            topo.projection(e).apply(&fp2).expect("static projection")
+                        }
+                    }),
+                    Box::new(move |_| fp3.clone()),
+                )
+            }
+            Available::Chain { chain, .. } => {
+                if fp.is_bottom() {
+                    continue; // ∅ satisfies everything.
+                }
+                let c = chain
+                    .iter()
+                    .find(|c| &c.f == fp)
+                    .ok_or_else(|| format!("{p}: chosen frontier {fp} not in chain"))?
+                    .clone();
+                let c2 = c.clone();
+                (
+                    c.n_bar.clone(),
+                    Box::new(move |e| c.d_bar_of(e).clone()),
+                    Box::new(move |d| c2.m_bar_of(d).clone()),
+                )
+            }
+        };
+        for &e in input.topo.out_edges(p) {
+            let dst = input.topo.dst(e);
+            if !d_bar_of(e).is_subset(&plan.f[dst.0 as usize]) {
+                return Err(format!("{p}: D̄({e}) ⊄ f({dst})"));
+            }
+        }
+        match input.avail[p.0 as usize].dedup_completed() {
+            Some(completed) => {
+                // Epoch-idempotent: only the consumed-but-incomplete
+                // portion of a ⊤ assignment needs upstream coverage.
+                if fp.is_top() {
+                    for &d in input.topo.in_edges(p) {
+                        let src = input.topo.src(d);
+                        let cover = phi_of_edge(input, d, &plan.f[src.0 as usize])
+                            .union(completed);
+                        if !m_bar_of(d).is_subset(&cover) {
+                            return Err(format!("{p}: M̄({d}) ⊄ φ(f(src)) ∪ completed"));
+                        }
+                    }
+                }
+            }
+            None => {
+                for &d in input.topo.in_edges(p) {
+                    let src = input.topo.src(d);
+                    if !m_bar_of(d).is_subset(&phi_of_edge(input, d, &plan.f[src.0 as usize])) {
+                        return Err(format!("{p}: M̄({d}) ⊄ φ(f({src}))"));
+                    }
+                    if !fnp.is_subset(&phi_of_edge(input, d, &plan.f_n[src.0 as usize])) {
+                        return Err(format!("{p}: f_n ⊄ φ(f_n({src}))"));
+                    }
+                }
+                if !n_bar.is_subset(fnp) {
+                    return Err(format!("{p}: N̄ ⊄ f_n"));
+                }
+            }
+        }
+    }
+    Ok(())
+}
+
+/// Incremental *increase* propagation for the GC monitor (§4.2): after new
+/// checkpoints are added at `changed`, grow the previous solution. Valid
+/// because adding elements to F*(p) never shrinks any f(p′) (§3.6's
+/// monotonicity remark; the property suite checks equality with batch
+/// solves on random graphs).
+///
+/// Two phases: (1) lift the *slack-connected* region around `changed` —
+/// processors whose chain maximum exceeds their current assignment — to
+/// their optimistic maxima; (2) run the decreasing fixed point over that
+/// region (plus its boundary, whose notification frontiers may rise).
+/// A localized Ξ arrival that cannot move the watermark touches O(slack
+/// region), not the whole graph.
+/// Returns the processors whose `f` actually changed (for the monitor's
+/// GC-action diff — avoids an O(n) plan comparison per update).
+pub fn grow_frontiers(
+    input: &RollbackInput,
+    plan: &mut RollbackPlan,
+    changed: ProcId,
+) -> Vec<ProcId> {
+    // Saved entry values of everything we touch (lazily captured).
+    let mut saved: std::collections::BTreeMap<ProcId, Frontier> = Default::default();
+    // Phase 1: lift the slack-connected region.
+    let mut seen: BTreeSet<ProcId> = BTreeSet::new();
+    let mut stack = vec![changed];
+    let mut region: Vec<ProcId> = Vec::new();
+    while let Some(p) = stack.pop() {
+        if !seen.insert(p) {
+            continue;
+        }
+        let i = p.0 as usize;
+        let max = input.avail[i].max_frontier();
+        if max.is_subset(&plan.f[i]) {
+            continue; // no slack: cannot rise, does not propagate lift
+        }
+        saved.entry(p).or_insert_with(|| plan.f[i].clone());
+        plan.f[i] = max.clone();
+        plan.f_n[i] = max;
+        region.push(p);
+        for &e in input.topo.out_edges(p) {
+            stack.push(input.topo.dst(e));
+        }
+        for &d in input.topo.in_edges(p) {
+            stack.push(input.topo.src(d));
+        }
+    }
+    if region.is_empty() {
+        return Vec::new();
+    }
+    // Phase 2: decreasing fixed point, seeded with the lifted region and
+    // its boundary (whose f_n may rise via upstream lifts).
+    let mut work: VecDeque<ProcId> = VecDeque::new();
+    let mut queued: BTreeSet<ProcId> = BTreeSet::new();
+    for &p in &region {
+        if queued.insert(p) {
+            work.push_back(p);
+        }
+        for &e in input.topo.out_edges(p) {
+            let q = input.topo.dst(e);
+            if queued.insert(q) {
+                work.push_back(q);
+            }
+        }
+    }
+    while let Some(p) = work.pop_front() {
+        queued.remove(&p);
+        let (nf, nfn) = update_proc(input, p, &plan.f, &plan.f_n);
+        if nf != plan.f[p.0 as usize] || nfn != plan.f_n[p.0 as usize] {
+            saved.entry(p).or_insert_with(|| plan.f[p.0 as usize].clone());
+            plan.f[p.0 as usize] = nf;
+            plan.f_n[p.0 as usize] = nfn;
+            for &e in input.topo.out_edges(p) {
+                let q = input.topo.dst(e);
+                if queued.insert(q) {
+                    work.push_back(q);
+                }
+            }
+            for &d in input.topo.in_edges(p) {
+                let q = input.topo.src(d);
+                if queued.insert(q) {
+                    work.push_back(q);
+                }
+            }
+        }
+    }
+    saved
+        .into_iter()
+        .filter(|(p, old)| &plan.f[p.0 as usize] != old)
+        .map(|(p, _)| p)
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::{GraphBuilder, Projection};
+    use crate::time::TimeDomain;
+    use std::collections::BTreeMap;
+
+    /// Chain element for an epoch processor that has processed and
+    /// checkpointed through epoch `e`, discarding its sent messages.
+    fn epoch_ckpt(
+        e: u64,
+        in_edges: &[EdgeId],
+        out_edges: &[EdgeId],
+        logs: bool,
+    ) -> CkptMeta {
+        let f = Frontier::upto_epoch(e);
+        CkptMeta {
+            f: f.clone(),
+            n_bar: f.clone(),
+            m_bar: in_edges.iter().map(|d| (*d, f.clone())).collect(),
+            d_bar: out_edges
+                .iter()
+                .map(|o| (*o, if logs { Frontier::Bottom } else { f.clone() }))
+                .collect(),
+            phi: out_edges.iter().map(|o| (*o, f.clone())).collect(),
+        }
+    }
+
+    /// a → b → c epoch pipeline.
+    fn pipeline3() -> (crate::graph::Topology, Vec<EdgeId>) {
+        let mut g = GraphBuilder::new();
+        let a = g.add_proc("a", TimeDomain::EPOCH);
+        let b = g.add_proc("b", TimeDomain::EPOCH);
+        let c = g.add_proc("c", TimeDomain::EPOCH);
+        let e0 = g.connect(a, b, Projection::Identity);
+        let e1 = g.connect(b, c, Projection::Identity);
+        (g.build().unwrap(), vec![e0, e1])
+    }
+
+    #[test]
+    fn all_checkpointed_at_same_epoch() {
+        let (topo, es) = pipeline3();
+        let avail = vec![
+            Available::chain(vec![epoch_ckpt(2, &[], &[es[0]], false)]),
+            Available::chain(vec![epoch_ckpt(2, &[es[0]], &[es[1]], false)]),
+            Available::chain(vec![epoch_ckpt(2, &[es[1]], &[], false)]),
+        ];
+        let input = RollbackInput { topo: &topo, avail: &avail };
+        let plan = choose_frontiers(&input);
+        assert!(verify_plan(&input, &plan).is_ok());
+        for f in &plan.f {
+            assert_eq!(*f, Frontier::upto_epoch(2));
+        }
+    }
+
+    #[test]
+    fn mismatched_checkpoints_pull_down() {
+        // b only has epoch 1; a and c have epoch 2. a must come down to 1
+        // (its discarded messages at epoch 2 would be lost to b); c must
+        // come down to 1 (its delivered epoch-2 messages aren't fixed).
+        let (topo, es) = pipeline3();
+        let avail = vec![
+            Available::chain(vec![
+                epoch_ckpt(1, &[], &[es[0]], false),
+                epoch_ckpt(2, &[], &[es[0]], false),
+            ]),
+            Available::chain(vec![epoch_ckpt(1, &[es[0]], &[es[1]], false)]),
+            Available::chain(vec![
+                epoch_ckpt(1, &[es[1]], &[], false),
+                epoch_ckpt(2, &[es[1]], &[], false),
+            ]),
+        ];
+        let input = RollbackInput { topo: &topo, avail: &avail };
+        let plan = choose_frontiers(&input);
+        assert!(verify_plan(&input, &plan).is_ok());
+        assert_eq!(plan.f[0], Frontier::upto_epoch(1));
+        assert_eq!(plan.f[1], Frontier::upto_epoch(1));
+        assert_eq!(plan.f[2], Frontier::upto_epoch(1));
+    }
+
+    #[test]
+    fn logging_firewall_decouples_upstream() {
+        // b logs its outputs (RDD firewall): even though c failed (only ∅
+        // available), a and b keep their latest checkpoints (Fig. 7b).
+        let (topo, es) = pipeline3();
+        let avail = vec![
+            Available::chain(vec![epoch_ckpt(2, &[], &[es[0]], true)]),
+            Available::chain(vec![epoch_ckpt(2, &[es[0]], &[es[1]], true)]),
+            Available::chain(vec![]), // failed: only ∅
+        ];
+        let input = RollbackInput { topo: &topo, avail: &avail };
+        let plan = choose_frontiers(&input);
+        assert!(verify_plan(&input, &plan).is_ok());
+        assert_eq!(plan.f[0], Frontier::upto_epoch(2));
+        assert_eq!(plan.f[1], Frontier::upto_epoch(2));
+        assert_eq!(plan.f[2], Frontier::Bottom);
+    }
+
+    #[test]
+    fn discarding_upstream_is_dragged_down_by_failure() {
+        // Nobody logs: c's failure drags b to ∅ (b's discarded messages
+        // can't be resupplied), which drags a to ∅ in turn.
+        let (topo, es) = pipeline3();
+        let avail = vec![
+            Available::chain(vec![epoch_ckpt(2, &[], &[es[0]], false)]),
+            Available::chain(vec![epoch_ckpt(2, &[es[0]], &[es[1]], false)]),
+            Available::chain(vec![]),
+        ];
+        let input = RollbackInput { topo: &topo, avail: &avail };
+        let plan = choose_frontiers(&input);
+        assert!(verify_plan(&input, &plan).is_ok());
+        assert_eq!(plan.f[0], Frontier::Bottom);
+        assert_eq!(plan.f[1], Frontier::Bottom);
+        assert_eq!(plan.f[2], Frontier::Bottom);
+    }
+
+    #[test]
+    fn any_frontier_stateless_follows_neighbours() {
+        // a (chain at 1) → b (stateless Any) → c (chain at 3): b lands at
+        // φ(f(a)) ∩ … = epoch 1; c pulled to 1 as well.
+        let (topo, es) = pipeline3();
+        let avail = vec![
+            Available::chain(vec![epoch_ckpt(1, &[], &[es[0]], false)]),
+            Available::any(false),
+            Available::chain(vec![
+                epoch_ckpt(1, &[es[1]], &[], false),
+                epoch_ckpt(3, &[es[1]], &[], false),
+            ]),
+        ];
+        let input = RollbackInput { topo: &topo, avail: &avail };
+        let plan = choose_frontiers(&input);
+        assert!(verify_plan(&input, &plan).is_ok());
+        assert_eq!(plan.f[0], Frontier::upto_epoch(1));
+        assert_eq!(plan.f[1], Frontier::upto_epoch(1));
+        assert_eq!(plan.f[2], Frontier::upto_epoch(1));
+    }
+
+    #[test]
+    fn incremental_growth_matches_batch() {
+        let (topo, es) = pipeline3();
+        let mut avail = vec![
+            Available::chain(vec![epoch_ckpt(1, &[], &[es[0]], false)]),
+            Available::chain(vec![epoch_ckpt(1, &[es[0]], &[es[1]], false)]),
+            Available::chain(vec![epoch_ckpt(1, &[es[1]], &[], false)]),
+        ];
+        let input = RollbackInput { topo: &topo, avail: &avail };
+        let mut plan = choose_frontiers(&input);
+        assert_eq!(plan.f[1], Frontier::upto_epoch(1));
+        // b persists a new checkpoint at epoch 3 — nothing should move
+        // (a's and c's chains still cap at 1… b itself can move to 3? No:
+        // b's m_bar(3) ⊆ φ(f(a)) = ↓1 fails).
+        if let Available::Chain { chain, .. } = &mut avail[1] {
+            chain.push(epoch_ckpt(3, &[es[0]], &[es[1]], false));
+        }
+        let input = RollbackInput { topo: &topo, avail: &avail };
+        grow_frontiers(&input, &mut plan, ProcId(1));
+        let batch = choose_frontiers(&input);
+        assert_eq!(plan, batch);
+        // Now a and c catch up to 3: everyone should reach 3.
+        if let Available::Chain { chain, .. } = &mut avail[0] {
+            chain.push(epoch_ckpt(3, &[], &[es[0]], false));
+        }
+        if let Available::Chain { chain, .. } = &mut avail[2] {
+            chain.push(epoch_ckpt(3, &[es[1]], &[], false));
+        }
+        let input = RollbackInput { topo: &topo, avail: &avail };
+        grow_frontiers(&input, &mut plan, ProcId(0));
+        grow_frontiers(&input, &mut plan, ProcId(2));
+        let batch = choose_frontiers(&input);
+        assert_eq!(plan, batch);
+        assert_eq!(plan.f[1], Frontier::upto_epoch(3));
+    }
+
+    /// The Fig. 5 notification-hazard graph: p → r, q → r, r → x, and a
+    /// direct q → x edge is NOT present — the hazard flows through r.
+    /// p and q got notifications at time 1; x received a notification at
+    /// time 1 after r forwarded p's message. Without the f_n constraints
+    /// f(q) = ∅ with f(x) ∋ 1 would be accepted; with them it is not.
+    #[test]
+    fn fig5_notification_hazard_blocked() {
+        let mut g = GraphBuilder::new();
+        let p = g.add_proc("p", TimeDomain::EPOCH);
+        let q = g.add_proc("q", TimeDomain::EPOCH);
+        let r = g.add_proc("r", TimeDomain::EPOCH);
+        let x = g.add_proc("x", TimeDomain::EPOCH);
+        let e1 = g.connect(p, r, Projection::Identity);
+        let e2 = g.connect(q, r, Projection::Identity);
+        let e3 = g.connect(r, x, Projection::Identity);
+        let topo = g.build().unwrap();
+
+        let f1 = Frontier::upto_epoch(1);
+        // q failed: only ∅ available (it had processed the time-1
+        // notification but never checkpointed).
+        // p's checkpoint: processed notification at 1, sent a logged
+        // message at 1 on e1.
+        let p_ck = CkptMeta {
+            f: f1.clone(),
+            n_bar: f1.clone(),
+            m_bar: BTreeMap::new(),
+            d_bar: [(e1, Frontier::Bottom)].into_iter().collect(),
+            phi: [(e1, f1.clone())].into_iter().collect(),
+        };
+        // r: received p's message at 1, sent nothing, logged nothing.
+        let r_ck = CkptMeta {
+            f: f1.clone(),
+            n_bar: Frontier::Bottom,
+            m_bar: [(e1, f1.clone()), (e2, Frontier::Bottom)].into_iter().collect(),
+            d_bar: [(e3, Frontier::Bottom)].into_iter().collect(),
+            phi: [(e3, f1.clone())].into_iter().collect(),
+        };
+        // x: processed a notification for time 1 (N̄ = ↓1).
+        let x_ck = CkptMeta {
+            f: f1.clone(),
+            n_bar: f1.clone(),
+            m_bar: [(e3, Frontier::Bottom)].into_iter().collect(),
+            d_bar: BTreeMap::new(),
+            phi: BTreeMap::new(),
+        };
+        let avail = vec![
+            Available::chain(vec![p_ck]),
+            Available::chain(vec![]), // q failed → ∅
+            Available::chain(vec![r_ck]),
+            Available::chain(vec![x_ck]),
+        ];
+        let input = RollbackInput { topo: &topo, avail: &avail };
+        let plan = choose_frontiers(&input);
+        assert!(verify_plan(&input, &plan).is_ok());
+        // q is at ∅, so f_n(q) = ∅ ⇒ f_n(r) = ∅ ⇒ x's N̄ = ↓1 ⊄ f_n ⇒ x
+        // must fall to ∅: the Fig. 5 inconsistency is excluded.
+        assert_eq!(plan.f[1], Frontier::Bottom, "q at ∅");
+        assert_eq!(plan.f[3], Frontier::Bottom, "x forced to ∅ by notification frontiers");
+        // Without the notification constraint x would have (wrongly)
+        // stayed at ↓1: demonstrate by checking constraints 2–3 alone
+        // would accept f(x) = ↓1.
+        let lax = RollbackPlan {
+            f: vec![f1.clone(), Frontier::Bottom, f1.clone(), f1.clone()],
+            f_n: vec![f1.clone(), Frontier::Bottom, f1.clone(), f1.clone()],
+        };
+        let err = verify_plan(&input, &lax).unwrap_err();
+        assert!(err.contains("f_n"), "rejected specifically by the f_n constraints: {err}");
+    }
+
+    #[test]
+    fn loop_rollback_uses_projections() {
+        // Fig. 7(c)-style: p →Enter→ body(loop) →Exit→ y, with feedback.
+        // body checkpointed (1,∞) (epoch 0..1 complete for all
+        // iterations); y failed. p logs its sends into the loop.
+        let mut g = GraphBuilder::new();
+        let p = g.add_proc("p", TimeDomain::EPOCH);
+        let body = g.add_proc("body", TimeDomain::Structured { depth: 1 });
+        let y = g.add_proc("y", TimeDomain::EPOCH);
+        let e_in = g.connect(p, body, Projection::LoopEnter);
+        let e_fb = g.connect(body, body, Projection::LoopFeedback);
+        let e_out = g.connect(body, y, Projection::LoopExit);
+        let topo = g.build().unwrap();
+
+        let f_p = Frontier::upto_epoch(1);
+        let f_body = Frontier::down_close([crate::time::Time::structured(
+            1,
+            &[crate::time::CTR_INF],
+        )]);
+        let p_ck = CkptMeta {
+            f: f_p.clone(),
+            n_bar: f_p.clone(),
+            m_bar: BTreeMap::new(),
+            d_bar: [(e_in, Frontier::Bottom)].into_iter().collect(), // logs
+            phi: [(e_in, Projection::LoopEnter.apply(&f_p).unwrap())].into_iter().collect(),
+        };
+        let body_ck = CkptMeta {
+            f: f_body.clone(),
+            n_bar: f_body.clone(),
+            m_bar: [(e_in, f_body.clone()), (e_fb, f_body.clone())].into_iter().collect(),
+            d_bar: [
+                (e_fb, Projection::LoopFeedback.apply(&f_body).unwrap()),
+                (e_out, Projection::LoopExit.apply(&f_body).unwrap()),
+            ]
+            .into_iter()
+            .collect(),
+            phi: [
+                (e_fb, Projection::LoopFeedback.apply(&f_body).unwrap()),
+                (e_out, Projection::LoopExit.apply(&f_body).unwrap()),
+            ]
+            .into_iter()
+            .collect(),
+        };
+        let avail = vec![
+            Available::chain(vec![p_ck]),
+            Available::chain(vec![body_ck]),
+            Available::chain(vec![]), // y failed
+        ];
+        let input = RollbackInput { topo: &topo, avail: &avail };
+        let plan = choose_frontiers(&input);
+        assert!(verify_plan(&input, &plan).is_ok());
+        // body discarded messages to y at epochs ≤ 1 (LoopExit of its
+        // frontier), and y is at ∅ ⇒ body must fall to ∅; p survives at
+        // its checkpoint because it logs into the loop.
+        assert_eq!(plan.f[2], Frontier::Bottom);
+        assert_eq!(plan.f[1], Frontier::Bottom);
+        assert_eq!(plan.f[0], f_p, "p's log firewalls it from the loop's rollback");
+    }
+
+    #[test]
+    fn top_pseudo_checkpoint_for_non_failed() {
+        // §4.4: non-failed processors get ⊤; with everyone logging, a
+        // failed c leaves a and b untouched at ⊤.
+        let (topo, es) = pipeline3();
+        let top_a = CkptMeta {
+            f: Frontier::Top,
+            n_bar: Frontier::upto_epoch(5),
+            m_bar: BTreeMap::new(),
+            d_bar: [(es[0], Frontier::Bottom)].into_iter().collect(),
+            phi: [(es[0], Frontier::Top)].into_iter().collect(),
+        };
+        let top_b = CkptMeta {
+            f: Frontier::Top,
+            n_bar: Frontier::upto_epoch(5),
+            m_bar: [(es[0], Frontier::upto_epoch(5))].into_iter().collect(),
+            d_bar: [(es[1], Frontier::Bottom)].into_iter().collect(),
+            phi: [(es[1], Frontier::Top)].into_iter().collect(),
+        };
+        let avail = vec![
+            Available::chain(vec![top_a]),
+            Available::chain(vec![top_b]),
+            Available::chain(vec![]),
+        ];
+        let input = RollbackInput { topo: &topo, avail: &avail };
+        let plan = choose_frontiers(&input);
+        assert!(verify_plan(&input, &plan).is_ok());
+        assert!(plan.f[0].is_top());
+        assert!(plan.f[1].is_top());
+        assert!(plan.f[2].is_bottom());
+    }
+}

@@ -1,0 +1,185 @@
+//! Durable-storage substrate.
+//!
+//! The paper assumes "reliably persisting state [is] adequately covered by
+//! existing techniques" (§1) and builds on acknowledged writes (§4.2: a
+//! processor sends Ξ(p,f) to the monitor only after storage acknowledges
+//! the checkpoint, state, and log). We model exactly that contract:
+//! a key-value blob store with explicit acknowledgement accounting,
+//! injectable write latency (in virtual cost units, so benches can charge
+//! eager policies for their synchronous writes), and an optional
+//! file-system backing for the examples.
+
+use std::collections::BTreeMap;
+use std::sync::{Arc, Mutex};
+
+/// A storage key: (processor, kind, discriminator).
+#[derive(Clone, Debug, PartialEq, Eq, PartialOrd, Ord)]
+pub struct Key {
+    pub proc: u32,
+    pub kind: Kind,
+    pub tag: u64,
+}
+
+/// What a blob contains.
+#[derive(Copy, Clone, Debug, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Kind {
+    /// Checkpoint metadata Ξ(p,f).
+    Meta,
+    /// Checkpoint state S(p,f).
+    State,
+    /// A logged message (one entry of L(e,·)).
+    LogEntry,
+    /// Full-history event (H(p) entry).
+    HistoryEvent,
+}
+
+/// Write/read accounting, for the policy-overhead benches.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct StorageStats {
+    pub writes: u64,
+    pub bytes_written: u64,
+    pub deletes: u64,
+    pub reads: u64,
+    /// Σ of per-write virtual latency (cost units): eager policies pay
+    /// this on the critical path; lazy ones off it.
+    pub virtual_latency: u64,
+}
+
+/// In-memory durable store with ack semantics. Cloneable handle.
+#[derive(Clone)]
+pub struct Store {
+    inner: Arc<Mutex<Inner>>,
+}
+
+struct Inner {
+    blobs: BTreeMap<Key, Vec<u8>>,
+    stats: StorageStats,
+    /// Virtual cost charged per write (simulates fsync/replication).
+    write_cost: u64,
+}
+
+impl Store {
+    /// A store charging `write_cost` virtual latency units per write.
+    pub fn new(write_cost: u64) -> Store {
+        Store {
+            inner: Arc::new(Mutex::new(Inner {
+                blobs: BTreeMap::new(),
+                stats: StorageStats::default(),
+                write_cost,
+            })),
+        }
+    }
+
+    /// Persist a blob; returns once "acknowledged" (synchronously here,
+    /// with the virtual latency charged to the stats).
+    pub fn put(&self, key: Key, value: Vec<u8>) {
+        let mut g = self.inner.lock().unwrap();
+        g.stats.writes += 1;
+        g.stats.bytes_written += value.len() as u64;
+        g.stats.virtual_latency += g.write_cost;
+        g.blobs.insert(key, value);
+    }
+
+    pub fn get(&self, key: &Key) -> Option<Vec<u8>> {
+        let mut g = self.inner.lock().unwrap();
+        g.stats.reads += 1;
+        g.blobs.get(key).cloned()
+    }
+
+    pub fn delete(&self, key: &Key) {
+        let mut g = self.inner.lock().unwrap();
+        if g.blobs.remove(key).is_some() {
+            g.stats.deletes += 1;
+        }
+    }
+
+    /// Delete all blobs for `proc` matching `pred` (garbage collection).
+    pub fn delete_matching<F: FnMut(&Key) -> bool>(&self, proc: u32, mut pred: F) -> usize {
+        let mut g = self.inner.lock().unwrap();
+        let doomed: Vec<Key> = g
+            .blobs
+            .keys()
+            .filter(|k| k.proc == proc && pred(k))
+            .cloned()
+            .collect();
+        let n = doomed.len();
+        for k in &doomed {
+            g.blobs.remove(k);
+        }
+        g.stats.deletes += n as u64;
+        n
+    }
+
+    /// Keys currently stored for `proc` of a given kind.
+    pub fn keys_for(&self, proc: u32, kind: Kind) -> Vec<Key> {
+        let g = self.inner.lock().unwrap();
+        g.blobs.keys().filter(|k| k.proc == proc && k.kind == kind).cloned().collect()
+    }
+
+    /// Total bytes resident (for GC benches).
+    pub fn resident_bytes(&self) -> u64 {
+        let g = self.inner.lock().unwrap();
+        g.blobs.values().map(|v| v.len() as u64).sum()
+    }
+
+    pub fn stats(&self) -> StorageStats {
+        self.inner.lock().unwrap().stats.clone()
+    }
+
+    pub fn reset_stats(&self) {
+        self.inner.lock().unwrap().stats = StorageStats::default();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn k(proc: u32, kind: Kind, tag: u64) -> Key {
+        Key { proc, kind, tag }
+    }
+
+    #[test]
+    fn put_get_roundtrip() {
+        let s = Store::new(5);
+        s.put(k(1, Kind::State, 0), vec![1, 2, 3]);
+        assert_eq!(s.get(&k(1, Kind::State, 0)), Some(vec![1, 2, 3]));
+        assert_eq!(s.get(&k(1, Kind::State, 1)), None);
+        let st = s.stats();
+        assert_eq!(st.writes, 1);
+        assert_eq!(st.bytes_written, 3);
+        assert_eq!(st.virtual_latency, 5);
+        assert_eq!(st.reads, 2);
+    }
+
+    #[test]
+    fn delete_matching_gc() {
+        let s = Store::new(0);
+        for tag in 0..5 {
+            s.put(k(1, Kind::Meta, tag), vec![0]);
+        }
+        s.put(k(2, Kind::Meta, 0), vec![0]);
+        let n = s.delete_matching(1, |key| key.tag < 3);
+        assert_eq!(n, 3);
+        assert_eq!(s.keys_for(1, Kind::Meta).len(), 2);
+        assert_eq!(s.keys_for(2, Kind::Meta).len(), 1);
+    }
+
+    #[test]
+    fn resident_bytes_tracks_contents() {
+        let s = Store::new(0);
+        s.put(k(1, Kind::State, 0), vec![0; 100]);
+        s.put(k(1, Kind::State, 1), vec![0; 50]);
+        assert_eq!(s.resident_bytes(), 150);
+        s.delete(&k(1, Kind::State, 0));
+        assert_eq!(s.resident_bytes(), 50);
+    }
+
+    #[test]
+    fn shared_handle_sees_writes() {
+        let s = Store::new(0);
+        let s2 = s.clone();
+        s.put(k(9, Kind::LogEntry, 7), vec![42]);
+        assert_eq!(s2.get(&k(9, Kind::LogEntry, 7)), Some(vec![42]));
+    }
+}

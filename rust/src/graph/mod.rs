@@ -1,0 +1,538 @@
+//! Dataflow topology: processors, edges, and the per-edge *projection
+//! functions* φ(e) that bridge time domains (§3.2).
+//!
+//! A processing node in the dataflow graph is a *processor* (the paper's
+//! terminology); each processor lives in a [`TimeDomain`]. Every directed
+//! edge `e: p → q` carries a projection φ(e) mapping frontiers at `p` into
+//! the time domain of `q`, conservatively under-approximating the times
+//! that are "fixed" on `e` by `p`'s rollback: `p` is guaranteed not to
+//! have produced any message with time in φ(e)(f) from an event outside f.
+//!
+//! Static projections (identity, loop enter/exit/feedback) are pure
+//! functions of the frontier and are evaluated by [`Projection::apply`].
+//! History-dependent projections (sequence-number counts, the §3.2
+//! epoch→seq buffering transformer) are declared [`Projection::PerCheckpoint`]
+//! and their values are captured in the Table-1 checkpoint metadata
+//! ([`crate::ft::meta`]) — the paper notes φ(e)(f) need only be defined
+//! for frontiers in the history of `p`, which is exactly what storing it
+//! per checkpoint provides.
+
+use crate::frontier::Frontier;
+use crate::time::{Time, TimeDomain, CTR_INF};
+
+/// Epoch value standing for "every epoch" in frontier *preimages* (never
+/// appears in message times). `(EPOCH_ANY, …, ∞-1)` is the largest
+/// structured time with a finite innermost counter.
+pub const EPOCH_ANY: u64 = u64::MAX;
+
+/// The maximal structured time at `depth` whose innermost counter is
+/// finite: `(EPOCH_ANY, ∞, …, ∞, ∞-1)`.
+fn all_finite_iterations(depth: u8) -> Time {
+    assert!(depth >= 1);
+    let mut cs = vec![CTR_INF; depth as usize];
+    *cs.last_mut().unwrap() = CTR_INF - 1;
+    Time::structured(EPOCH_ANY, &cs)
+}
+
+/// Identifier of a processor in a [`Topology`].
+#[derive(Copy, Clone, PartialEq, Eq, PartialOrd, Ord, Hash, Debug)]
+pub struct ProcId(pub u32);
+
+/// Identifier of an edge in a [`Topology`].
+#[derive(Copy, Clone, PartialEq, Eq, PartialOrd, Ord, Hash, Debug)]
+pub struct EdgeId(pub u32);
+
+impl std::fmt::Display for ProcId {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "p{}", self.0)
+    }
+}
+
+impl std::fmt::Display for EdgeId {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "e{}", self.0)
+    }
+}
+
+/// The projection function φ(e) attached to an edge (§3.2).
+#[derive(Copy, Clone, PartialEq, Eq, Debug)]
+pub enum Projection {
+    /// φ(f) = f. Requires src and dst domains equal. The common case for
+    /// epoch systems ("messages cannot be sent backwards in time").
+    Identity,
+    /// Loop ingress `r` in Fig. 2(c): dst domain is one loop deeper;
+    /// φ(f) = ↓{(t, c) : t ∈ f, all c} — maximal elements get counter ∞.
+    LoopEnter,
+    /// Loop egress: dst domain one loop shallower; φ(f) = {t : (t, ∞) ∈ f}
+    /// — an epoch leaves the loop only once every iteration is fixed.
+    LoopExit,
+    /// Feedback edge (Fig. 7c's `w`): same domain, increments the
+    /// innermost counter; φ(f) = ↓{(t, c+1) : (t, c) maximal in f}.
+    LoopFeedback,
+    /// History-dependent projection whose value is recorded per checkpoint
+    /// in the Table-1 metadata: seq-number output counts (Fig. 2a), the
+    /// epoch→seq buffering transformer, or seq→epoch windowing (§3.2).
+    PerCheckpoint,
+    /// φ(f) = ∅ — always safe, maximally conservative (§3.2 notes this is
+    /// always a legal choice; it just preserves no downstream work).
+    Empty,
+}
+
+impl Projection {
+    /// Evaluate a *static* projection on a frontier. Returns `None` for
+    /// [`Projection::PerCheckpoint`], whose value must be looked up in the
+    /// checkpoint metadata instead.
+    pub fn apply(&self, f: &Frontier) -> Option<Frontier> {
+        match self {
+            Projection::Identity => Some(f.clone()),
+            Projection::Empty => Some(Frontier::Bottom),
+            Projection::PerCheckpoint => None,
+            Projection::LoopEnter => Some(match f {
+                Frontier::Bottom => Frontier::Bottom,
+                Frontier::Top => Frontier::Top,
+                _ => Frontier::down_close(f.maximal_elements().into_iter().map(|t| {
+                    Time::Structured { epoch: t.epoch_of(), loops: t.loops_of().enter(CTR_INF) }
+                })),
+            }),
+            Projection::LoopExit => Some(match f {
+                Frontier::Bottom => Frontier::Bottom,
+                Frontier::Top => Frontier::Top,
+                _ => Frontier::down_close(f.maximal_elements().into_iter().filter_map(|t| {
+                    let loops = t.loops_of();
+                    // Only epochs whose *every* iteration is inside f are
+                    // fixed outside the loop.
+                    if loops.innermost() == CTR_INF {
+                        Some(Time::Structured { epoch: t.epoch_of(), loops: loops.exit() })
+                    } else {
+                        None
+                    }
+                })),
+            }),
+            Projection::LoopFeedback => Some(match f {
+                Frontier::Bottom => Frontier::Bottom,
+                Frontier::Top => Frontier::Top,
+                _ => Frontier::down_close(f.maximal_elements().into_iter().map(|t| {
+                    Time::Structured { epoch: t.epoch_of(), loops: t.loops_of().increment() }
+                })),
+            }),
+        }
+    }
+
+    /// Whether φ must be captured per checkpoint rather than computed.
+    pub fn is_per_checkpoint(&self) -> bool {
+        matches!(self, Projection::PerCheckpoint)
+    }
+
+    /// Preimage: the **largest** frontier `g` (in the source domain at
+    /// depth `src_depth`) such that `φ(g) ⊆ limit`. Used by the Fig. 6
+    /// solver for processors that can restore to *any* frontier (§3.4's
+    /// "can restore to any requested frontier" class): their D̄(e,g) =
+    /// φ(e)(g) constraint `φ(e)(g) ⊆ f(dst)` becomes the upper bound
+    /// `g ⊆ preimage(f(dst))`.
+    ///
+    /// Only defined for static projections (`None` for
+    /// [`Projection::PerCheckpoint`]).
+    pub fn preimage(&self, limit: &Frontier, src_depth: u8) -> Option<Frontier> {
+        match self {
+            Projection::Identity => Some(limit.clone()),
+            Projection::Empty => Some(Frontier::Top),
+            Projection::PerCheckpoint => None,
+            _ if limit.is_top() => Some(Frontier::Top),
+            _ if limit.is_bottom() => Some(match self {
+                // φ(g) = ∅ requires: Enter — g = ∅ (every t maps in);
+                // Exit — g may contain any (t, c) with c finite;
+                // Feedback — g may contain only counter-0 times... which
+                // still project to (t, 1) ⊉ ∅; so g = ∅.
+                Projection::LoopEnter | Projection::LoopFeedback => Frontier::Bottom,
+                Projection::LoopExit => {
+                    Frontier::below(all_finite_iterations(src_depth))
+                }
+                _ => unreachable!(),
+            }),
+            Projection::LoopEnter => {
+                // φ(g) = ↓{(t,∞) : t ∈ g} ⊆ limit ⟺ g ⊆ {t : (t,∞) ∈ limit},
+                // which is exactly the LoopExit image of `limit`.
+                Projection::LoopExit.apply(limit)
+            }
+            Projection::LoopExit => {
+                // φ(g) = {t : (t,∞) ∈ g} ⊆ limit: g may contain any time
+                // with a finite innermost counter, plus (t,∞) for t ∈ limit.
+                let mut f = Frontier::below(all_finite_iterations(src_depth));
+                for t in limit.maximal_elements() {
+                    f.insert(Time::Structured { epoch: t.epoch_of(), loops: t.loops_of().enter(CTR_INF) });
+                }
+                Some(f)
+            }
+            Projection::LoopFeedback => {
+                // φ(g) = ↓{(t,c+1)} ⊆ limit ⟺ (t,c) ∈ g ⇒ (t,c+1) ∈ limit:
+                // decrement the innermost counter of limit's maxima;
+                // counter-0 maxima contribute nothing.
+                let mut f = Frontier::Bottom;
+                for t in limit.maximal_elements() {
+                    let loops = t.loops_of();
+                    let c = loops.innermost();
+                    if c == 0 {
+                        continue;
+                    }
+                    // `∞-1` is the reserved "all finite iterations"
+                    // marker (it only arises from LoopExit preimages);
+                    // decrementing it stepwise would descend for 2⁶⁴
+                    // fixed-point rounds, so we conservatively drop it —
+                    // a cycle whose only bound is "any finite iteration"
+                    // admits no nonempty fixed point anyway.
+                    if c == CTR_INF - 1 {
+                        continue;
+                    }
+                    let dec = if c == CTR_INF { CTR_INF } else { c - 1 };
+                    let mut cs: Vec<u64> = loops.as_slice().to_vec();
+                    *cs.last_mut().unwrap() = dec;
+                    f.insert(Time::structured(t.epoch_of(), &cs));
+                }
+                Some(f)
+            }
+        }
+    }
+
+    /// Validate that this projection is compatible with the given endpoint
+    /// domains; returns a human-readable error otherwise.
+    pub fn check_domains(&self, src: TimeDomain, dst: TimeDomain) -> Result<(), String> {
+        let ok = match self {
+            Projection::Identity => src == dst,
+            Projection::LoopEnter => {
+                matches!(src, TimeDomain::Structured { .. }) && dst == src.deeper()
+            }
+            Projection::LoopExit => {
+                matches!(src, TimeDomain::Structured { depth } if depth > 0)
+                    && dst == src.shallower()
+            }
+            Projection::LoopFeedback => {
+                matches!(src, TimeDomain::Structured { depth } if depth > 0) && src == dst
+            }
+            Projection::PerCheckpoint | Projection::Empty => true,
+        };
+        if ok {
+            Ok(())
+        } else {
+            Err(format!("projection {self:?} incompatible with domains {src:?} → {dst:?}"))
+        }
+    }
+}
+
+/// Per-processor static information.
+#[derive(Clone, Debug)]
+pub struct ProcInfo {
+    pub name: String,
+    pub domain: TimeDomain,
+}
+
+/// Per-edge static information.
+#[derive(Clone, Debug)]
+pub struct EdgeInfo {
+    pub src: ProcId,
+    pub dst: ProcId,
+    pub projection: Projection,
+}
+
+/// An immutable dataflow topology. Build with [`GraphBuilder`].
+#[derive(Clone, Debug)]
+pub struct Topology {
+    procs: Vec<ProcInfo>,
+    edges: Vec<EdgeInfo>,
+    in_edges: Vec<Vec<EdgeId>>,
+    out_edges: Vec<Vec<EdgeId>>,
+}
+
+impl Topology {
+    pub fn num_procs(&self) -> usize {
+        self.procs.len()
+    }
+
+    pub fn num_edges(&self) -> usize {
+        self.edges.len()
+    }
+
+    pub fn proc_ids(&self) -> impl Iterator<Item = ProcId> {
+        (0..self.procs.len() as u32).map(ProcId)
+    }
+
+    pub fn edge_ids(&self) -> impl Iterator<Item = EdgeId> {
+        (0..self.edges.len() as u32).map(EdgeId)
+    }
+
+    pub fn name(&self, p: ProcId) -> &str {
+        &self.procs[p.0 as usize].name
+    }
+
+    pub fn domain(&self, p: ProcId) -> TimeDomain {
+        self.procs[p.0 as usize].domain
+    }
+
+    pub fn src(&self, e: EdgeId) -> ProcId {
+        self.edges[e.0 as usize].src
+    }
+
+    pub fn dst(&self, e: EdgeId) -> ProcId {
+        self.edges[e.0 as usize].dst
+    }
+
+    pub fn projection(&self, e: EdgeId) -> Projection {
+        self.edges[e.0 as usize].projection
+    }
+
+    /// Input edges of `p`, in connection order (= local input port order).
+    pub fn in_edges(&self, p: ProcId) -> &[EdgeId] {
+        &self.in_edges[p.0 as usize]
+    }
+
+    /// Output edges of `p`, in connection order (= local output port order).
+    pub fn out_edges(&self, p: ProcId) -> &[EdgeId] {
+        &self.out_edges[p.0 as usize]
+    }
+
+    /// The local input-port index of edge `e` at its destination.
+    pub fn input_port(&self, e: EdgeId) -> usize {
+        let dst = self.dst(e);
+        self.in_edges(dst).iter().position(|x| *x == e).unwrap()
+    }
+
+    /// Find a processor by name (for tests / examples).
+    pub fn find(&self, name: &str) -> Option<ProcId> {
+        self.procs.iter().position(|p| p.name == name).map(|i| ProcId(i as u32))
+    }
+}
+
+/// Builder for [`Topology`]. Validates projection/domain compatibility at
+/// [`GraphBuilder::build`].
+#[derive(Default, Debug)]
+pub struct GraphBuilder {
+    procs: Vec<ProcInfo>,
+    edges: Vec<EdgeInfo>,
+}
+
+impl GraphBuilder {
+    pub fn new() -> GraphBuilder {
+        GraphBuilder::default()
+    }
+
+    /// Add a processor in the given time domain.
+    pub fn add_proc(&mut self, name: &str, domain: TimeDomain) -> ProcId {
+        self.procs.push(ProcInfo { name: name.to_string(), domain });
+        ProcId(self.procs.len() as u32 - 1)
+    }
+
+    /// Connect `src → dst` with projection φ.
+    pub fn connect(&mut self, src: ProcId, dst: ProcId, projection: Projection) -> EdgeId {
+        self.edges.push(EdgeInfo { src, dst, projection });
+        EdgeId(self.edges.len() as u32 - 1)
+    }
+
+    /// Validate and freeze the topology.
+    pub fn build(self) -> Result<Topology, String> {
+        let mut in_edges = vec![Vec::new(); self.procs.len()];
+        let mut out_edges = vec![Vec::new(); self.procs.len()];
+        for (i, e) in self.edges.iter().enumerate() {
+            let id = EdgeId(i as u32);
+            let sdom = self.procs[e.src.0 as usize].domain;
+            let ddom = self.procs[e.dst.0 as usize].domain;
+            e.projection.check_domains(sdom, ddom).map_err(|err| {
+                format!(
+                    "edge {id} ({} → {}): {err}",
+                    self.procs[e.src.0 as usize].name, self.procs[e.dst.0 as usize].name
+                )
+            })?;
+            out_edges[e.src.0 as usize].push(id);
+            in_edges[e.dst.0 as usize].push(id);
+        }
+        Ok(Topology { procs: self.procs, edges: self.edges, in_edges, out_edges })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn build_simple_pipeline() {
+        let mut g = GraphBuilder::new();
+        let a = g.add_proc("a", TimeDomain::EPOCH);
+        let b = g.add_proc("b", TimeDomain::EPOCH);
+        let e = g.connect(a, b, Projection::Identity);
+        let t = g.build().unwrap();
+        assert_eq!(t.num_procs(), 2);
+        assert_eq!(t.src(e), a);
+        assert_eq!(t.dst(e), b);
+        assert_eq!(t.in_edges(b), &[e]);
+        assert_eq!(t.out_edges(a), &[e]);
+        assert_eq!(t.input_port(e), 0);
+        assert_eq!(t.find("b"), Some(b));
+    }
+
+    #[test]
+    fn identity_requires_same_domain() {
+        let mut g = GraphBuilder::new();
+        let a = g.add_proc("a", TimeDomain::EPOCH);
+        let b = g.add_proc("b", TimeDomain::Structured { depth: 1 });
+        g.connect(a, b, Projection::Identity);
+        assert!(g.build().is_err());
+    }
+
+    #[test]
+    fn loop_projection_domains() {
+        let mut g = GraphBuilder::new();
+        let outer = g.add_proc("outer", TimeDomain::EPOCH);
+        let body = g.add_proc("body", TimeDomain::Structured { depth: 1 });
+        let out = g.add_proc("out", TimeDomain::EPOCH);
+        g.connect(outer, body, Projection::LoopEnter);
+        g.connect(body, body, Projection::LoopFeedback);
+        g.connect(body, out, Projection::LoopExit);
+        assert!(g.build().is_ok());
+    }
+
+    #[test]
+    fn loop_enter_projection_covers_all_iterations() {
+        // Fig 2(c): φ(e)(f) = {(t, c) : t ∈ f} for ingress.
+        let f = Frontier::upto_epoch(1);
+        let proj = Projection::LoopEnter.apply(&f).unwrap();
+        assert!(proj.contains(&Time::structured(1, &[0])));
+        assert!(proj.contains(&Time::structured(0, &[712])));
+        assert!(!proj.contains(&Time::structured(2, &[0])));
+    }
+
+    #[test]
+    fn loop_exit_projection_requires_all_iterations_fixed() {
+        // Epoch 0 is fixed for all iterations; epoch 1 only up to c=3.
+        let f = Frontier::down_close([
+            Time::structured(0, &[CTR_INF]),
+            Time::structured(1, &[3]),
+        ]);
+        let proj = Projection::LoopExit.apply(&f).unwrap();
+        assert!(proj.contains(&Time::epoch(0)));
+        assert!(!proj.contains(&Time::epoch(1)));
+    }
+
+    #[test]
+    fn loop_feedback_increments() {
+        let f = Frontier::down_close([Time::structured(1, &[2])]);
+        let proj = Projection::LoopFeedback.apply(&f).unwrap();
+        assert!(proj.contains(&Time::structured(1, &[3])));
+        assert!(!proj.contains(&Time::structured(1, &[4])));
+        // ∞ stays ∞ under increment.
+        let f = Frontier::down_close([Time::structured(0, &[CTR_INF])]);
+        let proj = Projection::LoopFeedback.apply(&f).unwrap();
+        assert!(proj.contains(&Time::structured(0, &[CTR_INF])));
+    }
+
+    #[test]
+    fn static_projections_on_bottom_top() {
+        for p in [
+            Projection::Identity,
+            Projection::LoopEnter,
+            Projection::LoopExit,
+            Projection::LoopFeedback,
+        ] {
+            assert_eq!(p.apply(&Frontier::Bottom).unwrap(), Frontier::Bottom);
+            assert_eq!(p.apply(&Frontier::Top).unwrap(), Frontier::Top);
+        }
+        assert_eq!(Projection::Empty.apply(&Frontier::Top).unwrap(), Frontier::Bottom);
+        assert!(Projection::PerCheckpoint.apply(&Frontier::Top).is_none());
+    }
+
+    #[test]
+    fn preimage_identity_and_empty() {
+        let f = Frontier::upto_epoch(3);
+        assert_eq!(Projection::Identity.preimage(&f, 0).unwrap(), f);
+        assert_eq!(Projection::Empty.preimage(&f, 0).unwrap(), Frontier::Top);
+        assert!(Projection::PerCheckpoint.preimage(&f, 0).is_none());
+    }
+
+    /// Check the Galois property φ(preimage(F)) ⊆ F and that preimage is
+    /// the largest such frontier for a few probe points.
+    fn check_preimage(proj: Projection, limit: &Frontier, src_depth: u8, probes: &[Time]) {
+        let pre = proj.preimage(limit, src_depth).unwrap();
+        let img = proj.apply(&pre).unwrap();
+        assert!(img.is_subset(limit), "{proj:?}: φ(pre)={img} ⊄ {limit}");
+        for t in probes {
+            // t ∈ pre ⟺ φ(↓t) ⊆ limit (maximality pointwise).
+            let img_t = proj.apply(&Frontier::below(*t)).unwrap();
+            assert_eq!(
+                pre.contains(t),
+                img_t.is_subset(limit),
+                "{proj:?}: probe {t} membership mismatch (φ(↓t)={img_t}, limit={limit})"
+            );
+        }
+    }
+
+    #[test]
+    fn preimage_loop_enter() {
+        // limit covers (0,∞) and (1,3): only epoch 0 fully fixed inside.
+        let limit =
+            Frontier::down_close([Time::structured(0, &[CTR_INF]), Time::structured(1, &[3])]);
+        check_preimage(
+            Projection::LoopEnter,
+            &limit,
+            0,
+            &[Time::epoch(0), Time::epoch(1), Time::epoch(2)],
+        );
+    }
+
+    #[test]
+    fn preimage_loop_exit() {
+        let limit = Frontier::upto_epoch(1);
+        check_preimage(
+            Projection::LoopExit,
+            &limit,
+            1,
+            &[
+                Time::structured(0, &[CTR_INF]),
+                Time::structured(1, &[CTR_INF]),
+                Time::structured(2, &[CTR_INF]),
+                Time::structured(2, &[7]),
+                Time::structured(99, &[0]),
+            ],
+        );
+    }
+
+    #[test]
+    fn preimage_loop_feedback() {
+        let limit =
+            Frontier::down_close([Time::structured(5, &[3]), Time::structured(7, &[0])]);
+        check_preimage(
+            Projection::LoopFeedback,
+            &limit,
+            1,
+            &[
+                Time::structured(5, &[2]),
+                Time::structured(5, &[3]),
+                Time::structured(7, &[0]),
+                Time::structured(4, &[2]),
+            ],
+        );
+        // All-zero-counter limit has empty feedback preimage.
+        let limit = Frontier::down_close([Time::structured(5, &[0])]);
+        assert_eq!(
+            Projection::LoopFeedback.preimage(&limit, 1).unwrap(),
+            Frontier::Bottom
+        );
+    }
+
+    #[test]
+    fn preimage_of_bottom() {
+        assert_eq!(Projection::LoopEnter.preimage(&Frontier::Bottom, 0).unwrap(), Frontier::Bottom);
+        assert_eq!(
+            Projection::LoopFeedback.preimage(&Frontier::Bottom, 1).unwrap(),
+            Frontier::Bottom
+        );
+        // Exit: any finite iteration count is allowed.
+        let pre = Projection::LoopExit.preimage(&Frontier::Bottom, 1).unwrap();
+        assert!(pre.contains(&Time::structured(42, &[1000])));
+        assert!(!pre.contains(&Time::structured(42, &[CTR_INF])));
+    }
+
+    #[test]
+    fn feedback_requires_loop_domain() {
+        let mut g = GraphBuilder::new();
+        let a = g.add_proc("a", TimeDomain::EPOCH);
+        g.connect(a, a, Projection::LoopFeedback);
+        assert!(g.build().is_err());
+    }
+}

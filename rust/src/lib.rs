@@ -1,0 +1,44 @@
+//! # Falkirk Wheel — rollback recovery for dataflow systems
+//!
+//! A Rust reproduction of *"Falkirk Wheel: Rollback Recovery for Dataflow
+//! Systems"* (Michael Isard and Martín Abadi, 2015). The library contains:
+//!
+//! - a deterministic timely-dataflow-style execution engine with cyclic
+//!   graphs, structured logical times and notifications ([`engine`],
+//!   [`progress`], [`graph`], [`operators`]);
+//! - the paper's fault-tolerance framework: logical-time frontiers
+//!   ([`frontier`]), per-edge time-domain projections φ(e) ([`graph`]),
+//!   checkpoint/log policies and Table-1 metadata, selective rollback, the
+//!   Figure-6 consistent-frontier fixed point, the garbage-collection
+//!   monitor and recovery orchestration ([`ft`]);
+//! - baselines it subsumes: Chandy–Lamport snapshots, exactly-once /
+//!   at-least-once streaming, Spark-style RDD lineage ([`baselines`]);
+//! - an XLA/PJRT runtime that loads AOT-compiled JAX+Pallas analytics
+//!   kernels from `artifacts/*.hlo.txt` and runs them on the hot path of
+//!   stateful vertices ([`runtime`], [`operators::tensor`]).
+//!
+//! Python (`python/compile/`) is build-time only: it lowers the L2 JAX
+//! model (which calls the L1 Pallas kernels) to HLO text once; the Rust
+//! binary is self-contained afterwards.
+//!
+//! See `DESIGN.md` for the full system inventory and `EXPERIMENTS.md` for
+//! the reproduction of every figure in the paper.
+
+pub mod util;
+pub mod time;
+pub mod frontier;
+pub mod graph;
+pub mod progress;
+pub mod engine;
+pub mod operators;
+pub mod ft;
+pub mod baselines;
+pub mod failure;
+pub mod runtime;
+pub mod coordinator;
+pub mod metrics;
+pub mod bench_support;
+
+pub use crate::frontier::Frontier;
+pub use crate::graph::{EdgeId, GraphBuilder, ProcId, Projection, Topology};
+pub use crate::time::{Time, TimeDomain};

@@ -1,0 +1,11 @@
+//! `falkirk` — CLI entrypoint for the Falkirk Wheel reproduction.
+//!
+//! Subcommands are dispatched to [`falkirk::coordinator::cli`]; run with
+//! `--help` for the list (scenario runners for every figure in the paper,
+//! the Figure-1 end-to-end application, and utility commands).
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let code = falkirk::coordinator::cli::run(&args);
+    std::process::exit(code);
+}

@@ -1,0 +1,79 @@
+//! Lightweight metrics: named counters and timers for the coordinator,
+//! examples and benches.
+
+use crate::util::stats::Summary;
+use std::collections::BTreeMap;
+use std::time::Instant;
+
+/// A registry of counters and latency summaries.
+#[derive(Default)]
+pub struct Metrics {
+    counters: BTreeMap<String, u64>,
+    timers: BTreeMap<String, Summary>,
+}
+
+impl Metrics {
+    pub fn new() -> Metrics {
+        Metrics::default()
+    }
+
+    pub fn inc(&mut self, name: &str, by: u64) {
+        *self.counters.entry(name.to_string()).or_insert(0) += by;
+    }
+
+    pub fn counter(&self, name: &str) -> u64 {
+        self.counters.get(name).copied().unwrap_or(0)
+    }
+
+    /// Record a duration sample (nanoseconds).
+    pub fn record_ns(&mut self, name: &str, ns: f64) {
+        self.timers.entry(name.to_string()).or_default().add(ns);
+    }
+
+    /// Time a closure into the named summary.
+    pub fn time<T>(&mut self, name: &str, f: impl FnOnce() -> T) -> T {
+        let t0 = Instant::now();
+        let out = f();
+        self.record_ns(name, t0.elapsed().as_nanos() as f64);
+        out
+    }
+
+    pub fn timer(&self, name: &str) -> Option<&Summary> {
+        self.timers.get(name)
+    }
+
+    /// Render all metrics as aligned text lines.
+    pub fn render(&self) -> String {
+        let mut out = String::new();
+        for (k, v) in &self.counters {
+            out.push_str(&format!("{k:<40} {v}\n"));
+        }
+        for (k, s) in &self.timers {
+            out.push_str(&format!(
+                "{k:<40} n={} mean={} p95={}\n",
+                s.count(),
+                crate::util::stats::fmt_ns(s.mean()),
+                crate::util::stats::fmt_ns(s.p95()),
+            ));
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counters_and_timers() {
+        let mut m = Metrics::new();
+        m.inc("events", 3);
+        m.inc("events", 2);
+        assert_eq!(m.counter("events"), 5);
+        assert_eq!(m.counter("missing"), 0);
+        let x = m.time("work", || 42);
+        assert_eq!(x, 42);
+        assert_eq!(m.timer("work").unwrap().count(), 1);
+        assert!(m.render().contains("events"));
+    }
+}

@@ -1,0 +1,22 @@
+//! Operator library.
+//!
+//! Mirrors the layering the paper describes for Naiad (§4): a library of
+//! **stateless** processors with Spark-like functionality plus native
+//! iteration support (Lindi → [`stateless`], [`loops`]), and a library of
+//! **stateful** processors whose state is partitioned by logical time
+//! (Differential-Dataflow-like → [`stateful`]), which is what makes
+//! selective incremental checkpointing "straightforward" (§4.1).
+//! [`tensor`] contains the stateful analytics vertices whose compute runs
+//! in AOT-compiled XLA kernels via [`crate::runtime`].
+
+pub mod loops;
+pub mod transform;
+pub mod stateful;
+pub mod stateless;
+pub mod tensor;
+
+pub use loops::{Egress, Feedback, Ingress};
+pub use stateful::{Buffer, CountByKey, Join, SumByTime};
+pub use stateless::{shared_vec, Filter, FlatMap, Inspect, Map, Select, SharedVec, Sink, Source};
+pub use tensor::{Kernel, KernelHandle, RankStore, TensorApply, TensorCollect, WindowAggregate};
+pub use transform::{Distinct, EpochToSeq, SeqToEpoch};

@@ -1,0 +1,368 @@
+//! Stateful operators with time-partitioned state (the Differential
+//! Dataflow class of §4.1).
+//!
+//! Every operator here stores its state in a [`TimeState`], i.e.
+//! differentiated by logical time, so **selective incremental
+//! checkpointing** (§2.3) falls out of [`TimeState::checkpoint_upto`]:
+//! a checkpoint at frontier `f` contains exactly the partitions with
+//! times in `f`, independent of the order events were actually processed.
+
+use crate::engine::{Ctx, Processor, Record, Statefulness, TimeState};
+use crate::frontier::Frontier;
+use crate::time::Time;
+use crate::util::ser::{Decode, Encode, Reader, SerError, Writer};
+use std::collections::BTreeMap;
+
+/// The paper's Fig. 3 Sum: accumulates a separate sum per logical time;
+/// when notified that a time is complete it emits the sum and discards
+/// that time's state (so a selective checkpoint after the notification is
+/// empty — the paper's headline software-engineering win).
+#[derive(Default)]
+pub struct SumByTime {
+    state: TimeState<f64>,
+}
+
+impl Processor for SumByTime {
+    fn on_message(&mut self, _port: usize, t: Time, d: Record, ctx: &mut Ctx) {
+        let v = match d {
+            Record::Int(i) => i as f64,
+            Record::Kv { val, .. } => val,
+            other => panic!("SumByTime expects numeric records, got {other:?}"),
+        };
+        let fresh = self.state.get(&t).is_none();
+        *self.state.entry_or(t, || 0.0) += v;
+        if fresh {
+            ctx.notify_at(t);
+        }
+    }
+
+    fn on_notification(&mut self, t: Time, ctx: &mut Ctx) {
+        if let Some(sum) = self.state.remove(&t) {
+            for port in 0..ctx.num_outputs() {
+                ctx.send(port, Record::Kv { key: 0, val: sum });
+            }
+        }
+    }
+
+    fn statefulness(&self) -> Statefulness {
+        Statefulness::TimePartitioned
+    }
+
+    fn checkpoint_upto(&self, f: &Frontier) -> Vec<u8> {
+        self.state.checkpoint_upto(f)
+    }
+
+    fn restore(&mut self, blob: &[u8]) {
+        self.state.restore(blob);
+    }
+
+    fn reset(&mut self) {
+        self.state.clear();
+    }
+}
+
+/// Per-time keyed state for [`CountByKey`].
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct KeyedSums {
+    pub sums: BTreeMap<i64, f64>,
+    pub counts: BTreeMap<i64, u64>,
+}
+
+impl Encode for KeyedSums {
+    fn encode(&self, w: &mut Writer) {
+        w.varint(self.sums.len() as u64);
+        for (k, v) in &self.sums {
+            w.varint_i(*k);
+            w.f64(*v);
+            w.varint(*self.counts.get(k).unwrap_or(&0));
+        }
+    }
+}
+
+impl Decode for KeyedSums {
+    fn decode(r: &mut Reader) -> Result<Self, SerError> {
+        let n = r.varint()? as usize;
+        let mut ks = KeyedSums::default();
+        for _ in 0..n {
+            let k = r.varint_i()?;
+            let v = r.f64()?;
+            let c = r.varint()?;
+            ks.sums.insert(k, v);
+            ks.counts.insert(k, c);
+        }
+        Ok(ks)
+    }
+}
+
+/// Keyed aggregation per time: on completion of `t`, emits one
+/// `Kv{key, sum}` per key seen at `t`, then discards the partition.
+#[derive(Default)]
+pub struct CountByKey {
+    state: TimeState<KeyedSums>,
+}
+
+impl Processor for CountByKey {
+    fn on_message(&mut self, _port: usize, t: Time, d: Record, ctx: &mut Ctx) {
+        let (k, v) = d.as_kv().unwrap_or_else(|| panic!("CountByKey expects Kv, got {d:?}"));
+        let fresh = self.state.get(&t).is_none();
+        let part = self.state.entry_or(t, KeyedSums::default);
+        *part.sums.entry(k).or_insert(0.0) += v;
+        *part.counts.entry(k).or_insert(0) += 1;
+        if fresh {
+            ctx.notify_at(t);
+        }
+    }
+
+    fn on_notification(&mut self, t: Time, ctx: &mut Ctx) {
+        if let Some(part) = self.state.remove(&t) {
+            for (k, v) in part.sums {
+                for port in 0..ctx.num_outputs() {
+                    ctx.send(port, Record::Kv { key: k, val: v });
+                }
+            }
+        }
+    }
+
+    fn statefulness(&self) -> Statefulness {
+        Statefulness::TimePartitioned
+    }
+
+    fn checkpoint_upto(&self, f: &Frontier) -> Vec<u8> {
+        self.state.checkpoint_upto(f)
+    }
+
+    fn restore(&mut self, blob: &[u8]) {
+        self.state.restore(blob);
+    }
+
+    fn reset(&mut self) {
+        self.state.clear();
+    }
+}
+
+/// The paper's Fig. 3 Buffer: records all messages it has seen, forever,
+/// partitioned by time. Forwards nothing.
+#[derive(Default)]
+pub struct Buffer {
+    state: TimeState<Vec<Record>>,
+}
+
+impl Buffer {
+    pub fn contents(&self) -> Vec<(Time, Vec<Record>)> {
+        self.state.iter().map(|(lt, v)| (lt.0, v.clone())).collect()
+    }
+}
+
+impl Processor for Buffer {
+    fn on_message(&mut self, _port: usize, t: Time, d: Record, _ctx: &mut Ctx) {
+        self.state.entry_or(t, Vec::new).push(d);
+    }
+
+    fn statefulness(&self) -> Statefulness {
+        Statefulness::TimePartitioned
+    }
+
+    fn checkpoint_upto(&self, f: &Frontier) -> Vec<u8> {
+        self.state.checkpoint_upto(f)
+    }
+
+    fn restore(&mut self, blob: &[u8]) {
+        self.state.restore(blob);
+    }
+
+    fn reset(&mut self) {
+        self.state.clear();
+    }
+}
+
+/// Per-time two-sided state for [`Join`].
+#[derive(Clone, Debug, Default)]
+pub struct JoinSides {
+    pub left: Vec<(i64, f64)>,
+    pub right: Vec<(i64, f64)>,
+}
+
+impl Encode for JoinSides {
+    fn encode(&self, w: &mut Writer) {
+        w.varint(self.left.len() as u64);
+        for (k, v) in &self.left {
+            w.varint_i(*k);
+            w.f64(*v);
+        }
+        w.varint(self.right.len() as u64);
+        for (k, v) in &self.right {
+            w.varint_i(*k);
+            w.f64(*v);
+        }
+    }
+}
+
+impl Decode for JoinSides {
+    fn decode(r: &mut Reader) -> Result<Self, SerError> {
+        let mut js = JoinSides::default();
+        for _ in 0..r.varint()? {
+            js.left.push((r.varint_i()?, r.f64()?));
+        }
+        for _ in 0..r.varint()? {
+            js.right.push((r.varint_i()?, r.f64()?));
+        }
+        Ok(js)
+    }
+}
+
+/// Symmetric hash join within each logical time: input port 0 is the left
+/// side, port 1 the right. Emits `Kv{key, left_val + right_val}` for each
+/// match; discards the time's state on completion.
+#[derive(Default)]
+pub struct Join {
+    state: TimeState<JoinSides>,
+}
+
+impl Processor for Join {
+    fn on_message(&mut self, port: usize, t: Time, d: Record, ctx: &mut Ctx) {
+        let (k, v) = d.as_kv().unwrap_or_else(|| panic!("Join expects Kv, got {d:?}"));
+        let fresh = self.state.get(&t).is_none();
+        let part = self.state.entry_or(t, JoinSides::default);
+        let (mine, theirs) = if port == 0 {
+            (&mut part.left, &part.right)
+        } else {
+            (&mut part.right, &part.left)
+        };
+        let matches: Vec<f64> =
+            theirs.iter().filter(|(k2, _)| *k2 == k).map(|(_, v2)| *v2).collect();
+        mine.push((k, v));
+        for v2 in matches {
+            for port in 0..ctx.num_outputs() {
+                ctx.send(port, Record::Kv { key: k, val: v + v2 });
+            }
+        }
+        if fresh {
+            ctx.notify_at(t);
+        }
+    }
+
+    fn on_notification(&mut self, t: Time, _ctx: &mut Ctx) {
+        self.state.remove(&t);
+    }
+
+    fn statefulness(&self) -> Statefulness {
+        Statefulness::TimePartitioned
+    }
+
+    fn checkpoint_upto(&self, f: &Frontier) -> Vec<u8> {
+        self.state.checkpoint_upto(f)
+    }
+
+    fn restore(&mut self, blob: &[u8]) {
+        self.state.restore(blob);
+    }
+
+    fn reset(&mut self) {
+        self.state.clear();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::engine::{Delivery, Engine};
+    use crate::graph::{GraphBuilder, ProcId, Projection};
+    use crate::operators::stateless::{shared_vec, Sink, Source};
+    use crate::time::TimeDomain;
+    use std::sync::Arc;
+
+    #[test]
+    fn count_by_key_aggregates_per_epoch() {
+        let mut g = GraphBuilder::new();
+        let s = g.add_proc("src", TimeDomain::EPOCH);
+        let c = g.add_proc("count", TimeDomain::EPOCH);
+        let k = g.add_proc("sink", TimeDomain::EPOCH);
+        g.connect(s, c, Projection::Identity);
+        g.connect(c, k, Projection::Identity);
+        let out = shared_vec();
+        let procs: Vec<Box<dyn crate::engine::Processor>> =
+            vec![Box::new(Source), Box::new(CountByKey::default()), Box::new(Sink(out.clone()))];
+        let mut eng = Engine::new(Arc::new(g.build().unwrap()), procs, Delivery::Fifo);
+        let src = ProcId(0);
+        eng.advance_input(src, Time::epoch(0));
+        eng.push_input(src, Time::epoch(0), Record::kv(1, 2.0));
+        eng.push_input(src, Time::epoch(0), Record::kv(1, 3.0));
+        eng.push_input(src, Time::epoch(0), Record::kv(2, 5.0));
+        eng.close_input(src);
+        eng.run_to_quiescence(1000);
+        let got = out.lock().unwrap().clone();
+        assert_eq!(got.len(), 2);
+        assert!(got.contains(&(Time::epoch(0), Record::kv(1, 5.0))));
+        assert!(got.contains(&(Time::epoch(0), Record::kv(2, 5.0))));
+    }
+
+    #[test]
+    fn join_matches_within_time() {
+        let mut g = GraphBuilder::new();
+        let l = g.add_proc("left", TimeDomain::EPOCH);
+        let r = g.add_proc("right", TimeDomain::EPOCH);
+        let j = g.add_proc("join", TimeDomain::EPOCH);
+        let k = g.add_proc("sink", TimeDomain::EPOCH);
+        g.connect(l, j, Projection::Identity); // port 0
+        g.connect(r, j, Projection::Identity); // port 1
+        g.connect(j, k, Projection::Identity);
+        let out = shared_vec();
+        let procs: Vec<Box<dyn crate::engine::Processor>> = vec![
+            Box::new(Source),
+            Box::new(Source),
+            Box::new(Join::default()),
+            Box::new(Sink(out.clone())),
+        ];
+        let mut eng = Engine::new(Arc::new(g.build().unwrap()), procs, Delivery::Fifo);
+        let (l, r) = (ProcId(0), ProcId(1));
+        eng.advance_input(l, Time::epoch(0));
+        eng.advance_input(r, Time::epoch(0));
+        eng.push_input(l, Time::epoch(0), Record::kv(7, 1.0));
+        eng.push_input(r, Time::epoch(0), Record::kv(7, 10.0));
+        eng.push_input(r, Time::epoch(0), Record::kv(8, 20.0));
+        eng.close_input(l);
+        eng.close_input(r);
+        eng.run_to_quiescence(1000);
+        let got = out.lock().unwrap().clone();
+        assert_eq!(got, vec![(Time::epoch(0), Record::kv(7, 11.0))]);
+    }
+
+    #[test]
+    fn join_selective_checkpoint_roundtrip() {
+        let mut j = Join::default();
+        let out_edges: [crate::graph::EdgeId; 0] = [];
+        let summaries: [crate::progress::Summary; 0] = [];
+        let seq_dst: [bool; 0] = [];
+        // Interleave two times, then checkpoint only epoch 0.
+        let mut ctx = crate::engine::Ctx::new(Time::epoch(1), &out_edges, &summaries, &seq_dst);
+        j.on_message(0, Time::epoch(1), Record::kv(1, 1.0), &mut ctx);
+        let mut ctx = crate::engine::Ctx::new(Time::epoch(0), &out_edges, &summaries, &seq_dst);
+        j.on_message(0, Time::epoch(0), Record::kv(2, 2.0), &mut ctx);
+        let blob = j.checkpoint_upto(&Frontier::upto_epoch(0));
+        let mut back = Join::default();
+        back.restore(&blob);
+        assert!(back.state.get(&Time::epoch(0)).is_some());
+        assert!(back.state.get(&Time::epoch(1)).is_none());
+    }
+
+    #[test]
+    fn buffer_keeps_everything() {
+        let mut b = Buffer::default();
+        let out_edges: [crate::graph::EdgeId; 0] = [];
+        let summaries: [crate::progress::Summary; 0] = [];
+        let seq_dst: [bool; 0] = [];
+        let mut ctx = crate::engine::Ctx::new(Time::epoch(0), &out_edges, &summaries, &seq_dst);
+        b.on_message(0, Time::epoch(0), Record::Int(1), &mut ctx);
+        b.on_message(0, Time::epoch(1), Record::Int(2), &mut ctx);
+        assert_eq!(b.contents().len(), 2);
+    }
+
+    #[test]
+    fn keyed_sums_roundtrip() {
+        let mut ks = KeyedSums::default();
+        ks.sums.insert(3, 1.5);
+        ks.counts.insert(3, 2);
+        let bytes = ks.to_bytes();
+        assert_eq!(KeyedSums::from_bytes(&bytes).unwrap(), ks);
+    }
+}

@@ -1,0 +1,195 @@
+//! Stateless operators (the Lindi library of §4.1).
+//!
+//! These keep no state between logical times, so after a failure they can
+//! restore to *any* requested frontier with `S(p,f) = ∅` — the paper's
+//! "need not persist anything" class. By default they do not log sent
+//! messages (no fault-tolerance overhead); an application can wrap any of
+//! them in the RDD-firewall logging policy instead (see
+//! [`crate::ft::policy`]).
+
+use crate::engine::{Ctx, Processor, Record};
+use crate::time::Time;
+use std::sync::{Arc, Mutex};
+
+/// Shared output vector used by [`Sink`] and [`Inspect`] (the engine is
+/// single-threaded; the mutex is for API safety, not contention).
+pub type SharedVec = Arc<Mutex<Vec<(Time, Record)>>>;
+
+/// Create a new shared output vector.
+pub fn shared_vec() -> SharedVec {
+    Arc::new(Mutex::new(Vec::new()))
+}
+
+/// External input source: forwards pushed records to every output port.
+pub struct Source;
+
+impl Processor for Source {
+    fn on_message(&mut self, _port: usize, _t: Time, _d: Record, _ctx: &mut Ctx) {
+        unreachable!("Source has no inputs")
+    }
+
+    fn on_input(&mut self, _t: Time, data: Record, ctx: &mut Ctx) {
+        for port in 0..ctx.num_outputs() {
+            ctx.send(port, data.clone());
+        }
+    }
+}
+
+/// Apply a pure function to every record.
+pub struct Map<F: FnMut(Record) -> Record>(pub F);
+
+impl<F: FnMut(Record) -> Record> Processor for Map<F> {
+    fn on_message(&mut self, _port: usize, _t: Time, d: Record, ctx: &mut Ctx) {
+        ctx.send(0, (self.0)(d));
+    }
+}
+
+/// Keep only records satisfying a predicate.
+pub struct Filter<F: FnMut(&Record) -> bool>(pub F);
+
+impl<F: FnMut(&Record) -> bool> Processor for Filter<F> {
+    fn on_message(&mut self, _port: usize, _t: Time, d: Record, ctx: &mut Ctx) {
+        if (self.0)(&d) {
+            ctx.send(0, d);
+        }
+    }
+}
+
+/// Expand each record into zero or more records.
+pub struct FlatMap<F: FnMut(Record) -> Vec<Record>>(pub F);
+
+impl<F: FnMut(Record) -> Vec<Record>> Processor for FlatMap<F> {
+    fn on_message(&mut self, _port: usize, _t: Time, d: Record, ctx: &mut Ctx) {
+        for r in (self.0)(d) {
+            ctx.send(0, r);
+        }
+    }
+}
+
+/// The paper's Fig. 3 "Select" processor: translates a word into its
+/// numeric representation; stateless.
+pub struct Select;
+
+impl Select {
+    /// "one" → 1, "two" → 2, …; unknown words hash to a stable small code.
+    fn word_to_number(w: &str) -> i64 {
+        match w {
+            "zero" => 0,
+            "one" => 1,
+            "two" => 2,
+            "three" => 3,
+            "four" => 4,
+            "five" => 5,
+            "six" => 6,
+            "seven" => 7,
+            "eight" => 8,
+            "nine" => 9,
+            _ => w.bytes().fold(0i64, |h, b| (h.wrapping_mul(31).wrapping_add(b as i64)) % 1000),
+        }
+    }
+}
+
+impl Processor for Select {
+    fn on_message(&mut self, _port: usize, _t: Time, d: Record, ctx: &mut Ctx) {
+        let n = match &d {
+            Record::Text(s) => Self::word_to_number(s),
+            Record::Int(i) => *i,
+            other => panic!("Select expects text, got {other:?}"),
+        };
+        ctx.send(0, Record::Int(n));
+    }
+}
+
+/// Terminal sink: records everything it receives into a [`SharedVec`].
+pub struct Sink(pub SharedVec);
+
+impl Processor for Sink {
+    fn on_message(&mut self, _port: usize, t: Time, d: Record, _ctx: &mut Ctx) {
+        self.0.lock().unwrap().push((t, d));
+    }
+}
+
+/// Pass-through that also records what flowed past (probe).
+pub struct Inspect(pub SharedVec);
+
+impl Processor for Inspect {
+    fn on_message(&mut self, _port: usize, t: Time, d: Record, ctx: &mut Ctx) {
+        self.0.lock().unwrap().push((t, d.clone()));
+        ctx.send(0, d);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::engine::{Delivery, Engine};
+    use crate::graph::{GraphBuilder, Projection};
+    use crate::time::TimeDomain;
+    use std::sync::Arc as StdArc;
+
+    fn run_one(op: Box<dyn Processor>, inputs: Vec<Record>) -> Vec<(Time, Record)> {
+        let mut g = GraphBuilder::new();
+        let s = g.add_proc("src", TimeDomain::EPOCH);
+        let m = g.add_proc("op", TimeDomain::EPOCH);
+        let k = g.add_proc("sink", TimeDomain::EPOCH);
+        g.connect(s, m, Projection::Identity);
+        g.connect(m, k, Projection::Identity);
+        let out = shared_vec();
+        let procs: Vec<Box<dyn Processor>> =
+            vec![Box::new(Source), op, Box::new(Sink(out.clone()))];
+        let mut eng = Engine::new(StdArc::new(g.build().unwrap()), procs, Delivery::Fifo);
+        for r in inputs {
+            eng.push_input(crate::graph::ProcId(0), Time::epoch(0), r);
+        }
+        eng.run_to_quiescence(10_000);
+        let v = out.lock().unwrap().clone();
+        v
+    }
+
+    #[test]
+    fn map_doubles() {
+        let out = run_one(
+            Box::new(Map(|r: Record| Record::Int(r.as_int().unwrap() * 2))),
+            vec![Record::Int(2), Record::Int(5)],
+        );
+        assert_eq!(out.iter().map(|(_, r)| r.as_int().unwrap()).collect::<Vec<_>>(), vec![4, 10]);
+    }
+
+    #[test]
+    fn filter_keeps_matching() {
+        let out = run_one(
+            Box::new(Filter(|r: &Record| r.as_int().unwrap() % 2 == 0)),
+            (0..6).map(Record::Int).collect(),
+        );
+        assert_eq!(out.iter().map(|(_, r)| r.as_int().unwrap()).collect::<Vec<_>>(), vec![0, 2, 4]);
+    }
+
+    #[test]
+    fn flatmap_expands() {
+        let out = run_one(
+            Box::new(FlatMap(|r: Record| {
+                let n = r.as_int().unwrap();
+                (0..n).map(Record::Int).collect()
+            })),
+            vec![Record::Int(3)],
+        );
+        assert_eq!(out.len(), 3);
+    }
+
+    #[test]
+    fn select_translates_words() {
+        let out = run_one(
+            Box::new(Select),
+            vec![Record::text("three"), Record::text("nine")],
+        );
+        assert_eq!(out.iter().map(|(_, r)| r.as_int().unwrap()).collect::<Vec<_>>(), vec![3, 9]);
+    }
+
+    #[test]
+    fn select_is_deterministic_on_unknown_words() {
+        let a = Select::word_to_number("falkirk");
+        let b = Select::word_to_number("falkirk");
+        assert_eq!(a, b);
+        assert!((0..1000).contains(&a));
+    }
+}

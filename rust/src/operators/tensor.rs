@@ -1,0 +1,459 @@
+//! Kernel-backed analytics operators.
+//!
+//! These are the vertices of the Figure-1 application whose per-event /
+//! per-epoch compute is an AOT-compiled XLA executable (lowered from the
+//! L2 JAX model, which calls the L1 Pallas kernels — see
+//! `python/compile/`). The operators depend only on the [`Kernel`] trait;
+//! [`crate::runtime`] provides the PJRT-backed implementation, and tests
+//! use in-process mock kernels.
+//!
+//! AOT executables have *static* shapes, so the operators pad/truncate to
+//! the compiled window size; the JAX kernels are written to be padding-
+//! invariant (padded entries carry zero values).
+
+use crate::engine::{Ctx, Processor, Record, Statefulness, TimeState};
+use crate::frontier::Frontier;
+use crate::time::Time;
+use crate::util::ser::{Decode, Encode, Reader, SerError, Writer};
+use std::rc::Rc;
+
+/// A compiled compute kernel: a pure function over f32 tensors.
+/// (Not `Send`/`Sync`: PJRT-backed kernels live on the engine thread.)
+pub trait Kernel {
+    /// Identifier (artifact name).
+    fn name(&self) -> &str;
+    /// Execute on flat f32 inputs, producing flat f32 outputs.
+    fn run(&self, inputs: &[&[f32]]) -> anyhow::Result<Vec<Vec<f32>>>;
+}
+
+/// Shared handle to a kernel (single-threaded sharing).
+pub type KernelHandle = Rc<dyn Kernel>;
+
+/// Stateless operator applying a kernel to each incoming tensor record
+/// (used as the body of the iterative-analytics loop: rank propagation).
+pub struct TensorApply {
+    kernel: KernelHandle,
+}
+
+impl TensorApply {
+    pub fn new(kernel: KernelHandle) -> TensorApply {
+        TensorApply { kernel }
+    }
+}
+
+impl Processor for TensorApply {
+    fn on_message(&mut self, _port: usize, _t: Time, d: Record, ctx: &mut Ctx) {
+        let x = d.as_tensor().unwrap_or_else(|| panic!("TensorApply expects Tensor, got {d:?}"));
+        let outs = self.kernel.run(&[x]).expect("kernel execution failed");
+        let out = Record::tensor(outs.into_iter().next().expect("kernel produced no output"));
+        for port in 0..ctx.num_outputs() {
+            ctx.send(port, out.clone());
+        }
+    }
+}
+
+/// Per-time buffered window for [`WindowAggregate`].
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct WindowBuf {
+    pub keys: Vec<i64>,
+    pub vals: Vec<f64>,
+}
+
+impl Encode for WindowBuf {
+    fn encode(&self, w: &mut Writer) {
+        w.varint(self.keys.len() as u64);
+        for (k, v) in self.keys.iter().zip(&self.vals) {
+            w.varint_i(*k);
+            w.f64(*v);
+        }
+    }
+}
+
+impl Decode for WindowBuf {
+    fn decode(r: &mut Reader) -> Result<Self, SerError> {
+        let n = r.varint()? as usize;
+        let mut b = WindowBuf::default();
+        for _ in 0..n {
+            b.keys.push(r.varint_i()?);
+            b.vals.push(r.f64()?);
+        }
+        Ok(b)
+    }
+}
+
+/// Windowed keyed aggregation: buffers `Kv` records per logical time; on
+/// completion it packs the window into fixed-shape tensors, runs the
+/// `stream_agg` kernel (one-hot matmul segment-sum on the MXU), and emits
+/// the per-key sums as a tensor plus per-key `Kv` records.
+///
+/// State is time-partitioned, so it selectively checkpoints and — like
+/// the paper's Sum — discards each time's buffer once complete.
+pub struct WindowAggregate {
+    kernel: KernelHandle,
+    /// Compiled window size (records per aggregation call).
+    window: usize,
+    /// Number of key buckets (kernel output length).
+    num_keys: usize,
+    /// Emit the per-key sums as `Kv` records on port 0 instead of a
+    /// tensor (for consumers like joins).
+    kv_output: bool,
+    state: TimeState<WindowBuf>,
+}
+
+impl WindowAggregate {
+    pub fn new(kernel: KernelHandle, window: usize, num_keys: usize) -> WindowAggregate {
+        WindowAggregate { kernel, window, num_keys, kv_output: false, state: TimeState::new() }
+    }
+
+    /// Variant whose port-0 output is per-key `Kv` records.
+    pub fn new_kv(kernel: KernelHandle, window: usize, num_keys: usize) -> WindowAggregate {
+        WindowAggregate { kernel, window, num_keys, kv_output: true, state: TimeState::new() }
+    }
+}
+
+impl Processor for WindowAggregate {
+    fn on_message(&mut self, _port: usize, t: Time, d: Record, ctx: &mut Ctx) {
+        let (k, v) = d.as_kv().unwrap_or_else(|| panic!("WindowAggregate expects Kv, got {d:?}"));
+        let fresh = self.state.get(&t).is_none();
+        let buf = self.state.entry_or(t, WindowBuf::default);
+        buf.keys.push(k);
+        buf.vals.push(v);
+        if fresh {
+            ctx.notify_at(t);
+        }
+    }
+
+    fn on_notification(&mut self, t: Time, ctx: &mut Ctx) {
+        let Some(buf) = self.state.remove(&t) else { return };
+        // Pad/chunk to the compiled window size; keys are bucketed modulo
+        // num_keys; padded slots carry value 0 (sum-invariant).
+        let mut sums = vec![0f32; self.num_keys];
+        for chunk_start in (0..buf.keys.len()).step_by(self.window) {
+            let end = (chunk_start + self.window).min(buf.keys.len());
+            let mut keys = vec![0f32; self.window];
+            let mut vals = vec![0f32; self.window];
+            for (i, j) in (chunk_start..end).enumerate() {
+                keys[i] = (buf.keys[j].rem_euclid(self.num_keys as i64)) as f32;
+                vals[i] = buf.vals[j] as f32;
+            }
+            let outs = self.kernel.run(&[&keys, &vals]).expect("stream_agg kernel failed");
+            for (acc, x) in sums.iter_mut().zip(&outs[0]) {
+                *acc += x;
+            }
+        }
+        for port in 0..ctx.num_outputs() {
+            if self.kv_output {
+                for (k, s) in sums.iter().enumerate() {
+                    if *s != 0.0 {
+                        ctx.send(port, Record::Kv { key: k as i64, val: *s as f64 });
+                    }
+                }
+            } else {
+                ctx.send(port, Record::tensor(sums.clone()));
+            }
+        }
+    }
+
+    fn statefulness(&self) -> Statefulness {
+        Statefulness::TimePartitioned
+    }
+
+    fn checkpoint_upto(&self, f: &Frontier) -> Vec<u8> {
+        self.state.checkpoint_upto(f)
+    }
+
+    fn restore(&mut self, blob: &[u8]) {
+        self.state.restore(blob);
+    }
+
+    fn reset(&mut self) {
+        self.state.clear();
+    }
+}
+
+/// Collects `Kv` records for each logical time into a dense vector
+/// (`slot = key mod n`, summed); on completion emits it as the seed
+/// tensor of the iterative computation, then discards the partition.
+pub struct TensorCollect {
+    n: usize,
+    state: TimeState<Vec<f64>>,
+}
+
+impl TensorCollect {
+    pub fn new(n: usize) -> TensorCollect {
+        TensorCollect { n, state: TimeState::new() }
+    }
+}
+
+impl Processor for TensorCollect {
+    fn on_message(&mut self, _port: usize, t: Time, d: Record, ctx: &mut Ctx) {
+        let (k, v) = d.as_kv().unwrap_or_else(|| panic!("TensorCollect expects Kv, got {d:?}"));
+        let n = self.n;
+        let fresh = self.state.get(&t).is_none();
+        let vec = self.state.entry_or(t, || vec![0.0; n]);
+        vec[k.rem_euclid(n as i64) as usize] += v;
+        if fresh {
+            ctx.notify_at(t);
+        }
+    }
+
+    fn on_notification(&mut self, t: Time, ctx: &mut Ctx) {
+        if let Some(v) = self.state.remove(&t) {
+            for port in 0..ctx.num_outputs() {
+                ctx.send(port, Record::tensor(v.iter().map(|x| *x as f32).collect()));
+            }
+        }
+    }
+
+    fn statefulness(&self) -> Statefulness {
+        Statefulness::TimePartitioned
+    }
+
+    fn checkpoint_upto(&self, f: &Frontier) -> Vec<u8> {
+        self.state.checkpoint_upto(f)
+    }
+
+    fn restore(&mut self, blob: &[u8]) {
+        self.state.restore(blob);
+    }
+
+    fn reset(&mut self) {
+        self.state.clear();
+    }
+}
+
+/// The "complex state that must be regularly checkpointed" of the
+/// Figure-1 lazy regime: retains the converged rank tensor per epoch
+/// (time-partitioned, so selectively checkpointable) and publishes it as
+/// per-key `Kv` records once the epoch completes.
+pub struct RankStore {
+    state: TimeState<Vec<f64>>,
+}
+
+impl RankStore {
+    pub fn new() -> RankStore {
+        RankStore { state: TimeState::new() }
+    }
+
+    /// Latest stored rank at or below `t` (inspection).
+    pub fn rank_at(&self, t: &Time) -> Option<Vec<f64>> {
+        self.state.get(t).cloned()
+    }
+}
+
+impl Default for RankStore {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Processor for RankStore {
+    fn on_message(&mut self, _port: usize, t: Time, d: Record, ctx: &mut Ctx) {
+        let x = d.as_tensor().unwrap_or_else(|| panic!("RankStore expects Tensor, got {d:?}"));
+        let fresh = self.state.get(&t).is_none();
+        *self.state.entry_or(t, Vec::new) = x.iter().map(|v| *v as f64).collect();
+        if fresh {
+            ctx.notify_at(t);
+        }
+    }
+
+    fn on_notification(&mut self, t: Time, ctx: &mut Ctx) {
+        if let Some(v) = self.state.get(&t) {
+            for port in 0..ctx.num_outputs() {
+                for (k, x) in v.iter().enumerate() {
+                    if *x != 0.0 {
+                        ctx.send(port, Record::Kv { key: k as i64, val: *x });
+                    }
+                }
+            }
+        }
+        // State is retained (the regime's "complex state").
+    }
+
+    fn statefulness(&self) -> Statefulness {
+        Statefulness::TimePartitioned
+    }
+
+    fn checkpoint_upto(&self, f: &Frontier) -> Vec<u8> {
+        self.state.checkpoint_upto(f)
+    }
+
+    fn restore(&mut self, blob: &[u8]) {
+        self.state.restore(blob);
+    }
+
+    fn reset(&mut self) {
+        self.state.clear();
+    }
+}
+
+/// In-process reference kernels: used by tests and as a fallback by the
+/// examples when `make artifacts` has not produced the XLA artifacts.
+/// They mirror `python/compile/kernels/ref.py` exactly.
+pub mod mock {
+    use super::*;
+
+    /// Reference segment-sum kernel (mirrors python/compile/kernels/ref.py).
+    pub struct MockAgg {
+        pub num_keys: usize,
+    }
+
+    impl Kernel for MockAgg {
+        fn name(&self) -> &str {
+            "mock_stream_agg"
+        }
+
+        fn run(&self, inputs: &[&[f32]]) -> anyhow::Result<Vec<Vec<f32>>> {
+            let (keys, vals) = (inputs[0], inputs[1]);
+            let mut out = vec![0f32; self.num_keys];
+            for (k, v) in keys.iter().zip(vals) {
+                out[*k as usize % self.num_keys] += v;
+            }
+            Ok(vec![out])
+        }
+    }
+
+    /// Doubles its input tensor.
+    pub struct MockDouble;
+
+    impl Kernel for MockDouble {
+        fn name(&self) -> &str {
+            "mock_double"
+        }
+
+        fn run(&self, inputs: &[&[f32]]) -> anyhow::Result<Vec<Vec<f32>>> {
+            Ok(vec![inputs[0].iter().map(|x| x * 2.0).collect()])
+        }
+    }
+
+    /// Reference rank-propagation step on a ring graph of `n` nodes
+    /// (mirrors `iterate_ref` in python/compile/kernels/ref.py):
+    /// `r'[i] = (1-d)/n * total + d * (r[i-1] + r[i+1]) / 2`.
+    pub struct MockIterate {
+        pub damping: f32,
+    }
+
+    impl Kernel for MockIterate {
+        fn name(&self) -> &str {
+            "mock_iterate"
+        }
+
+        fn run(&self, inputs: &[&[f32]]) -> anyhow::Result<Vec<Vec<f32>>> {
+            let r = inputs[0];
+            let n = r.len();
+            let total: f32 = r.iter().sum();
+            let out: Vec<f32> = (0..n)
+                .map(|i| {
+                    let left = r[(i + n - 1) % n];
+                    let right = r[(i + 1) % n];
+                    (1.0 - self.damping) / n as f32 * total + self.damping * (left + right) / 2.0
+                })
+                .collect();
+            Ok(vec![out])
+        }
+    }
+
+    /// Reference batch statistics: `[sum, mean, max]` of the input
+    /// (mirrors `batch_stats_ref`).
+    pub struct MockStats;
+
+    impl Kernel for MockStats {
+        fn name(&self) -> &str {
+            "mock_batch_stats"
+        }
+
+        fn run(&self, inputs: &[&[f32]]) -> anyhow::Result<Vec<Vec<f32>>> {
+            let v = inputs[0];
+            let sum: f32 = v.iter().sum();
+            let mean = sum / v.len() as f32;
+            let max = v.iter().copied().fold(f32::NEG_INFINITY, f32::max);
+            Ok(vec![vec![sum, mean, max]])
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::mock::{MockAgg, MockDouble};
+    use super::*;
+    use crate::engine::{Delivery, Engine};
+    use crate::graph::{GraphBuilder, ProcId, Projection};
+    use crate::operators::stateless::{shared_vec, Sink, Source};
+    use crate::time::TimeDomain;
+    use std::sync::Arc as StdArc;
+    use std::rc::Rc;
+
+    #[test]
+    fn tensor_apply_runs_kernel() {
+        let mut g = GraphBuilder::new();
+        let s = g.add_proc("src", TimeDomain::EPOCH);
+        let a = g.add_proc("apply", TimeDomain::EPOCH);
+        let k = g.add_proc("sink", TimeDomain::EPOCH);
+        g.connect(s, a, Projection::Identity);
+        g.connect(a, k, Projection::Identity);
+        let out = shared_vec();
+        let procs: Vec<Box<dyn Processor>> = vec![
+            Box::new(Source),
+            Box::new(TensorApply::new(Rc::new(MockDouble))),
+            Box::new(Sink(out.clone())),
+        ];
+        let mut eng = Engine::new(StdArc::new(g.build().unwrap()), procs, Delivery::Fifo);
+        eng.push_input(ProcId(0), Time::epoch(0), Record::tensor(vec![1.0, 2.0]));
+        eng.run_to_quiescence(100);
+        let got = out.lock().unwrap().clone();
+        assert_eq!(got[0].1.as_tensor().unwrap(), &[2.0, 4.0]);
+    }
+
+    #[test]
+    fn window_aggregate_sums_by_key_across_chunks() {
+        let mut g = GraphBuilder::new();
+        let s = g.add_proc("src", TimeDomain::EPOCH);
+        let wagg = g.add_proc("agg", TimeDomain::EPOCH);
+        let k = g.add_proc("sink", TimeDomain::EPOCH);
+        g.connect(s, wagg, Projection::Identity);
+        g.connect(wagg, k, Projection::Identity);
+        let out = shared_vec();
+        // Window of 4 forces chunking for 6 records.
+        let procs: Vec<Box<dyn Processor>> = vec![
+            Box::new(Source),
+            Box::new(WindowAggregate::new(Rc::new(MockAgg { num_keys: 3 }), 4, 3)),
+            Box::new(Sink(out.clone())),
+        ];
+        let mut eng = Engine::new(StdArc::new(g.build().unwrap()), procs, Delivery::Fifo);
+        let src = ProcId(0);
+        eng.advance_input(src, Time::epoch(0));
+        for (k, v) in [(0i64, 1.0), (1, 2.0), (2, 3.0), (0, 4.0), (1, 5.0), (5, 6.0)] {
+            eng.push_input(src, Time::epoch(0), Record::kv(k, v));
+        }
+        eng.close_input(src);
+        eng.run_to_quiescence(1000);
+        let got = out.lock().unwrap().clone();
+        assert_eq!(got.len(), 1);
+        // key 0: 1+4 = 5; key 1: 2+5 = 7; key 2: 3+6(5%3=2) = 9.
+        assert_eq!(got[0].1.as_tensor().unwrap(), &[5.0, 7.0, 9.0]);
+    }
+
+    #[test]
+    fn window_buf_roundtrip() {
+        let b = WindowBuf { keys: vec![1, -2], vals: vec![0.5, 1.5] };
+        let bytes = b.to_bytes();
+        assert_eq!(WindowBuf::from_bytes(&bytes).unwrap(), b);
+    }
+
+    #[test]
+    fn window_aggregate_selective_checkpoint() {
+        let mut wa = WindowAggregate::new(Rc::new(MockAgg { num_keys: 2 }), 4, 2);
+        let out_edges: [crate::graph::EdgeId; 0] = [];
+        let summaries: [crate::progress::Summary; 0] = [];
+        let seq_dst: [bool; 0] = [];
+        let mut ctx = crate::engine::Ctx::new(Time::epoch(1), &out_edges, &summaries, &seq_dst);
+        wa.on_message(0, Time::epoch(1), Record::kv(0, 9.0), &mut ctx);
+        let mut ctx = crate::engine::Ctx::new(Time::epoch(0), &out_edges, &summaries, &seq_dst);
+        wa.on_message(0, Time::epoch(0), Record::kv(1, 3.0), &mut ctx);
+        let blob = wa.checkpoint_upto(&Frontier::upto_epoch(0));
+        let mut back = WindowAggregate::new(Rc::new(MockAgg { num_keys: 2 }), 4, 2);
+        back.restore(&blob);
+        assert!(back.state.get(&Time::epoch(0)).is_some());
+        assert!(back.state.get(&Time::epoch(1)).is_none());
+    }
+}

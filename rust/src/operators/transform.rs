@@ -1,0 +1,270 @@
+//! Time-domain bridging transformers — the §3.2 worked examples.
+//!
+//! "Even in systems without loops, it may be useful to translate between
+//! time domains": the paper describes a processor reading from an
+//! epoch-structured computation and feeding an eager seq-number consumer
+//! (buffering epoch 2 until epoch 1 completes, so φ(e)({1}) = {1…73} can
+//! be captured as a message count), and the reverse transformer that
+//! constructs epochs from windows of messages. Both live on
+//! [`Projection::PerCheckpoint`] edges whose φ is recorded per checkpoint
+//! by the harness.
+
+use crate::engine::{Ctx, Processor, Record, Statefulness, TimeState};
+use crate::frontier::Frontier;
+use crate::time::Time;
+
+/// Epoch → seq bridge: buffers each epoch's records; when the epoch
+/// completes, forwards them in arrival order into the seq-domain
+/// destination (the engine assigns the `(e, s)` times). Downstream thus
+/// sees a deterministic sequence: all of epoch 0, then all of epoch 1, …
+/// — exactly the paper's "forward all epoch 1 data before sending any
+/// epoch 2 data".
+#[derive(Default)]
+pub struct EpochToSeq {
+    buf: TimeState<Vec<Record>>,
+}
+
+impl Processor for EpochToSeq {
+    fn on_message(&mut self, _port: usize, t: Time, d: Record, ctx: &mut Ctx) {
+        let fresh = self.buf.get(&t).is_none();
+        self.buf.entry_or(t, Vec::new).push(d);
+        if fresh {
+            ctx.notify_at(t);
+        }
+    }
+
+    fn on_notification(&mut self, t: Time, ctx: &mut Ctx) {
+        if let Some(records) = self.buf.remove(&t) {
+            for r in records {
+                for port in 0..ctx.num_outputs() {
+                    ctx.send(port, r.clone());
+                }
+            }
+        }
+    }
+
+    fn statefulness(&self) -> Statefulness {
+        Statefulness::TimePartitioned
+    }
+
+    fn checkpoint_upto(&self, f: &Frontier) -> Vec<u8> {
+        self.buf.checkpoint_upto(f)
+    }
+
+    fn restore(&mut self, blob: &[u8]) {
+        self.buf.restore(blob);
+    }
+
+    fn reset(&mut self) {
+        self.buf.clear();
+    }
+}
+
+/// Seq → epoch bridge: constructs epochs from consecutive windows of
+/// `window` input messages (the paper's "construct epochs from sets of
+/// messages received within particular windows"). Emits each record at
+/// its window's epoch via an explicit destination-domain time.
+///
+/// The driver owns the *capability* side: it must hold this processor's
+/// input capability at `Time::epoch(current_window())` (via
+/// [`crate::engine::Engine::advance_input`]) so downstream epoch
+/// completion tracks window closure. State is a single counter —
+/// monolithic, checkpointed whole.
+pub struct SeqToEpoch {
+    window: u64,
+    seen: u64,
+}
+
+impl SeqToEpoch {
+    pub fn new(window: u64) -> SeqToEpoch {
+        SeqToEpoch { window, seen: 0 }
+    }
+
+    /// The epoch currently being filled.
+    pub fn current_window(&self) -> u64 {
+        self.seen / self.window
+    }
+}
+
+impl Processor for SeqToEpoch {
+    fn on_message(&mut self, _port: usize, _t: Time, d: Record, ctx: &mut Ctx) {
+        let epoch = self.seen / self.window;
+        self.seen += 1;
+        for port in 0..ctx.num_outputs() {
+            ctx.send_at(port, Time::epoch(epoch), d.clone());
+        }
+    }
+
+    fn statefulness(&self) -> Statefulness {
+        Statefulness::Monolithic
+    }
+
+    fn checkpoint_upto(&self, _f: &Frontier) -> Vec<u8> {
+        let mut w = crate::util::ser::Writer::new();
+        w.varint(self.window);
+        w.varint(self.seen);
+        w.into_bytes()
+    }
+
+    fn restore(&mut self, blob: &[u8]) {
+        if blob.is_empty() {
+            self.seen = 0;
+            return;
+        }
+        let mut r = crate::util::ser::Reader::new(blob);
+        self.window = r.varint().expect("corrupt SeqToEpoch");
+        self.seen = r.varint().expect("corrupt SeqToEpoch");
+    }
+
+    fn reset(&mut self) {
+        self.seen = 0;
+    }
+}
+
+/// Per-time distinct: forwards each record the first time it appears
+/// within a logical time, suppressing duplicates; discards the seen-set
+/// when the time completes (time-partitioned, selectively
+/// checkpointable).
+#[derive(Default)]
+pub struct Distinct {
+    seen: TimeState<Vec<Record>>,
+}
+
+impl Processor for Distinct {
+    fn on_message(&mut self, _port: usize, t: Time, d: Record, ctx: &mut Ctx) {
+        let fresh = self.seen.get(&t).is_none();
+        let set = self.seen.entry_or(t, Vec::new);
+        if !set.contains(&d) {
+            set.push(d.clone());
+            for port in 0..ctx.num_outputs() {
+                ctx.send(port, d.clone());
+            }
+        }
+        if fresh {
+            ctx.notify_at(t);
+        }
+    }
+
+    fn on_notification(&mut self, t: Time, _ctx: &mut Ctx) {
+        self.seen.remove(&t);
+    }
+
+    fn statefulness(&self) -> Statefulness {
+        Statefulness::TimePartitioned
+    }
+
+    fn checkpoint_upto(&self, f: &Frontier) -> Vec<u8> {
+        self.seen.checkpoint_upto(f)
+    }
+
+    fn restore(&mut self, blob: &[u8]) {
+        self.seen.restore(blob);
+    }
+
+    fn reset(&mut self) {
+        self.seen.clear();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::engine::{Delivery, Engine};
+    use crate::graph::{GraphBuilder, ProcId, Projection};
+    use crate::operators::{shared_vec, Sink, Source};
+    use crate::time::TimeDomain;
+    use std::sync::Arc;
+
+    #[test]
+    fn epoch_to_seq_orders_epochs() {
+        let mut g = GraphBuilder::new();
+        let s = g.add_proc("src", TimeDomain::EPOCH);
+        let b = g.add_proc("bridge", TimeDomain::EPOCH);
+        let k = g.add_proc("sink", TimeDomain::Seq);
+        g.connect(s, b, Projection::Identity);
+        g.connect(b, k, Projection::PerCheckpoint);
+        let out = shared_vec();
+        let procs: Vec<Box<dyn Processor>> =
+            vec![Box::new(Source), Box::new(EpochToSeq::default()), Box::new(Sink(out.clone()))];
+        let mut eng = Engine::new(Arc::new(g.build().unwrap()), procs, Delivery::Fifo);
+        let src = ProcId(0);
+        // Interleave two epochs; the bridge must emit epoch 0 first.
+        eng.advance_input(src, Time::epoch(0));
+        eng.push_input(src, Time::epoch(1), Record::Int(10));
+        eng.push_input(src, Time::epoch(0), Record::Int(1));
+        eng.push_input(src, Time::epoch(1), Record::Int(11));
+        eng.push_input(src, Time::epoch(0), Record::Int(2));
+        eng.close_input(src);
+        eng.run_to_quiescence(10_000);
+        let got = out.lock().unwrap().clone();
+        let vals: Vec<i64> = got.iter().map(|(_, r)| r.as_int().unwrap()).collect();
+        assert_eq!(vals, vec![1, 2, 10, 11], "epoch 0 fully precedes epoch 1");
+        // Times are engine-assigned sequence numbers 1..=4.
+        let seqs: Vec<u64> = got.iter().map(|(t, _)| t.seq_of()).collect();
+        assert_eq!(seqs, vec![1, 2, 3, 4]);
+    }
+
+    #[test]
+    fn seq_to_epoch_windows() {
+        let mut g = GraphBuilder::new();
+        let s = g.add_proc("src", TimeDomain::EPOCH);
+        let w = g.add_proc("window", TimeDomain::Seq);
+        let k = g.add_proc("sink", TimeDomain::EPOCH);
+        g.connect(s, w, Projection::PerCheckpoint);
+        g.connect(w, k, Projection::PerCheckpoint);
+        let out = shared_vec();
+        let procs: Vec<Box<dyn Processor>> = vec![
+            Box::new(Source),
+            Box::new(SeqToEpoch::new(3)),
+            Box::new(Sink(out.clone())),
+        ];
+        let mut eng = Engine::new(Arc::new(g.build().unwrap()), procs, Delivery::Fifo);
+        let src = ProcId(0);
+        for i in 0..7 {
+            eng.push_input(src, Time::epoch(0), Record::Int(i));
+        }
+        eng.run_to_quiescence(10_000);
+        let got = out.lock().unwrap().clone();
+        let epochs: Vec<u64> = got.iter().map(|(t, _)| t.epoch_of()).collect();
+        assert_eq!(epochs, vec![0, 0, 0, 1, 1, 1, 2], "3-message windows become epochs");
+    }
+
+    #[test]
+    fn seq_to_epoch_checkpoint_roundtrip() {
+        let mut op = SeqToEpoch::new(5);
+        op.seen = 12;
+        let blob = op.checkpoint_upto(&Frontier::Top);
+        let mut back = SeqToEpoch::new(1);
+        back.restore(&blob);
+        assert_eq!(back.window, 5);
+        assert_eq!(back.seen, 12);
+        assert_eq!(back.current_window(), 2);
+    }
+
+    #[test]
+    fn distinct_suppresses_within_time_only() {
+        let mut g = GraphBuilder::new();
+        let s = g.add_proc("src", TimeDomain::EPOCH);
+        let d = g.add_proc("distinct", TimeDomain::EPOCH);
+        let k = g.add_proc("sink", TimeDomain::EPOCH);
+        g.connect(s, d, Projection::Identity);
+        g.connect(d, k, Projection::Identity);
+        let out = shared_vec();
+        let procs: Vec<Box<dyn Processor>> =
+            vec![Box::new(Source), Box::new(Distinct::default()), Box::new(Sink(out.clone()))];
+        let mut eng = Engine::new(Arc::new(g.build().unwrap()), procs, Delivery::Fifo);
+        let src = ProcId(0);
+        eng.advance_input(src, Time::epoch(0));
+        for v in [1, 1, 2, 1] {
+            eng.push_input(src, Time::epoch(0), Record::Int(v));
+        }
+        eng.advance_input(src, Time::epoch(1));
+        // Same value reappears in the next epoch: forwarded again.
+        eng.push_input(src, Time::epoch(1), Record::Int(1));
+        eng.close_input(src);
+        eng.run_to_quiescence(10_000);
+        let vals: Vec<i64> =
+            out.lock().unwrap().iter().map(|(_, r)| r.as_int().unwrap()).collect();
+        assert_eq!(vals, vec![1, 2, 1]);
+    }
+}

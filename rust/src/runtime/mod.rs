@@ -1,0 +1,150 @@
+//! XLA/PJRT runtime: loads AOT-compiled analytics kernels and runs them
+//! on the Rust hot path.
+//!
+//! The build-time Python layer (`python/compile/aot.py`) lowers each L2
+//! JAX function (which calls the L1 Pallas kernels) to **HLO text** in
+//! `artifacts/<name>.hlo.txt`. HLO text — not a serialized
+//! `HloModuleProto` — is the interchange format because jax ≥ 0.5 emits
+//! protos with 64-bit instruction ids that the crate's xla_extension
+//! 0.5.1 rejects; the text parser reassigns ids. See
+//! `/opt/xla-example/load_hlo/` for the reference wiring.
+//!
+//! Each artifact is compiled once on a shared [`PjRtClient`] and exposed
+//! through the [`Kernel`] trait consumed by
+//! [`crate::operators::tensor`] — Python never runs at request time.
+
+use crate::operators::tensor::Kernel;
+use anyhow::{anyhow, Context, Result};
+use std::cell::RefCell;
+use std::path::{Path, PathBuf};
+use std::rc::Rc;
+
+thread_local! {
+    /// Thread-local PJRT CPU client (the xla crate's handles are
+    /// intentionally not Send; the engine is single-threaded).
+    static CLIENT: RefCell<Option<xla::PjRtClient>> = const { RefCell::new(None) };
+}
+
+fn with_client<T>(f: impl FnOnce(&xla::PjRtClient) -> Result<T>) -> Result<T> {
+    CLIENT.with(|cell| {
+        let mut guard = cell.borrow_mut();
+        if guard.is_none() {
+            *guard = Some(xla::PjRtClient::cpu().context("creating PJRT CPU client")?);
+        }
+        f(guard.as_ref().unwrap())
+    })
+}
+
+/// A compiled XLA executable loaded from an HLO-text artifact.
+pub struct XlaKernel {
+    name: String,
+    exe: xla::PjRtLoadedExecutable,
+    /// Expected number of inputs (sanity checking).
+    arity: usize,
+}
+
+impl XlaKernel {
+    /// Load and compile `artifacts/<name>.hlo.txt` from `dir`.
+    pub fn load(dir: &Path, name: &str, arity: usize) -> Result<XlaKernel> {
+        let path = dir.join(format!("{name}.hlo.txt"));
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().ok_or_else(|| anyhow!("non-utf8 path"))?,
+        )
+        .with_context(|| format!("parsing HLO text {}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = with_client(|c| {
+            c.compile(&comp).with_context(|| format!("compiling {name}"))
+        })?;
+        Ok(XlaKernel { name: name.to_string(), exe, arity })
+    }
+}
+
+impl Kernel for XlaKernel {
+    fn name(&self) -> &str {
+        &self.name
+    }
+
+    fn run(&self, inputs: &[&[f32]]) -> Result<Vec<Vec<f32>>> {
+        anyhow::ensure!(
+            inputs.len() == self.arity,
+            "{}: expected {} inputs, got {}",
+            self.name,
+            self.arity,
+            inputs.len()
+        );
+        let lits: Vec<xla::Literal> =
+            inputs.iter().map(|x| xla::Literal::vec1(x)).collect();
+        let result = self
+            .exe
+            .execute::<xla::Literal>(&lits)
+            .with_context(|| format!("executing {}", self.name))?[0][0]
+            .to_literal_sync()?;
+        // aot.py lowers with return_tuple=True: unpack the tuple.
+        let parts = result.to_tuple()?;
+        let mut out = Vec::with_capacity(parts.len());
+        for p in parts {
+            out.push(p.to_vec::<f32>()?);
+        }
+        Ok(out)
+    }
+}
+
+/// Artifact registry: loads kernels on demand, caches them, and reports
+/// what is available (examples degrade gracefully to mock kernels when
+/// `make artifacts` has not run).
+pub struct ArtifactRegistry {
+    dir: PathBuf,
+    cache: RefCell<std::collections::BTreeMap<String, Rc<XlaKernel>>>,
+}
+
+impl ArtifactRegistry {
+    pub fn new(dir: impl Into<PathBuf>) -> ArtifactRegistry {
+        ArtifactRegistry { dir: dir.into(), cache: RefCell::new(Default::default()) }
+    }
+
+    /// Default location: `$FALKIRK_ARTIFACTS` or `./artifacts`.
+    pub fn default_dir() -> ArtifactRegistry {
+        let dir = std::env::var("FALKIRK_ARTIFACTS").unwrap_or_else(|_| "artifacts".to_string());
+        ArtifactRegistry::new(dir)
+    }
+
+    pub fn available(&self, name: &str) -> bool {
+        self.dir.join(format!("{name}.hlo.txt")).exists()
+    }
+
+    /// Load (or fetch cached) kernel `name` with the given input arity.
+    pub fn kernel(&self, name: &str, arity: usize) -> Result<Rc<XlaKernel>> {
+        let mut cache = self.cache.borrow_mut();
+        if let Some(k) = cache.get(name) {
+            return Ok(k.clone());
+        }
+        let k = Rc::new(XlaKernel::load(&self.dir, name, arity)?);
+        cache.insert(name.to_string(), k.clone());
+        Ok(k)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // Kernel-vs-reference numerics are covered by python/tests (pytest +
+    // hypothesis); the integration tests in rust/tests/test_runtime.rs
+    // exercise load+execute end-to-end when artifacts exist. Here we only
+    // test registry behaviour that needs no artifacts.
+
+    #[test]
+    fn registry_reports_missing_artifacts() {
+        let reg = ArtifactRegistry::new("/nonexistent-dir");
+        assert!(!reg.available("stream_agg"));
+        assert!(reg.kernel("stream_agg", 2).is_err());
+    }
+
+    #[test]
+    fn default_dir_respects_env() {
+        std::env::set_var("FALKIRK_ARTIFACTS", "/tmp/falkirk-artifacts-test");
+        let reg = ArtifactRegistry::default_dir();
+        assert!(!reg.available("nope"));
+        std::env::remove_var("FALKIRK_ARTIFACTS");
+    }
+}

@@ -1,0 +1,486 @@
+//! Logical times (§2 of the paper).
+//!
+//! Every event — a message delivery or a notification — carries a logical
+//! time from one of two families:
+//!
+//! - **Sequence numbers** (§2.1, Fig. 2a): a time is a pair `(edge, seq)`;
+//!   times on different edges are incomparable, times on the same edge are
+//!   ordered by sequence number.
+//! - **Structured times** (§2.2–2.3, Fig. 2b/c): a time is an epoch plus
+//!   zero or more nested loop counters. Epochs are the depth-0 special
+//!   case. The partial order is the *product order* (as in Naiad/timely
+//!   dataflow): `(e, c₁..cₖ) ≤ (e', c'₁..c'ₖ)` iff every coordinate is ≤.
+//!
+//! §4.1 of the paper additionally imposes a *lexicographic* total order on
+//! times at a given processor so that frontiers collapse to a single
+//! largest element; [`LexTime`] provides that order. The general frontier
+//! algebra in [`crate::frontier`] works with the partial order.
+
+use crate::graph::EdgeId;
+use crate::util::ser::{Decode, Encode, Reader, SerError, Writer};
+use std::cmp::Ordering;
+
+/// Maximum nesting depth of loops supported in structured times. Keeping
+/// this fixed lets [`Time`] be `Copy`, which keeps the per-message cost of
+/// time tags at a few machine words (this matters: every message carries
+/// one).
+pub const MAX_LOOP_DEPTH: usize = 3;
+
+/// Loop-counter value meaning "all iterations" (⊤ in the counter
+/// coordinate). Used by frontiers to express e.g. `{(t, c) : all c}`,
+/// which arises from loop-ingress edge projections (§3.2).
+pub const CTR_INF: u64 = u64::MAX;
+
+/// The loop-counter coordinates of a structured time.
+#[derive(Copy, Clone, PartialEq, Eq, Hash, Debug, Default)]
+pub struct Loops {
+    depth: u8,
+    c: [u64; MAX_LOOP_DEPTH],
+}
+
+impl Loops {
+    /// No loop coordinates (a plain epoch).
+    pub const NONE: Loops = Loops { depth: 0, c: [0; MAX_LOOP_DEPTH] };
+
+    pub fn from_slice(cs: &[u64]) -> Loops {
+        assert!(cs.len() <= MAX_LOOP_DEPTH, "loop depth {} exceeds max {MAX_LOOP_DEPTH}", cs.len());
+        let mut c = [0u64; MAX_LOOP_DEPTH];
+        c[..cs.len()].copy_from_slice(cs);
+        Loops { depth: cs.len() as u8, c }
+    }
+
+    pub fn depth(&self) -> usize {
+        self.depth as usize
+    }
+
+    pub fn as_slice(&self) -> &[u64] {
+        &self.c[..self.depth as usize]
+    }
+
+    /// Push an innermost loop coordinate (entering a loop).
+    pub fn enter(&self, ctr: u64) -> Loops {
+        let mut l = *self;
+        assert!((l.depth as usize) < MAX_LOOP_DEPTH, "loop nesting exceeds MAX_LOOP_DEPTH");
+        l.c[l.depth as usize] = ctr;
+        l.depth += 1;
+        l
+    }
+
+    /// Pop the innermost loop coordinate (leaving a loop).
+    pub fn exit(&self) -> Loops {
+        assert!(self.depth > 0, "exit on depth-0 time");
+        let mut l = *self;
+        l.depth -= 1;
+        l.c[l.depth as usize] = 0;
+        l
+    }
+
+    /// Increment the innermost loop coordinate (feedback edge). Saturates
+    /// at [`CTR_INF`].
+    pub fn increment(&self) -> Loops {
+        assert!(self.depth > 0, "increment on depth-0 time");
+        let mut l = *self;
+        let i = (l.depth - 1) as usize;
+        l.c[i] = l.c[i].saturating_add(1);
+        l
+    }
+
+    pub fn innermost(&self) -> u64 {
+        assert!(self.depth > 0);
+        self.c[(self.depth - 1) as usize]
+    }
+}
+
+/// A logical time (see module docs).
+#[derive(Copy, Clone, PartialEq, Eq, Hash, Debug)]
+pub enum Time {
+    /// Sequence-number time `(edge, seq)`; `seq` starts at 1 as in the
+    /// paper's `{(e,1),…,(e,s)}` notation.
+    Seq { edge: EdgeId, seq: u64 },
+    /// Structured time: epoch + nested loop counters.
+    Structured { epoch: u64, loops: Loops },
+}
+
+impl Time {
+    /// A plain epoch time (depth-0 structured time).
+    pub fn epoch(e: u64) -> Time {
+        Time::Structured { epoch: e, loops: Loops::NONE }
+    }
+
+    /// A structured time with explicit loop counters.
+    pub fn structured(epoch: u64, loops: &[u64]) -> Time {
+        Time::Structured { epoch, loops: Loops::from_slice(loops) }
+    }
+
+    /// A sequence-number time.
+    pub fn seq(edge: EdgeId, seq: u64) -> Time {
+        Time::Seq { edge, seq }
+    }
+
+    /// The time domain this time belongs to.
+    pub fn domain(&self) -> TimeDomain {
+        match self {
+            Time::Seq { .. } => TimeDomain::Seq,
+            Time::Structured { loops, .. } => TimeDomain::Structured { depth: loops.depth },
+        }
+    }
+
+    /// Partial order `self ≤ other` (§3.1). Returns `false` for
+    /// incomparable or unrelated-domain pairs.
+    pub fn le(&self, other: &Time) -> bool {
+        match (self, other) {
+            (Time::Seq { edge: e1, seq: s1 }, Time::Seq { edge: e2, seq: s2 }) => {
+                e1 == e2 && s1 <= s2
+            }
+            (
+                Time::Structured { epoch: t1, loops: l1 },
+                Time::Structured { epoch: t2, loops: l2 },
+            ) => {
+                if l1.depth != l2.depth {
+                    return false;
+                }
+                t1 <= t2 && l1.as_slice().iter().zip(l2.as_slice()).all(|(a, b)| a <= b)
+            }
+            _ => false,
+        }
+    }
+
+    /// Strict partial order.
+    pub fn lt(&self, other: &Time) -> bool {
+        self.le(other) && self != other
+    }
+
+    /// True iff `self` and `other` are comparable in the partial order.
+    pub fn comparable(&self, other: &Time) -> bool {
+        self.le(other) || other.le(self)
+    }
+
+    /// Componentwise join (least upper bound) for structured times of
+    /// equal depth; `None` otherwise.
+    pub fn join(&self, other: &Time) -> Option<Time> {
+        match (self, other) {
+            (
+                Time::Structured { epoch: t1, loops: l1 },
+                Time::Structured { epoch: t2, loops: l2 },
+            ) if l1.depth == l2.depth => {
+                let mut c = [0u64; MAX_LOOP_DEPTH];
+                for i in 0..l1.depth as usize {
+                    c[i] = l1.c[i].max(l2.c[i]);
+                }
+                Some(Time::Structured {
+                    epoch: (*t1).max(*t2),
+                    loops: Loops { depth: l1.depth, c },
+                })
+            }
+            (Time::Seq { edge: e1, seq: s1 }, Time::Seq { edge: e2, seq: s2 }) if e1 == e2 => {
+                Some(Time::Seq { edge: *e1, seq: (*s1).max(*s2) })
+            }
+            _ => None,
+        }
+    }
+
+    /// Componentwise meet (greatest lower bound), same domain rules as
+    /// [`Time::join`].
+    pub fn meet(&self, other: &Time) -> Option<Time> {
+        match (self, other) {
+            (
+                Time::Structured { epoch: t1, loops: l1 },
+                Time::Structured { epoch: t2, loops: l2 },
+            ) if l1.depth == l2.depth => {
+                let mut c = [0u64; MAX_LOOP_DEPTH];
+                for i in 0..l1.depth as usize {
+                    c[i] = l1.c[i].min(l2.c[i]);
+                }
+                Some(Time::Structured {
+                    epoch: (*t1).min(*t2),
+                    loops: Loops { depth: l1.depth, c },
+                })
+            }
+            (Time::Seq { edge: e1, seq: s1 }, Time::Seq { edge: e2, seq: s2 }) if e1 == e2 => {
+                Some(Time::Seq { edge: *e1, seq: (*s1).min(*s2) })
+            }
+            _ => None,
+        }
+    }
+
+    /// The epoch coordinate of a structured time (panics on seq times).
+    pub fn epoch_of(&self) -> u64 {
+        match self {
+            Time::Structured { epoch, .. } => *epoch,
+            Time::Seq { .. } => panic!("epoch_of on a sequence-number time"),
+        }
+    }
+
+    /// The loop coordinates of a structured time (panics on seq times).
+    pub fn loops_of(&self) -> Loops {
+        match self {
+            Time::Structured { loops, .. } => *loops,
+            Time::Seq { .. } => panic!("loops_of on a sequence-number time"),
+        }
+    }
+
+    /// The sequence number of a seq time (panics on structured times).
+    pub fn seq_of(&self) -> u64 {
+        match self {
+            Time::Seq { seq, .. } => *seq,
+            Time::Structured { .. } => panic!("seq_of on a structured time"),
+        }
+    }
+}
+
+impl std::fmt::Display for Time {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            Time::Seq { edge, seq } => write!(f, "(e{}, s{})", edge.0, seq),
+            Time::Structured { epoch, loops } => {
+                write!(f, "({epoch}")?;
+                for c in loops.as_slice() {
+                    if *c == CTR_INF {
+                        write!(f, ", ∞")?;
+                    } else {
+                        write!(f, ", {c}")?;
+                    }
+                }
+                write!(f, ")")
+            }
+        }
+    }
+}
+
+/// A time domain: which family of logical times a processor uses (§3.2).
+#[derive(Copy, Clone, PartialEq, Eq, Hash, Debug)]
+pub enum TimeDomain {
+    /// Sequence numbers on input edges.
+    Seq,
+    /// Structured times with the given loop-nesting depth (0 = epochs).
+    Structured { depth: u8 },
+}
+
+impl TimeDomain {
+    /// The epoch domain (depth-0 structured).
+    pub const EPOCH: TimeDomain = TimeDomain::Structured { depth: 0 };
+
+    /// Domain one loop deeper (entering a loop scope).
+    pub fn deeper(&self) -> TimeDomain {
+        match self {
+            TimeDomain::Structured { depth } => TimeDomain::Structured { depth: depth + 1 },
+            TimeDomain::Seq => panic!("loops in a seq-number domain are not supported"),
+        }
+    }
+
+    /// Domain one loop shallower (leaving a loop scope).
+    pub fn shallower(&self) -> TimeDomain {
+        match self {
+            TimeDomain::Structured { depth } => {
+                assert!(*depth > 0, "shallower on depth-0 domain");
+                TimeDomain::Structured { depth: depth - 1 }
+            }
+            TimeDomain::Seq => panic!("loops in a seq-number domain are not supported"),
+        }
+    }
+
+    /// Whether `t` belongs to this domain.
+    pub fn admits(&self, t: &Time) -> bool {
+        t.domain() == *self
+    }
+}
+
+/// Wrapper giving [`Time`] the *lexicographic total order* the paper's
+/// Naiad implementation imposes per processor (§4.1): structured times
+/// compare by epoch, then loop counters outermost-first; seq times by
+/// (edge, seq). Seq times order before structured ones so `LexTime` is a
+/// total order on all of `Time` (cross-domain comparisons never arise in
+/// practice; the order just needs to be consistent for `BTreeMap` keys).
+#[derive(Copy, Clone, PartialEq, Eq, Hash, Debug)]
+pub struct LexTime(pub Time);
+
+impl Ord for LexTime {
+    fn cmp(&self, other: &Self) -> Ordering {
+        match (&self.0, &other.0) {
+            (Time::Seq { edge: e1, seq: s1 }, Time::Seq { edge: e2, seq: s2 }) => {
+                e1.cmp(e2).then(s1.cmp(s2))
+            }
+            (
+                Time::Structured { epoch: t1, loops: l1 },
+                Time::Structured { epoch: t2, loops: l2 },
+            ) => t1.cmp(t2).then_with(|| l1.as_slice().cmp(l2.as_slice())),
+            (Time::Seq { .. }, Time::Structured { .. }) => Ordering::Less,
+            (Time::Structured { .. }, Time::Seq { .. }) => Ordering::Greater,
+        }
+    }
+}
+
+impl PartialOrd for LexTime {
+    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+impl Encode for Time {
+    fn encode(&self, w: &mut Writer) {
+        match self {
+            Time::Seq { edge, seq } => {
+                w.u8(0);
+                w.varint(edge.0 as u64);
+                w.varint(*seq);
+            }
+            Time::Structured { epoch, loops } => {
+                w.u8(1);
+                w.varint(*epoch);
+                w.u8(loops.depth);
+                for c in loops.as_slice() {
+                    w.varint(*c);
+                }
+            }
+        }
+    }
+}
+
+impl Decode for Time {
+    fn decode(r: &mut Reader) -> Result<Self, SerError> {
+        match r.u8()? {
+            0 => {
+                let edge = EdgeId(r.varint()? as u32);
+                let seq = r.varint()?;
+                Ok(Time::Seq { edge, seq })
+            }
+            _ => {
+                let epoch = r.varint()?;
+                let depth = r.u8()? as usize;
+                let mut cs = [0u64; MAX_LOOP_DEPTH];
+                for c in cs.iter_mut().take(depth) {
+                    *c = r.varint()?;
+                }
+                Ok(Time::Structured { epoch, loops: Loops { depth: depth as u8, c: cs } })
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn e(i: u32) -> EdgeId {
+        EdgeId(i)
+    }
+
+    #[test]
+    fn seq_partial_order() {
+        let a = Time::seq(e(0), 3);
+        let b = Time::seq(e(0), 5);
+        let c = Time::seq(e(1), 4);
+        assert!(a.le(&b));
+        assert!(!b.le(&a));
+        assert!(a.le(&a));
+        // Different edges are incomparable (§3.1).
+        assert!(!a.le(&c) && !c.le(&a));
+        assert!(!a.comparable(&c));
+    }
+
+    #[test]
+    fn epoch_total_order() {
+        let t1 = Time::epoch(1);
+        let t2 = Time::epoch(2);
+        assert!(t1.le(&t2));
+        assert!(!t2.le(&t1));
+        assert!(t1.comparable(&t2));
+    }
+
+    #[test]
+    fn structured_product_order() {
+        let a = Time::structured(1, &[2]);
+        let b = Time::structured(2, &[3]);
+        let c = Time::structured(2, &[1]);
+        assert!(a.le(&b));
+        // (1,2) vs (2,1): incomparable in the product order.
+        assert!(!a.le(&c) && !c.le(&a));
+        // but lexicographically ordered:
+        assert!(LexTime(a) < LexTime(c));
+    }
+
+    #[test]
+    fn cross_domain_incomparable() {
+        let s = Time::seq(e(0), 1);
+        let t = Time::epoch(1);
+        assert!(!s.le(&t) && !t.le(&s));
+        let d0 = Time::epoch(5);
+        let d1 = Time::structured(5, &[0]);
+        assert!(!d0.le(&d1) && !d1.le(&d0), "different depths are different domains");
+    }
+
+    #[test]
+    fn join_meet() {
+        let a = Time::structured(1, &[4]);
+        let b = Time::structured(2, &[3]);
+        assert_eq!(a.join(&b), Some(Time::structured(2, &[4])));
+        assert_eq!(a.meet(&b), Some(Time::structured(1, &[3])));
+        let s = Time::seq(e(0), 2);
+        let t = Time::seq(e(0), 9);
+        assert_eq!(s.join(&t), Some(Time::seq(e(0), 9)));
+        assert_eq!(s.meet(&t), Some(Time::seq(e(0), 2)));
+        assert_eq!(s.join(&a), None);
+    }
+
+    #[test]
+    fn loops_enter_exit_increment() {
+        let t = Time::epoch(7);
+        let inner = Time::Structured { epoch: 7, loops: t.loops_of().enter(0) };
+        assert_eq!(inner, Time::structured(7, &[0]));
+        let inc = Time::Structured { epoch: 7, loops: inner.loops_of().increment() };
+        assert_eq!(inc, Time::structured(7, &[1]));
+        let out = Time::Structured { epoch: 7, loops: inc.loops_of().exit() };
+        assert_eq!(out, Time::epoch(7));
+    }
+
+    #[test]
+    fn ctr_inf_saturates() {
+        let t = Time::structured(0, &[CTR_INF]);
+        let inc = Time::Structured { epoch: 0, loops: t.loops_of().increment() };
+        assert_eq!(inc, t);
+        // (0, c) ≤ (0, ∞) for any c.
+        assert!(Time::structured(0, &[12345]).le(&t));
+    }
+
+    #[test]
+    fn lex_order_is_total_on_structured() {
+        let mut ts = vec![
+            Time::structured(2, &[0]),
+            Time::structured(1, &[9]),
+            Time::structured(1, &[0]),
+            Time::structured(0, &[5]),
+        ];
+        ts.sort_by_key(|t| LexTime(*t));
+        assert_eq!(
+            ts,
+            vec![
+                Time::structured(0, &[5]),
+                Time::structured(1, &[0]),
+                Time::structured(1, &[9]),
+                Time::structured(2, &[0]),
+            ]
+        );
+    }
+
+    #[test]
+    fn time_encode_roundtrip() {
+        use crate::util::ser::{Decode, Encode};
+        for t in [
+            Time::seq(e(3), 17),
+            Time::epoch(0),
+            Time::structured(5, &[1, 2]),
+            Time::structured(1, &[CTR_INF]),
+        ] {
+            let bytes = t.to_bytes();
+            assert_eq!(Time::from_bytes(&bytes).unwrap(), t);
+        }
+    }
+
+    #[test]
+    fn domain_admits() {
+        assert!(TimeDomain::EPOCH.admits(&Time::epoch(3)));
+        assert!(!TimeDomain::EPOCH.admits(&Time::structured(3, &[0])));
+        assert!(TimeDomain::Seq.admits(&Time::seq(e(0), 1)));
+        assert_eq!(TimeDomain::EPOCH.deeper(), TimeDomain::Structured { depth: 1 });
+    }
+}

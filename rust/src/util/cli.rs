@@ -1,0 +1,102 @@
+//! Minimal command-line argument parser (the vendored registry has no
+//! `clap`). Supports `--flag`, `--key value`, `--key=value` and positional
+//! arguments; typed getters with defaults.
+
+use std::collections::BTreeMap;
+
+/// Parsed arguments: options plus positionals, in order.
+#[derive(Debug, Default, Clone)]
+pub struct Args {
+    opts: BTreeMap<String, String>,
+    flags: Vec<String>,
+    pos: Vec<String>,
+}
+
+impl Args {
+    /// Parse a raw argument list. An option consumes the following token as
+    /// its value unless it is of the form `--key=value` or is followed by
+    /// another `--option` (in which case it is a boolean flag).
+    pub fn parse(raw: &[String]) -> Args {
+        let mut a = Args::default();
+        let mut i = 0;
+        while i < raw.len() {
+            let tok = &raw[i];
+            if let Some(body) = tok.strip_prefix("--") {
+                if let Some((k, v)) = body.split_once('=') {
+                    a.opts.insert(k.to_string(), v.to_string());
+                } else if i + 1 < raw.len() && !raw[i + 1].starts_with("--") {
+                    a.opts.insert(body.to_string(), raw[i + 1].clone());
+                    i += 1;
+                } else {
+                    a.flags.push(body.to_string());
+                }
+            } else {
+                a.pos.push(tok.clone());
+            }
+            i += 1;
+        }
+        a
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name) || self.opts.get(name).map(|v| v == "true").unwrap_or(false)
+    }
+
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.opts.get(name).map(|s| s.as_str())
+    }
+
+    pub fn get_u64(&self, name: &str, default: u64) -> u64 {
+        self.get(name).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+
+    pub fn get_usize(&self, name: &str, default: usize) -> usize {
+        self.get(name).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+
+    pub fn get_f64(&self, name: &str, default: f64) -> f64 {
+        self.get(name).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+
+    pub fn get_str<'a>(&'a self, name: &str, default: &'a str) -> &'a str {
+        self.get(name).unwrap_or(default)
+    }
+
+    pub fn positional(&self) -> &[String] {
+        &self.pos
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn strs(xs: &[&str]) -> Vec<String> {
+        xs.iter().map(|s| s.to_string()).collect()
+    }
+
+    #[test]
+    fn parses_options_and_flags() {
+        let a = Args::parse(&strs(&["run", "--steps", "100", "--fast", "--seed=7"]));
+        assert_eq!(a.positional(), &["run".to_string()]);
+        assert_eq!(a.get_u64("steps", 0), 100);
+        assert_eq!(a.get_u64("seed", 0), 7);
+        assert!(a.flag("fast"));
+        assert!(!a.flag("slow"));
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let a = Args::parse(&strs(&[]));
+        assert_eq!(a.get_u64("missing", 42), 42);
+        assert_eq!(a.get_f64("missing", 0.5), 0.5);
+        assert_eq!(a.get_str("missing", "x"), "x");
+    }
+
+    #[test]
+    fn flag_followed_by_option() {
+        let a = Args::parse(&strs(&["--verbose", "--n", "3"]));
+        assert!(a.flag("verbose"));
+        assert_eq!(a.get_u64("n", 0), 3);
+    }
+}

@@ -1,0 +1,14 @@
+//! Small self-contained utilities.
+//!
+//! The build image's vendored crate registry does not include `rand`,
+//! `serde`, `clap`, `criterion` or `proptest`, so the few pieces of those
+//! we need are implemented here: a seeded xorshift RNG ([`rng`]), a compact
+//! binary serializer for checkpoints ([`ser`]), summary statistics
+//! ([`stats`]), a tiny CLI argument parser ([`cli`]) and a miniature
+//! property-testing harness ([`prop`]).
+
+pub mod cli;
+pub mod prop;
+pub mod rng;
+pub mod ser;
+pub mod stats;

@@ -1,0 +1,96 @@
+//! Miniature property-testing harness (the offline registry has no
+//! `proptest`/`quickcheck`).
+//!
+//! A property is a closure from a seeded [`Rng`](crate::util::rng::Rng) to
+//! `Result<(), String>`; the harness runs it for `cases` deterministic
+//! seeds and reports the first failing seed. No shrinking — failures print
+//! the seed so the case can be replayed under a debugger.
+
+use crate::util::rng::Rng;
+
+/// Configuration for a property run.
+#[derive(Clone, Copy, Debug)]
+pub struct Config {
+    /// Number of random cases to run.
+    pub cases: u64,
+    /// Base seed; case `i` runs with seed `base_seed + i`.
+    pub base_seed: u64,
+}
+
+impl Default for Config {
+    fn default() -> Self {
+        Config { cases: 128, base_seed: 0xFA1C1_u64 }
+    }
+}
+
+/// Run `prop` for `cfg.cases` seeds; panic (with the seed) on first failure.
+pub fn check_with<F>(cfg: Config, name: &str, mut prop: F)
+where
+    F: FnMut(&mut Rng) -> Result<(), String>,
+{
+    for i in 0..cfg.cases {
+        let seed = cfg.base_seed.wrapping_add(i);
+        let mut rng = Rng::new(seed);
+        if let Err(msg) = prop(&mut rng) {
+            panic!("property '{name}' failed (seed {seed}, case {i}/{}): {msg}", cfg.cases);
+        }
+    }
+}
+
+/// Run with the default config.
+pub fn check<F>(name: &str, prop: F)
+where
+    F: FnMut(&mut Rng) -> Result<(), String>,
+{
+    check_with(Config::default(), name, prop)
+}
+
+/// Assert-style helper for inside properties.
+#[macro_export]
+macro_rules! prop_assert {
+    ($cond:expr, $($fmt:tt)+) => {
+        if !$cond {
+            return Err(format!($($fmt)+));
+        }
+    };
+    ($cond:expr) => {
+        if !$cond {
+            return Err(format!("assertion failed: {}", stringify!($cond)));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_passes() {
+        check("u64 halving", |rng| {
+            let x = rng.next_u64();
+            prop_assert!(x / 2 <= x);
+            Ok(())
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'always fails'")]
+    fn failing_property_panics_with_seed() {
+        check("always fails", |_rng| Err("nope".to_string()));
+    }
+
+    #[test]
+    fn deterministic_case_seeds() {
+        let mut seen = Vec::new();
+        check_with(Config { cases: 4, base_seed: 99 }, "collect", |rng| {
+            seen.push(rng.next_u64());
+            Ok(())
+        });
+        let mut again = Vec::new();
+        check_with(Config { cases: 4, base_seed: 99 }, "collect2", |rng| {
+            again.push(rng.next_u64());
+            Ok(())
+        });
+        assert_eq!(seen, again);
+    }
+}

@@ -1,0 +1,408 @@
+//! Compact binary serialization for checkpoints and logged messages.
+//!
+//! `serde` is not available in the offline registry, so this module
+//! provides a small hand-rolled encoder/decoder: LEB128 varints, length-
+//! prefixed byte strings, and an [`Encode`]/[`Decode`] trait pair that the
+//! checkpoint layer (`ft::checkpoint`) and the message log implement.
+//! The format is deliberately simple and versioned with a leading tag so
+//! that decode failures are detected rather than mis-read.
+
+use std::collections::BTreeMap;
+
+/// Serialization error.
+#[derive(Debug, thiserror::Error)]
+pub enum SerError {
+    #[error("unexpected end of input at byte {0}")]
+    Eof(usize),
+    #[error("varint too long at byte {0}")]
+    VarintOverflow(usize),
+    #[error("bad tag {found} (expected {expected}) at byte {at}")]
+    BadTag { expected: u8, found: u8, at: usize },
+    #[error("invalid utf-8 string")]
+    Utf8,
+}
+
+/// Byte-buffer writer.
+#[derive(Default, Debug, Clone)]
+pub struct Writer {
+    buf: Vec<u8>,
+}
+
+impl Writer {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn with_capacity(n: usize) -> Self {
+        Writer { buf: Vec::with_capacity(n) }
+    }
+
+    pub fn into_bytes(self) -> Vec<u8> {
+        self.buf
+    }
+
+    pub fn len(&self) -> usize {
+        self.buf.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.buf.is_empty()
+    }
+
+    pub fn u8(&mut self, v: u8) {
+        self.buf.push(v);
+    }
+
+    /// LEB128 unsigned varint.
+    pub fn varint(&mut self, mut v: u64) {
+        loop {
+            let b = (v & 0x7f) as u8;
+            v >>= 7;
+            if v == 0 {
+                self.buf.push(b);
+                return;
+            }
+            self.buf.push(b | 0x80);
+        }
+    }
+
+    /// Zig-zag signed varint.
+    pub fn varint_i(&mut self, v: i64) {
+        self.varint(((v << 1) ^ (v >> 63)) as u64);
+    }
+
+    pub fn f64(&mut self, v: f64) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    pub fn f32(&mut self, v: f32) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    pub fn bytes(&mut self, v: &[u8]) {
+        self.varint(v.len() as u64);
+        self.buf.extend_from_slice(v);
+    }
+
+    pub fn str(&mut self, v: &str) {
+        self.bytes(v.as_bytes());
+    }
+
+    pub fn f32s(&mut self, v: &[f32]) {
+        self.varint(v.len() as u64);
+        for &x in v {
+            self.f32(x);
+        }
+    }
+}
+
+/// Byte-buffer reader with position tracking.
+#[derive(Debug)]
+pub struct Reader<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Reader<'a> {
+    pub fn new(buf: &'a [u8]) -> Self {
+        Reader { buf, pos: 0 }
+    }
+
+    pub fn remaining(&self) -> usize {
+        self.buf.len() - self.pos
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.remaining() == 0
+    }
+
+    pub fn u8(&mut self) -> Result<u8, SerError> {
+        let b = *self.buf.get(self.pos).ok_or(SerError::Eof(self.pos))?;
+        self.pos += 1;
+        Ok(b)
+    }
+
+    pub fn expect_tag(&mut self, expected: u8) -> Result<(), SerError> {
+        let at = self.pos;
+        let found = self.u8()?;
+        if found != expected {
+            return Err(SerError::BadTag { expected, found, at });
+        }
+        Ok(())
+    }
+
+    pub fn varint(&mut self) -> Result<u64, SerError> {
+        let start = self.pos;
+        let mut v = 0u64;
+        let mut shift = 0u32;
+        loop {
+            let b = self.u8()?;
+            if shift >= 64 {
+                return Err(SerError::VarintOverflow(start));
+            }
+            v |= ((b & 0x7f) as u64) << shift;
+            if b & 0x80 == 0 {
+                return Ok(v);
+            }
+            shift += 7;
+        }
+    }
+
+    pub fn varint_i(&mut self) -> Result<i64, SerError> {
+        let v = self.varint()?;
+        Ok(((v >> 1) as i64) ^ -((v & 1) as i64))
+    }
+
+    pub fn f64(&mut self) -> Result<f64, SerError> {
+        if self.remaining() < 8 {
+            return Err(SerError::Eof(self.pos));
+        }
+        let mut a = [0u8; 8];
+        a.copy_from_slice(&self.buf[self.pos..self.pos + 8]);
+        self.pos += 8;
+        Ok(f64::from_le_bytes(a))
+    }
+
+    pub fn f32(&mut self) -> Result<f32, SerError> {
+        if self.remaining() < 4 {
+            return Err(SerError::Eof(self.pos));
+        }
+        let mut a = [0u8; 4];
+        a.copy_from_slice(&self.buf[self.pos..self.pos + 4]);
+        self.pos += 4;
+        Ok(f32::from_le_bytes(a))
+    }
+
+    pub fn bytes(&mut self) -> Result<&'a [u8], SerError> {
+        let n = self.varint()? as usize;
+        if self.remaining() < n {
+            return Err(SerError::Eof(self.pos));
+        }
+        let s = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+
+    pub fn str(&mut self) -> Result<&'a str, SerError> {
+        std::str::from_utf8(self.bytes()?).map_err(|_| SerError::Utf8)
+    }
+
+    pub fn f32s(&mut self) -> Result<Vec<f32>, SerError> {
+        let n = self.varint()? as usize;
+        let mut v = Vec::with_capacity(n.min(1 << 20));
+        for _ in 0..n {
+            v.push(self.f32()?);
+        }
+        Ok(v)
+    }
+}
+
+/// Types that can write themselves into a [`Writer`].
+pub trait Encode {
+    fn encode(&self, w: &mut Writer);
+
+    fn to_bytes(&self) -> Vec<u8> {
+        let mut w = Writer::new();
+        self.encode(&mut w);
+        w.into_bytes()
+    }
+}
+
+/// Types that can read themselves from a [`Reader`].
+pub trait Decode: Sized {
+    fn decode(r: &mut Reader) -> Result<Self, SerError>;
+
+    fn from_bytes(buf: &[u8]) -> Result<Self, SerError> {
+        let mut r = Reader::new(buf);
+        let v = Self::decode(&mut r)?;
+        Ok(v)
+    }
+}
+
+impl Encode for u64 {
+    fn encode(&self, w: &mut Writer) {
+        w.varint(*self);
+    }
+}
+
+impl Decode for u64 {
+    fn decode(r: &mut Reader) -> Result<Self, SerError> {
+        r.varint()
+    }
+}
+
+impl Encode for i64 {
+    fn encode(&self, w: &mut Writer) {
+        w.varint_i(*self);
+    }
+}
+
+impl Decode for i64 {
+    fn decode(r: &mut Reader) -> Result<Self, SerError> {
+        r.varint_i()
+    }
+}
+
+impl Encode for f64 {
+    fn encode(&self, w: &mut Writer) {
+        w.f64(*self);
+    }
+}
+
+impl Decode for f64 {
+    fn decode(r: &mut Reader) -> Result<Self, SerError> {
+        r.f64()
+    }
+}
+
+impl Encode for String {
+    fn encode(&self, w: &mut Writer) {
+        w.str(self);
+    }
+}
+
+impl Decode for String {
+    fn decode(r: &mut Reader) -> Result<Self, SerError> {
+        Ok(r.str()?.to_owned())
+    }
+}
+
+impl<T: Encode> Encode for Vec<T> {
+    fn encode(&self, w: &mut Writer) {
+        w.varint(self.len() as u64);
+        for x in self {
+            x.encode(w);
+        }
+    }
+}
+
+impl<T: Decode> Decode for Vec<T> {
+    fn decode(r: &mut Reader) -> Result<Self, SerError> {
+        let n = r.varint()? as usize;
+        let mut v = Vec::with_capacity(n.min(1 << 16));
+        for _ in 0..n {
+            v.push(T::decode(r)?);
+        }
+        Ok(v)
+    }
+}
+
+impl<A: Encode, B: Encode> Encode for (A, B) {
+    fn encode(&self, w: &mut Writer) {
+        self.0.encode(w);
+        self.1.encode(w);
+    }
+}
+
+impl<A: Decode, B: Decode> Decode for (A, B) {
+    fn decode(r: &mut Reader) -> Result<Self, SerError> {
+        Ok((A::decode(r)?, B::decode(r)?))
+    }
+}
+
+impl<K: Encode + Ord, V: Encode> Encode for BTreeMap<K, V> {
+    fn encode(&self, w: &mut Writer) {
+        w.varint(self.len() as u64);
+        for (k, v) in self {
+            k.encode(w);
+            v.encode(w);
+        }
+    }
+}
+
+impl<K: Decode + Ord, V: Decode> Decode for BTreeMap<K, V> {
+    fn decode(r: &mut Reader) -> Result<Self, SerError> {
+        let n = r.varint()? as usize;
+        let mut m = BTreeMap::new();
+        for _ in 0..n {
+            let k = K::decode(r)?;
+            let v = V::decode(r)?;
+            m.insert(k, v);
+        }
+        Ok(m)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn varint_roundtrip() {
+        let vals = [0u64, 1, 127, 128, 300, u32::MAX as u64, u64::MAX];
+        let mut w = Writer::new();
+        for &v in &vals {
+            w.varint(v);
+        }
+        let bytes = w.into_bytes();
+        let mut r = Reader::new(&bytes);
+        for &v in &vals {
+            assert_eq!(r.varint().unwrap(), v);
+        }
+        assert!(r.is_empty());
+    }
+
+    #[test]
+    fn signed_varint_roundtrip() {
+        let vals = [0i64, -1, 1, -64, 64, i64::MIN, i64::MAX];
+        let mut w = Writer::new();
+        for &v in &vals {
+            w.varint_i(v);
+        }
+        let bytes = w.into_bytes();
+        let mut r = Reader::new(&bytes);
+        for &v in &vals {
+            assert_eq!(r.varint_i().unwrap(), v);
+        }
+    }
+
+    #[test]
+    fn string_and_bytes_roundtrip() {
+        let mut w = Writer::new();
+        w.str("falkirk wheel");
+        w.bytes(&[1, 2, 3]);
+        w.f64(3.5);
+        w.f32s(&[1.0, -2.0]);
+        let bytes = w.into_bytes();
+        let mut r = Reader::new(&bytes);
+        assert_eq!(r.str().unwrap(), "falkirk wheel");
+        assert_eq!(r.bytes().unwrap(), &[1, 2, 3]);
+        assert_eq!(r.f64().unwrap(), 3.5);
+        assert_eq!(r.f32s().unwrap(), vec![1.0, -2.0]);
+    }
+
+    #[test]
+    fn truncated_input_is_eof() {
+        let mut w = Writer::new();
+        w.str("hello");
+        let bytes = w.into_bytes();
+        let mut r = Reader::new(&bytes[..3]);
+        assert!(r.str().is_err());
+    }
+
+    #[test]
+    fn container_roundtrip() {
+        let v: Vec<(u64, String)> = vec![(1, "a".into()), (2, "b".into())];
+        let bytes = v.to_bytes();
+        let back: Vec<(u64, String)> = Vec::from_bytes(&bytes).unwrap();
+        assert_eq!(v, back);
+
+        let mut m = BTreeMap::new();
+        m.insert(9u64, 4.25f64);
+        let bytes = m.to_bytes();
+        let back: BTreeMap<u64, f64> = BTreeMap::from_bytes(&bytes).unwrap();
+        assert_eq!(m, back);
+    }
+
+    #[test]
+    fn bad_tag_detected() {
+        let mut w = Writer::new();
+        w.u8(7);
+        let bytes = w.into_bytes();
+        let mut r = Reader::new(&bytes);
+        match r.expect_tag(8) {
+            Err(SerError::BadTag { expected: 8, found: 7, at: 0 }) => {}
+            other => panic!("unexpected: {other:?}"),
+        }
+    }
+}

@@ -1,0 +1,368 @@
+//! Cross-module integration tests: multi-domain bridging, recovery
+//! equivalence matrices, the GC monitor wired to a live harness, external
+//! ack/retry end-to-end, and failure-schedule-driven runs.
+
+use falkirk::coordinator::{run_fig1, Fig1Config};
+use falkirk::engine::{Delivery, Processor, Record};
+use falkirk::failure::{DetectorModel, FailureSchedule};
+use falkirk::frontier::Frontier;
+use falkirk::ft::external::{ExternalInput, ExternalOutput};
+use falkirk::ft::monitor::Monitor;
+use falkirk::ft::{FtSystem, Policy, Store};
+use falkirk::graph::{GraphBuilder, ProcId, Projection};
+use falkirk::operators::{Buffer, CountByKey, Source};
+use falkirk::time::{Time, TimeDomain};
+use std::sync::Arc;
+
+fn small_fig1() -> Fig1Config {
+    Fig1Config {
+        epochs: 5,
+        queries_per_epoch: 4,
+        records_per_epoch: 24,
+        iters: 3,
+        window: 8,
+        num_keys: 4,
+        use_xla: false,
+        ..Default::default()
+    }
+}
+
+/// Failure-equivalence matrix over the whole Figure-1 app: every victim,
+/// two failure points — db commits must always match the clean run.
+#[test]
+fn fig1_equivalence_matrix() {
+    let clean = run_fig1(&small_fig1());
+    assert!(clean.db_commits > 0);
+    for victim in [
+        "q_select", "reduce", "batch_agg", "t_collect", "iterate", "rank_store",
+        "join_batch", "join_iter", "db", "resp",
+    ] {
+        for fail_after in [1u64, 3] {
+            let mut cfg = small_fig1();
+            cfg.fail_proc = Some(victim.to_string());
+            cfg.fail_after_epoch = fail_after;
+            let out = run_fig1(&cfg);
+            assert_eq!(
+                out.db_commits, clean.db_commits,
+                "victim {victim} @epoch {fail_after}: db commits diverged"
+            );
+            assert!(out.recovery.is_some());
+        }
+    }
+}
+
+/// Two simultaneous failures in different regimes.
+#[test]
+fn fig1_double_failure() {
+    let clean = run_fig1(&small_fig1());
+    // Drive manually to inject two failures at once.
+    let cfg = small_fig1();
+    let mut app = falkirk::coordinator::build_fig1(&cfg);
+    let mut q_ext = ExternalInput::new();
+    let mut d_ext = ExternalInput::new();
+    let mut rng = falkirk::util::rng::Rng::new(cfg.seed);
+    let words = ["one", "two", "three", "four", "five", "six", "seven", "eight"];
+    for ep in 0..cfg.epochs {
+        let t = Time::epoch(ep);
+        let queries: Vec<Record> = (0..cfg.queries_per_epoch)
+            .map(|_| Record::text(words[rng.index(words.len())]))
+            .collect();
+        let records: Vec<Record> = (0..cfg.records_per_epoch)
+            .map(|_| Record::kv(rng.below(cfg.num_keys as u64) as i64, rng.f64() * 10.0))
+            .collect();
+        q_ext.offer(t, queries.clone());
+        d_ext.offer(t, records.clone());
+        app.sys.advance_input(app.q_src, t);
+        app.sys.advance_input(app.d_src, t);
+        for q in queries {
+            app.sys.push_input(app.q_src, t, q);
+        }
+        for r in records {
+            app.sys.push_input(app.d_src, t, r);
+        }
+        app.sys.advance_input(app.q_src, Time::epoch(ep + 1));
+        app.sys.advance_input(app.d_src, Time::epoch(ep + 1));
+        app.sys.run_to_quiescence(2_000_000);
+        if ep == 2 {
+            let v1 = app.sys.topology().find("rank_store").unwrap();
+            let v2 = app.sys.topology().find("reduce").unwrap();
+            app.sys.inject_failures(&[v1, v2]);
+            let rep = app.sys.recover();
+            let fq = rep.plan.f[app.q_src.0 as usize].clone();
+            let fd = rep.plan.f[app.d_src.0 as usize].clone();
+            for (t, batch) in q_ext.replay_from(&fq) {
+                app.sys.advance_input(app.q_src, t);
+                for r in batch {
+                    app.sys.push_input(app.q_src, t, r);
+                }
+            }
+            for (t, batch) in d_ext.replay_from(&fd) {
+                app.sys.advance_input(app.d_src, t);
+                for r in batch {
+                    app.sys.push_input(app.d_src, t, r);
+                }
+            }
+            app.sys.advance_input(app.q_src, Time::epoch(ep + 1));
+            app.sys.advance_input(app.d_src, Time::epoch(ep + 1));
+            app.sys.run_to_quiescence(2_000_000);
+        }
+    }
+    app.sys.close_input(app.q_src);
+    app.sys.close_input(app.d_src);
+    app.sys.run_to_quiescence(2_000_000);
+    let db = app.db.lock().unwrap();
+    let commits = db.contents().first().map(|(_, v)| v.len()).unwrap_or(0);
+    assert_eq!(commits, clean.db_commits, "double failure diverged");
+}
+
+/// GC monitor wired to a live harness: checkpoints stream into the
+/// monitor; watermark advances let the store reclaim bytes and the
+/// external input acknowledge batches.
+#[test]
+fn gc_monitor_with_live_harness() {
+    let mut g = GraphBuilder::new();
+    let src = g.add_proc("src", TimeDomain::EPOCH);
+    let agg = g.add_proc("agg", TimeDomain::EPOCH);
+    let buf = g.add_proc("buffer", TimeDomain::EPOCH);
+    g.connect(src, agg, Projection::Identity);
+    g.connect(agg, buf, Projection::Identity);
+    let topo = Arc::new(g.build().unwrap());
+    let procs: Vec<Box<dyn Processor>> = vec![
+        Box::new(Source),
+        Box::new(CountByKey::default()),
+        Box::new(Buffer::default()),
+    ];
+    let mut sys = FtSystem::new(
+        topo.clone(),
+        procs,
+        vec![
+            Policy::LogOutputs,
+            Policy::Lazy { every: 1, log_outputs: true },
+            Policy::Lazy { every: 1, log_outputs: false },
+        ],
+        Delivery::Fifo,
+        Store::new(1),
+    );
+    let mut mon = Monitor::new(topo, vec![true, false, false], vec![true, false, false]);
+    let mut ext = ExternalInput::new();
+    let mut reported = vec![0usize; 3];
+
+    for ep in 0..6u64 {
+        let t = Time::epoch(ep);
+        let batch: Vec<Record> = (0..8).map(|i| Record::kv(i % 3, 1.0)).collect();
+        ext.offer(t, batch.clone());
+        sys.advance_input(src, t);
+        for r in batch {
+            sys.push_input(src, t, r);
+        }
+        sys.advance_input(src, Time::epoch(ep + 1));
+        sys.run_to_quiescence(100_000);
+        // Buffer never requests notifications, so drive its checkpoints
+        // explicitly at the (now complete) epoch frontier.
+        sys.checkpoint_now(buf, Frontier::upto_epoch(ep));
+        // Stream freshly persisted Ξ to the monitor and apply the GC
+        // actions it emits back to the harness (checkpoint/log pruning +
+        // storage reclamation).
+        for p in [agg, buf] {
+            let chain = sys.chain_len(p);
+            for k in reported[p.0 as usize]..chain {
+                let meta = sys.checkpoint_meta(p, k);
+                for action in mon.on_persisted(p, meta) {
+                    sys.apply_gc(&action);
+                }
+            }
+            reported[p.0 as usize] = chain;
+        }
+        // The reader acknowledges external batches at its low-watermark.
+        let wm = mon.low_watermark(src).clone();
+        ext.ack_upto(&wm);
+        if ep >= 2 {
+            assert!(
+                !mon.low_watermark(buf).is_bottom(),
+                "watermark must have advanced by epoch {ep}"
+            );
+        }
+    }
+    // Everything except the in-flight tail is acknowledged.
+    assert!(ext.pending() <= 2, "watermark-driven acks reclaimed the backlog");
+    // GC pruned the chains down to the restore point + tail…
+    assert!(sys.chain_len(agg) <= 3, "agg chain pruned (was 6)");
+    assert!(sys.chain_len(buf) <= 3, "buf chain pruned (was 6)");
+    // …and recovery still works afterwards from the surviving state.
+    sys.inject_failures(&[agg]);
+    let rep = sys.recover();
+    assert!(
+        !rep.plan.f[agg.0 as usize].is_bottom(),
+        "post-GC recovery restores from the retained checkpoint"
+    );
+}
+
+/// External output dedup composes with recovery-driven re-sends.
+#[test]
+fn external_output_exactly_once_visibility() {
+    let mut out = ExternalOutput::new();
+    // First delivery of 3 records at epoch 0.
+    for i in 0..3 {
+        assert!(out.deliver(Time::epoch(0), i, Record::Int(i as i64)));
+    }
+    // Post-recovery duplicate re-sends (same indices).
+    for i in 0..3 {
+        assert!(!out.deliver(Time::epoch(0), i, Record::Int(i as i64)));
+    }
+    // New work continues.
+    assert!(out.deliver(Time::epoch(0), 3, Record::Int(3)));
+    assert_eq!(out.contents()[0].1.len(), 4);
+    assert_eq!(out.duplicates, 3);
+}
+
+/// Failure schedule + detector model drive repeated crashes of random
+/// victims; system reconverges every time.
+#[test]
+fn scheduled_random_failures_reconverge() {
+    let cfg = small_fig1();
+    let clean = run_fig1(&cfg);
+    let det = DetectorModel::default();
+    assert!(det.confirmation_delay() > 0);
+    // Three different random schedules.
+    for seed in [11u64, 22, 33] {
+        let mut sched = FailureSchedule::random(
+            seed,
+            2,
+            cfg.epochs,
+            &[ProcId(4), ProcId(11), ProcId(13)], // reduce, rank_store, join_iter
+        );
+        // Reinterpret schedule times as epochs.
+        let mut cfgf = cfg.clone();
+        let due = sched.due(cfg.epochs);
+        if let Some(v) = due.first() {
+            cfgf.fail_proc = Some(match v.0 {
+                4 => "reduce".into(),
+                11 => "rank_store".into(),
+                _ => "join_iter".into(),
+            });
+            cfgf.fail_after_epoch = 2;
+            let out = run_fig1(&cfgf);
+            assert_eq!(out.db_commits, clean.db_commits, "seed {seed} diverged");
+        }
+    }
+}
+
+/// A seq-domain processor fed from an epoch domain via a per-checkpoint
+/// transformer edge recovers without double-applying (domain bridging).
+#[test]
+fn epoch_to_seq_bridge_recovery() {
+    let mut sc = falkirk::baselines::exactly_once(1);
+    sc.sys.advance_input(sc.src, Time::epoch(0));
+    for i in 1..=5 {
+        sc.sys.push_input(sc.src, Time::epoch(0), Record::Int(i));
+    }
+    sc.sys.run_to_quiescence(100_000);
+    // Crash BOTH the accumulator and the sink.
+    sc.sys.inject_failures(&[sc.mid, sc.sink_proc]);
+    let rep = sc.sys.recover();
+    assert!(rep.plan.f[sc.src.0 as usize].is_top());
+    sc.sys.run_to_quiescence(100_000);
+    // Sink re-received the logged outputs that were undone by its reset.
+    let got = sc.out.lock().unwrap().clone();
+    let final_total = got.iter().map(|(_, r)| r.as_kv().unwrap().1).fold(0.0, f64::max);
+    assert_eq!(final_total, 15.0, "running sum state survived via its checkpoint chain");
+}
+
+/// The §3.2 worked example end-to-end: an epoch computation feeds an
+/// eager seq-number consumer through the EpochToSeq buffering
+/// transformer; a crash of the consumer recovers from its per-event
+/// checkpoints with φ captured as message counts, and a crash of the
+/// transformer replays from upstream logs without reordering epochs.
+#[test]
+fn epoch_to_seq_transformer_recovery() {
+    use falkirk::baselines::scenarios::RunningSum;
+    use falkirk::operators::EpochToSeq;
+    let build = || {
+        let mut g = GraphBuilder::new();
+        let src = g.add_proc("src", TimeDomain::EPOCH);
+        let bridge = g.add_proc("bridge", TimeDomain::EPOCH);
+        let db = g.add_proc("db", TimeDomain::Seq);
+        g.connect(src, bridge, Projection::Identity);
+        g.connect(bridge, db, Projection::PerCheckpoint);
+        let topo = Arc::new(g.build().unwrap());
+        let procs: Vec<Box<dyn Processor>> = vec![
+            Box::new(Source),
+            Box::new(EpochToSeq::default()),
+            Box::new(RunningSum::default()),
+        ];
+        FtSystem::new(
+            topo,
+            procs,
+            vec![
+                Policy::LogOutputs,
+                Policy::Lazy { every: 1, log_outputs: true },
+                Policy::Eager,
+            ],
+            Delivery::Fifo,
+            Store::new(1),
+        )
+    };
+    let drive = |sys: &mut FtSystem, fail: Option<&str>| -> (f64, u64) {
+        let src = ProcId(0);
+        for ep in 0..4u64 {
+            sys.advance_input(src, Time::epoch(ep));
+            for i in 0..5 {
+                sys.push_input(src, Time::epoch(ep), Record::Int(ep as i64 * 10 + i));
+            }
+            sys.advance_input(src, Time::epoch(ep + 1));
+            sys.run_to_quiescence(100_000);
+            if ep == 1 {
+                if let Some(name) = fail {
+                    let v = sys.topology().find(name).unwrap();
+                    sys.inject_failures(&[v]);
+                    sys.recover();
+                    sys.run_to_quiescence(100_000);
+                }
+            }
+        }
+        sys.close_input(src);
+        sys.run_to_quiescence(100_000);
+        let blob = sys.engine.proc(ProcId(2)).checkpoint_upto(&Frontier::Top);
+        let mut probe = RunningSum::default();
+        probe.restore(&blob);
+        (probe.total, probe.count)
+    };
+    let mut clean = build();
+    let want = drive(&mut clean, None);
+    assert_eq!(want.1, 20, "4 epochs × 5 records");
+    for victim in ["db", "bridge"] {
+        let mut sys = build();
+        let got = drive(&mut sys, Some(victim));
+        assert_eq!(got, want, "victim {victim}: seq-domain state diverged");
+    }
+}
+
+/// The ⊤/∅ frontier ends: a failure before anything ran, and a failure
+/// after close with everything durable.
+#[test]
+fn edge_case_failures() {
+    // Before anything ran.
+    let mut sc = falkirk::baselines::falkirk_lazy(1, 1);
+    sc.sys.inject_failures(&[sc.mid]);
+    let rep = sc.sys.recover();
+    assert!(rep.plan.f[sc.mid.0 as usize].is_bottom());
+    // Then run normally.
+    sc.sys.advance_input(sc.src, Time::epoch(0));
+    sc.sys.push_input(sc.src, Time::epoch(0), Record::Int(1));
+    sc.sys.advance_input(sc.src, Time::epoch(1));
+    sc.sys.run_to_quiescence(100_000);
+    assert_eq!(sc.out.lock().unwrap().len(), 1);
+
+    // Failure after the stream closed and all state durable.
+    let mut sc = falkirk::baselines::falkirk_lazy(1, 1);
+    sc.sys.advance_input(sc.src, Time::epoch(0));
+    sc.sys.push_input(sc.src, Time::epoch(0), Record::Int(7));
+    sc.sys.advance_input(sc.src, Time::epoch(1));
+    sc.sys.close_input(sc.src);
+    sc.sys.run_to_quiescence(100_000);
+    sc.sys.inject_failures(&[sc.mid]);
+    let rep = sc.sys.recover();
+    assert_eq!(rep.plan.f[sc.mid.0 as usize], Frontier::upto_epoch(0));
+    sc.sys.run_to_quiescence(100_000);
+    assert_eq!(sc.out.lock().unwrap().len(), 1, "no duplicate emission after recovery");
+}

@@ -1,0 +1,294 @@
+//! Property tests (in-repo harness — `proptest` is unavailable offline):
+//! frontier algebra laws, the §3.3 re-ordering rule, solver-output
+//! validity on random graphs, and the monotonicity claims of §3.6/§4.2.
+
+use falkirk::engine::channel::{Channel, Delivery, Message};
+use falkirk::engine::Record;
+use falkirk::frontier::Frontier;
+use falkirk::ft::meta::CkptMeta;
+use falkirk::ft::rollback::{
+    choose_frontiers, grow_frontiers, verify_plan, Available, RollbackInput,
+};
+use falkirk::graph::{EdgeId, GraphBuilder, ProcId, Projection, Topology};
+use falkirk::prop_assert;
+use falkirk::time::{Time, TimeDomain};
+use falkirk::util::prop::{check, check_with, Config};
+use falkirk::util::rng::Rng;
+
+fn arb_time(rng: &mut Rng, depth: usize) -> Time {
+    let epoch = rng.below(6);
+    let cs: Vec<u64> = (0..depth).map(|_| rng.below(5)).collect();
+    Time::structured(epoch, &cs)
+}
+
+fn arb_frontier(rng: &mut Rng, depth: usize) -> Frontier {
+    match rng.below(10) {
+        0 => Frontier::Bottom,
+        1 => Frontier::Top,
+        _ => {
+            let k = 1 + rng.index(3);
+            Frontier::down_close((0..k).map(|_| arb_time(rng, depth)))
+        }
+    }
+}
+
+#[test]
+fn frontier_downward_closure() {
+    check("frontiers are downward-closed", |rng| {
+        let f = arb_frontier(rng, 1);
+        for _ in 0..20 {
+            let t = arb_time(rng, 1);
+            if f.contains(&t) {
+                // every t' ≤ t also ∈ f
+                let smaller = Time::structured(
+                    t.epoch_of().saturating_sub(rng.below(2)),
+                    &[t.loops_of().as_slice()[0].saturating_sub(rng.below(2))],
+                );
+                prop_assert!(
+                    f.contains(&smaller),
+                    "t={t} ∈ {f} but smaller {smaller} missing"
+                );
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn frontier_lattice_laws() {
+    check("union/intersect are lattice ops", |rng| {
+        let a = arb_frontier(rng, 1);
+        let b = arb_frontier(rng, 1);
+        let u = a.union(&b);
+        let i = a.intersect(&b);
+        prop_assert!(a.is_subset(&u) && b.is_subset(&u), "a,b ⊆ a∪b");
+        prop_assert!(i.is_subset(&a) && i.is_subset(&b), "a∩b ⊆ a,b");
+        // Membership agrees pointwise.
+        for _ in 0..20 {
+            let t = arb_time(rng, 1);
+            prop_assert!(
+                u.contains(&t) == (a.contains(&t) || b.contains(&t)),
+                "union membership mismatch at {t}: {a} ∪ {b}"
+            );
+            prop_assert!(
+                i.contains(&t) == (a.contains(&t) && b.contains(&t)),
+                "intersect membership mismatch at {t}"
+            );
+        }
+        // Idempotence / absorption.
+        prop_assert!(a.union(&a) == a && a.intersect(&a) == a);
+        prop_assert!(a.union(&i) == a, "absorption a ∪ (a∩b) = a");
+        Ok(())
+    });
+}
+
+#[test]
+fn frontier_subset_antisymmetry_and_encode() {
+    use falkirk::util::ser::{Decode, Encode};
+    check("subset antisymmetry + codec roundtrip", |rng| {
+        let a = arb_frontier(rng, 1);
+        let b = arb_frontier(rng, 1);
+        if a.is_subset(&b) && b.is_subset(&a) {
+            prop_assert!(a == b, "mutual subset ⇒ equal: {a} vs {b}");
+        }
+        let bytes = a.to_bytes();
+        prop_assert!(Frontier::from_bytes(&bytes).unwrap() == a);
+        Ok(())
+    });
+}
+
+#[test]
+fn selective_pop_respects_reordering_rule() {
+    check("§3.3 re-ordering rule", |rng| {
+        let mut ch = Channel::new();
+        let n = 1 + rng.index(30);
+        for i in 0..n {
+            ch.push(Message::new(arb_time(rng, 0), Record::Int(i as i64)));
+        }
+        while !ch.is_empty() {
+            let before: Vec<Message> = ch.iter().cloned().collect();
+            let m = ch.pop(Delivery::Selective).unwrap();
+            let idx = before.iter().position(|x| x == &m).unwrap();
+            for mj in &before[..idx] {
+                prop_assert!(
+                    !mj.time.le(&m.time),
+                    "earlier {} ≤ popped {}",
+                    mj.time,
+                    m.time
+                );
+            }
+        }
+        Ok(())
+    });
+}
+
+/// Random epoch DAG + availability for the solver properties.
+fn random_solver_case(
+    rng: &mut Rng,
+    n: usize,
+) -> (Topology, Vec<Available>, Vec<(Vec<EdgeId>, Vec<EdgeId>)>) {
+    let mut g = GraphBuilder::new();
+    let procs: Vec<_> =
+        (0..n).map(|i| g.add_proc(&format!("p{i}"), TimeDomain::EPOCH)).collect();
+    let mut io: Vec<(Vec<EdgeId>, Vec<EdgeId>)> = vec![(Vec::new(), Vec::new()); n];
+    for i in 1..n {
+        for _ in 0..=rng.below(2) {
+            let j = rng.index(i);
+            let e = g.connect(procs[j], procs[i], Projection::Identity);
+            io[j].1.push(e);
+            io[i].0.push(e);
+        }
+    }
+    let topo = g.build().unwrap();
+    let mk = |e: u64, ins: &[EdgeId], outs: &[EdgeId], logs: bool| CkptMeta {
+        f: Frontier::upto_epoch(e),
+        n_bar: Frontier::upto_epoch(e),
+        m_bar: ins.iter().map(|d| (*d, Frontier::upto_epoch(e))).collect(),
+        d_bar: outs
+            .iter()
+            .map(|o| (*o, if logs { Frontier::Bottom } else { Frontier::upto_epoch(e) }))
+            .collect(),
+        phi: outs.iter().map(|o| (*o, Frontier::upto_epoch(e))).collect(),
+    };
+    let avail: Vec<Available> = (0..n)
+        .map(|i| match rng.below(5) {
+            0 => Available::chain(vec![]),
+            1 => Available::any(rng.chance(0.5)),
+            _ => {
+                let logs = rng.chance(0.5);
+                let base = rng.below(4);
+                let depth = 1 + rng.below(3);
+                Available::chain(
+                    (0..depth).map(|k| mk(base + k, &io[i].0, &io[i].1, logs)).collect(),
+                )
+            }
+        })
+        .collect();
+    (topo, avail, io)
+}
+
+#[test]
+fn solver_output_always_satisfies_constraints() {
+    check_with(Config { cases: 60, base_seed: 0xF16 }, "Fig-6 output valid", |rng| {
+        let n = 3 + rng.index(25);
+        let (topo, avail, _) = random_solver_case(rng, n);
+        let input = RollbackInput { topo: &topo, avail: &avail };
+        let plan = choose_frontiers(&input);
+        verify_plan(&input, &plan).map_err(|e| format!("n={n}: {e}"))
+    });
+}
+
+#[test]
+fn adding_checkpoints_never_shrinks_solution() {
+    // §3.6: "adding choices of f to F*(p) will never cause f(p') to get
+    // smaller for any p'".
+    check_with(Config { cases: 40, base_seed: 0xACE }, "monotone in F*", |rng| {
+        let n = 3 + rng.index(15);
+        let (topo, mut avail, io) = random_solver_case(rng, n);
+        let plan_before = {
+            let input = RollbackInput { topo: &topo, avail: &avail };
+            choose_frontiers(&input)
+        };
+        // Extend one random chain.
+        let victim = rng.index(n);
+        if let Available::Chain { chain, .. } = &mut avail[victim] {
+            let top =
+                chain.last().map(|c| c.f.max_epoch().unwrap_or(0)).unwrap_or(0);
+            let e = top + 1 + rng.below(2);
+            let f = Frontier::upto_epoch(e);
+            chain.push(CkptMeta {
+                f: f.clone(),
+                n_bar: f.clone(),
+                m_bar: io[victim].0.iter().map(|d| (*d, f.clone())).collect(),
+                d_bar: io[victim].1.iter().map(|o| (*o, f.clone())).collect(),
+                phi: io[victim].1.iter().map(|o| (*o, f.clone())).collect(),
+            });
+        } else {
+            return Ok(()); // nothing to extend
+        }
+        let input = RollbackInput { topo: &topo, avail: &avail };
+        let plan_after = choose_frontiers(&input);
+        for p in 0..n {
+            prop_assert!(
+                plan_before.f[p].is_subset(&plan_after.f[p]),
+                "f(p{p}) shrank: {} → {}",
+                plan_before.f[p],
+                plan_after.f[p]
+            );
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn incremental_growth_equals_batch() {
+    check_with(Config { cases: 40, base_seed: 0x9C }, "grow == batch", |rng| {
+        let n = 3 + rng.index(15);
+        let (topo, mut avail, io) = random_solver_case(rng, n);
+        let mut plan = {
+            let input = RollbackInput { topo: &topo, avail: &avail };
+            choose_frontiers(&input)
+        };
+        // Several rounds of random chain extensions, each applied
+        // incrementally and compared to a fresh batch solve.
+        for _ in 0..3 {
+            let victim = rng.index(n);
+            if let Available::Chain { chain, .. } = &mut avail[victim] {
+                let top =
+                    chain.last().map(|c| c.f.max_epoch().unwrap_or(0)).unwrap_or(0);
+                let f = Frontier::upto_epoch(top + 1);
+                chain.push(CkptMeta {
+                    f: f.clone(),
+                    n_bar: f.clone(),
+                    m_bar: io[victim].0.iter().map(|d| (*d, f.clone())).collect(),
+                    d_bar: io[victim].1.iter().map(|o| (*o, f.clone())).collect(),
+                    phi: io[victim].1.iter().map(|o| (*o, f.clone())).collect(),
+                });
+            } else {
+                continue;
+            }
+            let input = RollbackInput { topo: &topo, avail: &avail };
+            grow_frontiers(&input, &mut plan, ProcId(victim as u32));
+            let batch = choose_frontiers(&input);
+            prop_assert!(plan == batch, "incremental diverged from batch at n={n}");
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn projection_preimage_galois() {
+    // φ(preimage(F)) ⊆ F and preimage is pointwise-maximal.
+    check("preimage Galois connection", |rng| {
+        // (projection, source depth, image/limit depth)
+        for (proj, src_depth, limit_depth) in [
+            (Projection::LoopEnter, 0u8, 1usize),
+            (Projection::LoopExit, 1, 0),
+            (Projection::LoopFeedback, 1, 1),
+            (Projection::Identity, 1, 1),
+        ] {
+            let limit = arb_frontier(rng, limit_depth);
+            let pre = match proj.preimage(&limit, src_depth) {
+                Some(p) => p,
+                None => continue,
+            };
+            if let Some(img) = proj.apply(&pre) {
+                prop_assert!(
+                    img.is_subset(&limit),
+                    "{proj:?}: φ(pre)={img} ⊄ limit={limit}"
+                );
+            }
+            for _ in 0..10 {
+                let t = arb_time(rng, src_depth as usize);
+                let img_t = proj.apply(&Frontier::below(t)).unwrap();
+                if img_t.is_subset(&limit) {
+                    prop_assert!(
+                        pre.contains(&t),
+                        "{proj:?}: {t} should be in preimage of {limit} (pre={pre})"
+                    );
+                }
+            }
+        }
+        Ok(())
+    });
+}

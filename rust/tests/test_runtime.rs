@@ -1,0 +1,102 @@
+//! Runtime integration: load the AOT HLO-text artifacts through PJRT and
+//! check the numerics against the in-process reference kernels (which
+//! python/tests verified against the Pallas kernels — closing the
+//! L1 ⇄ L2 ⇄ L3 loop).
+//!
+//! Skipped gracefully when `make artifacts` has not run.
+
+use falkirk::operators::tensor::mock::{MockAgg, MockIterate, MockStats};
+use falkirk::operators::Kernel;
+use falkirk::runtime::ArtifactRegistry;
+use falkirk::util::rng::Rng;
+
+fn registry() -> Option<ArtifactRegistry> {
+    let reg = ArtifactRegistry::default_dir();
+    if reg.available("stream_agg") && reg.available("iterate") && reg.available("batch_stats") {
+        Some(reg)
+    } else {
+        eprintln!("artifacts missing — run `make artifacts`; skipping runtime tests");
+        None
+    }
+}
+
+fn assert_close(a: &[f32], b: &[f32], tol: f32) {
+    assert_eq!(a.len(), b.len());
+    for (i, (x, y)) in a.iter().zip(b).enumerate() {
+        assert!((x - y).abs() <= tol * (1.0 + y.abs()), "idx {i}: {x} vs {y}");
+    }
+}
+
+#[test]
+fn stream_agg_artifact_matches_reference() {
+    let Some(reg) = registry() else { return };
+    let k = reg.kernel("stream_agg", 2).expect("load stream_agg");
+    let mock = MockAgg { num_keys: 8 };
+    let mut rng = Rng::new(5);
+    for _ in 0..10 {
+        let keys: Vec<f32> = (0..16).map(|_| rng.below(8) as f32).collect();
+        let vals: Vec<f32> = (0..16).map(|_| (rng.f64() * 10.0 - 5.0) as f32).collect();
+        let got = k.run(&[&keys, &vals]).expect("exec");
+        let want = mock.run(&[&keys, &vals]).unwrap();
+        assert_close(&got[0], &want[0], 1e-5);
+    }
+}
+
+#[test]
+fn iterate_artifact_matches_reference() {
+    let Some(reg) = registry() else { return };
+    let k = reg.kernel("iterate", 1).expect("load iterate");
+    let mock = MockIterate { damping: 0.85 };
+    let mut rng = Rng::new(9);
+    for _ in 0..10 {
+        let r: Vec<f32> = (0..8).map(|_| rng.f64() as f32).collect();
+        let got = k.run(&[&r]).expect("exec");
+        let want = mock.run(&[&r]).unwrap();
+        assert_close(&got[0], &want[0], 1e-5);
+    }
+}
+
+#[test]
+fn batch_stats_artifact_matches_reference() {
+    let Some(reg) = registry() else { return };
+    let k = reg.kernel("batch_stats", 1).expect("load batch_stats");
+    let mut rng = Rng::new(3);
+    let v: Vec<f32> = (0..16).map(|_| (rng.f64() * 4.0 - 2.0) as f32).collect();
+    let got = k.run(&[&v]).expect("exec");
+    let want = MockStats.run(&[&v]).unwrap();
+    assert_close(&got[0], &want[0], 1e-5);
+}
+
+#[test]
+fn artifact_iteration_converges_like_reference() {
+    // Drive 20 iterations through the XLA kernel and the mock; both must
+    // converge to the uniform fixed point together.
+    let Some(reg) = registry() else { return };
+    let k = reg.kernel("iterate", 1).expect("load iterate");
+    let mock = MockIterate { damping: 0.85 };
+    let mut a: Vec<f32> = vec![1.0, 0.0, 0.0, 0.0, 0.0, 0.0, 0.0, 0.0];
+    let mut b = a.clone();
+    for _ in 0..20 {
+        a = k.run(&[&a]).unwrap().remove(0);
+        b = mock.run(&[&b]).unwrap().remove(0);
+    }
+    assert_close(&a, &b, 1e-4);
+    let total: f32 = a.iter().sum();
+    assert!((total - 1.0).abs() < 1e-3, "mass conserved");
+    for x in &a {
+        assert!((x - 0.125).abs() < 0.05, "converging to uniform");
+    }
+}
+
+#[test]
+fn mock_kernels_match_python_golden_vectors() {
+    // Mirrors python/tests/test_model_aot.py::test_rust_mock_agreement_vectors.
+    let agg = MockAgg { num_keys: 3 };
+    let keys = [0f32, 1.0, 2.0, 0.0, 1.0, 2.0, 0.0, 0.0];
+    let vals = [1f32, 2.0, 3.0, 4.0, 5.0, 6.0, 7.0, 8.0];
+    let got = agg.run(&[&keys, &vals]).unwrap();
+    assert_eq!(got[0], vec![20.0, 7.0, 9.0]);
+    let it = MockIterate { damping: 0.85 };
+    let got = it.run(&[&[1.0f32, 0.0, 0.0, 0.0][..]]).unwrap();
+    assert_close(&got[0], &[0.0375, 0.4625, 0.0375, 0.4625], 1e-6);
+}

@@ -1,0 +1,67 @@
+//! Shard-scaling bench: events/sec of the sharded keyed-aggregation job
+//! at W = 1, 2, 4, 8 worker shards.
+//!
+//! Two groups:
+//! - `engine/…`: fault tolerance off (everything ephemeral, zero-cost
+//!   store) — pure cost of the sharded execution layer (exchange
+//!   fan-out, per-shard routing, per-shard progress tracking);
+//! - `ft/…`: the default policies (source log firewall, per-shard lazy
+//!   selective checkpoints) — what recovery-capable deployments pay.
+//!
+//! The engine is single-process and event-at-a-time, so events/sec is
+//! expected roughly flat in W; what this bench pins down is the *price*
+//! of sharding (exchange edges multiply the graph, reachability scans
+//! grow) so regressions in the sharded layer show up as a slope.
+
+use falkirk::bench_support::sharded::{drive_epoch, pipeline, ShardedConfig};
+use falkirk::bench_support::{BenchConfig, Bencher};
+use falkirk::ft::Policy;
+
+const EPOCHS: u64 = 4;
+const RECORDS: usize = 256;
+const KEYS: u64 = 64;
+
+fn cfg(workers: u32, ft: bool) -> ShardedConfig {
+    if ft {
+        ShardedConfig { workers, two_stage: true, ..Default::default() }
+    } else {
+        ShardedConfig {
+            workers,
+            two_stage: true,
+            count_policy: Policy::Ephemeral,
+            collect_policy: Policy::Ephemeral,
+            write_cost: 0,
+        }
+    }
+}
+
+/// Run the job to completion; returns engine events processed.
+fn run_job(cfg: &ShardedConfig) -> u64 {
+    let mut p = pipeline(cfg);
+    for ep in 0..EPOCHS {
+        drive_epoch(&mut p, 7, ep, RECORDS, KEYS);
+    }
+    let src = p.src_proc();
+    p.sys.close_input(src);
+    p.sys.run_to_quiescence(10_000_000);
+    p.sys.engine.events_processed()
+}
+
+fn main() {
+    let mut b = Bencher::with_config(
+        "shard_scaling",
+        BenchConfig { warmup_iters: 1, sample_iters: 5 },
+    );
+    for ft in [false, true] {
+        for workers in [1u32, 2, 4, 8] {
+            let c = cfg(workers, ft);
+            let units = run_job(&c) as f64; // events per iteration (dry run)
+            let name =
+                format!("{}_W{workers}", if ft { "ft" } else { "engine" });
+            b.run(&name, units, || {
+                run_job(&c);
+            });
+        }
+    }
+    b.note("ops/s = engine events/sec; exchange fan-out grows edges O(W^2) between sharded stages");
+}

@@ -10,6 +10,8 @@
 //! Benches are `harness = false` binaries that call [`bench_fn`] /
 //! [`Bencher::run`] and print a table; `cargo bench` runs them all.
 
+pub mod sharded;
+
 use crate::util::stats::{fmt_ns, fmt_rate, Summary};
 use std::time::Instant;
 

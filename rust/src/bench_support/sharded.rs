@@ -1,0 +1,213 @@
+//! Reusable sharded workload: the keyed-aggregation job the shard-scaling
+//! bench, the `falkirk shard` CLI command, the `sharded_rollback` example
+//! and the recovery test-suite all drive.
+//!
+//! ```text
+//!   src ──► [map#0..W)] ──► count#0..W ──► collect
+//!        hash-exchange   hash-exchange   fan-in
+//! ```
+//!
+//! `src` logs its outputs (the §4.1 RDD firewall, so a failed shard's
+//! inputs can be resupplied from the log); the optional `map` stage
+//! rekeys records so the map→count bundle is a genuine cross-shard
+//! exchange; `count` shards aggregate per key; `collect` buffers
+//! everything (the paper's Fig. 3 Buffer) so tests can read the complete
+//! observable output.
+//!
+//! Record values are small integers, so per-key f64 sums are exact and
+//! independent of cross-shard arrival order — which is what lets the
+//! suite compare a recovered run against a failure-free one byte for
+//! byte via [`canonical_output`].
+
+use crate::engine::sharded::ProcFactory;
+use crate::engine::{Delivery, Record};
+use crate::frontier::Frontier;
+use crate::ft::{FtSystem, Policy, Store};
+use crate::graph::sharding::{LogicalId, ShardPlan, ShardedBuilder};
+use crate::graph::{ProcId, Projection};
+use crate::operators::{Buffer, CountByKey, Map, Source};
+use crate::time::{Time, TimeDomain};
+use crate::util::rng::Rng;
+use crate::util::ser::{Encode, Writer};
+use std::sync::Arc;
+
+/// Configuration of the sharded keyed-aggregation job.
+#[derive(Clone, Debug)]
+pub struct ShardedConfig {
+    /// Worker shards per sharded stage.
+    pub workers: u32,
+    /// Include the rekeying `map` stage (makes map→count a full W×W
+    /// exchange rather than a partition of the source stream).
+    pub two_stage: bool,
+    /// Policy of the `count` shards.
+    pub count_policy: Policy,
+    /// Policy of the `collect` vertex.
+    pub collect_policy: Policy,
+    /// Virtual write cost of the durable store.
+    pub write_cost: u64,
+}
+
+impl Default for ShardedConfig {
+    fn default() -> Self {
+        ShardedConfig {
+            workers: 4,
+            two_stage: false,
+            count_policy: Policy::Lazy { every: 1, log_outputs: true },
+            collect_policy: Policy::Lazy { every: 1, log_outputs: false },
+            write_cost: 1,
+        }
+    }
+}
+
+/// A built sharded pipeline plus its logical handles.
+pub struct ShardedPipeline {
+    pub sys: FtSystem,
+    pub plan: Arc<ShardPlan>,
+    pub src: LogicalId,
+    /// Present when `two_stage` was requested.
+    pub map: Option<LogicalId>,
+    pub count: LogicalId,
+    pub collect: LogicalId,
+}
+
+/// Deterministic rekeying used by the `map` stage: spreads keys across
+/// residue classes so the map→count bundle carries cross-shard traffic.
+fn rekey(r: Record) -> Record {
+    match r {
+        Record::Kv { key, val } => Record::Kv { key: key * 3 + 1, val: val * 2.0 },
+        other => other,
+    }
+}
+
+/// Build the job under `cfg`.
+pub fn pipeline(cfg: &ShardedConfig) -> ShardedPipeline {
+    let mut b = ShardedBuilder::new();
+    let src = b.add_proc("src", TimeDomain::EPOCH);
+    let map =
+        cfg.two_stage.then(|| b.add_sharded("map", TimeDomain::EPOCH, cfg.workers));
+    let count = b.add_sharded("count", TimeDomain::EPOCH, cfg.workers);
+    let collect = b.add_proc("collect", TimeDomain::EPOCH);
+    match map {
+        Some(m) => {
+            b.connect(src, m, Projection::Identity);
+            b.connect(m, count, Projection::Identity);
+        }
+        None => {
+            b.connect(src, count, Projection::Identity);
+        }
+    }
+    b.connect(count, collect, Projection::Identity);
+    let plan = Arc::new(b.build().expect("sharded pipeline topology"));
+
+    let mut factories: Vec<ProcFactory> = vec![Box::new(|_| Box::new(Source))];
+    let mut policies = vec![Policy::LogOutputs];
+    if cfg.two_stage {
+        factories.push(Box::new(|_| Box::new(Map(rekey))));
+        policies.push(Policy::LogOutputs);
+    }
+    factories.push(Box::new(|_| Box::new(CountByKey::default())));
+    policies.push(cfg.count_policy);
+    factories.push(Box::new(|_| Box::new(Buffer::default())));
+    policies.push(cfg.collect_policy);
+
+    let sys = FtSystem::new_sharded(
+        &plan,
+        factories,
+        &policies,
+        Delivery::Fifo,
+        Store::new(cfg.write_cost),
+    );
+    ShardedPipeline { sys, plan, src, map, count, collect }
+}
+
+impl ShardedPipeline {
+    /// The single physical source processor.
+    pub fn src_proc(&self) -> ProcId {
+        self.plan.proc(self.src, 0)
+    }
+
+    /// The physical collector processor.
+    pub fn collect_proc(&self) -> ProcId {
+        self.plan.proc(self.collect, 0)
+    }
+}
+
+/// The deterministic record batch for epoch `ep`. Keys cycle through
+/// `0..keys` (so every shard's residue class is exercised each epoch,
+/// provided `records ≥ keys ≥ workers`); values are small integers, so
+/// downstream f64 sums are exact regardless of arrival order.
+pub fn epoch_records(seed: u64, ep: u64, records: usize, keys: u64) -> Vec<Record> {
+    let mut rng = Rng::new(seed ^ ep.wrapping_mul(0x9E3779B97F4A7C15));
+    (0..records)
+        .map(|i| Record::kv((i as u64 % keys) as i64, rng.below(100) as f64))
+        .collect()
+}
+
+/// Open epoch `ep`, push its batch, close the epoch, and run to
+/// quiescence.
+pub fn drive_epoch(p: &mut ShardedPipeline, seed: u64, ep: u64, records: usize, keys: u64) {
+    let src = p.src_proc();
+    p.sys.advance_input(src, Time::epoch(ep));
+    for r in epoch_records(seed, ep, records, keys) {
+        p.sys.push_input(src, Time::epoch(ep), r);
+    }
+    p.sys.advance_input(src, Time::epoch(ep + 1));
+    p.sys.run_to_quiescence(5_000_000);
+}
+
+/// Canonical serialization of the collector's complete observable output:
+/// per logical time (ascending), the multiset of received records in a
+/// canonical (byte-sorted) order. Two runs are observably identical —
+/// the Veresov-et-al. failure-transparency obligation — iff these bytes
+/// are identical. Cross-shard arrival order *within* a time is not part
+/// of the observable output (a keyed exchange defines no inter-key
+/// order), which the canonicalization quotients away.
+pub fn canonical_output(sys: &FtSystem, collector: ProcId) -> Vec<u8> {
+    let blob = sys.engine.proc(collector).checkpoint_upto(&Frontier::Top);
+    let mut b = Buffer::default();
+    b.restore(&blob);
+    let mut w = Writer::new();
+    for (t, records) in b.contents() {
+        let mut encs: Vec<Vec<u8>> = records.iter().map(|r| r.to_bytes()).collect();
+        encs.sort();
+        t.encode(&mut w);
+        w.varint(encs.len() as u64);
+        for e in &encs {
+            w.bytes(e);
+        }
+    }
+    w.into_bytes()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pipeline_runs_and_checkpoints_per_shard() {
+        let cfg = ShardedConfig::default();
+        let mut p = pipeline(&cfg);
+        for ep in 0..3 {
+            drive_epoch(&mut p, 7, ep, 24, 16);
+        }
+        // Every count shard owns part of the key space and checkpointed
+        // at every completed epoch (Lazy { every: 1 }).
+        for s in 0..cfg.workers as usize {
+            let proc = p.plan.proc(p.count, s);
+            assert_eq!(p.sys.chain_len(proc), 3, "count#{s} checkpoints per epoch");
+        }
+        assert!(!canonical_output(&p.sys, p.collect_proc()).is_empty());
+    }
+
+    #[test]
+    fn canonical_output_is_workload_deterministic() {
+        let run = || {
+            let mut p = pipeline(&ShardedConfig { two_stage: true, ..Default::default() });
+            for ep in 0..2 {
+                drive_epoch(&mut p, 11, ep, 20, 8);
+            }
+            canonical_output(&p.sys, p.collect_proc())
+        };
+        assert_eq!(run(), run());
+    }
+}

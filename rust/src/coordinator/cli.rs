@@ -2,6 +2,7 @@
 //!
 //! ```text
 //! falkirk fig1   [--epochs N] [--fail rank_store] [--fail-after E] [--xla false] …
+//! falkirk shard  [--workers W] [--fail-shard S] …  # sharded engine demo
 //! falkirk fig7 --panel a|b|c      # the paper's worked rollback examples
 //! falkirk gc-demo [--epochs N]    # §4.2 monitor watermark demo
 //! falkirk selftest                # quick smoke of all layers
@@ -19,6 +20,11 @@ COMMANDS:
             --epochs N (6) --queries N (4) --records N (32) --iters N (4)
             --window N (16) --keys N (8) --seed S (7) --write-cost C (10)
             --fail <proc> --fail-after E (2) --xla <true|false> (true)
+  shard     Run the sharded keyed-aggregation job, optionally crashing
+            one worker shard and recovering only its key range.
+            --workers W (4) --epochs N (6) --records N (64) --keys N (16)
+            --seed S (7) --two-stage <true|false> (false)
+            --fail-shard S --fail-after E (2)
   fig7      Run a worked rollback example.  --panel a|b|c (c)
   gc-demo   Drive the §4.2 GC monitor and print watermark advances.
             --epochs N (8)
@@ -32,6 +38,7 @@ pub fn run(raw: &[String]) -> i32 {
     let cmd = args.positional().first().map(|s| s.as_str()).unwrap_or("help");
     match cmd {
         "fig1" => cmd_fig1(&args),
+        "shard" => cmd_shard(&args),
         "fig7" => cmd_fig7(&args),
         "gc-demo" => cmd_gc_demo(&args),
         "selftest" => cmd_selftest(),
@@ -78,6 +85,77 @@ fn cmd_fig1(args: &Args) -> i32 {
         println!("    client redelivered {}", rec.input_redeliveries);
         println!("    re-quiesce events  {}", rec.requiesce_events);
     }
+    0
+}
+
+fn cmd_shard(args: &Args) -> i32 {
+    use crate::bench_support::sharded::{canonical_output, drive_epoch, pipeline, ShardedConfig};
+    let workers = args.get_u64("workers", 4) as u32;
+    let epochs = args.get_u64("epochs", 6);
+    let records = args.get_usize("records", 64);
+    let keys = args.get_u64("keys", 16);
+    let seed = args.get_u64("seed", 7);
+    let two_stage = args.get_str("two-stage", "false") == "true";
+    let fail_shard = match args.get("fail-shard") {
+        None => None,
+        Some(raw) => match raw.parse::<usize>() {
+            Ok(s) => Some(s),
+            Err(_) => {
+                eprintln!("--fail-shard '{raw}' is not a shard index");
+                return 2;
+            }
+        },
+    };
+    let fail_after = args.get_u64("fail-after", 2);
+
+    if workers == 0 {
+        eprintln!("--workers must be at least 1");
+        return 2;
+    }
+    let cfg = ShardedConfig { workers, two_stage, ..Default::default() };
+    if let Some(s) = fail_shard {
+        if s >= workers as usize {
+            eprintln!("--fail-shard {s} out of range (workers = {workers})");
+            return 2;
+        }
+    }
+    let mut p = pipeline(&cfg);
+    let t0 = std::time::Instant::now();
+    for ep in 0..epochs {
+        drive_epoch(&mut p, seed, ep, records, keys);
+        if let Some(s) = fail_shard {
+            if ep == fail_after {
+                let victim = p.plan.proc(p.count, s);
+                p.sys.inject_failures(&[victim]);
+                let rep = p.sys.recover();
+                println!("crash count#{s} after epoch {ep}:");
+                for sh in 0..workers as usize {
+                    println!(
+                        "  f(count#{sh}) = {}",
+                        rep.plan.frontier(p.plan.proc(p.count, sh))
+                    );
+                }
+                println!(
+                    "  rolled back {} of {} processors, replayed {} logged messages",
+                    rep.plan.rolled_back().len(),
+                    p.plan.topo.num_procs(),
+                    rep.replayed
+                );
+            }
+        }
+    }
+    let src = p.src_proc();
+    p.sys.close_input(src);
+    p.sys.run_to_quiescence(5_000_000);
+    let elapsed = t0.elapsed().as_secs_f64();
+    let events = p.sys.engine.events_processed();
+    println!("shard: W={workers} two_stage={two_stage} epochs={epochs}");
+    println!("  events           {events}");
+    println!("  events/sec       {:.0}", events as f64 / elapsed.max(1e-9));
+    println!("  checkpoints      {}", p.sys.stats.checkpoints_taken);
+    println!("  recoveries       {}", p.sys.stats.recoveries);
+    println!("  replayed msgs    {}", p.sys.stats.messages_replayed);
+    println!("  output bytes     {}", canonical_output(&p.sys, p.collect_proc()).len());
     0
 }
 

@@ -6,16 +6,20 @@
 //! - [`processor`]: the operator trait + time-partitioned state helper;
 //! - [`ctx`]: per-event output context with time translation;
 //! - [`scheduler`]: the deterministic event loop and failure/rollback
-//!   primitives.
+//!   primitives;
+//! - [`sharded`]: the multi-worker layer — per-shard operator routing
+//!   over hash-exchange edge bundles, with determinism preserved.
 
 pub mod channel;
 pub mod ctx;
 pub mod processor;
 pub mod record;
 pub mod scheduler;
+pub mod sharded;
 
 pub use channel::{Channel, Delivery, Message};
 pub use ctx::Ctx;
 pub use processor::{Processor, Statefulness, TimeState};
 pub use record::Record;
 pub use scheduler::{Engine, EventKind, EventReport};
+pub use sharded::{build_procs, shard_of_record, ProcFactory, ShardRouter, ShardedEngine};

@@ -1,0 +1,390 @@
+//! The sharded multi-worker execution layer.
+//!
+//! [`ShardRouter`] wraps an operator so it can run as one shard of a
+//! logical vertex inside the expanded physical topology produced by
+//! [`crate::graph::sharding::ShardedBuilder`]: the operator sees its
+//! *logical* input/output ports, while the router translates physical
+//! input ports back to logical ones and fans staged sends out over the
+//! exchange-edge bundle, picking the destination shard per record
+//! ([`shard_of_record`]).
+//!
+//! [`ShardedEngine`] is the engine-level façade: the ordinary
+//! deterministic [`Engine`] running the physical topology, plus the
+//! logical-vertex addressing of the plan. Determinism is inherited — the
+//! engine's fixed round-robin over (physical) edges is a fixed
+//! round-robin over shards, so two runs of the same workload are
+//! byte-identical, which is what the recovery test-suite leans on.
+//!
+//! The fault-tolerance integration lives in [`crate::ft::harness`]
+//! (`FtSystem::new_sharded`): because each shard is an ordinary
+//! processor, it carries its own frontier, checkpoint chain and Table-1
+//! metadata, and the Fig. 6 solver computes a per-shard rollback plan
+//! with no changes to its constraint system.
+
+use crate::engine::channel::Message;
+use crate::engine::ctx::Ctx;
+use crate::engine::{Delivery, Engine, EventReport, Processor, Record, Statefulness};
+use crate::frontier::Frontier;
+use crate::graph::sharding::{LogicalId, Partition, PortRoute, ShardPlan};
+use crate::graph::EdgeId;
+use crate::progress::Summary;
+use crate::time::Time;
+use std::sync::Arc;
+
+/// Builds the operator instance for one shard of a logical vertex.
+pub type ProcFactory = Box<dyn FnMut(usize) -> Box<dyn Processor>>;
+
+/// Deterministic record-to-shard routing for [`Partition::ByKey`]:
+/// keyed records by `key mod W` (so a shard owns a residue class of the
+/// key space — "the failed shard's key range"), integers by value, text
+/// by a stable FNV-1a hash; unit/tensor records pin to shard 0.
+pub fn shard_of_record(r: &Record, fanout: usize) -> usize {
+    if fanout <= 1 {
+        return 0;
+    }
+    match r {
+        Record::Kv { key, .. } => key.rem_euclid(fanout as i64) as usize,
+        Record::Int(i) => i.rem_euclid(fanout as i64) as usize,
+        Record::Text(s) => {
+            let mut h: u64 = 0xcbf29ce484222325;
+            for b in s.as_bytes() {
+                h ^= *b as u64;
+                h = h.wrapping_mul(0x100000001b3);
+            }
+            (h % fanout as u64) as usize
+        }
+        Record::Unit | Record::Tensor(_) => 0,
+    }
+}
+
+/// Wraps one shard's operator, translating between logical and physical
+/// ports (see module docs).
+pub struct ShardRouter {
+    inner: Box<dyn Processor>,
+    routes: Vec<PortRoute>,
+    /// Per-logical-out-port time summaries (from the logical projection).
+    summaries: Vec<Summary>,
+    /// Per-logical-out-port flag: destination is a seq-domain vertex.
+    seq_dst: Vec<bool>,
+    /// Placeholder edge ids for the staging context.
+    port_edges: Vec<EdgeId>,
+    /// Physical input port → logical input port.
+    in_map: Vec<usize>,
+}
+
+impl ShardRouter {
+    /// Wrap `inner` as the shard implemented by physical processor `p`.
+    pub fn new(
+        plan: &ShardPlan,
+        p: crate::graph::ProcId,
+        inner: Box<dyn Processor>,
+    ) -> ShardRouter {
+        let (v, _s) = plan.logical_of(p);
+        ShardRouter {
+            inner,
+            routes: plan.routes_of(v).to_vec(),
+            summaries: plan.projections_of(v).iter().map(|&pr| Summary::of(pr)).collect(),
+            seq_dst: plan.seq_dst_of(v).to_vec(),
+            port_edges: plan.port_edges_of(v).to_vec(),
+            in_map: plan.in_map_of(p).to_vec(),
+        }
+    }
+
+    /// Re-stage the inner operator's sends onto physical ports, routing
+    /// each record to its destination shard, and forward notification
+    /// requests unchanged.
+    fn forward(
+        &self,
+        event_time: Time,
+        staged: Vec<(usize, Message)>,
+        notify: Vec<Time>,
+        ctx: &mut Ctx,
+    ) {
+        for (lport, msg) in staged {
+            let route = self.routes[lport];
+            // `send` lets the engine re-derive the (identical) time from
+            // the physical edge summary — and assign sequence numbers for
+            // seq-domain destinations; an explicitly chosen future time
+            // (the operator used `send_at`) passes through `send_at`.
+            let natural = self.summaries[lport].apply(&event_time);
+            match route.partition {
+                Partition::Broadcast => {
+                    for j in 0..route.fanout {
+                        if self.seq_dst[lport] || natural == Some(msg.time) {
+                            ctx.send(route.base + j, msg.data.clone());
+                        } else {
+                            ctx.send_at(route.base + j, msg.time, msg.data.clone());
+                        }
+                    }
+                }
+                Partition::ByKey => {
+                    let j = shard_of_record(&msg.data, route.fanout);
+                    if self.seq_dst[lport] || natural == Some(msg.time) {
+                        ctx.send(route.base + j, msg.data);
+                    } else {
+                        ctx.send_at(route.base + j, msg.time, msg.data);
+                    }
+                }
+            }
+        }
+        for t in notify {
+            ctx.notify_at(t);
+        }
+    }
+}
+
+impl Processor for ShardRouter {
+    fn on_message(&mut self, port: usize, time: Time, data: Record, ctx: &mut Ctx) {
+        let (staged, notify) = {
+            let mut ictx = Ctx::new(time, &self.port_edges, &self.summaries, &self.seq_dst);
+            self.inner.on_message(self.in_map[port], time, data, &mut ictx);
+            ictx.into_parts()
+        };
+        self.forward(time, staged, notify, ctx);
+    }
+
+    fn on_notification(&mut self, time: Time, ctx: &mut Ctx) {
+        let (staged, notify) = {
+            let mut ictx = Ctx::new(time, &self.port_edges, &self.summaries, &self.seq_dst);
+            self.inner.on_notification(time, &mut ictx);
+            ictx.into_parts()
+        };
+        self.forward(time, staged, notify, ctx);
+    }
+
+    fn on_input(&mut self, time: Time, data: Record, ctx: &mut Ctx) {
+        let (staged, notify) = {
+            let mut ictx = Ctx::new(time, &self.port_edges, &self.summaries, &self.seq_dst);
+            self.inner.on_input(time, data, &mut ictx);
+            ictx.into_parts()
+        };
+        self.forward(time, staged, notify, ctx);
+    }
+
+    fn statefulness(&self) -> Statefulness {
+        self.inner.statefulness()
+    }
+
+    fn checkpoint_upto(&self, upto: &Frontier) -> Vec<u8> {
+        self.inner.checkpoint_upto(upto)
+    }
+
+    fn restore(&mut self, blob: &[u8]) {
+        self.inner.restore(blob);
+    }
+
+    fn reset(&mut self) {
+        self.inner.reset();
+    }
+}
+
+/// Instantiate and wrap one operator per physical processor, in
+/// [`crate::graph::ProcId`] order. `factories[v]` is invoked once per
+/// shard of logical vertex `v` with the shard index.
+pub fn build_procs(plan: &ShardPlan, mut factories: Vec<ProcFactory>) -> Vec<Box<dyn Processor>> {
+    assert_eq!(factories.len(), plan.num_logical(), "one factory per logical vertex");
+    plan.topo
+        .proc_ids()
+        .map(|p| {
+            let (v, s) = plan.logical_of(p);
+            let inner = (factories[v.0 as usize])(s);
+            Box::new(ShardRouter::new(plan, p, inner)) as Box<dyn Processor>
+        })
+        .collect()
+}
+
+/// A deterministic engine over a sharded (expanded) topology, addressed
+/// by logical vertex. For the fault-tolerant variant use
+/// [`crate::ft::FtSystem::new_sharded`].
+pub struct ShardedEngine {
+    pub engine: Engine,
+    pub plan: Arc<ShardPlan>,
+}
+
+impl ShardedEngine {
+    pub fn new(
+        plan: Arc<ShardPlan>,
+        factories: Vec<ProcFactory>,
+        delivery: Delivery,
+    ) -> ShardedEngine {
+        let procs = build_procs(&plan, factories);
+        ShardedEngine { engine: Engine::new(plan.topo.clone(), procs, delivery), plan }
+    }
+
+    /// Push external input into (unsharded) source vertex `v`.
+    pub fn push_input(&mut self, v: LogicalId, t: Time, data: Record) -> EventReport {
+        assert_eq!(
+            self.plan.shard_count(v),
+            1,
+            "external input enters through an unsharded source"
+        );
+        self.engine.push_input(self.plan.proc(v, 0), t, data)
+    }
+
+    /// Move the input capability of every shard of `v` to `t`.
+    pub fn advance_input(&mut self, v: LogicalId, t: Time) {
+        for s in 0..self.plan.shard_count(v) {
+            self.engine.advance_input(self.plan.proc(v, s), t);
+        }
+    }
+
+    /// Drop the input capability of every shard of `v`.
+    pub fn close_input(&mut self, v: LogicalId) {
+        for s in 0..self.plan.shard_count(v) {
+            self.engine.close_input(self.plan.proc(v, s));
+        }
+    }
+
+    pub fn step(&mut self) -> Option<EventReport> {
+        self.engine.step()
+    }
+
+    pub fn run_to_quiescence(&mut self, max_steps: usize) -> Vec<EventReport> {
+        self.engine.run_to_quiescence(max_steps)
+    }
+
+    /// Crash shard `s` of logical vertex `v` (engine-level; the FT
+    /// harness layers durable recovery on top).
+    pub fn fail_shard(&mut self, v: LogicalId, s: usize) {
+        self.engine.fail_proc(self.plan.proc(v, s));
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::engine::EventKind;
+    use crate::graph::sharding::ShardedBuilder;
+    use crate::graph::Projection;
+    use crate::operators::{shared_vec, CountByKey, SharedVec, Sink, Source};
+    use crate::time::TimeDomain;
+
+    fn count_pipeline(w: u32) -> (ShardedEngine, LogicalId, SharedVec) {
+        let mut b = ShardedBuilder::new();
+        let src = b.add_proc("src", TimeDomain::EPOCH);
+        let count = b.add_sharded("count", TimeDomain::EPOCH, w);
+        let col = b.add_proc("collect", TimeDomain::EPOCH);
+        b.connect(src, count, Projection::Identity);
+        b.connect(count, col, Projection::Identity);
+        let plan = Arc::new(b.build().unwrap());
+        let out = shared_vec();
+        let out2 = out.clone();
+        let factories: Vec<ProcFactory> = vec![
+            Box::new(|_| Box::new(Source)),
+            Box::new(|_| Box::new(CountByKey::default())),
+            Box::new(move |_| Box::new(Sink(out2.clone()))),
+        ];
+        let eng = ShardedEngine::new(plan, factories, Delivery::Fifo);
+        let src = eng.plan.find("src").unwrap();
+        (eng, src, out)
+    }
+
+    fn drive(eng: &mut ShardedEngine, src: LogicalId) {
+        eng.advance_input(src, Time::epoch(0));
+        for (k, v) in [(0i64, 1.0), (1, 2.0), (2, 3.0), (3, 4.0), (0, 5.0), (5, 6.0)] {
+            eng.push_input(src, Time::epoch(0), Record::kv(k, v));
+        }
+        eng.advance_input(src, Time::epoch(1));
+        eng.close_input(src);
+        eng.run_to_quiescence(100_000);
+    }
+
+    /// Per-key sums must be independent of the shard count.
+    #[test]
+    fn sharded_counts_match_unsharded() {
+        let mut sums: Vec<Vec<(i64, f64)>> = Vec::new();
+        for w in [1u32, 2, 4] {
+            let (mut eng, src, out) = count_pipeline(w);
+            drive(&mut eng, src);
+            let mut got: Vec<(i64, f64)> = out
+                .lock()
+                .unwrap()
+                .iter()
+                .map(|(_, r)| r.as_kv().unwrap())
+                .collect();
+            got.sort_by(|a, b| a.partial_cmp(b).unwrap());
+            sums.push(got);
+        }
+        assert_eq!(sums[0], vec![(0, 6.0), (1, 2.0), (2, 3.0), (3, 4.0), (5, 6.0)]);
+        assert_eq!(sums[0], sums[1]);
+        assert_eq!(sums[0], sums[2]);
+    }
+
+    /// Keys land on their residue-class shard.
+    #[test]
+    fn bykey_routing_is_mod_w() {
+        let (mut eng, src, _out) = count_pipeline(4);
+        let count = eng.plan.find("count").unwrap();
+        eng.advance_input(src, Time::epoch(0));
+        let reports = [
+            eng.push_input(src, Time::epoch(0), Record::kv(5, 1.0)),
+            eng.push_input(src, Time::epoch(0), Record::kv(-3, 1.0)),
+        ];
+        for (rep, expect_shard) in reports.iter().zip([1usize, 1]) {
+            assert_eq!(rep.sent.len(), 1);
+            let (e, _) = &rep.sent[0];
+            assert_eq!(
+                eng.engine.topology().dst(*e),
+                eng.plan.proc(count, expect_shard),
+                "key routes to key mod W (rem_euclid for negatives)"
+            );
+        }
+    }
+
+    /// Two identical runs produce identical event sequences (fixed
+    /// round-robin over shard edges).
+    #[test]
+    fn sharded_execution_is_deterministic() {
+        let trace = |()| {
+            let (mut eng, src, _out) = count_pipeline(4);
+            eng.advance_input(src, Time::epoch(0));
+            for k in 0..12i64 {
+                eng.push_input(src, Time::epoch(0), Record::kv(k % 5, k as f64));
+            }
+            eng.advance_input(src, Time::epoch(1));
+            eng.close_input(src);
+            eng.run_to_quiescence(100_000)
+                .iter()
+                .map(|r| match &r.kind {
+                    EventKind::Message { proc, edge, time, .. } => {
+                        format!("m {proc} {edge} {time}")
+                    }
+                    EventKind::Notification { proc, time } => format!("n {proc} {time}"),
+                    EventKind::Input { proc, time, .. } => format!("i {proc} {time}"),
+                })
+                .collect::<Vec<_>>()
+        };
+        assert_eq!(trace(()), trace(()));
+    }
+
+    /// Broadcast partitioning copies a record to every shard.
+    #[test]
+    fn broadcast_reaches_every_shard() {
+        let mut b = ShardedBuilder::new();
+        let src = b.add_proc("src", TimeDomain::EPOCH);
+        let work = b.add_sharded("work", TimeDomain::EPOCH, 3);
+        b.connect_with(src, work, Projection::Identity, Partition::Broadcast);
+        let plan = Arc::new(b.build().unwrap());
+        let factories: Vec<ProcFactory> = vec![
+            Box::new(|_| Box::new(Source)),
+            Box::new(|_| Box::new(CountByKey::default())),
+        ];
+        let mut eng = ShardedEngine::new(plan, factories, Delivery::Fifo);
+        let src = eng.plan.find("src").unwrap();
+        eng.advance_input(src, Time::epoch(0));
+        let rep = eng.push_input(src, Time::epoch(0), Record::kv(7, 1.0));
+        assert_eq!(rep.sent.len(), 3, "one copy per shard");
+    }
+
+    #[test]
+    fn shard_of_record_routing() {
+        assert_eq!(shard_of_record(&Record::kv(7, 0.0), 4), 3);
+        assert_eq!(shard_of_record(&Record::kv(-1, 0.0), 4), 3);
+        assert_eq!(shard_of_record(&Record::Int(6), 4), 2);
+        assert_eq!(shard_of_record(&Record::Unit, 4), 0);
+        assert_eq!(shard_of_record(&Record::kv(9, 0.0), 1), 0);
+        let a = shard_of_record(&Record::text("falkirk"), 8);
+        assert_eq!(a, shard_of_record(&Record::text("falkirk"), 8));
+        assert!(a < 8);
+    }
+}

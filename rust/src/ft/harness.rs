@@ -138,6 +138,17 @@ pub struct FtStats {
     pub log_entries: u64,
     pub history_events: u64,
     pub events_observed: u64,
+    /// Recovery passes performed.
+    pub recoveries: u64,
+    /// Messages replayed from logs/history across all recoveries — the
+    /// replay-cost counter the sharded tests assert on (a single-shard
+    /// failure must replay only that shard's key range).
+    pub messages_replayed: u64,
+    /// Processors restored from a checkpoint or reset to ∅ across all
+    /// recoveries (i.e. actually rolled back).
+    pub procs_rolled_back: u64,
+    /// Processors left untouched at ⊤ across all recoveries.
+    pub procs_untouched: u64,
 }
 
 /// Engine + fault-tolerance harness: the top-level object applications
@@ -172,6 +183,26 @@ impl FtSystem {
             topo,
             stats: FtStats::default(),
         }
+    }
+
+    /// Build a **sharded** system from a [`ShardPlan`]: one wrapped
+    /// operator per physical shard (see
+    /// [`crate::engine::sharded::ShardRouter`]), with per-*logical*-vertex
+    /// policies replicated over that vertex's shards. Each shard then
+    /// carries its own frontier, checkpoint chain and Table-1 metadata,
+    /// so failures inject per shard
+    /// (`inject_failures(&[plan.proc(v, s)])`) and the Fig. 6 solver
+    /// produces a per-shard rollback plan.
+    pub fn new_sharded(
+        plan: &Arc<crate::graph::sharding::ShardPlan>,
+        factories: Vec<crate::engine::sharded::ProcFactory>,
+        logical_policies: &[Policy],
+        delivery: Delivery,
+        store: Store,
+    ) -> FtSystem {
+        let procs = crate::engine::sharded::build_procs(plan, factories);
+        let policies = plan.expand_per_proc(logical_policies);
+        FtSystem::new(plan.topo.clone(), procs, policies, delivery, store)
     }
 
     pub fn topology(&self) -> &Topology {

@@ -73,8 +73,10 @@ impl FtSystem {
 
     /// Assemble solver availability. Failed processors offer only
     /// durably-complete frontiers; non-failed ones additionally offer ⊤
-    /// (§4.4).
-    pub(crate) fn availability(&self) -> Vec<Available> {
+    /// (§4.4). Public so the property suite can feed the *live* system's
+    /// availability straight into [`choose_frontiers`] /
+    /// [`crate::ft::rollback::verify_plan`].
+    pub fn availability(&self) -> Vec<Available> {
         self.topo
             .proc_ids()
             .map(|p| {
@@ -190,6 +192,11 @@ impl FtSystem {
         for ft in &mut self.ft {
             ft.failed = false;
         }
+        self.stats.recoveries += 1;
+        self.stats.messages_replayed += report.replayed as u64;
+        self.stats.procs_rolled_back +=
+            (report.restored_from_checkpoint + report.reset_to_empty) as u64;
+        self.stats.procs_untouched += report.untouched as u64;
         report
     }
 

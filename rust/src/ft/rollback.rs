@@ -110,11 +110,38 @@ pub struct RollbackInput<'a> {
     pub avail: &'a [Available],
 }
 
-/// Solver output: `f(p)` and `f_n(p)` per processor.
+/// Solver output: `f(p)` and `f_n(p)` per processor. In a sharded
+/// topology each shard is a processor, so this *is* the per-shard
+/// rollback plan — the helpers below are what the sharded recovery path
+/// and its tests read.
 #[derive(Clone, Debug, PartialEq)]
 pub struct RollbackPlan {
     pub f: Vec<Frontier>,
     pub f_n: Vec<Frontier>,
+}
+
+impl RollbackPlan {
+    /// The chosen frontier of processor (shard) `p`.
+    pub fn frontier(&self, p: ProcId) -> &Frontier {
+        &self.f[p.0 as usize]
+    }
+
+    /// Processors left untouched at ⊤ (no rollback at all).
+    pub fn untouched(&self) -> usize {
+        self.f.iter().filter(|f| f.is_top()).count()
+    }
+
+    /// Processors that actually roll back (chosen frontier below ⊤) —
+    /// for a single-shard failure under logging policies this is exactly
+    /// the failed shard.
+    pub fn rolled_back(&self) -> Vec<ProcId> {
+        self.f
+            .iter()
+            .enumerate()
+            .filter(|(_, f)| !f.is_top())
+            .map(|(i, _)| ProcId(i as u32))
+            .collect()
+    }
 }
 
 /// Evaluate φ(d)(g) for edge `d` given the *source's* chosen frontier `g`:

@@ -17,6 +17,8 @@
 //! for frontiers in the history of `p`, which is exactly what storing it
 //! per checkpoint provides.
 
+pub mod sharding;
+
 use crate::frontier::Frontier;
 use crate::time::{Time, TimeDomain, CTR_INF};
 

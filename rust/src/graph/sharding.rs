@@ -1,0 +1,425 @@
+//! Shard-aware topology expansion: the *logical* dataflow an application
+//! declares, and its expansion into the *physical* processor graph the
+//! engine executes.
+//!
+//! An application describes logical vertices, each with a worker-shard
+//! count W, and logical edges between them. [`ShardedBuilder::build`]
+//! expands every logical vertex into W physical processors (the paper's
+//! "processors" stay the unit of failure, checkpointing and rollback —
+//! per-shard logical-time domains are exactly the §3.2 mechanism that
+//! lets each shard checkpoint and roll back independently) and every
+//! logical edge into a bundle of *exchange edges*:
+//!
+//! ```text
+//!   src W=1 → dst W=3 :  1×3 edges (hash-partition the stream)
+//!   src W=2 → dst W=3 :  2×3 edges (full hash exchange)
+//!   src W=2 → dst W=1 :  2×1 edges (fan-in)
+//! ```
+//!
+//! Records are routed to destination shards by [`Partition`]: keyed
+//! partitioning (`key mod W`, the default) or broadcast. Routing is
+//! performed by the [`crate::engine::sharded::ShardRouter`] wrapper that
+//! [`ShardPlan`] parameterizes; this module is purely the static
+//! expansion plus the lookup tables the router needs.
+//!
+//! Because every physical edge carries the logical edge's projection
+//! φ(e), the Fig. 6 consistent-frontier machinery applies unchanged: a
+//! shard is a processor, so it has its own frontier, checkpoint chain and
+//! Table-1 metadata, and the solver computes a per-shard rollback plan —
+//! recovering a single failed shard's key range instead of the whole
+//! logical vertex (see `ft/README.md`).
+
+use crate::graph::{EdgeId, GraphBuilder, ProcId, Projection, Topology};
+use crate::time::TimeDomain;
+use std::sync::Arc;
+
+/// Identifier of a logical (pre-expansion) vertex.
+#[derive(Copy, Clone, PartialEq, Eq, PartialOrd, Ord, Hash, Debug)]
+pub struct LogicalId(pub u32);
+
+impl std::fmt::Display for LogicalId {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "v{}", self.0)
+    }
+}
+
+/// How records on a logical edge are distributed over destination shards.
+#[derive(Copy, Clone, PartialEq, Eq, Debug)]
+pub enum Partition {
+    /// Route by the record's key (`key mod W`; integer records route by
+    /// value, text by a stable FNV hash, everything else to shard 0).
+    /// The default: each key's state lives on exactly one shard.
+    ByKey,
+    /// Deliver a copy to every destination shard (parameter/config
+    /// streams).
+    Broadcast,
+}
+
+/// Routing entry for one logical output port of a physical processor:
+/// the port's exchange-edge bundle occupies physical output ports
+/// `base .. base + fanout`.
+#[derive(Copy, Clone, Debug)]
+pub struct PortRoute {
+    /// First physical output-port index of the bundle.
+    pub base: usize,
+    /// Number of destination shards (bundle width).
+    pub fanout: usize,
+    /// How records pick a destination shard.
+    pub partition: Partition,
+}
+
+struct LogicalVertex {
+    name: String,
+    domain: TimeDomain,
+    shards: u32,
+}
+
+struct LogicalEdge {
+    src: LogicalId,
+    dst: LogicalId,
+    projection: Projection,
+    partition: Partition,
+}
+
+/// Builder for a sharded dataflow. Mirrors [`GraphBuilder`] at the
+/// logical level; [`ShardedBuilder::build`] performs the expansion.
+#[derive(Default)]
+pub struct ShardedBuilder {
+    verts: Vec<LogicalVertex>,
+    edges: Vec<LogicalEdge>,
+}
+
+impl ShardedBuilder {
+    pub fn new() -> ShardedBuilder {
+        ShardedBuilder::default()
+    }
+
+    /// Add an unsharded logical vertex (W = 1).
+    pub fn add_proc(&mut self, name: &str, domain: TimeDomain) -> LogicalId {
+        self.add_sharded(name, domain, 1)
+    }
+
+    /// Add a logical vertex partitioned into `shards` workers. Physical
+    /// processors are named `name#0 … name#{W-1}` (plain `name` for
+    /// W = 1).
+    pub fn add_sharded(&mut self, name: &str, domain: TimeDomain, shards: u32) -> LogicalId {
+        assert!(shards >= 1, "a vertex needs at least one shard");
+        self.verts.push(LogicalVertex { name: name.to_string(), domain, shards });
+        LogicalId(self.verts.len() as u32 - 1)
+    }
+
+    /// Connect two logical vertices with keyed partitioning.
+    pub fn connect(&mut self, src: LogicalId, dst: LogicalId, projection: Projection) -> usize {
+        self.connect_with(src, dst, projection, Partition::ByKey)
+    }
+
+    /// Connect with an explicit partitioning strategy. Returns the
+    /// logical edge index (the local input-port order at `dst` is the
+    /// order of `connect` calls targeting it, as in [`GraphBuilder`]).
+    pub fn connect_with(
+        &mut self,
+        src: LogicalId,
+        dst: LogicalId,
+        projection: Projection,
+        partition: Partition,
+    ) -> usize {
+        self.edges.push(LogicalEdge { src, dst, projection, partition });
+        self.edges.len() - 1
+    }
+
+    /// Expand to the physical topology plus the routing tables. Fails if
+    /// any projection is incompatible with its endpoint domains (checked
+    /// by the underlying [`GraphBuilder`]).
+    pub fn build(self) -> Result<ShardPlan, String> {
+        let nv = self.verts.len();
+        let mut g = GraphBuilder::new();
+        let mut shards: Vec<Vec<ProcId>> = Vec::with_capacity(nv);
+        let mut proc_logical: Vec<(u32, u32)> = Vec::new();
+        for (vi, v) in self.verts.iter().enumerate() {
+            let mut ps = Vec::with_capacity(v.shards as usize);
+            for s in 0..v.shards {
+                let name =
+                    if v.shards == 1 { v.name.clone() } else { format!("{}#{s}", v.name) };
+                ps.push(g.add_proc(&name, v.domain));
+                proc_logical.push((vi as u32, s));
+            }
+            shards.push(ps);
+        }
+
+        // Logical port orders (connect order, as in GraphBuilder).
+        let mut l_out: Vec<Vec<usize>> = vec![Vec::new(); nv];
+        let mut l_in: Vec<Vec<usize>> = vec![Vec::new(); nv];
+        for (ei, e) in self.edges.iter().enumerate() {
+            l_out[e.src.0 as usize].push(ei);
+            l_in[e.dst.0 as usize].push(ei);
+        }
+
+        // Physical exchange edges, grouped per (src shard, logical port):
+        // the group layout is identical for every shard of a vertex, so
+        // the routing tables are recorded once per logical vertex.
+        let mut edge_logical: Vec<usize> = Vec::new();
+        let mut routes: Vec<Vec<PortRoute>> = vec![Vec::new(); nv];
+        let mut port_edges: Vec<Vec<EdgeId>> = vec![Vec::new(); nv];
+        for vi in 0..nv {
+            for s in 0..self.verts[vi].shards {
+                let src_p = shards[vi][s as usize];
+                let mut base = 0usize;
+                for &le in &l_out[vi] {
+                    let e = &self.edges[le];
+                    let dst_w = self.verts[e.dst.0 as usize].shards as usize;
+                    for j in 0..dst_w {
+                        let pe = g.connect(src_p, shards[e.dst.0 as usize][j], e.projection);
+                        edge_logical.push(le);
+                        if s == 0 && j == 0 {
+                            port_edges[vi].push(pe);
+                        }
+                    }
+                    if s == 0 {
+                        routes[vi].push(PortRoute {
+                            base,
+                            fanout: dst_w,
+                            partition: e.partition,
+                        });
+                    }
+                    base += dst_w;
+                }
+            }
+        }
+        let topo = Arc::new(g.build()?);
+
+        let out_projections: Vec<Vec<Projection>> = (0..nv)
+            .map(|vi| l_out[vi].iter().map(|&le| self.edges[le].projection).collect())
+            .collect();
+        let out_seq_dst: Vec<Vec<bool>> = (0..nv)
+            .map(|vi| {
+                l_out[vi]
+                    .iter()
+                    .map(|&le| {
+                        self.verts[self.edges[le].dst.0 as usize].domain == TimeDomain::Seq
+                    })
+                    .collect()
+            })
+            .collect();
+
+        // Physical input port → logical input port, per physical proc.
+        let mut in_maps: Vec<Vec<usize>> = Vec::with_capacity(topo.num_procs());
+        for p in topo.proc_ids() {
+            let (vi, _s) = proc_logical[p.0 as usize];
+            let map = topo
+                .in_edges(p)
+                .iter()
+                .map(|&pe| {
+                    let le = edge_logical[pe.0 as usize];
+                    l_in[vi as usize]
+                        .iter()
+                        .position(|&x| x == le)
+                        .expect("physical in-edge must map to a logical in-port")
+                })
+                .collect();
+            in_maps.push(map);
+        }
+
+        let names = self.verts.into_iter().map(|v| v.name).collect();
+        Ok(ShardPlan {
+            topo,
+            names,
+            shards,
+            proc_logical,
+            routes,
+            out_projections,
+            out_seq_dst,
+            in_maps,
+            port_edges,
+        })
+    }
+}
+
+/// The expanded physical topology plus everything the per-shard routers
+/// and the fault-tolerance harness need to relate physical processors
+/// back to logical vertices.
+pub struct ShardPlan {
+    /// The physical topology the engine executes.
+    pub topo: Arc<Topology>,
+    names: Vec<String>,
+    /// Physical processors per logical vertex, shard order.
+    shards: Vec<Vec<ProcId>>,
+    /// Physical processor → (logical vertex, shard index).
+    proc_logical: Vec<(u32, u32)>,
+    /// Routing table per logical vertex, per logical output port.
+    routes: Vec<Vec<PortRoute>>,
+    /// Logical out-edge projections (for the router's time translation).
+    out_projections: Vec<Vec<Projection>>,
+    /// Whether each logical out-port feeds a seq-domain destination.
+    out_seq_dst: Vec<Vec<bool>>,
+    /// Physical input port → logical input port, per physical proc.
+    in_maps: Vec<Vec<usize>>,
+    /// One representative physical edge per logical out-port (placeholder
+    /// ids for the router's staging context).
+    port_edges: Vec<Vec<EdgeId>>,
+}
+
+impl ShardPlan {
+    /// Number of logical vertices.
+    pub fn num_logical(&self) -> usize {
+        self.names.len()
+    }
+
+    /// Shard count of a logical vertex.
+    pub fn shard_count(&self, v: LogicalId) -> usize {
+        self.shards[v.0 as usize].len()
+    }
+
+    /// All physical processors of a logical vertex, shard order.
+    pub fn shards_of(&self, v: LogicalId) -> &[ProcId] {
+        &self.shards[v.0 as usize]
+    }
+
+    /// The physical processor implementing shard `s` of vertex `v`.
+    pub fn proc(&self, v: LogicalId, s: usize) -> ProcId {
+        self.shards[v.0 as usize][s]
+    }
+
+    /// The logical vertex and shard index of a physical processor.
+    pub fn logical_of(&self, p: ProcId) -> (LogicalId, usize) {
+        let (v, s) = self.proc_logical[p.0 as usize];
+        (LogicalId(v), s as usize)
+    }
+
+    /// The logical vertex's name.
+    pub fn name(&self, v: LogicalId) -> &str {
+        &self.names[v.0 as usize]
+    }
+
+    /// Find a logical vertex by name.
+    pub fn find(&self, name: &str) -> Option<LogicalId> {
+        self.names.iter().position(|n| n == name).map(|i| LogicalId(i as u32))
+    }
+
+    /// Routing table of a logical vertex (one entry per logical out-port).
+    pub fn routes_of(&self, v: LogicalId) -> &[PortRoute] {
+        &self.routes[v.0 as usize]
+    }
+
+    /// Logical out-port projections of a vertex.
+    pub fn projections_of(&self, v: LogicalId) -> &[Projection] {
+        &self.out_projections[v.0 as usize]
+    }
+
+    /// Per-logical-out-port flags: destination is a seq-domain vertex.
+    pub fn seq_dst_of(&self, v: LogicalId) -> &[bool] {
+        &self.out_seq_dst[v.0 as usize]
+    }
+
+    /// Representative physical edge per logical out-port.
+    pub fn port_edges_of(&self, v: LogicalId) -> &[EdgeId] {
+        &self.port_edges[v.0 as usize]
+    }
+
+    /// Physical-to-logical input-port map of a physical processor.
+    pub fn in_map_of(&self, p: ProcId) -> &[usize] {
+        &self.in_maps[p.0 as usize]
+    }
+
+    /// Expand per-logical-vertex values (e.g. policies) to one value per
+    /// physical processor, in [`ProcId`] order.
+    pub fn expand_per_proc<T: Clone>(&self, per_logical: &[T]) -> Vec<T> {
+        assert_eq!(per_logical.len(), self.num_logical());
+        self.proc_logical.iter().map(|&(v, _)| per_logical[v as usize].clone()).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn three_stage(w1: u32, w2: u32) -> ShardPlan {
+        let mut b = ShardedBuilder::new();
+        let src = b.add_proc("src", TimeDomain::EPOCH);
+        let map = b.add_sharded("map", TimeDomain::EPOCH, w1);
+        let count = b.add_sharded("count", TimeDomain::EPOCH, w2);
+        let col = b.add_proc("collect", TimeDomain::EPOCH);
+        b.connect(src, map, Projection::Identity);
+        b.connect(map, count, Projection::Identity);
+        b.connect(count, col, Projection::Identity);
+        b.build().unwrap()
+    }
+
+    #[test]
+    fn expansion_counts() {
+        let plan = three_stage(2, 3);
+        // 1 + 2 + 3 + 1 physical procs.
+        assert_eq!(plan.topo.num_procs(), 7);
+        // Edges: 1×2 + 2×3 + 3×1 = 11.
+        assert_eq!(plan.topo.num_edges(), 11);
+        let map = plan.find("map").unwrap();
+        let count = plan.find("count").unwrap();
+        assert_eq!(plan.shard_count(map), 2);
+        assert_eq!(plan.shard_count(count), 3);
+        assert_eq!(plan.name(count), "count");
+        // Physical names carry the shard suffix.
+        assert_eq!(plan.topo.find("map#1"), Some(plan.proc(map, 1)));
+        assert_eq!(plan.topo.find("src"), Some(plan.proc(plan.find("src").unwrap(), 0)));
+    }
+
+    #[test]
+    fn out_ports_are_grouped_per_logical_port() {
+        let plan = three_stage(2, 3);
+        let map = plan.find("map").unwrap();
+        // map has one logical out-port fanning out to 3 count shards.
+        let routes = plan.routes_of(map);
+        assert_eq!(routes.len(), 1);
+        assert_eq!(routes[0].base, 0);
+        assert_eq!(routes[0].fanout, 3);
+        for s in 0..2 {
+            let p = plan.proc(map, s);
+            let outs = plan.topo.out_edges(p);
+            assert_eq!(outs.len(), 3);
+            for (j, &e) in outs.iter().enumerate() {
+                let count = plan.find("count").unwrap();
+                assert_eq!(plan.topo.dst(e), plan.proc(count, j), "bundle is shard-ordered");
+            }
+        }
+    }
+
+    #[test]
+    fn in_maps_point_at_logical_ports() {
+        // Two logical inputs into a sharded join: every physical in-edge
+        // must map back to the right logical port regardless of expansion
+        // interleaving.
+        let mut b = ShardedBuilder::new();
+        let l = b.add_proc("left", TimeDomain::EPOCH);
+        let r = b.add_proc("right", TimeDomain::EPOCH);
+        let j = b.add_sharded("join", TimeDomain::EPOCH, 2);
+        b.connect(l, j, Projection::Identity); // logical port 0
+        b.connect(r, j, Projection::Identity); // logical port 1
+        let plan = b.build().unwrap();
+        let j = plan.find("join").unwrap();
+        for s in 0..2 {
+            let p = plan.proc(j, s);
+            let map = plan.in_map_of(p);
+            let ins = plan.topo.in_edges(p);
+            assert_eq!(map.len(), 2);
+            for (pi, &e) in ins.iter().enumerate() {
+                let src_name = plan.topo.name(plan.topo.src(e));
+                let expect = if src_name == "left" { 0 } else { 1 };
+                assert_eq!(map[pi], expect, "physical port {pi} of join#{s}");
+            }
+        }
+    }
+
+    #[test]
+    fn expand_per_proc_replicates_by_shard() {
+        let plan = three_stage(2, 2);
+        let vals = plan.expand_per_proc(&["a", "b", "c", "d"]);
+        assert_eq!(vals, vec!["a", "b", "b", "c", "c", "d"]);
+    }
+
+    #[test]
+    fn bad_projection_is_rejected() {
+        let mut b = ShardedBuilder::new();
+        let a = b.add_proc("a", TimeDomain::EPOCH);
+        let c = b.add_sharded("c", TimeDomain::Structured { depth: 1 }, 2);
+        b.connect(a, c, Projection::Identity); // domain mismatch
+        assert!(b.build().is_err());
+    }
+}

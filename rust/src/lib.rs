@@ -6,6 +6,13 @@
 //! - a deterministic timely-dataflow-style execution engine with cyclic
 //!   graphs, structured logical times and notifications ([`engine`],
 //!   [`progress`], [`graph`], [`operators`]);
+//! - a **sharded multi-worker layer**: logical vertices partition into W
+//!   worker shards connected by hash-exchange edges
+//!   ([`graph::sharding`], [`engine::sharded`]); each shard is a
+//!   processor with its own logical-time frontier and checkpoint chain,
+//!   so the Fig. 6 solver computes per-shard rollback plans and a
+//!   single-shard failure recovers only that shard's key range
+//!   (`ft/README.md` documents the model);
 //! - the paper's fault-tolerance framework: logical-time frontiers
 //!   ([`frontier`]), per-edge time-domain projections φ(e) ([`graph`]),
 //!   checkpoint/log policies and Table-1 metadata, selective rollback, the
@@ -40,5 +47,6 @@ pub mod metrics;
 pub mod bench_support;
 
 pub use crate::frontier::Frontier;
+pub use crate::graph::sharding::{LogicalId, Partition, ShardPlan, ShardedBuilder};
 pub use crate::graph::{EdgeId, GraphBuilder, ProcId, Projection, Topology};
 pub use crate::time::{Time, TimeDomain};

@@ -10,17 +10,32 @@
 use std::collections::BTreeMap;
 
 /// Serialization error.
-#[derive(Debug, thiserror::Error)]
+#[derive(Debug)]
 pub enum SerError {
-    #[error("unexpected end of input at byte {0}")]
+    /// Unexpected end of input at the given byte offset.
     Eof(usize),
-    #[error("varint too long at byte {0}")]
+    /// Varint exceeded 64 bits at the given byte offset.
     VarintOverflow(usize),
-    #[error("bad tag {found} (expected {expected}) at byte {at}")]
+    /// A format tag did not match what the decoder expected.
     BadTag { expected: u8, found: u8, at: usize },
-    #[error("invalid utf-8 string")]
+    /// A byte string was not valid UTF-8.
     Utf8,
 }
+
+impl std::fmt::Display for SerError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            SerError::Eof(at) => write!(f, "unexpected end of input at byte {at}"),
+            SerError::VarintOverflow(at) => write!(f, "varint too long at byte {at}"),
+            SerError::BadTag { expected, found, at } => {
+                write!(f, "bad tag {found} (expected {expected}) at byte {at}")
+            }
+            SerError::Utf8 => write!(f, "invalid utf-8 string"),
+        }
+    }
+}
+
+impl std::error::Error for SerError {}
 
 /// Byte-buffer writer.
 #[derive(Default, Debug, Clone)]

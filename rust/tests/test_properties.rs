@@ -1,9 +1,12 @@
 //! Property tests (in-repo harness — `proptest` is unavailable offline):
 //! frontier algebra laws, the §3.3 re-ordering rule, solver-output
-//! validity on random graphs, and the monotonicity claims of §3.6/§4.2.
+//! validity on random graphs (plain and sharded), and the monotonicity
+//! claims of §3.6/§4.2.
 
+use falkirk::bench_support::sharded::{drive_epoch, pipeline, ShardedConfig};
 use falkirk::engine::channel::{Channel, Delivery, Message};
 use falkirk::engine::Record;
+use falkirk::ft::Policy;
 use falkirk::frontier::Frontier;
 use falkirk::ft::meta::CkptMeta;
 use falkirk::ft::rollback::{
@@ -252,6 +255,112 @@ fn incremental_growth_equals_batch() {
             let batch = choose_frontiers(&input);
             prop_assert!(plan == batch, "incremental diverged from batch at n={n}");
         }
+        Ok(())
+    });
+}
+
+/// Fig. 6 on *sharded* topologies, with availability taken from a live
+/// system rather than synthesized: for a seeded grid of (W, topology,
+/// policy, drive length, failed-shard set), the per-shard frontiers the
+/// solver picks satisfy the §3.5 constraints (`verify_plan` accepts
+/// every plan `choose_frontiers` emits), failed shards never keep ⊤, and
+/// the engine-level recovery applies exactly that plan.
+#[test]
+fn sharded_solver_output_always_satisfies_constraints() {
+    check_with(Config { cases: 25, base_seed: 0x5A4D }, "sharded Fig-6 valid", |rng| {
+        let workers = 1 + rng.below(4) as u32;
+        let two_stage = rng.chance(0.5);
+        let count_policy = *rng.choose(&[
+            Policy::Lazy { every: 1, log_outputs: true },
+            Policy::Lazy { every: 2, log_outputs: true },
+            Policy::Lazy { every: 1, log_outputs: false },
+            Policy::FullHistory,
+        ]);
+        let cfg = ShardedConfig { workers, two_stage, count_policy, ..Default::default() };
+        let mut p = pipeline(&cfg);
+        let seed = rng.next_u64();
+        let epochs = 1 + rng.below(3);
+        for ep in 0..epochs {
+            drive_epoch(&mut p, seed, ep, 12, 8);
+        }
+        // Leave a partial epoch in flight so failures land mid-exchange.
+        let src = p.src_proc();
+        p.sys.advance_input(src, Time::epoch(epochs));
+        for i in 0..rng.index(10) {
+            p.sys.push_input(src, Time::epoch(epochs), Record::kv(i as i64 % 8, 1.0));
+        }
+        p.sys.run_to_quiescence(rng.index(40));
+
+        // Crash a random nonempty set of shards (count, sometimes map).
+        let mut victims = Vec::new();
+        for s in 0..workers as usize {
+            if rng.chance(0.4) {
+                victims.push(p.plan.proc(p.count, s));
+            }
+        }
+        if let Some(m) = p.map {
+            if rng.chance(0.3) {
+                victims.push(p.plan.proc(m, rng.index(workers as usize)));
+            }
+        }
+        if victims.is_empty() {
+            victims.push(p.plan.proc(p.count, rng.index(workers as usize)));
+        }
+        p.sys.inject_failures(&victims);
+
+        let avail = p.sys.availability();
+        let input = RollbackInput { topo: &p.plan.topo, avail: &avail };
+        let plan = choose_frontiers(&input);
+        verify_plan(&input, &plan)
+            .map_err(|e| format!("W={workers} two_stage={two_stage} {count_policy:?}: {e}"))?;
+        for i in 0..plan.f.len() {
+            prop_assert!(
+                plan.f_n[i].is_subset(&plan.f[i]),
+                "f_n ⊄ f at p{i} (W={workers})"
+            );
+        }
+        for &v in &victims {
+            prop_assert!(!plan.f[v.0 as usize].is_top(), "failed shard {v} kept ⊤");
+        }
+        // The engine-level recovery path must choose the same plan and
+        // drive the system back to a runnable state.
+        let rep = p.sys.recover();
+        prop_assert!(rep.plan == plan, "recover() diverged from the batch solve");
+        p.sys.advance_input(src, Time::epoch(epochs + 1));
+        p.sys.run_to_quiescence(5_000_000);
+        prop_assert!(p.sys.engine.is_quiescent(), "system wedged after recovery");
+        Ok(())
+    });
+}
+
+/// Sibling isolation: under logging policies, crashing one count shard
+/// never rolls back its siblings (their frontiers stay ⊤), whatever the
+/// failure step.
+#[test]
+fn sharded_siblings_stay_untouched_under_logging() {
+    check_with(Config { cases: 25, base_seed: 0xD15C }, "sibling isolation", |rng| {
+        let workers = 2 + rng.below(3) as u32;
+        let cfg = ShardedConfig { workers, ..Default::default() };
+        let mut p = pipeline(&cfg);
+        let seed = rng.next_u64();
+        let epochs = 1 + rng.below(3);
+        for ep in 0..epochs {
+            drive_epoch(&mut p, seed, ep, 12, 8);
+        }
+        let src = p.src_proc();
+        p.sys.advance_input(src, Time::epoch(epochs));
+        for i in 0..rng.index(8) {
+            p.sys.push_input(src, Time::epoch(epochs), Record::kv(i as i64, 1.0));
+        }
+        let s = rng.index(workers as usize);
+        let victim = p.plan.proc(p.count, s);
+        p.sys.inject_failures(&[victim]);
+        let rep = p.sys.recover();
+        prop_assert!(
+            rep.plan.rolled_back() == vec![victim],
+            "W={workers}: rolled back {:?}, expected only count#{s}",
+            rep.plan.rolled_back()
+        );
         Ok(())
     });
 }

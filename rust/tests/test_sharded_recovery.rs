@@ -1,0 +1,231 @@
+//! Sharded rollback recovery: the failure-transparency obligation on the
+//! multi-worker layer.
+//!
+//! The core claim (Veresov et al., *Failure Transparency in Stateful
+//! Dataflow Systems*, framing the paper's refinement argument): a
+//! failed-and-recovered run must be observably identical to a
+//! failure-free one. Here the observable output is the collector's
+//! complete per-epoch record multiset, compared **byte for byte** via
+//! `bench_support::sharded::canonical_output`.
+//!
+//! Two suites:
+//! - a seeded deterministic grid over (topology, W, checkpoint policy,
+//!   failure step) — every cell must produce byte-identical output;
+//! - targeted assertions that a single-shard failure at W = 4 rolls back
+//!   and replays only the failed shard's key range (per-shard frontiers
+//!   + `FtStats` replay counts).
+
+use falkirk::bench_support::sharded::{
+    canonical_output, drive_epoch, epoch_records, pipeline, ShardedConfig,
+};
+use falkirk::engine::shard_of_record;
+use falkirk::frontier::Frontier;
+use falkirk::ft::recovery::RecoveryReport;
+use falkirk::ft::{FtStats, Policy};
+use falkirk::time::Time;
+
+const EPOCHS: u64 = 4;
+const RECORDS: usize = 24;
+const KEYS: u64 = 8;
+
+/// A failure injection point inside the driven workload.
+#[derive(Copy, Clone, Debug)]
+struct Failure {
+    /// Which `count` shard crashes.
+    shard: usize,
+    /// The epoch during which the crash happens (before that epoch is
+    /// closed; `records_before` of its batch have been pushed).
+    epoch: u64,
+    /// Records of the epoch's batch pushed before the crash.
+    records_before: usize,
+    /// Engine events processed after those pushes, before the crash
+    /// (drives messages partway into the exchange).
+    presteps: usize,
+}
+
+/// Drive the workload end to end, optionally crashing one count shard
+/// and recovering. Returns the canonical observable output, the final
+/// stats, and the recovery report if a failure was injected.
+fn drive(
+    cfg: &ShardedConfig,
+    seed: u64,
+    failure: Option<Failure>,
+) -> (Vec<u8>, FtStats, Option<RecoveryReport>) {
+    let mut p = pipeline(cfg);
+    let src = p.src_proc();
+    let mut report = None;
+    for ep in 0..EPOCHS {
+        match failure {
+            // The crash epoch needs custom driving: open the epoch, push
+            // part of its batch, step partway, crash, recover, resume.
+            Some(f) if f.epoch == ep => {
+                let recs = epoch_records(seed, ep, RECORDS, KEYS);
+                p.sys.advance_input(src, Time::epoch(ep));
+                for r in &recs[..f.records_before] {
+                    p.sys.push_input(src, Time::epoch(ep), r.clone());
+                }
+                p.sys.run_to_quiescence(f.presteps);
+                let victim = p.plan.proc(p.count, f.shard);
+                p.sys.inject_failures(&[victim]);
+                report = Some(p.sys.recover());
+                for r in &recs[f.records_before..] {
+                    p.sys.push_input(src, Time::epoch(ep), r.clone());
+                }
+                p.sys.advance_input(src, Time::epoch(ep + 1));
+                p.sys.run_to_quiescence(5_000_000);
+            }
+            _ => drive_epoch(&mut p, seed, ep, RECORDS, KEYS),
+        }
+    }
+    p.sys.close_input(src);
+    p.sys.run_to_quiescence(5_000_000);
+    let out = canonical_output(&p.sys, p.collect_proc());
+    (out, p.sys.stats.clone(), report)
+}
+
+/// The deterministic fault-injection grid: recovered output must be
+/// byte-identical to the failure-free run in every cell.
+#[test]
+fn recovery_grid_is_byte_identical_to_failure_free() {
+    let policies = [
+        Policy::Lazy { every: 1, log_outputs: true },
+        Policy::Lazy { every: 2, log_outputs: true },
+        Policy::FullHistory,
+    ];
+    for two_stage in [false, true] {
+        for workers in [1u32, 2, 4] {
+            for count_policy in policies {
+                let cfg = ShardedConfig {
+                    workers,
+                    two_stage,
+                    count_policy,
+                    ..Default::default()
+                };
+                let (clean, _, _) = drive(&cfg, 7, None);
+                let failures = [
+                    // Epoch boundary: epoch 1 just completed, 2 not begun.
+                    Failure { shard: 0, epoch: 2, records_before: 0, presteps: 0 },
+                    // Mid-epoch: half the batch pushed, nothing delivered.
+                    Failure {
+                        shard: workers as usize - 1,
+                        epoch: 1,
+                        records_before: RECORDS / 2,
+                        presteps: 0,
+                    },
+                    // Mid-epoch, mid-exchange: messages partway through.
+                    Failure {
+                        shard: workers as usize / 2,
+                        epoch: 2,
+                        records_before: RECORDS / 2,
+                        presteps: 60,
+                    },
+                ];
+                for f in failures {
+                    let (failed, stats, rep) = drive(&cfg, 7, Some(f));
+                    assert!(rep.is_some());
+                    assert_eq!(stats.recoveries, 1);
+                    assert_eq!(
+                        clean, failed,
+                        "output diverged: W={workers} two_stage={two_stage} \
+                         policy={count_policy:?} failure={f:?}"
+                    );
+                }
+            }
+        }
+    }
+}
+
+/// The headline selective-rollback property: with per-shard checkpoint
+/// chains and logged outputs, a single-shard failure at W = 4 rolls back
+/// exactly one processor — the failed shard — and replays only messages
+/// destined to its key range.
+#[test]
+fn single_shard_failure_recovers_only_its_key_range() {
+    let cfg = ShardedConfig { workers: 4, ..Default::default() };
+    let seed = 7;
+    let mut p = pipeline(&cfg);
+    let src = p.src_proc();
+    // Two full epochs: every count shard checkpoints at ↓0 then ↓1.
+    for ep in 0..2u64 {
+        drive_epoch(&mut p, seed, ep, RECORDS, KEYS);
+    }
+    for s in 0..4 {
+        assert_eq!(p.sys.chain_len(p.plan.proc(p.count, s)), 2, "count#{s} chain");
+    }
+
+    // Open epoch 2, push half the batch, crash count#2 mid-epoch.
+    let recs = epoch_records(seed, 2, RECORDS, KEYS);
+    let pushed = RECORDS / 2;
+    p.sys.advance_input(src, Time::epoch(2));
+    for r in &recs[..pushed] {
+        p.sys.push_input(src, Time::epoch(2), r.clone());
+    }
+    let victim = p.plan.proc(p.count, 2);
+    p.sys.inject_failures(&[victim]);
+    let rep = p.sys.recover();
+
+    // Per-shard plan: only the failed shard rolls back, to its last
+    // checkpoint; every other processor (source, sibling shards,
+    // collector) keeps ⊤.
+    assert_eq!(rep.plan.frontier(victim), &Frontier::upto_epoch(1));
+    for s in [0usize, 1, 3] {
+        assert!(
+            rep.plan.frontier(p.plan.proc(p.count, s)).is_top(),
+            "sibling count#{s} must stay untouched"
+        );
+    }
+    assert_eq!(rep.plan.rolled_back(), vec![victim]);
+    assert_eq!(rep.plan.untouched(), p.plan.topo.num_procs() - 1);
+    assert_eq!(rep.restored_from_checkpoint, 1);
+    assert_eq!(rep.reset_to_empty, 0);
+
+    // Replay cost = exactly the in-flight epoch-2 records in the failed
+    // shard's key range (key ≡ 2 mod 4), resupplied from the source log.
+    let expected: usize =
+        recs[..pushed].iter().filter(|r| shard_of_record(r, 4) == 2).count();
+    assert!(expected > 0, "grid must exercise the failed key range");
+    assert_eq!(rep.replayed, expected, "only the failed shard's key range replays");
+    assert_eq!(p.sys.stats.messages_replayed, expected as u64);
+    assert_eq!(p.sys.stats.procs_rolled_back, 1);
+    assert_eq!(p.sys.stats.procs_untouched, p.plan.topo.num_procs() as u64 - 1);
+
+    // Finish the epoch and the run: output matches the failure-free run.
+    for r in &recs[pushed..] {
+        p.sys.push_input(src, Time::epoch(2), r.clone());
+    }
+    p.sys.advance_input(src, Time::epoch(3));
+    p.sys.run_to_quiescence(5_000_000);
+    for ep in 3..EPOCHS {
+        drive_epoch(&mut p, seed, ep, RECORDS, KEYS);
+    }
+    p.sys.close_input(src);
+    p.sys.run_to_quiescence(5_000_000);
+    let failed_out = canonical_output(&p.sys, p.collect_proc());
+    let (clean, _, _) = drive(&cfg, seed, None);
+    assert_eq!(clean, failed_out, "recovered output is byte-identical");
+}
+
+/// Crashing every shard of the vertex still recovers (degenerates to the
+/// whole-vertex rollback a non-sharded system would do).
+#[test]
+fn all_shards_failing_still_recovers() {
+    let cfg = ShardedConfig { workers: 2, ..Default::default() };
+    let (clean, _, _) = drive(&cfg, 13, None);
+    let mut p = pipeline(&cfg);
+    let src = p.src_proc();
+    for ep in 0..2u64 {
+        drive_epoch(&mut p, 13, ep, RECORDS, KEYS);
+    }
+    let victims: Vec<_> = (0..2).map(|s| p.plan.proc(p.count, s)).collect();
+    p.sys.inject_failures(&victims);
+    let rep = p.sys.recover();
+    for &v in &victims {
+        assert_eq!(rep.plan.frontier(v), &Frontier::upto_epoch(1));
+    }
+    for ep in 2..EPOCHS {
+        drive_epoch(&mut p, 13, ep, RECORDS, KEYS);
+    }
+    p.sys.close_input(src);
+    p.sys.run_to_quiescence(5_000_000);
+    assert_eq!(clean, canonical_output(&p.sys, p.collect_proc()));
+}

@@ -4,23 +4,29 @@
 //! failure-free run.
 //!
 //! ```text
-//! cargo run --release --example sharded_rollback
+//! cargo run --release --example sharded_rollback [-- --batch-cap B]
 //! ```
+//!
+//! `--batch-cap` (default 1 = record-at-a-time) sets the channel
+//! coalescing cap; both runs are driven at the same cap and the example
+//! prints end-to-end records/sec alongside the recovery stats.
 
 use falkirk::bench_support::sharded::{
-    canonical_output, epoch_records, pipeline, ShardedConfig,
+    canonical_output, epoch_records, pipeline, ShardedConfig, Throughput,
 };
 use falkirk::time::Time;
+use falkirk::util::cli::Args;
 
 const EPOCHS: u64 = 5;
 const RECORDS: usize = 32;
 const KEYS: u64 = 16;
 const SEED: u64 = 42;
 
-fn drive(fail_shard: Option<usize>) -> Vec<u8> {
-    let cfg = ShardedConfig { workers: 4, ..Default::default() };
+fn drive(batch_cap: usize, fail_shard: Option<usize>) -> Vec<u8> {
+    let cfg = ShardedConfig { workers: 4, batch_cap, ..Default::default() };
     let mut p = pipeline(&cfg);
     let src = p.src_proc();
+    let t0 = std::time::Instant::now();
     for ep in 0..EPOCHS {
         let recs = epoch_records(SEED, ep, RECORDS, KEYS);
         p.sys.advance_input(src, Time::epoch(ep));
@@ -41,7 +47,7 @@ fn drive(fail_shard: Option<usize>) -> Vec<u8> {
                     );
                 }
                 println!(
-                    "     rolled back {} of {} processors; {} logged messages replayed \
+                    "     rolled back {} of {} processors; {} logged records replayed \
                      (only count#{s}'s key range)",
                     rep.plan.rolled_back().len(),
                     p.plan.topo.num_procs(),
@@ -62,19 +68,38 @@ fn drive(fail_shard: Option<usize>) -> Vec<u8> {
     }
     p.sys.close_input(src);
     p.sys.run_to_quiescence(5_000_000);
+    let tp = Throughput {
+        records: EPOCHS * RECORDS as u64,
+        events: p.sys.engine.events_processed(),
+        elapsed_secs: t0.elapsed().as_secs_f64(),
+    };
     println!(
         "  checkpoints={} recoveries={} replayed={}",
         p.sys.stats.checkpoints_taken, p.sys.stats.recoveries, p.sys.stats.messages_replayed
+    );
+    println!(
+        "  log writes: {} batches / {} records",
+        p.sys.stats.log_entries, p.sys.stats.log_records
+    );
+    println!(
+        "  {} records in {:.2} ms → {:.0} records/sec",
+        tp.records,
+        tp.elapsed_secs * 1e3,
+        tp.records_per_sec()
     );
     canonical_output(&p.sys, p.collect_proc())
 }
 
 fn main() {
-    println!("failure-free run:");
-    let clean = drive(None);
+    let raw: Vec<String> = std::env::args().skip(1).collect();
+    let args = Args::parse(&raw);
+    let batch_cap = args.get_usize("batch-cap", 1);
+
+    println!("failure-free run (batch_cap = {batch_cap}):");
+    let clean = drive(batch_cap, None);
 
     println!("\nrun with a crash of shard 2:");
-    let failed = drive(Some(2));
+    let failed = drive(batch_cap, Some(2));
 
     assert_eq!(clean, failed, "sharded rollback recovery must be transparent");
     println!("\nOK: recovered output is byte-identical to the failure-free run.");

@@ -1,0 +1,87 @@
+//! Batch-throughput bench: records/sec of the Fig. 1 application and the
+//! sharded keyed-aggregation job across `batch_cap ∈ {1, 8, 64, 512}`.
+//!
+//! `batch_cap = 1` reproduces the pre-batching record-at-a-time
+//! delivery (one record per step, original order, identical outputs);
+//! larger caps coalesce same-time channel
+//! enqueues into batches that move through delivery, the Table-1
+//! harness (one log write per batch) and the sharded exchange as single
+//! units. Before timing, the bench asserts the observable outputs are
+//! identical across all caps — Fig. 1 responses / db commits, and the
+//! sharded job's canonical collector bytes — so the speedup is measured
+//! on provably equivalent executions.
+
+use falkirk::bench_support::sharded::{
+    canonical_output, drive_workload, pipeline, ShardedConfig,
+};
+use falkirk::bench_support::{BenchConfig, Bencher};
+use falkirk::coordinator::fig1::{run as run_fig1, Fig1Config};
+
+const CAPS: [usize; 4] = [1, 8, 64, 512];
+
+const SHARD_EPOCHS: u64 = 4;
+const SHARD_RECORDS: usize = 512;
+const SHARD_KEYS: u64 = 64;
+
+fn fig1_cfg(batch_cap: usize) -> Fig1Config {
+    Fig1Config {
+        epochs: 4,
+        queries_per_epoch: 16,
+        records_per_epoch: 256,
+        use_xla: false, // deterministic reference kernels
+        batch_cap,
+        ..Default::default()
+    }
+}
+
+fn shard_cfg(batch_cap: usize) -> ShardedConfig {
+    ShardedConfig { workers: 4, two_stage: true, batch_cap, ..Default::default() }
+}
+
+fn main() {
+    let mut b = Bencher::with_config(
+        "batch_throughput",
+        BenchConfig { warmup_iters: 1, sample_iters: 5 },
+    );
+
+    // Equivalence gate: every cap must produce the cap-1 output.
+    let base_fig1 = run_fig1(&fig1_cfg(1));
+    let base_shard = {
+        let mut p = pipeline(&shard_cfg(1));
+        drive_workload(&mut p, 7, SHARD_EPOCHS, SHARD_RECORDS, SHARD_KEYS);
+        canonical_output(&p.sys, p.collect_proc())
+    };
+    for cap in CAPS {
+        let out = run_fig1(&fig1_cfg(cap));
+        assert_eq!(out.responses, base_fig1.responses, "fig1 responses diverged at cap {cap}");
+        assert_eq!(out.db_commits, base_fig1.db_commits, "fig1 db commits diverged at cap {cap}");
+        let mut p = pipeline(&shard_cfg(cap));
+        drive_workload(&mut p, 7, SHARD_EPOCHS, SHARD_RECORDS, SHARD_KEYS);
+        assert_eq!(
+            canonical_output(&p.sys, p.collect_proc()),
+            base_shard,
+            "sharded output diverged at cap {cap}"
+        );
+    }
+    b.note("equivalence: outputs byte-identical across all caps (cap 1 = record-at-a-time)");
+
+    // Fig. 1 workload.
+    for cap in CAPS {
+        let cfg = fig1_cfg(cap);
+        let records = (cfg.queries_per_epoch + cfg.records_per_epoch) as f64 * cfg.epochs as f64;
+        b.run(&format!("fig1_cap{cap}"), records, || {
+            run_fig1(&cfg);
+        });
+    }
+
+    // Sharded keyed aggregation (W = 4, two-stage exchange).
+    for cap in CAPS {
+        let cfg = shard_cfg(cap);
+        let records = (SHARD_EPOCHS * SHARD_RECORDS as u64) as f64;
+        b.run(&format!("shard_W4_cap{cap}"), records, || {
+            let mut p = pipeline(&cfg);
+            drive_workload(&mut p, 7, SHARD_EPOCHS, SHARD_RECORDS, SHARD_KEYS);
+        });
+    }
+    b.note("ops/s = source records/sec end to end; larger caps amortize per-event scheduling, metadata and log writes");
+}

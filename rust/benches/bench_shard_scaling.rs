@@ -31,6 +31,7 @@ fn cfg(workers: u32, ft: bool) -> ShardedConfig {
             count_policy: Policy::Ephemeral,
             collect_policy: Policy::Ephemeral,
             write_cost: 0,
+            ..Default::default()
         }
     }
 }

@@ -45,6 +45,8 @@ pub struct ShardedConfig {
     pub collect_policy: Policy,
     /// Virtual write cost of the durable store.
     pub write_cost: u64,
+    /// Channel coalescing cap (1 = record-at-a-time).
+    pub batch_cap: usize,
 }
 
 impl Default for ShardedConfig {
@@ -55,6 +57,7 @@ impl Default for ShardedConfig {
             count_policy: Policy::Lazy { every: 1, log_outputs: true },
             collect_policy: Policy::Lazy { every: 1, log_outputs: false },
             write_cost: 1,
+            batch_cap: 1,
         }
     }
 }
@@ -110,12 +113,13 @@ pub fn pipeline(cfg: &ShardedConfig) -> ShardedPipeline {
     factories.push(Box::new(|_| Box::new(Buffer::default())));
     policies.push(cfg.collect_policy);
 
-    let sys = FtSystem::new_sharded(
+    let sys = FtSystem::new_sharded_with_cap(
         &plan,
         factories,
         &policies,
         Delivery::Fifo,
         Store::new(cfg.write_cost),
+        cfg.batch_cap,
     );
     ShardedPipeline { sys, plan, src, map, count, collect }
 }
@@ -153,6 +157,50 @@ pub fn drive_epoch(p: &mut ShardedPipeline, seed: u64, ep: u64, records: usize, 
     }
     p.sys.advance_input(src, Time::epoch(ep + 1));
     p.sys.run_to_quiescence(5_000_000);
+}
+
+/// Throughput summary of a driven run (the batching benches and the
+/// `shard` CLI / `sharded_rollback` example report from this).
+#[derive(Clone, Debug)]
+pub struct Throughput {
+    /// Source records pushed end to end.
+    pub records: u64,
+    /// Engine events processed.
+    pub events: u64,
+    pub elapsed_secs: f64,
+}
+
+impl Throughput {
+    pub fn records_per_sec(&self) -> f64 {
+        self.records as f64 / self.elapsed_secs.max(1e-9)
+    }
+
+    pub fn events_per_sec(&self) -> f64 {
+        self.events as f64 / self.elapsed_secs.max(1e-9)
+    }
+}
+
+/// Drive `epochs` epochs end to end (including close + final
+/// quiescence), timing the whole run.
+pub fn drive_workload(
+    p: &mut ShardedPipeline,
+    seed: u64,
+    epochs: u64,
+    records: usize,
+    keys: u64,
+) -> Throughput {
+    let t0 = std::time::Instant::now();
+    for ep in 0..epochs {
+        drive_epoch(p, seed, ep, records, keys);
+    }
+    let src = p.src_proc();
+    p.sys.close_input(src);
+    p.sys.run_to_quiescence(10_000_000);
+    Throughput {
+        records: epochs * records as u64,
+        events: p.sys.engine.events_processed(),
+        elapsed_secs: t0.elapsed().as_secs_f64(),
+    }
 }
 
 /// Canonical serialization of the collector's complete observable output:
@@ -209,5 +257,23 @@ mod tests {
             canonical_output(&p.sys, p.collect_proc())
         };
         assert_eq!(run(), run());
+    }
+
+    #[test]
+    fn output_is_invariant_under_batch_cap() {
+        let run = |cap: usize| {
+            let mut p = pipeline(&ShardedConfig {
+                two_stage: true,
+                batch_cap: cap,
+                ..Default::default()
+            });
+            let tp = drive_workload(&mut p, 11, 3, 24, 8);
+            assert_eq!(tp.records, 72);
+            canonical_output(&p.sys, p.collect_proc())
+        };
+        let base = run(1);
+        for cap in [8usize, 64] {
+            assert_eq!(base, run(cap), "batch_cap {cap} changed the observable output");
+        }
     }
 }

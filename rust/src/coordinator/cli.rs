@@ -20,11 +20,12 @@ COMMANDS:
             --epochs N (6) --queries N (4) --records N (32) --iters N (4)
             --window N (16) --keys N (8) --seed S (7) --write-cost C (10)
             --fail <proc> --fail-after E (2) --xla <true|false> (true)
+            --batch-cap B (1)
   shard     Run the sharded keyed-aggregation job, optionally crashing
             one worker shard and recovering only its key range.
             --workers W (4) --epochs N (6) --records N (64) --keys N (16)
             --seed S (7) --two-stage <true|false> (false)
-            --fail-shard S --fail-after E (2)
+            --fail-shard S --fail-after E (2) --batch-cap B (1)
   fig7      Run a worked rollback example.  --panel a|b|c (c)
   gc-demo   Drive the §4.2 GC monitor and print watermark advances.
             --epochs N (8)
@@ -66,6 +67,7 @@ fn cmd_fig1(args: &Args) -> i32 {
         seed: args.get_u64("seed", 7),
         write_cost: args.get_u64("write-cost", 10),
         use_xla: args.get_str("xla", "true") == "true",
+        batch_cap: args.get_usize("batch-cap", 1),
     };
     let out = run_fig1(&cfg);
     println!("fig1: kernels = {}", if out.used_xla { "XLA artifacts" } else { "reference (run `make artifacts`)" });
@@ -89,13 +91,16 @@ fn cmd_fig1(args: &Args) -> i32 {
 }
 
 fn cmd_shard(args: &Args) -> i32 {
-    use crate::bench_support::sharded::{canonical_output, drive_epoch, pipeline, ShardedConfig};
+    use crate::bench_support::sharded::{
+        canonical_output, drive_epoch, pipeline, ShardedConfig, Throughput,
+    };
     let workers = args.get_u64("workers", 4) as u32;
     let epochs = args.get_u64("epochs", 6);
     let records = args.get_usize("records", 64);
     let keys = args.get_u64("keys", 16);
     let seed = args.get_u64("seed", 7);
     let two_stage = args.get_str("two-stage", "false") == "true";
+    let batch_cap = args.get_usize("batch-cap", 1);
     let fail_shard = match args.get("fail-shard") {
         None => None,
         Some(raw) => match raw.parse::<usize>() {
@@ -112,7 +117,7 @@ fn cmd_shard(args: &Args) -> i32 {
         eprintln!("--workers must be at least 1");
         return 2;
     }
-    let cfg = ShardedConfig { workers, two_stage, ..Default::default() };
+    let cfg = ShardedConfig { workers, two_stage, batch_cap, ..Default::default() };
     if let Some(s) = fail_shard {
         if s >= workers as usize {
             eprintln!("--fail-shard {s} out of range (workers = {workers})");
@@ -147,11 +152,16 @@ fn cmd_shard(args: &Args) -> i32 {
     let src = p.src_proc();
     p.sys.close_input(src);
     p.sys.run_to_quiescence(5_000_000);
-    let elapsed = t0.elapsed().as_secs_f64();
-    let events = p.sys.engine.events_processed();
-    println!("shard: W={workers} two_stage={two_stage} epochs={epochs}");
-    println!("  events           {events}");
-    println!("  events/sec       {:.0}", events as f64 / elapsed.max(1e-9));
+    let tp = Throughput {
+        records: epochs * records as u64,
+        events: p.sys.engine.events_processed(),
+        elapsed_secs: t0.elapsed().as_secs_f64(),
+    };
+    println!("shard: W={workers} two_stage={two_stage} epochs={epochs} batch_cap={batch_cap}");
+    println!("  events           {}", tp.events);
+    println!("  events/sec       {:.0}", tp.events_per_sec());
+    println!("  records/sec      {:.0}", tp.records_per_sec());
+    println!("  log writes       {} batches / {} records", p.sys.stats.log_entries, p.sys.stats.log_records);
     println!("  checkpoints      {}", p.sys.stats.checkpoints_taken);
     println!("  recoveries       {}", p.sys.stats.recoveries);
     println!("  replayed msgs    {}", p.sys.stats.messages_replayed);

@@ -62,6 +62,8 @@ pub struct Fig1Config {
     pub write_cost: u64,
     /// Use real XLA artifacts if available.
     pub use_xla: bool,
+    /// Channel coalescing cap (1 = record-at-a-time).
+    pub batch_cap: usize,
 }
 
 impl Default for Fig1Config {
@@ -78,6 +80,7 @@ impl Default for Fig1Config {
             seed: 7,
             write_cost: 10,
             use_xla: true,
+            batch_cap: 1,
         }
     }
 }
@@ -271,7 +274,14 @@ pub fn build(cfg: &Fig1Config) -> Fig1App {
         Policy::Eager,                                    // db (eager regime)
         Policy::Ephemeral,                                // resp
     ];
-    let sys = FtSystem::new(topo, procs, policies, Delivery::Fifo, Store::new(cfg.write_cost));
+    let sys = FtSystem::new_with_cap(
+        topo,
+        procs,
+        policies,
+        Delivery::Fifo,
+        Store::new(cfg.write_cost),
+        cfg.batch_cap,
+    );
     Fig1App {
         sys,
         q_src,

@@ -1,18 +1,35 @@
-//! Channels: per-edge message queues with the §3.3 re-ordering rule.
+//! Channels: per-edge batch queues with the §3.3 re-ordering rule.
 //!
-//! A processor subject to selective rollback must be able to perform a
-//! limited re-ordering of its input: it may remove and process any message
-//! `mᵢ` such that no earlier message `mⱼ` (j < i) has `time(mⱼ) ≤
-//! time(mᵢ)`. [`Channel::pop`] implements both FIFO delivery and this
-//! selective policy (pick the earliest message whose time is minimal among
-//! all queued messages — always legal under the rule).
+//! The unit queued on an edge is a [`Batch`] — one logical time plus a
+//! vector of records. A batch of records at one time is a *single event*
+//! under the Falkirk model: every record shares the same `time(m)`, so
+//! the Table-1 metadata (M̄, D̄, φ) and the §3.5 consistency constraints
+//! are unchanged whether the batch carries one record or a thousand.
+//!
+//! [`Channel::push_batch`] coalesces same-time FIFO enqueues into the
+//! tail batch up to a configurable `batch_cap`, and splits larger sends
+//! to the cap — so cap 1 reproduces the original record-at-a-time
+//! *delivery* exactly: every queued batch is a singleton and the engine
+//! processes one record per step in the original order. (Durable-log
+//! granularity follows how senders *staged* records, not the cap: a
+//! native batch operator's k-record emission is one log entry at any
+//! cap, where the per-record engine wrote k.) A processor subject to
+//! selective rollback must be able to perform a limited re-ordering of
+//! its input: it may remove and process any message `mᵢ` such that no
+//! earlier message `mⱼ` (j < i) has `time(mⱼ) ≤ time(mᵢ)`.
+//! [`Channel::pop`] implements both FIFO delivery and this selective
+//! policy on whole batches (pick the earliest batch whose time is
+//! minimal among all queued batches — always legal under the rule, and
+//! coalescing cannot break it because all records of a batch share one
+//! time).
 
 use crate::engine::record::Record;
 use crate::time::{LexTime, Time};
 use crate::util::ser::{Decode, Encode, Reader, SerError, Writer};
 use std::collections::VecDeque;
 
-/// A timed message.
+/// A timed singleton message (the record-at-a-time view; conversions to
+/// and from [`Batch`] are free).
 #[derive(Clone, Debug, PartialEq)]
 pub struct Message {
     pub time: Time,
@@ -38,22 +55,92 @@ impl Decode for Message {
     }
 }
 
+/// A batch of records at one logical time — the unit moved through
+/// channels, delivered to processors, logged, and replayed.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Batch {
+    pub time: Time,
+    pub data: Vec<Record>,
+}
+
+impl Batch {
+    pub fn new(time: Time, data: Vec<Record>) -> Batch {
+        Batch { time, data }
+    }
+
+    /// A singleton batch.
+    pub fn one(time: Time, r: Record) -> Batch {
+        Batch { time, data: vec![r] }
+    }
+
+    /// Number of records carried.
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+
+    /// Approximate in-memory payload size (metrics / storage accounting).
+    pub fn approx_bytes(&self) -> usize {
+        self.data.iter().map(|r| r.approx_bytes()).sum()
+    }
+}
+
+impl From<Message> for Batch {
+    fn from(m: Message) -> Batch {
+        Batch::one(m.time, m.data)
+    }
+}
+
+impl Encode for Batch {
+    fn encode(&self, w: &mut Writer) {
+        self.time.encode(w);
+        w.varint(self.data.len() as u64);
+        for r in &self.data {
+            r.encode(w);
+        }
+    }
+}
+
+impl Decode for Batch {
+    fn decode(r: &mut Reader) -> Result<Self, SerError> {
+        let time = Time::decode(r)?;
+        let n = r.varint()? as usize;
+        let mut data = Vec::with_capacity(n);
+        for _ in 0..n {
+            data.push(Record::decode(r)?);
+        }
+        Ok(Batch { time, data })
+    }
+}
+
 /// Delivery policy for a channel.
 #[derive(Copy, Clone, Debug, PartialEq, Eq)]
 pub enum Delivery {
     /// Strict arrival order.
     Fifo,
-    /// §3.3 selective order: earliest message with lex-minimal time.
-    /// Legal because if `time(mᵢ)` is minimal and `mᵢ` is the earliest
-    /// such message, no earlier `mⱼ` has `time(mⱼ) ≤ time(mᵢ)` (either
+    /// §3.3 selective order: earliest batch with lex-minimal time.
+    /// Legal because if `time(bᵢ)` is minimal and `bᵢ` is the earliest
+    /// such batch, no earlier `bⱼ` has `time(bⱼ) ≤ time(bᵢ)` (either
     /// incomparable, or equal — but equal times occur later only).
     Selective,
 }
 
-/// A single-edge message queue.
-#[derive(Clone, Debug, Default)]
+/// A single-edge batch queue.
+#[derive(Clone, Debug)]
 pub struct Channel {
-    q: VecDeque<Message>,
+    q: VecDeque<Batch>,
+    /// Maximum records a coalesced batch may grow to. Cap 1 disables
+    /// coalescing entirely (record-at-a-time).
+    cap: usize,
+}
+
+impl Default for Channel {
+    fn default() -> Channel {
+        Channel { q: VecDeque::new(), cap: 1 }
+    }
 }
 
 impl Channel {
@@ -61,11 +148,55 @@ impl Channel {
         Channel::default()
     }
 
-    pub fn push(&mut self, m: Message) {
-        self.q.push_back(m);
+    /// A channel coalescing same-time enqueues up to `cap` records.
+    pub fn with_cap(cap: usize) -> Channel {
+        Channel { q: VecDeque::new(), cap: cap.max(1) }
     }
 
+    pub fn batch_cap(&self) -> usize {
+        self.cap
+    }
+
+    pub fn push(&mut self, m: Message) {
+        self.push_batch(Batch::from(m));
+    }
+
+    /// Enqueue a batch. The cap is the *delivery-unit size*: same-time
+    /// enqueues coalesce into the tail batch up to `cap` records, and a
+    /// batch larger than `cap` is split into cap-sized chunks — so with
+    /// `cap = 1` the queue is record-at-a-time no matter how senders
+    /// grouped their records. Only the tail is considered for merging, so
+    /// FIFO arrival order is preserved exactly; under
+    /// `Delivery::Selective` the merge is equally safe because a batch's
+    /// records all share one time.
+    pub fn push_batch(&mut self, b: Batch) {
+        if b.is_empty() {
+            return;
+        }
+        let time = b.time;
+        let mut data = b.data;
+        // Fill the tail batch first if it shares the time.
+        if let Some(tail) = self.q.back_mut() {
+            if tail.time == time && tail.len() < self.cap {
+                let take = (self.cap - tail.len()).min(data.len());
+                tail.data.extend(data.drain(..take));
+            }
+        }
+        // Remaining records form fresh batches of at most cap records.
+        while !data.is_empty() {
+            let take = self.cap.min(data.len());
+            let chunk: Vec<Record> = data.drain(..take).collect();
+            self.q.push_back(Batch::new(time, chunk));
+        }
+    }
+
+    /// Total queued *records* across all batches.
     pub fn len(&self) -> usize {
+        self.q.iter().map(|b| b.len()).sum()
+    }
+
+    /// Number of queued batches (delivery units).
+    pub fn num_batches(&self) -> usize {
         self.q.len()
     }
 
@@ -73,8 +204,8 @@ impl Channel {
         self.q.is_empty()
     }
 
-    /// Remove the next deliverable message under the given policy.
-    pub fn pop(&mut self, delivery: Delivery) -> Option<Message> {
+    /// Remove the next deliverable batch under the given policy.
+    pub fn pop(&mut self, delivery: Delivery) -> Option<Batch> {
         match delivery {
             Delivery::Fifo => self.q.pop_front(),
             Delivery::Selective => {
@@ -92,27 +223,28 @@ impl Channel {
         }
     }
 
-    /// Iterate queued messages in arrival order.
-    pub fn iter(&self) -> impl Iterator<Item = &Message> {
+    /// Iterate queued batches in arrival order.
+    pub fn iter(&self) -> impl Iterator<Item = &Batch> {
         self.q.iter()
     }
 
-    /// Drop every queued message, returning them (for failure injection
+    /// Drop every queued batch, returning them (for failure injection
     /// and rollback).
-    pub fn drain(&mut self) -> Vec<Message> {
+    pub fn drain(&mut self) -> Vec<Batch> {
         self.q.drain(..).collect()
     }
 
-    /// Retain only messages satisfying the predicate; returns the removed
-    /// ones (used by rollback to discard messages inside a frontier).
-    pub fn retain_where<F: FnMut(&Message) -> bool>(&mut self, mut keep: F) -> Vec<Message> {
+    /// Retain only batches satisfying the predicate; returns the removed
+    /// ones (used by rollback to discard messages inside a frontier —
+    /// the predicate sees the batch time, shared by all its records).
+    pub fn retain_where<F: FnMut(&Batch) -> bool>(&mut self, mut keep: F) -> Vec<Batch> {
         let mut removed = Vec::new();
         let mut kept = VecDeque::with_capacity(self.q.len());
-        for m in self.q.drain(..) {
-            if keep(&m) {
-                kept.push_back(m);
+        for b in self.q.drain(..) {
+            if keep(&b) {
+                kept.push_back(b);
             } else {
-                removed.push(m);
+                removed.push(b);
             }
         }
         self.q = kept;
@@ -133,9 +265,63 @@ mod tests {
         let mut c = Channel::new();
         c.push(msg(2, 1));
         c.push(msg(1, 2));
-        assert_eq!(c.pop(Delivery::Fifo).unwrap().data, Record::Int(1));
-        assert_eq!(c.pop(Delivery::Fifo).unwrap().data, Record::Int(2));
+        assert_eq!(c.pop(Delivery::Fifo).unwrap().data, vec![Record::Int(1)]);
+        assert_eq!(c.pop(Delivery::Fifo).unwrap().data, vec![Record::Int(2)]);
         assert!(c.pop(Delivery::Fifo).is_none());
+    }
+
+    #[test]
+    fn cap_one_never_coalesces() {
+        let mut c = Channel::new();
+        c.push(msg(0, 1));
+        c.push(msg(0, 2));
+        assert_eq!(c.num_batches(), 2, "cap 1 keeps record-at-a-time batches");
+        assert_eq!(c.len(), 2);
+    }
+
+    #[test]
+    fn coalesces_same_time_up_to_cap() {
+        let mut c = Channel::with_cap(3);
+        for v in 0..5 {
+            c.push(msg(0, v));
+        }
+        // 3 + 2: the cap bounds the tail batch, then a fresh one starts.
+        assert_eq!(c.num_batches(), 2);
+        assert_eq!(c.len(), 5);
+        let b = c.pop(Delivery::Fifo).unwrap();
+        assert_eq!(b.data, vec![Record::Int(0), Record::Int(1), Record::Int(2)]);
+        let b = c.pop(Delivery::Fifo).unwrap();
+        assert_eq!(b.data, vec![Record::Int(3), Record::Int(4)]);
+    }
+
+    #[test]
+    fn oversized_batch_is_split_to_cap() {
+        let mut c = Channel::with_cap(2);
+        c.push_batch(Batch::new(
+            Time::epoch(0),
+            (0..5).map(Record::Int).collect(),
+        ));
+        assert_eq!(c.num_batches(), 3, "5 records at cap 2 → 2+2+1");
+        assert_eq!(c.len(), 5);
+        let sizes: Vec<usize> = c.iter().map(|b| b.len()).collect();
+        assert_eq!(sizes, vec![2, 2, 1]);
+        // Cap 1 degenerates to record-at-a-time regardless of sender
+        // grouping.
+        let mut c1 = Channel::with_cap(1);
+        c1.push_batch(Batch::new(Time::epoch(0), (0..3).map(Record::Int).collect()));
+        assert_eq!(c1.num_batches(), 3);
+    }
+
+    #[test]
+    fn coalescing_stops_at_time_boundary() {
+        let mut c = Channel::with_cap(8);
+        c.push(msg(0, 1));
+        c.push(msg(0, 2));
+        c.push(msg(1, 3));
+        c.push(msg(0, 4)); // non-adjacent epoch 0: must NOT merge backwards
+        assert_eq!(c.num_batches(), 3);
+        let times: Vec<u64> = c.iter().map(|b| b.time.epoch_of()).collect();
+        assert_eq!(times, vec![0, 1, 0], "FIFO arrival order preserved");
     }
 
     #[test]
@@ -146,34 +332,36 @@ mod tests {
         c.push(msg(2, 10));
         c.push(msg(2, 11));
         c.push(msg(1, 12));
-        let m = c.pop(Delivery::Selective).unwrap();
-        assert_eq!(m.time, Time::epoch(1));
-        assert_eq!(m.data, Record::Int(12));
+        let b = c.pop(Delivery::Selective).unwrap();
+        assert_eq!(b.time, Time::epoch(1));
+        assert_eq!(b.data, vec![Record::Int(12)]);
         // Remaining deliver in arrival order among equal times.
-        assert_eq!(c.pop(Delivery::Selective).unwrap().data, Record::Int(10));
-        assert_eq!(c.pop(Delivery::Selective).unwrap().data, Record::Int(11));
+        assert_eq!(c.pop(Delivery::Selective).unwrap().data, vec![Record::Int(10)]);
+        assert_eq!(c.pop(Delivery::Selective).unwrap().data, vec![Record::Int(11)]);
     }
 
     #[test]
     fn selective_respects_reordering_rule() {
-        // Verify the §3.3 precondition on every pop: no earlier message
-        // may have time ≤ the popped message's time.
-        let mut c = Channel::new();
-        let times = [3u64, 1, 2, 1, 5, 0];
-        for (i, &t) in times.iter().enumerate() {
-            c.push(msg(t, i as i64));
-        }
-        while !c.is_empty() {
-            let before: Vec<Message> = c.iter().cloned().collect();
-            let m = c.pop(Delivery::Selective).unwrap();
-            let idx = before.iter().position(|x| x == &m).unwrap();
-            for mj in &before[..idx] {
-                assert!(
-                    !mj.time.le(&m.time),
-                    "earlier message at {} ≤ popped {}",
-                    mj.time,
-                    m.time
-                );
+        // Verify the §3.3 precondition on every pop: no earlier batch
+        // may have time ≤ the popped batch's time.
+        for cap in [1usize, 2, 4] {
+            let mut c = Channel::with_cap(cap);
+            let times = [3u64, 1, 2, 1, 5, 0, 1, 1];
+            for (i, &t) in times.iter().enumerate() {
+                c.push(msg(t, i as i64));
+            }
+            while !c.is_empty() {
+                let before: Vec<Batch> = c.iter().cloned().collect();
+                let b = c.pop(Delivery::Selective).unwrap();
+                let idx = before.iter().position(|x| x == &b).unwrap();
+                for bj in &before[..idx] {
+                    assert!(
+                        !bj.time.le(&b.time),
+                        "cap {cap}: earlier batch at {} ≤ popped {}",
+                        bj.time,
+                        b.time
+                    );
+                }
             }
         }
     }
@@ -184,10 +372,10 @@ mod tests {
         for ep in 0..5 {
             c.push(msg(ep, ep as i64));
         }
-        let removed = c.retain_where(|m| m.time.epoch_of() >= 3);
+        let removed = c.retain_where(|b| b.time.epoch_of() >= 3);
         assert_eq!(removed.len(), 3);
         assert_eq!(c.len(), 2);
-        assert!(c.iter().all(|m| m.time.epoch_of() >= 3));
+        assert!(c.iter().all(|b| b.time.epoch_of() >= 3));
     }
 
     #[test]
@@ -195,5 +383,16 @@ mod tests {
         let m = Message::new(Time::structured(4, &[2]), Record::text("x"));
         let bytes = m.to_bytes();
         assert_eq!(Message::from_bytes(&bytes).unwrap(), m);
+    }
+
+    #[test]
+    fn batch_roundtrip() {
+        let b = Batch::new(
+            Time::structured(4, &[2]),
+            vec![Record::text("x"), Record::Int(-3), Record::kv(1, 2.5)],
+        );
+        let bytes = b.to_bytes();
+        assert_eq!(Batch::from_bytes(&bytes).unwrap(), b);
+        assert_eq!(Batch::from(Message::new(Time::epoch(1), Record::Unit)).len(), 1);
     }
 }

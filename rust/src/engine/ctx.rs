@@ -8,8 +8,13 @@
 //! in the destination domain. Message times are therefore always in the
 //! *destination's* time domain, matching the paper's convention that
 //! `time(m)` for discarded-message tracking is in the receiving domain.
+//!
+//! The staged unit is a [`Batch`]: [`Ctx::send`] stages a singleton,
+//! while [`Ctx::send_batch`] / [`Ctx::send_batch_at`] stage a whole
+//! record vector as one send — one tracker/report/log unit instead of
+//! per-record dispatch, which is what the native batch operators use.
 
-use crate::engine::channel::Message;
+use crate::engine::channel::Batch;
 use crate::engine::record::Record;
 use crate::graph::EdgeId;
 use crate::progress::Summary;
@@ -22,10 +27,11 @@ pub struct Ctx<'a> {
     summaries: &'a [Summary],
     /// Per-port flag: destination is a sequence-number-domain processor,
     /// so the engine assigns `(e, s)` times at flush (placeholder seq 0
-    /// staged here).
+    /// staged here; batches to seq ports are split per record at flush,
+    /// since every record gets its own sequence-number time).
     seq_dst: &'a [bool],
-    /// Staged sends: (out-port index, message).
-    pub(crate) staged: Vec<(usize, Message)>,
+    /// Staged sends: (out-port index, batch).
+    pub(crate) staged: Vec<(usize, Batch)>,
     /// Staged notification requests.
     pub(crate) notify: Vec<Time>,
 }
@@ -50,34 +56,63 @@ impl<'a> Ctx<'a> {
         self.out_edges.len()
     }
 
+    /// The natural send time on `port`: the event time translated through
+    /// the edge summary (None on capability-gated bridging edges), or the
+    /// seq placeholder for sequence-number destinations.
+    fn natural_time(&self, port: usize) -> Time {
+        if self.seq_dst[port] {
+            // Placeholder: the engine stamps the real sequence number(s).
+            return Time::seq(self.out_edges[port], 0);
+        }
+        self.summaries[port]
+            .apply(&self.event_time)
+            .unwrap_or_else(|| panic!("send on a domain-bridging edge requires send_at"))
+    }
+
     /// Send `data` on output `port` at the event time (translated through
     /// the edge summary). On edges into sequence-number-domain processors
     /// the engine assigns the `(e, s)` time at flush. Panics on other
     /// capability-gated bridging edges — those require [`Ctx::send_at`].
     pub fn send(&mut self, port: usize, data: Record) {
-        if self.seq_dst[port] {
-            // Placeholder: the engine stamps the real sequence number.
-            self.staged.push((port, Message::new(Time::seq(self.out_edges[port], 0), data)));
+        let t = self.natural_time(port);
+        self.staged.push((port, Batch::one(t, data)));
+    }
+
+    /// Send a whole record batch on output `port` at the event time — a
+    /// single staged unit (one report entry, one log write, one channel
+    /// enqueue). Empty batches are dropped.
+    pub fn send_batch(&mut self, port: usize, data: Vec<Record>) {
+        if data.is_empty() {
             return;
         }
-        let summary = self.summaries[port];
-        let t = summary
-            .apply(&self.event_time)
-            .unwrap_or_else(|| panic!("send on a domain-bridging edge requires send_at"));
-        self.staged.push((port, Message::new(t, data)));
+        let t = self.natural_time(port);
+        self.staged.push((port, Batch::new(t, data)));
     }
 
     /// Send `data` on output `port` at an explicit time in the
     /// destination's domain. Must not precede the translated event time
     /// where comparable (messages cannot be sent backwards in time).
     pub fn send_at(&mut self, port: usize, time: Time, data: Record) {
+        self.check_not_backwards(port, &time);
+        self.staged.push((port, Batch::one(time, data)));
+    }
+
+    /// Batch counterpart of [`Ctx::send_at`]. Empty batches are dropped.
+    pub fn send_batch_at(&mut self, port: usize, time: Time, data: Vec<Record>) {
+        if data.is_empty() {
+            return;
+        }
+        self.check_not_backwards(port, &time);
+        self.staged.push((port, Batch::new(time, data)));
+    }
+
+    fn check_not_backwards(&self, port: usize, time: &Time) {
         if let Some(min) = self.summaries[port].apply(&self.event_time) {
             debug_assert!(
                 !time.lt(&min),
                 "send_at {time} precedes the translated event time {min}"
             );
         }
-        self.staged.push((port, Message::new(time, data)));
     }
 
     /// Request a notification once `time` is complete at this processor.
@@ -87,7 +122,7 @@ impl<'a> Ctx<'a> {
 
     /// Consume the context, releasing its borrows and yielding the staged
     /// sends and notification requests for the engine to flush.
-    pub(crate) fn into_parts(self) -> (Vec<(usize, Message)>, Vec<Time>) {
+    pub(crate) fn into_parts(self) -> (Vec<(usize, Batch)>, Vec<Time>) {
         (self.staged, self.notify)
     }
 }
@@ -109,13 +144,29 @@ mod tests {
     }
 
     #[test]
+    fn send_batch_stages_one_unit() {
+        let out_edges = [EdgeId(0)];
+        let summaries = [Summary::Same];
+        let seq_dst = [false];
+        let mut ctx = Ctx::new(Time::epoch(2), &out_edges, &summaries, &seq_dst);
+        ctx.send_batch(0, vec![Record::Int(1), Record::Int(2), Record::Int(3)]);
+        ctx.send_batch(0, Vec::new()); // dropped
+        assert_eq!(ctx.staged.len(), 1);
+        assert_eq!(ctx.staged[0].1.len(), 3);
+        assert_eq!(ctx.staged[0].1.time, Time::epoch(2));
+    }
+
+    #[test]
     fn send_at_allows_future() {
         let out_edges = [EdgeId(0)];
         let summaries = [Summary::Same];
         let seq_dst = [false];
         let mut ctx = Ctx::new(Time::epoch(1), &out_edges, &summaries, &seq_dst);
         ctx.send_at(0, Time::epoch(5), Record::Unit);
+        ctx.send_batch_at(0, Time::epoch(6), vec![Record::Unit, Record::Unit]);
         assert_eq!(ctx.staged[0].1.time, Time::epoch(5));
+        assert_eq!(ctx.staged[1].1.time, Time::epoch(6));
+        assert_eq!(ctx.staged[1].1.len(), 2);
     }
 
     #[test]

@@ -2,12 +2,18 @@
 //! implementation context, §4).
 //!
 //! - [`record`]: message payloads;
-//! - [`channel`]: per-edge queues with §3.3 selective re-ordering;
-//! - [`processor`]: the operator trait + time-partitioned state helper;
-//! - [`ctx`]: per-event output context with time translation;
-//! - [`scheduler`]: the deterministic event loop and failure/rollback
-//!   primitives;
-//! - [`sharded`]: the multi-worker layer — per-shard operator routing
+//! - [`channel`]: per-edge **batch** queues ([`Batch`] = one time + a
+//!   record vector, coalesced up to a configurable `batch_cap`) with
+//!   §3.3 selective re-ordering on whole batches;
+//! - [`processor`]: the operator trait (per-record `on_message` plus the
+//!   batch entry point `on_batch` with a default per-record shim) + the
+//!   time-partitioned state helper;
+//! - [`ctx`]: per-event output context with time translation and batch
+//!   staging (`send_batch` / `send_batch_at`);
+//! - [`scheduler`]: the deterministic batch-at-a-time event loop and
+//!   failure/rollback primitives (`batch_cap = 1` is the original
+//!   record-at-a-time engine, bit for bit);
+//! - [`sharded`]: the multi-worker layer — per-shard sub-batch routing
 //!   over hash-exchange edge bundles, with determinism preserved.
 
 pub mod channel;
@@ -17,7 +23,7 @@ pub mod record;
 pub mod scheduler;
 pub mod sharded;
 
-pub use channel::{Channel, Delivery, Message};
+pub use channel::{Batch, Channel, Delivery, Message};
 pub use ctx::Ctx;
 pub use processor::{Processor, Statefulness, TimeState};
 pub use record::Record;

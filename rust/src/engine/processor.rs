@@ -38,6 +38,19 @@ pub trait Processor {
     /// Deliver a message on local input `port` at `time`.
     fn on_message(&mut self, port: usize, time: Time, data: Record, ctx: &mut Ctx);
 
+    /// Deliver a whole record batch on local input `port` at `time` — the
+    /// engine's delivery unit. All records share one logical time, so a
+    /// batch is a single event under the rollback model. The default shim
+    /// dispatches per record through [`Processor::on_message`], so
+    /// existing operators work unmodified; hot operators override this to
+    /// avoid per-record dispatch (and use [`Ctx::send_batch`] on the way
+    /// out).
+    fn on_batch(&mut self, port: usize, time: Time, data: Vec<Record>, ctx: &mut Ctx) {
+        for d in data {
+            self.on_message(port, time, d, ctx);
+        }
+    }
+
     /// Deliver a notification: no more messages will arrive at any time
     /// ≤ `time` (requested earlier via [`Ctx::notify_at`]).
     fn on_notification(&mut self, _time: Time, _ctx: &mut Ctx) {}

@@ -2,20 +2,23 @@
 //!
 //! [`Engine`] owns the topology, the processors, one [`Channel`] per edge,
 //! and a [`ProgressTracker`]. Execution is event-at-a-time and fully
-//! deterministic: [`Engine::step`] delivers exactly one message (round-
-//! robin over edges, FIFO or §3.3-selective within a channel) or, when no
-//! messages are deliverable, fires the first eligible notification in
-//! (processor, lexicographic-time) order. Each step returns an
-//! [`EventReport`] describing the event and the messages it sent — the
-//! fault-tolerance harness (`ft::harness`) consumes these reports to
-//! maintain the paper's Table-1 metadata without entangling itself with
-//! the engine's borrows.
+//! deterministic: [`Engine::step`] delivers exactly one record **batch**
+//! (round-robin over edges, FIFO or §3.3-selective within a channel) or,
+//! when no batches are deliverable, fires the first eligible notification
+//! in (processor, lexicographic-time) order. A batch shares one logical
+//! time, so it is a single event under the rollback model; with
+//! `batch_cap = 1` (the default) every batch is a singleton and the
+//! engine delivers the original record-at-a-time event sequence. Each
+//! step returns an [`EventReport`] describing the event and the batches
+//! it sent — the fault-tolerance harness (`ft::harness`) consumes these
+//! reports to maintain the paper's Table-1 metadata without entangling
+//! itself with the engine's borrows.
 //!
 //! Determinism is what lets the test suite assert the paper's core
 //! correctness claim directly: a failed-and-recovered execution produces
 //! byte-identical outputs to a failure-free one.
 
-use crate::engine::channel::{Channel, Delivery, Message};
+use crate::engine::channel::{Batch, Channel, Delivery, Message};
 use crate::engine::ctx::Ctx;
 use crate::engine::processor::Processor;
 use crate::engine::record::Record;
@@ -28,8 +31,9 @@ use std::sync::Arc;
 /// What kind of event a step processed.
 #[derive(Clone, Debug, PartialEq)]
 pub enum EventKind {
-    /// A message was delivered to `proc` on `edge`.
-    Message { proc: ProcId, edge: EdgeId, time: Time, data: Record },
+    /// A record batch was delivered to `proc` on `edge` (all records at
+    /// one time; a singleton with `batch_cap = 1`).
+    Message { proc: ProcId, edge: EdgeId, time: Time, data: Vec<Record> },
     /// A notification fired at `proc` for `time`.
     Notification { proc: ProcId, time: Time },
     /// An external input record was pushed into source `proc`.
@@ -40,9 +44,11 @@ pub enum EventKind {
 #[derive(Clone, Debug)]
 pub struct EventReport {
     pub kind: EventKind,
-    /// Messages emitted while handling the event, tagged with the edge
-    /// they were sent on (already enqueued by the engine).
-    pub sent: Vec<(EdgeId, Message)>,
+    /// Batches emitted while handling the event, tagged with the edge
+    /// they were sent on (already enqueued by the engine). Sends into
+    /// sequence-number domains appear as singletons — each record owns
+    /// its `(e, s)` time.
+    pub sent: Vec<(EdgeId, Batch)>,
 }
 
 /// The deterministic single-process dataflow engine.
@@ -73,8 +79,11 @@ pub struct Engine {
     completed: Vec<crate::frontier::Frontier>,
     /// Whether each processor dedups completed-time deliveries.
     dedup: Vec<bool>,
-    /// Total deliveries suppressed by completed-time dedup.
+    /// Total records suppressed by completed-time dedup.
     pub deduped: u64,
+    /// Coalescing cap for same-time channel enqueues (1 = record-at-a-
+    /// time).
+    batch_cap: usize,
     delivery: Delivery,
     /// Round-robin cursor over edges.
     cursor: usize,
@@ -83,9 +92,24 @@ pub struct Engine {
 }
 
 impl Engine {
-    /// Build an engine. `procs[i]` implements processor `ProcId(i)`.
+    /// Build a record-at-a-time engine (`batch_cap = 1`). `procs[i]`
+    /// implements processor `ProcId(i)`.
     pub fn new(topo: Arc<Topology>, procs: Vec<Box<dyn Processor>>, delivery: Delivery) -> Engine {
+        Engine::with_batch_cap(topo, procs, delivery, 1)
+    }
+
+    /// Build an engine whose channels coalesce same-time enqueues into
+    /// batches of up to `batch_cap` records. Cap 1 reproduces
+    /// record-at-a-time delivery exactly (singleton batches, original
+    /// order).
+    pub fn with_batch_cap(
+        topo: Arc<Topology>,
+        procs: Vec<Box<dyn Processor>>,
+        delivery: Delivery,
+        batch_cap: usize,
+    ) -> Engine {
         assert_eq!(topo.num_procs(), procs.len(), "one processor impl per topology node");
+        let batch_cap = batch_cap.max(1);
         let out_summaries = topo
             .proc_ids()
             .map(|p| topo.out_edges(p).iter().map(|&e| Summary::of(topo.projection(e))).collect())
@@ -105,7 +129,7 @@ impl Engine {
             .collect();
         Engine {
             tracker: ProgressTracker::new(&topo),
-            channels: vec![Channel::new(); topo.num_edges()],
+            channels: vec![Channel::with_cap(batch_cap); topo.num_edges()],
             pending: vec![BTreeSet::new(); topo.num_procs()],
             input_caps: vec![None; topo.num_procs()],
             out_summaries,
@@ -114,6 +138,7 @@ impl Engine {
             completed: vec![crate::frontier::Frontier::Bottom; topo.num_procs()],
             dedup,
             deduped: 0,
+            batch_cap,
             procs,
             topo,
             delivery,
@@ -124,6 +149,11 @@ impl Engine {
 
     pub fn topology(&self) -> &Topology {
         &self.topo
+    }
+
+    /// The channel coalescing cap this engine was built with.
+    pub fn batch_cap(&self) -> usize {
+        self.batch_cap
     }
 
     pub fn events_processed(&self) -> u64 {
@@ -175,25 +205,36 @@ impl Engine {
     }
 
     /// Move staged sends into channels/tracker and register notification
-    /// requests; returns the sent list for the report.
-    fn flush(&mut self, p: ProcId, staged: Vec<(usize, Message)>, notify: Vec<Time>) -> Vec<(EdgeId, Message)> {
+    /// requests; returns the sent list for the report. Batches into
+    /// sequence-number destinations are split per record — every record
+    /// gets its own `(e, s)` time; everything else ships whole.
+    fn flush(&mut self, p: ProcId, staged: Vec<(usize, Batch)>, notify: Vec<Time>) -> Vec<(EdgeId, Batch)> {
         let mut sent = Vec::with_capacity(staged.len());
-        for (port, mut msg) in staged {
+        for (port, batch) in staged {
+            if batch.is_empty() {
+                continue;
+            }
             let e = self.topo.out_edges(p)[port];
-            // Assign the sequence number for seq-domain destinations.
             if self.out_seq_dst[p.0 as usize][port] {
-                let c = &mut self.seq_counters[e.0 as usize];
-                *c += 1;
-                msg.time = Time::seq(e, *c);
+                // Assign sequence numbers for seq-domain destinations.
+                for r in batch.data {
+                    let c = &mut self.seq_counters[e.0 as usize];
+                    *c += 1;
+                    let b = Batch::one(Time::seq(e, *c), r);
+                    self.tracker.message_sent(e, b.time);
+                    self.channels[e.0 as usize].push_batch(b.clone());
+                    sent.push((e, b));
+                }
+                continue;
             }
             debug_assert!(
-                self.topo.domain(self.topo.dst(e)).admits(&msg.time),
-                "message time {} not in destination domain of {e}",
-                msg.time
+                self.topo.domain(self.topo.dst(e)).admits(&batch.time),
+                "batch time {} not in destination domain of {e}",
+                batch.time
             );
-            self.tracker.message_sent(e, msg.time);
-            self.channels[e.0 as usize].push(msg.clone());
-            sent.push((e, msg));
+            self.tracker.messages_sent(e, batch.time, batch.len());
+            self.channels[e.0 as usize].push_batch(batch.clone());
+            sent.push((e, batch));
         }
         for t in notify {
             if self.pending[p.0 as usize].insert(LexTime(t)) {
@@ -203,46 +244,47 @@ impl Engine {
         sent
     }
 
-    /// Process one event (message delivery or notification). Returns
+    /// Process one event (batch delivery or notification). Returns
     /// `None` when the system is quiescent.
     pub fn step(&mut self) -> Option<EventReport> {
-        // Phase 1: deliver a message, round-robin over edges.
+        // Phase 1: deliver a batch, round-robin over edges.
         let ne = self.channels.len();
         for i in 0..ne {
             let ei = (self.cursor + i) % ne;
             let (e, p) = (EdgeId(ei as u32), self.topo.dst(EdgeId(ei as u32)));
-            // Pull until a non-duplicate message (completed-time dedup).
-            let msg = loop {
+            // Pull until a non-duplicate batch (completed-time dedup; a
+            // batch shares one time, so it is a duplicate as a whole).
+            let batch = loop {
                 match self.channels[ei].pop(self.delivery) {
                     None => break None,
-                    Some(m) => {
-                        self.tracker.message_removed(e, m.time);
+                    Some(b) => {
+                        self.tracker.messages_removed(e, b.time, b.len());
                         if self.dedup[p.0 as usize]
-                            && self.completed[p.0 as usize].contains(&m.time)
+                            && self.completed[p.0 as usize].contains(&b.time)
                         {
-                            self.deduped += 1;
+                            self.deduped += b.len() as u64;
                             continue;
                         }
-                        break Some(m);
+                        break Some(b);
                     }
                 }
             };
-            let Some(msg) = msg else { continue };
+            let Some(batch) = batch else { continue };
             let port = self.topo.input_port(e);
             let mut ctx =
                 Ctx::new(
-                msg.time,
+                batch.time,
                 self.topo.out_edges(p),
                 &self.out_summaries[p.0 as usize],
                 &self.out_seq_dst[p.0 as usize],
             );
-            self.procs[p.0 as usize].on_message(port, msg.time, msg.data.clone(), &mut ctx);
+            self.procs[p.0 as usize].on_batch(port, batch.time, batch.data.clone(), &mut ctx);
             let (staged, notify) = ctx.into_parts();
             let sent = self.flush(p, staged, notify);
             self.cursor = (ei + 1) % ne;
             self.events += 1;
             return Some(EventReport {
-                kind: EventKind::Message { proc: p, edge: e, time: msg.time, data: msg.data },
+                kind: EventKind::Message { proc: p, edge: e, time: batch.time, data: batch.data },
                 sent,
             });
         }
@@ -328,8 +370,8 @@ impl Engine {
     pub fn fail_proc(&mut self, p: ProcId) {
         self.procs[p.0 as usize].reset();
         for &e in self.topo.in_edges(p) {
-            for m in self.channels[e.0 as usize].drain() {
-                self.tracker.message_removed(e, m.time);
+            for b in self.channels[e.0 as usize].drain() {
+                self.tracker.messages_removed(e, b.time, b.len());
             }
         }
         for lt in std::mem::take(&mut self.pending[p.0 as usize]) {
@@ -342,24 +384,34 @@ impl Engine {
         self.events += 1;
     }
 
-    /// Remove from channel `e` all messages whose time satisfies `drop`,
-    /// returning them (rollback discards messages at times being undone).
+    /// Remove from channel `e` all batches whose time satisfies `drop`,
+    /// returning them (rollback discards messages at times being undone;
+    /// a batch shares one time, so it is dropped or kept whole).
     pub fn discard_from_channel<F: FnMut(&Time) -> bool>(
         &mut self,
         e: EdgeId,
         mut drop: F,
-    ) -> Vec<Message> {
-        let removed = self.channels[e.0 as usize].retain_where(|m| !drop(&m.time));
-        for m in &removed {
-            self.tracker.message_removed(e, m.time);
+    ) -> Vec<Batch> {
+        let removed = self.channels[e.0 as usize].retain_where(|b| !drop(&b.time));
+        for b in &removed {
+            self.tracker.messages_removed(e, b.time, b.len());
         }
         removed
     }
 
-    /// Enqueue a replayed message on `e` (rollback's Q′(e), §3.6).
+    /// Enqueue a replayed singleton message on `e` (rollback's Q′(e),
+    /// §3.6).
     pub fn replay_message(&mut self, e: EdgeId, m: Message) {
-        self.tracker.message_sent(e, m.time);
-        self.channels[e.0 as usize].push(m);
+        self.replay_batch(e, Batch::from(m));
+    }
+
+    /// Enqueue a replayed logged batch on `e` — the batch-granular Q′(e).
+    /// The batch's records re-enter the channel exactly as logged (the
+    /// usual tail-coalescing may merge adjacent same-time replays, which
+    /// preserves content and order).
+    pub fn replay_batch(&mut self, e: EdgeId, b: Batch) {
+        self.tracker.messages_sent(e, b.time, b.len());
+        self.channels[e.0 as usize].push_batch(b);
     }
 
     /// Restore pending notification requests for `p` (from checkpoint
@@ -604,6 +656,36 @@ mod tests {
         let got = out.lock().unwrap().clone();
         assert_eq!(got[0].0, Time::epoch(0), "selective delivery pulls epoch 0 first");
         assert_eq!(got[1].0, Time::epoch(1));
+    }
+
+    #[test]
+    fn batch_cap_coalesces_and_preserves_output() {
+        let run = |cap: usize| -> (u64, Vec<(Time, Record)>) {
+            let mut g = GraphBuilder::new();
+            let src = g.add_proc("src", TimeDomain::EPOCH);
+            let dbl = g.add_proc("double", TimeDomain::EPOCH);
+            let snk = g.add_proc("sink", TimeDomain::EPOCH);
+            g.connect(src, dbl, Projection::Identity);
+            g.connect(dbl, snk, Projection::Identity);
+            let out = StdArc::new(Mutex::new(Vec::new()));
+            let procs: Vec<Box<dyn Processor>> =
+                vec![Box::new(Src), Box::new(Double), Box::new(Sink(out.clone()))];
+            let mut eng =
+                Engine::with_batch_cap(Arc::new(g.build().unwrap()), procs, Delivery::Fifo, cap);
+            let src = ProcId(0);
+            eng.advance_input(src, Time::epoch(0));
+            for v in 0..6 {
+                eng.push_input(src, Time::epoch(0), Record::Int(v));
+            }
+            eng.close_input(src);
+            eng.run_to_quiescence(1000);
+            let got = out.lock().unwrap().clone();
+            (eng.events_processed(), got)
+        };
+        let (ev1, out1) = run(1);
+        let (ev8, out8) = run(8);
+        assert_eq!(out1, out8, "output is invariant under batch_cap");
+        assert!(ev8 < ev1, "coalescing reduces delivery events ({ev8} !< {ev1})");
     }
 
     #[test]

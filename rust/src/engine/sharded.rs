@@ -5,8 +5,11 @@
 //! [`crate::graph::sharding::ShardedBuilder`]: the operator sees its
 //! *logical* input/output ports, while the router translates physical
 //! input ports back to logical ones and fans staged sends out over the
-//! exchange-edge bundle, picking the destination shard per record
-//! ([`shard_of_record`]).
+//! exchange-edge bundle. A staged batch is split into **per-shard
+//! sub-batches** — each record routed by [`shard_of_record`], record
+//! order preserved per destination — and each non-empty sub-batch ships
+//! as one unit through the exchange edge, so a W-wide exchange costs W
+//! channel enqueues per batch rather than one per record.
 //!
 //! [`ShardedEngine`] is the engine-level façade: the ordinary
 //! deterministic [`Engine`] running the physical topology, plus the
@@ -21,7 +24,7 @@
 //! metadata, and the Fig. 6 solver computes a per-shard rollback plan
 //! with no changes to its constraint system.
 
-use crate::engine::channel::Message;
+use crate::engine::channel::Batch;
 use crate::engine::ctx::Ctx;
 use crate::engine::{Delivery, Engine, EventReport, Processor, Record, Statefulness};
 use crate::frontier::Frontier;
@@ -90,39 +93,52 @@ impl ShardRouter {
         }
     }
 
-    /// Re-stage the inner operator's sends onto physical ports, routing
-    /// each record to its destination shard, and forward notification
-    /// requests unchanged.
+    /// Re-stage the inner operator's sends onto physical ports, splitting
+    /// each batch into per-shard sub-batches (record order preserved per
+    /// destination), and forward notification requests unchanged.
     fn forward(
         &self,
         event_time: Time,
-        staged: Vec<(usize, Message)>,
+        staged: Vec<(usize, Batch)>,
         notify: Vec<Time>,
         ctx: &mut Ctx,
     ) {
-        for (lport, msg) in staged {
+        for (lport, batch) in staged {
             let route = self.routes[lport];
-            // `send` lets the engine re-derive the (identical) time from
-            // the physical edge summary — and assign sequence numbers for
-            // seq-domain destinations; an explicitly chosen future time
-            // (the operator used `send_at`) passes through `send_at`.
+            // `send_batch` lets the engine re-derive the (identical) time
+            // from the physical edge summary — and assign sequence
+            // numbers for seq-domain destinations; an explicitly chosen
+            // future time (the operator used `send_at`) passes through
+            // `send_batch_at`.
             let natural = self.summaries[lport].apply(&event_time);
+            let btime = batch.time;
+            let use_send = self.seq_dst[lport] || natural == Some(btime);
+            let send = |ctx: &mut Ctx, port: usize, data: Vec<Record>| {
+                if use_send {
+                    ctx.send_batch(port, data);
+                } else {
+                    ctx.send_batch_at(port, btime, data);
+                }
+            };
             match route.partition {
                 Partition::Broadcast => {
                     for j in 0..route.fanout {
-                        if self.seq_dst[lport] || natural == Some(msg.time) {
-                            ctx.send(route.base + j, msg.data.clone());
-                        } else {
-                            ctx.send_at(route.base + j, msg.time, msg.data.clone());
-                        }
+                        send(ctx, route.base + j, batch.data.clone());
                     }
                 }
+                Partition::ByKey if route.fanout <= 1 => {
+                    send(ctx, route.base, batch.data);
+                }
                 Partition::ByKey => {
-                    let j = shard_of_record(&msg.data, route.fanout);
-                    if self.seq_dst[lport] || natural == Some(msg.time) {
-                        ctx.send(route.base + j, msg.data);
-                    } else {
-                        ctx.send_at(route.base + j, msg.time, msg.data);
+                    let mut subs: Vec<Vec<Record>> = vec![Vec::new(); route.fanout];
+                    for r in batch.data {
+                        let j = shard_of_record(&r, route.fanout);
+                        subs[j].push(r);
+                    }
+                    for (j, sub) in subs.into_iter().enumerate() {
+                        if !sub.is_empty() {
+                            send(ctx, route.base + j, sub);
+                        }
                     }
                 }
             }
@@ -135,9 +151,15 @@ impl ShardRouter {
 
 impl Processor for ShardRouter {
     fn on_message(&mut self, port: usize, time: Time, data: Record, ctx: &mut Ctx) {
+        // One wrapper path: the engine only calls on_batch, and the
+        // inner default shim unwraps singletons back to on_message.
+        self.on_batch(port, time, vec![data], ctx);
+    }
+
+    fn on_batch(&mut self, port: usize, time: Time, data: Vec<Record>, ctx: &mut Ctx) {
         let (staged, notify) = {
             let mut ictx = Ctx::new(time, &self.port_edges, &self.summaries, &self.seq_dst);
-            self.inner.on_message(self.in_map[port], time, data, &mut ictx);
+            self.inner.on_batch(self.in_map[port], time, data, &mut ictx);
             ictx.into_parts()
         };
         self.forward(time, staged, notify, ctx);
@@ -207,8 +229,22 @@ impl ShardedEngine {
         factories: Vec<ProcFactory>,
         delivery: Delivery,
     ) -> ShardedEngine {
+        ShardedEngine::with_batch_cap(plan, factories, delivery, 1)
+    }
+
+    /// Sharded engine with a channel coalescing cap (see
+    /// [`Engine::with_batch_cap`]).
+    pub fn with_batch_cap(
+        plan: Arc<ShardPlan>,
+        factories: Vec<ProcFactory>,
+        delivery: Delivery,
+        batch_cap: usize,
+    ) -> ShardedEngine {
         let procs = build_procs(&plan, factories);
-        ShardedEngine { engine: Engine::new(plan.topo.clone(), procs, delivery), plan }
+        ShardedEngine {
+            engine: Engine::with_batch_cap(plan.topo.clone(), procs, delivery, batch_cap),
+            plan,
+        }
     }
 
     /// Push external input into (unsharded) source vertex `v`.

@@ -138,24 +138,33 @@ impl Decode for StoredCheckpoint {
     }
 }
 
-/// One logged sent message (an element of L(e,·)): the destination-domain
-/// message plus the time of the event at `p` that produced it, which is
+/// One logged sent batch (an element of L(e,·)): the destination-domain
+/// batch plus the time of the event at `p` that produced it, which is
 /// what lets L(e,f) = entries with `event_time ∈ f` be computed exactly
-/// even under selective rollback.
+/// even under selective rollback. One log write covers the whole batch —
+/// the batching win on the durable path — and recovery replays the batch
+/// byte-identically.
 #[derive(Clone, Debug, PartialEq)]
 pub struct LogEntry {
     pub edge: EdgeId,
     /// Time (at the sender) of the event that caused this send.
     pub event_time: Time,
-    /// The message (time in the destination's domain).
-    pub msg: crate::engine::Message,
+    /// The batch (time in the destination's domain; all records share it).
+    pub batch: crate::engine::Batch,
+}
+
+impl LogEntry {
+    /// Records carried by this entry.
+    pub fn records(&self) -> usize {
+        self.batch.len()
+    }
 }
 
 impl Encode for LogEntry {
     fn encode(&self, w: &mut Writer) {
         w.varint(self.edge.0 as u64);
         self.event_time.encode(w);
-        self.msg.encode(w);
+        self.batch.encode(w);
     }
 }
 
@@ -164,7 +173,7 @@ impl Decode for LogEntry {
         Ok(LogEntry {
             edge: EdgeId(r.varint()? as u32),
             event_time: Time::decode(r)?,
-            msg: crate::engine::Message::decode(r)?,
+            batch: crate::engine::Batch::decode(r)?,
         })
     }
 }
@@ -172,7 +181,7 @@ impl Decode for LogEntry {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::engine::{Message, Record};
+    use crate::engine::{Batch, Record};
 
     #[test]
     fn meta_roundtrip() {
@@ -205,8 +214,12 @@ mod tests {
         let le = LogEntry {
             edge: EdgeId(2),
             event_time: Time::epoch(1),
-            msg: Message::new(Time::epoch(1), Record::kv(3, 0.5)),
+            batch: Batch::new(
+                Time::epoch(1),
+                vec![Record::kv(3, 0.5), Record::kv(4, 1.5)],
+            ),
         };
+        assert_eq!(le.records(), 2);
         let bytes = le.to_bytes();
         assert_eq!(LogEntry::from_bytes(&bytes).unwrap(), le);
     }

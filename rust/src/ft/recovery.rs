@@ -22,7 +22,7 @@
 //! logs/replay (valid checkpoints are complete, so nothing inside `f`
 //! can have been in flight).
 
-use crate::engine::Message;
+use crate::engine::Batch;
 use crate::frontier::Frontier;
 use crate::ft::harness::{FtSystem, HistoryEvent};
 use crate::ft::meta::CkptMeta;
@@ -37,9 +37,10 @@ use crate::time::Time;
 #[derive(Clone, Debug)]
 pub struct RecoveryReport {
     pub plan: RollbackPlan,
-    /// Messages replayed from logs / history regeneration (Q′).
+    /// Records replayed from logs / history regeneration (Q′) — counted
+    /// per record so the number is invariant under `batch_cap`.
     pub replayed: usize,
-    /// Queued messages discarded during channel reconciliation.
+    /// Queued records discarded during channel reconciliation.
     pub dropped: usize,
     /// Processors restored from a durable checkpoint.
     pub restored_from_checkpoint: usize,
@@ -216,7 +217,7 @@ impl FtSystem {
         // `regen[p]` holds history-regenerated sends for full-history
         // processors (their virtual log).
         let n = self.topo.num_procs();
-        let mut regen: Vec<Vec<(crate::graph::EdgeId, Time, Message)>> = vec![Vec::new(); n];
+        let mut regen: Vec<Vec<(crate::graph::EdgeId, Time, Batch)>> = vec![Vec::new(); n];
         for p in self.topo.proc_ids() {
             let fp = plan.f[p.0 as usize].clone();
             if fp.is_top() {
@@ -333,14 +334,15 @@ impl FtSystem {
                     continue; // nothing moved on this edge
                 }
                 // Keep only messages fixed by the source's rollback; the
-                // source re-executes and re-sends the rest.
+                // source re-executes and re-sends the rest. A batch
+                // shares one time, so it is kept or dropped whole.
                 let keep = self.phi_runtime(e, &f_src);
                 let removed = self.engine.discard_from_channel(e, |t| !keep.contains(t));
-                report.dropped += removed.len();
+                report.dropped += removed.iter().map(|b| b.len()).sum::<usize>();
             } else {
                 // Destination restored: rebuild the queue from logs.
                 let removed = self.engine.discard_from_channel(e, |_| true);
-                report.dropped += removed.len();
+                report.dropped += removed.iter().map(|b| b.len()).sum::<usize>();
             }
         }
 
@@ -350,14 +352,16 @@ impl FtSystem {
             if fp.is_bottom() {
                 continue; // log was truncated to nothing
             }
-            // Durable log entries plus history-regenerated sends.
-            let entries: Vec<(crate::graph::EdgeId, Time, Message)> = self.ft[p.0 as usize]
+            // Durable logged batches plus history-regenerated sends,
+            // replayed byte-identically (a batch shares one time, so the
+            // destination-frontier filter applies to it whole).
+            let entries: Vec<(crate::graph::EdgeId, Time, Batch)> = self.ft[p.0 as usize]
                 .log
                 .iter()
-                .map(|le| (le.edge, le.event_time, le.msg.clone()))
+                .map(|le| (le.edge, le.event_time, le.batch.clone()))
                 .chain(std::mem::take(&mut regen[p.0 as usize]))
                 .collect();
-            for (e, evt, msg) in entries {
+            for (e, evt, batch) in entries {
                 if !fp.is_top() && !fp.contains(&evt) {
                     continue;
                 }
@@ -365,11 +369,11 @@ impl FtSystem {
                 if f_dst.is_top() {
                     continue; // ⊤ kept its queue; nothing to resupply
                 }
-                if f_dst.contains(&msg.time) {
+                if f_dst.contains(&batch.time) {
                     continue; // destination retained its effect
                 }
-                self.engine.replay_message(e, msg);
-                report.replayed += 1;
+                report.replayed += batch.len();
+                self.engine.replay_batch(e, batch);
             }
         }
         report
@@ -384,7 +388,7 @@ impl FtSystem {
         &mut self,
         p: ProcId,
         f: &Frontier,
-    ) -> Vec<(crate::graph::EdgeId, Time, Message)> {
+    ) -> Vec<(crate::graph::EdgeId, Time, Batch)> {
         self.engine.proc_mut(p).reset();
         let events: Vec<HistoryEvent> = self.ft[p.0 as usize]
             .history
@@ -407,8 +411,10 @@ impl FtSystem {
             let mut ctx = crate::engine::Ctx::new(t, &out_edges, &summaries, &seq_dst);
             match &ev {
                 HistoryEvent::Message { edge, time, data } => {
+                    // Re-deliver the recorded batch whole — replay is
+                    // byte-identical to the original delivery.
                     let port = self.topo.input_port(*edge);
-                    self.engine.proc_mut(p).on_message(port, *time, data.clone(), &mut ctx);
+                    self.engine.proc_mut(p).on_batch(port, *time, data.clone(), &mut ctx);
                 }
                 HistoryEvent::Notification { time } => {
                     consumed.push(*time);
@@ -419,8 +425,8 @@ impl FtSystem {
                 }
             }
             let (staged, notify) = ctx.into_parts();
-            for (port, msg) in staged {
-                sends.push((out_edges[port], t, msg));
+            for (port, batch) in staged {
+                sends.push((out_edges[port], t, batch));
             }
             requested.extend(notify);
         }

@@ -22,15 +22,33 @@ pub struct SumByTime {
     state: TimeState<f64>,
 }
 
+fn numeric(d: &Record) -> f64 {
+    match d {
+        Record::Int(i) => *i as f64,
+        Record::Kv { val, .. } => *val,
+        other => panic!("expected numeric record, got {other:?}"),
+    }
+}
+
 impl Processor for SumByTime {
     fn on_message(&mut self, _port: usize, t: Time, d: Record, ctx: &mut Ctx) {
-        let v = match d {
-            Record::Int(i) => i as f64,
-            Record::Kv { val, .. } => val,
-            other => panic!("SumByTime expects numeric records, got {other:?}"),
-        };
         let fresh = self.state.get(&t).is_none();
-        *self.state.entry_or(t, || 0.0) += v;
+        *self.state.entry_or(t, || 0.0) += numeric(&d);
+        if fresh {
+            ctx.notify_at(t);
+        }
+    }
+
+    /// Native batch path: one partition lookup for the whole batch.
+    fn on_batch(&mut self, _port: usize, t: Time, data: Vec<Record>, ctx: &mut Ctx) {
+        if data.is_empty() {
+            return;
+        }
+        let fresh = self.state.get(&t).is_none();
+        let acc = self.state.entry_or(t, || 0.0);
+        for d in &data {
+            *acc += numeric(d);
+        }
         if fresh {
             ctx.notify_at(t);
         }
@@ -113,6 +131,24 @@ impl Processor for CountByKey {
         }
     }
 
+    /// Native batch path: one partition lookup, per-record key updates.
+    fn on_batch(&mut self, _port: usize, t: Time, data: Vec<Record>, ctx: &mut Ctx) {
+        if data.is_empty() {
+            return;
+        }
+        let fresh = self.state.get(&t).is_none();
+        let part = self.state.entry_or(t, KeyedSums::default);
+        for d in &data {
+            let (k, v) =
+                d.as_kv().unwrap_or_else(|| panic!("CountByKey expects Kv, got {d:?}"));
+            *part.sums.entry(k).or_insert(0.0) += v;
+            *part.counts.entry(k).or_insert(0) += 1;
+        }
+        if fresh {
+            ctx.notify_at(t);
+        }
+    }
+
     fn on_notification(&mut self, t: Time, ctx: &mut Ctx) {
         if let Some(part) = self.state.remove(&t) {
             for (k, v) in part.sums {
@@ -156,6 +192,14 @@ impl Buffer {
 impl Processor for Buffer {
     fn on_message(&mut self, _port: usize, t: Time, d: Record, _ctx: &mut Ctx) {
         self.state.entry_or(t, Vec::new).push(d);
+    }
+
+    /// Native batch path: one partition lookup, bulk append.
+    fn on_batch(&mut self, _port: usize, t: Time, data: Vec<Record>, _ctx: &mut Ctx) {
+        if data.is_empty() {
+            return;
+        }
+        self.state.entry_or(t, Vec::new).extend(data);
     }
 
     fn statefulness(&self) -> Statefulness {
@@ -235,6 +279,35 @@ impl Processor for Join {
             for port in 0..ctx.num_outputs() {
                 ctx.send(port, Record::Kv { key: k, val: v + v2 });
             }
+        }
+        if fresh {
+            ctx.notify_at(t);
+        }
+    }
+
+    /// Native batch path: probe and build the per-time hash state for a
+    /// whole batch, emitting all matches as one batch per port.
+    fn on_batch(&mut self, port: usize, t: Time, data: Vec<Record>, ctx: &mut Ctx) {
+        if data.is_empty() {
+            return;
+        }
+        let fresh = self.state.get(&t).is_none();
+        let part = self.state.entry_or(t, JoinSides::default);
+        let mut out: Vec<Record> = Vec::new();
+        for d in data {
+            let (k, v) = d.as_kv().unwrap_or_else(|| panic!("Join expects Kv, got {d:?}"));
+            let (mine, theirs) = if port == 0 {
+                (&mut part.left, &part.right)
+            } else {
+                (&mut part.right, &part.left)
+            };
+            for (_, v2) in theirs.iter().filter(|(k2, _)| *k2 == k) {
+                out.push(Record::Kv { key: k, val: v + *v2 });
+            }
+            mine.push((k, v));
+        }
+        for port in 0..ctx.num_outputs() {
+            ctx.send_batch(port, out.clone());
         }
         if fresh {
             ctx.notify_at(t);

@@ -42,6 +42,10 @@ impl<F: FnMut(Record) -> Record> Processor for Map<F> {
     fn on_message(&mut self, _port: usize, _t: Time, d: Record, ctx: &mut Ctx) {
         ctx.send(0, (self.0)(d));
     }
+
+    fn on_batch(&mut self, _port: usize, _t: Time, data: Vec<Record>, ctx: &mut Ctx) {
+        ctx.send_batch(0, data.into_iter().map(&mut self.0).collect());
+    }
 }
 
 /// Keep only records satisfying a predicate.
@@ -53,6 +57,11 @@ impl<F: FnMut(&Record) -> bool> Processor for Filter<F> {
             ctx.send(0, d);
         }
     }
+
+    fn on_batch(&mut self, _port: usize, _t: Time, mut data: Vec<Record>, ctx: &mut Ctx) {
+        data.retain(&mut self.0);
+        ctx.send_batch(0, data);
+    }
 }
 
 /// Expand each record into zero or more records.
@@ -63,6 +72,10 @@ impl<F: FnMut(Record) -> Vec<Record>> Processor for FlatMap<F> {
         for r in (self.0)(d) {
             ctx.send(0, r);
         }
+    }
+
+    fn on_batch(&mut self, _port: usize, _t: Time, data: Vec<Record>, ctx: &mut Ctx) {
+        ctx.send_batch(0, data.into_iter().flat_map(&mut self.0).collect());
     }
 }
 
@@ -89,14 +102,24 @@ impl Select {
     }
 }
 
-impl Processor for Select {
-    fn on_message(&mut self, _port: usize, _t: Time, d: Record, ctx: &mut Ctx) {
-        let n = match &d {
+impl Select {
+    fn translate(d: &Record) -> Record {
+        let n = match d {
             Record::Text(s) => Self::word_to_number(s),
             Record::Int(i) => *i,
             other => panic!("Select expects text, got {other:?}"),
         };
-        ctx.send(0, Record::Int(n));
+        Record::Int(n)
+    }
+}
+
+impl Processor for Select {
+    fn on_message(&mut self, _port: usize, _t: Time, d: Record, ctx: &mut Ctx) {
+        ctx.send(0, Self::translate(&d));
+    }
+
+    fn on_batch(&mut self, _port: usize, _t: Time, data: Vec<Record>, ctx: &mut Ctx) {
+        ctx.send_batch(0, data.iter().map(Self::translate).collect());
     }
 }
 
@@ -107,6 +130,11 @@ impl Processor for Sink {
     fn on_message(&mut self, _port: usize, t: Time, d: Record, _ctx: &mut Ctx) {
         self.0.lock().unwrap().push((t, d));
     }
+
+    fn on_batch(&mut self, _port: usize, t: Time, data: Vec<Record>, _ctx: &mut Ctx) {
+        let mut out = self.0.lock().unwrap();
+        out.extend(data.into_iter().map(|d| (t, d)));
+    }
 }
 
 /// Pass-through that also records what flowed past (probe).
@@ -116,6 +144,14 @@ impl Processor for Inspect {
     fn on_message(&mut self, _port: usize, t: Time, d: Record, ctx: &mut Ctx) {
         self.0.lock().unwrap().push((t, d.clone()));
         ctx.send(0, d);
+    }
+
+    fn on_batch(&mut self, _port: usize, t: Time, data: Vec<Record>, ctx: &mut Ctx) {
+        {
+            let mut seen = self.0.lock().unwrap();
+            seen.extend(data.iter().map(|d| (t, d.clone())));
+        }
+        ctx.send_batch(0, data);
     }
 }
 

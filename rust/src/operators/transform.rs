@@ -33,12 +33,24 @@ impl Processor for EpochToSeq {
         }
     }
 
+    /// Native batch path: one partition lookup, bulk append.
+    fn on_batch(&mut self, _port: usize, t: Time, data: Vec<Record>, ctx: &mut Ctx) {
+        if data.is_empty() {
+            return;
+        }
+        let fresh = self.buf.get(&t).is_none();
+        self.buf.entry_or(t, Vec::new).extend(data);
+        if fresh {
+            ctx.notify_at(t);
+        }
+    }
+
     fn on_notification(&mut self, t: Time, ctx: &mut Ctx) {
         if let Some(records) = self.buf.remove(&t) {
-            for r in records {
-                for port in 0..ctx.num_outputs() {
-                    ctx.send(port, r.clone());
-                }
+            // One staged batch per port; the engine splits it per record
+            // at flush, assigning each its own (e, s) sequence time.
+            for port in 0..ctx.num_outputs() {
+                ctx.send_batch(port, records.clone());
             }
         }
     }
@@ -139,6 +151,29 @@ impl Processor for Distinct {
             for port in 0..ctx.num_outputs() {
                 ctx.send(port, d.clone());
             }
+        }
+        if fresh {
+            ctx.notify_at(t);
+        }
+    }
+
+    /// Native batch path: dedup the whole batch against the per-time seen
+    /// set, forwarding the survivors as one batch per port.
+    fn on_batch(&mut self, _port: usize, t: Time, data: Vec<Record>, ctx: &mut Ctx) {
+        if data.is_empty() {
+            return;
+        }
+        let fresh = self.seen.get(&t).is_none();
+        let set = self.seen.entry_or(t, Vec::new);
+        let mut out = Vec::new();
+        for d in data {
+            if !set.contains(&d) {
+                set.push(d.clone());
+                out.push(d);
+            }
+        }
+        for port in 0..ctx.num_outputs() {
+            ctx.send_batch(port, out.clone());
         }
         if fresh {
             ctx.notify_at(t);

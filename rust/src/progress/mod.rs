@@ -83,18 +83,32 @@ impl Summary {
 /// Multiset of pointstamps keyed by lexicographic time.
 type Stamps = BTreeMap<LexTime, usize>;
 
+fn stamp_add_n(m: &mut Stamps, t: Time, n: usize) {
+    if n == 0 {
+        return;
+    }
+    *m.entry(LexTime(t)).or_insert(0) += n;
+}
+
 fn stamp_add(m: &mut Stamps, t: Time) {
-    *m.entry(LexTime(t)).or_insert(0) += 1;
+    stamp_add_n(m, t, 1);
+}
+
+fn stamp_sub_n(m: &mut Stamps, t: Time, n: usize) {
+    if n == 0 {
+        return;
+    }
+    match m.get_mut(&LexTime(t)) {
+        Some(c) if *c > n => *c -= n,
+        Some(c) if *c == n => {
+            m.remove(&LexTime(t));
+        }
+        _ => panic!("pointstamp underflow at {t}"),
+    }
 }
 
 fn stamp_sub(m: &mut Stamps, t: Time) {
-    match m.get_mut(&LexTime(t)) {
-        Some(c) if *c > 1 => *c -= 1,
-        Some(_) => {
-            m.remove(&LexTime(t));
-        }
-        None => panic!("pointstamp underflow at {t}"),
-    }
+    stamp_sub_n(m, t, 1);
 }
 
 /// Tracks pointstamps and answers time-completeness queries.
@@ -122,9 +136,20 @@ impl ProgressTracker {
         stamp_add(&mut self.queued[e.0 as usize], t);
     }
 
+    /// Record `n` messages enqueued on `e` at time `t` (one map update
+    /// per batch — the hot-path form the batch engine uses).
+    pub fn messages_sent(&mut self, e: EdgeId, t: Time, n: usize) {
+        stamp_add_n(&mut self.queued[e.0 as usize], t, n);
+    }
+
     /// Record a message removed from `e` (delivered or destroyed).
     pub fn message_removed(&mut self, e: EdgeId, t: Time) {
         stamp_sub(&mut self.queued[e.0 as usize], t);
+    }
+
+    /// Record `n` messages removed from `e` at time `t`.
+    pub fn messages_removed(&mut self, e: EdgeId, t: Time, n: usize) {
+        stamp_sub_n(&mut self.queued[e.0 as usize], t, n);
     }
 
     /// Acquire a capability for `p` at `t`.
@@ -382,5 +407,35 @@ mod tests {
         let (topo, e0, _) = line_topo();
         let mut pt = ProgressTracker::new(&topo);
         pt.message_removed(e0, Time::epoch(0));
+    }
+
+    #[test]
+    fn counted_stamps_match_repeated_singles() {
+        let (topo, e0, _) = line_topo();
+        let b = topo.find("b").unwrap();
+        let mut pt = ProgressTracker::new(&topo);
+        pt.messages_sent(e0, Time::epoch(1), 3);
+        pt.message_sent(e0, Time::epoch(1));
+        assert_eq!(pt.queued_total(), 4);
+        pt.messages_removed(e0, Time::epoch(1), 2);
+        let r = pt.reachable(&topo);
+        assert!(!ProgressTracker::time_complete(&r, b, &Time::epoch(1)));
+        pt.message_removed(e0, Time::epoch(1));
+        pt.messages_removed(e0, Time::epoch(1), 1);
+        assert_eq!(pt.queued_total(), 0);
+        let r = pt.reachable(&topo);
+        assert!(ProgressTracker::time_complete(&r, b, &Time::epoch(1)));
+        // Zero-count operations are no-ops.
+        pt.messages_sent(e0, Time::epoch(5), 0);
+        assert_eq!(pt.queued_total(), 0);
+    }
+
+    #[test]
+    #[should_panic(expected = "pointstamp underflow")]
+    fn counted_removal_underflow_panics() {
+        let (topo, e0, _) = line_topo();
+        let mut pt = ProgressTracker::new(&topo);
+        pt.messages_sent(e0, Time::epoch(0), 2);
+        pt.messages_removed(e0, Time::epoch(0), 3);
     }
 }

@@ -4,7 +4,7 @@
 //! claims of §3.6/§4.2.
 
 use falkirk::bench_support::sharded::{drive_epoch, pipeline, ShardedConfig};
-use falkirk::engine::channel::{Channel, Delivery, Message};
+use falkirk::engine::channel::{Batch, Channel, Delivery, Message};
 use falkirk::engine::Record;
 use falkirk::ft::Policy;
 use falkirk::frontier::Frontier;
@@ -100,29 +100,69 @@ fn frontier_subset_antisymmetry_and_encode() {
     });
 }
 
-#[test]
-fn selective_pop_respects_reordering_rule() {
-    check("§3.3 re-ordering rule", |rng| {
-        let mut ch = Channel::new();
+/// §3.3 re-ordering rule on a channel, checked per pop: the popped batch
+/// must have no earlier queued batch whose time is ≤ its time. Runs for
+/// `cap = 1` (singleton batches, the pre-batching channel) and for
+/// coalescing caps, where random insertion orders produce mixed
+/// singleton/coalesced queues. Also checks that coalescing loses no
+/// records and never grows a batch past the cap.
+fn check_selective_reordering(cap: usize) {
+    check(&format!("§3.3 re-ordering rule (cap {cap})"), |rng| {
+        let mut ch = Channel::with_cap(cap);
         let n = 1 + rng.index(30);
+        let mut pushed = 0usize;
         for i in 0..n {
-            ch.push(Message::new(arb_time(rng, 0), Record::Int(i as i64)));
+            // Mix singleton pushes with multi-record batch pushes.
+            if rng.chance(0.3) {
+                let k = 1 + rng.index(4);
+                let t = arb_time(rng, 0);
+                // Values disjoint from the singleton pushes (which use
+                // 0..n), so batch equality below is unambiguous.
+                ch.push_batch(Batch::new(
+                    t,
+                    (0..k).map(|j| Record::Int((1000 + i * 10 + j) as i64)).collect(),
+                ));
+                pushed += k;
+            } else {
+                ch.push(Message::new(arb_time(rng, 0), Record::Int(i as i64)));
+                pushed += 1;
+            }
         }
+        prop_assert!(ch.len() == pushed, "coalescing lost records: {} != {pushed}", ch.len());
+        prop_assert!(
+            ch.iter().all(|b| b.len() <= cap && !b.is_empty()),
+            "a queued batch exceeds cap {cap} (or is empty)"
+        );
+        let mut popped = 0usize;
         while !ch.is_empty() {
-            let before: Vec<Message> = ch.iter().cloned().collect();
-            let m = ch.pop(Delivery::Selective).unwrap();
-            let idx = before.iter().position(|x| x == &m).unwrap();
-            for mj in &before[..idx] {
+            let before: Vec<Batch> = ch.iter().cloned().collect();
+            let b = ch.pop(Delivery::Selective).unwrap();
+            popped += b.len();
+            let idx = before.iter().position(|x| x == &b).unwrap();
+            for bj in &before[..idx] {
                 prop_assert!(
-                    !mj.time.le(&m.time),
-                    "earlier {} ≤ popped {}",
-                    mj.time,
-                    m.time
+                    !bj.time.le(&b.time),
+                    "earlier queued {} ≤ popped {} (cap {cap})",
+                    bj.time,
+                    b.time
                 );
             }
         }
+        prop_assert!(popped == pushed, "popped {popped} of {pushed} records");
         Ok(())
     });
+}
+
+#[test]
+fn selective_pop_respects_reordering_rule() {
+    check_selective_reordering(1);
+}
+
+#[test]
+fn selective_pop_respects_reordering_rule_coalesced() {
+    for cap in [2usize, 8, 64] {
+        check_selective_reordering(cap);
+    }
 }
 
 /// Random epoch DAG + availability for the solver properties.

@@ -205,6 +205,50 @@ fn single_shard_failure_recovers_only_its_key_range() {
     assert_eq!(clean, failed_out, "recovered output is byte-identical");
 }
 
+/// The batching grid: the same fault-injection cells driven at
+/// `batch_cap ∈ {1, 8, 64}`. Two obligations per cell:
+/// (a) within a cap, the recovered output is byte-identical to that
+///     cap's failure-free run;
+/// (b) across caps, all outputs are equal — batching (whole per-shard
+///     sub-batches through the exchange, one log write per batch,
+///     batch-granular replay) must not change the observable output, at
+///     any cap, failed or not. Cap 1 is the pre-batching engine.
+#[test]
+fn recovery_grid_is_byte_identical_across_batch_caps() {
+    let mut outputs: Vec<Vec<u8>> = Vec::new();
+    for batch_cap in [1usize, 8, 64] {
+        for two_stage in [false, true] {
+            let cfg = ShardedConfig {
+                workers: 4,
+                two_stage,
+                batch_cap,
+                ..Default::default()
+            };
+            let (clean, _, _) = drive(&cfg, 7, None);
+            let failures = [
+                Failure { shard: 0, epoch: 2, records_before: 0, presteps: 0 },
+                Failure { shard: 3, epoch: 1, records_before: RECORDS / 2, presteps: 0 },
+                Failure { shard: 2, epoch: 2, records_before: RECORDS / 2, presteps: 60 },
+            ];
+            for f in failures {
+                let (failed, stats, rep) = drive(&cfg, 7, Some(f));
+                assert!(rep.is_some());
+                assert_eq!(stats.recoveries, 1);
+                assert_eq!(
+                    clean, failed,
+                    "output diverged: batch_cap={batch_cap} two_stage={two_stage} \
+                     failure={f:?}"
+                );
+            }
+            if two_stage {
+                outputs.push(clean);
+            }
+        }
+    }
+    // (b): equal across caps (two-stage cells compared).
+    assert!(outputs.windows(2).all(|w| w[0] == w[1]), "output differs across batch caps");
+}
+
 /// Crashing every shard of the vertex still recovers (degenerates to the
 /// whole-vertex rollback a non-sharded system would do).
 #[test]

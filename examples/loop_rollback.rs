@@ -17,7 +17,6 @@ use falkirk::graph::{GraphBuilder, Projection};
 use falkirk::operators::{shared_vec, Egress, Feedback, Ingress, Sink, Source, TensorApply};
 use falkirk::operators::tensor::mock::MockIterate;
 use falkirk::time::{Time, TimeDomain};
-use std::rc::Rc;
 use std::sync::Arc;
 
 /// Loop body: one rank-propagation step, emitted both around the cycle
@@ -50,7 +49,7 @@ fn main() {
     let procs: Vec<Box<dyn Processor>> = vec![
         Box::new(Source),
         Box::new(Ingress),
-        Box::new(Body(TensorApply::new(Rc::new(MockIterate { damping: 0.85 })))),
+        Box::new(Body(TensorApply::new(Arc::new(MockIterate { damping: 0.85 })))),
         Box::new(Feedback::new(4)),
         Box::new(Egress),
         Box::new(Sink(out.clone())),

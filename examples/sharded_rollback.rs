@@ -8,8 +8,12 @@
 //! ```
 //!
 //! `--batch-cap` (default 1 = record-at-a-time) sets the channel
-//! coalescing cap; both runs are driven at the same cap and the example
-//! prints end-to-end records/sec alongside the recovery stats.
+//! coalescing cap and `--threads` (default 1 = sequential engine) the
+//! worker-thread count; both runs are driven at the same settings and
+//! the example prints end-to-end records/sec alongside the recovery
+//! stats. The crash is injected *between* drains — the parallel engine
+//! recomposes at every quiescence, so the Fig. 6 solve and state reset
+//! run while the workers are parked.
 
 use falkirk::bench_support::sharded::{
     canonical_output, epoch_records, pipeline, ShardedConfig, Throughput,
@@ -22,8 +26,8 @@ const RECORDS: usize = 32;
 const KEYS: u64 = 16;
 const SEED: u64 = 42;
 
-fn drive(batch_cap: usize, fail_shard: Option<usize>) -> Vec<u8> {
-    let cfg = ShardedConfig { workers: 4, batch_cap, ..Default::default() };
+fn drive(batch_cap: usize, threads: usize, fail_shard: Option<usize>) -> Vec<u8> {
+    let cfg = ShardedConfig { workers: 4, batch_cap, threads, ..Default::default() };
     let mut p = pipeline(&cfg);
     let src = p.src_proc();
     let t0 = std::time::Instant::now();
@@ -64,10 +68,10 @@ fn drive(batch_cap: usize, fail_shard: Option<usize>) -> Vec<u8> {
             }
         }
         p.sys.advance_input(src, Time::epoch(ep + 1));
-        p.sys.run_to_quiescence(5_000_000);
+        p.run(5_000_000);
     }
     p.sys.close_input(src);
-    p.sys.run_to_quiescence(5_000_000);
+    p.run(5_000_000);
     let tp = Throughput {
         records: EPOCHS * RECORDS as u64,
         events: p.sys.engine.events_processed(),
@@ -94,12 +98,13 @@ fn main() {
     let raw: Vec<String> = std::env::args().skip(1).collect();
     let args = Args::parse(&raw);
     let batch_cap = args.get_usize("batch-cap", 1);
+    let threads = args.get_usize("threads", 1);
 
-    println!("failure-free run (batch_cap = {batch_cap}):");
-    let clean = drive(batch_cap, None);
+    println!("failure-free run (batch_cap = {batch_cap}, threads = {threads}):");
+    let clean = drive(batch_cap, threads, None);
 
     println!("\nrun with a crash of shard 2:");
-    let failed = drive(batch_cap, Some(2));
+    let failed = drive(batch_cap, threads, Some(2));
 
     assert_eq!(clean, failed, "sharded rollback recovery must be transparent");
     println!("\nOK: recovered output is byte-identical to the failure-free run.");

@@ -1,19 +1,26 @@
-//! Shard-scaling bench: events/sec of the sharded keyed-aggregation job
-//! at W = 1, 2, 4, 8 worker shards.
+//! Shard-scaling bench: throughput of the sharded keyed-aggregation job
+//! at W = 1, 2, 4, 8 worker shards, sequential and multi-threaded.
 //!
-//! Two groups:
+//! Three groups:
 //! - `engine/…`: fault tolerance off (everything ephemeral, zero-cost
-//!   store) — pure cost of the sharded execution layer (exchange
-//!   fan-out, per-shard routing, per-shard progress tracking);
+//!   store), single-threaded — pure cost of the sharded execution layer
+//!   (exchange fan-out, per-shard routing, per-shard progress tracking);
 //! - `ft/…`: the default policies (source log firewall, per-shard lazy
-//!   selective checkpoints) — what recovery-capable deployments pay.
+//!   selective checkpoints), single-threaded — what recovery-capable
+//!   deployments pay;
+//! - `par/…`: the fixed W = 8 workload drained on the parallel engine at
+//!   T ∈ {1, 2, 4, 8} OS threads (ops/s = source records/sec). T = 1 is
+//!   the sequential engine, so `par_W8_T1` is the baseline the speedup
+//!   at T = 4/8 is measured against.
 //!
-//! The engine is single-process and event-at-a-time, so events/sec is
-//! expected roughly flat in W; what this bench pins down is the *price*
+//! The sequential engine is event-at-a-time, so `engine/ft` ops/s is
+//! expected roughly flat in W; what those groups pin down is the *price*
 //! of sharding (exchange edges multiply the graph, reachability scans
-//! grow) so regressions in the sharded layer show up as a slope.
+//! grow) so regressions in the sharded layer show up as a slope. The
+//! `par` group is the scaling claim itself: records/sec per thread
+//! count.
 
-use falkirk::bench_support::sharded::{drive_epoch, pipeline, ShardedConfig};
+use falkirk::bench_support::sharded::{drive_epoch, drive_workload, pipeline, ShardedConfig};
 use falkirk::bench_support::{BenchConfig, Bencher};
 use falkirk::ft::Policy;
 
@@ -21,13 +28,14 @@ const EPOCHS: u64 = 4;
 const RECORDS: usize = 256;
 const KEYS: u64 = 64;
 
-fn cfg(workers: u32, ft: bool) -> ShardedConfig {
+fn cfg(workers: u32, ft: bool, threads: usize) -> ShardedConfig {
     if ft {
-        ShardedConfig { workers, two_stage: true, ..Default::default() }
+        ShardedConfig { workers, two_stage: true, threads, ..Default::default() }
     } else {
         ShardedConfig {
             workers,
             two_stage: true,
+            threads,
             count_policy: Policy::Ephemeral,
             collect_policy: Policy::Ephemeral,
             write_cost: 0,
@@ -44,7 +52,7 @@ fn run_job(cfg: &ShardedConfig) -> u64 {
     }
     let src = p.src_proc();
     p.sys.close_input(src);
-    p.sys.run_to_quiescence(10_000_000);
+    p.run(10_000_000);
     p.sys.engine.events_processed()
 }
 
@@ -55,7 +63,7 @@ fn main() {
     );
     for ft in [false, true] {
         for workers in [1u32, 2, 4, 8] {
-            let c = cfg(workers, ft);
+            let c = cfg(workers, ft, 1);
             let units = run_job(&c) as f64; // events per iteration (dry run)
             let name =
                 format!("{}_W{workers}", if ft { "ft" } else { "engine" });
@@ -64,5 +72,19 @@ fn main() {
             });
         }
     }
-    b.note("ops/s = engine events/sec; exchange fan-out grows edges O(W^2) between sharded stages");
+    // Parallel scaling: fixed W = 8 workload, T threads; ops/s = source
+    // records/sec end to end (same driver as `falkirk shard --threads`).
+    for threads in [1usize, 2, 4, 8] {
+        let c = cfg(8, true, threads);
+        let records = (EPOCHS as usize * RECORDS) as f64;
+        b.run(&format!("par_W8_T{threads}"), records, || {
+            let mut p = pipeline(&c);
+            let tp = drive_workload(&mut p, 7, EPOCHS, RECORDS, KEYS);
+            assert_eq!(tp.records, EPOCHS * RECORDS as u64);
+        });
+    }
+    b.note(
+        "engine/ft: ops/s = events/sec, single-threaded (exchange fan-out grows edges O(W^2)); \
+         par_W8_T*: ops/s = records/sec at T worker threads — speedup = par_W8_T4 / par_W8_T1",
+    );
 }

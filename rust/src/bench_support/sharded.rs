@@ -47,6 +47,10 @@ pub struct ShardedConfig {
     pub write_cost: u64,
     /// Channel coalescing cap (1 = record-at-a-time).
     pub batch_cap: usize,
+    /// Worker threads for the drains (1 = sequential engine; >1 runs the
+    /// parallel executor with shard s of every sharded vertex in group
+    /// `s % threads` — see [`crate::engine::shard_groups`]).
+    pub threads: usize,
 }
 
 impl Default for ShardedConfig {
@@ -58,6 +62,7 @@ impl Default for ShardedConfig {
             collect_policy: Policy::Lazy { every: 1, log_outputs: false },
             write_cost: 1,
             batch_cap: 1,
+            threads: 1,
         }
     }
 }
@@ -71,6 +76,10 @@ pub struct ShardedPipeline {
     pub map: Option<LogicalId>,
     pub count: LogicalId,
     pub collect: LogicalId,
+    /// Worker threads used by [`ShardedPipeline::run`].
+    pub threads: usize,
+    /// Per-processor worker-group assignment (for the parallel drains).
+    pub groups: Vec<usize>,
 }
 
 /// Deterministic rekeying used by the `map` stage: spreads keys across
@@ -121,10 +130,23 @@ pub fn pipeline(cfg: &ShardedConfig) -> ShardedPipeline {
         Store::new(cfg.write_cost),
         cfg.batch_cap,
     );
-    ShardedPipeline { sys, plan, src, map, count, collect }
+    let threads = cfg.threads.max(1);
+    let groups = crate::engine::shard_groups(&plan, threads);
+    ShardedPipeline { sys, plan, src, map, count, collect, threads, groups }
 }
 
 impl ShardedPipeline {
+    /// Drain to quiescence under the configured thread count: the
+    /// sequential engine at `threads = 1`, the parallel executor
+    /// otherwise. Returns events processed.
+    pub fn run(&mut self, max_steps: usize) -> usize {
+        if self.threads > 1 {
+            self.sys.run_to_quiescence_parallel(&self.groups, self.threads, max_steps)
+        } else {
+            self.sys.run_to_quiescence(max_steps)
+        }
+    }
+
     /// The single physical source processor.
     pub fn src_proc(&self) -> ProcId {
         self.plan.proc(self.src, 0)
@@ -156,7 +178,7 @@ pub fn drive_epoch(p: &mut ShardedPipeline, seed: u64, ep: u64, records: usize, 
         p.sys.push_input(src, Time::epoch(ep), r);
     }
     p.sys.advance_input(src, Time::epoch(ep + 1));
-    p.sys.run_to_quiescence(5_000_000);
+    p.run(5_000_000);
 }
 
 /// Throughput summary of a driven run (the batching benches and the
@@ -195,7 +217,7 @@ pub fn drive_workload(
     }
     let src = p.src_proc();
     p.sys.close_input(src);
-    p.sys.run_to_quiescence(10_000_000);
+    p.run(10_000_000);
     Throughput {
         records: epochs * records as u64,
         events: p.sys.engine.events_processed(),

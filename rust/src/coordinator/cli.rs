@@ -26,6 +26,7 @@ COMMANDS:
             --workers W (4) --epochs N (6) --records N (64) --keys N (16)
             --seed S (7) --two-stage <true|false> (false)
             --fail-shard S --fail-after E (2) --batch-cap B (1)
+            --threads T (1)  # T>1 drains on the parallel engine
   fig7      Run a worked rollback example.  --panel a|b|c (c)
   gc-demo   Drive the §4.2 GC monitor and print watermark advances.
             --epochs N (8)
@@ -101,6 +102,7 @@ fn cmd_shard(args: &Args) -> i32 {
     let seed = args.get_u64("seed", 7);
     let two_stage = args.get_str("two-stage", "false") == "true";
     let batch_cap = args.get_usize("batch-cap", 1);
+    let threads = args.get_usize("threads", 1);
     let fail_shard = match args.get("fail-shard") {
         None => None,
         Some(raw) => match raw.parse::<usize>() {
@@ -117,7 +119,11 @@ fn cmd_shard(args: &Args) -> i32 {
         eprintln!("--workers must be at least 1");
         return 2;
     }
-    let cfg = ShardedConfig { workers, two_stage, batch_cap, ..Default::default() };
+    if threads == 0 {
+        eprintln!("--threads must be at least 1");
+        return 2;
+    }
+    let cfg = ShardedConfig { workers, two_stage, batch_cap, threads, ..Default::default() };
     if let Some(s) = fail_shard {
         if s >= workers as usize {
             eprintln!("--fail-shard {s} out of range (workers = {workers})");
@@ -151,13 +157,16 @@ fn cmd_shard(args: &Args) -> i32 {
     }
     let src = p.src_proc();
     p.sys.close_input(src);
-    p.sys.run_to_quiescence(5_000_000);
+    p.run(5_000_000);
     let tp = Throughput {
         records: epochs * records as u64,
         events: p.sys.engine.events_processed(),
         elapsed_secs: t0.elapsed().as_secs_f64(),
     };
-    println!("shard: W={workers} two_stage={two_stage} epochs={epochs} batch_cap={batch_cap}");
+    println!(
+        "shard: W={workers} threads={threads} two_stage={two_stage} epochs={epochs} \
+         batch_cap={batch_cap}"
+    );
     println!("  events           {}", tp.events);
     println!("  events/sec       {:.0}", tp.events_per_sec());
     println!("  records/sec      {:.0}", tp.records_per_sec());
@@ -165,7 +174,11 @@ fn cmd_shard(args: &Args) -> i32 {
     println!("  checkpoints      {}", p.sys.stats.checkpoints_taken);
     println!("  recoveries       {}", p.sys.stats.recoveries);
     println!("  replayed msgs    {}", p.sys.stats.messages_replayed);
-    println!("  output bytes     {}", canonical_output(&p.sys, p.collect_proc()).len());
+    let out = canonical_output(&p.sys, p.collect_proc());
+    // Checksum of the canonical bytes: identical across thread counts and
+    // batch caps iff the observable output is identical.
+    let h = crate::util::hash::fnv1a(&out);
+    println!("  output bytes     {} (fnv1a {h:016x})", out.len());
     0
 }
 

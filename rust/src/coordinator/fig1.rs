@@ -39,7 +39,6 @@ use crate::operators::{
 use crate::runtime::ArtifactRegistry;
 use crate::time::{Time, TimeDomain};
 use crate::util::rng::Rng;
-use std::rc::Rc;
 use std::sync::{Arc, Mutex};
 
 /// Configuration for the Figure-1 run.
@@ -167,8 +166,8 @@ fn kernels(cfg: &Fig1Config) -> (KernelHandle, KernelHandle, bool) {
         }
     }
     (
-        Rc::new(MockAgg { num_keys: cfg.num_keys }),
-        Rc::new(MockIterate { damping: 0.85 }),
+        Arc::new(MockAgg { num_keys: cfg.num_keys }),
+        Arc::new(MockIterate { damping: 0.85 }),
         false,
     )
 }

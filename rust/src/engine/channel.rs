@@ -22,11 +22,31 @@
 //! minimal among all queued batches — always legal under the rule, and
 //! coalescing cannot break it because all records of a batch share one
 //! time).
+//!
+//! Internally the queue is a `VecDeque` of `(arrival number, batch)`
+//! entries, so FIFO pushes and pops stay O(1). A lex-min time index
+//! (time → arrival numbers) is built **lazily on the first selective
+//! pop** — channels that only ever deliver FIFO never pay for it — and
+//! maintained thereafter; a selective pop reads the minimal time from
+//! the index, binary-searches the arrival-ordered deque, and leaves a
+//! tombstone (trimmed from both ends) instead of shifting the deque.
+//! Selective pops are therefore O(log n) — the old implementation did a
+//! full linear scan plus a middle-of-`VecDeque` removal, which
+//! degenerated to O(n²) drains on deep queues.
+//!
+//! Replays during recovery enqueue through [`Channel::push_batch_replay`]
+//! instead: it splits to the cap like a normal enqueue (so the delivery
+//! unit never exceeds the cap) but never merges into the queued tail.
+//! Tail-coalescing a replayed batch with an adjacent same-time batch
+//! would make the replayed delivery boundaries depend on what happened to
+//! be queued, so a *second* failure during recovery would observe (and a
+//! full-history processor would record) different batch boundaries than
+//! the original run.
 
 use crate::engine::record::Record;
 use crate::time::{LexTime, Time};
 use crate::util::ser::{Decode, Encode, Reader, SerError, Writer};
-use std::collections::VecDeque;
+use std::collections::{BTreeMap, BTreeSet, VecDeque};
 
 /// A timed singleton message (the record-at-a-time view; conversions to
 /// and from [`Batch`] are free).
@@ -56,7 +76,9 @@ impl Decode for Message {
 }
 
 /// A batch of records at one logical time — the unit moved through
-/// channels, delivered to processors, logged, and replayed.
+/// channels, delivered to processors, logged, replayed, and shipped
+/// whole across worker-thread mailboxes (it is `Send`, so exchange edges
+/// between shard groups transfer batches by move, never by copy).
 #[derive(Clone, Debug, PartialEq)]
 pub struct Batch {
     pub time: Time,
@@ -116,6 +138,13 @@ impl Decode for Batch {
     }
 }
 
+// The parallel engine moves batches across worker threads; keep that
+// guarantee explicit so a non-Send payload cannot sneak into `Record`.
+const _: fn() = || {
+    fn assert_send<T: Send>() {}
+    assert_send::<Batch>();
+};
+
 /// Delivery policy for a channel.
 #[derive(Copy, Clone, Debug, PartialEq, Eq)]
 pub enum Delivery {
@@ -128,10 +157,26 @@ pub enum Delivery {
     Selective,
 }
 
-/// A single-edge batch queue.
+/// A single-edge batch queue (see the module docs for the layout).
 #[derive(Clone, Debug)]
 pub struct Channel {
-    q: VecDeque<Batch>,
+    /// Arrival-ordered entries: (arrival number, live batch or
+    /// tombstone). Arrival numbers strictly ascend front→back.
+    /// Invariant: when the channel is nonempty, the front and back
+    /// entries are live (tombstones are trimmed from both ends), so FIFO
+    /// pops and tail-coalescing touch live batches directly.
+    q: VecDeque<(u64, Option<Batch>)>,
+    /// Lazily-built lex-min index over live entries: time → arrival
+    /// numbers. `None` until the first selective pop, so FIFO-only
+    /// channels never maintain it; structural rewrites (`drain`,
+    /// `retain_where`) drop it and the next selective pop rebuilds.
+    by_time: Option<BTreeMap<LexTime, BTreeSet<u64>>>,
+    /// Next arrival number.
+    next_seq: u64,
+    /// Cached Σ live batch.len().
+    records: usize,
+    /// Live batch count.
+    live: usize,
     /// Maximum records a coalesced batch may grow to. Cap 1 disables
     /// coalescing entirely (record-at-a-time).
     cap: usize,
@@ -139,7 +184,7 @@ pub struct Channel {
 
 impl Default for Channel {
     fn default() -> Channel {
-        Channel { q: VecDeque::new(), cap: 1 }
+        Channel::with_cap(1)
     }
 }
 
@@ -150,7 +195,14 @@ impl Channel {
 
     /// A channel coalescing same-time enqueues up to `cap` records.
     pub fn with_cap(cap: usize) -> Channel {
-        Channel { q: VecDeque::new(), cap: cap.max(1) }
+        Channel {
+            q: VecDeque::new(),
+            by_time: None,
+            next_seq: 0,
+            records: 0,
+            live: 0,
+            cap: cap.max(1),
+        }
     }
 
     pub fn batch_cap(&self) -> usize {
@@ -161,93 +213,197 @@ impl Channel {
         self.push_batch(Batch::from(m));
     }
 
+    fn index_insert(&mut self, seq: u64, t: Time) {
+        if let Some(ix) = &mut self.by_time {
+            ix.entry(LexTime(t)).or_default().insert(seq);
+        }
+    }
+
+    fn index_remove(&mut self, seq: u64, t: Time) {
+        if let Some(ix) = &mut self.by_time {
+            let lt = LexTime(t);
+            let set = ix.get_mut(&lt).expect("queued time indexed");
+            set.remove(&seq);
+            if set.is_empty() {
+                ix.remove(&lt);
+            }
+        }
+    }
+
+    /// Build the time index from the live entries (first selective pop).
+    fn ensure_index(&mut self) {
+        if self.by_time.is_none() {
+            let mut ix: BTreeMap<LexTime, BTreeSet<u64>> = BTreeMap::new();
+            for (seq, b) in &self.q {
+                if let Some(b) = b {
+                    ix.entry(LexTime(b.time)).or_default().insert(*seq);
+                }
+            }
+            self.by_time = Some(ix);
+        }
+    }
+
+    /// Restore the ends-are-live invariant after a removal.
+    fn trim(&mut self) {
+        while matches!(self.q.front(), Some((_, None))) {
+            self.q.pop_front();
+        }
+        while matches!(self.q.back(), Some((_, None))) {
+            self.q.pop_back();
+        }
+    }
+
+    /// Append one cap-sized chunk as a fresh queued batch.
+    fn append_chunk(&mut self, time: Time, chunk: Vec<Record>) {
+        let seq = self.next_seq;
+        self.next_seq += 1;
+        self.records += chunk.len();
+        self.live += 1;
+        self.q.push_back((seq, Some(Batch::new(time, chunk))));
+        self.index_insert(seq, time);
+    }
+
     /// Enqueue a batch. The cap is the *delivery-unit size*: same-time
     /// enqueues coalesce into the tail batch up to `cap` records, and a
     /// batch larger than `cap` is split into cap-sized chunks — so with
     /// `cap = 1` the queue is record-at-a-time no matter how senders
     /// grouped their records. Only the tail is considered for merging, so
     /// FIFO arrival order is preserved exactly; under
-    /// `Delivery::Selective` the merge is equally safe because a batch's
-    /// records all share one time.
+    /// [`Delivery::Selective`] the merge is equally safe because a
+    /// batch's records all share one time.
     pub fn push_batch(&mut self, b: Batch) {
         if b.is_empty() {
             return;
         }
         let time = b.time;
         let mut data = b.data;
-        // Fill the tail batch first if it shares the time.
-        if let Some(tail) = self.q.back_mut() {
+        // Fill the tail batch first if it shares the time (the back entry
+        // is live by the trim invariant; merging does not change its
+        // time, so the index needs no update).
+        if let Some((_, Some(tail))) = self.q.back_mut() {
             if tail.time == time && tail.len() < self.cap {
                 let take = (self.cap - tail.len()).min(data.len());
                 tail.data.extend(data.drain(..take));
+                self.records += take;
             }
         }
         // Remaining records form fresh batches of at most cap records.
         while !data.is_empty() {
             let take = self.cap.min(data.len());
             let chunk: Vec<Record> = data.drain(..take).collect();
-            self.q.push_back(Batch::new(time, chunk));
+            self.append_chunk(time, chunk);
+        }
+    }
+
+    /// Replay enqueue (rollback's Q′, §3.6): split to the cap like a
+    /// normal enqueue, but **never** merge into the queued tail — the
+    /// replayed delivery boundaries must be a deterministic function of
+    /// the logged batch alone, not of whatever happens to be queued (see
+    /// the module docs on second failures during recovery).
+    pub fn push_batch_replay(&mut self, b: Batch) {
+        if b.is_empty() {
+            return;
+        }
+        let time = b.time;
+        let mut data = b.data;
+        while !data.is_empty() {
+            let take = self.cap.min(data.len());
+            let chunk: Vec<Record> = data.drain(..take).collect();
+            self.append_chunk(time, chunk);
         }
     }
 
     /// Total queued *records* across all batches.
     pub fn len(&self) -> usize {
-        self.q.iter().map(|b| b.len()).sum()
+        self.records
     }
 
     /// Number of queued batches (delivery units).
     pub fn num_batches(&self) -> usize {
-        self.q.len()
+        self.live
     }
 
     pub fn is_empty(&self) -> bool {
-        self.q.is_empty()
+        self.live == 0
     }
 
-    /// Remove the next deliverable batch under the given policy.
+    /// Remove the next deliverable batch under the given policy: FIFO
+    /// pops the (live) front in O(1); selective reads the lex-min time
+    /// from the index and tombstones the earliest batch carrying it in
+    /// O(log n).
     pub fn pop(&mut self, delivery: Delivery) -> Option<Batch> {
         match delivery {
-            Delivery::Fifo => self.q.pop_front(),
+            Delivery::Fifo => {
+                let (seq, b) = self.q.pop_front()?;
+                let b = b.expect("front entry is live (trim invariant)");
+                self.records -= b.len();
+                self.live -= 1;
+                self.index_remove(seq, b.time);
+                self.trim();
+                Some(b)
+            }
             Delivery::Selective => {
-                if self.q.is_empty() {
+                if self.live == 0 {
                     return None;
                 }
-                let mut best = 0usize;
-                for i in 1..self.q.len() {
-                    if LexTime(self.q[i].time) < LexTime(self.q[best].time) {
-                        best = i;
-                    }
-                }
-                self.q.remove(best)
+                self.ensure_index();
+                let seq = {
+                    let ix = self.by_time.as_ref().expect("index just built");
+                    let (_, seqs) = ix.iter().next()?;
+                    *seqs.iter().next().expect("time index entry is nonempty")
+                };
+                // Arrival numbers ascend front→back, so the entry is
+                // found by binary search; taking it leaves a tombstone
+                // instead of shifting the deque.
+                let i = self
+                    .q
+                    .binary_search_by_key(&seq, |e| e.0)
+                    .expect("indexed arrival number is queued");
+                let b = self.q[i].1.take().expect("indexed entry is live");
+                self.records -= b.len();
+                self.live -= 1;
+                self.index_remove(seq, b.time);
+                self.trim();
+                Some(b)
             }
         }
     }
 
     /// Iterate queued batches in arrival order.
     pub fn iter(&self) -> impl Iterator<Item = &Batch> {
-        self.q.iter()
+        self.q.iter().filter_map(|(_, b)| b.as_ref())
     }
 
-    /// Drop every queued batch, returning them (for failure injection
-    /// and rollback).
+    /// Drop every queued batch, returning them in arrival order (for
+    /// failure injection and rollback).
     pub fn drain(&mut self) -> Vec<Batch> {
-        self.q.drain(..).collect()
+        self.records = 0;
+        self.live = 0;
+        self.by_time = None;
+        std::mem::take(&mut self.q).into_iter().filter_map(|(_, b)| b).collect()
     }
 
     /// Retain only batches satisfying the predicate; returns the removed
-    /// ones (used by rollback to discard messages inside a frontier —
-    /// the predicate sees the batch time, shared by all its records).
+    /// ones in arrival order (used by rollback to discard messages inside
+    /// a frontier — the predicate sees the batch time, shared by all its
+    /// records). Rebuilds the deque, dropping tombstones and the index
+    /// along the way.
     pub fn retain_where<F: FnMut(&Batch) -> bool>(&mut self, mut keep: F) -> Vec<Batch> {
         let mut removed = Vec::new();
-        let mut kept = VecDeque::with_capacity(self.q.len());
-        for b in self.q.drain(..) {
-            if keep(&b) {
-                kept.push_back(b);
-            } else {
-                removed.push(b);
+        let mut kept: VecDeque<(u64, Option<Batch>)> = VecDeque::with_capacity(self.q.len());
+        for (seq, b) in std::mem::take(&mut self.q) {
+            match b {
+                Some(b) if keep(&b) => kept.push_back((seq, Some(b))),
+                Some(b) => {
+                    self.records -= b.len();
+                    self.live -= 1;
+                    removed.push(b);
+                }
+                None => {}
             }
         }
         self.q = kept;
+        self.by_time = None;
         removed
     }
 }
@@ -325,6 +481,32 @@ mod tests {
     }
 
     #[test]
+    fn replay_push_never_merges_into_tail() {
+        let mut c = Channel::with_cap(8);
+        c.push(msg(0, 1));
+        c.push_batch_replay(Batch::new(
+            Time::epoch(0),
+            vec![Record::Int(2), Record::Int(3)],
+        ));
+        // A normal push would have coalesced all three into one batch.
+        assert_eq!(c.num_batches(), 2, "replay enqueue bypasses tail-coalescing");
+        assert_eq!(c.pop(Delivery::Fifo).unwrap().data, vec![Record::Int(1)]);
+        assert_eq!(
+            c.pop(Delivery::Fifo).unwrap().data,
+            vec![Record::Int(2), Record::Int(3)]
+        );
+        // …but splitting to the cap still applies: the delivery unit may
+        // never exceed the cap.
+        let mut c2 = Channel::with_cap(2);
+        c2.push_batch_replay(Batch::new(
+            Time::epoch(0),
+            (0..5).map(Record::Int).collect(),
+        ));
+        let sizes: Vec<usize> = c2.iter().map(|b| b.len()).collect();
+        assert_eq!(sizes, vec![2, 2, 1]);
+    }
+
+    #[test]
     fn selective_pulls_min_time_first() {
         // The §2.3/§3.3 motivating case: epoch-2 messages queued ahead of
         // an epoch-1 message; selective delivery may take epoch 1 first.
@@ -364,6 +546,31 @@ mod tests {
                 }
             }
         }
+    }
+
+    #[test]
+    fn time_index_stays_consistent_under_mixed_ops() {
+        // Interleave pushes, pops of both policies, and retain_where, and
+        // check the lex-min index agrees with a linear scan throughout.
+        let mut c = Channel::with_cap(2);
+        for (i, ep) in [4u64, 1, 3, 1, 0, 2, 0, 5].iter().enumerate() {
+            c.push(msg(*ep, i as i64));
+        }
+        let min_by_scan = |c: &Channel| {
+            c.iter().map(|b| LexTime(b.time)).min()
+        };
+        while !c.is_empty() {
+            let expect = min_by_scan(&c).unwrap();
+            let popped = c.pop(Delivery::Selective).unwrap();
+            assert_eq!(LexTime(popped.time), expect, "index lost the lex-min time");
+            // Drop everything at epoch 3 mid-drain once.
+            if c.len() == 5 {
+                let removed = c.retain_where(|b| b.time.epoch_of() != 3);
+                assert!(removed.iter().all(|b| b.time.epoch_of() == 3));
+            }
+        }
+        assert_eq!(c.len(), 0);
+        assert_eq!(c.num_batches(), 0);
     }
 
     #[test]

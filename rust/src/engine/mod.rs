@@ -12,12 +12,17 @@
 //!   staging (`send_batch` / `send_batch_at`);
 //! - [`scheduler`]: the deterministic batch-at-a-time event loop and
 //!   failure/rollback primitives (`batch_cap = 1` is the original
-//!   record-at-a-time engine, bit for bit);
+//!   record-at-a-time engine, bit for bit), plus the per-shard-group
+//!   `Worker` loop extracted from it;
 //! - [`sharded`]: the multi-worker layer — per-shard sub-batch routing
-//!   over hash-exchange edge bundles, with determinism preserved.
+//!   over hash-exchange edge bundles, with determinism preserved;
+//! - [`parallel`]: the multi-*threaded* executor — one OS thread per
+//!   shard group, mailbox exchange edges, batched progress deltas, and
+//!   barrier-round notification decisions.
 
 pub mod channel;
 pub mod ctx;
+pub mod parallel;
 pub mod processor;
 pub mod record;
 pub mod scheduler;
@@ -28,4 +33,6 @@ pub use ctx::Ctx;
 pub use processor::{Processor, Statefulness, TimeState};
 pub use record::Record;
 pub use scheduler::{Engine, EventKind, EventReport};
-pub use sharded::{build_procs, shard_of_record, ProcFactory, ShardRouter, ShardedEngine};
+pub use sharded::{
+    build_procs, shard_groups, shard_of_record, ProcFactory, ShardRouter, ShardedEngine,
+};

@@ -1,0 +1,388 @@
+//! Multi-threaded shard execution: one OS thread per shard group.
+//!
+//! [`Engine::run_parallel`] drains the system to quiescence with the
+//! engine *decomposed* into per-group [`WorkerState`]s (see
+//! [`crate::engine::scheduler`]): each worker thread runs its own
+//! scheduler loop over its group's channels, cross-group exchange edges
+//! carry whole [`Batch`]es through per-group mailboxes, and the shared
+//! [`ProgressTracker`] is updated from batched
+//! [`crate::progress::ProgressDeltas`] instead of per-event locking.
+//!
+//! ## Protocol (barrier rounds)
+//!
+//! A drain is a sequence of rounds, each separated by two barriers that
+//! workers and the coordinator (the calling thread) all join:
+//!
+//! 1. **Message phase** — every worker delivers batches from its local
+//!    channels (round-robin, exactly the sequential order restricted to
+//!    its edges), draining its mailbox as it goes, until it is locally
+//!    idle: no deliverable batch and no queued mail. It then deposits its
+//!    accumulated tracker deltas plus a snapshot of its pending
+//!    notification requests and parks at barrier A.
+//! 2. **Decision** — with every worker parked, all sends happen-before
+//!    barrier A, so the coordinator sees a consistent global state. It
+//!    merges all deltas into the tracker and picks one of:
+//!    *continue* (mail is still queued somewhere — a worker parked before
+//!    a late batch arrived), *notify* (no message anywhere is
+//!    deliverable; some pending notifications are provably complete
+//!    against the merged tracker), or *quiesce* (nothing left, or the
+//!    step budget expired). Barrier B publishes the decision.
+//! 3. **Notification phase** — on *notify*, each worker fires its
+//!    eligible notifications in (processor, lexicographic-time) order and
+//!    the next round begins.
+//!
+//! The *notify* precondition — global message quiescence — is exactly the
+//! sequential engine's phase-2 precondition, and firing **all**
+//! simultaneously-eligible notifications in one round is safe: a time
+//! `t₂` proven complete at `p` while a sibling request's capability at
+//! `t₁` was still held cannot be invalidated by firing `t₁` (its sends
+//! are bounded below by the very summaries the completeness proof already
+//! accounted for). Within a shard, delivery order equals the sequential
+//! round-robin restricted to that shard's edges, and each exchange edge
+//! is single-writer FIFO (one source processor, one mailbox queue), so
+//! per-edge delivery order is deterministic; cross-shard interleaving is
+//! not, which is why the test suite compares *canonical* (per-time,
+//! order-quotiented) outputs — byte-identical to the sequential engine's.
+//!
+//! Failure handling composes by construction: a drain always recomposes
+//! the engine before returning (workers are parked and joined), so
+//! failure injection and the Fig. 6 solve/reset run against the ordinary
+//! sequential engine between drains — the pause-drain-rollback protocol
+//! described in `ft/README.md`.
+
+use crate::engine::channel::Batch;
+use crate::engine::scheduler::{Engine, EventReport, WorkerState};
+use crate::graph::{EdgeId, ProcId, Topology};
+use crate::progress::{ProgressDeltas, ProgressTracker};
+use crate::time::Time;
+use std::collections::VecDeque;
+use std::panic::{catch_unwind, resume_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicU64, AtomicU8, Ordering};
+use std::sync::{Barrier, Mutex};
+
+/// Observes every event a worker processes, on the worker's thread (the
+/// FT harness hooks per-shard Table-1 maintenance in here; the plain
+/// engine uses [`NoopObserver`]). The view argument is the worker that
+/// just processed the event — it owns the event's processor, so
+/// checkpoint state, pending requests and sequence counters are all
+/// readable without synchronization.
+pub(crate) trait EventObserver: Send {
+    fn on_event(&mut self, rep: &EventReport, view: &WorkerState);
+}
+
+/// Observer that ignores everything (engine-only drains).
+pub(crate) struct NoopObserver;
+
+impl EventObserver for NoopObserver {
+    fn on_event(&mut self, _rep: &EventReport, _view: &WorkerState) {}
+}
+
+/// Coordinator decisions, published between barriers A and B.
+const DECISION_CONTINUE: u8 = 0;
+const DECISION_NOTIFY: u8 = 1;
+const DECISION_QUIESCE: u8 = 2;
+
+/// Cross-group mailboxes: one locked FIFO per group plus a global
+/// queued count the coordinator reads at barrier A to detect in-flight
+/// exchange traffic. Each edge has a single source processor (hence a
+/// single sending worker), so per-edge FIFO order is preserved
+/// end-to-end.
+struct MailHub {
+    boxes: Vec<Mutex<VecDeque<(EdgeId, Batch)>>>,
+    queued: AtomicU64,
+}
+
+impl MailHub {
+    fn new(ngroups: usize) -> MailHub {
+        MailHub {
+            boxes: (0..ngroups).map(|_| Mutex::new(VecDeque::new())).collect(),
+            queued: AtomicU64::new(0),
+        }
+    }
+
+    fn send(&self, group: usize, e: EdgeId, b: Batch) {
+        self.boxes[group].lock().unwrap().push_back((e, b));
+        self.queued.fetch_add(1, Ordering::SeqCst);
+    }
+
+    /// Move all queued mail for `group` into the worker's channels.
+    fn drain_into(&self, group: usize, w: &mut WorkerState) -> usize {
+        let drained: Vec<(EdgeId, Batch)> = {
+            let mut q = self.boxes[group].lock().unwrap();
+            q.drain(..).collect()
+        };
+        let n = drained.len();
+        if n > 0 {
+            self.queued.fetch_sub(n as u64, Ordering::SeqCst);
+            for (e, b) in drained {
+                w.accept(e, b);
+            }
+        }
+        n
+    }
+
+    fn total_queued(&self) -> u64 {
+        self.queued.load(Ordering::SeqCst)
+    }
+
+    /// Drain every mailbox (post-join spill when a budget expired
+    /// mid-exchange).
+    fn drain_all(&self) -> Vec<(EdgeId, Batch)> {
+        let mut out = Vec::new();
+        for b in &self.boxes {
+            out.extend(b.lock().unwrap().drain(..));
+        }
+        self.queued.store(0, Ordering::SeqCst);
+        out
+    }
+}
+
+/// What a worker hands the coordinator at barrier A: its tracker deltas
+/// and a snapshot of its pending notification requests.
+type Deposit = (ProgressDeltas, Vec<(ProcId, Vec<Time>)>);
+
+/// Shared control state for one drain.
+struct Control {
+    barrier: Barrier,
+    decision: AtomicU8,
+    /// Per-group deposits at barrier A.
+    deposits: Mutex<Vec<Option<Deposit>>>,
+    /// Per-group eligible notifications for a notify round.
+    eligible: Mutex<Vec<Vec<(ProcId, Time)>>>,
+    /// Global event counter (the shared step budget).
+    events: AtomicU64,
+    max_steps: u64,
+    /// A worker panicked; the coordinator aborts the drain so everyone
+    /// unwinds cleanly instead of deadlocking on the barrier.
+    panicked: std::sync::atomic::AtomicBool,
+}
+
+impl Control {
+    fn budget_left(&self) -> bool {
+        self.events.load(Ordering::Relaxed) < self.max_steps
+    }
+}
+
+fn worker_loop<O: EventObserver>(w: &mut WorkerState, obs: &mut O, hub: &MailHub, ctl: &Control) {
+    loop {
+        // Message phase: run until locally idle (drain mail between
+        // deliveries so exchange traffic keeps flowing within a round).
+        loop {
+            let drained = hub.drain_into(w.group, w);
+            let mut worked = false;
+            while ctl.budget_left() {
+                let mut mail = |g: usize, e: EdgeId, b: Batch| hub.send(g, e, b);
+                let Some(rep) = w.deliver_next(&mut mail) else { break };
+                ctl.events.fetch_add(1, Ordering::Relaxed);
+                obs.on_event(&rep, w);
+                worked = true;
+                hub.drain_into(w.group, w);
+            }
+            if drained == 0 && !worked {
+                break;
+            }
+        }
+        // Parking invariant: local channels are empty unless the step
+        // budget expired mid-drain.
+        debug_assert!(
+            !w.has_local_work() || !ctl.budget_left(),
+            "worker parked with deliverable batches and budget remaining"
+        );
+        // Deposit deltas + pending snapshot, then park.
+        {
+            let mut dep = ctl.deposits.lock().unwrap();
+            dep[w.group] = Some((w.take_deltas(), w.pending_snapshot()));
+        }
+        ctl.barrier.wait(); // A: every worker parked; coordinator decides.
+        ctl.barrier.wait(); // B: decision published.
+        match ctl.decision.load(Ordering::SeqCst) {
+            DECISION_CONTINUE => continue,
+            DECISION_QUIESCE => break,
+            _ => {
+                let todo: Vec<(ProcId, Time)> = {
+                    let mut el = ctl.eligible.lock().unwrap();
+                    std::mem::take(&mut el[w.group])
+                };
+                for (p, t) in todo {
+                    let mut mail = |g: usize, e: EdgeId, b: Batch| hub.send(g, e, b);
+                    if let Some(rep) = w.fire_notification(p, t, &mut mail) {
+                        ctl.events.fetch_add(1, Ordering::Relaxed);
+                        obs.on_event(&rep, w);
+                    }
+                }
+            }
+        }
+    }
+}
+
+fn worker_main<O: EventObserver>(w: &mut WorkerState, obs: &mut O, hub: &MailHub, ctl: &Control) {
+    let result = catch_unwind(AssertUnwindSafe(|| worker_loop(w, obs, hub, ctl)));
+    if let Err(payload) = result {
+        // Keep honouring the barrier protocol as a lame duck so the other
+        // threads can exit, then re-raise the panic on join.
+        ctl.panicked.store(true, Ordering::SeqCst);
+        loop {
+            ctl.barrier.wait(); // A
+            ctl.barrier.wait(); // B
+            if ctl.decision.load(Ordering::SeqCst) == DECISION_QUIESCE {
+                break;
+            }
+        }
+        resume_unwind(payload);
+    }
+}
+
+/// One merge-and-decide pass, run by the coordinator between barriers A
+/// and B.
+fn decide_round(
+    tracker: &mut ProgressTracker,
+    topo: &Topology,
+    group_of: &[usize],
+    hub: &MailHub,
+    ctl: &Control,
+) -> u8 {
+    let mut pendings: Vec<(ProcId, Vec<Time>)> = Vec::new();
+    // Merge every worker's deltas into ONE net batch before touching the
+    // tracker: a destination worker may have delivered (−1) a batch whose
+    // send (+1) sits in a different worker's deposit, and only the
+    // cross-worker net is guaranteed non-negative against the tracker.
+    let mut all = ProgressDeltas::new();
+    {
+        let mut dep = ctl.deposits.lock().unwrap();
+        for slot in dep.iter_mut() {
+            if let Some((deltas, pend)) = slot.take() {
+                all.merge(&deltas);
+                pendings.extend(pend);
+            }
+        }
+    }
+    tracker.apply(&all);
+    if ctl.panicked.load(Ordering::SeqCst) || !ctl.budget_left() {
+        return DECISION_QUIESCE;
+    }
+    if hub.total_queued() > 0 {
+        // A worker parked before late mail landed: one more message
+        // round delivers it.
+        return DECISION_CONTINUE;
+    }
+    if pendings.is_empty() {
+        return DECISION_QUIESCE;
+    }
+    // Global message quiescence: decide notifications against the
+    // fully-merged tracker (the sequential phase-2 precondition).
+    let reachable = tracker.reachable(topo);
+    let mut any = false;
+    {
+        let mut el = ctl.eligible.lock().unwrap();
+        for (p, times) in pendings {
+            let fire: Vec<(ProcId, Time)> = times
+                .into_iter()
+                .filter(|t| ProgressTracker::time_complete(&reachable, p, t))
+                .map(|t| (p, t))
+                .collect();
+            if !fire.is_empty() {
+                any = true;
+                el[group_of[p.0 as usize]].extend(fire);
+            }
+        }
+    }
+    if any {
+        DECISION_NOTIFY
+    } else {
+        DECISION_QUIESCE
+    }
+}
+
+fn coordinator_loop(
+    tracker: &mut ProgressTracker,
+    topo: &Topology,
+    group_of: &[usize],
+    hub: &MailHub,
+    ctl: &Control,
+) {
+    loop {
+        ctl.barrier.wait(); // A: workers parked, all sends visible.
+        // A coordinator panic between the barriers (an engine-invariant
+        // assertion, e.g. pointstamp underflow) must not strand workers
+        // at barrier B: publish QUIESCE, release them, then re-raise.
+        let decision = match catch_unwind(AssertUnwindSafe(|| {
+            decide_round(tracker, topo, group_of, hub, ctl)
+        })) {
+            Ok(d) => d,
+            Err(payload) => {
+                ctl.panicked.store(true, Ordering::SeqCst);
+                ctl.decision.store(DECISION_QUIESCE, Ordering::SeqCst);
+                ctl.barrier.wait(); // B
+                resume_unwind(payload);
+            }
+        };
+        ctl.decision.store(decision, Ordering::SeqCst);
+        ctl.barrier.wait(); // B
+        if decision == DECISION_QUIESCE {
+            break;
+        }
+    }
+}
+
+/// Drain `engine` to quiescence (or the step budget) using `ngroups`
+/// worker threads, invoking `observers[g]` for every event group `g`
+/// processes. Returns the number of events processed. The engine is
+/// decomposed for the duration of the call and recomposed before it
+/// returns — callers see an ordinary sequential engine afterwards.
+pub(crate) fn drive_parallel<O: EventObserver>(
+    engine: &mut Engine,
+    group_of: &[usize],
+    ngroups: usize,
+    max_steps: usize,
+    observers: &mut [O],
+) -> usize {
+    assert_eq!(observers.len(), ngroups, "one observer per worker group");
+    let before = engine.events_processed();
+    let mut workers = engine.decompose(group_of, ngroups);
+    let hub = MailHub::new(ngroups);
+    let ctl = Control {
+        barrier: Barrier::new(ngroups + 1),
+        decision: AtomicU8::new(DECISION_CONTINUE),
+        deposits: Mutex::new((0..ngroups).map(|_| None).collect()),
+        eligible: Mutex::new(vec![Vec::new(); ngroups]),
+        events: AtomicU64::new(0),
+        max_steps: max_steps as u64,
+        panicked: std::sync::atomic::AtomicBool::new(false),
+    };
+    {
+        let (tracker, topo) = engine.coordinator_parts();
+        std::thread::scope(|s| {
+            for (w, obs) in workers.iter_mut().zip(observers.iter_mut()) {
+                let (hub, ctl) = (&hub, &ctl);
+                s.spawn(move || worker_main(w, obs, hub, ctl));
+            }
+            coordinator_loop(tracker, &topo, group_of, &hub, &ctl);
+        });
+    }
+    engine.recompose(workers);
+    // Budget-expired drains may leave exchange traffic in flight; the
+    // sends are already accounted in the tracker, so requeue them as-is.
+    for (e, b) in hub.drain_all() {
+        engine.requeue_accounted(e, b);
+    }
+    (engine.events_processed() - before) as usize
+}
+
+impl Engine {
+    /// Drain to quiescence with one OS thread per worker group
+    /// (`group_of[p]` assigns each processor; see
+    /// [`crate::engine::shard_groups`] for the sharded assignment).
+    /// `threads <= 1` falls back to the sequential loop. Returns the
+    /// number of events processed.
+    pub fn run_parallel(&mut self, group_of: &[usize], threads: usize, max_steps: usize) -> usize {
+        if threads <= 1 {
+            let mut n = 0;
+            while n < max_steps && self.step().is_some() {
+                n += 1;
+            }
+            return n;
+        }
+        let mut observers: Vec<NoopObserver> = (0..threads).map(|_| NoopObserver).collect();
+        drive_parallel(self, group_of, threads, max_steps, &mut observers)
+    }
+}

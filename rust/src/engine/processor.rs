@@ -32,9 +32,14 @@ pub enum Statefulness {
 }
 
 /// A dataflow processor. Object-safe; the engine owns `Box<dyn Processor>`.
-/// (No `Send` bound: the engine is single-threaded, and the XLA-backed
-/// operators hold PJRT handles that are deliberately not `Send`.)
-pub trait Processor {
+///
+/// `Send` is a supertrait: the parallel engine moves each shard group's
+/// processors onto its own OS thread for the duration of a drain, so
+/// every operator implementation must be transferable across threads.
+/// (Each processor is still *owned* by exactly one worker at a time —
+/// `Sync` is not required, and handlers never run concurrently for the
+/// same processor.)
+pub trait Processor: Send {
     /// Deliver a message on local input `port` at `time`.
     fn on_message(&mut self, port: usize, time: Time, data: Record, ctx: &mut Ctx);
 

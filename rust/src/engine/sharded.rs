@@ -48,16 +48,20 @@ pub fn shard_of_record(r: &Record, fanout: usize) -> usize {
     match r {
         Record::Kv { key, .. } => key.rem_euclid(fanout as i64) as usize,
         Record::Int(i) => i.rem_euclid(fanout as i64) as usize,
-        Record::Text(s) => {
-            let mut h: u64 = 0xcbf29ce484222325;
-            for b in s.as_bytes() {
-                h ^= *b as u64;
-                h = h.wrapping_mul(0x100000001b3);
-            }
-            (h % fanout as u64) as usize
-        }
+        Record::Text(s) => (crate::util::hash::fnv1a(s.as_bytes()) % fanout as u64) as usize,
         Record::Unit | Record::Tensor(_) => 0,
     }
+}
+
+/// Assign each physical processor of a [`ShardPlan`] to one of `threads`
+/// worker groups for parallel execution: shard `s` of any sharded vertex
+/// runs in group `s % threads` (so sibling shards spread across threads
+/// and co-indexed shards of different vertices share one — keeping a
+/// shard's whole per-key pipeline on one thread in the common aligned
+/// layout), and unsharded vertices (sources, collectors) land in group 0.
+pub fn shard_groups(plan: &ShardPlan, threads: usize) -> Vec<usize> {
+    let t = threads.max(1);
+    plan.topo.proc_ids().map(|p| plan.logical_of(p).1 % t).collect()
 }
 
 /// Wraps one shard's operator, translating between logical and physical
@@ -277,6 +281,15 @@ impl ShardedEngine {
 
     pub fn run_to_quiescence(&mut self, max_steps: usize) -> Vec<EventReport> {
         self.engine.run_to_quiescence(max_steps)
+    }
+
+    /// Drain to quiescence with one OS thread per shard group (see
+    /// [`shard_groups`] for the assignment and
+    /// [`crate::engine::parallel`] for the protocol). `threads <= 1`
+    /// falls back to the sequential loop. Returns events processed.
+    pub fn run_to_quiescence_parallel(&mut self, threads: usize, max_steps: usize) -> usize {
+        let groups = shard_groups(&self.plan, threads);
+        self.engine.run_parallel(&groups, threads.max(1), max_steps)
     }
 
     /// Crash shard `s` of logical vertex `v` (engine-level; the FT

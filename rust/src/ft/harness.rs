@@ -18,7 +18,18 @@
 //! structure is a *frontier of times* or a per-time count — none of them
 //! distinguishes records within a time — and it is where batching pays on
 //! the durable path.
+//!
+//! The observation path is written against the [`FtView`] trait rather
+//! than the engine directly, because it runs in two regimes: the
+//! sequential [`FtSystem::step`] loop, and — under
+//! [`FtSystem::run_to_quiescence_parallel`] — **per worker thread**, with
+//! each worker owning the [`ProcFt`] entries of its shard group and
+//! sharing only the thread-safe [`Store`] handle. Per-shard metadata is
+//! therefore maintained with no locking at all: every Table-1 structure
+//! belongs to exactly one processor, every processor to exactly one
+//! worker, and the store serializes its own writes.
 
+use crate::engine::scheduler::WorkerState;
 use crate::engine::{Delivery, Engine, EventKind, EventReport, Processor, Record};
 use crate::frontier::Frontier;
 use crate::ft::meta::{CkptMeta, LogEntry, StoredCheckpoint};
@@ -144,6 +155,37 @@ impl ProcFt {
     }
 }
 
+/// The engine state a metadata observation needs to read about the
+/// event's processor: checkpoint state, pending notification requests.
+/// Implemented by the sequential [`Engine`] and by the parallel
+/// [`WorkerState`] (which owns the processor outright during a drain).
+pub(crate) trait FtView {
+    /// Selective checkpoint state S(p, f).
+    fn proc_state(&self, p: ProcId, f: &Frontier) -> Vec<u8>;
+    /// Pending notification requests at `p`.
+    fn proc_pending(&self, p: ProcId) -> Vec<Time>;
+}
+
+impl FtView for Engine {
+    fn proc_state(&self, p: ProcId, f: &Frontier) -> Vec<u8> {
+        self.proc(p).checkpoint_upto(f)
+    }
+
+    fn proc_pending(&self, p: ProcId) -> Vec<Time> {
+        self.pending_notifications(p)
+    }
+}
+
+impl FtView for WorkerState {
+    fn proc_state(&self, p: ProcId, f: &Frontier) -> Vec<u8> {
+        self.proc_ref(p).checkpoint_upto(f)
+    }
+
+    fn proc_pending(&self, p: ProcId) -> Vec<Time> {
+        self.pending_of(p)
+    }
+}
+
 /// Counters the policy benches report.
 #[derive(Clone, Debug, Default)]
 pub struct FtStats {
@@ -168,6 +210,284 @@ pub struct FtStats {
     pub procs_rolled_back: u64,
     /// Processors left untouched at ⊤ across all recoveries.
     pub procs_untouched: u64,
+}
+
+impl FtStats {
+    /// Fold another counter set in (every field is additive — used to
+    /// merge per-worker stats after a parallel drain).
+    pub fn merge(&mut self, o: &FtStats) {
+        self.checkpoints_taken += o.checkpoints_taken;
+        self.log_entries += o.log_entries;
+        self.log_records += o.log_records;
+        self.history_events += o.history_events;
+        self.events_observed += o.events_observed;
+        self.records_observed += o.records_observed;
+        self.recoveries += o.recoveries;
+        self.messages_replayed += o.messages_replayed;
+        self.procs_rolled_back += o.procs_rolled_back;
+        self.procs_untouched += o.procs_untouched;
+    }
+}
+
+/// Frontier covering everything delivered so far at an eager (seq
+/// domain) processor: the last checkpoint's frontier widened by every
+/// delivered / notified / input time since.
+fn eager_frontier_of(ft: &ProcFt) -> Frontier {
+    let mut f = ft.chain.last().map(|c| c.meta.f.clone()).unwrap_or(Frontier::Bottom);
+    for times in ft.delivered_new.values() {
+        for lt in times {
+            f.insert(lt.0);
+        }
+    }
+    for lt in &ft.notified_new {
+        f.insert(lt.0);
+    }
+    for lt in &ft.input_new {
+        f.insert(lt.0);
+    }
+    f
+}
+
+fn persist_history(store: &Store, ft: &mut ProcFt, proc: u32, ev: HistoryEvent) {
+    let tag = ft.fresh_key();
+    store.put(Key { proc, kind: Kind::HistoryEvent, tag }, ev.to_bytes());
+    ft.history.push(ev);
+}
+
+/// Observe one event report for its processor: update deltas, logs,
+/// histories, and run the policy triggers. One delivered batch is one
+/// event. Runs on whichever thread processed the event — `ft` is that
+/// processor's state, `view` the engine or worker that owns it.
+fn observe_event<V: FtView>(
+    topo: &Topology,
+    ft: &mut ProcFt,
+    store: &Store,
+    stats: &mut FtStats,
+    rep: &EventReport,
+    view: &V,
+) {
+    stats.events_observed += 1;
+    let (proc, evt_time) = match &rep.kind {
+        EventKind::Message { proc, edge, time, len, data } => {
+            stats.records_observed += *len as u64;
+            if ft.policy.tracks_metadata() {
+                ft.delivered_new.entry(*edge).or_default().insert(LexTime(*time));
+            }
+            if ft.policy.records_history() {
+                debug_assert_eq!(
+                    data.len(),
+                    *len,
+                    "full-history policies require event-data capture"
+                );
+                let ev = HistoryEvent::Message { edge: *edge, time: *time, data: data.clone() };
+                persist_history(store, ft, proc.0, ev);
+                stats.history_events += 1;
+            }
+            (*proc, *time)
+        }
+        EventKind::Notification { proc, time } => {
+            if ft.policy.tracks_metadata() {
+                ft.notified_new.insert(LexTime(*time));
+            }
+            if ft.policy.records_history() {
+                persist_history(store, ft, proc.0, HistoryEvent::Notification { time: *time });
+                stats.history_events += 1;
+            }
+            ft.completions += 1;
+            (*proc, *time)
+        }
+        EventKind::Input { proc, time, data } => {
+            if ft.policy.tracks_metadata() {
+                ft.input_new.insert(LexTime(*time));
+            }
+            if ft.policy.records_history() {
+                let ev = HistoryEvent::Input { time: *time, data: data.clone() };
+                persist_history(store, ft, proc.0, ev);
+                stats.history_events += 1;
+            }
+            (*proc, *time)
+        }
+    };
+    // Sends: one batch = one tracking/log unit.
+    let logs = ft.policy.logs_outputs();
+    let tracks = ft.policy.tracks_metadata();
+    for (e, batch) in &rep.sent {
+        // Real sends are never empty (the flush paths drop empty staged
+        // batches), so an empty batch here means the engine was built
+        // without sent-capture — which the FtSystem constructors enable.
+        debug_assert!(
+            !batch.is_empty(),
+            "FT observation requires Engine::set_sent_capture(true)"
+        );
+        *ft.sent_total.entry(*e).or_insert(0) += batch.len() as u64;
+        if !tracks {
+            continue;
+        }
+        if topo.projection(*e).is_per_checkpoint() {
+            // φ on per-checkpoint edges is a message *count*; batches
+            // into seq domains are engine-split singletons, but stay
+            // robust to multi-record batches here.
+            for _ in 0..batch.len() {
+                ft.sent_events.entry(*e).or_default().push(evt_time);
+            }
+        }
+        if logs {
+            let entry = LogEntry { edge: *e, event_time: evt_time, batch: batch.clone() };
+            let tag = ft.fresh_key();
+            store.put_log(
+                Key { proc: proc.0, kind: Kind::LogEntry, tag },
+                entry.to_bytes(),
+                entry.records() as u64,
+            );
+            stats.log_records += entry.records() as u64;
+            ft.log.push(entry);
+            stats.log_entries += 1;
+        } else {
+            // D̄ is a frontier of message times; the batch's records
+            // all share one, so a single pair covers them.
+            ft.discarded_new.entry(*e).or_default().push((evt_time, batch.time));
+        }
+    }
+    // Policy triggers.
+    match ft.policy {
+        Policy::Eager => {
+            // Checkpoint the state reflecting everything delivered so
+            // far — in the seq domain this frontier is trivially
+            // complete (each (e,s) arrives exactly once).
+            let f = eager_frontier_of(ft);
+            checkpoint_proc(topo, ft, store, stats, proc, f, view);
+        }
+        Policy::Lazy { every, .. } => {
+            if matches!(rep.kind, EventKind::Notification { .. }) && ft.completions % every == 0 {
+                // Selective checkpoint: previous frontier ∪ ↓t.
+                let mut f =
+                    ft.chain.last().map(|c| c.meta.f.clone()).unwrap_or(Frontier::Bottom);
+                f.insert(evt_time);
+                checkpoint_proc(topo, ft, store, stats, proc, f, view);
+            }
+        }
+        _ => {}
+    }
+}
+
+/// Take a selective checkpoint of `p` at frontier `f` (must extend the
+/// previous checkpoint's frontier; constraint 1 of §3.5 — all times in
+/// `f` complete at `p` — is the caller's responsibility, upheld by the
+/// policy triggers). Worker-safe: touches only `p`'s own state and the
+/// shared store.
+fn checkpoint_proc<V: FtView>(
+    topo: &Topology,
+    ft: &mut ProcFt,
+    store: &Store,
+    stats: &mut FtStats,
+    p: ProcId,
+    f: Frontier,
+    view: &V,
+) {
+    let in_edges = topo.in_edges(p).to_vec();
+    let out_edges = topo.out_edges(p).to_vec();
+    let base = ft.base_meta(&in_edges, &out_edges);
+    assert!(
+        base.f.is_subset(&f),
+        "checkpoint frontiers must ascend: {} ⊄ {f}",
+        base.f
+    );
+
+    // M̄(d, f) = M̄(d, base) ∪ ↓{delivered ∈ f}.
+    let mut m_bar = base.m_bar.clone();
+    for (&d, times) in &mut ft.delivered_new {
+        let fold: Vec<Time> = times.iter().map(|lt| lt.0).filter(|t| f.contains(t)).collect();
+        if !fold.is_empty() {
+            let cur = m_bar.entry(d).or_insert(Frontier::Bottom);
+            let mut nf = cur.clone();
+            for t in &fold {
+                nf.insert(*t);
+            }
+            *cur = nf;
+            times.retain(|lt| !f.contains(&lt.0));
+        }
+    }
+    // N̄(p, f).
+    let mut n_bar = base.n_bar.clone();
+    let fold: Vec<Time> =
+        ft.notified_new.iter().map(|lt| lt.0).filter(|t| f.contains(t)).collect();
+    for t in &fold {
+        n_bar.insert(*t);
+    }
+    ft.notified_new.retain(|lt| !f.contains(&lt.0));
+    ft.input_new.retain(|lt| !f.contains(&lt.0));
+    // D̄(e, f): unlogged sends caused by events in f.
+    let mut d_bar = base.d_bar.clone();
+    for (&e, pairs) in &mut ft.discarded_new {
+        let cur = d_bar.entry(e).or_insert(Frontier::Bottom);
+        let mut nf = cur.clone();
+        for (evt, msg_t) in pairs.iter().filter(|(evt, _)| f.contains(evt)) {
+            let _ = evt;
+            nf.insert(*msg_t);
+        }
+        *cur = nf;
+        pairs.retain(|(evt, _)| !f.contains(evt));
+    }
+    // φ(e)(f): static projections computed; per-checkpoint ones are
+    // seq watermarks = sends caused by events in f (prefix property
+    // holds for the chain policies' checkpoints).
+    let mut phi = BTreeMap::new();
+    for &e in &out_edges {
+        let proj = topo.projection(e);
+        let fr = match proj.apply(&f) {
+            Some(fr) => fr,
+            None => {
+                let base_count = base.phi_of(e).watermark(e);
+                let new = ft
+                    .sent_events
+                    .get(&e)
+                    .map(|v| v.iter().filter(|t| f.contains(t)).count() as u64)
+                    .unwrap_or(0);
+                if let Some(v) = ft.sent_events.get_mut(&e) {
+                    v.retain(|t| !f.contains(t));
+                }
+                Frontier::seq_watermarks([(e, base_count + new)])
+            }
+        };
+        phi.insert(e, fr);
+    }
+    let meta = CkptMeta { f: f.clone(), n_bar, m_bar, d_bar, phi };
+    let state = view.proc_state(p, &f);
+    let pending_notify: Vec<Time> =
+        view.proc_pending(p).into_iter().filter(|t| f.contains(t)).collect();
+    let stored = StoredCheckpoint { meta, state, pending_notify };
+    // Persist state then Ξ (the §4.2 protocol: metadata reaches the
+    // monitor only once everything is acknowledged).
+    let tag = ft.fresh_key();
+    store.put(Key { proc: p.0, kind: Kind::State, tag }, stored.state.clone());
+    store.put(Key { proc: p.0, kind: Kind::Meta, tag }, stored.meta.to_bytes());
+    ft.chain.push(stored);
+    stats.checkpoints_taken += 1;
+}
+
+/// Per-worker FT observer for parallel drains: owns the [`ProcFt`]
+/// entries of its shard group, shares the store handle, and accumulates
+/// private stats merged back after the join.
+pub(crate) struct FtWorkerObserver {
+    topo: Arc<Topology>,
+    ft: Vec<Option<ProcFt>>,
+    store: Store,
+    stats: FtStats,
+}
+
+impl crate::engine::parallel::EventObserver for FtWorkerObserver {
+    fn on_event(&mut self, rep: &EventReport, view: &WorkerState) {
+        let proc = match &rep.kind {
+            EventKind::Message { proc, .. }
+            | EventKind::Notification { proc, .. }
+            | EventKind::Input { proc, .. } => *proc,
+        };
+        debug_assert!(view.owns(proc), "observer and worker group disagree on ownership");
+        let ft = self.ft[proc.0 as usize]
+            .as_mut()
+            .expect("event observed at a processor outside this worker's group");
+        observe_event(&self.topo, ft, &self.store, &mut self.stats, rep, view);
+    }
 }
 
 /// Engine + fault-tolerance harness: the top-level object applications
@@ -212,14 +532,17 @@ impl FtSystem {
         // edges are allowed; the solver then uses the maximally
         // conservative φ = ∅ for mid-range frontiers (§3.2). Policies
         // that need exact seq counts (Eager) record them per checkpoint.
-        let ft = policies.into_iter().map(ProcFt::new).collect();
-        FtSystem {
-            engine: Engine::with_batch_cap(topo.clone(), procs, delivery, batch_cap),
-            ft,
-            store,
-            topo,
-            stats: FtStats::default(),
+        let ft: Vec<ProcFt> = policies.into_iter().map(ProcFt::new).collect();
+        let mut engine = Engine::with_batch_cap(topo.clone(), procs, delivery, batch_cap);
+        // Only full-history policies need the delivered payload echoed in
+        // reports; everyone else rides the count-only hot path. Sent
+        // payloads are always captured under the harness — logging and D̄
+        // maintenance read them.
+        if ft.iter().any(|f| f.policy.records_history()) {
+            engine.set_event_data_capture(true);
         }
+        engine.set_sent_capture(true);
+        FtSystem { engine, ft, store, topo, stats: FtStats::default() }
     }
 
     /// Build a **sharded** system from a [`ShardPlan`]: one wrapped
@@ -301,113 +624,68 @@ impl FtSystem {
     /// Observe an event report: update deltas, logs, histories, and run
     /// the policy triggers. One delivered batch is one event.
     fn observe(&mut self, rep: &EventReport) {
-        self.stats.events_observed += 1;
-        let (proc, evt_time) = match &rep.kind {
-            EventKind::Message { proc, edge, time, data } => {
-                self.stats.records_observed += data.len() as u64;
-                let ft = &mut self.ft[proc.0 as usize];
-                if ft.policy.tracks_metadata() {
-                    ft.delivered_new.entry(*edge).or_default().insert(LexTime(*time));
-                }
-                if ft.policy.records_history() {
-                    let ev = HistoryEvent::Message { edge: *edge, time: *time, data: data.clone() };
-                    Self::persist_history(&self.store, ft, proc.0, ev);
-                    self.stats.history_events += 1;
-                }
-                (*proc, *time)
-            }
-            EventKind::Notification { proc, time } => {
-                let ft = &mut self.ft[proc.0 as usize];
-                if ft.policy.tracks_metadata() {
-                    ft.notified_new.insert(LexTime(*time));
-                }
-                if ft.policy.records_history() {
-                    Self::persist_history(
-                        &self.store,
-                        ft,
-                        proc.0,
-                        HistoryEvent::Notification { time: *time },
-                    );
-                    self.stats.history_events += 1;
-                }
-                ft.completions += 1;
-                (*proc, *time)
-            }
-            EventKind::Input { proc, time, data } => {
-                let ft = &mut self.ft[proc.0 as usize];
-                if ft.policy.tracks_metadata() {
-                    ft.input_new.insert(LexTime(*time));
-                }
-                if ft.policy.records_history() {
-                    let ev = HistoryEvent::Input { time: *time, data: data.clone() };
-                    Self::persist_history(&self.store, ft, proc.0, ev);
-                    self.stats.history_events += 1;
-                }
-                (*proc, *time)
-            }
+        let proc = match &rep.kind {
+            EventKind::Message { proc, .. }
+            | EventKind::Notification { proc, .. }
+            | EventKind::Input { proc, .. } => *proc,
         };
-        // Sends: one batch = one tracking/log unit.
-        let logs = self.ft[proc.0 as usize].policy.logs_outputs();
-        let tracks = self.ft[proc.0 as usize].policy.tracks_metadata();
-        for (e, batch) in &rep.sent {
-            let ft = &mut self.ft[proc.0 as usize];
-            *ft.sent_total.entry(*e).or_insert(0) += batch.len() as u64;
-            if !tracks {
-                continue;
-            }
-            if self.topo.projection(*e).is_per_checkpoint() {
-                // φ on per-checkpoint edges is a message *count*; batches
-                // into seq domains are engine-split singletons, but stay
-                // robust to multi-record batches here.
-                for _ in 0..batch.len() {
-                    ft.sent_events.entry(*e).or_default().push(evt_time);
-                }
-            }
-            if logs {
-                let entry = LogEntry { edge: *e, event_time: evt_time, batch: batch.clone() };
-                let tag = ft.fresh_key();
-                self.store.put_log(
-                    Key { proc: proc.0, kind: Kind::LogEntry, tag },
-                    entry.to_bytes(),
-                    entry.records() as u64,
-                );
-                self.stats.log_records += entry.records() as u64;
-                ft.log.push(entry);
-                self.stats.log_entries += 1;
-            } else {
-                // D̄ is a frontier of message times; the batch's records
-                // all share one, so a single pair covers them.
-                ft.discarded_new.entry(*e).or_default().push((evt_time, batch.time));
-            }
-        }
-        // Policy triggers.
-        match self.ft[proc.0 as usize].policy {
-            Policy::Eager => {
-                // Checkpoint the state reflecting everything delivered so
-                // far — in the seq domain this frontier is trivially
-                // complete (each (e,s) arrives exactly once).
-                let f = self.eager_frontier(proc);
-                self.checkpoint_now(proc, f);
-            }
-            Policy::Lazy { every, .. } => {
-                if matches!(rep.kind, EventKind::Notification { .. })
-                    && self.ft[proc.0 as usize].completions % every == 0
-                {
-                    // Selective checkpoint: previous frontier ∪ ↓t.
-                    let base = self.base_frontier(proc);
-                    let mut f = base;
-                    f.insert(evt_time);
-                    self.checkpoint_now(proc, f);
-                }
-            }
-            _ => {}
-        }
+        observe_event(
+            &self.topo,
+            &mut self.ft[proc.0 as usize],
+            &self.store,
+            &mut self.stats,
+            rep,
+            &self.engine,
+        );
     }
 
-    fn persist_history(store: &Store, ft: &mut ProcFt, proc: u32, ev: HistoryEvent) {
-        let tag = ft.fresh_key();
-        store.put(Key { proc, kind: Kind::HistoryEvent, tag }, ev.to_bytes());
-        ft.history.push(ev);
+    /// Drain to quiescence with one OS thread per worker group
+    /// (`group_of[p]` assigns processors; see
+    /// [`crate::engine::shard_groups`]). Each worker carries its group's
+    /// [`ProcFt`] state and observes its own events inline — logs,
+    /// histories and policy-triggered checkpoints are written on the
+    /// worker thread at the event, exactly as in the sequential loop.
+    /// Per-worker stats merge back afterwards. `threads <= 1` falls back
+    /// to [`FtSystem::run_to_quiescence`]. Returns events processed.
+    pub fn run_to_quiescence_parallel(
+        &mut self,
+        group_of: &[usize],
+        threads: usize,
+        max_steps: usize,
+    ) -> usize {
+        if threads <= 1 {
+            return self.run_to_quiescence(max_steps);
+        }
+        let np = self.topo.num_procs();
+        assert_eq!(group_of.len(), np, "one group per processor");
+        let mut observers: Vec<FtWorkerObserver> = (0..threads)
+            .map(|_| FtWorkerObserver {
+                topo: self.topo.clone(),
+                ft: (0..np).map(|_| None).collect(),
+                store: self.store.clone(),
+                stats: FtStats::default(),
+            })
+            .collect();
+        for (pi, ft) in self.ft.iter_mut().enumerate() {
+            observers[group_of[pi]].ft[pi] =
+                Some(std::mem::replace(ft, ProcFt::new(Policy::Ephemeral)));
+        }
+        let events = crate::engine::parallel::drive_parallel(
+            &mut self.engine,
+            group_of,
+            threads,
+            max_steps,
+            &mut observers,
+        );
+        for obs in observers {
+            self.stats.merge(&obs.stats);
+            for (pi, slot) in obs.ft.into_iter().enumerate() {
+                if let Some(ft) = slot {
+                    self.ft[pi] = ft;
+                }
+            }
+        }
+        events
     }
 
     /// The frontier of the newest checkpoint (∅ if none).
@@ -415,118 +693,20 @@ impl FtSystem {
         self.ft[p.0 as usize].chain.last().map(|c| c.meta.f.clone()).unwrap_or(Frontier::Bottom)
     }
 
-    /// Frontier covering everything delivered so far at an eager (seq
-    /// domain) processor: per-in-edge delivered watermarks.
-    fn eager_frontier(&self, p: ProcId) -> Frontier {
-        let ft = &self.ft[p.0 as usize];
-        let base = self.base_frontier(p);
-        let mut f = base;
-        for (e, times) in &ft.delivered_new {
-            for lt in times {
-                let _ = e;
-                f.insert(lt.0);
-            }
-        }
-        for lt in &ft.notified_new {
-            f.insert(lt.0);
-        }
-        for lt in &ft.input_new {
-            f.insert(lt.0);
-        }
-        f
-    }
-
     /// Take a selective checkpoint of `p` at frontier `f` (must extend the
     /// previous checkpoint's frontier; constraint 1 of §3.5 — all times in
     /// `f` complete at `p` — is the caller's responsibility, upheld by the
     /// policy triggers).
     pub fn checkpoint_now(&mut self, p: ProcId, f: Frontier) {
-        let in_edges = self.topo.in_edges(p).to_vec();
-        let out_edges = self.topo.out_edges(p).to_vec();
-        let base = self.ft[p.0 as usize].base_meta(&in_edges, &out_edges);
-        assert!(
-            base.f.is_subset(&f),
-            "checkpoint frontiers must ascend: {} ⊄ {f}",
-            base.f
+        checkpoint_proc(
+            &self.topo,
+            &mut self.ft[p.0 as usize],
+            &self.store,
+            &mut self.stats,
+            p,
+            f,
+            &self.engine,
         );
-        let ft = &mut self.ft[p.0 as usize];
-
-        // M̄(d, f) = M̄(d, base) ∪ ↓{delivered ∈ f}.
-        let mut m_bar = base.m_bar.clone();
-        for (&d, times) in &mut ft.delivered_new {
-            let fold: Vec<Time> =
-                times.iter().map(|lt| lt.0).filter(|t| f.contains(t)).collect();
-            if !fold.is_empty() {
-                let cur = m_bar.entry(d).or_insert(Frontier::Bottom);
-                let mut nf = cur.clone();
-                for t in &fold {
-                    nf.insert(*t);
-                }
-                *cur = nf;
-                times.retain(|lt| !f.contains(&lt.0));
-            }
-        }
-        // N̄(p, f).
-        let mut n_bar = base.n_bar.clone();
-        let fold: Vec<Time> =
-            ft.notified_new.iter().map(|lt| lt.0).filter(|t| f.contains(t)).collect();
-        for t in &fold {
-            n_bar.insert(*t);
-        }
-        ft.notified_new.retain(|lt| !f.contains(&lt.0));
-        ft.input_new.retain(|lt| !f.contains(&lt.0));
-        // D̄(e, f): unlogged sends caused by events in f.
-        let mut d_bar = base.d_bar.clone();
-        for (&e, pairs) in &mut ft.discarded_new {
-            let cur = d_bar.entry(e).or_insert(Frontier::Bottom);
-            let mut nf = cur.clone();
-            for (evt, msg_t) in pairs.iter().filter(|(evt, _)| f.contains(evt)) {
-                let _ = evt;
-                nf.insert(*msg_t);
-            }
-            *cur = nf;
-            pairs.retain(|(evt, _)| !f.contains(evt));
-        }
-        // φ(e)(f): static projections computed; per-checkpoint ones are
-        // seq watermarks = sends caused by events in f (prefix property
-        // holds for the chain policies' checkpoints).
-        let mut phi = BTreeMap::new();
-        for &e in &out_edges {
-            let proj = self.topo.projection(e);
-            let fr = match proj.apply(&f) {
-                Some(fr) => fr,
-                None => {
-                    let base_count = base.phi_of(e).watermark(e);
-                    let new = ft
-                        .sent_events
-                        .get(&e)
-                        .map(|v| v.iter().filter(|t| f.contains(t)).count() as u64)
-                        .unwrap_or(0);
-                    if let Some(v) = ft.sent_events.get_mut(&e) {
-                        v.retain(|t| !f.contains(t));
-                    }
-                    Frontier::seq_watermarks([(e, base_count + new)])
-                }
-            };
-            phi.insert(e, fr);
-        }
-        let meta = CkptMeta { f: f.clone(), n_bar, m_bar, d_bar, phi };
-        let state = self.engine.proc(p).checkpoint_upto(&f);
-        let pending_notify: Vec<Time> = self
-            .engine
-            .pending_notifications(p)
-            .into_iter()
-            .filter(|t| f.contains(t))
-            .collect();
-        let stored = StoredCheckpoint { meta, state, pending_notify };
-        // Persist state then Ξ (the §4.2 protocol: metadata reaches the
-        // monitor only once everything is acknowledged).
-        let ft = &mut self.ft[p.0 as usize];
-        let tag = ft.fresh_key();
-        self.store.put(Key { proc: p.0, kind: Kind::State, tag }, stored.state.clone());
-        self.store.put(Key { proc: p.0, kind: Kind::Meta, tag }, stored.meta.to_bytes());
-        ft.chain.push(stored);
-        self.stats.checkpoints_taken += 1;
     }
 
     /// The live pseudo-checkpoint Ξ(p, ⊤) for a non-failed chain

@@ -21,6 +21,20 @@
 //! destination restored to `f < ⊤` gets its queue rebuilt purely from
 //! logs/replay (valid checkpoints are complete, so nothing inside `f`
 //! can have been in flight).
+//!
+//! **Pause-drain-rollback under parallel execution.** When the system
+//! runs multi-threaded ([`FtSystem::run_to_quiescence_parallel`]), every
+//! drain recomposes the engine before returning: workers park at the
+//! final barrier, their channels, processors, per-shard FT metadata and
+//! progress deltas all merge back, and the threads join. Failure
+//! injection and this module's solve/reset therefore always execute
+//! against the ordinary sequential engine — the Fig. 6 plan is computed
+//! and applied "while workers are parked", with no concurrent mutation
+//! possible by construction. Replays enqueue through the
+//! coalescing-bypass path ([`crate::engine::Engine::replay_batch`]), so
+//! the rebuilt queues have batch boundaries that are a deterministic
+//! function of the durable log — a *second* failure during recovery (or
+//! the next parallel drain) observes the same boundaries as the first.
 
 use crate::engine::Batch;
 use crate::frontier::Frontier;

@@ -22,6 +22,17 @@
 //!   so the Fig. 6 solver computes per-shard rollback plans and a
 //!   single-shard failure recovers only that shard's key range
 //!   (`ft/README.md` documents the model);
+//! - a **parallel multi-threaded executor** ([`engine::parallel`]): one
+//!   OS thread per shard group, each running its own scheduler loop over
+//!   its local channels, with cross-shard exchange carried through
+//!   mailboxes and the shared pointstamp tracker updated from batched
+//!   deltas at barriers. Notifications fire only at global message
+//!   quiescence (the sequential phase-2 precondition), per-shard
+//!   delivery order equals the sequential round-robin restricted to the
+//!   shard, and a drain always recomposes the sequential engine before
+//!   returning — so failure injection and recovery run unchanged while
+//!   workers are parked (pause-drain-rollback; `--threads` on the
+//!   `falkirk shard` CLI, `threads` in `ShardedConfig`);
 //! - the paper's fault-tolerance framework: logical-time frontiers
 //!   ([`frontier`]), per-edge time-domain projections φ(e) ([`graph`]),
 //!   checkpoint/log policies and Table-1 metadata, selective rollback, the

@@ -36,9 +36,9 @@ impl Processor for Source {
 }
 
 /// Apply a pure function to every record.
-pub struct Map<F: FnMut(Record) -> Record>(pub F);
+pub struct Map<F: FnMut(Record) -> Record + Send>(pub F);
 
-impl<F: FnMut(Record) -> Record> Processor for Map<F> {
+impl<F: FnMut(Record) -> Record + Send> Processor for Map<F> {
     fn on_message(&mut self, _port: usize, _t: Time, d: Record, ctx: &mut Ctx) {
         ctx.send(0, (self.0)(d));
     }
@@ -49,9 +49,9 @@ impl<F: FnMut(Record) -> Record> Processor for Map<F> {
 }
 
 /// Keep only records satisfying a predicate.
-pub struct Filter<F: FnMut(&Record) -> bool>(pub F);
+pub struct Filter<F: FnMut(&Record) -> bool + Send>(pub F);
 
-impl<F: FnMut(&Record) -> bool> Processor for Filter<F> {
+impl<F: FnMut(&Record) -> bool + Send> Processor for Filter<F> {
     fn on_message(&mut self, _port: usize, _t: Time, d: Record, ctx: &mut Ctx) {
         if (self.0)(&d) {
             ctx.send(0, d);
@@ -65,9 +65,9 @@ impl<F: FnMut(&Record) -> bool> Processor for Filter<F> {
 }
 
 /// Expand each record into zero or more records.
-pub struct FlatMap<F: FnMut(Record) -> Vec<Record>>(pub F);
+pub struct FlatMap<F: FnMut(Record) -> Vec<Record> + Send>(pub F);
 
-impl<F: FnMut(Record) -> Vec<Record>> Processor for FlatMap<F> {
+impl<F: FnMut(Record) -> Vec<Record> + Send> Processor for FlatMap<F> {
     fn on_message(&mut self, _port: usize, _t: Time, d: Record, ctx: &mut Ctx) {
         for r in (self.0)(d) {
             ctx.send(0, r);

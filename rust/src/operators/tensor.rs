@@ -15,19 +15,22 @@ use crate::engine::{Ctx, Processor, Record, Statefulness, TimeState};
 use crate::frontier::Frontier;
 use crate::time::Time;
 use crate::util::ser::{Decode, Encode, Reader, SerError, Writer};
-use std::rc::Rc;
+use std::sync::Arc;
 
 /// A compiled compute kernel: a pure function over f32 tensors.
-/// (Not `Send`/`Sync`: PJRT-backed kernels live on the engine thread.)
-pub trait Kernel {
+/// `Send + Sync` so kernel-backed operators can ride the parallel
+/// engine's worker threads; `run` takes `&self`, so a compiled kernel is
+/// naturally shareable (the backend-less [`crate::runtime::XlaKernel`]
+/// and the mocks are plain data).
+pub trait Kernel: Send + Sync {
     /// Identifier (artifact name).
     fn name(&self) -> &str;
     /// Execute on flat f32 inputs, producing flat f32 outputs.
     fn run(&self, inputs: &[&[f32]]) -> anyhow::Result<Vec<Vec<f32>>>;
 }
 
-/// Shared handle to a kernel (single-threaded sharing).
-pub type KernelHandle = Rc<dyn Kernel>;
+/// Shared handle to a kernel.
+pub type KernelHandle = Arc<dyn Kernel>;
 
 /// Stateless operator applying a kernel to each incoming tensor record
 /// (used as the body of the iterative-analytics loop: rank propagation).
@@ -381,7 +384,6 @@ mod tests {
     use crate::operators::stateless::{shared_vec, Sink, Source};
     use crate::time::TimeDomain;
     use std::sync::Arc as StdArc;
-    use std::rc::Rc;
 
     #[test]
     fn tensor_apply_runs_kernel() {
@@ -394,7 +396,7 @@ mod tests {
         let out = shared_vec();
         let procs: Vec<Box<dyn Processor>> = vec![
             Box::new(Source),
-            Box::new(TensorApply::new(Rc::new(MockDouble))),
+            Box::new(TensorApply::new(Arc::new(MockDouble))),
             Box::new(Sink(out.clone())),
         ];
         let mut eng = Engine::new(StdArc::new(g.build().unwrap()), procs, Delivery::Fifo);
@@ -416,7 +418,7 @@ mod tests {
         // Window of 4 forces chunking for 6 records.
         let procs: Vec<Box<dyn Processor>> = vec![
             Box::new(Source),
-            Box::new(WindowAggregate::new(Rc::new(MockAgg { num_keys: 3 }), 4, 3)),
+            Box::new(WindowAggregate::new(Arc::new(MockAgg { num_keys: 3 }), 4, 3)),
             Box::new(Sink(out.clone())),
         ];
         let mut eng = Engine::new(StdArc::new(g.build().unwrap()), procs, Delivery::Fifo);
@@ -442,7 +444,7 @@ mod tests {
 
     #[test]
     fn window_aggregate_selective_checkpoint() {
-        let mut wa = WindowAggregate::new(Rc::new(MockAgg { num_keys: 2 }), 4, 2);
+        let mut wa = WindowAggregate::new(Arc::new(MockAgg { num_keys: 2 }), 4, 2);
         let out_edges: [crate::graph::EdgeId; 0] = [];
         let summaries: [crate::progress::Summary; 0] = [];
         let seq_dst: [bool; 0] = [];
@@ -451,7 +453,7 @@ mod tests {
         let mut ctx = crate::engine::Ctx::new(Time::epoch(0), &out_edges, &summaries, &seq_dst);
         wa.on_message(0, Time::epoch(0), Record::kv(1, 3.0), &mut ctx);
         let blob = wa.checkpoint_upto(&Frontier::upto_epoch(0));
-        let mut back = WindowAggregate::new(Rc::new(MockAgg { num_keys: 2 }), 4, 2);
+        let mut back = WindowAggregate::new(Arc::new(MockAgg { num_keys: 2 }), 4, 2);
         back.restore(&blob);
         assert!(back.state.get(&Time::epoch(0)).is_some());
         assert!(back.state.get(&Time::epoch(1)).is_none());

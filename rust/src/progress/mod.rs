@@ -111,6 +111,83 @@ fn stamp_sub(m: &mut Stamps, t: Time) {
     stamp_sub_n(m, t, 1);
 }
 
+fn stamp_update(m: &mut Stamps, t: Time, delta: i64) {
+    if delta > 0 {
+        stamp_add_n(m, t, delta as usize);
+    } else if delta < 0 {
+        stamp_sub_n(m, t, (-delta) as usize);
+    }
+}
+
+/// Batched pointstamp deltas.
+///
+/// The parallel engine's workers never touch the shared tracker per
+/// event: each worker accumulates the *net* effect of its sends,
+/// deliveries and capability transitions here, and the coordinator
+/// merges all workers' deltas under one pass at each barrier. Nets are
+/// keyed per (edge, time) / (processor, time), so the merge is
+/// order-independent across workers: a delivery observed by the
+/// destination's worker before the coordinator saw the source worker's
+/// send cannot underflow, because the *sum* of all deltas over a barrier
+/// interval is exactly `final multiset − initial multiset`, which the
+/// tracker state plus net can always absorb.
+#[derive(Clone, Debug, Default)]
+pub struct ProgressDeltas {
+    /// Net queued-message count per (edge, time).
+    queued: BTreeMap<(u32, LexTime), i64>,
+    /// Net capability count per (processor, time).
+    caps: BTreeMap<(u32, LexTime), i64>,
+}
+
+impl ProgressDeltas {
+    pub fn new() -> ProgressDeltas {
+        ProgressDeltas::default()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.queued.is_empty() && self.caps.is_empty()
+    }
+
+    fn bump(map: &mut BTreeMap<(u32, LexTime), i64>, key: (u32, LexTime), delta: i64) {
+        if delta == 0 {
+            return;
+        }
+        let e = map.entry(key).or_insert(0);
+        *e += delta;
+        if *e == 0 {
+            map.remove(&key);
+        }
+    }
+
+    /// Record `n` messages enqueued on `e` at `t`.
+    pub fn messages_sent(&mut self, e: EdgeId, t: Time, n: usize) {
+        Self::bump(&mut self.queued, (e.0, LexTime(t)), n as i64);
+    }
+
+    /// Record `n` messages removed from `e` at `t`.
+    pub fn messages_removed(&mut self, e: EdgeId, t: Time, n: usize) {
+        Self::bump(&mut self.queued, (e.0, LexTime(t)), -(n as i64));
+    }
+
+    pub fn cap_acquire(&mut self, p: ProcId, t: Time) {
+        Self::bump(&mut self.caps, (p.0, LexTime(t)), 1);
+    }
+
+    pub fn cap_release(&mut self, p: ProcId, t: Time) {
+        Self::bump(&mut self.caps, (p.0, LexTime(t)), -1);
+    }
+
+    /// Fold another delta batch into this one.
+    pub fn merge(&mut self, other: &ProgressDeltas) {
+        for (&k, &n) in &other.queued {
+            Self::bump(&mut self.queued, k, n);
+        }
+        for (&k, &n) in &other.caps {
+            Self::bump(&mut self.caps, k, n);
+        }
+    }
+}
+
 /// Tracks pointstamps and answers time-completeness queries.
 #[derive(Clone, Debug)]
 pub struct ProgressTracker {
@@ -160,6 +237,18 @@ impl ProgressTracker {
     /// Release a capability for `p` at `t`.
     pub fn cap_release(&mut self, p: ProcId, t: Time) {
         stamp_sub(&mut self.caps[p.0 as usize], t);
+    }
+
+    /// Merge a batch of net deltas (the parallel engine's coordinator
+    /// path: one traversal instead of per-event updates, and safe in any
+    /// worker order because the deltas are pre-netted per key).
+    pub fn apply(&mut self, d: &ProgressDeltas) {
+        for (&(e, lt), &n) in &d.queued {
+            stamp_update(&mut self.queued[e as usize], lt.0, n);
+        }
+        for (&(p, lt), &n) in &d.caps {
+            stamp_update(&mut self.caps[p as usize], lt.0, n);
+        }
     }
 
     /// Drop every pointstamp (used when resetting the system for rollback;
@@ -428,6 +517,48 @@ mod tests {
         // Zero-count operations are no-ops.
         pt.messages_sent(e0, Time::epoch(5), 0);
         assert_eq!(pt.queued_total(), 0);
+    }
+
+    #[test]
+    fn batched_deltas_match_per_event_updates() {
+        let (topo, e0, e1) = line_topo();
+        let a = topo.find("a").unwrap();
+        // Reference: per-event updates.
+        let mut seq = ProgressTracker::new(&topo);
+        seq.messages_sent(e0, Time::epoch(1), 3);
+        seq.messages_removed(e0, Time::epoch(1), 1);
+        seq.messages_sent(e1, Time::epoch(0), 2);
+        seq.cap_acquire(a, Time::epoch(2));
+        // Same traffic expressed as two workers' delta batches, merged in
+        // the "wrong" order (removal-bearing batch first): the netting
+        // makes the merge order-independent.
+        let mut par = ProgressTracker::new(&topo);
+        let mut d_dst = ProgressDeltas::new();
+        d_dst.messages_removed(e0, Time::epoch(1), 1);
+        d_dst.messages_sent(e1, Time::epoch(0), 2);
+        let mut d_src = ProgressDeltas::new();
+        d_src.messages_sent(e0, Time::epoch(1), 3);
+        d_src.cap_acquire(a, Time::epoch(2));
+        let mut all = ProgressDeltas::new();
+        all.merge(&d_dst);
+        all.merge(&d_src);
+        par.apply(&all);
+        assert_eq!(par.queued_total(), seq.queued_total());
+        let (rs, rp) = (seq.reachable(&topo), par.reachable(&topo));
+        for p in topo.proc_ids() {
+            for ep in 0..4 {
+                assert_eq!(
+                    ProgressTracker::time_complete(&rs, p, &Time::epoch(ep)),
+                    ProgressTracker::time_complete(&rp, p, &Time::epoch(ep)),
+                    "delta path diverged at {p} epoch {ep}"
+                );
+            }
+        }
+        // A fully cancelling acquire/release nets to nothing.
+        let mut d = ProgressDeltas::new();
+        d.cap_acquire(a, Time::epoch(9));
+        d.cap_release(a, Time::epoch(9));
+        assert!(d.is_empty());
     }
 
     #[test]

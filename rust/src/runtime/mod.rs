@@ -21,7 +21,7 @@ use crate::operators::tensor::Kernel;
 use anyhow::{anyhow, Result};
 use std::cell::RefCell;
 use std::path::{Path, PathBuf};
-use std::rc::Rc;
+use std::sync::Arc;
 
 /// Whether a PJRT backend is linked into this build.
 pub const BACKEND_AVAILABLE: bool = false;
@@ -73,7 +73,7 @@ impl Kernel for XlaKernel {
 /// `make artifacts` has not run or no backend is linked).
 pub struct ArtifactRegistry {
     dir: PathBuf,
-    cache: RefCell<std::collections::BTreeMap<String, Rc<XlaKernel>>>,
+    cache: RefCell<std::collections::BTreeMap<String, Arc<XlaKernel>>>,
 }
 
 impl ArtifactRegistry {
@@ -94,12 +94,12 @@ impl ArtifactRegistry {
     }
 
     /// Load (or fetch cached) kernel `name` with the given input arity.
-    pub fn kernel(&self, name: &str, arity: usize) -> Result<Rc<XlaKernel>> {
+    pub fn kernel(&self, name: &str, arity: usize) -> Result<Arc<XlaKernel>> {
         let mut cache = self.cache.borrow_mut();
         if let Some(k) = cache.get(name) {
             return Ok(k.clone());
         }
-        let k = Rc::new(XlaKernel::load(&self.dir, name, arity)?);
+        let k = Arc::new(XlaKernel::load(&self.dir, name, arity)?);
         cache.insert(name.to_string(), k.clone());
         Ok(k)
     }

@@ -1,0 +1,27 @@
+//! FNV-1a: the one non-cryptographic byte hash the crate uses (shard
+//! routing of text keys, output checksums). Kept in one place so the
+//! magic constants cannot drift between call sites.
+
+/// 64-bit FNV-1a over a byte slice.
+pub fn fnv1a(bytes: &[u8]) -> u64 {
+    let mut h: u64 = 0xcbf29ce484222325;
+    for b in bytes {
+        h ^= *b as u64;
+        h = h.wrapping_mul(0x100000001b3);
+    }
+    h
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stable_and_input_sensitive() {
+        assert_eq!(fnv1a(b"falkirk"), fnv1a(b"falkirk"));
+        assert_ne!(fnv1a(b"falkirk"), fnv1a(b"falkirK"));
+        // The canonical FNV-1a offset basis is the hash of the empty
+        // string.
+        assert_eq!(fnv1a(b""), 0xcbf29ce484222325);
+    }
+}

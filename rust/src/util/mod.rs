@@ -8,6 +8,7 @@
 //! property-testing harness ([`prop`]).
 
 pub mod cli;
+pub mod hash;
 pub mod prop;
 pub mod rng;
 pub mod ser;

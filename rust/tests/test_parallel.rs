@@ -1,0 +1,161 @@
+//! Parallel multi-threaded shard execution: output equivalence with the
+//! sequential engine.
+//!
+//! The contract under test: for any thread count T and batch cap B, the
+//! parallel executor produces the same *observable* output as the
+//! sequential engine — byte-identical canonical collector contents for
+//! the FT-backed workload, and identical per-time record multisets for
+//! the engine-only pipeline. Per-shard delivery order equals the
+//! sequential round-robin restricted to the shard, and cross-shard
+//! arrival order (which a keyed exchange does not define) is quotiented
+//! away by the canonicalization — the same comparison the recovery suite
+//! uses.
+
+use falkirk::bench_support::sharded::{
+    canonical_output, drive_workload, pipeline, ShardedConfig,
+};
+use falkirk::engine::{Delivery, ProcFactory, Record, ShardedEngine};
+use falkirk::graph::Projection;
+use falkirk::operators::{shared_vec, CountByKey, Sink, Source};
+use falkirk::time::{Time, TimeDomain};
+use falkirk::ShardedBuilder;
+use std::sync::Arc;
+
+const EPOCHS: u64 = 3;
+const RECORDS: usize = 64;
+const KEYS: u64 = 16;
+
+/// Drive the standard FT-backed workload and return its canonical output.
+fn ft_output(threads: usize, batch_cap: usize, two_stage: bool, workers: u32) -> Vec<u8> {
+    let mut p = pipeline(&ShardedConfig {
+        workers,
+        two_stage,
+        batch_cap,
+        threads,
+        ..Default::default()
+    });
+    let tp = drive_workload(&mut p, 11, EPOCHS, RECORDS, KEYS);
+    assert_eq!(tp.records, EPOCHS * RECORDS as u64);
+    assert!(
+        p.sys.engine.is_quiescent(),
+        "parallel drain returned non-quiescent (threads={threads})"
+    );
+    canonical_output(&p.sys, p.collect_proc())
+}
+
+/// The acceptance grid: threads ∈ {1,2,4,8} × batch_cap ∈ {1,8,64} must
+/// produce byte-identical merged output to the sequential engine.
+#[test]
+fn parallel_output_matches_sequential_across_threads_and_caps() {
+    for two_stage in [false, true] {
+        for batch_cap in [1usize, 8, 64] {
+            let base = ft_output(1, batch_cap, two_stage, 8);
+            assert!(!base.is_empty());
+            for threads in [2usize, 4, 8] {
+                let got = ft_output(threads, batch_cap, two_stage, 8);
+                assert_eq!(
+                    base, got,
+                    "output diverged: threads={threads} batch_cap={batch_cap} \
+                     two_stage={two_stage}"
+                );
+            }
+        }
+    }
+}
+
+/// Two identical parallel runs agree byte for byte (the canonical output
+/// is a pure function of the workload, not of thread scheduling).
+#[test]
+fn parallel_execution_is_deterministic() {
+    let a = ft_output(4, 8, true, 8);
+    let b = ft_output(4, 8, true, 8);
+    assert_eq!(a, b);
+}
+
+/// More threads than shards: the surplus groups stay empty and the
+/// result is unchanged.
+#[test]
+fn thread_count_may_exceed_shard_count() {
+    let base = ft_output(1, 8, true, 2);
+    assert_eq!(base, ft_output(8, 8, true, 2));
+}
+
+/// Engine-level (no FT harness): a sharded keyed aggregation drained via
+/// `ShardedEngine::run_to_quiescence_parallel` matches the sequential
+/// engine's per-key sums at every thread count.
+#[test]
+fn engine_only_parallel_matches_sequential() {
+    let run = |threads: usize| -> Vec<(i64, f64)> {
+        let mut b = ShardedBuilder::new();
+        let src = b.add_proc("src", TimeDomain::EPOCH);
+        let count = b.add_sharded("count", TimeDomain::EPOCH, 4);
+        let col = b.add_proc("collect", TimeDomain::EPOCH);
+        b.connect(src, count, Projection::Identity);
+        b.connect(count, col, Projection::Identity);
+        let plan = Arc::new(b.build().unwrap());
+        let out = shared_vec();
+        let out2 = out.clone();
+        let factories: Vec<ProcFactory> = vec![
+            Box::new(|_| Box::new(Source)),
+            Box::new(|_| Box::new(CountByKey::default())),
+            Box::new(move |_| Box::new(Sink(out2.clone()))),
+        ];
+        let mut eng = ShardedEngine::new(plan, factories, Delivery::Fifo);
+        let src = eng.plan.find("src").unwrap();
+        for ep in 0..2u64 {
+            eng.advance_input(src, Time::epoch(ep));
+            for k in 0..24i64 {
+                eng.push_input(src, Time::epoch(ep), Record::kv(k % 7, (k + 1) as f64));
+            }
+            eng.advance_input(src, Time::epoch(ep + 1));
+            eng.run_to_quiescence_parallel(threads, 1_000_000);
+        }
+        eng.close_input(src);
+        eng.run_to_quiescence_parallel(threads, 1_000_000);
+        let mut got: Vec<(i64, f64)> = out
+            .lock()
+            .unwrap()
+            .iter()
+            .map(|(_, r)| r.as_kv().unwrap())
+            .collect();
+        got.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        got
+    };
+    let base = run(1);
+    assert!(!base.is_empty());
+    for threads in [2usize, 4, 8] {
+        assert_eq!(base, run(threads), "threads={threads}");
+    }
+}
+
+/// A bounded parallel drain (step budget) leaves a consistent engine:
+/// the sequential engine can finish the work and the output still
+/// matches.
+#[test]
+fn budgeted_parallel_drain_resumes_sequentially() {
+    let clean = ft_output(1, 8, true, 4);
+    let mut p = pipeline(&ShardedConfig {
+        workers: 4,
+        two_stage: true,
+        batch_cap: 8,
+        threads: 4,
+        ..Default::default()
+    });
+    let src = p.src_proc();
+    for ep in 0..EPOCHS {
+        p.sys.advance_input(src, Time::epoch(ep));
+        for r in falkirk::bench_support::sharded::epoch_records(11, ep, RECORDS, KEYS) {
+            p.sys.push_input(src, Time::epoch(ep), r);
+        }
+        p.sys.advance_input(src, Time::epoch(ep + 1));
+        // Tiny budget: the drain parks mid-exchange; spilled mailbox
+        // traffic must re-enter the channels with accounting intact.
+        p.sys.run_to_quiescence_parallel(&p.groups, 4, 25);
+        // Finish the epoch on the sequential engine.
+        p.sys.run_to_quiescence(5_000_000);
+    }
+    p.sys.close_input(src);
+    p.sys.run_to_quiescence(5_000_000);
+    assert!(p.sys.engine.is_quiescent());
+    assert_eq!(clean, canonical_output(&p.sys, p.collect_proc()));
+}

@@ -100,15 +100,67 @@ fn frontier_subset_antisymmetry_and_encode() {
     });
 }
 
+/// Reference model of the pre-index channel (a plain `Vec` with the old
+/// tail-coalescing push and the old linear-scan selective pop) — the
+/// indexed channel must stay *order-equivalent* to it: same queue
+/// contents after every push, same batch popped by every selective pop.
+struct ModelChannel {
+    q: Vec<Batch>,
+    cap: usize,
+}
+
+impl ModelChannel {
+    fn new(cap: usize) -> ModelChannel {
+        ModelChannel { q: Vec::new(), cap: cap.max(1) }
+    }
+
+    fn push_batch(&mut self, b: Batch) {
+        if b.is_empty() {
+            return;
+        }
+        let time = b.time;
+        let mut data = b.data;
+        if let Some(tail) = self.q.last_mut() {
+            if tail.time == time && tail.data.len() < self.cap {
+                let take = (self.cap - tail.data.len()).min(data.len());
+                tail.data.extend(data.drain(..take));
+            }
+        }
+        while !data.is_empty() {
+            let take = self.cap.min(data.len());
+            let chunk: Vec<Record> = data.drain(..take).collect();
+            self.q.push(Batch::new(time, chunk));
+        }
+    }
+
+    /// The old O(n) scan: earliest batch with lex-minimal time.
+    fn pop_selective(&mut self) -> Option<Batch> {
+        use falkirk::time::LexTime;
+        if self.q.is_empty() {
+            return None;
+        }
+        let mut best = 0usize;
+        for i in 1..self.q.len() {
+            if LexTime(self.q[i].time) < LexTime(self.q[best].time) {
+                best = i;
+            }
+        }
+        Some(self.q.remove(best))
+    }
+}
+
 /// §3.3 re-ordering rule on a channel, checked per pop: the popped batch
 /// must have no earlier queued batch whose time is ≤ its time. Runs for
 /// `cap = 1` (singleton batches, the pre-batching channel) and for
 /// coalescing caps, where random insertion orders produce mixed
 /// singleton/coalesced queues. Also checks that coalescing loses no
-/// records and never grows a batch past the cap.
+/// records and never grows a batch past the cap, and that the indexed
+/// O(log n) implementation is order-equivalent to the old linear-scan
+/// one ([`ModelChannel`]) push for push, pop for pop.
 fn check_selective_reordering(cap: usize) {
     check(&format!("§3.3 re-ordering rule (cap {cap})"), |rng| {
         let mut ch = Channel::with_cap(cap);
+        let mut model = ModelChannel::new(cap);
         let n = 1 + rng.index(30);
         let mut pushed = 0usize;
         for i in 0..n {
@@ -118,15 +170,22 @@ fn check_selective_reordering(cap: usize) {
                 let t = arb_time(rng, 0);
                 // Values disjoint from the singleton pushes (which use
                 // 0..n), so batch equality below is unambiguous.
-                ch.push_batch(Batch::new(
-                    t,
-                    (0..k).map(|j| Record::Int((1000 + i * 10 + j) as i64)).collect(),
-                ));
+                let data: Vec<Record> =
+                    (0..k).map(|j| Record::Int((1000 + i * 10 + j) as i64)).collect();
+                ch.push_batch(Batch::new(t, data.clone()));
+                model.push_batch(Batch::new(t, data));
                 pushed += k;
             } else {
-                ch.push(Message::new(arb_time(rng, 0), Record::Int(i as i64)));
+                let m = Message::new(arb_time(rng, 0), Record::Int(i as i64));
+                ch.push(m.clone());
+                model.push_batch(Batch::from(m));
                 pushed += 1;
             }
+            let got: Vec<Batch> = ch.iter().cloned().collect();
+            prop_assert!(
+                got == model.q,
+                "queue diverged from the reference model after push {i} (cap {cap})"
+            );
         }
         prop_assert!(ch.len() == pushed, "coalescing lost records: {} != {pushed}", ch.len());
         prop_assert!(
@@ -137,6 +196,13 @@ fn check_selective_reordering(cap: usize) {
         while !ch.is_empty() {
             let before: Vec<Batch> = ch.iter().cloned().collect();
             let b = ch.pop(Delivery::Selective).unwrap();
+            let m = model.pop_selective().unwrap();
+            prop_assert!(
+                b == m,
+                "selective pop diverged from the old linear scan: {} vs {} (cap {cap})",
+                b.time,
+                m.time
+            );
             popped += b.len();
             let idx = before.iter().position(|x| x == &b).unwrap();
             for bj in &before[..idx] {

@@ -64,7 +64,7 @@ fn drive(
                 for r in &recs[..f.records_before] {
                     p.sys.push_input(src, Time::epoch(ep), r.clone());
                 }
-                p.sys.run_to_quiescence(f.presteps);
+                p.run(f.presteps);
                 let victim = p.plan.proc(p.count, f.shard);
                 p.sys.inject_failures(&[victim]);
                 report = Some(p.sys.recover());
@@ -72,13 +72,13 @@ fn drive(
                     p.sys.push_input(src, Time::epoch(ep), r.clone());
                 }
                 p.sys.advance_input(src, Time::epoch(ep + 1));
-                p.sys.run_to_quiescence(5_000_000);
+                p.run(5_000_000);
             }
             _ => drive_epoch(&mut p, seed, ep, RECORDS, KEYS),
         }
     }
     p.sys.close_input(src);
-    p.sys.run_to_quiescence(5_000_000);
+    p.run(5_000_000);
     let out = canonical_output(&p.sys, p.collect_proc());
     (out, p.sys.stats.clone(), report)
 }
@@ -272,4 +272,95 @@ fn all_shards_failing_still_recovers() {
     p.sys.close_input(src);
     p.sys.run_to_quiescence(5_000_000);
     assert_eq!(clean, canonical_output(&p.sys, p.collect_proc()));
+}
+
+/// The fault-injection grid rerun under parallel execution: failures are
+/// injected and recovered between parallel drains (pause-drain-rollback
+/// — workers are parked whenever the Fig. 6 plan is computed and
+/// applied), and the recovered output must be byte-identical to the
+/// sequential failure-free run.
+#[test]
+fn recovery_grid_is_byte_identical_under_parallel_execution() {
+    let policies = [Policy::Lazy { every: 1, log_outputs: true }, Policy::FullHistory];
+    let seq_cfg = ShardedConfig { workers: 4, two_stage: true, ..Default::default() };
+    for count_policy in policies {
+        let (clean_seq, _, _) =
+            drive(&ShardedConfig { count_policy, ..seq_cfg.clone() }, 7, None);
+        for threads in [2usize, 4] {
+            let cfg = ShardedConfig { count_policy, threads, ..seq_cfg.clone() };
+            let (clean_par, _, _) = drive(&cfg, 7, None);
+            assert_eq!(
+                clean_seq, clean_par,
+                "parallel clean run diverged: threads={threads} {count_policy:?}"
+            );
+            let failures = [
+                Failure { shard: 0, epoch: 2, records_before: 0, presteps: 0 },
+                Failure { shard: 3, epoch: 1, records_before: RECORDS / 2, presteps: 0 },
+                Failure { shard: 2, epoch: 2, records_before: RECORDS / 2, presteps: 60 },
+            ];
+            for f in failures {
+                let (failed, stats, rep) = drive(&cfg, 7, Some(f));
+                assert!(rep.is_some());
+                assert_eq!(stats.recoveries, 1);
+                assert_eq!(
+                    clean_seq, failed,
+                    "output diverged: threads={threads} {count_policy:?} failure={f:?}"
+                );
+            }
+        }
+    }
+}
+
+/// Regression for the replay coalescing bypass: a *second* failure
+/// injected immediately after recovery — while the first recovery's
+/// replayed batches are still queued, undelivered — must recover to
+/// byte-identical output. Before the bypass, tail-coalescing could merge
+/// adjacent same-time replayed batches, so the second recovery (and any
+/// full-history record of the interim deliveries) saw batch boundaries
+/// that depended on queue adjacency rather than on the durable log.
+#[test]
+fn double_failure_during_recovery_is_transparent() {
+    for count_policy in [Policy::Lazy { every: 1, log_outputs: true }, Policy::FullHistory] {
+        for batch_cap in [1usize, 8] {
+            let cfg = ShardedConfig { workers: 4, batch_cap, count_policy, ..Default::default() };
+            let (clean, _, _) = drive(&cfg, 7, None);
+            let mut p = pipeline(&cfg);
+            let src = p.src_proc();
+            for ep in 0..2u64 {
+                drive_epoch(&mut p, 7, ep, RECORDS, KEYS);
+            }
+            // Open epoch 2, push half the batch, crash count#2 mid-epoch.
+            let recs = epoch_records(7, 2, RECORDS, KEYS);
+            p.sys.advance_input(src, Time::epoch(2));
+            for r in &recs[..RECORDS / 2] {
+                p.sys.push_input(src, Time::epoch(2), r.clone());
+            }
+            p.sys.inject_failures(&[p.plan.proc(p.count, 2)]);
+            let rep1 = p.sys.recover();
+            assert!(rep1.replayed > 0, "first recovery must replay the in-flight range");
+            // Second failure DURING recovery: the replayed batches are
+            // still queued (no step has run). Crash the same shard plus a
+            // sibling and recover again.
+            p.sys.inject_failures(&[p.plan.proc(p.count, 2), p.plan.proc(p.count, 1)]);
+            let rep2 = p.sys.recover();
+            assert_eq!(p.sys.stats.recoveries, 2);
+            assert!(rep2.replayed > 0, "second recovery replays from the log again");
+            // Finish the epoch and the run.
+            for r in &recs[RECORDS / 2..] {
+                p.sys.push_input(src, Time::epoch(2), r.clone());
+            }
+            p.sys.advance_input(src, Time::epoch(3));
+            p.run(5_000_000);
+            for ep in 3..EPOCHS {
+                drive_epoch(&mut p, 7, ep, RECORDS, KEYS);
+            }
+            p.sys.close_input(src);
+            p.run(5_000_000);
+            let failed = canonical_output(&p.sys, p.collect_proc());
+            assert_eq!(
+                clean, failed,
+                "double failure diverged: {count_policy:?} batch_cap={batch_cap}"
+            );
+        }
+    }
 }

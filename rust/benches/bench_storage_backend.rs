@@ -1,0 +1,91 @@
+//! Storage-backend bench: Mem vs File WAL across group-commit widths
+//! `flush_every_n ∈ {1, 8, 64}` — acknowledged writes/sec on the put
+//! path, and recovery-scan (reopen + index rebuild) time.
+//!
+//! Expected shape: write-through (`flush1`) pays a syscall per record;
+//! wider group commit amortizes it toward (but never past) the
+//! in-memory backend; the recovery scan is linear in live log bytes.
+
+use falkirk::bench_support::{BenchConfig, Bencher};
+use falkirk::ft::{FileBackendOptions, Key, Kind, Store};
+use falkirk::util::tmp::TempDir;
+
+const N: u64 = 2_000;
+const PROCS: u64 = 8;
+
+fn fill(s: &Store, blob: &[u8]) {
+    for tag in 0..N {
+        s.put_log(
+            Key { proc: (tag % PROCS) as u32, kind: Kind::LogEntry, tag },
+            blob.to_vec(),
+            1,
+        );
+    }
+}
+
+fn main() {
+    let cfg = BenchConfig { warmup_iters: 1, sample_iters: 5 };
+    let mut b = Bencher::with_config("storage_backend", cfg);
+    let blob = vec![7u8; 128];
+
+    b.run("acked_writes/mem", N as f64, || {
+        let s = Store::new(0);
+        fill(&s, &blob);
+        assert_eq!(s.stats().writes, N);
+    });
+
+    for flush in [1usize, 8, 64] {
+        b.run(&format!("acked_writes/file_flush{flush}"), N as f64, || {
+            let t = TempDir::new("bench-wal");
+            let s = Store::open_dir(
+                t.path(),
+                0,
+                FileBackendOptions { flush_every_n: flush, ..Default::default() },
+            )
+            .unwrap();
+            fill(&s, &blob);
+            s.sync();
+        });
+    }
+
+    // Recovery scan: a prebuilt directory, reopened per iteration (what
+    // a cold restart pays before any replay begins).
+    let t = TempDir::new("bench-wal-scan");
+    {
+        let s = Store::open_dir(
+            t.path(),
+            0,
+            FileBackendOptions { flush_every_n: 64, ..Default::default() },
+        )
+        .unwrap();
+        fill(&s, &blob);
+    }
+    b.run("recovery_scan/file", N as f64, || {
+        let s = Store::open_dir(t.path(), 0, FileBackendOptions::default()).unwrap();
+        assert_eq!(s.backend_info().live_keys, N);
+    });
+
+    // GC + compaction: delete most keys, forcing tombstones and segment
+    // rewrites, on a small-segment store.
+    b.run("gc_compact/file", N as f64, || {
+        let t = TempDir::new("bench-wal-gc");
+        let s = Store::open_dir(
+            t.path(),
+            0,
+            FileBackendOptions {
+                flush_every_n: 8,
+                segment_bytes: 16 << 10,
+                compact_ratio: 0.5,
+                fsync: false,
+            },
+        )
+        .unwrap();
+        fill(&s, &blob);
+        for proc in 0..PROCS {
+            s.delete_matching(proc as u32, |k| k.tag < (N * 3 / 4));
+        }
+        assert!(s.backend_info().compactions > 0);
+    });
+
+    b.note("expected: file_flush1 ≪ file_flush64 ≤ mem on acked writes/sec");
+}

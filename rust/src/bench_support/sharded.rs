@@ -91,8 +91,38 @@ fn rekey(r: Record) -> Record {
     }
 }
 
-/// Build the job under `cfg`.
+/// Build the job under `cfg` (in-memory store).
 pub fn pipeline(cfg: &ShardedConfig) -> ShardedPipeline {
+    pipeline_with_store(cfg, Store::new(cfg.write_cost))
+}
+
+/// Build the job against a caller-provided store (e.g. a durable
+/// [`crate::ft::backend_file::FileBackend`] directory, which
+/// `falkirk shard --data-dir` and the crash-restart suite use).
+pub fn pipeline_with_store(cfg: &ShardedConfig, store: Store) -> ShardedPipeline {
+    build_pipeline(cfg, store, None)
+}
+
+/// Cold-restart the job from a reopened durable store: rebuilds the same
+/// plan/factories/policies and hands them to
+/// [`FtSystem::reopen_sharded`], which reloads the Table-1 mirrors and
+/// runs the all-processors-failed recovery. The caller resupplies
+/// external inputs beyond the source's recovered frontier
+/// (`report.plan.frontier(src)`) and keeps driving.
+pub fn reopen_pipeline(
+    cfg: &ShardedConfig,
+    store: Store,
+) -> (ShardedPipeline, crate::ft::recovery::RecoveryReport) {
+    let mut report = None;
+    let p = build_pipeline(cfg, store, Some(&mut report));
+    (p, report.expect("reopen produced a recovery report"))
+}
+
+fn build_pipeline(
+    cfg: &ShardedConfig,
+    store: Store,
+    reopen: Option<&mut Option<crate::ft::recovery::RecoveryReport>>,
+) -> ShardedPipeline {
     let mut b = ShardedBuilder::new();
     let src = b.add_proc("src", TimeDomain::EPOCH);
     let map =
@@ -122,14 +152,28 @@ pub fn pipeline(cfg: &ShardedConfig) -> ShardedPipeline {
     factories.push(Box::new(|_| Box::new(Buffer::default())));
     policies.push(cfg.collect_policy);
 
-    let sys = FtSystem::new_sharded_with_cap(
-        &plan,
-        factories,
-        &policies,
-        Delivery::Fifo,
-        Store::new(cfg.write_cost),
-        cfg.batch_cap,
-    );
+    let sys = match reopen {
+        None => FtSystem::new_sharded_with_cap(
+            &plan,
+            factories,
+            &policies,
+            Delivery::Fifo,
+            store,
+            cfg.batch_cap,
+        ),
+        Some(slot) => {
+            let (sys, report) = FtSystem::reopen_sharded(
+                &plan,
+                factories,
+                &policies,
+                Delivery::Fifo,
+                store,
+                cfg.batch_cap,
+            );
+            *slot = Some(report);
+            sys
+        }
+    };
     let threads = cfg.threads.max(1);
     let groups = crate::engine::shard_groups(&plan, threads);
     ShardedPipeline { sys, plan, src, map, count, collect, threads, groups }

@@ -21,18 +21,70 @@ COMMANDS:
             --window N (16) --keys N (8) --seed S (7) --write-cost C (10)
             --fail <proc> --fail-after E (2) --xla <true|false> (true)
             --batch-cap B (1)
+            --data-dir DIR --flush-every N (8)  # durable WAL store
   shard     Run the sharded keyed-aggregation job, optionally crashing
             one worker shard and recovering only its key range.
             --workers W (4) --epochs N (6) --records N (64) --keys N (16)
             --seed S (7) --two-stage <true|false> (false)
             --fail-shard S --fail-after E (2) --batch-cap B (1)
             --threads T (1)  # T>1 drains on the parallel engine
+            --data-dir DIR --flush-every N (8)  # durable WAL store
+  store     Durable-store tooling.
+            inspect <dir>    # dump segment / key / byte counts of a WAL
   fig7      Run a worked rollback example.  --panel a|b|c (c)
   gc-demo   Drive the §4.2 GC monitor and print watermark advances.
             --epochs N (8)
   selftest  Smoke-test all layers (engine, FT, recovery, kernels).
   help      Show this message.
 ";
+
+/// Open a durable store when `--data-dir` was given, the in-memory one
+/// otherwise. A fresh run restarts storage-key numbering, so reusing a
+/// directory that already holds a WAL would splice two runs' histories —
+/// refuse it instead.
+fn store_for(args: &Args, write_cost: u64) -> Result<crate::ft::Store, i32> {
+    match args.get("data-dir") {
+        None => Ok(crate::ft::Store::new(write_cost)),
+        Some(dir) => {
+            let flush_every_n = args.get_usize("flush-every", 8);
+            if flush_every_n == 0 {
+                eprintln!("--flush-every must be at least 1");
+                return Err(2);
+            }
+            // Probe read-only first: the emptiness check must not repair
+            // (truncate) a crashed WAL it is about to refuse — that would
+            // destroy the very tail `store inspect` preserves.
+            if std::path::Path::new(dir).is_dir() {
+                let probe = crate::ft::Store::open_dir_read_only(
+                    dir,
+                    crate::ft::FileBackendOptions::default(),
+                )
+                .map_err(|e| {
+                    eprintln!("cannot open durable store at '{dir}': {e}");
+                    2
+                })?;
+                let live = probe.backend_info().live_keys;
+                if live > 0 {
+                    eprintln!(
+                        "refusing --data-dir '{dir}': it already holds a WAL with {live} live \
+                         keys from a previous run; use an empty directory (or examine the old \
+                         one with `falkirk store inspect {dir}`)"
+                    );
+                    return Err(2);
+                }
+            }
+            crate::ft::Store::open_dir(
+                dir,
+                write_cost,
+                crate::ft::FileBackendOptions { flush_every_n, ..Default::default() },
+            )
+            .map_err(|e| {
+                eprintln!("cannot open durable store at '{dir}': {e}");
+                2
+            })
+        }
+    }
+}
 
 /// Entry point; returns the process exit code.
 pub fn run(raw: &[String]) -> i32 {
@@ -41,6 +93,7 @@ pub fn run(raw: &[String]) -> i32 {
     match cmd {
         "fig1" => cmd_fig1(&args),
         "shard" => cmd_shard(&args),
+        "store" => cmd_store(&args),
         "fig7" => cmd_fig7(&args),
         "gc-demo" => cmd_gc_demo(&args),
         "selftest" => cmd_selftest(),
@@ -70,7 +123,11 @@ fn cmd_fig1(args: &Args) -> i32 {
         use_xla: args.get_str("xla", "true") == "true",
         batch_cap: args.get_usize("batch-cap", 1),
     };
-    let out = run_fig1(&cfg);
+    let store = match store_for(args, cfg.write_cost) {
+        Ok(s) => s,
+        Err(code) => return code,
+    };
+    let out = crate::coordinator::fig1::run_with_store(&cfg, store);
     println!("fig1: kernels = {}", if out.used_xla { "XLA artifacts" } else { "reference (run `make artifacts`)" });
     println!("  responses        {}", out.responses);
     println!("  db commits       {}  (duplicates suppressed: {})", out.db_commits, out.db_duplicates);
@@ -92,9 +149,7 @@ fn cmd_fig1(args: &Args) -> i32 {
 }
 
 fn cmd_shard(args: &Args) -> i32 {
-    use crate::bench_support::sharded::{
-        canonical_output, drive_epoch, pipeline, ShardedConfig, Throughput,
-    };
+    use crate::bench_support::sharded::{canonical_output, drive_epoch, ShardedConfig, Throughput};
     let workers = args.get_u64("workers", 4) as u32;
     let epochs = args.get_u64("epochs", 6);
     let records = args.get_usize("records", 64);
@@ -130,7 +185,11 @@ fn cmd_shard(args: &Args) -> i32 {
             return 2;
         }
     }
-    let mut p = pipeline(&cfg);
+    let store = match store_for(args, cfg.write_cost) {
+        Ok(s) => s,
+        Err(code) => return code,
+    };
+    let mut p = crate::bench_support::sharded::pipeline_with_store(&cfg, store);
     let t0 = std::time::Instant::now();
     for ep in 0..epochs {
         drive_epoch(&mut p, seed, ep, records, keys);
@@ -180,6 +239,70 @@ fn cmd_shard(args: &Args) -> i32 {
     let h = crate::util::hash::fnv1a(&out);
     println!("  output bytes     {} (fnv1a {h:016x})", out.len());
     0
+}
+
+fn cmd_store(args: &Args) -> i32 {
+    let pos = args.positional();
+    match pos.get(1).map(|s| s.as_str()) {
+        Some("inspect") => {
+            let Some(dir) = pos.get(2) else {
+                eprintln!("usage: falkirk store inspect <dir>");
+                return 2;
+            };
+            let store = match store_for_dir(dir) {
+                Ok(s) => s,
+                Err(code) => return code,
+            };
+            let info = store.backend_info();
+            println!("store {dir} ({}):", info.name);
+            println!("  segments         {}", info.segments);
+            println!("  file bytes       {}", info.file_bytes);
+            println!("  live keys        {}", info.live_keys);
+            println!("  live bytes       {}", info.live_bytes);
+            println!("  dead bytes       {}", info.dead_bytes);
+            println!("  compactions      {}", info.compactions);
+            // Per-kind breakdown over the processors actually present.
+            // Sizes come from the index — no blob reads.
+            use crate::ft::Kind;
+            let mut counts: std::collections::BTreeMap<&str, (u64, u64)> = Default::default();
+            for proc in store.procs() {
+                for (k, size) in store.scan_entries(proc) {
+                    let name = match k.kind {
+                        Kind::Meta => "meta (Ξ)",
+                        Kind::State => "state",
+                        Kind::LogEntry => "log entries",
+                        Kind::HistoryEvent => "history events",
+                        Kind::InputFrontier => "input markers",
+                    };
+                    let e = counts.entry(name).or_insert((0, 0));
+                    e.0 += 1;
+                    e.1 += size;
+                }
+            }
+            for (name, (n, bytes)) in counts {
+                println!("  {name:<16} {n} keys / {bytes} bytes");
+            }
+            0
+        }
+        other => {
+            eprintln!(
+                "unknown store subcommand {:?}\nusage: falkirk store inspect <dir>",
+                other.unwrap_or("<none>")
+            );
+            2
+        }
+    }
+}
+
+/// Open an existing WAL directory for inspection — read-only: no tail
+/// repair, so inspecting a just-crashed store destroys nothing.
+fn store_for_dir(dir: &str) -> Result<crate::ft::Store, i32> {
+    crate::ft::Store::open_dir_read_only(dir, crate::ft::FileBackendOptions::default()).map_err(
+        |e| {
+            eprintln!("cannot open durable store at '{dir}': {e}");
+            2
+        },
+    )
 }
 
 fn cmd_fig7(args: &Args) -> i32 {

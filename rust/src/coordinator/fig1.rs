@@ -172,8 +172,87 @@ fn kernels(cfg: &Fig1Config) -> (KernelHandle, KernelHandle, bool) {
     )
 }
 
+/// Everything [`build`] and [`reopen`] share: the wiring, fresh operator
+/// instances, policies, and the in-process ends of the external services.
+struct Fig1Parts {
+    topo: Arc<crate::graph::Topology>,
+    procs: Vec<Box<dyn Processor>>,
+    policies: Vec<Policy>,
+    resp: SharedVec,
+    q_src: ProcId,
+    d_src: ProcId,
+    db_proc: ProcId,
+    rank_proc: ProcId,
+    used_xla: bool,
+}
+
 /// Build the application (see module docs for the wiring).
 pub fn build(cfg: &Fig1Config) -> Fig1App {
+    build_with_store(cfg, Store::new(cfg.write_cost))
+}
+
+/// [`build`] against a caller-provided store (e.g. a
+/// [`crate::ft::backend_file::FileBackend`] directory via
+/// [`Store::open_dir`], which `falkirk fig1 --data-dir` uses).
+pub fn build_with_store(cfg: &Fig1Config, store: Store) -> Fig1App {
+    let db_out = Arc::new(Mutex::new(ExternalOutput::new()));
+    let parts = assemble(cfg, db_out.clone());
+    let sys = FtSystem::new_with_cap(
+        parts.topo,
+        parts.procs,
+        parts.policies,
+        Delivery::Fifo,
+        store,
+        cfg.batch_cap,
+    );
+    Fig1App {
+        sys,
+        q_src: parts.q_src,
+        d_src: parts.d_src,
+        resp: parts.resp,
+        db: db_out,
+        db_proc: parts.db_proc,
+        rank_proc: parts.rank_proc,
+        used_xla: parts.used_xla,
+    }
+}
+
+/// Cold-restart the Figure-1 application from a reopened durable store
+/// (see [`FtSystem::reopen`]). The deduplicating database consumer is
+/// external — it survives the crash — so the caller passes the surviving
+/// handle back in; the eager regime's committed state is then preserved
+/// exactly (replayed commits dedup on their sequence numbers). The
+/// response sink is a plain user stream and starts fresh.
+pub fn reopen(
+    cfg: &Fig1Config,
+    store: Store,
+    db_out: Arc<Mutex<ExternalOutput>>,
+) -> (Fig1App, crate::ft::recovery::RecoveryReport) {
+    let parts = assemble(cfg, db_out.clone());
+    let (sys, report) = FtSystem::reopen(
+        parts.topo,
+        parts.procs,
+        parts.policies,
+        Delivery::Fifo,
+        store,
+        cfg.batch_cap,
+    );
+    let app = Fig1App {
+        sys,
+        q_src: parts.q_src,
+        d_src: parts.d_src,
+        resp: parts.resp,
+        db: db_out,
+        db_proc: parts.db_proc,
+        rank_proc: parts.rank_proc,
+        used_xla: parts.used_xla,
+    };
+    (app, report)
+}
+
+/// Assemble the graph, operators and policies (shared by [`build`] and
+/// [`reopen`]).
+fn assemble(cfg: &Fig1Config, db_out: Arc<Mutex<ExternalOutput>>) -> Fig1Parts {
     let (agg_kernel, iter_kernel, used_xla) = kernels(cfg);
     let mut g = GraphBuilder::new();
     let d1 = TimeDomain::Structured { depth: 1 };
@@ -220,7 +299,6 @@ pub fn build(cfg: &Fig1Config) -> Fig1App {
 
     let topo = Arc::new(g.build().expect("fig1 topology"));
     let resp_out = shared_vec();
-    let db_out = Arc::new(Mutex::new(ExternalOutput::new()));
 
     /// Body emits to both feedback (port 0) and egress (port 1), but only
     /// the final iteration should leave the loop; Feedback::max_iters
@@ -273,20 +351,13 @@ pub fn build(cfg: &Fig1Config) -> Fig1App {
         Policy::Eager,                                    // db (eager regime)
         Policy::Ephemeral,                                // resp
     ];
-    let sys = FtSystem::new_with_cap(
+    Fig1Parts {
         topo,
         procs,
         policies,
-        Delivery::Fifo,
-        Store::new(cfg.write_cost),
-        cfg.batch_cap,
-    );
-    Fig1App {
-        sys,
+        resp: resp_out,
         q_src,
         d_src,
-        resp: resp_out,
-        db: db_out,
         db_proc: db,
         rank_proc: rank_store,
         used_xla,
@@ -328,8 +399,13 @@ pub struct RecoverySummary {
 /// Drive the application for `cfg.epochs` epochs of synthetic queries and
 /// records, optionally crashing one processor, and report.
 pub fn run(cfg: &Fig1Config) -> Fig1Outcome {
+    run_with_store(cfg, Store::new(cfg.write_cost))
+}
+
+/// [`run`] against a caller-provided (e.g. durable) store.
+pub fn run_with_store(cfg: &Fig1Config, store: Store) -> Fig1Outcome {
     let t_start = std::time::Instant::now();
-    let mut app = build(cfg);
+    let mut app = build_with_store(cfg, store);
     let mut rng = Rng::new(cfg.seed);
     let mut q_ext = ExternalInput::new();
     let mut d_ext = ExternalInput::new();

@@ -4,4 +4,7 @@
 pub mod cli;
 pub mod fig1;
 
-pub use fig1::{build as build_fig1, run as run_fig1, Fig1App, Fig1Config, Fig1Outcome};
+pub use fig1::{
+    build as build_fig1, build_with_store as build_fig1_with_store, reopen as reopen_fig1,
+    run as run_fig1, Fig1App, Fig1Config, Fig1Outcome,
+};

@@ -1,0 +1,880 @@
+//! On-disk segmented write-ahead-log backend for the durable store.
+//!
+//! # Layout
+//!
+//! A backend directory holds numbered segment files `wal-000001.seg`,
+//! `wal-000002.seg`, … Each segment begins with an 8-byte magic
+//! (`FKWAL001`) and then a sequence of self-delimiting records:
+//!
+//! ```text
+//! ┌────────────┬────────────┬─────────────────────────────┐
+//! │ len: u32LE │ crc: u64LE │ payload (len bytes)         │
+//! └────────────┴────────────┴─────────────────────────────┘
+//! payload := op:u8 (0 = put, 1 = tombstone)
+//!            proc:varint  kind:u8  tag:varint
+//!            value:length-prefixed bytes   (put only)
+//! ```
+//!
+//! `crc` is FNV-1a over the payload ([`crate::util::hash::fnv1a`] — the
+//! crate's one byte hash). The log is strictly append-only: an overwrite
+//! appends a new put record, a delete appends a tombstone; the superseded
+//! record's bytes become *dead* and are reclaimed by compaction.
+//!
+//! # Group commit
+//!
+//! Appends accumulate in an in-memory tail and reach the file every
+//! [`FileBackendOptions::flush_every_n`] records (or on [`sync`], read of
+//! a buffered record, rotation, drop). Because the tail flushes in append
+//! order, a crash loses only a *suffix* of recent writes — a surviving
+//! record implies every earlier record survived. The FT layer leans on
+//! exactly this prefix property: state is written before its Ξ, log
+//! entries before the input-frontier marker that certifies them, so a
+//! truncated tail can only make recovery more conservative, never
+//! inconsistent.
+//!
+//! # Reopen
+//!
+//! [`FileBackend::open`] rebuilds the in-memory `Key → (segment, offset)`
+//! index by scanning every segment in order, replaying puts and
+//! tombstones. A torn or corrupt *tail* (bad length, bad checksum,
+//! undecodable payload in the final segment) is truncated and the open
+//! succeeds — those records were never acknowledged-durable under the
+//! crash model. Corruption in the *middle* of the log (a non-final
+//! segment) is reported as an error: it means lost acknowledged state,
+//! which must not be silently dropped.
+//!
+//! # Compaction
+//!
+//! Tombstones and overwrites leave dead bytes behind. After deletes (and
+//! under explicit [`StorageBackend::compact`]) any *sealed* segment whose
+//! dead fraction exceeds [`FileBackendOptions::compact_ratio`] is
+//! rewritten: its live records are re-appended to the active segment and
+//! the file is removed. The monitor's §4.2 GC actions therefore turn into
+//! tombstones at the [`crate::ft::harness::FtSystem::apply_gc`] layer and
+//! into reclaimed disk space here.
+
+use crate::ft::storage::{proc_range, BackendInfo, Key, Kind, StorageBackend};
+use crate::util::hash::fnv1a;
+use crate::util::ser::{Reader, Writer};
+use std::collections::BTreeMap;
+use std::fs::{File, OpenOptions};
+use std::io::{self, Read, Seek, SeekFrom, Write as IoWrite};
+use std::path::{Path, PathBuf};
+
+const MAGIC: &[u8; 8] = b"FKWAL001";
+const REC_HEADER: u64 = 4 + 8;
+/// Upper bound on one record's payload — anything larger in a length
+/// field is treated as corruption.
+const MAX_PAYLOAD: u64 = 1 << 26;
+
+/// Tuning knobs of the WAL backend.
+#[derive(Clone, Copy, Debug)]
+pub struct FileBackendOptions {
+    /// Group-commit width: buffered records are written out once this
+    /// many accumulate. 1 = write-through per record.
+    pub flush_every_n: usize,
+    /// Rotate to a fresh segment once the active one reaches this size.
+    pub segment_bytes: u64,
+    /// Compact a sealed segment once dead bytes exceed this fraction of
+    /// its length.
+    pub compact_ratio: f64,
+    /// `fsync` each flush (off by default: the tests and benches exercise
+    /// ordering, not disk hardware).
+    pub fsync: bool,
+}
+
+impl Default for FileBackendOptions {
+    fn default() -> Self {
+        FileBackendOptions {
+            flush_every_n: 8,
+            segment_bytes: 1 << 20,
+            compact_ratio: 0.5,
+            fsync: false,
+        }
+    }
+}
+
+/// Where a live record lives.
+#[derive(Clone, Copy, Debug)]
+struct Loc {
+    seg: u64,
+    /// Offset of the record header within the segment file.
+    off: u64,
+    /// Full record length (header + payload).
+    len: u64,
+    /// Length of the stored value (for resident-byte accounting).
+    value_len: u64,
+}
+
+#[derive(Clone, Copy, Debug, Default)]
+struct SegState {
+    /// Bytes durably in the file (for the active segment the buffered
+    /// tail comes on top).
+    flushed_len: u64,
+    /// Bytes owed to superseded records and tombstones.
+    dead_bytes: u64,
+}
+
+/// The segmented-WAL storage backend. See module docs.
+pub struct FileBackend {
+    dir: PathBuf,
+    opts: FileBackendOptions,
+    index: BTreeMap<Key, Loc>,
+    segs: BTreeMap<u64, SegState>,
+    /// Segment new appends go to (its file may not exist yet).
+    active: u64,
+    /// Unflushed tail of the active segment.
+    buf: Vec<u8>,
+    buffered_records: usize,
+    /// Append handle for the active segment (lazily opened).
+    writer: Option<File>,
+    /// Read handles, per segment.
+    readers: BTreeMap<u64, File>,
+    live_value_bytes: u64,
+    compactions: u64,
+    /// Bytes dropped from a torn tail during open.
+    tail_truncated: u64,
+    /// Guards against compaction re-entering itself through the rotations
+    /// its own moves can trigger.
+    in_compaction: bool,
+    /// Opened via [`FileBackend::open_read_only`]: mutating operations
+    /// panic and open performed no on-disk repair.
+    read_only: bool,
+    crashed: bool,
+}
+
+fn seg_name(id: u64) -> String {
+    format!("wal-{id:06}.seg")
+}
+
+fn parse_seg_name(name: &str) -> Option<u64> {
+    name.strip_prefix("wal-")?.strip_suffix(".seg")?.parse().ok()
+}
+
+fn encode_payload(op: u8, key: &Key, value: Option<&[u8]>) -> Vec<u8> {
+    let mut w = Writer::with_capacity(16 + value.map(|v| v.len()).unwrap_or(0));
+    w.u8(op);
+    w.varint(key.proc as u64);
+    w.u8(key.kind.code());
+    w.varint(key.tag);
+    if let Some(v) = value {
+        w.bytes(v);
+    }
+    w.into_bytes()
+}
+
+/// Decode a record payload into (op, key, value-bytes-for-put). `None`
+/// means corruption.
+fn decode_payload(payload: &[u8]) -> Option<(u8, Key, Option<Vec<u8>>)> {
+    let mut r = Reader::new(payload);
+    let op = r.u8().ok()?;
+    let proc = r.varint().ok()?;
+    if proc > u32::MAX as u64 {
+        return None;
+    }
+    let kind = Kind::from_code(r.u8().ok()?)?;
+    let tag = r.varint().ok()?;
+    let key = Key { proc: proc as u32, kind, tag };
+    match op {
+        0 => {
+            let v = r.bytes().ok()?.to_vec();
+            if !r.is_empty() {
+                return None;
+            }
+            Some((0, key, Some(v)))
+        }
+        1 => {
+            if !r.is_empty() {
+                return None;
+            }
+            Some((1, key, None))
+        }
+        _ => None,
+    }
+}
+
+impl FileBackend {
+    /// Open (or create) a WAL under `dir`, rebuilding the key index by
+    /// scanning the segments. A corrupt tail of the final segment is
+    /// truncated (repaired on disk); corruption elsewhere is an error.
+    pub fn open(dir: &Path, opts: FileBackendOptions) -> io::Result<FileBackend> {
+        FileBackend::open_impl(dir, opts, true)
+    }
+
+    /// Open for inspection only: the index is rebuilt, but nothing on
+    /// disk is repaired (no tail truncation, no bad-segment removal) and
+    /// every mutating operation panics — examining a just-crashed WAL
+    /// must not destroy its torn tail.
+    pub fn open_read_only(dir: &Path, opts: FileBackendOptions) -> io::Result<FileBackend> {
+        FileBackend::open_impl(dir, opts, false)
+    }
+
+    fn open_impl(dir: &Path, opts: FileBackendOptions, repair: bool) -> io::Result<FileBackend> {
+        assert!(opts.flush_every_n >= 1, "flush_every_n must be at least 1");
+        if repair {
+            std::fs::create_dir_all(dir)?;
+        } else if !dir.is_dir() {
+            // Inspection of a mistyped path must not conjure an empty WAL.
+            return Err(io::Error::new(
+                io::ErrorKind::NotFound,
+                format!("no WAL directory at {}", dir.display()),
+            ));
+        }
+        let mut ids: Vec<u64> = std::fs::read_dir(dir)?
+            .filter_map(|e| e.ok())
+            .filter_map(|e| parse_seg_name(&e.file_name().to_string_lossy()))
+            .collect();
+        ids.sort_unstable();
+
+        let mut b = FileBackend {
+            dir: dir.to_path_buf(),
+            opts,
+            index: BTreeMap::new(),
+            segs: BTreeMap::new(),
+            active: ids.last().copied().unwrap_or(0) + 1,
+            buf: Vec::new(),
+            buffered_records: 0,
+            writer: None,
+            readers: BTreeMap::new(),
+            live_value_bytes: 0,
+            compactions: 0,
+            tail_truncated: 0,
+            in_compaction: false,
+            read_only: !repair,
+            crashed: false,
+        };
+
+        for (i, &id) in ids.iter().enumerate() {
+            let last = i + 1 == ids.len();
+            b.scan_segment(id, last, repair)?;
+        }
+        // Continue appending to the final segment if it has room,
+        // otherwise start a fresh one (lazily — inspection of an existing
+        // directory must not write).
+        if let Some((&last, st)) = b.segs.iter().next_back() {
+            if st.flushed_len < b.opts.segment_bytes {
+                b.active = last;
+            } else {
+                b.active = last + 1;
+            }
+        } else {
+            b.active = 1;
+        }
+        Ok(b)
+    }
+
+    /// Scan one segment into the index. A corrupt tail of the `last`
+    /// segment is tolerated — and truncated on disk when `repair` is set;
+    /// earlier segments must be fully valid.
+    fn scan_segment(&mut self, id: u64, last: bool, repair: bool) -> io::Result<()> {
+        let path = self.dir.join(seg_name(id));
+        let data = std::fs::read(&path)?;
+        let corrupt = |what: &str| {
+            io::Error::new(
+                io::ErrorKind::InvalidData,
+                format!(
+                    "segment {}: {what} (not the final segment — acknowledged state lost)",
+                    seg_name(id)
+                ),
+            )
+        };
+        if data.len() < MAGIC.len() || &data[..MAGIC.len()] != MAGIC {
+            if last {
+                // Nothing decodable was ever acknowledged from this file.
+                self.tail_truncated += data.len() as u64;
+                if repair {
+                    std::fs::remove_file(&path)?;
+                }
+                return Ok(());
+            }
+            return Err(corrupt("bad segment magic"));
+        }
+        let mut off = MAGIC.len() as u64;
+        let total = data.len() as u64;
+        let mut good = off;
+        loop {
+            if off == total {
+                break; // clean end
+            }
+            let valid = (|| {
+                if total - off < REC_HEADER {
+                    return None;
+                }
+                let hdr = &data[off as usize..(off + REC_HEADER) as usize];
+                let len = u32::from_le_bytes(hdr[0..4].try_into().unwrap()) as u64;
+                let crc = u64::from_le_bytes(hdr[4..12].try_into().unwrap());
+                if len > MAX_PAYLOAD || off + REC_HEADER + len > total {
+                    return None;
+                }
+                let payload =
+                    &data[(off + REC_HEADER) as usize..(off + REC_HEADER + len) as usize];
+                if fnv1a(payload) != crc {
+                    return None;
+                }
+                decode_payload(payload).map(|(op, key, value)| (op, key, value, REC_HEADER + len))
+            })();
+            let Some((op, key, value, rec_len)) = valid else {
+                if last {
+                    // Torn/corrupt tail: drop the unacknowledged suffix.
+                    self.tail_truncated += total - good;
+                    if repair {
+                        let f = OpenOptions::new().write(true).open(&path)?;
+                        f.set_len(good)?;
+                    }
+                    self.segs.entry(id).or_default().flushed_len = good;
+                    return Ok(());
+                }
+                return Err(corrupt("corrupt record"));
+            };
+            match op {
+                0 => {
+                    let value_len = value.as_ref().map(|v| v.len() as u64).unwrap_or(0);
+                    let loc = Loc { seg: id, off, len: rec_len, value_len };
+                    if let Some(old) = self.index.insert(key, loc) {
+                        self.mark_dead(old);
+                    }
+                    self.live_value_bytes += value_len;
+                }
+                _ => {
+                    if let Some(old) = self.index.remove(&key) {
+                        self.mark_dead(old);
+                    }
+                    // The tombstone itself is dead weight too.
+                    self.segs.entry(id).or_default().dead_bytes += rec_len;
+                }
+            }
+            off += rec_len;
+            good = off;
+        }
+        self.segs.entry(id).or_default().flushed_len = total;
+        Ok(())
+    }
+
+    fn mark_dead(&mut self, old: Loc) {
+        self.segs.entry(old.seg).or_default().dead_bytes += old.len;
+        self.live_value_bytes -= old.value_len;
+    }
+
+    fn active_len(&self) -> u64 {
+        self.segs.get(&self.active).map(|s| s.flushed_len).unwrap_or(0) + self.buf.len() as u64
+    }
+
+    /// Append one record to the active segment (buffered; creates the
+    /// segment header on first use). Returns the record's location.
+    fn append_record(&mut self, payload: Vec<u8>, value_len: u64) -> Loc {
+        assert!(!self.crashed, "FileBackend used after simulated crash");
+        assert!(!self.read_only, "FileBackend opened read-only (inspection)");
+        // The reopen scanner rejects larger length fields as corruption;
+        // refuse at write time rather than acknowledge a record that a
+        // restart could never read back.
+        assert!(
+            payload.len() as u64 <= MAX_PAYLOAD,
+            "WAL record payload of {} bytes exceeds the {MAX_PAYLOAD}-byte limit",
+            payload.len()
+        );
+        if !self.segs.contains_key(&self.active) {
+            // Fresh segment: the header rides the buffer like any write.
+            self.segs.insert(self.active, SegState::default());
+            self.buf.extend_from_slice(MAGIC);
+        }
+        let off = self.active_len();
+        let len = REC_HEADER + payload.len() as u64;
+        self.buf.extend_from_slice(&(payload.len() as u32).to_le_bytes());
+        self.buf.extend_from_slice(&fnv1a(&payload).to_le_bytes());
+        self.buf.extend_from_slice(&payload);
+        self.buffered_records += 1;
+        let loc = Loc { seg: self.active, off, len, value_len };
+        if self.buffered_records >= self.opts.flush_every_n {
+            self.flush();
+        }
+        if self.active_len() >= self.opts.segment_bytes {
+            self.rotate();
+        }
+        loc
+    }
+
+    /// Write the buffered tail to the active segment file.
+    fn flush(&mut self) {
+        if self.buf.is_empty() || self.crashed {
+            self.buf.clear();
+            self.buffered_records = 0;
+            return;
+        }
+        if self.writer.is_none() {
+            let f = OpenOptions::new()
+                .create(true)
+                .append(true)
+                .open(self.dir.join(seg_name(self.active)))
+                .expect("opening WAL segment for append");
+            self.writer = Some(f);
+        }
+        let w = self.writer.as_mut().unwrap();
+        w.write_all(&self.buf).expect("appending to WAL segment");
+        if self.opts.fsync {
+            w.sync_data().expect("fsync of WAL segment");
+        }
+        self.segs.get_mut(&self.active).expect("active segment state").flushed_len +=
+            self.buf.len() as u64;
+        self.buf.clear();
+        self.buffered_records = 0;
+    }
+
+    /// Seal the active segment and direct future appends at a fresh one.
+    /// Deliberately does NOT trigger compaction: rotation happens inside
+    /// `append_record`, *before* the caller has updated the index, and
+    /// compacting against a stale index could drop a just-written record
+    /// or resurrect a superseded one. Compaction runs only from the
+    /// post-index-update tails of `put`/`delete` (and explicit
+    /// `compact()`).
+    fn rotate(&mut self) {
+        self.flush();
+        self.writer = None;
+        self.active += 1;
+    }
+
+    /// Read a record's payload. Flushes first if the record is still in
+    /// the buffered tail.
+    fn read_payload(&mut self, loc: Loc) -> Vec<u8> {
+        if loc.seg == self.active
+            && loc.off + loc.len > self.segs.get(&loc.seg).map(|s| s.flushed_len).unwrap_or(0)
+        {
+            self.flush();
+        }
+        let f = self.readers.entry(loc.seg).or_insert_with(|| {
+            File::open(self.dir.join(seg_name(loc.seg))).expect("opening WAL segment for read")
+        });
+        f.seek(SeekFrom::Start(loc.off)).expect("seeking WAL segment");
+        let mut rec = vec![0u8; loc.len as usize];
+        f.read_exact(&mut rec).expect("reading WAL record");
+        rec.split_off(REC_HEADER as usize)
+    }
+
+    fn read_value(&mut self, loc: Loc) -> Vec<u8> {
+        let payload = self.read_payload(loc);
+        match decode_payload(&payload) {
+            Some((0, _, Some(v))) => v,
+            _ => panic!("indexed WAL record failed to decode (index/file out of sync)"),
+        }
+    }
+
+    /// Rewrite every sealed segment whose dead fraction crossed the
+    /// threshold: live records move to the active segment in one pass
+    /// over the index (O(live keys) however many segments die), then the
+    /// files go away. Reentrancy-guarded: the moves themselves append
+    /// and may rotate, which must not recurse into compaction.
+    fn maybe_compact(&mut self) {
+        if self.in_compaction {
+            return;
+        }
+        let victims: std::collections::BTreeSet<u64> = self
+            .segs
+            .iter()
+            .filter(|(&id, st)| {
+                id != self.active
+                    && st.flushed_len > MAGIC.len() as u64
+                    && (st.dead_bytes as f64) >= self.opts.compact_ratio * (st.flushed_len as f64)
+            })
+            .map(|(&id, _)| id)
+            .collect();
+        if victims.is_empty() {
+            return;
+        }
+        self.in_compaction = true;
+        let live: Vec<Key> = self
+            .index
+            .iter()
+            .filter(|(_, loc)| victims.contains(&loc.seg))
+            .map(|(k, _)| k.clone())
+            .collect();
+        for key in live {
+            let loc = self.index[&key];
+            let value = self.read_value(loc);
+            // Re-append; the old record's accounting dies with its
+            // segment below.
+            let new_loc =
+                self.append_record(encode_payload(0, &key, Some(&value)), value.len() as u64);
+            self.index.insert(key, new_loc);
+        }
+        // The moved records must be durable before their only other copy
+        // disappears, or a crash inside the group-commit window would
+        // lose acknowledged data — breaking the WAL's suffix-only-loss
+        // contract (flush honors `opts.fsync`).
+        self.flush();
+        for id in victims {
+            self.segs.remove(&id);
+            self.readers.remove(&id);
+            let _ = std::fs::remove_file(self.dir.join(seg_name(id)));
+            self.compactions += 1;
+        }
+        self.in_compaction = false;
+    }
+
+    /// Bytes dropped from a torn tail when this backend was opened.
+    pub fn tail_truncated_bytes(&self) -> u64 {
+        self.tail_truncated
+    }
+}
+
+impl StorageBackend for FileBackend {
+    fn put(&mut self, key: &Key, value: &[u8]) -> Option<u64> {
+        let loc = self.append_record(encode_payload(0, key, Some(value)), value.len() as u64);
+        self.live_value_bytes += value.len() as u64;
+        let old = self.index.insert(key.clone(), loc);
+        let replaced = old.map(|old| {
+            self.mark_dead(old);
+            old.value_len
+        });
+        // Overwrites strand dead bytes too (e.g. the input-frontier
+        // marker rewritten every epoch) — check the threshold now that
+        // the index points at the new record.
+        self.maybe_compact();
+        replaced
+    }
+
+    fn get(&mut self, key: &Key) -> Option<Vec<u8>> {
+        assert!(!self.crashed, "FileBackend used after simulated crash");
+        let loc = *self.index.get(key)?;
+        Some(self.read_value(loc))
+    }
+
+    fn delete(&mut self, key: &Key) -> Option<u64> {
+        if !self.index.contains_key(key) {
+            return None;
+        }
+        let loc = self.append_record(encode_payload(1, key, None), 0);
+        // The tombstone is dead the moment it lands.
+        self.segs.entry(loc.seg).or_default().dead_bytes += loc.len;
+        let old = self.index.remove(key).expect("checked above");
+        self.mark_dead(old);
+        self.maybe_compact();
+        Some(old.value_len)
+    }
+
+    fn scan_entries(&mut self, proc: u32) -> Vec<(Key, u64)> {
+        self.index.range(proc_range(proc)).map(|(k, loc)| (k.clone(), loc.value_len)).collect()
+    }
+
+    fn procs(&mut self) -> Vec<u32> {
+        crate::ft::storage::distinct_procs(self.index.keys())
+    }
+
+    fn sync(&mut self) {
+        self.flush();
+        if let Some(w) = self.writer.as_mut() {
+            // An fsync failure means acknowledged writes may not be
+            // durable — that must not be silent (reopen treats exactly
+            // this as fatal lost-acknowledged-state).
+            w.sync_all().expect("fsync of WAL segment");
+        }
+    }
+
+    fn info(&self) -> BackendInfo {
+        BackendInfo {
+            name: "file",
+            live_keys: self.index.len() as u64,
+            live_bytes: self.live_value_bytes,
+            file_bytes: self.segs.values().map(|s| s.flushed_len).sum::<u64>()
+                + self.buf.len() as u64,
+            segments: self.segs.len() as u64,
+            dead_bytes: self.segs.values().map(|s| s.dead_bytes).sum(),
+            compactions: self.compactions,
+        }
+    }
+
+    fn compact(&mut self) {
+        self.maybe_compact();
+    }
+
+    fn simulate_crash(&mut self) {
+        self.crashed = true;
+        self.buf.clear();
+        self.buffered_records = 0;
+        self.writer = None;
+    }
+}
+
+impl Drop for FileBackend {
+    fn drop(&mut self) {
+        if !self.crashed {
+            self.flush();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::tmp::TempDir;
+
+    fn k(proc: u32, kind: Kind, tag: u64) -> Key {
+        Key { proc, kind, tag }
+    }
+
+    fn opts(flush_every_n: usize) -> FileBackendOptions {
+        FileBackendOptions { flush_every_n, ..Default::default() }
+    }
+
+    #[test]
+    fn put_get_delete_roundtrip() {
+        let t = TempDir::new("wal-basic");
+        let mut b = FileBackend::open(t.path(), opts(1)).unwrap();
+        assert_eq!(b.put(&k(1, Kind::State, 1), b"hello"), None);
+        assert_eq!(b.get(&k(1, Kind::State, 1)), Some(b"hello".to_vec()));
+        assert_eq!(b.put(&k(1, Kind::State, 1), b"hi"), Some(5));
+        assert_eq!(b.get(&k(1, Kind::State, 1)), Some(b"hi".to_vec()));
+        assert_eq!(b.delete(&k(1, Kind::State, 1)), Some(2));
+        assert_eq!(b.get(&k(1, Kind::State, 1)), None);
+        assert_eq!(b.delete(&k(1, Kind::State, 1)), None);
+    }
+
+    #[test]
+    fn group_commit_buffers_then_flushes() {
+        let t = TempDir::new("wal-group");
+        let mut b = FileBackend::open(t.path(), opts(4)).unwrap();
+        for tag in 0..3 {
+            b.put(&k(0, Kind::LogEntry, tag), &[tag as u8; 16]);
+        }
+        // Nothing flushed yet; the buffered tail serves reads by flushing
+        // on demand.
+        assert!(b.segs.get(&b.active).map(|s| s.flushed_len).unwrap_or(0) < 16);
+        assert_eq!(b.get(&k(0, Kind::LogEntry, 2)), Some(vec![2u8; 16]));
+        assert!(b.buf.is_empty(), "read of a buffered record forces a flush");
+        // The 4th write crosses the group-commit width by itself.
+        b.put(&k(0, Kind::LogEntry, 3), &[9]);
+        for _ in 0..3 {
+            b.put(&k(0, Kind::LogEntry, 99), &[1]);
+        }
+        b.sync();
+        assert!(b.buf.is_empty());
+    }
+
+    #[test]
+    fn reopen_rebuilds_index() {
+        let t = TempDir::new("wal-reopen");
+        {
+            let mut b = FileBackend::open(t.path(), opts(2)).unwrap();
+            for tag in 0..10u32 {
+                b.put(&k(tag % 3, Kind::LogEntry, tag as u64), &[tag as u8; 8]);
+            }
+            b.put(&k(0, Kind::LogEntry, 0), b"overwritten");
+            b.delete(&k(1, Kind::LogEntry, 1));
+            // Dropped here: Drop flushes the tail.
+        }
+        let mut b = FileBackend::open(t.path(), opts(2)).unwrap();
+        assert_eq!(b.get(&k(0, Kind::LogEntry, 0)), Some(b"overwritten".to_vec()));
+        assert_eq!(b.get(&k(1, Kind::LogEntry, 1)), None);
+        assert_eq!(b.get(&k(2, Kind::LogEntry, 2)), Some(vec![2u8; 8]));
+        assert_eq!(b.index.len(), 9, "10 puts, 1 tombstone");
+        // Proc-ranged scans see only their processor.
+        assert_eq!(b.scan_keys(1).len(), 3 - 1);
+    }
+
+    #[test]
+    fn crash_loses_only_the_unflushed_suffix() {
+        let t = TempDir::new("wal-crash");
+        {
+            let mut b = FileBackend::open(t.path(), opts(100)).unwrap();
+            b.put(&k(0, Kind::State, 1), b"durable");
+            b.sync();
+            b.put(&k(0, Kind::State, 2), b"lost");
+            b.simulate_crash();
+            // Drop after crash must not write the tail.
+        }
+        let mut b = FileBackend::open(t.path(), opts(100)).unwrap();
+        assert_eq!(b.get(&k(0, Kind::State, 1)), Some(b"durable".to_vec()));
+        assert_eq!(b.get(&k(0, Kind::State, 2)), None, "unflushed write died with the crash");
+    }
+
+    #[test]
+    fn torn_tail_is_truncated_on_open() {
+        let t = TempDir::new("wal-torn");
+        {
+            let mut b = FileBackend::open(t.path(), opts(1)).unwrap();
+            b.put(&k(0, Kind::State, 1), b"keep-me");
+            b.put(&k(0, Kind::State, 2), b"torn-victim");
+        }
+        // Chop the final record in half (simulates a crash mid-write).
+        let seg = t.path().join(seg_name(1));
+        let len = std::fs::metadata(&seg).unwrap().len();
+        OpenOptions::new().write(true).open(&seg).unwrap().set_len(len - 5).unwrap();
+        let mut b = FileBackend::open(t.path(), opts(1)).unwrap();
+        assert!(b.tail_truncated_bytes() > 0);
+        assert_eq!(b.get(&k(0, Kind::State, 1)), Some(b"keep-me".to_vec()));
+        assert_eq!(b.get(&k(0, Kind::State, 2)), None);
+        // The truncated file is clean again: append + reopen still works.
+        b.put(&k(0, Kind::State, 3), b"after-truncate");
+        drop(b);
+        let mut b = FileBackend::open(t.path(), opts(1)).unwrap();
+        assert_eq!(b.get(&k(0, Kind::State, 3)), Some(b"after-truncate".to_vec()));
+    }
+
+    #[test]
+    fn corrupt_checksum_tail_is_dropped() {
+        let t = TempDir::new("wal-crc");
+        {
+            let mut b = FileBackend::open(t.path(), opts(1)).unwrap();
+            b.put(&k(0, Kind::State, 1), b"good");
+            b.put(&k(0, Kind::State, 2), b"flipped");
+        }
+        let seg = t.path().join(seg_name(1));
+        let mut data = std::fs::read(&seg).unwrap();
+        let n = data.len();
+        data[n - 1] ^= 0xff; // flip a payload bit of the last record
+        std::fs::write(&seg, &data).unwrap();
+        let mut b = FileBackend::open(t.path(), opts(1)).unwrap();
+        assert_eq!(b.get(&k(0, Kind::State, 1)), Some(b"good".to_vec()));
+        assert_eq!(b.get(&k(0, Kind::State, 2)), None);
+    }
+
+    #[test]
+    fn rotation_and_compaction_reclaim_dead_segments() {
+        let t = TempDir::new("wal-compact");
+        let o = FileBackendOptions {
+            flush_every_n: 1,
+            segment_bytes: 256,
+            compact_ratio: 0.5,
+            fsync: false,
+        };
+        let mut b = FileBackend::open(t.path(), o).unwrap();
+        for tag in 0..40 {
+            b.put(&k(0, Kind::LogEntry, tag), &[0u8; 32]);
+        }
+        assert!(b.segs.len() > 2, "small segments must have rotated");
+        let before = b.info();
+        // Tombstone most of the early records: their segments cross the
+        // dead threshold and compact away.
+        for tag in 0..36 {
+            b.delete(&k(0, Kind::LogEntry, tag));
+        }
+        let after = b.info();
+        assert!(after.compactions > 0, "threshold-triggered compaction ran");
+        assert!(
+            after.file_bytes < before.file_bytes + 36 * 16,
+            "compaction reclaimed dead segments (file {} → {})",
+            before.file_bytes,
+            after.file_bytes
+        );
+        // Survivors are intact, including after a reopen.
+        for tag in 36..40 {
+            assert_eq!(b.get(&k(0, Kind::LogEntry, tag)), Some(vec![0u8; 32]));
+        }
+        drop(b);
+        let mut b = FileBackend::open(t.path(), o).unwrap();
+        for tag in 0..36 {
+            assert_eq!(b.get(&k(0, Kind::LogEntry, tag)), None);
+        }
+        for tag in 36..40 {
+            assert_eq!(b.get(&k(0, Kind::LogEntry, tag)), Some(vec![0u8; 32]));
+        }
+    }
+
+    /// Compaction moves live records out of dying segments; those moves
+    /// must be flushed before the source file is removed, or a crash in
+    /// the group-commit window would lose *acknowledged* data (suffix-
+    /// only loss is the WAL contract — regression test for exactly that).
+    #[test]
+    fn compaction_is_crash_safe_under_group_commit() {
+        let t = TempDir::new("wal-compact-crash");
+        let o = FileBackendOptions {
+            flush_every_n: 1000, // nothing flushes on its own
+            segment_bytes: 256,
+            compact_ratio: 0.5,
+            fsync: false,
+        };
+        let mut b = FileBackend::open(t.path(), o).unwrap();
+        for tag in 0..40 {
+            b.put(&k(0, Kind::LogEntry, tag), &[tag as u8; 32]);
+        }
+        b.sync(); // all 40 durable
+        // Tombstone 4 of every 5 records: every segment crosses the dead
+        // threshold, so each survivor (tag ≡ 0 mod 5) is *moved* by
+        // compaction into the group-commit buffer of the active segment.
+        for tag in 0..40 {
+            if tag % 5 != 0 {
+                b.delete(&k(0, Kind::LogEntry, tag));
+            }
+        }
+        assert!(b.info().compactions > 0, "compaction must have run");
+        b.simulate_crash(); // die with the group-commit buffer unflushed
+        drop(b);
+        let mut b = FileBackend::open(t.path(), o).unwrap();
+        for tag in (0..40).step_by(5) {
+            assert_eq!(
+                b.get(&k(0, Kind::LogEntry, tag)),
+                Some(vec![tag as u8; 32]),
+                "record moved by compaction must survive the crash"
+            );
+        }
+        // (Unflushed tombstones may legitimately resurrect their keys —
+        // the deletes were never acknowledged-durable; that is suffix
+        // loss, not corruption.)
+    }
+
+    #[test]
+    fn open_is_read_only() {
+        let t = TempDir::new("wal-ro");
+        {
+            let mut b = FileBackend::open(t.path(), opts(1)).unwrap();
+            b.put(&k(0, Kind::State, 1), b"x");
+        }
+        let files_before = std::fs::read_dir(t.path()).unwrap().count();
+        let _inspect = FileBackend::open(t.path(), opts(1)).unwrap();
+        let files_after = std::fs::read_dir(t.path()).unwrap().count();
+        assert_eq!(files_before, files_after, "opening for inspection creates no files");
+    }
+
+    /// Inspection of a torn WAL must not repair it: the damaged tail
+    /// stays on disk byte-for-byte while the read-only view still serves
+    /// the valid prefix.
+    #[test]
+    fn read_only_open_leaves_torn_tail_untouched() {
+        let t = TempDir::new("wal-ro-torn");
+        {
+            let mut b = FileBackend::open(t.path(), opts(1)).unwrap();
+            b.put(&k(0, Kind::State, 1), b"keep-me");
+            b.put(&k(0, Kind::State, 2), b"torn-victim");
+        }
+        let seg = t.path().join(seg_name(1));
+        let torn_len = std::fs::metadata(&seg).unwrap().len() - 5;
+        OpenOptions::new().write(true).open(&seg).unwrap().set_len(torn_len).unwrap();
+        let mut ro = FileBackend::open_read_only(t.path(), opts(1)).unwrap();
+        assert!(ro.tail_truncated_bytes() > 0);
+        assert_eq!(ro.get(&k(0, Kind::State, 1)), Some(b"keep-me".to_vec()));
+        assert_eq!(ro.get(&k(0, Kind::State, 2)), None);
+        drop(ro);
+        assert_eq!(
+            std::fs::metadata(&seg).unwrap().len(),
+            torn_len,
+            "read-only open must not truncate the file"
+        );
+        // A subsequent writable open still repairs and recovers.
+        let mut b = FileBackend::open(t.path(), opts(1)).unwrap();
+        assert_eq!(b.get(&k(0, Kind::State, 1)), Some(b"keep-me".to_vec()));
+        assert!(std::fs::metadata(&seg).unwrap().len() < torn_len);
+    }
+
+    #[test]
+    fn mid_log_corruption_is_an_error() {
+        let t = TempDir::new("wal-midcorrupt");
+        let o = FileBackendOptions {
+            flush_every_n: 1,
+            segment_bytes: 128,
+            compact_ratio: 2.0, // never compact (keep the corrupted file)
+            fsync: false,
+        };
+        {
+            let mut b = FileBackend::open(t.path(), o).unwrap();
+            for tag in 0..20 {
+                b.put(&k(0, Kind::State, tag), &[1u8; 32]);
+            }
+            assert!(b.segs.len() >= 2);
+        }
+        // Corrupt the FIRST segment: that is lost acknowledged state.
+        let seg = t.path().join(seg_name(1));
+        let mut data = std::fs::read(&seg).unwrap();
+        data[MAGIC.len() + 5] ^= 0xff;
+        std::fs::write(&seg, &data).unwrap();
+        let err = FileBackend::open(t.path(), o).unwrap_err();
+        assert_eq!(err.kind(), io::ErrorKind::InvalidData);
+    }
+}

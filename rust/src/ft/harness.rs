@@ -32,12 +32,12 @@
 use crate::engine::scheduler::WorkerState;
 use crate::engine::{Delivery, Engine, EventKind, EventReport, Processor, Record};
 use crate::frontier::Frontier;
-use crate::ft::meta::{CkptMeta, LogEntry, StoredCheckpoint};
+use crate::ft::meta::{CkptMeta, LogEntry, MetaRecord, StoredCheckpoint};
 use crate::ft::policy::Policy;
 use crate::ft::storage::{Key, Kind, Store};
 use crate::graph::{EdgeId, ProcId, Topology};
 use crate::time::{LexTime, Time};
-use crate::util::ser::Encode;
+use crate::util::ser::{Decode, Encode, Reader, SerError};
 use std::collections::{BTreeMap, BTreeSet};
 use std::sync::Arc;
 
@@ -86,6 +86,26 @@ impl Encode for HistoryEvent {
     }
 }
 
+impl Decode for HistoryEvent {
+    fn decode(r: &mut Reader) -> Result<Self, SerError> {
+        match r.u8()? {
+            0 => {
+                let edge = EdgeId(r.varint()? as u32);
+                let time = Time::decode(r)?;
+                let n = r.varint()? as usize;
+                let mut data = Vec::with_capacity(n.min(1 << 16));
+                for _ in 0..n {
+                    data.push(Record::decode(r)?);
+                }
+                Ok(HistoryEvent::Message { edge, time, data })
+            }
+            1 => Ok(HistoryEvent::Notification { time: Time::decode(r)? }),
+            2 => Ok(HistoryEvent::Input { time: Time::decode(r)?, data: Record::decode(r)? }),
+            found => Err(SerError::BadTag { expected: 0, found, at: 0 }),
+        }
+    }
+}
+
 /// Per-processor fault-tolerance state (volatile deltas + durable
 /// mirrors).
 pub(crate) struct ProcFt {
@@ -110,10 +130,23 @@ pub(crate) struct ProcFt {
     pub sent_total: BTreeMap<EdgeId, u64>,
     /// Durable log of sent messages (mirror of what's in the store).
     pub log: Vec<LogEntry>,
+    /// Storage tags of `log` entries (parallel vector), so truncation and
+    /// GC can delete exactly the dropped blobs.
+    pub log_tags: Vec<u64>,
     /// Durable full history (mirror), for [`Policy::FullHistory`].
     pub history: Vec<HistoryEvent>,
+    /// Storage tags of `history` entries (parallel vector).
+    pub history_tags: Vec<u64>,
     /// F*(p): ascending chain of durable checkpoints (mirror).
     pub chain: Vec<StoredCheckpoint>,
+    /// Storage tags of `chain` entries (parallel vector; one tag keys
+    /// both the `State` and `Meta` blob of a checkpoint).
+    pub chain_tags: Vec<u64>,
+    /// Durable input-frontier marker (sources only): input times the
+    /// processor has completely consumed with their resulting sends
+    /// acknowledged in the log — the §4.2 Ξ of a stateless logging
+    /// source. Mirrors the `Kind::InputFrontier` blob at tag 0.
+    pub input_mark: Frontier,
     /// Completed-time counter (drives [`Policy::Lazy`]).
     pub completions: u64,
     /// Marked by failure injection; cleared by recovery.
@@ -133,8 +166,12 @@ impl ProcFt {
             sent_events: BTreeMap::new(),
             sent_total: BTreeMap::new(),
             log: Vec::new(),
+            log_tags: Vec::new(),
             history: Vec::new(),
+            history_tags: Vec::new(),
             chain: Vec::new(),
+            chain_tags: Vec::new(),
+            input_mark: Frontier::Bottom,
             completions: 0,
             failed: false,
             next_key: 0,
@@ -248,10 +285,35 @@ fn eager_frontier_of(ft: &ProcFt) -> Frontier {
     f
 }
 
+/// Retain the entries of a mirror vector (and its parallel tag vector)
+/// matching `keep`, invoking `on_drop(tag)` for each dropped entry —
+/// linear and order-preserving, unlike per-index `Vec::remove`.
+pub(crate) fn retain_with_tags<T>(
+    items: &mut Vec<T>,
+    tags: &mut Vec<u64>,
+    mut keep: impl FnMut(&T) -> bool,
+    mut on_drop: impl FnMut(u64),
+) {
+    debug_assert_eq!(items.len(), tags.len(), "mirror and tag vectors must stay parallel");
+    let mut w = 0;
+    for i in 0..items.len() {
+        if keep(&items[i]) {
+            items.swap(w, i);
+            tags.swap(w, i);
+            w += 1;
+        } else {
+            on_drop(tags[i]);
+        }
+    }
+    items.truncate(w);
+    tags.truncate(w);
+}
+
 fn persist_history(store: &Store, ft: &mut ProcFt, proc: u32, ev: HistoryEvent) {
     let tag = ft.fresh_key();
     store.put(Key { proc, kind: Kind::HistoryEvent, tag }, ev.to_bytes());
     ft.history.push(ev);
+    ft.history_tags.push(tag);
 }
 
 /// Observe one event report for its processor: update deltas, logs,
@@ -341,6 +403,7 @@ fn observe_event<V: FtView>(
             );
             stats.log_records += entry.records() as u64;
             ft.log.push(entry);
+            ft.log_tags.push(tag);
             stats.log_entries += 1;
         } else {
             // D̄ is a frontier of message times; the batch's records
@@ -457,11 +520,16 @@ fn checkpoint_proc<V: FtView>(
         view.proc_pending(p).into_iter().filter(|t| f.contains(t)).collect();
     let stored = StoredCheckpoint { meta, state, pending_notify };
     // Persist state then Ξ (the §4.2 protocol: metadata reaches the
-    // monitor only once everything is acknowledged).
+    // monitor only once everything is acknowledged — and in a WAL the
+    // state lands strictly earlier in append order, so a torn tail can
+    // lose the Ξ but never leave one without its state).
     let tag = ft.fresh_key();
     store.put(Key { proc: p.0, kind: Kind::State, tag }, stored.state.clone());
-    store.put(Key { proc: p.0, kind: Kind::Meta, tag }, stored.meta.to_bytes());
+    let rec =
+        MetaRecord { meta: stored.meta.clone(), pending_notify: stored.pending_notify.clone() };
+    store.put(Key { proc: p.0, kind: Kind::Meta, tag }, rec.to_bytes());
     ft.chain.push(stored);
+    ft.chain_tags.push(tag);
     stats.checkpoints_taken += 1;
 }
 
@@ -579,12 +647,176 @@ impl FtSystem {
         FtSystem::new_with_cap(plan.topo.clone(), procs, policies, delivery, store, batch_cap)
     }
 
+    /// **Cold-restart recovery**: rebuild a system from a reopened
+    /// durable store — the process died (taking every operator state,
+    /// channel, frontier and unflushed write with it) and a fresh process
+    /// reattaches to the same storage.
+    ///
+    /// `topo`/`procs`/`policies`/`delivery`/`batch_cap` must describe the
+    /// same application as the run that wrote the store (fresh operator
+    /// instances — their state is restored from checkpoints). The loader
+    /// rescans each processor's key range into the Table-1 mirrors (Ξ
+    /// records with their pending notifications, checkpoint states, logs,
+    /// full histories, input-frontier markers), then treats the restart
+    /// as the failure scenario in which **every** processor crashed at
+    /// once: the Fig. 6 solver picks the maximal durably-consistent
+    /// frontiers and the §3.6 reset restores states, re-arms
+    /// notifications, and replays Q′ from the reopened logs. External
+    /// inputs beyond the chosen source frontiers must be resupplied by
+    /// the §4.3 services (`ExternalInput::replay_from`), exactly as after
+    /// an in-process failure.
+    ///
+    /// Returns the system plus the recovery report (whose plan tells the
+    /// caller which input frontier each source resumed from).
+    pub fn reopen(
+        topo: Arc<Topology>,
+        procs: Vec<Box<dyn Processor>>,
+        policies: Vec<Policy>,
+        delivery: Delivery,
+        store: Store,
+        batch_cap: usize,
+    ) -> (FtSystem, crate::ft::recovery::RecoveryReport) {
+        let mut sys = FtSystem::new_with_cap(topo, procs, policies, delivery, store, batch_cap);
+        sys.load_durable();
+        let all: Vec<ProcId> = sys.topo.proc_ids().collect();
+        sys.inject_failures(&all);
+        let report = sys.recover();
+        (sys, report)
+    }
+
+    /// [`FtSystem::reopen`] for a sharded plan (the counterpart of
+    /// [`FtSystem::new_sharded_with_cap`]).
+    pub fn reopen_sharded(
+        plan: &Arc<crate::graph::sharding::ShardPlan>,
+        factories: Vec<crate::engine::sharded::ProcFactory>,
+        logical_policies: &[Policy],
+        delivery: Delivery,
+        store: Store,
+        batch_cap: usize,
+    ) -> (FtSystem, crate::ft::recovery::RecoveryReport) {
+        let procs = crate::engine::sharded::build_procs(plan, factories);
+        let policies = plan.expand_per_proc(logical_policies);
+        FtSystem::reopen(plan.topo.clone(), procs, policies, delivery, store, batch_cap)
+    }
+
+    /// Rebuild every processor's Table-1 mirrors from the durable store
+    /// (one ranged key scan per processor).
+    fn load_durable(&mut self) {
+        let store = self.store.clone();
+        for p in self.topo.proc_ids() {
+            let keys = store.scan_keys(p.0);
+            let mut metas: BTreeMap<u64, MetaRecord> = BTreeMap::new();
+            let mut states: BTreeMap<u64, Vec<u8>> = BTreeMap::new();
+            let mut logs: BTreeMap<u64, LogEntry> = BTreeMap::new();
+            let mut hist: BTreeMap<u64, HistoryEvent> = BTreeMap::new();
+            let mut mark = Frontier::Bottom;
+            let mut next_key = 0u64;
+            for k in keys {
+                next_key = next_key.max(k.tag);
+                let blob = store.get(&k).expect("scanned key must resolve");
+                match k.kind {
+                    Kind::Meta => {
+                        let rec = MetaRecord::from_bytes(&blob)
+                            .expect("corrupt Ξ record below the WAL checksum layer");
+                        metas.insert(k.tag, rec);
+                    }
+                    Kind::State => {
+                        states.insert(k.tag, blob);
+                    }
+                    Kind::LogEntry => {
+                        let le = LogEntry::from_bytes(&blob).expect("corrupt log entry");
+                        logs.insert(k.tag, le);
+                    }
+                    Kind::HistoryEvent => {
+                        let ev =
+                            HistoryEvent::from_bytes(&blob).expect("corrupt history event");
+                        hist.insert(k.tag, ev);
+                    }
+                    Kind::InputFrontier => {
+                        mark = Frontier::from_bytes(&blob).expect("corrupt input marker");
+                    }
+                }
+            }
+            let ft = &mut self.ft[p.0 as usize];
+            for (tag, rec) in metas {
+                // A Ξ without its state cannot survive (the state lands
+                // strictly earlier in WAL append order, and crashes lose
+                // only suffixes). An orphan *state* is just a checkpoint
+                // whose Ξ never became durable: unacknowledged, dropped.
+                let state = states
+                    .remove(&tag)
+                    .expect("durable Ξ record without its state blob");
+                debug_assert!(
+                    ft.chain.last().map(|c| c.meta.f.is_subset(&rec.meta.f)).unwrap_or(true),
+                    "reopened checkpoint chain must ascend"
+                );
+                ft.chain.push(StoredCheckpoint {
+                    meta: rec.meta,
+                    state,
+                    pending_notify: rec.pending_notify,
+                });
+                ft.chain_tags.push(tag);
+            }
+            for tag in states.into_keys() {
+                store.delete(&Key { proc: p.0, kind: Kind::State, tag });
+            }
+            for (tag, le) in logs {
+                ft.log.push(le);
+                ft.log_tags.push(tag);
+            }
+            for (tag, ev) in hist {
+                ft.history.push(ev);
+                ft.history_tags.push(tag);
+            }
+            ft.input_mark = mark;
+            ft.next_key = next_key;
+            // Best-effort cadence counter: a lazy processor checkpointed
+            // once per `every` completions, so this restores the trigger
+            // phase (never output-visible; exact for `every = 1`).
+            ft.completions = match ft.policy {
+                Policy::FullHistory => ft
+                    .history
+                    .iter()
+                    .filter(|e| matches!(e, HistoryEvent::Notification { .. }))
+                    .count() as u64,
+                Policy::Lazy { every, .. } => ft.chain.len() as u64 * every,
+                _ => 0,
+            };
+        }
+    }
+
     pub fn topology(&self) -> &Topology {
         &self.topo
     }
 
     pub fn policy(&self, p: ProcId) -> Policy {
         self.ft[p.0 as usize].policy
+    }
+
+    /// Reconstruct the §4.2 GC monitoring service after a cold restart
+    /// from this system's reopened checkpoint chains (the counterpart of
+    /// [`crate::ft::monitor::Monitor::reopen`] — the monitor's durable
+    /// input IS the set of acknowledged Ξ records this system just
+    /// reloaded). `stateless[p]`/`logs[p]` classify processors exactly as
+    /// in [`crate::ft::monitor::Monitor::new`].
+    pub fn rebuild_monitor(
+        &self,
+        stateless: Vec<bool>,
+        logs: Vec<bool>,
+    ) -> crate::ft::monitor::Monitor {
+        let chains: Vec<Vec<CkptMeta>> = self
+            .ft
+            .iter()
+            .enumerate()
+            .map(|(i, ft)| {
+                if stateless[i] {
+                    Vec::new()
+                } else {
+                    ft.chain.iter().map(|c| c.meta.clone()).collect()
+                }
+            })
+            .collect();
+        crate::ft::monitor::Monitor::reopen(self.topo.clone(), stateless, logs, chains)
     }
 
     /// Process one event, maintaining all FT metadata.
@@ -615,10 +847,52 @@ impl FtSystem {
 
     pub fn advance_input(&mut self, p: ProcId, t: Time) {
         self.engine.advance_input(p, t);
+        self.note_input_advance(p, Some(t));
     }
 
     pub fn close_input(&mut self, p: ProcId) {
         self.engine.close_input(p);
+        self.note_input_advance(p, None);
+    }
+
+    /// Maintain the durable input-frontier marker of a logging source:
+    /// moving the input capability past a time makes it *complete* at the
+    /// source (no in-edges, no notifications — inputs are its only
+    /// events), and all sends those inputs caused were already
+    /// acknowledged in the log/history (they were written before this
+    /// marker, and the WAL loses only suffixes). The marker is therefore
+    /// a valid §4.2 Ξ(p,f) with S = ∅, which is what lets a *failed* (or
+    /// cold-restarted) logging source offer a nonempty frontier instead
+    /// of dragging the whole dataflow to ∅. `upto = None` means the
+    /// stream closed: everything consumed is complete.
+    fn note_input_advance(&mut self, p: ProcId, upto: Option<Time>) {
+        if !self.topo.in_edges(p).is_empty() {
+            return;
+        }
+        let ft = &mut self.ft[p.0 as usize];
+        if !(ft.policy.logs_outputs() || ft.policy.records_history()) {
+            return;
+        }
+        let mut mark = ft.input_mark.clone();
+        let mut changed = false;
+        for lt in &ft.input_new {
+            let closed = match &upto {
+                // Only times strictly below the capability are certainly
+                // closed (incomparable times could still receive input —
+                // the engine's push guard permits them).
+                Some(t) => lt.0.lt(t),
+                None => true,
+            };
+            if closed && !mark.contains(&lt.0) {
+                mark.insert(lt.0);
+                changed = true;
+            }
+        }
+        if changed {
+            ft.input_mark = mark.clone();
+            let store = self.store.clone();
+            store.put(Key { proc: p.0, kind: Kind::InputFrontier, tag: 0 }, mark.to_bytes());
+        }
     }
 
     /// Observe an event report: update deltas, logs, histories, and run
@@ -750,9 +1024,46 @@ impl FtSystem {
         CkptMeta { f: Frontier::Top, n_bar, m_bar, d_bar, phi }
     }
 
+    /// The synthetic Ξ(p, f) a failed logging **source** can offer from
+    /// its durable input-frontier marker (see
+    /// [`ProcFt::input_mark`]): S = ∅ (stateless), M̄ = ∅ (no in-edges —
+    /// external inputs are resupplied by the §4.3 services, footnote 1),
+    /// N̄ = ∅ (sources process no notifications), D̄ = ∅ (every send
+    /// inside the marker is acknowledged in the log / history), and φ
+    /// from the static projections — or, for per-checkpoint edges, the
+    /// acknowledged log's record count inside the marker.
+    pub(crate) fn source_marker_meta(&self, p: ProcId) -> Option<CkptMeta> {
+        let ft = &self.ft[p.0 as usize];
+        if !self.topo.in_edges(p).is_empty()
+            || ft.input_mark.is_bottom()
+            || !(ft.policy.logs_outputs() || ft.policy.records_history())
+        {
+            return None;
+        }
+        let out_edges = self.topo.out_edges(p);
+        let mut meta = CkptMeta::empty(&[], out_edges);
+        meta.f = ft.input_mark.clone();
+        for &e in out_edges {
+            let fr = match self.topo.projection(e).apply(&meta.f) {
+                Some(fr) => fr,
+                None => {
+                    let count: u64 = ft
+                        .log
+                        .iter()
+                        .filter(|le| le.edge == e && meta.f.contains(&le.event_time))
+                        .map(|le| le.records() as u64)
+                        .sum();
+                    Frontier::seq_watermarks([(e, count)])
+                }
+            };
+            meta.phi.insert(e, fr);
+        }
+        Some(meta)
+    }
+
     /// φ(e)(g) evaluated against the live system (recovery-time helper):
     /// static projections compute; per-checkpoint ones read the chain (or
-    /// the live counters at ⊤).
+    /// the live counters at ⊤, or a source's marker Ξ).
     pub(crate) fn phi_runtime(&self, e: EdgeId, g: &Frontier) -> Frontier {
         if let Some(f) = self.topo.projection(e).apply(g) {
             return f;
@@ -764,14 +1075,13 @@ impl FtSystem {
             return Frontier::seq_watermarks([(e, self.engine.seq_counter(e))]);
         }
         let src = self.topo.src(e);
-        self.ft[src.0 as usize]
-            .chain
-            .iter()
-            .find(|c| &c.meta.f == g)
-            .unwrap_or_else(|| panic!("phi_runtime: {g} is not a checkpoint of {src}"))
-            .meta
-            .phi_of(e)
-            .clone()
+        if let Some(c) = self.ft[src.0 as usize].chain.iter().find(|c| &c.meta.f == g) {
+            return c.meta.phi_of(e).clone();
+        }
+        match self.source_marker_meta(src) {
+            Some(m) if &m.f == g => m.phi_of(e).clone(),
+            _ => panic!("phi_runtime: {g} is not a checkpoint of {src}"),
+        }
     }
 
     /// Number of durable checkpoints at `p` (tests/benches).
@@ -789,7 +1099,10 @@ impl FtSystem {
     /// checkpoints strictly below the watermark (keeping the newest one
     /// at-or-below, which remains the restore point), or drop logged
     /// messages whose times the destination will never need re-sent.
-    /// Returns the number of durable objects released.
+    /// Every mirror entry carries its storage tag, so exactly the doomed
+    /// blobs are deleted — which a [`crate::ft::backend_file::FileBackend`]
+    /// turns into tombstones and, past the dead-byte threshold, segment
+    /// compaction. Returns the number of durable objects released.
     pub fn apply_gc(&mut self, action: &crate::ft::monitor::GcAction) -> usize {
         match action {
             crate::ft::monitor::GcAction::DropCheckpointsBelow { proc, watermark } => {
@@ -804,47 +1117,26 @@ impl FtSystem {
                 let dropped = keep_from;
                 if dropped > 0 {
                     ft.chain.drain(..dropped);
-                    // Release the store blobs for pruned checkpoints
-                    // (state+meta pairs are keyed monotonically; drop the
-                    // oldest `dropped` of each kind).
-                    let mut metas = self.store.keys_for(proc.0, Kind::Meta);
-                    metas.sort();
-                    for k in metas.iter().take(dropped) {
-                        self.store.delete(k);
-                    }
-                    let mut states = self.store.keys_for(proc.0, Kind::State);
-                    states.sort();
-                    for k in states.iter().take(dropped) {
-                        self.store.delete(k);
+                    for tag in ft.chain_tags.drain(..dropped) {
+                        self.store.delete(&Key { proc: proc.0, kind: Kind::Meta, tag });
+                        self.store.delete(&Key { proc: proc.0, kind: Kind::State, tag });
                     }
                 }
                 dropped
             }
             crate::ft::monitor::GcAction::DropLogWithin { proc, edge, watermark } => {
                 let ft = &mut self.ft[proc.0 as usize];
-                let before = ft.log.len();
-                ft.log.retain(|le| le.edge != *edge || !watermark.contains(&le.batch.time));
-                let dropped = before - ft.log.len();
-                // Durable log entries are keyed in append order; rather
-                // than tracking per-entry keys, rewrite the survivor set
-                // when anything was dropped (simple and correct; the
-                // store charges writes, keeping the cost visible).
-                if dropped > 0 {
-                    self.store.delete_matching(proc.0, |k| k.kind == Kind::LogEntry);
-                    let entries: Vec<(Vec<u8>, u64)> = ft
-                        .log
-                        .iter()
-                        .map(|le| (le.to_bytes(), le.records() as u64))
-                        .collect();
-                    for (bytes, records) in entries {
-                        let tag = self.ft[proc.0 as usize].fresh_key();
-                        self.store.put_log(
-                            Key { proc: proc.0, kind: Kind::LogEntry, tag },
-                            bytes,
-                            records,
-                        );
-                    }
-                }
+                let store = self.store.clone();
+                let mut dropped = 0;
+                retain_with_tags(
+                    &mut ft.log,
+                    &mut ft.log_tags,
+                    |le| le.edge != *edge || !watermark.contains(&le.batch.time),
+                    |tag| {
+                        store.delete(&Key { proc: proc.0, kind: Kind::LogEntry, tag });
+                        dropped += 1;
+                    },
+                );
                 dropped
             }
         }
@@ -879,6 +1171,17 @@ mod tests {
         ];
         let sys = FtSystem::new(topo, procs, policies, Delivery::Fifo, Store::new(1));
         (sys, src, out)
+    }
+
+    #[test]
+    fn retain_with_tags_is_order_preserving() {
+        let mut items = vec![10, 11, 12, 13, 14, 15];
+        let mut tags = vec![1u64, 2, 3, 4, 5, 6];
+        let mut dropped = Vec::new();
+        retain_with_tags(&mut items, &mut tags, |x| x % 2 == 0, |t| dropped.push(t));
+        assert_eq!(items, vec![10, 12, 14]);
+        assert_eq!(tags, vec![1, 3, 5]);
+        assert_eq!(dropped, vec![2, 4, 6]);
     }
 
     #[test]

@@ -138,6 +138,39 @@ impl Decode for StoredCheckpoint {
     }
 }
 
+/// The durable form of Ξ(p,f) — what a `Kind::Meta` blob holds: the
+/// solver-facing [`CkptMeta`] plus the pending-notification set a cold
+/// reopen needs to re-arm (the state payload S(p,f) lives in a separate
+/// `Kind::State` blob under the same tag, written *before* the Ξ so a
+/// torn WAL tail can lose the Ξ but never leave one without its state).
+#[derive(Clone, Debug, PartialEq)]
+pub struct MetaRecord {
+    pub meta: CkptMeta,
+    pub pending_notify: Vec<Time>,
+}
+
+impl Encode for MetaRecord {
+    fn encode(&self, w: &mut Writer) {
+        self.meta.encode(w);
+        w.varint(self.pending_notify.len() as u64);
+        for t in &self.pending_notify {
+            t.encode(w);
+        }
+    }
+}
+
+impl Decode for MetaRecord {
+    fn decode(r: &mut Reader) -> Result<Self, SerError> {
+        let meta = CkptMeta::decode(r)?;
+        let n = r.varint()? as usize;
+        let mut pending_notify = Vec::with_capacity(n.min(1 << 16));
+        for _ in 0..n {
+            pending_notify.push(Time::decode(r)?);
+        }
+        Ok(MetaRecord { meta, pending_notify })
+    }
+}
+
 /// One logged sent batch (an element of L(e,·)): the destination-domain
 /// batch plus the time of the event at `p` that produced it, which is
 /// what lets L(e,f) = entries with `event_time ∈ f` be computed exactly
@@ -222,6 +255,16 @@ mod tests {
         assert_eq!(le.records(), 2);
         let bytes = le.to_bytes();
         assert_eq!(LogEntry::from_bytes(&bytes).unwrap(), le);
+    }
+
+    #[test]
+    fn meta_record_roundtrip() {
+        let rec = MetaRecord {
+            meta: CkptMeta::empty(&[EdgeId(0)], &[EdgeId(1)]),
+            pending_notify: vec![Time::epoch(2), Time::epoch(5)],
+        };
+        let bytes = rec.to_bytes();
+        assert_eq!(MetaRecord::from_bytes(&bytes).unwrap(), rec);
     }
 
     #[test]

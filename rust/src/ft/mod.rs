@@ -2,14 +2,19 @@
 //!
 //! - [`policy`]: per-processor checkpoint/logging policies (Fig. 1 regimes);
 //! - [`meta`]: Table-1 checkpoint metadata Ξ(p,f);
-//! - [`storage`]: the acknowledged durable-store substrate;
+//! - [`storage`]: the acknowledged durable-store substrate behind the
+//!   pluggable [`storage::StorageBackend`] trait;
+//! - [`backend_file`]: the on-disk segmented write-ahead-log backend
+//!   (group commit, crash-scan reopen, tombstones + compaction);
 //! - [`harness`]: the system layer observing events and taking selective
-//!   checkpoints;
+//!   checkpoints, plus cold-restart reconstruction
+//!   ([`harness::FtSystem::reopen`]);
 //! - [`rollback`]: the §3.5 constraints and Fig. 6 fixed-point solver;
 //! - [`recovery`]: §4.4 failure handling — pause, solve, reset, replay;
 //! - [`monitor`]: the §4.2 garbage-collection monitoring service;
 //! - [`external`]: §4.3 acknowledged external inputs/outputs.
 
+pub mod backend_file;
 pub mod external;
 pub mod harness;
 pub mod meta;
@@ -19,8 +24,9 @@ pub mod recovery;
 pub mod rollback;
 pub mod storage;
 
+pub use backend_file::{FileBackend, FileBackendOptions};
 pub use harness::{FtStats, FtSystem, HistoryEvent};
-pub use meta::{CkptMeta, LogEntry, StoredCheckpoint};
+pub use meta::{CkptMeta, LogEntry, MetaRecord, StoredCheckpoint};
 pub use policy::Policy;
 pub use rollback::{choose_frontiers, verify_plan, Available, RollbackInput, RollbackPlan};
-pub use storage::{Key, Kind, Store};
+pub use storage::{BackendInfo, Key, Kind, StorageBackend, Store};

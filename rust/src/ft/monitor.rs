@@ -64,6 +64,37 @@ impl Monitor {
         Monitor { topo, avail, plan, updates: 0 }
     }
 
+    /// Rebuild a monitor after a cold restart from the durably-reopened
+    /// checkpoint chains (`chains[p]` = the Ξ records recovered for `p`;
+    /// empty for stateless processors). Equivalent to replaying every Ξ
+    /// through [`Monitor::on_persisted`], minus the incremental GC
+    /// actions — those already happened in the previous life.
+    pub fn reopen(
+        topo: Arc<Topology>,
+        stateless: Vec<bool>,
+        logs: Vec<bool>,
+        chains: Vec<Vec<CkptMeta>>,
+    ) -> Monitor {
+        assert_eq!(chains.len(), topo.num_procs());
+        let avail: Vec<Available> = chains
+            .into_iter()
+            .enumerate()
+            .map(|(i, chain)| {
+                if stateless[i] {
+                    debug_assert!(chain.is_empty(), "stateless processors persist no Ξ");
+                    Available::any(logs[i])
+                } else {
+                    Available::chain(chain)
+                }
+            })
+            .collect();
+        let plan = {
+            let input = RollbackInput { topo: &topo, avail: &avail };
+            choose_frontiers(&input)
+        };
+        Monitor { topo, avail, plan, updates: 0 }
+    }
+
     /// The current low-watermark at `p`: it will never need to roll back
     /// beyond this frontier in any failure scenario.
     pub fn low_watermark(&self, p: ProcId) -> &Frontier {
@@ -187,6 +218,26 @@ mod tests {
             assert_eq!(&inc, mon.plan(), "incremental diverged at epoch {ep}");
             assert_eq!(mon.low_watermark(b), &Frontier::upto_epoch(ep));
         }
+    }
+
+    #[test]
+    fn reopen_matches_replayed_updates() {
+        let (topo, es) = pipeline();
+        let mut mon = Monitor::new(topo.clone(), vec![false; 3], vec![false; 3]);
+        for ep in 1..=3 {
+            mon.on_persisted(ProcId(0), epoch_ckpt(ep, &[], &[es[0]]));
+            mon.on_persisted(ProcId(1), epoch_ckpt(ep, &[es[0]], &[es[1]]));
+            mon.on_persisted(ProcId(2), epoch_ckpt(ep, &[es[1]], &[]));
+        }
+        // A cold restart hands the monitor the reopened chains wholesale.
+        let chains = vec![
+            (1..=3).map(|ep| epoch_ckpt(ep, &[], &[es[0]])).collect(),
+            (1..=3).map(|ep| epoch_ckpt(ep, &[es[0]], &[es[1]])).collect(),
+            (1..=3).map(|ep| epoch_ckpt(ep, &[es[1]], &[])).collect(),
+        ];
+        let re = Monitor::reopen(topo, vec![false; 3], vec![false; 3], chains);
+        assert_eq!(re.plan(), mon.plan(), "reopened watermark equals the replayed one");
+        assert_eq!(re.low_watermark(ProcId(1)), &Frontier::upto_epoch(3));
     }
 
     #[test]

@@ -42,10 +42,11 @@ use crate::ft::harness::{FtSystem, HistoryEvent};
 use crate::ft::meta::CkptMeta;
 use crate::ft::policy::Policy;
 use crate::ft::rollback::{choose_frontiers, Available, RollbackInput, RollbackPlan};
-use crate::ft::storage::Kind;
+use crate::ft::storage::{Key, Kind};
 use crate::graph::ProcId;
 use crate::progress::Summary;
 use crate::time::Time;
+use crate::util::ser::Encode;
 
 /// What a recovery pass did (for logging, tests, and benches).
 #[derive(Clone, Debug)]
@@ -98,15 +99,31 @@ impl FtSystem {
                 let ft = &self.ft[p.0 as usize];
                 let dedup = self.engine.dedups(p);
                 match (ft.failed, ft.policy) {
-                    // Failed stateless processors lost their input queues;
-                    // only ∅ is known-complete (client retry / upstream
+                    // Failed ephemeral processors lost everything; only ∅
+                    // is known-complete (client retry / upstream
                     // re-execution resupplies them).
-                    (true, Policy::Ephemeral) | (true, Policy::LogOutputs) => {
-                        Available::chain(vec![])
-                    }
+                    (true, Policy::Ephemeral) => Available::chain(vec![]),
+                    // Failed logging firewall: its durable log survives,
+                    // but log *completeness* is only certified for a
+                    // source's input-frontier marker (the §4.2 Ξ it
+                    // persists as its capability advances). With a
+                    // marker it offers that frontier — stopping a cold
+                    // restart from dragging the whole dataflow to ∅;
+                    // without one, only ∅.
+                    (true, Policy::LogOutputs) => match self.source_marker_meta(p) {
+                        Some(meta) if dedup => Available::chain_dedup(
+                            vec![meta],
+                            self.engine.completed(p).clone(),
+                        ),
+                        Some(meta) => Available::chain(vec![meta]),
+                        None => Available::chain(vec![]),
+                    },
                     // Failed replayable processor: it can rebuild any
                     // frontier covered by durably-notified times (those
-                    // are complete, hence nothing at them was in flight).
+                    // are complete, hence nothing at them was in flight)
+                    // — plus, for a source, its durable input-frontier
+                    // marker (inputs completely consumed with their
+                    // history events acknowledged).
                     (true, Policy::FullHistory) => {
                         let mut f = Frontier::Bottom;
                         for ev in &ft.history {
@@ -114,6 +131,7 @@ impl FtSystem {
                                 f.insert(*time);
                             }
                         }
+                        f = f.union(&ft.input_mark);
                         if f.is_bottom() {
                             Available::chain(vec![])
                         } else if dedup {
@@ -306,17 +324,75 @@ impl FtSystem {
                 }
                 report.restored_from_checkpoint += 1;
             } else {
-                // Stateless at a mid frontier: nothing to restore.
+                // Stateless at a mid frontier: nothing to restore — but a
+                // logging processor kept there (e.g. a source at its
+                // input-frontier marker) must resume per-checkpoint (seq)
+                // out-edge numbering where its durable log left off.
                 self.engine.proc_mut(p).reset();
+                if policy.logs_outputs() {
+                    for &e in self.topo.out_edges(p) {
+                        if self.topo.projection(e).is_per_checkpoint() {
+                            let count: u64 = self.ft[p.0 as usize]
+                                .log
+                                .iter()
+                                .filter(|le| le.edge == e && fp.contains(&le.event_time))
+                                .map(|le| le.records() as u64)
+                                .sum();
+                            self.engine.set_seq_counter(e, count);
+                        }
+                    }
+                }
                 report.reset_to_empty += 1;
             }
-            // FT bookkeeping reset (F*'(p), H'(p), log truncation,
-            // delta pruning).
+            // FT bookkeeping reset (F*'(p), H'(p), log truncation, delta
+            // pruning). Every mirror entry carries its storage tag, so
+            // truncation deletes exactly the undone durable blobs — the
+            // store stays an image of the mirrors, which is what makes a
+            // *second* cold reopen (or one after an in-process recovery)
+            // see consistent state.
             let store = self.store.clone();
             let ft = &mut self.ft[p.0 as usize];
-            ft.chain.retain(|c| c.meta.f.is_subset(&fp));
-            ft.log.retain(|le| fp.contains(&le.event_time));
-            ft.history.retain(|ev| fp.contains(&ev.time()));
+            // The input-frontier marker shrinks with the rollback. It
+            // must land in the WAL *before* the tombstones of the log
+            // entries it certified: the WAL loses only suffixes, so
+            // marker-then-tombstones can leave (at worst) a narrow
+            // marker with stale entries behind it — harmless, they are
+            // re-truncated on reopen — while the reverse order could
+            // leave a wide marker certifying deleted entries.
+            if !ft.input_mark.is_bottom() {
+                let shrunk = ft.input_mark.intersect(&fp);
+                if shrunk != ft.input_mark {
+                    ft.input_mark = shrunk;
+                    let key = Key { proc: p.0, kind: Kind::InputFrontier, tag: 0 };
+                    if ft.input_mark.is_bottom() {
+                        store.delete(&key);
+                    } else {
+                        store.put(key, ft.input_mark.to_bytes());
+                    }
+                }
+            }
+            // The chain ascends, so the kept set is a prefix. Per tag the
+            // Ξ tombstone precedes the state tombstone, mirroring the
+            // write order: suffix loss can orphan a state (dropped on
+            // reopen), never a Ξ.
+            let keep = ft.chain.iter().take_while(|c| c.meta.f.is_subset(&fp)).count();
+            for tag in ft.chain_tags.drain(keep..) {
+                store.delete(&Key { proc: p.0, kind: Kind::Meta, tag });
+                store.delete(&Key { proc: p.0, kind: Kind::State, tag });
+            }
+            ft.chain.truncate(keep);
+            crate::ft::harness::retain_with_tags(
+                &mut ft.log,
+                &mut ft.log_tags,
+                |le| fp.contains(&le.event_time),
+                |tag| store.delete(&Key { proc: p.0, kind: Kind::LogEntry, tag }),
+            );
+            crate::ft::harness::retain_with_tags(
+                &mut ft.history,
+                &mut ft.history_tags,
+                |ev| fp.contains(&ev.time()),
+                |tag| store.delete(&Key { proc: p.0, kind: Kind::HistoryEvent, tag }),
+            );
             for times in ft.delivered_new.values_mut() {
                 times.retain(|lt| fp.contains(&lt.0));
             }
@@ -331,9 +407,6 @@ impl FtSystem {
             if fp.is_bottom() {
                 // Initial state: nothing was ever sent.
                 ft.sent_total.clear();
-                store.delete_matching(p.0, |k| {
-                    matches!(k.kind, Kind::LogEntry | Kind::HistoryEvent)
-                });
             }
         }
 
@@ -600,6 +673,43 @@ mod tests {
         sys.close_input(src);
         sys.run_to_quiescence(1000);
         assert_eq!(out.lock().unwrap().len(), 1);
+    }
+
+    /// A failed *logging source* resumes at its durable input-frontier
+    /// marker instead of ∅: epochs whose capability has passed stay
+    /// restorable (their sends are acknowledged in the log), and only
+    /// the still-open epoch needs client retry.
+    #[test]
+    fn failed_logging_source_resumes_at_marker() {
+        let (mut sys, src, _sum, buf) = fig3_system();
+        sys.advance_input(src, Time::epoch(0));
+        sys.push_input(src, Time::epoch(0), Record::Int(3));
+        sys.push_input(src, Time::epoch(0), Record::Int(4));
+        sys.advance_input(src, Time::epoch(1)); // closes epoch 0 → marker ↓0
+        sys.run_to_quiescence(1000);
+        // Epoch 1 pushed but not closed: not covered by the marker.
+        sys.push_input(src, Time::epoch(1), Record::Int(10));
+        sys.run_to_quiescence(1000);
+
+        sys.inject_failures(&[src]);
+        let rep = sys.recover();
+        assert_eq!(
+            rep.plan.f[src.0 as usize],
+            Frontier::upto_epoch(0),
+            "source offers its marker frontier, not ∅"
+        );
+        // Client retry covers exactly the unclosed epoch.
+        sys.advance_input(src, Time::epoch(1));
+        sys.push_input(src, Time::epoch(1), Record::Int(10));
+        sys.advance_input(src, Time::epoch(2));
+        sys.run_to_quiescence(1000);
+        let blob = sys.engine.proc(buf).checkpoint_upto(&Frontier::Top);
+        let mut b = Buffer::default();
+        b.restore(&blob);
+        let contents = b.contents();
+        assert_eq!(contents.len(), 2);
+        assert_eq!(contents[0].1, vec![Record::kv(0, 7.0)]);
+        assert_eq!(contents[1].1, vec![Record::kv(0, 10.0)]);
     }
 
     /// Full-history processors replay to a notified frontier.

@@ -3,16 +3,34 @@
 //! The paper assumes "reliably persisting state [is] adequately covered by
 //! existing techniques" (§1) and builds on acknowledged writes (§4.2: a
 //! processor sends Ξ(p,f) to the monitor only after storage acknowledges
-//! the checkpoint, state, and log). We model exactly that contract:
-//! a key-value blob store with explicit acknowledgement accounting,
-//! injectable write latency (in virtual cost units, so benches can charge
-//! eager policies for their synchronous writes), and an optional
-//! file-system backing for the examples.
+//! the checkpoint, state, and log). We model exactly that contract behind
+//! a pluggable [`StorageBackend`]:
+//!
+//! - [`MemBackend`] — the zero-regression default: an in-memory
+//!   `BTreeMap` with virtual-latency accounting, for tests and benches
+//!   that study policy overhead rather than durability;
+//! - [`crate::ft::backend_file::FileBackend`] — a real on-disk segmented
+//!   write-ahead log with group commit, crash-scan reopen, tombstones and
+//!   compaction, for true cold-restart recovery
+//!   ([`crate::ft::harness::FtSystem::reopen`]).
+//!
+//! The [`Store`] handle in front of the backend keeps the acknowledgement
+//! accounting (write/read/delete counters, injectable virtual write
+//! latency so benches can charge eager policies for their synchronous
+//! writes) and a running resident-byte counter, so `resident_bytes` is
+//! O(1) regardless of backend size.
 
+use crate::ft::backend_file::{FileBackend, FileBackendOptions};
 use std::collections::BTreeMap;
+use std::ops::Bound;
+use std::path::Path;
 use std::sync::{Arc, Mutex};
 
 /// A storage key: (processor, kind, discriminator).
+///
+/// Ordering is `(proc, kind, tag)` — proc-major, which is what lets
+/// backends serve per-processor scans from a range rather than a full
+/// sweep.
 #[derive(Clone, Debug, PartialEq, Eq, PartialOrd, Ord)]
 pub struct Key {
     pub proc: u32,
@@ -21,9 +39,12 @@ pub struct Key {
 }
 
 /// What a blob contains.
+///
+/// `Meta` must remain the first variant: backends compute per-processor
+/// range bounds as `Key { proc, kind: Kind::Meta, tag: 0 }`.
 #[derive(Copy, Clone, Debug, PartialEq, Eq, PartialOrd, Ord)]
 pub enum Kind {
-    /// Checkpoint metadata Ξ(p,f).
+    /// Checkpoint metadata Ξ(p,f) (a [`crate::ft::meta::MetaRecord`]).
     Meta,
     /// Checkpoint state S(p,f).
     State,
@@ -31,6 +52,37 @@ pub enum Kind {
     LogEntry,
     /// Full-history event (H(p) entry).
     HistoryEvent,
+    /// Durable input-frontier marker of a source processor (the §4.2
+    /// Ξ(p,f) of a stateless logging source, whose state is trivially ∅:
+    /// the frontier of input times the source has completely consumed
+    /// *and* whose resulting sends are acknowledged in the log). One per
+    /// processor, at tag 0, overwritten as the frontier advances.
+    InputFrontier,
+}
+
+impl Kind {
+    /// Stable on-disk code (the WAL record format).
+    pub fn code(self) -> u8 {
+        match self {
+            Kind::Meta => 0,
+            Kind::State => 1,
+            Kind::LogEntry => 2,
+            Kind::HistoryEvent => 3,
+            Kind::InputFrontier => 4,
+        }
+    }
+
+    /// Inverse of [`Kind::code`].
+    pub fn from_code(c: u8) -> Option<Kind> {
+        match c {
+            0 => Some(Kind::Meta),
+            1 => Some(Kind::State),
+            2 => Some(Kind::LogEntry),
+            3 => Some(Kind::HistoryEvent),
+            4 => Some(Kind::InputFrontier),
+            _ => None,
+        }
+    }
 }
 
 /// Write/read accounting, for the policy-overhead benches.
@@ -49,31 +101,219 @@ pub struct StorageStats {
     pub log_batches: u64,
     /// Records covered by those log writes.
     pub log_records: u64,
+    /// Keys examined by scans (`keys_for` / `delete_matching` /
+    /// `scan_keys`). Backends scan per-processor key *ranges*, so GC over
+    /// one processor charges only that processor's keys here — the
+    /// regression guard for the range-bounded scan path.
+    pub keys_scanned: u64,
 }
 
-/// In-memory durable store with ack semantics. Cloneable handle.
+/// Aggregate counters a backend reports about itself (`falkirk store
+/// inspect`, the storage benches, and the compaction tests read these).
+#[derive(Clone, Debug, PartialEq)]
+pub struct BackendInfo {
+    /// "mem" or "file".
+    pub name: &'static str,
+    /// Keys currently resolvable.
+    pub live_keys: u64,
+    /// Bytes of live blob payload.
+    pub live_bytes: u64,
+    /// Bytes occupied on disk (0 for mem): live + dead records across all
+    /// segments, including the unflushed group-commit tail.
+    pub file_bytes: u64,
+    /// Segment files (0 for mem).
+    pub segments: u64,
+    /// Bytes owed to overwritten/deleted records and tombstones, awaiting
+    /// compaction (0 for mem).
+    pub dead_bytes: u64,
+    /// Segment compactions performed since open.
+    pub compactions: u64,
+}
+
+impl BackendInfo {
+    fn mem(live_keys: u64, live_bytes: u64) -> BackendInfo {
+        BackendInfo {
+            name: "mem",
+            live_keys,
+            live_bytes,
+            file_bytes: 0,
+            segments: 0,
+            dead_bytes: 0,
+            compactions: 0,
+        }
+    }
+}
+
+/// A pluggable durable key-value backend. Writes are acknowledged on
+/// return (the §4.2 contract); a backend with a group-commit buffer
+/// additionally guarantees the buffered tail is an append-order *prefix*
+/// casualty under a crash — a surviving record implies every earlier
+/// write survived, which is what the input-frontier markers and the
+/// state-then-Ξ ordering rely on.
+///
+/// `get`/`scan_keys` take `&mut self` because a write-ahead backend may
+/// need to flush its buffered tail before serving a read.
+pub trait StorageBackend: Send {
+    /// Persist a blob; returns the size of any blob it replaced.
+    fn put(&mut self, key: &Key, value: &[u8]) -> Option<u64>;
+
+    fn get(&mut self, key: &Key) -> Option<Vec<u8>>;
+
+    /// Remove a blob; returns its size if it existed.
+    fn delete(&mut self, key: &Key) -> Option<u64>;
+
+    /// All (key, value size) pairs for `proc`, ascending — size metadata
+    /// without reading blob contents. Implementations scan only the
+    /// processor's key range.
+    fn scan_entries(&mut self, proc: u32) -> Vec<(Key, u64)>;
+
+    /// All keys for `proc`, ascending.
+    fn scan_keys(&mut self, proc: u32) -> Vec<Key> {
+        self.scan_entries(proc).into_iter().map(|(k, _)| k).collect()
+    }
+
+    /// Distinct processor ids present, ascending.
+    fn procs(&mut self) -> Vec<u32>;
+
+    /// Force any buffered writes durable.
+    fn sync(&mut self);
+
+    /// Aggregate self-description.
+    fn info(&self) -> BackendInfo;
+
+    /// Rewrite storage to drop dead records (no-op where meaningless).
+    fn compact(&mut self) {}
+
+    /// Testing hook: die as a crash would — the unflushed group-commit
+    /// tail is lost and nothing further is written (not even on drop).
+    fn simulate_crash(&mut self) {}
+}
+
+/// The in-memory default backend (the pre-durability behavior).
+#[derive(Default)]
+pub struct MemBackend {
+    blobs: BTreeMap<Key, Vec<u8>>,
+}
+
+impl MemBackend {
+    pub fn new() -> MemBackend {
+        MemBackend::default()
+    }
+}
+
+/// Ascending distinct processor ids from an ascending key iterator
+/// (shared by the backends' `procs` implementations).
+pub(crate) fn distinct_procs<'a, I: Iterator<Item = &'a Key>>(keys: I) -> Vec<u32> {
+    let mut out: Vec<u32> = Vec::new();
+    for k in keys {
+        if out.last() != Some(&k.proc) {
+            out.push(k.proc);
+        }
+    }
+    out
+}
+
+/// The `(lo, hi)` bounds covering exactly `proc`'s keys under the
+/// `(proc, kind, tag)` ordering.
+pub(crate) fn proc_range(proc: u32) -> (Bound<Key>, Bound<Key>) {
+    let lo = Bound::Included(Key { proc, kind: Kind::Meta, tag: 0 });
+    let hi = match proc.checked_add(1) {
+        Some(next) => Bound::Excluded(Key { proc: next, kind: Kind::Meta, tag: 0 }),
+        None => Bound::Unbounded,
+    };
+    (lo, hi)
+}
+
+impl StorageBackend for MemBackend {
+    fn put(&mut self, key: &Key, value: &[u8]) -> Option<u64> {
+        self.blobs.insert(key.clone(), value.to_vec()).map(|old| old.len() as u64)
+    }
+
+    fn get(&mut self, key: &Key) -> Option<Vec<u8>> {
+        self.blobs.get(key).cloned()
+    }
+
+    fn delete(&mut self, key: &Key) -> Option<u64> {
+        self.blobs.remove(key).map(|old| old.len() as u64)
+    }
+
+    fn scan_entries(&mut self, proc: u32) -> Vec<(Key, u64)> {
+        self.blobs.range(proc_range(proc)).map(|(k, v)| (k.clone(), v.len() as u64)).collect()
+    }
+
+    fn procs(&mut self) -> Vec<u32> {
+        distinct_procs(self.blobs.keys())
+    }
+
+    fn sync(&mut self) {}
+
+    fn info(&self) -> BackendInfo {
+        BackendInfo::mem(
+            self.blobs.len() as u64,
+            self.blobs.values().map(|v| v.len() as u64).sum(),
+        )
+    }
+}
+
+/// Durable store with ack semantics. Cloneable handle; the backend
+/// serializes its own access through the handle's lock.
 #[derive(Clone)]
 pub struct Store {
     inner: Arc<Mutex<Inner>>,
 }
 
 struct Inner {
-    blobs: BTreeMap<Key, Vec<u8>>,
+    backend: Box<dyn StorageBackend>,
     stats: StorageStats,
     /// Virtual cost charged per write (simulates fsync/replication).
     write_cost: u64,
+    /// Running Σ of live blob bytes (maintained on put/delete so
+    /// `resident_bytes` never walks the blob set).
+    resident: u64,
 }
 
 impl Store {
-    /// A store charging `write_cost` virtual latency units per write.
+    /// An in-memory store charging `write_cost` virtual latency units per
+    /// write (the zero-regression default backend).
     pub fn new(write_cost: u64) -> Store {
+        Store::with_backend(Box::new(MemBackend::new()), write_cost)
+    }
+
+    /// A store over an arbitrary backend. The resident-byte counter is
+    /// seeded from the backend's live bytes (nonzero for a reopened WAL).
+    pub fn with_backend(backend: Box<dyn StorageBackend>, write_cost: u64) -> Store {
+        let resident = backend.info().live_bytes;
         Store {
             inner: Arc::new(Mutex::new(Inner {
-                blobs: BTreeMap::new(),
+                backend,
                 stats: StorageStats::default(),
                 write_cost,
+                resident,
             })),
         }
+    }
+
+    /// Open (or create) a [`FileBackend`] WAL under `dir`. Reopening an
+    /// existing directory rebuilds the key index by scanning segments; a
+    /// torn or corrupt tail is truncated, not fatal.
+    pub fn open_dir(
+        dir: impl AsRef<Path>,
+        write_cost: u64,
+        opts: FileBackendOptions,
+    ) -> std::io::Result<Store> {
+        let backend = FileBackend::open(dir.as_ref(), opts)?;
+        Ok(Store::with_backend(Box::new(backend), write_cost))
+    }
+
+    /// Open a WAL for inspection only: no on-disk repair, mutating
+    /// operations panic (`falkirk store inspect` uses this so examining a
+    /// just-crashed directory cannot destroy its torn tail).
+    pub fn open_dir_read_only(
+        dir: impl AsRef<Path>,
+        opts: FileBackendOptions,
+    ) -> std::io::Result<Store> {
+        let backend = FileBackend::open_read_only(dir.as_ref(), opts)?;
+        Ok(Store::with_backend(Box::new(backend), 0))
     }
 
     fn put_inner(&self, key: Key, value: Vec<u8>, log_records: Option<u64>) {
@@ -85,7 +325,8 @@ impl Store {
             g.stats.log_batches += 1;
             g.stats.log_records += records;
         }
-        g.blobs.insert(key, value);
+        let replaced = g.backend.put(&key, &value).unwrap_or(0);
+        g.resident = g.resident - replaced + value.len() as u64;
     }
 
     /// Persist a blob; returns once "acknowledged" (synchronously here,
@@ -104,43 +345,91 @@ impl Store {
     pub fn get(&self, key: &Key) -> Option<Vec<u8>> {
         let mut g = self.inner.lock().unwrap();
         g.stats.reads += 1;
-        g.blobs.get(key).cloned()
+        g.backend.get(key)
     }
 
     pub fn delete(&self, key: &Key) {
         let mut g = self.inner.lock().unwrap();
-        if g.blobs.remove(key).is_some() {
+        if let Some(n) = g.backend.delete(key) {
             g.stats.deletes += 1;
+            g.resident -= n;
         }
     }
 
     /// Delete all blobs for `proc` matching `pred` (garbage collection).
+    /// Scans only `proc`'s key range.
     pub fn delete_matching<F: FnMut(&Key) -> bool>(&self, proc: u32, mut pred: F) -> usize {
         let mut g = self.inner.lock().unwrap();
-        let doomed: Vec<Key> = g
-            .blobs
-            .keys()
-            .filter(|k| k.proc == proc && pred(k))
-            .cloned()
-            .collect();
-        let n = doomed.len();
-        for k in &doomed {
-            g.blobs.remove(k);
+        let keys = g.backend.scan_keys(proc);
+        g.stats.keys_scanned += keys.len() as u64;
+        let mut n = 0;
+        for k in keys.into_iter().filter(|k| pred(k)) {
+            if let Some(len) = g.backend.delete(&k) {
+                g.stats.deletes += 1;
+                g.resident -= len;
+                n += 1;
+            }
         }
-        g.stats.deletes += n as u64;
         n
     }
 
     /// Keys currently stored for `proc` of a given kind.
     pub fn keys_for(&self, proc: u32, kind: Kind) -> Vec<Key> {
-        let g = self.inner.lock().unwrap();
-        g.blobs.keys().filter(|k| k.proc == proc && k.kind == kind).cloned().collect()
+        let mut g = self.inner.lock().unwrap();
+        let keys = g.backend.scan_keys(proc);
+        g.stats.keys_scanned += keys.len() as u64;
+        keys.into_iter().filter(|k| k.kind == kind).collect()
     }
 
-    /// Total bytes resident (for GC benches).
+    /// All keys for `proc`, ascending (the cold-restart loader reads each
+    /// processor's durable state with one ranged scan).
+    pub fn scan_keys(&self, proc: u32) -> Vec<Key> {
+        let mut g = self.inner.lock().unwrap();
+        let keys = g.backend.scan_keys(proc);
+        g.stats.keys_scanned += keys.len() as u64;
+        keys
+    }
+
+    /// All (key, value size) pairs for `proc`, ascending — metadata only,
+    /// no blob reads (`falkirk store inspect` sums sizes from this).
+    pub fn scan_entries(&self, proc: u32) -> Vec<(Key, u64)> {
+        let mut g = self.inner.lock().unwrap();
+        let entries = g.backend.scan_entries(proc);
+        g.stats.keys_scanned += entries.len() as u64;
+        entries
+    }
+
+    /// Distinct processor ids present, ascending.
+    pub fn procs(&self) -> Vec<u32> {
+        self.inner.lock().unwrap().backend.procs()
+    }
+
+    /// Total live bytes resident. O(1): maintained on put/delete.
     pub fn resident_bytes(&self) -> u64 {
-        let g = self.inner.lock().unwrap();
-        g.blobs.values().map(|v| v.len() as u64).sum()
+        self.inner.lock().unwrap().resident
+    }
+
+    /// Force buffered writes durable (group-commit backends).
+    pub fn sync(&self) {
+        self.inner.lock().unwrap().backend.sync();
+    }
+
+    /// Rewrite storage to drop dead records (backend-specific; no-op for
+    /// mem).
+    pub fn compact(&self) {
+        self.inner.lock().unwrap().backend.compact();
+    }
+
+    /// The backend's self-description (segments, live/dead bytes, …).
+    pub fn backend_info(&self) -> BackendInfo {
+        self.inner.lock().unwrap().backend.info()
+    }
+
+    /// Testing hook: crash the backend — the unflushed group-commit tail
+    /// is lost and nothing further reaches disk (not even on drop). The
+    /// handle stays usable only for dropping.
+    pub fn simulate_crash(&self) {
+        self.inner.lock().unwrap().backend.simulate_crash();
     }
 
     pub fn stats(&self) -> StorageStats {
@@ -186,6 +475,34 @@ mod tests {
         assert_eq!(s.keys_for(2, Kind::Meta).len(), 1);
     }
 
+    /// The range-bounded scan: GC over one processor examines only that
+    /// processor's keys, visible through `stats.keys_scanned`.
+    #[test]
+    fn scans_are_proc_ranged() {
+        let s = Store::new(0);
+        for tag in 0..4 {
+            s.put(k(1, Kind::LogEntry, tag), vec![0]);
+        }
+        for tag in 0..100 {
+            s.put(k(2, Kind::LogEntry, tag), vec![0]);
+        }
+        s.put(k(0, Kind::Meta, 0), vec![0]);
+        s.reset_stats();
+        assert_eq!(s.keys_for(1, Kind::LogEntry).len(), 4);
+        assert_eq!(
+            s.stats().keys_scanned,
+            4,
+            "scanning proc 1 must not touch proc 0/2 keys"
+        );
+        s.reset_stats();
+        let n = s.delete_matching(1, |_| true);
+        assert_eq!(n, 4);
+        assert_eq!(s.stats().keys_scanned, 4);
+        // The extreme proc id is range-scannable too (no overflow).
+        s.put(k(u32::MAX, Kind::State, 9), vec![7]);
+        assert_eq!(s.scan_keys(u32::MAX).len(), 1);
+    }
+
     #[test]
     fn resident_bytes_tracks_contents() {
         let s = Store::new(0);
@@ -194,6 +511,13 @@ mod tests {
         assert_eq!(s.resident_bytes(), 150);
         s.delete(&k(1, Kind::State, 0));
         assert_eq!(s.resident_bytes(), 50);
+        // Overwrites adjust, not accumulate.
+        s.put(k(1, Kind::State, 1), vec![0; 20]);
+        assert_eq!(s.resident_bytes(), 20);
+        // Deleting a missing key is a no-op.
+        s.delete(&k(9, Kind::State, 0));
+        assert_eq!(s.resident_bytes(), 20);
+        assert_eq!(s.stats().deletes, 1);
     }
 
     #[test]
@@ -216,5 +540,30 @@ mod tests {
         let s2 = s.clone();
         s.put(k(9, Kind::LogEntry, 7), vec![42]);
         assert_eq!(s2.get(&k(9, Kind::LogEntry, 7)), Some(vec![42]));
+    }
+
+    #[test]
+    fn kind_codes_roundtrip() {
+        for kind in [
+            Kind::Meta,
+            Kind::State,
+            Kind::LogEntry,
+            Kind::HistoryEvent,
+            Kind::InputFrontier,
+        ] {
+            assert_eq!(Kind::from_code(kind.code()), Some(kind));
+        }
+        assert_eq!(Kind::from_code(99), None);
+    }
+
+    #[test]
+    fn mem_backend_info() {
+        let s = Store::new(0);
+        s.put(k(1, Kind::State, 0), vec![0; 10]);
+        let info = s.backend_info();
+        assert_eq!(info.name, "mem");
+        assert_eq!(info.live_keys, 1);
+        assert_eq!(info.live_bytes, 10);
+        assert_eq!(info.file_bytes, 0);
     }
 }

@@ -33,6 +33,15 @@
 //!   returning — so failure injection and recovery run unchanged while
 //!   workers are parked (pause-drain-rollback; `--threads` on the
 //!   `falkirk shard` CLI, `threads` in `ShardedConfig`);
+//! - a **durable storage subsystem** behind the pluggable
+//!   [`ft::storage::StorageBackend`] trait: the in-memory default, plus
+//!   an on-disk segmented write-ahead log ([`ft::backend_file`]) with
+//!   group commit, crash-scan reopen (torn tails truncated), tombstones
+//!   and threshold-triggered segment compaction — enabling **true
+//!   cold-restart recovery** ([`ft::harness::FtSystem::reopen`]): a
+//!   process crash is a first-class failure scenario, recovered from
+//!   storage alone to byte-identical output (`--data-dir` on the
+//!   `falkirk fig1` / `falkirk shard` CLI, `falkirk store inspect`);
 //! - the paper's fault-tolerance framework: logical-time frontiers
 //!   ([`frontier`]), per-edge time-domain projections φ(e) ([`graph`]),
 //!   checkpoint/log policies and Table-1 metadata, selective rollback, the

@@ -4,8 +4,9 @@
 //! `serde`, `clap`, `criterion` or `proptest`, so the few pieces of those
 //! we need are implemented here: a seeded xorshift RNG ([`rng`]), a compact
 //! binary serializer for checkpoints ([`ser`]), summary statistics
-//! ([`stats`]), a tiny CLI argument parser ([`cli`]) and a miniature
-//! property-testing harness ([`prop`]).
+//! ([`stats`]), a tiny CLI argument parser ([`cli`]), a miniature
+//! property-testing harness ([`prop`]) and self-cleaning temp dirs for
+//! the durable-storage tests ([`tmp`]).
 
 pub mod cli;
 pub mod hash;
@@ -13,3 +14,4 @@ pub mod prop;
 pub mod rng;
 pub mod ser;
 pub mod stats;
+pub mod tmp;

@@ -1,0 +1,63 @@
+//! Self-cleaning temporary directories for the durable-storage tests,
+//! benches and examples (the offline registry has no `tempfile` crate).
+
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicU64, Ordering};
+
+static SEQ: AtomicU64 = AtomicU64::new(0);
+
+/// A unique directory under the system temp dir, removed on drop.
+pub struct TempDir {
+    path: PathBuf,
+}
+
+impl TempDir {
+    /// Create `<tmp>/falkirk-<label>-<pid>-<nanos>-<seq>`.
+    pub fn new(label: &str) -> TempDir {
+        let nanos = std::time::SystemTime::now()
+            .duration_since(std::time::UNIX_EPOCH)
+            .map(|d| d.as_nanos() as u64)
+            .unwrap_or(0);
+        let path = std::env::temp_dir().join(format!(
+            "falkirk-{label}-{}-{nanos}-{}",
+            std::process::id(),
+            SEQ.fetch_add(1, Ordering::Relaxed),
+        ));
+        std::fs::create_dir_all(&path).expect("creating temp dir");
+        TempDir { path }
+    }
+
+    pub fn path(&self) -> &Path {
+        &self.path
+    }
+}
+
+impl Drop for TempDir {
+    fn drop(&mut self) {
+        let _ = std::fs::remove_dir_all(&self.path);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn creates_and_cleans_up() {
+        let kept: PathBuf;
+        {
+            let t = TempDir::new("unit");
+            kept = t.path().to_path_buf();
+            assert!(kept.is_dir());
+            std::fs::write(kept.join("x"), b"hi").unwrap();
+        }
+        assert!(!kept.exists(), "dropped TempDir removes its tree");
+    }
+
+    #[test]
+    fn distinct_paths() {
+        let a = TempDir::new("unit");
+        let b = TempDir::new("unit");
+        assert_ne!(a.path(), b.path());
+    }
+}

@@ -1,0 +1,480 @@
+//! True cold-restart recovery: the process dies (operator states,
+//! channels, frontiers and the store's unflushed group-commit tail all
+//! vanish), a fresh process reopens the durable WAL directory, and
+//! [`FtSystem::reopen`] must reconstruct the Table-1 state and replay to
+//! **byte-identical** observable output versus an uninterrupted run —
+//! including after tail corruption and after segment compaction.
+
+use falkirk::bench_support::sharded::{
+    canonical_output, epoch_records, pipeline, pipeline_with_store, reopen_pipeline,
+    ShardedConfig, ShardedPipeline,
+};
+use falkirk::coordinator::{build_fig1_with_store, reopen_fig1, Fig1Config};
+use falkirk::engine::Record;
+use falkirk::frontier::Frontier;
+use falkirk::ft::external::ExternalInput;
+use falkirk::ft::monitor::GcAction;
+use falkirk::ft::{FileBackendOptions, Store};
+use falkirk::time::Time;
+use falkirk::util::rng::Rng;
+use falkirk::util::tmp::TempDir;
+use std::path::Path;
+
+const SEED: u64 = 11;
+const EPOCHS: u64 = 5;
+const RECORDS: usize = 24;
+const KEYS: u64 = 8;
+
+fn file_store(dir: &Path, flush_every_n: usize) -> Store {
+    Store::open_dir(dir, 1, FileBackendOptions { flush_every_n, ..Default::default() })
+        .expect("opening WAL store")
+}
+
+/// Offer epoch `ep`'s batch to the external service and drive it through.
+fn offer_and_drive(p: &mut ShardedPipeline, ext: &mut ExternalInput, ep: u64) {
+    let src = p.src_proc();
+    let recs = epoch_records(SEED, ep, RECORDS, KEYS);
+    ext.offer(Time::epoch(ep), recs.clone());
+    p.sys.advance_input(src, Time::epoch(ep));
+    for r in recs {
+        p.sys.push_input(src, Time::epoch(ep), r);
+    }
+    p.sys.advance_input(src, Time::epoch(ep + 1));
+    p.run(5_000_000);
+}
+
+/// The uninterrupted reference output (backend-independent).
+fn expected_output(cfg: &ShardedConfig) -> Vec<u8> {
+    let mut p = pipeline(cfg);
+    let mut ext = ExternalInput::new();
+    for ep in 0..EPOCHS {
+        offer_and_drive(&mut p, &mut ext, ep);
+    }
+    let src = p.src_proc();
+    p.sys.close_input(src);
+    p.run(5_000_000);
+    canonical_output(&p.sys, p.collect_proc())
+}
+
+/// Drive epochs 0..3 fully, crash mid-drain of epoch 3, reopen, resupply
+/// from the external service, finish epochs 4.., and compare outputs.
+fn sharded_crash_restart(batch_cap: usize, flush_every_n: usize, corrupt_tail: bool) {
+    let cfg = ShardedConfig { workers: 4, batch_cap, ..Default::default() };
+    let expected = expected_output(&cfg);
+
+    let t = TempDir::new("crash-shard");
+    let mut ext = ExternalInput::new();
+    {
+        let store = file_store(t.path(), flush_every_n);
+        let mut p = pipeline_with_store(&cfg, store.clone());
+        for ep in 0..3 {
+            offer_and_drive(&mut p, &mut ext, ep);
+        }
+        // Epoch 3: inputs land, the epoch closes, and the process dies a
+        // few deliveries into the drain.
+        let src = p.src_proc();
+        let recs = epoch_records(SEED, 3, RECORDS, KEYS);
+        ext.offer(Time::epoch(3), recs.clone());
+        p.sys.advance_input(src, Time::epoch(3));
+        for r in recs {
+            p.sys.push_input(src, Time::epoch(3), r);
+        }
+        p.sys.advance_input(src, Time::epoch(4));
+        p.sys.run_to_quiescence(40); // mid-drain
+        drop(p);
+        store.simulate_crash(); // the buffered WAL tail dies with it
+    }
+    if corrupt_tail {
+        // Additionally chop the newest segment mid-record.
+        let seg = newest_segment(t.path());
+        let len = std::fs::metadata(&seg).unwrap().len();
+        if len > 24 {
+            std::fs::OpenOptions::new()
+                .write(true)
+                .open(&seg)
+                .unwrap()
+                .set_len(len - 7)
+                .unwrap();
+        }
+    }
+
+    // Cold restart.
+    let store = file_store(t.path(), flush_every_n);
+    let (mut p, report) = reopen_pipeline(&cfg, store);
+    let src = p.src_proc();
+    let f_src = report.plan.frontier(src).clone();
+    // §4.3 client retry: everything unacked beyond the source's
+    // recovered input frontier.
+    for (tm, recs) in ext.replay_from(&f_src) {
+        p.sys.advance_input(src, tm);
+        for r in recs {
+            p.sys.push_input(src, tm, r);
+        }
+    }
+    p.sys.advance_input(src, Time::epoch(4));
+    p.run(5_000_000);
+    for ep in 4..EPOCHS {
+        offer_and_drive(&mut p, &mut ext, ep);
+    }
+    let src = p.src_proc();
+    p.sys.close_input(src);
+    p.run(5_000_000);
+    assert_eq!(
+        canonical_output(&p.sys, p.collect_proc()),
+        expected,
+        "cold restart (cap {batch_cap}, flush {flush_every_n}, corrupt {corrupt_tail}) diverged"
+    );
+}
+
+fn newest_segment(dir: &Path) -> std::path::PathBuf {
+    std::fs::read_dir(dir)
+        .unwrap()
+        .filter_map(|e| e.ok())
+        .map(|e| e.path())
+        .filter(|p| p.extension().map(|x| x == "seg").unwrap_or(false))
+        .max()
+        .expect("WAL directory has segments")
+}
+
+#[test]
+fn sharded_cold_restart_cap1() {
+    sharded_crash_restart(1, 1, false);
+}
+
+#[test]
+fn sharded_cold_restart_cap8() {
+    sharded_crash_restart(8, 8, false);
+}
+
+#[test]
+fn sharded_cold_restart_survives_torn_tail() {
+    sharded_crash_restart(1, 8, true);
+}
+
+/// With write-through flushing, everything acknowledged is durable: the
+/// source resumes at its full input-frontier marker and every count
+/// shard restores from a checkpoint instead of recomputing from ∅.
+#[test]
+fn cold_restart_restores_from_checkpoints() {
+    let cfg = ShardedConfig { workers: 4, ..Default::default() };
+    let t = TempDir::new("crash-restore");
+    let mut ext = ExternalInput::new();
+    {
+        let store = file_store(t.path(), 1);
+        let mut p = pipeline_with_store(&cfg, store.clone());
+        for ep in 0..3 {
+            offer_and_drive(&mut p, &mut ext, ep);
+        }
+        drop(p);
+        store.simulate_crash(); // nothing buffered at flush_every_n = 1
+    }
+    let store = file_store(t.path(), 1);
+    let (p, report) = reopen_pipeline(&cfg, store);
+    let src = p.src_proc();
+    assert_eq!(
+        report.plan.frontier(src),
+        &Frontier::upto_epoch(2),
+        "the durable input-frontier marker carries the source past ∅"
+    );
+    for s in 0..4 {
+        assert!(
+            !report.plan.frontier(p.plan.proc(p.count, s)).is_bottom(),
+            "count#{s} must restore from a durable checkpoint"
+        );
+    }
+    assert!(report.restored_from_checkpoint >= 4, "all count shards restored");
+}
+
+/// Reopening after a *clean* shutdown reproduces the full output with no
+/// resupply at all, and a second reopen agrees with the first.
+#[test]
+fn reopen_after_clean_shutdown_reproduces_output() {
+    let cfg = ShardedConfig { workers: 4, ..Default::default() };
+    let expected = expected_output(&cfg);
+    let t = TempDir::new("clean-reopen");
+    {
+        let store = file_store(t.path(), 4);
+        let mut p = pipeline_with_store(&cfg, store);
+        let mut ext = ExternalInput::new();
+        for ep in 0..EPOCHS {
+            offer_and_drive(&mut p, &mut ext, ep);
+        }
+        let src = p.src_proc();
+        p.sys.close_input(src);
+        p.run(5_000_000);
+        assert_eq!(canonical_output(&p.sys, p.collect_proc()), expected);
+        // Graceful drop: the WAL tail flushes.
+    }
+    for _ in 0..2 {
+        let store = file_store(t.path(), 4);
+        let (mut p, _report) = reopen_pipeline(&cfg, store);
+        p.run(5_000_000); // deliver the replayed Q′ queues
+        assert_eq!(
+            canonical_output(&p.sys, p.collect_proc()),
+            expected,
+            "reopen from a cleanly shut down WAL reproduces the output"
+        );
+        // Graceful drop again; the next loop iteration reopens the
+        // directory as mutated by this recovery.
+    }
+}
+
+/// GC-driven tombstones push segments over the dead-byte threshold,
+/// compaction rewrites them, and a cold restart from the compacted WAL
+/// is still byte-identical.
+#[test]
+fn cold_restart_after_gc_compaction() {
+    let cfg = ShardedConfig { workers: 4, ..Default::default() };
+    let expected = expected_output(&cfg);
+    let t = TempDir::new("crash-compact");
+    let mut ext = ExternalInput::new();
+    {
+        let store = Store::open_dir(
+            t.path(),
+            1,
+            FileBackendOptions {
+                flush_every_n: 1,
+                segment_bytes: 2048, // rotate often so compaction has prey
+                compact_ratio: 0.4,
+                fsync: false,
+            },
+        )
+        .unwrap();
+        let mut p = pipeline_with_store(&cfg, store.clone());
+        let collect = p.collect_proc();
+        for ep in 0..4 {
+            offer_and_drive(&mut p, &mut ext, ep);
+            // The collector's Buffer never requests notifications, so
+            // checkpoint it explicitly at the completed epoch — that is
+            // what authorizes GC of upstream logs (its low-watermark).
+            p.sys.checkpoint_now(collect, Frontier::upto_epoch(ep));
+            if ep >= 2 {
+                let wm = Frontier::upto_epoch(ep - 2);
+                let topo = p.sys.topology();
+                let src = p.src_proc();
+                let mut actions = vec![GcAction::DropCheckpointsBelow {
+                    proc: collect,
+                    watermark: wm.clone(),
+                }];
+                for e in topo.out_edges(src) {
+                    actions.push(GcAction::DropLogWithin {
+                        proc: src,
+                        edge: *e,
+                        watermark: wm.clone(),
+                    });
+                }
+                for s in 0..4 {
+                    let cp = p.plan.proc(p.count, s);
+                    actions.push(GcAction::DropCheckpointsBelow {
+                        proc: cp,
+                        watermark: wm.clone(),
+                    });
+                    for e in topo.out_edges(cp) {
+                        actions.push(GcAction::DropLogWithin {
+                            proc: cp,
+                            edge: *e,
+                            watermark: wm.clone(),
+                        });
+                    }
+                }
+                for a in &actions {
+                    p.sys.apply_gc(a);
+                }
+            }
+        }
+        assert!(
+            store.backend_info().compactions > 0,
+            "GC tombstones must have triggered segment compaction: {:?}",
+            store.backend_info()
+        );
+        drop(p);
+        store.simulate_crash();
+    }
+    let store = file_store(t.path(), 1);
+    let (mut p, report) = reopen_pipeline(&cfg, store);
+    let src = p.src_proc();
+    // The GC monitor resumes from the reopened Ξ chains: with every
+    // count and the collector durably checkpointed through epoch 3, the
+    // restarted low-watermark lands there immediately.
+    {
+        let np = p.sys.topology().num_procs();
+        let mut stateless = vec![false; np];
+        let mut logs = vec![false; np];
+        stateless[src.0 as usize] = true;
+        logs[src.0 as usize] = true;
+        let mon = p.sys.rebuild_monitor(stateless, logs);
+        assert_eq!(
+            mon.low_watermark(p.collect_proc()),
+            &Frontier::upto_epoch(3),
+            "reopened monitor watermark reflects the durable chains"
+        );
+    }
+    let f_src = report.plan.frontier(src).clone();
+    for (tm, recs) in ext.replay_from(&f_src) {
+        p.sys.advance_input(src, tm);
+        for r in recs {
+            p.sys.push_input(src, tm, r);
+        }
+    }
+    p.sys.advance_input(src, Time::epoch(4));
+    p.run(5_000_000);
+    for ep in 4..EPOCHS {
+        offer_and_drive(&mut p, &mut ext, ep);
+    }
+    let src = p.src_proc();
+    p.sys.close_input(src);
+    p.run(5_000_000);
+    assert_eq!(
+        canonical_output(&p.sys, p.collect_proc()),
+        expected,
+        "cold restart after compaction diverged"
+    );
+}
+
+// ---------------------------------------------------------------------
+// Figure-1: the four-regime application, crash-restarted mid-drain. The
+// externally-visible database commits (the eager regime's contract) must
+// match the uninterrupted run exactly — the deduplicating external
+// consumer survives the crash, so replayed commits are suppressed by
+// sequence number.
+// ---------------------------------------------------------------------
+
+fn fig1_cfg() -> Fig1Config {
+    Fig1Config {
+        epochs: 4,
+        queries_per_epoch: 3,
+        records_per_epoch: 12,
+        iters: 3,
+        window: 8,
+        num_keys: 4,
+        use_xla: false,
+        ..Default::default()
+    }
+}
+
+/// The synthetic per-epoch inputs, generated exactly as
+/// `coordinator::fig1::run` does so both runs see identical streams.
+fn fig1_epoch_data(cfg: &Fig1Config) -> Vec<(Vec<Record>, Vec<Record>)> {
+    let mut rng = Rng::new(cfg.seed);
+    let words = ["one", "two", "three", "four", "five", "six", "seven", "eight"];
+    (0..cfg.epochs)
+        .map(|_| {
+            let queries: Vec<Record> = (0..cfg.queries_per_epoch)
+                .map(|_| Record::text(words[rng.index(words.len())]))
+                .collect();
+            let records: Vec<Record> = (0..cfg.records_per_epoch)
+                .map(|_| Record::kv(rng.below(cfg.num_keys as u64) as i64, rng.f64() * 10.0))
+                .collect();
+            (queries, records)
+        })
+        .collect()
+}
+
+fn fig1_drive_epoch(
+    app: &mut falkirk::coordinator::Fig1App,
+    q_ext: &mut ExternalInput,
+    d_ext: &mut ExternalInput,
+    ep: u64,
+    data: &(Vec<Record>, Vec<Record>),
+) {
+    let t = Time::epoch(ep);
+    q_ext.offer(t, data.0.clone());
+    d_ext.offer(t, data.1.clone());
+    app.sys.advance_input(app.q_src, t);
+    app.sys.advance_input(app.d_src, t);
+    for q in &data.0 {
+        app.sys.push_input(app.q_src, t, q.clone());
+    }
+    for r in &data.1 {
+        app.sys.push_input(app.d_src, t, r.clone());
+    }
+    app.sys.advance_input(app.q_src, Time::epoch(ep + 1));
+    app.sys.advance_input(app.d_src, Time::epoch(ep + 1));
+    app.sys.run_to_quiescence(2_000_000);
+}
+
+#[test]
+fn fig1_cold_restart_preserves_db_commits() {
+    let cfg = fig1_cfg();
+    let data = fig1_epoch_data(&cfg);
+
+    // Uninterrupted reference run (in-memory store).
+    let clean = {
+        let mut app = build_fig1_with_store(&cfg, Store::new(cfg.write_cost));
+        let (mut q_ext, mut d_ext) = (ExternalInput::new(), ExternalInput::new());
+        for ep in 0..cfg.epochs {
+            fig1_drive_epoch(&mut app, &mut q_ext, &mut d_ext, ep, &data[ep as usize]);
+        }
+        app.sys.close_input(app.q_src);
+        app.sys.close_input(app.d_src);
+        app.sys.run_to_quiescence(2_000_000);
+        let db = app.db.lock().unwrap();
+        db.contents()
+    };
+    assert!(!clean.is_empty());
+
+    // Crash run: epochs 0–1 complete, the process dies mid-drain of
+    // epoch 2.
+    let t = TempDir::new("crash-fig1");
+    let (mut q_ext, mut d_ext) = (ExternalInput::new(), ExternalInput::new());
+    let db_handle;
+    {
+        let store = file_store(t.path(), 4);
+        let mut app = build_fig1_with_store(&cfg, store.clone());
+        db_handle = app.db.clone(); // the external DB consumer survives
+        for ep in 0..2 {
+            fig1_drive_epoch(&mut app, &mut q_ext, &mut d_ext, ep, &data[ep as usize]);
+        }
+        let ep = 2u64;
+        let tm = Time::epoch(ep);
+        q_ext.offer(tm, data[2].0.clone());
+        d_ext.offer(tm, data[2].1.clone());
+        app.sys.advance_input(app.q_src, tm);
+        app.sys.advance_input(app.d_src, tm);
+        for q in &data[2].0 {
+            app.sys.push_input(app.q_src, tm, q.clone());
+        }
+        for r in &data[2].1 {
+            app.sys.push_input(app.d_src, tm, r.clone());
+        }
+        app.sys.advance_input(app.q_src, Time::epoch(ep + 1));
+        app.sys.advance_input(app.d_src, Time::epoch(ep + 1));
+        app.sys.run_to_quiescence(300); // mid-drain
+        drop(app);
+        store.simulate_crash();
+    }
+
+    // Cold restart against the surviving external services.
+    let store = file_store(t.path(), 4);
+    let (mut app, report) = reopen_fig1(&cfg, store, db_handle);
+    let fq = report.plan.frontier(app.q_src).clone();
+    let fd = report.plan.frontier(app.d_src).clone();
+    for (tm, batch) in q_ext.replay_from(&fq) {
+        app.sys.advance_input(app.q_src, tm);
+        for r in batch {
+            app.sys.push_input(app.q_src, tm, r);
+        }
+    }
+    for (tm, batch) in d_ext.replay_from(&fd) {
+        app.sys.advance_input(app.d_src, tm);
+        for r in batch {
+            app.sys.push_input(app.d_src, tm, r);
+        }
+    }
+    app.sys.advance_input(app.q_src, Time::epoch(3));
+    app.sys.advance_input(app.d_src, Time::epoch(3));
+    app.sys.run_to_quiescence(2_000_000);
+    for ep in 3..cfg.epochs {
+        fig1_drive_epoch(&mut app, &mut q_ext, &mut d_ext, ep, &data[ep as usize]);
+    }
+    app.sys.close_input(app.q_src);
+    app.sys.close_input(app.d_src);
+    app.sys.run_to_quiescence(2_000_000);
+
+    let db = app.db.lock().unwrap();
+    assert_eq!(
+        db.contents(),
+        clean,
+        "externally-committed database state diverged across the cold restart"
+    );
+}

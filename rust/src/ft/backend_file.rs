@@ -32,6 +32,12 @@
 //! truncated tail can only make recovery more conservative, never
 //! inconsistent.
 //!
+//! A flush reaches the OS, not necessarily the platter: with
+//! [`FileBackendOptions::fsync`] off, power-loss durability is
+//! established by [`StorageBackend::sync`], which fsyncs every segment
+//! written since the last sync *and* the directory whose entries changed
+//! (segment files created or compacted away) — not just the active tail.
+//!
 //! # Reopen
 //!
 //! [`FileBackend::open`] rebuilds the in-memory `Key → (segment, offset)`
@@ -52,11 +58,25 @@
 //! the file is removed. The monitor's §4.2 GC actions therefore turn into
 //! tombstones at the [`crate::ft::harness::FtSystem::apply_gc`] layer and
 //! into reclaimed disk space here.
+//!
+//! Tombstones need care: a tombstone in a compacted segment may be the
+//! only thing shadowing a superseded put in an *earlier, surviving*
+//! segment — dropping it would resurrect the deleted key on the next
+//! replay scan. The backend therefore tracks each deleted key's newest
+//! tombstone and, when that tombstone's segment is compacted, re-appends
+//! the tombstone to the active segment; it is elided only when its
+//! segment is the oldest in existence (nothing it could shadow precedes
+//! it), which is also what keeps tombstones from accumulating forever.
+//! Before unlinking victims, compaction fsyncs the segments it wrote to
+//! and the victims themselves (plus the directory) regardless of
+//! `opts.fsync`, so state that was power-loss durable never silently
+//! stops being so — and a power-lost unlink, which resurrects a file at
+//! its last-fsynced length, can only bring back a victim whole.
 
-use crate::ft::storage::{proc_range, BackendInfo, Key, Kind, StorageBackend};
+use crate::ft::storage::{proc_range, BackendInfo, Key, Kind, StorageBackend, StorageError};
 use crate::util::hash::fnv1a;
 use crate::util::ser::{Reader, Writer};
-use std::collections::BTreeMap;
+use std::collections::{BTreeMap, BTreeSet};
 use std::fs::{File, OpenOptions};
 use std::io::{self, Read, Seek, SeekFrom, Write as IoWrite};
 use std::path::{Path, PathBuf};
@@ -120,6 +140,10 @@ pub struct FileBackend {
     dir: PathBuf,
     opts: FileBackendOptions,
     index: BTreeMap<Key, Loc>,
+    /// Newest tombstone per deleted key (disjoint from `index`). Needed
+    /// by compaction: a tombstone in a dying segment still shadows puts
+    /// in earlier surviving segments and must be carried forward.
+    tombs: BTreeMap<Key, Loc>,
     segs: BTreeMap<u64, SegState>,
     /// Segment new appends go to (its file may not exist yet).
     active: u64,
@@ -128,6 +152,11 @@ pub struct FileBackend {
     buffered_records: usize,
     /// Append handle for the active segment (lazily opened).
     writer: Option<File>,
+    /// Segments appended to without an fsync since the last [`sync`]
+    /// (only populated when `opts.fsync` is off).
+    dirty_segs: BTreeSet<u64>,
+    /// Segment files created or removed since the last directory fsync.
+    dir_dirty: bool,
     /// Read handles, per segment.
     readers: BTreeMap<u64, File>,
     live_value_bytes: u64,
@@ -230,11 +259,14 @@ impl FileBackend {
             dir: dir.to_path_buf(),
             opts,
             index: BTreeMap::new(),
+            tombs: BTreeMap::new(),
             segs: BTreeMap::new(),
             active: ids.last().copied().unwrap_or(0) + 1,
             buf: Vec::new(),
             buffered_records: 0,
             writer: None,
+            dirty_segs: BTreeSet::new(),
+            dir_dirty: false,
             readers: BTreeMap::new(),
             live_value_bytes: 0,
             compactions: 0,
@@ -248,6 +280,12 @@ impl FileBackend {
             let last = i + 1 == ids.len();
             b.scan_segment(id, last, repair)?;
         }
+        // Segments inherited from a previous process instance may have
+        // been flushed but never fsynced (and their directory entries
+        // never made durable) — the first sync() must cover them, so
+        // they start out dirty.
+        b.dirty_segs = b.segs.keys().copied().collect();
+        b.dir_dirty = !ids.is_empty();
         // Continue appending to the final segment if it has room,
         // otherwise start a fresh one (lazily — inspection of an existing
         // directory must not write).
@@ -330,6 +368,7 @@ impl FileBackend {
                 0 => {
                     let value_len = value.as_ref().map(|v| v.len() as u64).unwrap_or(0);
                     let loc = Loc { seg: id, off, len: rec_len, value_len };
+                    self.tombs.remove(&key);
                     if let Some(old) = self.index.insert(key, loc) {
                         self.mark_dead(old);
                     }
@@ -339,8 +378,11 @@ impl FileBackend {
                     if let Some(old) = self.index.remove(&key) {
                         self.mark_dead(old);
                     }
-                    // The tombstone itself is dead weight too.
+                    // The tombstone itself is dead weight too, but stays
+                    // tracked: compaction must not drop it while older
+                    // segments could still hold the puts it shadows.
                     self.segs.entry(id).or_default().dead_bytes += rec_len;
+                    self.tombs.insert(key, Loc { seg: id, off, len: rec_len, value_len: 0 });
                 }
             }
             off += rec_len;
@@ -364,10 +406,10 @@ impl FileBackend {
     fn append_record(&mut self, payload: Vec<u8>, value_len: u64) -> Loc {
         assert!(!self.crashed, "FileBackend used after simulated crash");
         assert!(!self.read_only, "FileBackend opened read-only (inspection)");
-        // The reopen scanner rejects larger length fields as corruption;
-        // refuse at write time rather than acknowledge a record that a
-        // restart could never read back.
-        assert!(
+        // Oversized puts are refused fallibly in `put` before reaching
+        // here; tombstones and compaction re-appends are always within
+        // bounds, so this is an internal invariant.
+        debug_assert!(
             payload.len() as u64 <= MAX_PAYLOAD,
             "WAL record payload of {} bytes exceeds the {MAX_PAYLOAD}-byte limit",
             payload.len()
@@ -407,16 +449,56 @@ impl FileBackend {
                 .open(self.dir.join(seg_name(self.active)))
                 .expect("opening WAL segment for append");
             self.writer = Some(f);
+            // The file may have just been created: its directory entry
+            // needs an fsync of the directory before the segment's
+            // contents can be called power-loss durable.
+            if self.opts.fsync {
+                self.fsync_dir();
+            } else {
+                self.dir_dirty = true;
+            }
         }
         let w = self.writer.as_mut().unwrap();
         w.write_all(&self.buf).expect("appending to WAL segment");
         if self.opts.fsync {
             w.sync_data().expect("fsync of WAL segment");
+        } else {
+            self.dirty_segs.insert(self.active);
         }
         self.segs.get_mut(&self.active).expect("active segment state").flushed_len +=
             self.buf.len() as u64;
         self.buf.clear();
         self.buffered_records = 0;
+    }
+
+    /// Make segment-file creations/removals durable (fsync the WAL
+    /// directory itself).
+    fn fsync_dir(&mut self) {
+        File::open(&self.dir)
+            .and_then(|d| d.sync_all())
+            .expect("fsync of WAL directory");
+        self.dir_dirty = false;
+    }
+
+    /// fsync the given segments (through the live writer for the active
+    /// one) and mark them clean. An fsync failure means acknowledged
+    /// writes may not be durable — that must not be silent (reopen
+    /// treats exactly this as fatal lost-acknowledged-state).
+    fn fsync_segs(&mut self, ids: BTreeSet<u64>) {
+        for id in ids {
+            if !self.segs.contains_key(&id) {
+                self.dirty_segs.remove(&id);
+                continue;
+            }
+            if id == self.active && self.writer.is_some() {
+                self.writer.as_mut().unwrap().sync_all().expect("fsync of WAL segment");
+            } else {
+                File::open(self.dir.join(seg_name(id)))
+                    .and_then(|f| f.sync_all())
+                    .expect("fsync of sealed WAL segment");
+            }
+            self.dirty_segs.remove(&id);
+        }
     }
 
     /// Seal the active segment and direct future appends at a fresh one.
@@ -480,6 +562,18 @@ impl FileBackend {
             return;
         }
         self.in_compaction = true;
+        // A victim tombstone is elided only when its segment is the
+        // OLDEST in existence — victims included. Anything above that is
+        // carried to the active segment: a put it shadows may live in an
+        // older surviving segment, and even an older co-victim is not
+        // safe to rely on, because unlink durability is not ordered
+        // across power loss (a resurrected older victim file must still
+        // find the tombstone that deletes its records).
+        let min_seg = self.segs.keys().next().copied();
+        // Segments that receive records during this compaction: the
+        // durability barrier below fsyncs exactly these plus the
+        // victims, not every dirty segment in the store.
+        let mut touched: BTreeSet<u64> = BTreeSet::new();
         let live: Vec<Key> = self
             .index
             .iter()
@@ -493,18 +587,68 @@ impl FileBackend {
             // segment below.
             let new_loc =
                 self.append_record(encode_payload(0, &key, Some(&value)), value.len() as u64);
+            touched.insert(new_loc.seg);
             self.index.insert(key, new_loc);
         }
-        // The moved records must be durable before their only other copy
-        // disappears, or a crash inside the group-commit window would
-        // lose acknowledged data — breaking the WAL's suffix-only-loss
-        // contract (flush honors `opts.fsync`).
+        let victim_tombs: Vec<(Key, Loc)> = self
+            .tombs
+            .iter()
+            .filter(|(_, loc)| victims.contains(&loc.seg))
+            .map(|(k, loc)| (k.clone(), *loc))
+            .collect();
+        for (key, loc) in victim_tombs {
+            debug_assert!(!self.index.contains_key(&key), "tombstoned key cannot be live");
+            if min_seg.map_or(false, |m| m < loc.seg) {
+                // A segment older than this tombstone may hold a put for
+                // the key: move the tombstone to the active segment so a
+                // replay scan still sees the delete.
+                let new_loc = self.append_record(encode_payload(1, &key, None), 0);
+                touched.insert(new_loc.seg);
+                self.segs.entry(new_loc.seg).or_default().dead_bytes += new_loc.len;
+                self.tombs.insert(key, new_loc);
+            } else {
+                // Nothing older than this tombstone exists anywhere: any
+                // put it shadowed is in its own segment, and the barrier
+                // below fsyncs that victim before the unlink, so the two
+                // die — or resurrect — strictly together.
+                self.tombs.remove(&key);
+            }
+        }
+        // Durability barrier before any unlink, regardless of
+        // `opts.fsync`. Two obligations: (1) the moved records and
+        // carried tombstones must be POWER-LOSS durable — not merely in
+        // the page cache — before their only other copy disappears, or a
+        // compaction after a sync() silently un-durables acknowledged
+        // state; (2) the victims' own unfsynced tails, because a
+        // power-lost unlink resurrects a file at its last-fsynced
+        // length, and an elided tombstone must still be inside the file
+        // that holds the put it shadows. Only those segments (plus the
+        // directory) are fsynced — unrelated dirty segments lose nothing
+        // when a victim is unlinked and wait for the next sync().
         self.flush();
+        let to_sync: BTreeSet<u64> = victims
+            .iter()
+            .chain(touched.iter())
+            .copied()
+            .filter(|id| self.dirty_segs.contains(id))
+            .collect();
+        self.fsync_segs(to_sync);
+        if self.dir_dirty {
+            self.fsync_dir();
+        }
         for id in victims {
             self.segs.remove(&id);
+            self.dirty_segs.remove(&id);
             self.readers.remove(&id);
             let _ = std::fs::remove_file(self.dir.join(seg_name(id)));
             self.compactions += 1;
+        }
+        // The removals changed the directory; power-loss durability of
+        // the new shape is re-established on the next fsync.
+        if self.opts.fsync {
+            self.fsync_dir();
+        } else {
+            self.dir_dirty = true;
         }
         self.in_compaction = false;
     }
@@ -516,9 +660,20 @@ impl FileBackend {
 }
 
 impl StorageBackend for FileBackend {
-    fn put(&mut self, key: &Key, value: &[u8]) -> Option<u64> {
-        let loc = self.append_record(encode_payload(0, key, Some(value)), value.len() as u64);
+    fn put(&mut self, key: &Key, value: &[u8]) -> Result<Option<u64>, StorageError> {
+        let payload = encode_payload(0, key, Some(value));
+        if payload.len() as u64 > MAX_PAYLOAD {
+            // The reopen scanner rejects larger length fields as
+            // corruption; refuse (without acknowledging) rather than
+            // persist a record a restart could never read back.
+            return Err(StorageError::ValueTooLarge {
+                size: payload.len() as u64,
+                max: MAX_PAYLOAD,
+            });
+        }
+        let loc = self.append_record(payload, value.len() as u64);
         self.live_value_bytes += value.len() as u64;
+        self.tombs.remove(key);
         let old = self.index.insert(key.clone(), loc);
         let replaced = old.map(|old| {
             self.mark_dead(old);
@@ -528,7 +683,7 @@ impl StorageBackend for FileBackend {
         // marker rewritten every epoch) — check the threshold now that
         // the index points at the new record.
         self.maybe_compact();
-        replaced
+        Ok(replaced)
     }
 
     fn get(&mut self, key: &Key) -> Option<Vec<u8>> {
@@ -542,8 +697,11 @@ impl StorageBackend for FileBackend {
             return None;
         }
         let loc = self.append_record(encode_payload(1, key, None), 0);
-        // The tombstone is dead the moment it lands.
+        // The tombstone is dead weight the moment it lands, but tracked:
+        // compaction must carry it while older segments may hold the
+        // puts it shadows.
         self.segs.entry(loc.seg).or_default().dead_bytes += loc.len;
+        self.tombs.insert(key.clone(), loc);
         let old = self.index.remove(key).expect("checked above");
         self.mark_dead(old);
         self.maybe_compact();
@@ -560,11 +718,18 @@ impl StorageBackend for FileBackend {
 
     fn sync(&mut self) {
         self.flush();
-        if let Some(w) = self.writer.as_mut() {
-            // An fsync failure means acknowledged writes may not be
-            // durable — that must not be silent (reopen treats exactly
-            // this as fatal lost-acknowledged-state).
-            w.sync_all().expect("fsync of WAL segment");
+        // Everything written since the last sync — including segments
+        // sealed in between, whose write handles are long gone — plus
+        // the active writer, so the whole acknowledged prefix (not just
+        // the active tail) is power-loss durable.
+        let mut to_sync = std::mem::take(&mut self.dirty_segs);
+        if self.writer.is_some() {
+            to_sync.insert(self.active);
+        }
+        self.fsync_segs(to_sync);
+        // …and the files themselves must be reachable after power loss.
+        if self.dir_dirty {
+            self.fsync_dir();
         }
     }
 
@@ -618,9 +783,9 @@ mod tests {
     fn put_get_delete_roundtrip() {
         let t = TempDir::new("wal-basic");
         let mut b = FileBackend::open(t.path(), opts(1)).unwrap();
-        assert_eq!(b.put(&k(1, Kind::State, 1), b"hello"), None);
+        assert_eq!(b.put(&k(1, Kind::State, 1), b"hello"), Ok(None));
         assert_eq!(b.get(&k(1, Kind::State, 1)), Some(b"hello".to_vec()));
-        assert_eq!(b.put(&k(1, Kind::State, 1), b"hi"), Some(5));
+        assert_eq!(b.put(&k(1, Kind::State, 1), b"hi"), Ok(Some(5)));
         assert_eq!(b.get(&k(1, Kind::State, 1)), Some(b"hi".to_vec()));
         assert_eq!(b.delete(&k(1, Kind::State, 1)), Some(2));
         assert_eq!(b.get(&k(1, Kind::State, 1)), None);
@@ -632,7 +797,7 @@ mod tests {
         let t = TempDir::new("wal-group");
         let mut b = FileBackend::open(t.path(), opts(4)).unwrap();
         for tag in 0..3 {
-            b.put(&k(0, Kind::LogEntry, tag), &[tag as u8; 16]);
+            b.put(&k(0, Kind::LogEntry, tag), &[tag as u8; 16]).unwrap();
         }
         // Nothing flushed yet; the buffered tail serves reads by flushing
         // on demand.
@@ -640,9 +805,9 @@ mod tests {
         assert_eq!(b.get(&k(0, Kind::LogEntry, 2)), Some(vec![2u8; 16]));
         assert!(b.buf.is_empty(), "read of a buffered record forces a flush");
         // The 4th write crosses the group-commit width by itself.
-        b.put(&k(0, Kind::LogEntry, 3), &[9]);
+        b.put(&k(0, Kind::LogEntry, 3), &[9]).unwrap();
         for _ in 0..3 {
-            b.put(&k(0, Kind::LogEntry, 99), &[1]);
+            b.put(&k(0, Kind::LogEntry, 99), &[1]).unwrap();
         }
         b.sync();
         assert!(b.buf.is_empty());
@@ -654,9 +819,9 @@ mod tests {
         {
             let mut b = FileBackend::open(t.path(), opts(2)).unwrap();
             for tag in 0..10u32 {
-                b.put(&k(tag % 3, Kind::LogEntry, tag as u64), &[tag as u8; 8]);
+                b.put(&k(tag % 3, Kind::LogEntry, tag as u64), &[tag as u8; 8]).unwrap();
             }
-            b.put(&k(0, Kind::LogEntry, 0), b"overwritten");
+            b.put(&k(0, Kind::LogEntry, 0), b"overwritten").unwrap();
             b.delete(&k(1, Kind::LogEntry, 1));
             // Dropped here: Drop flushes the tail.
         }
@@ -674,9 +839,9 @@ mod tests {
         let t = TempDir::new("wal-crash");
         {
             let mut b = FileBackend::open(t.path(), opts(100)).unwrap();
-            b.put(&k(0, Kind::State, 1), b"durable");
+            b.put(&k(0, Kind::State, 1), b"durable").unwrap();
             b.sync();
-            b.put(&k(0, Kind::State, 2), b"lost");
+            b.put(&k(0, Kind::State, 2), b"lost").unwrap();
             b.simulate_crash();
             // Drop after crash must not write the tail.
         }
@@ -690,8 +855,8 @@ mod tests {
         let t = TempDir::new("wal-torn");
         {
             let mut b = FileBackend::open(t.path(), opts(1)).unwrap();
-            b.put(&k(0, Kind::State, 1), b"keep-me");
-            b.put(&k(0, Kind::State, 2), b"torn-victim");
+            b.put(&k(0, Kind::State, 1), b"keep-me").unwrap();
+            b.put(&k(0, Kind::State, 2), b"torn-victim").unwrap();
         }
         // Chop the final record in half (simulates a crash mid-write).
         let seg = t.path().join(seg_name(1));
@@ -702,7 +867,7 @@ mod tests {
         assert_eq!(b.get(&k(0, Kind::State, 1)), Some(b"keep-me".to_vec()));
         assert_eq!(b.get(&k(0, Kind::State, 2)), None);
         // The truncated file is clean again: append + reopen still works.
-        b.put(&k(0, Kind::State, 3), b"after-truncate");
+        b.put(&k(0, Kind::State, 3), b"after-truncate").unwrap();
         drop(b);
         let mut b = FileBackend::open(t.path(), opts(1)).unwrap();
         assert_eq!(b.get(&k(0, Kind::State, 3)), Some(b"after-truncate".to_vec()));
@@ -713,8 +878,8 @@ mod tests {
         let t = TempDir::new("wal-crc");
         {
             let mut b = FileBackend::open(t.path(), opts(1)).unwrap();
-            b.put(&k(0, Kind::State, 1), b"good");
-            b.put(&k(0, Kind::State, 2), b"flipped");
+            b.put(&k(0, Kind::State, 1), b"good").unwrap();
+            b.put(&k(0, Kind::State, 2), b"flipped").unwrap();
         }
         let seg = t.path().join(seg_name(1));
         let mut data = std::fs::read(&seg).unwrap();
@@ -737,7 +902,7 @@ mod tests {
         };
         let mut b = FileBackend::open(t.path(), o).unwrap();
         for tag in 0..40 {
-            b.put(&k(0, Kind::LogEntry, tag), &[0u8; 32]);
+            b.put(&k(0, Kind::LogEntry, tag), &[0u8; 32]).unwrap();
         }
         assert!(b.segs.len() > 2, "small segments must have rotated");
         let before = b.info();
@@ -783,7 +948,7 @@ mod tests {
         };
         let mut b = FileBackend::open(t.path(), o).unwrap();
         for tag in 0..40 {
-            b.put(&k(0, Kind::LogEntry, tag), &[tag as u8; 32]);
+            b.put(&k(0, Kind::LogEntry, tag), &[tag as u8; 32]).unwrap();
         }
         b.sync(); // all 40 durable
         // Tombstone 4 of every 5 records: every segment crosses the dead
@@ -815,7 +980,7 @@ mod tests {
         let t = TempDir::new("wal-ro");
         {
             let mut b = FileBackend::open(t.path(), opts(1)).unwrap();
-            b.put(&k(0, Kind::State, 1), b"x");
+            b.put(&k(0, Kind::State, 1), b"x").unwrap();
         }
         let files_before = std::fs::read_dir(t.path()).unwrap().count();
         let _inspect = FileBackend::open(t.path(), opts(1)).unwrap();
@@ -831,8 +996,8 @@ mod tests {
         let t = TempDir::new("wal-ro-torn");
         {
             let mut b = FileBackend::open(t.path(), opts(1)).unwrap();
-            b.put(&k(0, Kind::State, 1), b"keep-me");
-            b.put(&k(0, Kind::State, 2), b"torn-victim");
+            b.put(&k(0, Kind::State, 1), b"keep-me").unwrap();
+            b.put(&k(0, Kind::State, 2), b"torn-victim").unwrap();
         }
         let seg = t.path().join(seg_name(1));
         let torn_len = std::fs::metadata(&seg).unwrap().len() - 5;
@@ -865,7 +1030,7 @@ mod tests {
         {
             let mut b = FileBackend::open(t.path(), o).unwrap();
             for tag in 0..20 {
-                b.put(&k(0, Kind::State, tag), &[1u8; 32]);
+                b.put(&k(0, Kind::State, tag), &[1u8; 32]).unwrap();
             }
             assert!(b.segs.len() >= 2);
         }
@@ -876,5 +1041,170 @@ mod tests {
         std::fs::write(&seg, &data).unwrap();
         let err = FileBackend::open(t.path(), o).unwrap_err();
         assert_eq!(err.kind(), io::ErrorKind::InvalidData);
+    }
+
+    /// A tombstone in a compacted segment may be the only thing shadowing
+    /// a superseded put in an *older surviving* segment. Compaction must
+    /// carry it to the active segment, or the deleted key resurrects on
+    /// the next reopen — the review scenario: a tombstone-heavy segment
+    /// is ~100% dead, compacts away immediately, and the old put replays.
+    #[test]
+    fn compaction_carries_tombstones_shadowing_older_segments() {
+        let t = TempDir::new("wal-tomb-carry");
+        let o = FileBackendOptions {
+            flush_every_n: 1,
+            segment_bytes: 256,
+            compact_ratio: 0.5,
+            fsync: false,
+        };
+        let mut b = FileBackend::open(t.path(), o).unwrap();
+        // Segment 1: the target put plus long-lived fillers (stays mostly
+        // live, so it never becomes a compaction victim itself).
+        let target = k(0, Kind::State, 0);
+        b.put(&target, &[7u8; 32]).unwrap();
+        let mut filler = 0u64;
+        while b.active == 1 {
+            b.put(&k(1, Kind::State, filler), &[1u8; 32]).unwrap();
+            filler += 1;
+        }
+        // A batch of short-lived keys, then delete them AND the target:
+        // the tombstones land in later segments.
+        for tag in 0..6 {
+            b.put(&k(2, Kind::State, tag), &[2u8; 32]).unwrap();
+        }
+        for tag in 0..6 {
+            b.delete(&k(2, Kind::State, tag));
+        }
+        b.delete(&target);
+        // Roll the tombstone-bearing segment shut, then kill it: stuff it
+        // with throwaway records and delete them so its dead fraction
+        // crosses the threshold.
+        let tomb_seg = b.tombs[&target].seg;
+        let mut extra = 0u64;
+        while b.active == tomb_seg {
+            b.put(&k(3, Kind::State, extra), &[3u8; 32]).unwrap();
+            extra += 1;
+        }
+        for tag in 0..extra {
+            b.delete(&k(3, Kind::State, tag));
+        }
+        b.compact();
+        assert!(
+            !b.segs.contains_key(&tomb_seg),
+            "the tombstone's original segment must have been compacted away"
+        );
+        assert!(b.segs.contains_key(&1), "segment 1 (mostly live) must survive");
+        assert!(b.tombs[&target].seg > tomb_seg, "tombstone was carried forward");
+        drop(b);
+        let mut b = FileBackend::open(t.path(), o).unwrap();
+        assert_eq!(b.get(&target), None, "deleted key must not resurrect after compaction");
+        for tag in 0..filler {
+            assert_eq!(b.get(&k(1, Kind::State, tag)), Some(vec![1u8; 32]));
+        }
+    }
+
+    /// The carry rule has a floor: once no segment older than a tombstone
+    /// remains, the tombstone is elided instead of shuffled forward
+    /// forever — deleting everything eventually shrinks the WAL to
+    /// (almost) nothing instead of accumulating tombstones.
+    #[test]
+    fn tombstones_are_elided_once_nothing_older_survives() {
+        let t = TempDir::new("wal-tomb-elide");
+        let o = FileBackendOptions {
+            flush_every_n: 1,
+            segment_bytes: 256,
+            compact_ratio: 0.5,
+            fsync: false,
+        };
+        let mut b = FileBackend::open(t.path(), o).unwrap();
+        for tag in 0..12 {
+            b.put(&k(0, Kind::State, tag), &[5u8; 32]).unwrap();
+        }
+        for tag in 0..12 {
+            b.delete(&k(0, Kind::State, tag));
+        }
+        // Carried tombstones can seal one more segment per round; a few
+        // rounds reach the fixed point where eliding empties the WAL.
+        for _ in 0..4 {
+            b.compact();
+        }
+        // Only tombstones in the still-open active segment may remain
+        // tracked; everything in compacted segments was elided.
+        assert!(b.tombs.values().all(|loc| b.segs.contains_key(&loc.seg)));
+        let files = std::fs::read_dir(t.path()).unwrap().count();
+        assert!(files <= 1, "deleting everything must not leave segments behind ({files} files)");
+        drop(b);
+        let b2 = FileBackend::open(t.path(), o).unwrap();
+        assert_eq!(b2.info().live_keys, 0);
+    }
+
+    /// `sync()` must cover the whole acknowledged prefix: segments sealed
+    /// since the last sync (whose write handles are long gone) and the
+    /// directory entries for created/removed segment files, not just the
+    /// active tail.
+    #[test]
+    fn sync_covers_sealed_segments_and_directory() {
+        let t = TempDir::new("wal-sync-all");
+        let o = FileBackendOptions {
+            flush_every_n: 1,
+            segment_bytes: 256,
+            compact_ratio: 2.0, // keep every segment
+            fsync: false,
+        };
+        let mut b = FileBackend::open(t.path(), o).unwrap();
+        for tag in 0..30 {
+            b.put(&k(0, Kind::State, tag), &[0u8; 32]).unwrap();
+        }
+        assert!(b.segs.len() >= 3, "rotations must have sealed segments");
+        assert!(b.dirty_segs.len() >= 3, "sealed segments are tracked as unsynced");
+        assert!(b.dir_dirty, "segment creation dirties the directory");
+        b.sync();
+        assert!(b.dirty_segs.is_empty(), "sync must fsync every written segment");
+        assert!(!b.dir_dirty, "sync must fsync the directory");
+        b.put(&k(0, Kind::State, 99), &[0u8; 8]).unwrap();
+        assert!(!b.dirty_segs.is_empty(), "new writes re-dirty the active segment");
+    }
+
+    /// Segments inherited from a previous process instance start out
+    /// dirty: that instance may have flushed them without ever fsyncing,
+    /// so the first sync() after a reopen must cover them — not just
+    /// what the new instance wrote itself.
+    #[test]
+    fn reopened_segments_start_dirty_until_synced() {
+        let t = TempDir::new("wal-reopen-dirty");
+        {
+            let mut b = FileBackend::open(t.path(), opts(1)).unwrap();
+            b.put(&k(0, Kind::State, 1), b"inherited").unwrap();
+            // Drop flushes the tail but never fsyncs.
+        }
+        let mut b = FileBackend::open(t.path(), opts(1)).unwrap();
+        assert!(!b.dirty_segs.is_empty(), "inherited segments must start dirty");
+        assert!(b.dir_dirty, "inherited directory state must start dirty");
+        b.sync();
+        assert!(b.dirty_segs.is_empty());
+        assert!(!b.dir_dirty);
+    }
+
+    /// An oversized value is refused as an error — not a process panic —
+    /// and the backend stays fully usable afterwards.
+    #[test]
+    fn oversized_put_is_refused_not_fatal() {
+        let t = TempDir::new("wal-oversize");
+        let mut b = FileBackend::open(t.path(), opts(1)).unwrap();
+        let huge = vec![0u8; MAX_PAYLOAD as usize + 1];
+        match b.put(&k(0, Kind::State, 1), &huge) {
+            Err(StorageError::ValueTooLarge { size, max }) => {
+                assert!(size > max);
+                assert_eq!(max, MAX_PAYLOAD);
+            }
+            other => panic!("expected ValueTooLarge, got {other:?}"),
+        }
+        // Nothing was persisted or accounted.
+        assert_eq!(b.get(&k(0, Kind::State, 1)), None);
+        assert_eq!(b.info().live_keys, 0);
+        b.put(&k(0, Kind::State, 1), b"small").unwrap();
+        drop(b);
+        let mut b = FileBackend::open(t.path(), opts(1)).unwrap();
+        assert_eq!(b.get(&k(0, Kind::State, 1)), Some(b"small".to_vec()));
     }
 }

@@ -108,6 +108,31 @@ pub struct StorageStats {
     pub keys_scanned: u64,
 }
 
+/// A write the backend refused (the write was *not* acknowledged and
+/// nothing was persisted). The §4.2 contract treats an acknowledged
+/// write as irrevocable, so [`Store::put`] panics on these; callers that
+/// can degrade gracefully (CLI tools, admission control) use
+/// [`Store::try_put`].
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum StorageError {
+    /// The encoded record exceeds the backend's maximum record size
+    /// (a restart's scanner would reject it as corruption, so it must
+    /// never be acknowledged in the first place).
+    ValueTooLarge { size: u64, max: u64 },
+}
+
+impl std::fmt::Display for StorageError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            StorageError::ValueTooLarge { size, max } => {
+                write!(f, "value of {size} bytes exceeds the backend's {max}-byte record limit")
+            }
+        }
+    }
+}
+
+impl std::error::Error for StorageError {}
+
 /// Aggregate counters a backend reports about itself (`falkirk store
 /// inspect`, the storage benches, and the compaction tests read these).
 #[derive(Clone, Debug, PartialEq)]
@@ -154,8 +179,11 @@ impl BackendInfo {
 /// `get`/`scan_keys` take `&mut self` because a write-ahead backend may
 /// need to flush its buffered tail before serving a read.
 pub trait StorageBackend: Send {
-    /// Persist a blob; returns the size of any blob it replaced.
-    fn put(&mut self, key: &Key, value: &[u8]) -> Option<u64>;
+    /// Persist a blob; returns the size of any blob it replaced. `Err`
+    /// means the write was refused and nothing was persisted (e.g. the
+    /// value exceeds the backend's record-size limit) — the blob is NOT
+    /// acknowledged.
+    fn put(&mut self, key: &Key, value: &[u8]) -> Result<Option<u64>, StorageError>;
 
     fn get(&mut self, key: &Key) -> Option<Vec<u8>>;
 
@@ -225,8 +253,8 @@ pub(crate) fn proc_range(proc: u32) -> (Bound<Key>, Bound<Key>) {
 }
 
 impl StorageBackend for MemBackend {
-    fn put(&mut self, key: &Key, value: &[u8]) -> Option<u64> {
-        self.blobs.insert(key.clone(), value.to_vec()).map(|old| old.len() as u64)
+    fn put(&mut self, key: &Key, value: &[u8]) -> Result<Option<u64>, StorageError> {
+        Ok(self.blobs.insert(key.clone(), value.to_vec()).map(|old| old.len() as u64))
     }
 
     fn get(&mut self, key: &Key) -> Option<Vec<u8>> {
@@ -316,8 +344,15 @@ impl Store {
         Ok(Store::with_backend(Box::new(backend), 0))
     }
 
-    fn put_inner(&self, key: Key, value: Vec<u8>, log_records: Option<u64>) {
+    fn put_inner(
+        &self,
+        key: Key,
+        value: Vec<u8>,
+        log_records: Option<u64>,
+    ) -> Result<(), StorageError> {
         let mut g = self.inner.lock().unwrap();
+        // A refused write is not acknowledged: no stats, no residency.
+        let replaced = g.backend.put(&key, &value)?.unwrap_or(0);
         g.stats.writes += 1;
         g.stats.bytes_written += value.len() as u64;
         g.stats.virtual_latency += g.write_cost;
@@ -325,21 +360,33 @@ impl Store {
             g.stats.log_batches += 1;
             g.stats.log_records += records;
         }
-        let replaced = g.backend.put(&key, &value).unwrap_or(0);
         g.resident = g.resident - replaced + value.len() as u64;
+        Ok(())
     }
 
     /// Persist a blob; returns once "acknowledged" (synchronously here,
-    /// with the virtual latency charged to the stats).
+    /// with the virtual latency charged to the stats). Panics if the
+    /// backend refuses the write — the FT layer has no continuation for
+    /// an unacknowledgeable Ξ/state/log blob; use [`Store::try_put`] to
+    /// handle refusal gracefully.
     pub fn put(&self, key: Key, value: Vec<u8>) {
-        self.put_inner(key, value, None);
+        self.put_inner(key, value, None)
+            .unwrap_or_else(|e| panic!("unacknowledgeable durable write: {e}"));
+    }
+
+    /// Like [`Store::put`], but surfaces a refused write (e.g. a value
+    /// over the backend's record-size limit) as a recoverable error
+    /// instead of panicking. On `Err` nothing was persisted.
+    pub fn try_put(&self, key: Key, value: Vec<u8>) -> Result<(), StorageError> {
+        self.put_inner(key, value, None)
     }
 
     /// Persist one message-log blob covering `records` records. Identical
     /// ack semantics to [`Store::put`], plus batch/record accounting so
     /// the policy-overhead benches can report amortization honestly.
     pub fn put_log(&self, key: Key, value: Vec<u8>, records: u64) {
-        self.put_inner(key, value, Some(records));
+        self.put_inner(key, value, Some(records))
+            .unwrap_or_else(|e| panic!("unacknowledgeable durable log write: {e}"));
     }
 
     pub fn get(&self, key: &Key) -> Option<Vec<u8>> {

@@ -135,6 +135,26 @@ fn crash_casualties_are_a_suffix() {
     assert_eq!(survivors, (0..14).collect::<Vec<u64>>(), "suffix-only loss");
 }
 
+/// A value over the WAL's record-size limit is refused as a recoverable
+/// error through `try_put` — nothing persisted, nothing accounted — and
+/// the store keeps working.
+#[test]
+fn oversized_value_is_a_recoverable_error() {
+    let t = TempDir::new("oversize");
+    let store = Store::open_dir(t.path(), 0, FileBackendOptions::default()).unwrap();
+    let k = Key { proc: 0, kind: Kind::State, tag: 1 };
+    let huge = vec![0u8; (64 << 20) + 1]; // past the 64 MiB record limit
+    assert!(store.try_put(k.clone(), huge).is_err());
+    assert_eq!(store.get(&k), None);
+    assert_eq!(store.stats().writes, 0, "a refused write is not acknowledged");
+    assert_eq!(store.resident_bytes(), 0);
+    store.put(k.clone(), vec![1, 2, 3]); // ordinary writes still fine
+    assert_eq!(store.get(&k), Some(vec![1, 2, 3]));
+    // The mem backend has no record format, hence no limit.
+    let mem = Store::new(0);
+    assert!(mem.try_put(k.clone(), vec![0u8; (64 << 20) + 1]).is_ok());
+}
+
 /// `resident_bytes` is maintained, not recomputed — and a reopened WAL
 /// seeds the counter from its live index.
 #[test]

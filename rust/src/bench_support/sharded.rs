@@ -22,7 +22,7 @@
 use crate::engine::sharded::ProcFactory;
 use crate::engine::{Delivery, Record};
 use crate::frontier::Frontier;
-use crate::ft::{FtSystem, Policy, Store};
+use crate::ft::{FtSystem, PersistMode, Policy, Store};
 use crate::graph::sharding::{LogicalId, ShardPlan, ShardedBuilder};
 use crate::graph::{ProcId, Projection};
 use crate::operators::{Buffer, CountByKey, Map, Source};
@@ -51,6 +51,11 @@ pub struct ShardedConfig {
     /// parallel executor with shard s of every sharded vertex in group
     /// `s % threads` — see [`crate::engine::shard_groups`]).
     pub threads: usize,
+    /// Persistence discipline of the store: [`PersistMode::Sync`] blocks
+    /// each FT write on the backend (the pre-pipeline behavior);
+    /// [`PersistMode::Async`] stages writes for the background writer
+    /// thread and gates recovery availability on its ack watermarks.
+    pub persist_mode: PersistMode,
 }
 
 impl Default for ShardedConfig {
@@ -63,6 +68,7 @@ impl Default for ShardedConfig {
             write_cost: 1,
             batch_cap: 1,
             threads: 1,
+            persist_mode: PersistMode::Sync,
         }
     }
 }
@@ -123,6 +129,9 @@ fn build_pipeline(
     store: Store,
     reopen: Option<&mut Option<crate::ft::recovery::RecoveryReport>>,
 ) -> ShardedPipeline {
+    // The reopen path reads the whole store before anything stages, so
+    // switching first is safe either way (reads settle the queue).
+    store.set_persist_mode(cfg.persist_mode);
     let mut b = ShardedBuilder::new();
     let src = b.add_proc("src", TimeDomain::EPOCH);
     let map =

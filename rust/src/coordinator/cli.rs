@@ -22,6 +22,7 @@ COMMANDS:
             --fail <proc> --fail-after E (2) --xla <true|false> (true)
             --batch-cap B (1)
             --data-dir DIR --flush-every N (8)  # durable WAL store
+            --persist-async --ack-every N (8)   # staged writer pipeline
   shard     Run the sharded keyed-aggregation job, optionally crashing
             one worker shard and recovering only its key range.
             --workers W (4) --epochs N (6) --records N (64) --keys N (16)
@@ -29,6 +30,7 @@ COMMANDS:
             --fail-shard S --fail-after E (2) --batch-cap B (1)
             --threads T (1)  # T>1 drains on the parallel engine
             --data-dir DIR --flush-every N (8)  # durable WAL store
+            --persist-async --ack-every N (8)   # staged writer pipeline
   store     Durable-store tooling.
             inspect <dir>    # dump segment / key / byte counts of a WAL
   fig7      Run a worked rollback example.  --panel a|b|c (c)
@@ -37,6 +39,19 @@ COMMANDS:
   selftest  Smoke-test all layers (engine, FT, recovery, kernels).
   help      Show this message.
 ";
+
+/// Resolve `--persist-async` / `--ack-every` into a [`PersistMode`].
+fn persist_mode_for(args: &Args) -> Result<crate::ft::PersistMode, i32> {
+    if !args.flag("persist-async") {
+        return Ok(crate::ft::PersistMode::Sync);
+    }
+    let ack_every = args.get_usize("ack-every", 8);
+    if ack_every == 0 {
+        eprintln!("--ack-every must be at least 1");
+        return Err(2);
+    }
+    Ok(crate::ft::PersistMode::Async { ack_every })
+}
 
 /// Open a durable store when `--data-dir` was given, the in-memory one
 /// otherwise. A fresh run restarts storage-key numbering, so reusing a
@@ -122,6 +137,10 @@ fn cmd_fig1(args: &Args) -> i32 {
         write_cost: args.get_u64("write-cost", 10),
         use_xla: args.get_str("xla", "true") == "true",
         batch_cap: args.get_usize("batch-cap", 1),
+        persist_mode: match persist_mode_for(args) {
+            Ok(m) => m,
+            Err(code) => return code,
+        },
     };
     let store = match store_for(args, cfg.write_cost) {
         Ok(s) => s,
@@ -134,6 +153,12 @@ fn cmd_fig1(args: &Args) -> i32 {
     println!("  checkpoints      {}", out.checkpoints);
     println!("  log entries      {}", out.log_entries);
     println!("  storage writes   {} ({} bytes)", out.storage_writes, out.storage_bytes);
+    if let crate::ft::PersistMode::Async { ack_every } = cfg.persist_mode {
+        println!("  persist          async (ack_every {ack_every}), peak ack-lag {}", out.ack_lag);
+    }
+    if out.storage_errors > 0 {
+        println!("  storage errors   {}", out.storage_errors);
+    }
     println!("  events           {}", out.events);
     println!("  elapsed          {:.2} ms", out.elapsed_ms);
     if let Some(rec) = &out.recovery {
@@ -178,7 +203,18 @@ fn cmd_shard(args: &Args) -> i32 {
         eprintln!("--threads must be at least 1");
         return 2;
     }
-    let cfg = ShardedConfig { workers, two_stage, batch_cap, threads, ..Default::default() };
+    let persist_mode = match persist_mode_for(args) {
+        Ok(m) => m,
+        Err(code) => return code,
+    };
+    let cfg = ShardedConfig {
+        workers,
+        two_stage,
+        batch_cap,
+        threads,
+        persist_mode,
+        ..Default::default()
+    };
     if let Some(s) = fail_shard {
         if s >= workers as usize {
             eprintln!("--fail-shard {s} out of range (workers = {workers})");
@@ -230,6 +266,12 @@ fn cmd_shard(args: &Args) -> i32 {
     println!("  events/sec       {:.0}", tp.events_per_sec());
     println!("  records/sec      {:.0}", tp.records_per_sec());
     println!("  log writes       {} batches / {} records", p.sys.stats.log_entries, p.sys.stats.log_records);
+    if let crate::ft::PersistMode::Async { ack_every } = persist_mode {
+        println!(
+            "  persist          async (ack_every {ack_every}), peak ack-lag {}, errors {}",
+            p.sys.stats.ack_lag, p.sys.stats.storage_errors
+        );
+    }
     println!("  checkpoints      {}", p.sys.stats.checkpoints_taken);
     println!("  recoveries       {}", p.sys.stats.recoveries);
     println!("  replayed msgs    {}", p.sys.stats.messages_replayed);

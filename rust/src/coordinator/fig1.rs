@@ -63,6 +63,10 @@ pub struct Fig1Config {
     pub use_xla: bool,
     /// Channel coalescing cap (1 = record-at-a-time).
     pub batch_cap: usize,
+    /// Persistence discipline of the store (sync ack-per-write vs. the
+    /// asynchronous staged pipeline; see
+    /// [`crate::ft::storage::PersistMode`]).
+    pub persist_mode: crate::ft::PersistMode,
 }
 
 impl Default for Fig1Config {
@@ -80,6 +84,7 @@ impl Default for Fig1Config {
             write_cost: 10,
             use_xla: true,
             batch_cap: 1,
+            persist_mode: crate::ft::PersistMode::Sync,
         }
     }
 }
@@ -195,6 +200,7 @@ pub fn build(cfg: &Fig1Config) -> Fig1App {
 /// [`crate::ft::backend_file::FileBackend`] directory via
 /// [`Store::open_dir`], which `falkirk fig1 --data-dir` uses).
 pub fn build_with_store(cfg: &Fig1Config, store: Store) -> Fig1App {
+    store.set_persist_mode(cfg.persist_mode);
     let db_out = Arc::new(Mutex::new(ExternalOutput::new()));
     let parts = assemble(cfg, db_out.clone());
     let sys = FtSystem::new_with_cap(
@@ -228,6 +234,7 @@ pub fn reopen(
     store: Store,
     db_out: Arc<Mutex<ExternalOutput>>,
 ) -> (Fig1App, crate::ft::recovery::RecoveryReport) {
+    store.set_persist_mode(cfg.persist_mode);
     let parts = assemble(cfg, db_out.clone());
     let (sys, report) = FtSystem::reopen(
         parts.topo,
@@ -374,6 +381,10 @@ pub struct Fig1Outcome {
     pub log_entries: u64,
     pub storage_writes: u64,
     pub storage_bytes: u64,
+    /// Peak staged-minus-acked durable operations (0 in sync mode).
+    pub ack_lag: u64,
+    /// Durable writes the store refused (oversized payloads).
+    pub storage_errors: u64,
     pub events: u64,
     /// Present if a failure was injected.
     pub recovery: Option<RecoverySummary>,
@@ -510,6 +521,8 @@ pub fn run_with_store(cfg: &Fig1Config, store: Store) -> Fig1Outcome {
         log_entries: app.sys.stats.log_entries,
         storage_writes: st.writes,
         storage_bytes: st.bytes_written,
+        ack_lag: app.sys.stats.ack_lag,
+        storage_errors: app.sys.stats.storage_errors,
         events: app.sys.engine.events_processed(),
         recovery,
         used_xla: app.used_xla,

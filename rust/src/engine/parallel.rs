@@ -1,7 +1,7 @@
 //! Multi-threaded shard execution: one OS thread per shard group.
 //!
 //! [`Engine::run_parallel`] drains the system to quiescence with the
-//! engine *decomposed* into per-group [`WorkerState`]s (see
+//! engine *decomposed* into per-group `WorkerState`s (see
 //! [`crate::engine::scheduler`]): each worker thread runs its own
 //! scheduler loop over its group's channels, cross-group exchange edges
 //! carry whole [`Batch`]es through per-group mailboxes, and the shared
@@ -49,6 +49,15 @@
 //! failure injection and the Fig. 6 solve/reset run against the ordinary
 //! sequential engine between drains — the pause-drain-rollback protocol
 //! described in `ft/README.md`.
+//!
+//! Under asynchronous persistence
+//! ([`crate::ft::storage::PersistMode::Async`]) the store's writer
+//! thread runs *beside* this worker pool: workers stage FT writes with a
+//! single lock-light queue push instead of blocking on backend I/O under
+//! the shared store lock, and the FT-level drain
+//! ([`crate::ft::FtSystem::run_to_quiescence_parallel`]) ends with a
+//! staging barrier so the writer is idle whenever workers are parked —
+//! rollback never races the persistence pipeline.
 
 use crate::engine::channel::Batch;
 use crate::engine::scheduler::{Engine, EventReport, WorkerState};

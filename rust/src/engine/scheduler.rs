@@ -23,7 +23,7 @@
 //! on under the FT harness, whose logging and D̄ maintenance read the
 //! records).
 //!
-//! This module also defines [`WorkerState`] — the per-shard-group slice
+//! This module also defines `WorkerState` — the per-shard-group slice
 //! of an engine that the parallel executor ([`crate::engine::parallel`])
 //! runs on its own OS thread. `WorkerState` is the `step()` loop
 //! extracted from the engine: it owns its group's processors, pending
@@ -31,8 +31,8 @@
 //! counters, delivers batches round-robin over its *local* edges exactly
 //! like the sequential engine restricted to those edges, and records
 //! progress-tracker updates as batched [`ProgressDeltas`] instead of
-//! touching shared state. [`Engine::decompose`] loans the state out;
-//! [`Engine::recompose`] takes it back, so between parallel drains the
+//! touching shared state. `Engine::decompose` loans the state out;
+//! `Engine::recompose` takes it back, so between parallel drains the
 //! engine is an ordinary sequential object (which is what lets failure
 //! injection and §4.4 recovery run unchanged while workers are parked).
 //!

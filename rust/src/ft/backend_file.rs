@@ -733,6 +733,16 @@ impl StorageBackend for FileBackend {
         }
     }
 
+    fn max_value_len(&self) -> Option<u64> {
+        // A put's payload carries the op byte, the key varints and the
+        // value's length prefix on top of the value itself; 64 bytes
+        // bounds that overhead, so any value at or under this limit
+        // encodes within MAX_PAYLOAD. The store pre-checks staged writes
+        // against it, making refusal synchronous even when a background
+        // writer applies the put.
+        Some(MAX_PAYLOAD - 64)
+    }
+
     fn info(&self) -> BackendInfo {
         BackendInfo {
             name: "file",

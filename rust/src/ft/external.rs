@@ -16,9 +16,10 @@ use std::collections::BTreeMap;
 
 /// A replayable input service feeding one source processor.
 ///
-/// Batches are keyed by logical time. [`ExternalInput::unacked`] yields
-/// everything not yet acknowledged — exactly what a client re-sends after
-/// the ephemeral region rolls back (§2.1's "clients retry on failure").
+/// Batches are keyed by logical time. [`ExternalInput::replay_from`]
+/// yields everything not yet acknowledged — exactly what a client
+/// re-sends after the ephemeral region rolls back (§2.1's "clients retry
+/// on failure").
 #[derive(Clone, Debug, Default)]
 pub struct ExternalInput {
     batches: BTreeMap<LexTime, Vec<Record>>,

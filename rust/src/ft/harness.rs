@@ -19,15 +19,37 @@
 //! distinguishes records within a time — and it is where batching pays on
 //! the durable path.
 //!
-//! The observation path is written against the [`FtView`] trait rather
-//! than the engine directly, because it runs in two regimes: the
-//! sequential [`FtSystem::step`] loop, and — under
+//! The observation path is written against the (crate-private) `FtView`
+//! trait rather than the engine directly, because it runs in two
+//! regimes: the sequential [`FtSystem::step`] loop, and — under
 //! [`FtSystem::run_to_quiescence_parallel`] — **per worker thread**, with
-//! each worker owning the [`ProcFt`] entries of its shard group and
+//! each worker owning the `ProcFt` entries of its shard group and
 //! sharing only the thread-safe [`Store`] handle. Per-shard metadata is
 //! therefore maintained with no locking at all: every Table-1 structure
 //! belongs to exactly one processor, every processor to exactly one
 //! worker, and the store serializes its own writes.
+//!
+//! # Staged vs. acknowledged persistence
+//!
+//! Every durable mutation goes through the store's **staging** API
+//! ([`Store::stage_put`]): under [`crate::ft::storage::PersistMode::Sync`]
+//! it applies before returning (today's behavior), while under
+//! `PersistMode::Async` it lands in a queue drained by a background
+//! writer thread with group commit — taking the write entirely off the
+//! compute hot path. Each mirror entry (checkpoint, log entry, history
+//! event, input marker) remembers the per-processor **sequence number**
+//! of its staged write; the store publishes a per-processor **ack
+//! watermark** once writes are applied. The split matters in exactly
+//! three places: a mirror entry is *offerable* to the Fig. 6 solver only
+//! when its sequence is at or below the watermark
+//! ([`FtSystem::availability`]), failure injection discards a crashed
+//! processor's staged-but-unacknowledged tail
+//! ([`FtSystem::inject_failures`]), and the §4.2 GC monitor learns of a
+//! checkpoint only after its ack ([`FtSystem::pump_monitor`]) so the
+//! low-watermark never references volatile state. The paper's model
+//! makes the decoupling free: an unacknowledged suffix is exactly a
+//! slightly older crash — recovery rolls back a little further and the
+//! suffix is re-executed.
 
 use crate::engine::scheduler::WorkerState;
 use crate::engine::{Delivery, Engine, EventKind, EventReport, Processor, Record};
@@ -106,6 +128,38 @@ impl Decode for HistoryEvent {
     }
 }
 
+/// Storage tag + staging sequence number of one mirror entry's durable
+/// blob. Tags key the blob in the store (so truncation/GC delete exactly
+/// the right records); sequences gate *offerability* on the store's ack
+/// watermark. Sequences ascend along each mirror vector (per-proc FIFO
+/// staging), so the acknowledged subset is always a prefix.
+#[derive(Copy, Clone, Debug)]
+pub(crate) struct TagSeq {
+    pub tag: u64,
+    pub seq: u64,
+}
+
+/// Length of the acknowledged prefix of a mirror's tag vector under ack
+/// watermark `w`. A sequence of [`UNACKABLE`] (a refused write) blocks
+/// the prefix permanently, capping what recovery may rely on at the gap.
+///
+/// Deliberately a linear scan, not `partition_point`: an `UNACKABLE`
+/// sentinel in the middle (followed by later real sequences) and
+/// sync-mode zero sequences appended after async real ones both make
+/// the vector non-monotone in `seq`, and a binary search over a
+/// non-monotone predicate could count never-persisted entries as acked.
+/// Prefix semantics are exactly `take_while` — the first unacked entry
+/// caps everything after it, which is the crash model we want.
+pub(crate) fn acked_prefix(tags: &[TagSeq], w: u64) -> usize {
+    tags.iter().take_while(|ts| ts.seq <= w).count()
+}
+
+/// Sentinel sequence for a mirror entry whose durable write was refused
+/// (oversized payload): never at or below any watermark, so the entry —
+/// and, by prefix semantics, everything after it — is never offered from
+/// durable state.
+pub(crate) const UNACKABLE: u64 = u64::MAX;
+
 /// Per-processor fault-tolerance state (volatile deltas + durable
 /// mirrors).
 pub(crate) struct ProcFt {
@@ -130,27 +184,51 @@ pub(crate) struct ProcFt {
     pub sent_total: BTreeMap<EdgeId, u64>,
     /// Durable log of sent messages (mirror of what's in the store).
     pub log: Vec<LogEntry>,
-    /// Storage tags of `log` entries (parallel vector), so truncation and
-    /// GC can delete exactly the dropped blobs.
-    pub log_tags: Vec<u64>,
+    /// Storage tags + staging sequences of `log` entries (parallel
+    /// vector), so truncation and GC can delete exactly the dropped
+    /// blobs and availability can gate on the ack watermark.
+    pub log_tags: Vec<TagSeq>,
     /// Durable full history (mirror), for [`Policy::FullHistory`].
     pub history: Vec<HistoryEvent>,
-    /// Storage tags of `history` entries (parallel vector).
-    pub history_tags: Vec<u64>,
+    /// Storage tags + sequences of `history` entries (parallel vector).
+    pub history_tags: Vec<TagSeq>,
     /// F*(p): ascending chain of durable checkpoints (mirror).
     pub chain: Vec<StoredCheckpoint>,
-    /// Storage tags of `chain` entries (parallel vector; one tag keys
-    /// both the `State` and `Meta` blob of a checkpoint).
-    pub chain_tags: Vec<u64>,
-    /// Durable input-frontier marker (sources only): input times the
+    /// Storage tags + sequences of `chain` entries (parallel vector; one
+    /// tag keys both the `State` and `Meta` blob of a checkpoint; the
+    /// sequence is the Ξ write's — the state lands strictly earlier in
+    /// FIFO order, so an acked Ξ implies an acked state).
+    pub chain_tags: Vec<TagSeq>,
+    /// Input-frontier marker intent (sources only): input times the
     /// processor has completely consumed with their resulting sends
-    /// acknowledged in the log — the §4.2 Ξ of a stateless logging
-    /// source. Mirrors the `Kind::InputFrontier` blob at tag 0.
+    /// staged in the log — the §4.2 Ξ of a stateless logging source.
+    /// Mirrors the newest *staged* `Kind::InputFrontier` blob at tag 0;
+    /// [`ProcFt::input_mark_acked`] tracks the newest *acknowledged*
+    /// version.
     pub input_mark: Frontier,
+    /// Newest marker version whose write the store acknowledged.
+    pub input_mark_acked: Frontier,
+    /// Staged-but-not-yet-settled marker versions, oldest first: the
+    /// marker blob is overwritten in place, so versions replace rather
+    /// than accumulate; drained against the ack watermark by
+    /// [`ProcFt::drain_acked_marks`] / collapsed by
+    /// [`ProcFt::settle_marks_for_crash`].
+    pub mark_pending: Vec<(u64, Frontier)>,
     /// Completed-time counter (drives [`Policy::Lazy`]).
     pub completions: u64,
     /// Marked by failure injection; cleared by recovery.
     pub failed: bool,
+    /// Durable writes this processor had refused (oversized payloads) —
+    /// the per-processor face of [`FtStats::storage_errors`].
+    pub storage_errors: u64,
+    /// A log or history write was refused: the input-frontier marker is
+    /// frozen (it must never certify an event whose send is missing from
+    /// the durable log), and the refused entry's [`UNACKABLE`] sequence
+    /// caps what durable recovery may offer at the gap.
+    pub persist_gap: bool,
+    /// Chain entries already reported to the §4.2 monitor
+    /// ([`FtSystem::pump_monitor`]'s cursor).
+    pub chain_reported: usize,
     /// Monotone sequence for storage keys.
     next_key: u64,
 }
@@ -172,10 +250,49 @@ impl ProcFt {
             chain: Vec::new(),
             chain_tags: Vec::new(),
             input_mark: Frontier::Bottom,
+            input_mark_acked: Frontier::Bottom,
+            mark_pending: Vec::new(),
             completions: 0,
             failed: false,
+            storage_errors: 0,
+            persist_gap: false,
+            chain_reported: 0,
             next_key: 0,
         }
+    }
+
+    /// Fold marker versions the store has acknowledged (sequence ≤ `w`)
+    /// into [`ProcFt::input_mark_acked`], keeping the unacked suffix
+    /// pending. Cheap bookkeeping run opportunistically on marker writes.
+    pub(crate) fn drain_acked_marks(&mut self, w: u64) {
+        // Prefix scan, not a binary search: sync-mode writes carry
+        // sequence 0, so a mode switch can make the queue non-monotone —
+        // see `acked_prefix`. Under-draining is merely conservative.
+        let n = self.mark_pending.iter().take_while(|(s, _)| *s <= w).count();
+        if n > 0 {
+            self.input_mark_acked = self.mark_pending[n - 1].1.clone();
+            self.mark_pending.drain(..n);
+        }
+    }
+
+    /// Crash-settle the marker after the store discarded this
+    /// processor's staged-but-unacked tail (watermark `w`). The value the
+    /// surviving mirrors can actually certify is the *minimum* the marker
+    /// ever held since the last acknowledged version: an unacked
+    /// *advance* never entered the durable log it certifies, and an
+    /// unacked *shrink* (a rollback) already truncated the in-memory
+    /// mirrors — either way the entries beyond the minimum are gone from
+    /// the mirror, so intersecting every pending version (after draining
+    /// the acked prefix) is exactly right.
+    pub(crate) fn settle_marks_for_crash(&mut self, w: u64) {
+        self.drain_acked_marks(w);
+        let mut settled = self.input_mark_acked.clone();
+        for (_, f) in &self.mark_pending {
+            settled = settled.intersect(f);
+        }
+        self.mark_pending.clear();
+        self.input_mark = settled.clone();
+        self.input_mark_acked = settled;
     }
 
     /// The metadata of the newest checkpoint (or the implicit ∅ one).
@@ -247,11 +364,20 @@ pub struct FtStats {
     pub procs_rolled_back: u64,
     /// Processors left untouched at ⊤ across all recoveries.
     pub procs_untouched: u64,
+    /// Durable writes the store refused (oversized payloads), surfaced as
+    /// recoverable per-processor degradation instead of a panic.
+    pub storage_errors: u64,
+    /// Peak staged-minus-acknowledged operations observed at drain /
+    /// recovery boundaries — the async pipeline's lag gauge (0 under
+    /// [`crate::ft::storage::PersistMode::Sync`]). A snapshot maximum,
+    /// not an additive counter.
+    pub ack_lag: u64,
 }
 
 impl FtStats {
-    /// Fold another counter set in (every field is additive — used to
-    /// merge per-worker stats after a parallel drain).
+    /// Fold another counter set in (counters are additive, the lag gauge
+    /// folds by max — used to merge per-worker stats after a parallel
+    /// drain).
     pub fn merge(&mut self, o: &FtStats) {
         self.checkpoints_taken += o.checkpoints_taken;
         self.log_entries += o.log_entries;
@@ -263,6 +389,8 @@ impl FtStats {
         self.messages_replayed += o.messages_replayed;
         self.procs_rolled_back += o.procs_rolled_back;
         self.procs_untouched += o.procs_untouched;
+        self.storage_errors += o.storage_errors;
+        self.ack_lag = self.ack_lag.max(o.ack_lag);
     }
 }
 
@@ -288,11 +416,11 @@ fn eager_frontier_of(ft: &ProcFt) -> Frontier {
 /// Retain the entries of a mirror vector (and its parallel tag vector)
 /// matching `keep`, invoking `on_drop(tag)` for each dropped entry —
 /// linear and order-preserving, unlike per-index `Vec::remove`.
-pub(crate) fn retain_with_tags<T>(
+pub(crate) fn retain_with_tags<T, G: Copy>(
     items: &mut Vec<T>,
-    tags: &mut Vec<u64>,
+    tags: &mut Vec<G>,
     mut keep: impl FnMut(&T) -> bool,
-    mut on_drop: impl FnMut(u64),
+    mut on_drop: impl FnMut(G),
 ) {
     debug_assert_eq!(items.len(), tags.len(), "mirror and tag vectors must stay parallel");
     let mut w = 0;
@@ -309,11 +437,31 @@ pub(crate) fn retain_with_tags<T>(
     tags.truncate(w);
 }
 
-fn persist_history(store: &Store, ft: &mut ProcFt, proc: u32, ev: HistoryEvent) {
+/// Stage one history event. A refused write (oversized payload) keeps
+/// the event in the *in-memory* mirror — live replay still works — under
+/// the [`UNACKABLE`] sentinel, so durable recovery (a failed or
+/// cold-restarted processor) is capped at the gap instead of replaying a
+/// history with a hole.
+fn persist_history(
+    store: &Store,
+    ft: &mut ProcFt,
+    stats: &mut FtStats,
+    proc: u32,
+    ev: HistoryEvent,
+) {
     let tag = ft.fresh_key();
-    store.put(Key { proc, kind: Kind::HistoryEvent, tag }, ev.to_bytes());
+    let seq = match store.stage_put(Key { proc, kind: Kind::HistoryEvent, tag }, ev.to_bytes()) {
+        Ok(seq) => seq,
+        Err(_) => {
+            ft.storage_errors += 1;
+            ft.persist_gap = true;
+            stats.storage_errors += 1;
+            UNACKABLE
+        }
+    };
     ft.history.push(ev);
-    ft.history_tags.push(tag);
+    ft.history_tags.push(TagSeq { tag, seq });
+    stats.history_events += 1;
 }
 
 /// Observe one event report for its processor: update deltas, logs,
@@ -342,8 +490,7 @@ fn observe_event<V: FtView>(
                     "full-history policies require event-data capture"
                 );
                 let ev = HistoryEvent::Message { edge: *edge, time: *time, data: data.clone() };
-                persist_history(store, ft, proc.0, ev);
-                stats.history_events += 1;
+                persist_history(store, ft, stats, proc.0, ev);
             }
             (*proc, *time)
         }
@@ -352,8 +499,8 @@ fn observe_event<V: FtView>(
                 ft.notified_new.insert(LexTime(*time));
             }
             if ft.policy.records_history() {
-                persist_history(store, ft, proc.0, HistoryEvent::Notification { time: *time });
-                stats.history_events += 1;
+                let ev = HistoryEvent::Notification { time: *time };
+                persist_history(store, ft, stats, proc.0, ev);
             }
             ft.completions += 1;
             (*proc, *time)
@@ -364,8 +511,7 @@ fn observe_event<V: FtView>(
             }
             if ft.policy.records_history() {
                 let ev = HistoryEvent::Input { time: *time, data: data.clone() };
-                persist_history(store, ft, proc.0, ev);
-                stats.history_events += 1;
+                persist_history(store, ft, stats, proc.0, ev);
             }
             (*proc, *time)
         }
@@ -396,15 +542,31 @@ fn observe_event<V: FtView>(
         if logs {
             let entry = LogEntry { edge: *e, event_time: evt_time, batch: batch.clone() };
             let tag = ft.fresh_key();
-            store.put_log(
+            match store.stage_put_log(
                 Key { proc: proc.0, kind: Kind::LogEntry, tag },
                 entry.to_bytes(),
                 entry.records() as u64,
-            );
-            stats.log_records += entry.records() as u64;
-            ft.log.push(entry);
-            ft.log_tags.push(tag);
-            stats.log_entries += 1;
+            ) {
+                Ok(seq) => {
+                    stats.log_records += entry.records() as u64;
+                    ft.log.push(entry);
+                    ft.log_tags.push(TagSeq { tag, seq });
+                    stats.log_entries += 1;
+                }
+                Err(_) => {
+                    // An unloggable (oversized) send degrades to the
+                    // discard path: D̄ records it honestly, so if the
+                    // destination ever needs it re-sent the solver rolls
+                    // this processor back to regenerate it (constraint 2)
+                    // — recoverable, where the old ack-or-panic path
+                    // died mid-drain. The marker freezes: it must never
+                    // certify an event whose send is not in the log.
+                    ft.storage_errors += 1;
+                    ft.persist_gap = true;
+                    stats.storage_errors += 1;
+                    ft.discarded_new.entry(*e).or_default().push((evt_time, batch.time));
+                }
+            }
         } else {
             // D̄ is a frontier of message times; the batch's records
             // all share one, so a single pair covers them.
@@ -438,6 +600,13 @@ fn observe_event<V: FtView>(
 /// `f` complete at `p` — is the caller's responsibility, upheld by the
 /// policy triggers). Worker-safe: touches only `p`'s own state and the
 /// shared store.
+///
+/// The metadata is computed *non-destructively* and the delta sets are
+/// pruned only after both blobs stage successfully, so a refused write
+/// (oversized state) skips the checkpoint cleanly: Table-1 deltas stay
+/// intact, the previous checkpoint remains the restore point, and the
+/// refusal is counted instead of panicking mid-drain. Returns whether a
+/// checkpoint was taken.
 fn checkpoint_proc<V: FtView>(
     topo: &Topology,
     ft: &mut ProcFt,
@@ -446,7 +615,7 @@ fn checkpoint_proc<V: FtView>(
     p: ProcId,
     f: Frontier,
     view: &V,
-) {
+) -> bool {
     let in_edges = topo.in_edges(p).to_vec();
     let out_edges = topo.out_edges(p).to_vec();
     let base = ft.base_meta(&in_edges, &out_edges);
@@ -458,7 +627,7 @@ fn checkpoint_proc<V: FtView>(
 
     // M̄(d, f) = M̄(d, base) ∪ ↓{delivered ∈ f}.
     let mut m_bar = base.m_bar.clone();
-    for (&d, times) in &mut ft.delivered_new {
+    for (&d, times) in &ft.delivered_new {
         let fold: Vec<Time> = times.iter().map(|lt| lt.0).filter(|t| f.contains(t)).collect();
         if !fold.is_empty() {
             let cur = m_bar.entry(d).or_insert(Frontier::Bottom);
@@ -467,29 +636,22 @@ fn checkpoint_proc<V: FtView>(
                 nf.insert(*t);
             }
             *cur = nf;
-            times.retain(|lt| !f.contains(&lt.0));
         }
     }
     // N̄(p, f).
     let mut n_bar = base.n_bar.clone();
-    let fold: Vec<Time> =
-        ft.notified_new.iter().map(|lt| lt.0).filter(|t| f.contains(t)).collect();
-    for t in &fold {
-        n_bar.insert(*t);
+    for t in ft.notified_new.iter().map(|lt| lt.0).filter(|t| f.contains(t)) {
+        n_bar.insert(t);
     }
-    ft.notified_new.retain(|lt| !f.contains(&lt.0));
-    ft.input_new.retain(|lt| !f.contains(&lt.0));
     // D̄(e, f): unlogged sends caused by events in f.
     let mut d_bar = base.d_bar.clone();
-    for (&e, pairs) in &mut ft.discarded_new {
+    for (&e, pairs) in &ft.discarded_new {
         let cur = d_bar.entry(e).or_insert(Frontier::Bottom);
         let mut nf = cur.clone();
-        for (evt, msg_t) in pairs.iter().filter(|(evt, _)| f.contains(evt)) {
-            let _ = evt;
+        for (_, msg_t) in pairs.iter().filter(|(evt, _)| f.contains(evt)) {
             nf.insert(*msg_t);
         }
         *cur = nf;
-        pairs.retain(|(evt, _)| !f.contains(evt));
     }
     // φ(e)(f): static projections computed; per-checkpoint ones are
     // seq watermarks = sends caused by events in f (prefix property
@@ -506,9 +668,6 @@ fn checkpoint_proc<V: FtView>(
                     .get(&e)
                     .map(|v| v.iter().filter(|t| f.contains(t)).count() as u64)
                     .unwrap_or(0);
-                if let Some(v) = ft.sent_events.get_mut(&e) {
-                    v.retain(|t| !f.contains(t));
-                }
                 Frontier::seq_watermarks([(e, base_count + new)])
             }
         };
@@ -522,15 +681,45 @@ fn checkpoint_proc<V: FtView>(
     // Persist state then Ξ (the §4.2 protocol: metadata reaches the
     // monitor only once everything is acknowledged — and in a WAL the
     // state lands strictly earlier in append order, so a torn tail can
-    // lose the Ξ but never leave one without its state).
+    // lose the Ξ but never leave one without its state; under async
+    // staging, per-proc FIFO preserves exactly the same ordering).
     let tag = ft.fresh_key();
-    store.put(Key { proc: p.0, kind: Kind::State, tag }, stored.state.clone());
+    let state_key = Key { proc: p.0, kind: Kind::State, tag };
+    if store.stage_put(state_key.clone(), stored.state.clone()).is_err() {
+        ft.storage_errors += 1;
+        stats.storage_errors += 1;
+        return false; // nothing staged, nothing pruned — checkpoint skipped
+    }
     let rec =
         MetaRecord { meta: stored.meta.clone(), pending_notify: stored.pending_notify.clone() };
-    store.put(Key { proc: p.0, kind: Kind::Meta, tag }, rec.to_bytes());
+    let meta_seq = match store.stage_put(Key { proc: p.0, kind: Kind::Meta, tag }, rec.to_bytes())
+    {
+        Ok(seq) => seq,
+        Err(_) => {
+            // Undo the orphan state blob (ordered after its put by the
+            // per-proc FIFO) and skip the checkpoint.
+            store.stage_delete(state_key);
+            ft.storage_errors += 1;
+            stats.storage_errors += 1;
+            return false;
+        }
+    };
+    // Both blobs staged: prune the delta sets the checkpoint absorbed.
+    for times in ft.delivered_new.values_mut() {
+        times.retain(|lt| !f.contains(&lt.0));
+    }
+    ft.notified_new.retain(|lt| !f.contains(&lt.0));
+    ft.input_new.retain(|lt| !f.contains(&lt.0));
+    for pairs in ft.discarded_new.values_mut() {
+        pairs.retain(|(evt, _)| !f.contains(evt));
+    }
+    for v in ft.sent_events.values_mut() {
+        v.retain(|t| !f.contains(t));
+    }
     ft.chain.push(stored);
-    ft.chain_tags.push(tag);
+    ft.chain_tags.push(TagSeq { tag, seq: meta_seq });
     stats.checkpoints_taken += 1;
+    true
 }
 
 /// Per-worker FT observer for parallel drains: owns the [`ProcFt`]
@@ -755,20 +944,23 @@ impl FtSystem {
                     state,
                     pending_notify: rec.pending_notify,
                 });
-                ft.chain_tags.push(tag);
+                // Reopened entries are durable by definition: sequence 0
+                // sits at or below every ack watermark.
+                ft.chain_tags.push(TagSeq { tag, seq: 0 });
             }
             for tag in states.into_keys() {
                 store.delete(&Key { proc: p.0, kind: Kind::State, tag });
             }
             for (tag, le) in logs {
                 ft.log.push(le);
-                ft.log_tags.push(tag);
+                ft.log_tags.push(TagSeq { tag, seq: 0 });
             }
             for (tag, ev) in hist {
                 ft.history.push(ev);
-                ft.history_tags.push(tag);
+                ft.history_tags.push(TagSeq { tag, seq: 0 });
             }
-            ft.input_mark = mark;
+            ft.input_mark = mark.clone();
+            ft.input_mark_acked = mark;
             ft.next_key = next_key;
             // Best-effort cadence counter: a lazy processor checkpointed
             // once per `every` completions, so this restores the trigger
@@ -819,6 +1011,58 @@ impl FtSystem {
         crate::ft::monitor::Monitor::reopen(self.topo.clone(), stateless, logs, chains)
     }
 
+    /// Feed the §4.2 monitoring service every checkpoint whose Ξ write
+    /// the store has **acknowledged** and that has not been reported yet,
+    /// returning the GC actions its watermark advances enabled. This is
+    /// the ack-gated face of [`crate::ft::monitor::Monitor::on_persisted`]
+    /// — under async persistence the monitor's low-watermark therefore
+    /// never references a checkpoint that exists only in volatile staging
+    /// (a crash could discard it, and GC driven past durable state would
+    /// be unrecoverable).
+    ///
+    /// The per-processor cursor survives GC (which drops reported prefix
+    /// entries) and clamps under rollback truncation. After a recovery
+    /// that truncated chains, rebuild the monitor from the surviving
+    /// chains ([`FtSystem::rebuild_monitor`]) before pumping further —
+    /// the monitor's own availability is append-only.
+    pub fn pump_monitor(
+        &mut self,
+        mon: &mut crate::ft::monitor::Monitor,
+    ) -> Vec<crate::ft::monitor::GcAction> {
+        let mut actions = Vec::new();
+        for p in self.topo.proc_ids() {
+            if !self.ft[p.0 as usize].policy.has_chain() {
+                continue;
+            }
+            let w = self.store.acked_seq(p.0);
+            let ft = &mut self.ft[p.0 as usize];
+            let acked = acked_prefix(&ft.chain_tags, w);
+            while ft.chain_reported < acked {
+                let meta = ft.chain[ft.chain_reported].meta.clone();
+                ft.chain_reported += 1;
+                actions.extend(mon.on_persisted(p, meta));
+            }
+        }
+        actions
+    }
+
+    /// Staged-minus-acknowledged durable operations right now (0 in sync
+    /// mode). [`FtStats::ack_lag`] records the peak of this gauge at
+    /// drain and recovery boundaries.
+    pub fn ack_lag(&self) -> u64 {
+        self.store.ack_lag()
+    }
+
+    /// Durable writes the store refused for `p` (oversized payloads).
+    pub fn storage_errors(&self, p: ProcId) -> u64 {
+        self.ft[p.0 as usize].storage_errors
+    }
+
+    /// Fold the current staging lag into the peak gauge.
+    pub(crate) fn note_ack_lag(&mut self) {
+        self.stats.ack_lag = self.stats.ack_lag.max(self.store.ack_lag());
+    }
+
     /// Process one event, maintaining all FT metadata.
     pub fn step(&mut self) -> Option<EventReport> {
         let rep = self.engine.step()?;
@@ -835,6 +1079,7 @@ impl FtSystem {
             }
             n += 1;
         }
+        self.note_ack_lag();
         n
     }
 
@@ -869,8 +1114,14 @@ impl FtSystem {
         if !self.topo.in_edges(p).is_empty() {
             return;
         }
+        let store = self.store.clone();
         let ft = &mut self.ft[p.0 as usize];
         if !(ft.policy.logs_outputs() || ft.policy.records_history()) {
+            return;
+        }
+        // A refused log/history write froze the marker: advancing it past
+        // the gap would certify a send the durable log does not hold.
+        if ft.persist_gap {
             return;
         }
         let mut mark = ft.input_mark.clone();
@@ -889,9 +1140,23 @@ impl FtSystem {
             }
         }
         if changed {
-            ft.input_mark = mark.clone();
-            let store = self.store.clone();
-            store.put(Key { proc: p.0, kind: Kind::InputFrontier, tag: 0 }, mark.to_bytes());
+            // Opportunistically settle already-acked versions, then stage
+            // the widened marker. The log entries it certifies were
+            // staged strictly earlier, so per-proc FIFO upholds the
+            // prefix property: an acked marker implies an acked log.
+            ft.drain_acked_marks(store.acked_seq(p.0));
+            match store
+                .stage_put(Key { proc: p.0, kind: Kind::InputFrontier, tag: 0 }, mark.to_bytes())
+            {
+                Ok(seq) => {
+                    ft.input_mark = mark.clone();
+                    ft.mark_pending.push((seq, mark));
+                }
+                Err(_) => {
+                    ft.storage_errors += 1;
+                    self.stats.storage_errors += 1;
+                }
+            }
         }
     }
 
@@ -916,7 +1181,7 @@ impl FtSystem {
     /// Drain to quiescence with one OS thread per worker group
     /// (`group_of[p]` assigns processors; see
     /// [`crate::engine::shard_groups`]). Each worker carries its group's
-    /// [`ProcFt`] state and observes its own events inline — logs,
+    /// `ProcFt` state and observes its own events inline — logs,
     /// histories and policy-triggered checkpoints are written on the
     /// worker thread at the event, exactly as in the sequential loop.
     /// Per-worker stats merge back afterwards. `threads <= 1` falls back
@@ -959,6 +1224,12 @@ impl FtSystem {
                 }
             }
         }
+        // Quiescence barrier: record the peak lag the drain produced,
+        // then settle the staging queue so the writer thread is idle
+        // whenever workers are parked — pause-drain-rollback (and any
+        // inspection between drains) sees a fully-applied store.
+        self.note_ack_lag();
+        self.store.flush_staged();
         events
     }
 
@@ -1117,9 +1388,12 @@ impl FtSystem {
                 let dropped = keep_from;
                 if dropped > 0 {
                     ft.chain.drain(..dropped);
-                    for tag in ft.chain_tags.drain(..dropped) {
-                        self.store.delete(&Key { proc: proc.0, kind: Kind::Meta, tag });
-                        self.store.delete(&Key { proc: proc.0, kind: Kind::State, tag });
+                    // The monitor cursor counts reported *prefix* entries;
+                    // GC drops from the front, so it slides down with it.
+                    ft.chain_reported = ft.chain_reported.saturating_sub(dropped);
+                    for ts in ft.chain_tags.drain(..dropped) {
+                        self.store.delete(&Key { proc: proc.0, kind: Kind::Meta, tag: ts.tag });
+                        self.store.delete(&Key { proc: proc.0, kind: Kind::State, tag: ts.tag });
                     }
                 }
                 dropped
@@ -1132,8 +1406,8 @@ impl FtSystem {
                     &mut ft.log,
                     &mut ft.log_tags,
                     |le| le.edge != *edge || !watermark.contains(&le.batch.time),
-                    |tag| {
-                        store.delete(&Key { proc: proc.0, kind: Kind::LogEntry, tag });
+                    |ts: TagSeq| {
+                        store.delete(&Key { proc: proc.0, kind: Kind::LogEntry, tag: ts.tag });
                         dropped += 1;
                     },
                 );
@@ -1418,6 +1692,141 @@ mod tests {
             let ck = run(cap);
             assert_eq!(ck.meta, base.meta, "cap {cap} changed checkpoint metadata");
             assert_eq!(ck.state, base.state, "cap {cap} changed checkpoint state");
+        }
+    }
+
+    /// Satellite: an oversized checkpoint payload is a recoverable
+    /// per-proc FT error — the checkpoint is skipped (deltas intact, the
+    /// previous restore point stands), counters tick, and nothing
+    /// panics; the system keeps running and a later, smaller checkpoint
+    /// still lands.
+    #[test]
+    fn oversized_checkpoint_is_skipped_not_fatal() {
+        let (mut sys, src, out) = epoch_pipeline(vec![
+            Policy::Ephemeral,
+            Policy::Lazy { every: 1, log_outputs: false },
+            Policy::Ephemeral,
+        ]);
+        let sum = sys.topology().find("sum").unwrap();
+        // Small enough that the Ξ record (frontiers + maps) is refused.
+        sys.store.set_max_value_len(2);
+        sys.advance_input(src, Time::epoch(0));
+        sys.push_input(src, Time::epoch(0), Record::Int(4));
+        sys.advance_input(src, Time::epoch(1));
+        sys.run_to_quiescence(1000); // would have panicked before
+        assert_eq!(out.lock().unwrap().len(), 1, "compute is unaffected");
+        assert_eq!(sys.chain_len(sum), 0, "refused checkpoint was skipped");
+        assert!(sys.stats.storage_errors >= 1);
+        assert!(sys.storage_errors(sum) >= 1);
+        // Deltas were NOT pruned by the failed attempt: a failure now
+        // rolls sum to ∅ and the Table-1 metadata stays coherent.
+        sys.inject_failures(&[sum]);
+        let rep = sys.recover();
+        assert!(rep.plan.f[sum.0 as usize].is_bottom());
+    }
+
+    /// An unloggable (oversized) send degrades to D̄ and freezes the
+    /// source's input-frontier marker: the marker must never certify an
+    /// event whose send is missing from the durable log.
+    #[test]
+    fn oversized_log_entry_degrades_to_discard_and_freezes_marker() {
+        let (mut sys, src, out) = epoch_pipeline(vec![
+            Policy::LogOutputs,
+            Policy::Ephemeral,
+            Policy::Ephemeral,
+        ]);
+        sys.store.set_max_value_len(2);
+        sys.advance_input(src, Time::epoch(0));
+        sys.push_input(src, Time::epoch(0), Record::Int(4));
+        sys.advance_input(src, Time::epoch(1));
+        sys.run_to_quiescence(1000);
+        assert_eq!(out.lock().unwrap().len(), 1);
+        assert_eq!(sys.log_len(src), 0, "the refused entry is not in the log mirror");
+        assert!(sys.stats.storage_errors >= 1);
+        let ft = &sys.ft[src.0 as usize];
+        assert!(ft.persist_gap);
+        assert!(ft.input_mark.is_bottom(), "marker frozen at the gap");
+        assert!(
+            !ft.discarded_new.is_empty() || !ft.chain.is_empty(),
+            "the send is tracked in D̄ instead"
+        );
+    }
+
+    /// The §4.2 monitor learns of a checkpoint only after its Ξ write is
+    /// acknowledged: with the writer paused the staged checkpoint is
+    /// invisible (low-watermark stays ∅ — GC can never outrun durable
+    /// state), and the flush makes it visible.
+    #[test]
+    fn pump_monitor_gates_on_ack_watermark() {
+        use crate::ft::storage::PersistMode;
+        let (mut sys, src, _out) = epoch_pipeline(vec![
+            Policy::Ephemeral,
+            Policy::Lazy { every: 1, log_outputs: false },
+            Policy::Ephemeral,
+        ]);
+        sys.store.set_persist_mode(PersistMode::Async { ack_every: 4 });
+        let sum = sys.topology().find("sum").unwrap();
+        let mut mon = crate::ft::monitor::Monitor::new(
+            sys.topo.clone(),
+            vec![true, false, true],
+            vec![false, false, false],
+        );
+        sys.store.pause_persistence();
+        sys.advance_input(src, Time::epoch(0));
+        sys.push_input(src, Time::epoch(0), Record::Int(4));
+        sys.advance_input(src, Time::epoch(1));
+        sys.run_to_quiescence(1000);
+        assert_eq!(sys.chain_len(sum), 1, "checkpoint staged in the mirror");
+        assert!(sys.stats.ack_lag > 0, "the staged writes are unacked");
+        let acts = sys.pump_monitor(&mut mon);
+        assert!(acts.is_empty());
+        assert!(
+            mon.low_watermark(sum).is_bottom(),
+            "unacked checkpoint must not advance the GC watermark"
+        );
+        sys.store.resume_persistence();
+        sys.store.flush_staged();
+        sys.pump_monitor(&mut mon);
+        assert_eq!(
+            mon.low_watermark(sum),
+            &Frontier::upto_epoch(0),
+            "acked checkpoint advances the watermark"
+        );
+        // Idempotent: nothing new to report.
+        assert!(sys.pump_monitor(&mut mon).is_empty());
+    }
+
+    /// Clean-run equivalence at the harness level: async staging changes
+    /// *when* blobs land, never *what* lands — after a flush the durable
+    /// image is byte-identical to the sync run's.
+    #[test]
+    fn async_staging_persists_the_same_blobs_as_sync() {
+        use crate::ft::storage::PersistMode;
+        let drive = |mode: Option<PersistMode>| {
+            let (mut sys, src, _out) = epoch_pipeline(vec![
+                Policy::LogOutputs,
+                Policy::Lazy { every: 1, log_outputs: true },
+                Policy::Ephemeral,
+            ]);
+            if let Some(m) = mode {
+                sys.store.set_persist_mode(m);
+            }
+            drive_six(&mut sys, src);
+            sys.store.flush_staged();
+            let mut image: Vec<(Key, Vec<u8>)> = Vec::new();
+            for p in 0..3u32 {
+                for k in sys.store.scan_keys(p) {
+                    let v = sys.store.get(&k).unwrap();
+                    image.push((k, v));
+                }
+            }
+            image
+        };
+        let sync_img = drive(None);
+        assert!(!sync_img.is_empty());
+        for ack_every in [1usize, 8, 64] {
+            let async_img = drive(Some(PersistMode::Async { ack_every }));
+            assert_eq!(sync_img, async_img, "ack_every {ack_every} changed the durable image");
         }
     }
 

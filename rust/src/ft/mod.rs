@@ -29,4 +29,4 @@ pub use harness::{FtStats, FtSystem, HistoryEvent};
 pub use meta::{CkptMeta, LogEntry, MetaRecord, StoredCheckpoint};
 pub use policy::Policy;
 pub use rollback::{choose_frontiers, verify_plan, Available, RollbackInput, RollbackPlan};
-pub use storage::{BackendInfo, Key, Kind, StorageBackend, StorageError, Store};
+pub use storage::{BackendInfo, Key, Kind, PersistMode, StorageBackend, StorageError, Store};

@@ -5,13 +5,28 @@
 //! systems hard-wired globally, can coexist per-processor within one
 //! application. Each maps onto the framework as follows:
 //!
-//! | Policy        | Figure-1 regime   | F*(p)                  | logs?  |
-//! |---------------|-------------------|------------------------|--------|
-//! | `Ephemeral`   | ephemeral         | any frontier (S = ∅)   | no     |
-//! | `LogOutputs`  | batch (Spark RDD) | any frontier (S = ∅)   | yes    |
-//! | `Lazy{..}`    | lazy checkpoint   | selective ckpt chain   | option |
-//! | `Eager`       | eager checkpoint  | ckpt per event (seq)   | yes    |
-//! | `FullHistory` | §4.1 fallback     | replay to any frontier | virtual|
+//! | Policy        | Figure-1 regime   | F*(p)                  | logs?  | ack gate (async persistence)                         |
+//! |---------------|-------------------|------------------------|--------|------------------------------------------------------|
+//! | `Ephemeral`   | ephemeral         | any frontier (S = ∅)   | no     | none — persists nothing, nothing to acknowledge      |
+//! | `LogOutputs`  | batch (Spark RDD) | any frontier (S = ∅)   | yes    | input-frontier marker offers only acked log prefixes |
+//! | `Lazy{..}`    | lazy checkpoint   | selective ckpt chain   | option | a checkpoint is offerable once its Ξ write acks      |
+//! | `Eager`       | eager checkpoint  | ckpt per event (seq)   | yes    | per-event checkpoints ack in order; crash = shorter chain |
+//! | `FullHistory` | §4.1 fallback     | replay to any frontier | virtual| failed replay capped at the acked history prefix     |
+//!
+//! **Acknowledgement semantics under
+//! [`crate::ft::storage::PersistMode::Async`].** Every policy's durable
+//! writes are *staged* (the compute loop never blocks on storage) and
+//! become recovery-relevant only once the store's per-processor ack
+//! watermark passes them. Eager keeps its exactly-once contract with
+//! respect to *durable* effects: a crash discards the unacked suffix of
+//! per-event checkpoints, so recovery restores the newest acked one and
+//! re-executes the suffix — exactly the rollback the paper's model
+//! prescribes for unacknowledged work, never an inconsistency. For
+//! Lazy/LogOutputs the lag only widens the replay window; Ephemeral is
+//! unaffected by construction. Failed full-history processors replay the
+//! acked history prefix; live ones replay their complete in-memory
+//! mirror. In `PersistMode::Sync` staging acknowledges before returning
+//! and every gate is trivially open (the pre-pipeline behavior).
 
 /// A processor's fault-tolerance policy (see module docs).
 #[derive(Copy, Clone, Debug, PartialEq, Eq)]

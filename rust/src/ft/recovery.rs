@@ -26,11 +26,17 @@
 //! runs multi-threaded ([`FtSystem::run_to_quiescence_parallel`]), every
 //! drain recomposes the engine before returning: workers park at the
 //! final barrier, their channels, processors, per-shard FT metadata and
-//! progress deltas all merge back, and the threads join. Failure
+//! progress deltas all merge back, and the threads join — and the
+//! **persistence writer settles too**: the drain ends with a staging
+//! barrier ([`crate::ft::storage::Store::flush_staged`]), so the store
+//! image matches the mirrors whenever workers are parked. Failure
 //! injection and this module's solve/reset therefore always execute
 //! against the ordinary sequential engine — the Fig. 6 plan is computed
 //! and applied "while workers are parked", with no concurrent mutation
-//! possible by construction. Replays enqueue through the
+//! possible by construction. A failure injected *between* staging
+//! barriers (sequential drains do not flush) additionally discards the
+//! failed processors' staged-but-unacknowledged writes, rolling them
+//! back to the ack watermark — see [`FtSystem::inject_failures`]. Replays enqueue through the
 //! coalescing-bypass path ([`crate::engine::Engine::replay_batch`]), so
 //! the rebuilt queues have batch boundaries that are a deterministic
 //! function of the durable log — a *second* failure during recovery (or
@@ -68,12 +74,35 @@ pub struct RecoveryReport {
 impl FtSystem {
     /// Crash the given processors: volatile operator state, input-channel
     /// contents, pending notifications, and un-persisted FT deltas are
-    /// destroyed. Durable chains/logs/histories survive.
+    /// destroyed. Durable chains/logs/histories survive — up to the
+    /// store's **ack watermark**: the staged-but-unacknowledged tail of a
+    /// crashed processor dies with it
+    /// ([`crate::ft::storage::Store::discard_unacked`] removes it from
+    /// the staging queue atomically),
+    /// and the corresponding mirror suffix is truncated so the Fig. 6
+    /// solver lands on the acknowledged frontier. Per-proc FIFO staging
+    /// makes every truncated set a mirror *prefix* — the same
+    /// suffix-casualty shape as the WAL's own crash model, which is why
+    /// live failure and cold restart now share one recovery story. Under
+    /// [`crate::ft::storage::PersistMode::Sync`] the watermark always
+    /// equals the staged sequence and nothing is truncated.
     pub fn inject_failures(&mut self, procs: &[ProcId]) {
         for &p in procs {
+            let w = self.store.discard_unacked(p.0);
             self.engine.fail_proc(p);
             let ft = &mut self.ft[p.0 as usize];
             ft.failed = true;
+            let keep = crate::ft::harness::acked_prefix(&ft.chain_tags, w);
+            ft.chain.truncate(keep);
+            ft.chain_tags.truncate(keep);
+            ft.chain_reported = ft.chain_reported.min(keep);
+            let keep = crate::ft::harness::acked_prefix(&ft.log_tags, w);
+            ft.log.truncate(keep);
+            ft.log_tags.truncate(keep);
+            let keep = crate::ft::harness::acked_prefix(&ft.history_tags, w);
+            ft.history.truncate(keep);
+            ft.history_tags.truncate(keep);
+            ft.settle_marks_for_crash(w);
             ft.delivered_new.clear();
             ft.input_new.clear();
             ft.notified_new.clear();
@@ -89,9 +118,17 @@ impl FtSystem {
 
     /// Assemble solver availability. Failed processors offer only
     /// durably-complete frontiers; non-failed ones additionally offer ⊤
-    /// (§4.4). Public so the property suite can feed the *live* system's
-    /// availability straight into [`choose_frontiers`] /
-    /// [`crate::ft::rollback::verify_plan`].
+    /// (§4.4). Offerability is gated on the store's **ack watermark**:
+    /// failed processors' mirrors were already truncated to their
+    /// acknowledged prefixes by [`FtSystem::inject_failures`], and a
+    /// non-failed chain processor likewise offers only its acknowledged
+    /// checkpoints (plus the live ⊤) — a staged-but-unacked checkpoint is
+    /// not yet a durable restore point, and rolling back slightly further
+    /// to an acked one is always safe (the unacked suffix is simply
+    /// re-executed). In sync mode every entry is acked and this reduces
+    /// to the pre-pipeline behavior exactly. Public so the property suite
+    /// can feed the *live* system's availability straight into
+    /// [`choose_frontiers`] / [`crate::ft::rollback::verify_plan`].
     pub fn availability(&self) -> Vec<Available> {
         self.topo
             .proc_ids()
@@ -154,20 +191,33 @@ impl FtSystem {
                         }
                     }
                     // Non-failed stateless/replayable: any frontier incl. ⊤.
+                    // A LogOutputs processor whose log has a refused-write
+                    // gap may not claim D̄ = ∅ (the gapped send lives in
+                    // D̄, not the log); full-history replay regenerates
+                    // sends from the complete in-memory mirror, so its
+                    // claim survives a durable gap.
                     (false, Policy::Ephemeral) if dedup => {
                         Available::any_dedup(false, self.engine.completed(p).clone())
                     }
                     (false, Policy::Ephemeral) => Available::any(false),
                     (false, Policy::LogOutputs) | (false, Policy::FullHistory) if dedup => {
-                        Available::any_dedup(true, self.engine.completed(p).clone())
+                        let logs = ft.policy.records_history() || !ft.persist_gap;
+                        Available::any_dedup(logs, self.engine.completed(p).clone())
                     }
                     (false, Policy::LogOutputs) | (false, Policy::FullHistory) => {
-                        Available::any(true)
+                        Available::any(ft.policy.records_history() || !ft.persist_gap)
                     }
-                    // Non-failed chain processor: chain + live ⊤.
+                    // Non-failed chain processor: acked chain prefix +
+                    // live ⊤ (the in-memory state is intact, so ⊤ is
+                    // always offerable; mid-frontier restores must come
+                    // from durable checkpoints).
                     (false, _) => {
+                        let acked = crate::ft::harness::acked_prefix(
+                            &ft.chain_tags,
+                            self.store.acked_seq(p.0),
+                        );
                         let mut chain: Vec<CkptMeta> =
-                            ft.chain.iter().map(|c| c.meta.clone()).collect();
+                            ft.chain[..acked].iter().map(|c| c.meta.clone()).collect();
                         chain.push(self.live_top_meta(p));
                         if dedup {
                             Available::chain_dedup(chain, self.engine.completed(p).clone())
@@ -216,6 +266,7 @@ impl FtSystem {
     /// reset. Panics if called with no failures (nothing to do).
     pub fn recover(&mut self) -> RecoveryReport {
         assert!(self.any_failed(), "recover() without failures");
+        self.note_ack_lag();
         let avail = self.availability();
         let plan = {
             let input = RollbackInput { topo: &self.topo, avail: &avail };
@@ -362,36 +413,47 @@ impl FtSystem {
             if !ft.input_mark.is_bottom() {
                 let shrunk = ft.input_mark.intersect(&fp);
                 if shrunk != ft.input_mark {
-                    ft.input_mark = shrunk;
+                    ft.drain_acked_marks(store.acked_seq(p.0));
+                    ft.input_mark = shrunk.clone();
                     let key = Key { proc: p.0, kind: Kind::InputFrontier, tag: 0 };
-                    if ft.input_mark.is_bottom() {
-                        store.delete(&key);
+                    let seq = if shrunk.is_bottom() {
+                        store.stage_delete(key)
                     } else {
-                        store.put(key, ft.input_mark.to_bytes());
-                    }
+                        store
+                            .stage_put(key, shrunk.to_bytes())
+                            .expect("a marker frontier is never oversized")
+                    };
+                    // The shrink rides the pending queue like any other
+                    // marker version: if a later crash discards it
+                    // unacked, the crash-settle intersection still lands
+                    // on the shrunk value — matching the truncated
+                    // mirrors below, which is what availability offers.
+                    ft.mark_pending.push((seq, shrunk));
                 }
             }
             // The chain ascends, so the kept set is a prefix. Per tag the
             // Ξ tombstone precedes the state tombstone, mirroring the
             // write order: suffix loss can orphan a state (dropped on
-            // reopen), never a Ξ.
+            // reopen), never a Ξ. Staged deletion keeps that ordering
+            // even against still-queued writes of the same processor.
             let keep = ft.chain.iter().take_while(|c| c.meta.f.is_subset(&fp)).count();
-            for tag in ft.chain_tags.drain(keep..) {
-                store.delete(&Key { proc: p.0, kind: Kind::Meta, tag });
-                store.delete(&Key { proc: p.0, kind: Kind::State, tag });
+            for ts in ft.chain_tags.drain(keep..) {
+                store.delete(&Key { proc: p.0, kind: Kind::Meta, tag: ts.tag });
+                store.delete(&Key { proc: p.0, kind: Kind::State, tag: ts.tag });
             }
             ft.chain.truncate(keep);
+            ft.chain_reported = ft.chain_reported.min(keep);
             crate::ft::harness::retain_with_tags(
                 &mut ft.log,
                 &mut ft.log_tags,
                 |le| fp.contains(&le.event_time),
-                |tag| store.delete(&Key { proc: p.0, kind: Kind::LogEntry, tag }),
+                |ts| store.delete(&Key { proc: p.0, kind: Kind::LogEntry, tag: ts.tag }),
             );
             crate::ft::harness::retain_with_tags(
                 &mut ft.history,
                 &mut ft.history_tags,
                 |ev| fp.contains(&ev.time()),
-                |tag| store.delete(&Key { proc: p.0, kind: Kind::HistoryEvent, tag }),
+                |ts| store.delete(&Key { proc: p.0, kind: Kind::HistoryEvent, tag: ts.tag }),
             );
             for times in ft.delivered_new.values_mut() {
                 times.retain(|lt| fp.contains(&lt.0));

@@ -19,12 +19,46 @@
 //! latency so benches can charge eager policies for their synchronous
 //! writes) and a running resident-byte counter, so `resident_bytes` is
 //! O(1) regardless of backend size.
+//!
+//! # The staged-write pipeline
+//!
+//! Every FT-layer mutation enters through the **staging** API
+//! ([`Store::stage_put`] / [`Store::stage_put_log`] /
+//! [`Store::stage_delete`]), which assigns the operation a monotone
+//! per-processor **sequence number** and routes it by [`PersistMode`]:
+//!
+//! - [`PersistMode::Sync`] (the default) applies the operation to the
+//!   backend before returning — today's acknowledged-write behavior
+//!   byte-for-byte: the returned sequence number is already at or below
+//!   the processor's **ack watermark** ([`Store::acked_seq`]).
+//! - [`PersistMode::Async`] enqueues the operation into a lock-light
+//!   staging queue and returns immediately; a background **writer
+//!   thread** drains the queue in batches of up to `ack_every`
+//!   operations, applies them through the backend, issues a single
+//!   [`StorageBackend::sync`] per drained batch (group commit), and only
+//!   then advances the per-processor ack watermarks.
+//!
+//! The watermark is the FT layer's availability gate: a checkpoint, log
+//! entry or history event becomes *offerable* to the Fig. 6 solver only
+//! once its sequence number is acknowledged, and
+//! [`Store::discard_unacked`] (used by failure injection) atomically
+//! drops a crashed processor's staged-but-unacknowledged tail — staging
+//! preserves per-processor FIFO order, so the durable image is always a
+//! *prefix* of the staged history, exactly the suffix-casualty crash
+//! model the WAL backend already provides one level down.
+//!
+//! Reads (`get`, scans, `stats`, …) settle the staging queue first so
+//! callers never observe a store image behind the mirrors — except while
+//! persistence is [`Store::pause_persistence`]d (a testing hook), when
+//! they serve the applied prefix, which is exactly what a crash-time
+//! inspector wants to see.
 
 use crate::ft::backend_file::{FileBackend, FileBackendOptions};
-use std::collections::BTreeMap;
+use std::collections::{BTreeMap, VecDeque};
 use std::ops::Bound;
 use std::path::Path;
-use std::sync::{Arc, Mutex};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Condvar, Mutex, Weak};
 
 /// A storage key: (processor, kind, discriminator).
 ///
@@ -85,6 +119,27 @@ impl Kind {
     }
 }
 
+/// When durable writes are applied and acknowledged (see the module docs
+/// for the full pipeline description).
+#[derive(Copy, Clone, Debug, PartialEq, Eq, Default)]
+pub enum PersistMode {
+    /// Apply-before-return: every staged operation reaches the backend on
+    /// the caller's thread and is acknowledged immediately — the
+    /// pre-pipeline behavior, byte-for-byte.
+    #[default]
+    Sync,
+    /// Queue-and-return: a background writer thread drains staged
+    /// operations in group-commit batches of up to `ack_every`, issuing
+    /// one [`StorageBackend::sync`] per batch before advancing the ack
+    /// watermarks. Larger `ack_every` amortizes the sync over more
+    /// writes at the price of a longer unacknowledged tail (more
+    /// re-execution after a crash — never inconsistency).
+    Async {
+        /// Group-commit width of the writer thread (≥ 1).
+        ack_every: usize,
+    },
+}
+
 /// Write/read accounting, for the policy-overhead benches.
 #[derive(Clone, Debug, Default, PartialEq)]
 pub struct StorageStats {
@@ -111,8 +166,9 @@ pub struct StorageStats {
 /// A write the backend refused (the write was *not* acknowledged and
 /// nothing was persisted). The §4.2 contract treats an acknowledged
 /// write as irrevocable, so [`Store::put`] panics on these; callers that
-/// can degrade gracefully (CLI tools, admission control) use
-/// [`Store::try_put`].
+/// can degrade gracefully (the FT harness, CLI tools, admission control)
+/// use [`Store::try_put`] or the staging API, whose size pre-check makes
+/// the refusal synchronous even under [`PersistMode::Async`].
 #[derive(Clone, Debug, PartialEq, Eq)]
 pub enum StorageError {
     /// The encoded record exceeds the backend's maximum record size
@@ -209,6 +265,15 @@ pub trait StorageBackend: Send {
     /// Aggregate self-description.
     fn info(&self) -> BackendInfo;
 
+    /// The largest value (in bytes) a `put` is guaranteed to accept, if
+    /// the backend has a record-size limit. The [`Store`] pre-checks
+    /// staged writes against this so a refusal is synchronous — the
+    /// backend itself refusing a pre-checked write is an invariant
+    /// violation.
+    fn max_value_len(&self) -> Option<u64> {
+        None
+    }
+
     /// Rewrite storage to drop dead records (no-op where meaningless).
     fn compact(&mut self) {}
 
@@ -283,11 +348,179 @@ impl StorageBackend for MemBackend {
     }
 }
 
+/// One staged mutation (the queue payload of the async pipeline).
+enum StagedOp {
+    Put { key: Key, value: Vec<u8>, log_records: Option<u64> },
+    Delete { key: Key },
+}
+
+impl StagedOp {
+    fn proc(&self) -> u32 {
+        match self {
+            StagedOp::Put { key, .. } | StagedOp::Delete { key } => key.proc,
+        }
+    }
+}
+
+struct QueuedOp {
+    seq: u64,
+    op: StagedOp,
+}
+
+/// Staging-queue state (behind [`Staging::q`]).
+struct StageState {
+    mode: PersistMode,
+    ops: VecDeque<QueuedOp>,
+    /// Last sequence number handed out per processor.
+    staged: BTreeMap<u32, u64>,
+    /// Ack watermark per processor: every operation at or below it has
+    /// been applied to the backend.
+    acked: BTreeMap<u32, u64>,
+    total_staged: u64,
+    total_acked: u64,
+    /// Operations dequeued by the writer, applied-but-not-yet-acked.
+    in_flight: usize,
+    /// Testing hook: the writer parks and takes nothing while set.
+    paused: bool,
+    /// Set on simulated crash and on final shutdown; staging refuses new
+    /// work and the writer exits.
+    shutdown: bool,
+}
+
+/// Shared staging queue + its two condition variables (`work` wakes the
+/// writer, `done` wakes barriers; both pair with the `q` mutex), plus
+/// two lock-free flags read on the hot path:
+///
+/// - `async_active` — false in [`PersistMode::Sync`], in which case
+///   staged writes take a fast path that never touches the `q` mutex at
+///   all (no sequencing needed: everything is trivially acknowledged,
+///   mirrors carry sequence 0 which every watermark covers) and reads
+///   skip the settle barrier. The default mode therefore costs exactly
+///   what the pre-pipeline store did — one backend lock per operation.
+/// - `value_limit` — the pre-check bound for staged writes
+///   (`u64::MAX` = unlimited), kept outside the mutex so the fast path
+///   can check it without locking.
+struct Staging {
+    q: Mutex<StageState>,
+    work: Condvar,
+    done: Condvar,
+    async_active: AtomicBool,
+    value_limit: AtomicU64,
+}
+
+impl Staging {
+    /// Advance a processor's watermark to `seq` (watermarks are monotone;
+    /// per-proc FIFO makes this a plain max).
+    fn ack(q: &mut StageState, proc: u32, seq: u64) {
+        let w = q.acked.entry(proc).or_insert(0);
+        *w = (*w).max(seq);
+        q.total_acked += 1;
+    }
+
+    /// The one drain-barrier loop: wait until the queue and any in-flight
+    /// writer batch are empty. Escapes early on shutdown (a crashed store
+    /// will never drain) and — when `escape_on_paused` — on a paused
+    /// writer (callers that must not stall a deliberately-held tail).
+    /// Returns the guard so callers can keep inspecting/mutating under
+    /// the same critical section.
+    fn wait_drained<'a>(
+        &self,
+        mut q: std::sync::MutexGuard<'a, StageState>,
+        escape_on_paused: bool,
+    ) -> std::sync::MutexGuard<'a, StageState> {
+        while !(q.ops.is_empty() && q.in_flight == 0) {
+            if q.shutdown || (escape_on_paused && q.paused) {
+                break;
+            }
+            q = self.done.wait(q).unwrap();
+        }
+        q
+    }
+}
+
+/// Drop guard shared by all [`Store`] clones (the writer thread holds
+/// only weak/queue references, so this drops exactly when the last user
+/// handle goes away): drains the staging queue, stops the writer, and
+/// joins it — a graceful drop therefore leaves nothing staged, mirroring
+/// the WAL backend's flush-on-drop one level down.
+struct WriterGuard {
+    staging: Arc<Staging>,
+    /// Keeps the backend alive until the writer has drained and exited.
+    inner: Arc<Mutex<Inner>>,
+    handle: Mutex<Option<std::thread::JoinHandle<()>>>,
+}
+
+impl Drop for WriterGuard {
+    fn drop(&mut self) {
+        {
+            let mut q = self.staging.q.lock().unwrap();
+            q.paused = false;
+            self.staging.work.notify_all();
+            // A crashed store never drains (the queue was discarded);
+            // everything else does, now that the writer is unpaused.
+            let mut q = self.staging.wait_drained(q, false);
+            q.shutdown = true;
+            self.staging.work.notify_all();
+        }
+        if let Some(h) = self.handle.lock().unwrap().take() {
+            let _ = h.join();
+        }
+        let _ = &self.inner; // dropped after the writer is gone
+    }
+}
+
+/// The background writer: drain batches of up to `ack_every`, apply them
+/// under the backend lock, group-commit with one `sync()`, then publish
+/// the ack watermarks.
+fn writer_loop(staging: Arc<Staging>, inner: Weak<Mutex<Inner>>) {
+    loop {
+        let batch: Vec<QueuedOp> = {
+            let mut q = staging.q.lock().unwrap();
+            loop {
+                if q.shutdown {
+                    return;
+                }
+                if !q.ops.is_empty() && !q.paused {
+                    break;
+                }
+                q = staging.work.wait(q).unwrap();
+            }
+            let width = match q.mode {
+                PersistMode::Async { ack_every } => ack_every.max(1),
+                // Mode switched back to Sync with ops still queued cannot
+                // happen (set_persist_mode barriers first), but drain
+                // everything if it somehow does.
+                PersistMode::Sync => q.ops.len(),
+            };
+            let take = width.min(q.ops.len());
+            q.in_flight = take;
+            q.ops.drain(..take).collect()
+        };
+        if let Some(inner) = inner.upgrade() {
+            let mut g = inner.lock().unwrap();
+            for qo in &batch {
+                g.apply(&qo.op);
+            }
+            // Group commit: the whole drained batch rides one sync.
+            g.backend.sync();
+        }
+        let mut q = staging.q.lock().unwrap();
+        for qo in &batch {
+            Staging::ack(&mut q, qo.op.proc(), qo.seq);
+        }
+        q.in_flight = 0;
+        staging.done.notify_all();
+    }
+}
+
 /// Durable store with ack semantics. Cloneable handle; the backend
-/// serializes its own access through the handle's lock.
+/// serializes its own access through the handle's lock, and the staging
+/// queue (see the module docs) serializes acknowledgement order.
 #[derive(Clone)]
 pub struct Store {
     inner: Arc<Mutex<Inner>>,
+    staging: Arc<Staging>,
+    guard: Arc<WriterGuard>,
 }
 
 struct Inner {
@@ -300,6 +533,37 @@ struct Inner {
     resident: u64,
 }
 
+impl Inner {
+    /// Apply one staged operation to the backend, with the acknowledged
+    /// accounting. The staging layer pre-checked sizes, so a backend
+    /// refusal here is an invariant violation, not a recoverable error.
+    fn apply(&mut self, op: &StagedOp) {
+        match op {
+            StagedOp::Put { key, value, log_records } => {
+                let replaced = self
+                    .backend
+                    .put(key, value)
+                    .unwrap_or_else(|e| panic!("pre-checked durable write refused: {e}"))
+                    .unwrap_or(0);
+                self.stats.writes += 1;
+                self.stats.bytes_written += value.len() as u64;
+                self.stats.virtual_latency += self.write_cost;
+                if let Some(records) = log_records {
+                    self.stats.log_batches += 1;
+                    self.stats.log_records += records;
+                }
+                self.resident = self.resident - replaced + value.len() as u64;
+            }
+            StagedOp::Delete { key } => {
+                if let Some(n) = self.backend.delete(key) {
+                    self.stats.deletes += 1;
+                    self.resident -= n;
+                }
+            }
+        }
+    }
+}
+
 impl Store {
     /// An in-memory store charging `write_cost` virtual latency units per
     /// write (the zero-regression default backend).
@@ -308,17 +572,40 @@ impl Store {
     }
 
     /// A store over an arbitrary backend. The resident-byte counter is
-    /// seeded from the backend's live bytes (nonzero for a reopened WAL).
+    /// seeded from the backend's live bytes (nonzero for a reopened WAL);
+    /// persistence starts in [`PersistMode::Sync`].
     pub fn with_backend(backend: Box<dyn StorageBackend>, write_cost: u64) -> Store {
         let resident = backend.info().live_bytes;
-        Store {
-            inner: Arc::new(Mutex::new(Inner {
-                backend,
-                stats: StorageStats::default(),
-                write_cost,
-                resident,
-            })),
-        }
+        let value_limit = backend.max_value_len().unwrap_or(u64::MAX);
+        let inner = Arc::new(Mutex::new(Inner {
+            backend,
+            stats: StorageStats::default(),
+            write_cost,
+            resident,
+        }));
+        let staging = Arc::new(Staging {
+            q: Mutex::new(StageState {
+                mode: PersistMode::Sync,
+                ops: VecDeque::new(),
+                staged: BTreeMap::new(),
+                acked: BTreeMap::new(),
+                total_staged: 0,
+                total_acked: 0,
+                in_flight: 0,
+                paused: false,
+                shutdown: false,
+            }),
+            work: Condvar::new(),
+            done: Condvar::new(),
+            async_active: AtomicBool::new(false),
+            value_limit: AtomicU64::new(value_limit),
+        });
+        let guard = Arc::new(WriterGuard {
+            staging: staging.clone(),
+            inner: inner.clone(),
+            handle: Mutex::new(None),
+        });
+        Store { inner, staging, guard }
     }
 
     /// Open (or create) a [`FileBackend`] WAL under `dir`. Reopening an
@@ -344,84 +631,277 @@ impl Store {
         Ok(Store::with_backend(Box::new(backend), 0))
     }
 
-    fn put_inner(
-        &self,
-        key: Key,
-        value: Vec<u8>,
-        log_records: Option<u64>,
-    ) -> Result<(), StorageError> {
-        let mut g = self.inner.lock().unwrap();
-        // A refused write is not acknowledged: no stats, no residency.
-        let replaced = g.backend.put(&key, &value)?.unwrap_or(0);
-        g.stats.writes += 1;
-        g.stats.bytes_written += value.len() as u64;
-        g.stats.virtual_latency += g.write_cost;
-        if let Some(records) = log_records {
-            g.stats.log_batches += 1;
-            g.stats.log_records += records;
+    /// The current persistence mode.
+    pub fn persist_mode(&self) -> PersistMode {
+        self.staging.q.lock().unwrap().mode
+    }
+
+    /// Switch the persistence mode. Barriers on the staging queue first,
+    /// so a switch never reorders or drops staged work — and refuses
+    /// (panics) if staged operations are pinned by a paused writer, where
+    /// silently proceeding would let an older queued write land after a
+    /// newer synchronous one. Switching to [`PersistMode::Async`] spawns
+    /// the writer thread on first use.
+    pub fn set_persist_mode(&self, mode: PersistMode) {
+        let spawn = {
+            let q = self.staging.q.lock().unwrap();
+            let mut q = self.staging.wait_drained(q, true);
+            assert!(!q.shutdown, "store used after simulated crash");
+            assert!(
+                q.ops.is_empty() && q.in_flight == 0,
+                "cannot switch persist mode with staged operations pending \
+                 (resume_persistence and flush first)"
+            );
+            if let PersistMode::Async { ack_every } = mode {
+                assert!(ack_every >= 1, "ack_every must be at least 1");
+            }
+            q.mode = mode;
+            self.staging
+                .async_active
+                .store(matches!(mode, PersistMode::Async { .. }), Ordering::SeqCst);
+            matches!(mode, PersistMode::Async { .. })
+        };
+        if spawn {
+            let mut h = self.guard.handle.lock().unwrap();
+            if h.is_none() {
+                let staging = self.staging.clone();
+                let inner = Arc::downgrade(&self.inner);
+                *h = Some(
+                    std::thread::Builder::new()
+                        .name("falkirk-persist".into())
+                        .spawn(move || writer_loop(staging, inner))
+                        .expect("spawning the persistence writer thread"),
+                );
+            }
         }
-        g.resident = g.resident - replaced + value.len() as u64;
+    }
+
+    /// Refuse an oversized put before anything is staged (the size
+    /// pre-check that makes refusal synchronous in every mode).
+    fn pre_check(&self, op: &StagedOp) -> Result<(), StorageError> {
+        if let StagedOp::Put { value, .. } = op {
+            let max = self.staging.value_limit.load(Ordering::Relaxed);
+            if value.len() as u64 > max {
+                return Err(StorageError::ValueTooLarge { size: value.len() as u64, max });
+            }
+        }
         Ok(())
     }
 
-    /// Persist a blob; returns once "acknowledged" (synchronously here,
-    /// with the virtual latency charged to the stats). Panics if the
-    /// backend refuses the write — the FT layer has no continuation for
-    /// an unacknowledgeable Ξ/state/log blob; use [`Store::try_put`] to
-    /// handle refusal gracefully.
+    /// Stage one operation: pre-check, then apply inline (Sync — the
+    /// lock-free fast path: no sequencing, everything trivially acked,
+    /// sequence 0 returned, which every watermark covers) or assign the
+    /// per-proc sequence number and enqueue for the writer (Async).
+    /// Returns the operation's sequence number.
+    fn stage(&self, op: StagedOp) -> Result<u64, StorageError> {
+        self.pre_check(&op)?;
+        if !self.staging.async_active.load(Ordering::Relaxed) {
+            // Sync fast path: exactly the pre-pipeline cost — one backend
+            // lock, no staging-mutex traffic. (Switching modes barriers
+            // and asserts an empty queue, so nothing can be in flight
+            // here; concurrent writes racing a mode switch are unordered
+            // with it anyway.)
+            self.inner.lock().unwrap().apply(&op);
+            return Ok(0);
+        }
+        let mut q = self.staging.q.lock().unwrap();
+        assert!(!q.shutdown, "store used after simulated crash");
+        let proc = op.proc();
+        let seq = {
+            let s = q.staged.entry(proc).or_insert(0);
+            *s += 1;
+            *s
+        };
+        q.total_staged += 1;
+        match q.mode {
+            PersistMode::Sync => {
+                // Raced a switch back to Sync: apply inline, keeping the
+                // sequencing bookkeeping exact.
+                drop(q);
+                self.inner.lock().unwrap().apply(&op);
+                let mut q = self.staging.q.lock().unwrap();
+                Staging::ack(&mut q, proc, seq);
+                Ok(seq)
+            }
+            PersistMode::Async { .. } => {
+                q.ops.push_back(QueuedOp { seq, op });
+                self.staging.work.notify_one();
+                Ok(seq)
+            }
+        }
+    }
+
+    /// Stage a blob write under the current [`PersistMode`] discipline.
+    /// `Err` means the write was refused synchronously (size pre-check)
+    /// and nothing was staged.
+    pub fn stage_put(&self, key: Key, value: Vec<u8>) -> Result<u64, StorageError> {
+        self.stage(StagedOp::Put { key, value, log_records: None })
+    }
+
+    /// Stage one message-log blob covering `records` records (the
+    /// batch/record accounting lands when the write is applied).
+    pub fn stage_put_log(
+        &self,
+        key: Key,
+        value: Vec<u8>,
+        records: u64,
+    ) -> Result<u64, StorageError> {
+        self.stage(StagedOp::Put { key, value, log_records: Some(records) })
+    }
+
+    /// Stage a deletion. Deletions ride the same per-proc FIFO as puts,
+    /// so a truncation's tombstone can never overtake the staged write it
+    /// undoes.
+    pub fn stage_delete(&self, key: Key) -> u64 {
+        self.stage(StagedOp::Delete { key }).expect("deletes have no size to refuse")
+    }
+
+    /// Persist a blob; returns once acknowledged under the current
+    /// [`PersistMode`] discipline — for `Sync` that is now, for `Async`
+    /// when the writer thread drains it (use [`Store::acked_seq`] /
+    /// [`Store::flush_staged`] to observe). Panics if the write is
+    /// refused — the legacy ack-or-panic entry point; the FT layer stages
+    /// through [`Store::stage_put`] and handles refusal per processor.
     pub fn put(&self, key: Key, value: Vec<u8>) {
-        self.put_inner(key, value, None)
+        self.stage_put(key, value)
+            .map(|_| ())
             .unwrap_or_else(|e| panic!("unacknowledgeable durable write: {e}"));
     }
 
     /// Like [`Store::put`], but surfaces a refused write (e.g. a value
     /// over the backend's record-size limit) as a recoverable error
-    /// instead of panicking. On `Err` nothing was persisted.
+    /// instead of panicking. On `Err` nothing was persisted or staged.
     pub fn try_put(&self, key: Key, value: Vec<u8>) -> Result<(), StorageError> {
-        self.put_inner(key, value, None)
+        self.stage_put(key, value).map(|_| ())
     }
 
     /// Persist one message-log blob covering `records` records. Identical
     /// ack semantics to [`Store::put`], plus batch/record accounting so
     /// the policy-overhead benches can report amortization honestly.
     pub fn put_log(&self, key: Key, value: Vec<u8>, records: u64) {
-        self.put_inner(key, value, Some(records))
+        self.stage_put_log(key, value, records)
+            .map(|_| ())
             .unwrap_or_else(|e| panic!("unacknowledgeable durable log write: {e}"));
     }
 
+    pub fn delete(&self, key: &Key) {
+        self.stage_delete(key.clone());
+    }
+
+    /// Ack watermark of `proc`: every staged operation with a sequence
+    /// number at or below this has been applied to the backend.
+    pub fn acked_seq(&self, proc: u32) -> u64 {
+        self.staging.q.lock().unwrap().acked.get(&proc).copied().unwrap_or(0)
+    }
+
+    /// Last sequence number staged for `proc`.
+    pub fn staged_seq(&self, proc: u32) -> u64 {
+        self.staging.q.lock().unwrap().staged.get(&proc).copied().unwrap_or(0)
+    }
+
+    /// Operations staged but not yet acknowledged, across all processors
+    /// (0 in sync mode — the pipeline's lag gauge).
+    pub fn ack_lag(&self) -> u64 {
+        let q = self.staging.q.lock().unwrap();
+        q.total_staged - q.total_acked
+    }
+
+    /// Barrier: wait until every staged operation has been applied and
+    /// acknowledged (no-op in sync mode; returns immediately after a
+    /// simulated crash or while persistence is paused — there is nothing
+    /// a wait could accomplish then).
+    pub fn flush_staged(&self) {
+        if !self.staging.async_active.load(Ordering::Relaxed) {
+            return;
+        }
+        let q = self.staging.q.lock().unwrap();
+        let _ = self.staging.wait_drained(q, true);
+    }
+
+    /// Crash semantics for one processor (failure injection): discard its
+    /// staged-but-unacknowledged operations and return the resulting ack
+    /// watermark. Queued operations are removed before waiting out any
+    /// in-flight writer batch, so on return the watermark is exact:
+    /// everything at or below it is applied, everything above it was
+    /// never applied and never will be. Per-proc FIFO staging makes the
+    /// surviving durable image a prefix of the staged history — the same
+    /// suffix-casualty model as a real crash.
+    pub fn discard_unacked(&self, proc: u32) -> u64 {
+        let mut q = self.staging.q.lock().unwrap();
+        let before = q.ops.len();
+        q.ops.retain(|qo| qo.op.proc() != proc);
+        let removed = (before - q.ops.len()) as u64;
+        q.total_staged -= removed;
+        while q.in_flight > 0 && !q.shutdown {
+            q = self.staging.done.wait(q).unwrap();
+        }
+        let w = q.acked.get(&proc).copied().unwrap_or(0);
+        let crashed = q.shutdown;
+        if let Some(s) = q.staged.get_mut(&proc) {
+            debug_assert!(
+                crashed || *s - w == removed,
+                "discard accounting: staged {s} − acked {w} ≠ removed {removed}"
+            );
+            *s = w;
+        }
+        w
+    }
+
+    /// Testing hook: park the writer thread so staged operations
+    /// accumulate unacknowledged (deterministic unacked tails for the
+    /// crash suites). Reads served while paused reflect only the applied
+    /// prefix.
+    pub fn pause_persistence(&self) {
+        self.staging.q.lock().unwrap().paused = true;
+    }
+
+    /// Undo [`Store::pause_persistence`].
+    pub fn resume_persistence(&self) {
+        let mut q = self.staging.q.lock().unwrap();
+        q.paused = false;
+        self.staging.work.notify_all();
+    }
+
+    /// Settle the staging queue before serving a read, so callers never
+    /// observe the store behind its mirrors. Lock-free no-op in sync
+    /// mode; while paused (or after a simulated crash) reads serve the
+    /// applied prefix instead — exactly the crash-time durable image.
+    fn settle_for_read(&self) {
+        if !self.staging.async_active.load(Ordering::Relaxed) {
+            return;
+        }
+        let q = self.staging.q.lock().unwrap();
+        let _ = self.staging.wait_drained(q, true);
+    }
+
     pub fn get(&self, key: &Key) -> Option<Vec<u8>> {
+        self.settle_for_read();
         let mut g = self.inner.lock().unwrap();
         g.stats.reads += 1;
         g.backend.get(key)
     }
 
-    pub fn delete(&self, key: &Key) {
-        let mut g = self.inner.lock().unwrap();
-        if let Some(n) = g.backend.delete(key) {
-            g.stats.deletes += 1;
-            g.resident -= n;
-        }
-    }
-
     /// Delete all blobs for `proc` matching `pred` (garbage collection).
-    /// Scans only `proc`'s key range.
+    /// Scans only `proc`'s key range; the deletions are staged, so they
+    /// order after any still-queued writes of the same processor.
     pub fn delete_matching<F: FnMut(&Key) -> bool>(&self, proc: u32, mut pred: F) -> usize {
-        let mut g = self.inner.lock().unwrap();
-        let keys = g.backend.scan_keys(proc);
-        g.stats.keys_scanned += keys.len() as u64;
-        let mut n = 0;
-        for k in keys.into_iter().filter(|k| pred(k)) {
-            if let Some(len) = g.backend.delete(&k) {
-                g.stats.deletes += 1;
-                g.resident -= len;
-                n += 1;
-            }
+        self.settle_for_read();
+        let doomed: Vec<Key> = {
+            let mut g = self.inner.lock().unwrap();
+            let keys = g.backend.scan_keys(proc);
+            g.stats.keys_scanned += keys.len() as u64;
+            keys.into_iter().filter(|k| pred(k)).collect()
+        };
+        let n = doomed.len();
+        for k in doomed {
+            self.stage_delete(k);
         }
         n
     }
 
     /// Keys currently stored for `proc` of a given kind.
     pub fn keys_for(&self, proc: u32, kind: Kind) -> Vec<Key> {
+        self.settle_for_read();
         let mut g = self.inner.lock().unwrap();
         let keys = g.backend.scan_keys(proc);
         g.stats.keys_scanned += keys.len() as u64;
@@ -431,6 +911,7 @@ impl Store {
     /// All keys for `proc`, ascending (the cold-restart loader reads each
     /// processor's durable state with one ranged scan).
     pub fn scan_keys(&self, proc: u32) -> Vec<Key> {
+        self.settle_for_read();
         let mut g = self.inner.lock().unwrap();
         let keys = g.backend.scan_keys(proc);
         g.stats.keys_scanned += keys.len() as u64;
@@ -440,6 +921,7 @@ impl Store {
     /// All (key, value size) pairs for `proc`, ascending — metadata only,
     /// no blob reads (`falkirk store inspect` sums sizes from this).
     pub fn scan_entries(&self, proc: u32) -> Vec<(Key, u64)> {
+        self.settle_for_read();
         let mut g = self.inner.lock().unwrap();
         let entries = g.backend.scan_entries(proc);
         g.stats.keys_scanned += entries.len() as u64;
@@ -448,38 +930,76 @@ impl Store {
 
     /// Distinct processor ids present, ascending.
     pub fn procs(&self) -> Vec<u32> {
+        self.settle_for_read();
         self.inner.lock().unwrap().backend.procs()
     }
 
     /// Total live bytes resident. O(1): maintained on put/delete.
     pub fn resident_bytes(&self) -> u64 {
+        self.settle_for_read();
         self.inner.lock().unwrap().resident
     }
 
-    /// Force buffered writes durable (group-commit backends).
+    /// Force buffered writes durable (settles the staging queue, then
+    /// syncs group-commit backends). While persistence is paused this
+    /// covers only the *applied* prefix — a deliberately-held staged
+    /// tail stays volatile until [`Store::resume_persistence`].
     pub fn sync(&self) {
+        self.flush_staged();
         self.inner.lock().unwrap().backend.sync();
     }
 
     /// Rewrite storage to drop dead records (backend-specific; no-op for
     /// mem).
     pub fn compact(&self) {
+        self.flush_staged();
         self.inner.lock().unwrap().backend.compact();
     }
 
     /// The backend's self-description (segments, live/dead bytes, …).
     pub fn backend_info(&self) -> BackendInfo {
+        self.settle_for_read();
         self.inner.lock().unwrap().backend.info()
     }
 
-    /// Testing hook: crash the backend — the unflushed group-commit tail
-    /// is lost and nothing further reaches disk (not even on drop). The
-    /// handle stays usable only for dropping.
+    /// The effective value-size limit staged writes are pre-checked
+    /// against (the backend's record limit, or a tighter override).
+    pub fn max_value_len(&self) -> Option<u64> {
+        match self.staging.value_limit.load(Ordering::Relaxed) {
+            u64::MAX => None,
+            v => Some(v),
+        }
+    }
+
+    /// Testing / admission-control hook: tighten the value-size limit.
+    /// The effective limit is the minimum of `limit` and the backend's
+    /// own record limit.
+    pub fn set_max_value_len(&self, limit: u64) {
+        self.staging.value_limit.fetch_min(limit, Ordering::SeqCst);
+    }
+
+    /// Testing hook: crash the store — queued staged operations and the
+    /// backend's unflushed group-commit tail are lost and nothing further
+    /// reaches disk (not even on drop). The handle stays usable only for
+    /// dropping.
     pub fn simulate_crash(&self) {
+        {
+            let mut q = self.staging.q.lock().unwrap();
+            // Discard the unapplied staged tail, stop the writer, and let
+            // any in-flight batch finish (its writes were applied — the
+            // crash casualty is the queue suffix plus the backend tail).
+            q.ops.clear();
+            q.shutdown = true;
+            self.staging.work.notify_all();
+            while q.in_flight > 0 {
+                q = self.staging.done.wait(q).unwrap();
+            }
+        }
         self.inner.lock().unwrap().backend.simulate_crash();
     }
 
     pub fn stats(&self) -> StorageStats {
+        self.settle_for_read();
         self.inner.lock().unwrap().stats.clone()
     }
 
@@ -612,5 +1132,194 @@ mod tests {
         assert_eq!(info.live_keys, 1);
         assert_eq!(info.live_bytes, 10);
         assert_eq!(info.file_bytes, 0);
+    }
+
+    // ------------------------------------------------------------------
+    // Staged-write pipeline.
+    // ------------------------------------------------------------------
+
+    /// Sync mode acknowledges at stage time via the lock-free fast path:
+    /// sequence 0 is returned (at or below every watermark — trivially
+    /// acked), the lag gauge stays at zero, and reads see the write
+    /// immediately. Async sequencing starts at 1, so a sync-staged entry
+    /// is acked under any later watermark too.
+    #[test]
+    fn sync_mode_acks_immediately() {
+        let s = Store::new(0);
+        assert_eq!(s.persist_mode(), PersistMode::Sync);
+        let s1 = s.stage_put(k(3, Kind::State, 0), vec![1]).unwrap();
+        let s2 = s.stage_put(k(3, Kind::State, 1), vec![2]).unwrap();
+        assert_eq!((s1, s2), (0, 0), "sync fast path: trivially-acked sequence 0");
+        assert!(s1 <= s.acked_seq(3), "a sync write is at or below the watermark");
+        assert_eq!(s.ack_lag(), 0);
+        assert_eq!(s.get(&k(3, Kind::State, 1)), Some(vec![2]));
+        // Switching to async starts real sequencing above 0.
+        s.set_persist_mode(PersistMode::Async { ack_every: 2 });
+        let s3 = s.stage_put(k(3, Kind::State, 2), vec![3]).unwrap();
+        assert_eq!(s3, 1);
+        s.flush_staged();
+        assert!(s.acked_seq(3) >= s3);
+    }
+
+    /// Async mode stages without applying until the writer drains; a
+    /// flush barrier makes everything acked and readable.
+    #[test]
+    fn async_mode_acks_through_the_writer() {
+        let s = Store::new(0);
+        s.set_persist_mode(PersistMode::Async { ack_every: 4 });
+        for tag in 0..10u64 {
+            s.stage_put(k(1, Kind::State, tag), vec![tag as u8]).unwrap();
+        }
+        s.flush_staged();
+        assert_eq!(s.acked_seq(1), 10);
+        assert_eq!(s.ack_lag(), 0);
+        for tag in 0..10u64 {
+            assert_eq!(s.get(&k(1, Kind::State, tag)), Some(vec![tag as u8]));
+        }
+        assert_eq!(s.stats().writes, 10);
+    }
+
+    /// While paused, staged operations accumulate unacknowledged and
+    /// reads serve the applied prefix; resume drains everything.
+    #[test]
+    fn paused_writer_leaves_a_deterministic_unacked_tail() {
+        let s = Store::new(0);
+        s.set_persist_mode(PersistMode::Async { ack_every: 2 });
+        s.stage_put(k(1, Kind::State, 0), vec![9]).unwrap();
+        s.flush_staged();
+        assert_eq!(s.acked_seq(1), 1);
+        s.pause_persistence();
+        for tag in 1..5u64 {
+            s.stage_put(k(1, Kind::State, tag), vec![tag as u8]).unwrap();
+        }
+        assert_eq!(s.acked_seq(1), 1, "paused: nothing acks");
+        assert_eq!(s.staged_seq(1), 5);
+        assert_eq!(s.ack_lag(), 4);
+        // Reads while paused see only the applied prefix.
+        assert_eq!(s.get(&k(1, Kind::State, 0)), Some(vec![9]));
+        assert_eq!(s.get(&k(1, Kind::State, 3)), None);
+        s.resume_persistence();
+        s.flush_staged();
+        assert_eq!(s.acked_seq(1), 5);
+        assert_eq!(s.get(&k(1, Kind::State, 3)), Some(vec![3]));
+    }
+
+    /// `discard_unacked` drops exactly the staged-but-unacked suffix of
+    /// one processor, leaving other processors' staged work intact.
+    #[test]
+    fn discard_unacked_is_per_proc_and_exact() {
+        let s = Store::new(0);
+        s.set_persist_mode(PersistMode::Async { ack_every: 8 });
+        s.stage_put(k(1, Kind::State, 0), vec![1]).unwrap();
+        s.stage_put(k(2, Kind::State, 0), vec![2]).unwrap();
+        s.flush_staged();
+        s.pause_persistence();
+        s.stage_put(k(1, Kind::State, 1), vec![1]).unwrap();
+        s.stage_put(k(2, Kind::State, 1), vec![2]).unwrap();
+        let w = s.discard_unacked(1);
+        assert_eq!(w, 1, "watermark = the applied prefix");
+        assert_eq!(s.staged_seq(1), 1, "discarded ops rewind the staged counter");
+        s.resume_persistence();
+        s.flush_staged();
+        // Proc 1's unacked write died; proc 2's survived.
+        assert_eq!(s.get(&k(1, Kind::State, 1)), None);
+        assert_eq!(s.get(&k(2, Kind::State, 1)), Some(vec![2]));
+        // Staging resumes from the rewound sequence.
+        assert_eq!(s.stage_put(k(1, Kind::State, 9), vec![0]).unwrap(), 2);
+    }
+
+    /// A simulated crash loses the queued staged tail (suffix-only), and
+    /// per-proc FIFO guarantees no gaps.
+    #[test]
+    fn crash_loses_only_the_staged_suffix() {
+        let s = Store::new(0);
+        s.set_persist_mode(PersistMode::Async { ack_every: 4 });
+        for tag in 0..4u64 {
+            s.stage_put(k(1, Kind::LogEntry, tag), vec![tag as u8]).unwrap();
+        }
+        s.flush_staged();
+        s.pause_persistence();
+        for tag in 4..9u64 {
+            s.stage_put(k(1, Kind::LogEntry, tag), vec![tag as u8]).unwrap();
+        }
+        s.simulate_crash();
+        // The applied prefix survives in the backend; the queue suffix is
+        // gone. (A MemBackend "crash" keeps applied blobs readable — the
+        // file backend's own tail loss is tested in backend_file.)
+        let survivors = s.inner.lock().unwrap().backend.scan_keys(1);
+        assert_eq!(survivors.len(), 4, "exactly the acked prefix survives");
+    }
+
+    /// Deletions ride the same per-proc FIFO as puts: a staged
+    /// put-then-delete lands in order, never resurrecting the blob.
+    #[test]
+    fn staged_deletes_order_after_staged_puts() {
+        let s = Store::new(0);
+        s.set_persist_mode(PersistMode::Async { ack_every: 64 });
+        s.pause_persistence();
+        s.stage_put(k(1, Kind::Meta, 7), vec![1]).unwrap();
+        s.stage_delete(k(1, Kind::Meta, 7));
+        s.resume_persistence();
+        s.flush_staged();
+        assert_eq!(s.get(&k(1, Kind::Meta, 7)), None);
+        let st = s.stats();
+        assert_eq!(st.writes, 1);
+        assert_eq!(st.deletes, 1);
+    }
+
+    /// The size pre-check refuses oversized values synchronously in both
+    /// modes, without consuming a sequence number.
+    #[test]
+    fn oversized_stage_put_is_refused_synchronously() {
+        let s = Store::new(0);
+        s.set_max_value_len(8);
+        assert!(s.stage_put(k(1, Kind::State, 0), vec![0; 9]).is_err());
+        assert_eq!(s.staged_seq(1), 0, "a refused write consumes no sequence number");
+        s.set_persist_mode(PersistMode::Async { ack_every: 2 });
+        assert!(s.stage_put(k(1, Kind::State, 0), vec![0; 9]).is_err());
+        assert!(s.stage_put(k(1, Kind::State, 0), vec![0; 8]).is_ok());
+        s.flush_staged();
+        assert_eq!(s.get(&k(1, Kind::State, 0)), Some(vec![0; 8]));
+    }
+
+    /// Dropping the last handle drains the staging queue (graceful
+    /// shutdown flushes, mirroring the WAL's flush-on-drop).
+    #[test]
+    fn drop_drains_staged_writes() {
+        use std::sync::atomic::{AtomicU64, Ordering};
+        static APPLIED: AtomicU64 = AtomicU64::new(0);
+        struct CountingBackend(MemBackend);
+        impl StorageBackend for CountingBackend {
+            fn put(&mut self, key: &Key, value: &[u8]) -> Result<Option<u64>, StorageError> {
+                APPLIED.fetch_add(1, Ordering::SeqCst);
+                self.0.put(key, value)
+            }
+            fn get(&mut self, key: &Key) -> Option<Vec<u8>> {
+                self.0.get(key)
+            }
+            fn delete(&mut self, key: &Key) -> Option<u64> {
+                self.0.delete(key)
+            }
+            fn scan_entries(&mut self, proc: u32) -> Vec<(Key, u64)> {
+                self.0.scan_entries(proc)
+            }
+            fn procs(&mut self) -> Vec<u32> {
+                self.0.procs()
+            }
+            fn sync(&mut self) {}
+            fn info(&self) -> BackendInfo {
+                self.0.info()
+            }
+        }
+        APPLIED.store(0, Ordering::SeqCst);
+        {
+            let s = Store::with_backend(Box::new(CountingBackend(MemBackend::new())), 0);
+            s.set_persist_mode(PersistMode::Async { ack_every: 64 });
+            for tag in 0..5u64 {
+                s.stage_put(k(1, Kind::State, tag), vec![0]).unwrap();
+            }
+            // Dropped with the queue possibly still full.
+        }
+        assert_eq!(APPLIED.load(Ordering::SeqCst), 5, "drop drains the queue");
     }
 }

@@ -14,7 +14,7 @@ use falkirk::engine::Record;
 use falkirk::frontier::Frontier;
 use falkirk::ft::external::ExternalInput;
 use falkirk::ft::monitor::GcAction;
-use falkirk::ft::{FileBackendOptions, Store};
+use falkirk::ft::{FileBackendOptions, PersistMode, Store};
 use falkirk::time::Time;
 use falkirk::util::rng::Rng;
 use falkirk::util::tmp::TempDir;
@@ -134,6 +134,137 @@ fn newest_segment(dir: &Path) -> std::path::PathBuf {
         .filter(|p| p.extension().map(|x| x == "seg").unwrap_or(false))
         .max()
         .expect("WAL directory has segments")
+}
+
+/// Crash with an asynchronous persistence pipeline holding a staged,
+/// unacknowledged tail: the writer is paused before the final epoch so
+/// *everything* that epoch staged is still queued when the process dies.
+/// The durable image is therefore the acked prefix only, and the cold
+/// restart must still reconverge — byte-identical to the sync-mode run —
+/// once the §4.3 services resupply the unacked inputs.
+fn async_crash_with_unacked_tail(ack_every: usize, batch_cap: usize) {
+    let sync_cfg = ShardedConfig { workers: 4, batch_cap, ..Default::default() };
+    let expected = expected_output(&sync_cfg);
+    let cfg = ShardedConfig {
+        persist_mode: PersistMode::Async { ack_every },
+        ..sync_cfg.clone()
+    };
+
+    let t = TempDir::new("crash-async-tail");
+    let mut ext = ExternalInput::new();
+    {
+        let store = file_store(t.path(), 8);
+        let mut p = pipeline_with_store(&cfg, store.clone());
+        for ep in 0..2 {
+            offer_and_drive(&mut p, &mut ext, ep);
+        }
+        p.sys.store.flush_staged(); // epochs 0–1 fully acked
+        // Epoch 2 runs entirely against the parked writer: checkpoints,
+        // log entries and marker advances all stage but never ack.
+        p.sys.store.pause_persistence();
+        offer_and_drive(&mut p, &mut ext, 2);
+        assert!(p.sys.ack_lag() > 0, "the crash must catch staged writes in flight");
+        drop(p);
+        store.simulate_crash(); // queued staged tail + WAL buffer die
+    }
+
+    // Cold restart: durable state is the epoch 0–1 prefix; epoch 2 is
+    // resupplied by the external service exactly like any crash window.
+    let store = file_store(t.path(), 8);
+    let (mut p, report) = reopen_pipeline(&cfg, store);
+    let src = p.src_proc();
+    let f_src = report.plan.frontier(src).clone();
+    assert!(
+        !f_src.contains(&Time::epoch(2)),
+        "the unacked epoch cannot be certified by the recovered marker"
+    );
+    for (tm, recs) in ext.replay_from(&f_src) {
+        p.sys.advance_input(src, tm);
+        for r in recs {
+            p.sys.push_input(src, tm, r);
+        }
+    }
+    p.sys.advance_input(src, Time::epoch(3));
+    p.run(5_000_000);
+    for ep in 3..EPOCHS {
+        offer_and_drive(&mut p, &mut ext, ep);
+    }
+    p.sys.close_input(src);
+    p.run(5_000_000);
+    assert_eq!(
+        canonical_output(&p.sys, p.collect_proc()),
+        expected,
+        "async crash-restart (ack_every {ack_every}, cap {batch_cap}) diverged from sync"
+    );
+}
+
+#[test]
+fn async_crash_with_unacked_tail_ack8() {
+    async_crash_with_unacked_tail(8, 1);
+}
+
+#[test]
+fn async_crash_with_unacked_tail_ack64() {
+    async_crash_with_unacked_tail(64, 8);
+}
+
+/// Satellite: a *live* `fail_proc` with staged-but-unacknowledged writes
+/// rolls back to the ack watermark — the in-memory mirror suffix beyond
+/// it is discarded with the staged ops, so the Fig. 6 solver restores the
+/// last acknowledged checkpoint, and the run still reconverges to the
+/// sync-mode output.
+#[test]
+fn live_failure_with_unacked_tail_rolls_back_to_acked_watermark() {
+    let sync_cfg = ShardedConfig { workers: 4, ..Default::default() };
+    let expected = expected_output(&sync_cfg);
+    let cfg = ShardedConfig {
+        persist_mode: PersistMode::Async { ack_every: 8 },
+        ..sync_cfg
+    };
+    let mut p = pipeline(&cfg);
+    let mut ext = ExternalInput::new();
+    for ep in 0..2 {
+        offer_and_drive(&mut p, &mut ext, ep);
+    }
+    p.sys.store.flush_staged(); // every shard's ↓0, ↓1 checkpoints acked
+    let victim = p.plan.proc(p.count, 2);
+    assert_eq!(p.sys.chain_len(victim), 2);
+
+    // Epoch 2 completes against the parked writer: count#2 takes its ↓2
+    // checkpoint, but the write never acks.
+    p.sys.store.pause_persistence();
+    offer_and_drive(&mut p, &mut ext, 2);
+    assert_eq!(p.sys.chain_len(victim), 3, "the ↓2 checkpoint is staged in the mirror");
+    assert!(p.sys.ack_lag() > 0);
+
+    p.sys.inject_failures(&[victim]);
+    assert_eq!(
+        p.sys.chain_len(victim),
+        2,
+        "injection discards the staged-unacked checkpoint from the mirror"
+    );
+    let rep = p.sys.recover();
+    assert_eq!(
+        rep.plan.frontier(victim),
+        &Frontier::upto_epoch(1),
+        "the solver lands on the acked watermark, not the staged ↓2 checkpoint"
+    );
+    p.sys.store.resume_persistence();
+
+    // The discarded suffix is simply re-executed: epoch 2's records in
+    // the victim's key range replay from the (non-failed) source's log,
+    // and the rest of the run is ordinary.
+    for ep in 3..EPOCHS {
+        offer_and_drive(&mut p, &mut ext, ep);
+    }
+    let src = p.src_proc();
+    p.sys.close_input(src);
+    p.run(5_000_000);
+    assert_eq!(
+        canonical_output(&p.sys, p.collect_proc()),
+        expected,
+        "live unacked-tail failure diverged from the sync-mode run"
+    );
 }
 
 #[test]

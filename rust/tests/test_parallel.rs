@@ -15,6 +15,7 @@ use falkirk::bench_support::sharded::{
     canonical_output, drive_workload, pipeline, ShardedConfig,
 };
 use falkirk::engine::{Delivery, ProcFactory, Record, ShardedEngine};
+use falkirk::ft::PersistMode;
 use falkirk::graph::Projection;
 use falkirk::operators::{shared_vec, CountByKey, Sink, Source};
 use falkirk::time::{Time, TimeDomain};
@@ -58,6 +59,42 @@ fn parallel_output_matches_sequential_across_threads_and_caps() {
                     "output diverged: threads={threads} batch_cap={batch_cap} \
                      two_stage={two_stage}"
                 );
+            }
+        }
+    }
+}
+
+/// The same workload with the FT write path taken off the compute hot
+/// path: workers stage writes for the background persistence writer
+/// instead of blocking on the store, and the observable output must stay
+/// byte-identical to the synchronous single-threaded run across the
+/// thread × cap grid.
+#[test]
+fn parallel_output_matches_sequential_under_async_persistence() {
+    for batch_cap in [1usize, 8] {
+        let base = ft_output(1, batch_cap, true, 8);
+        for threads in [2usize, 4] {
+            for ack_every in [1usize, 8] {
+                let mut p = pipeline(&ShardedConfig {
+                    workers: 8,
+                    two_stage: true,
+                    batch_cap,
+                    threads,
+                    persist_mode: PersistMode::Async { ack_every },
+                    ..Default::default()
+                });
+                let tp = drive_workload(&mut p, 11, EPOCHS, RECORDS, KEYS);
+                assert_eq!(tp.records, EPOCHS * RECORDS as u64);
+                assert!(p.sys.engine.is_quiescent());
+                assert_eq!(
+                    base,
+                    canonical_output(&p.sys, p.collect_proc()),
+                    "async persistence diverged: threads={threads} cap={batch_cap} \
+                     ack_every={ack_every}"
+                );
+                // The parallel drain's quiescence barrier settles the
+                // writer: nothing staged may remain once workers park.
+                assert_eq!(p.sys.ack_lag(), 0, "drain must end with a settled pipeline");
             }
         }
     }

@@ -21,7 +21,7 @@ use falkirk::bench_support::sharded::{
 use falkirk::engine::shard_of_record;
 use falkirk::frontier::Frontier;
 use falkirk::ft::recovery::RecoveryReport;
-use falkirk::ft::{FtStats, Policy};
+use falkirk::ft::{FtStats, PersistMode, Policy};
 use falkirk::time::Time;
 
 const EPOCHS: u64 = 4;
@@ -247,6 +247,47 @@ fn recovery_grid_is_byte_identical_across_batch_caps() {
     }
     // (b): equal across caps (two-stage cells compared).
     assert!(outputs.windows(2).all(|w| w[0] == w[1]), "output differs across batch caps");
+}
+
+/// Satellite: the fault-injection grid under `PersistMode::Async` —
+/// failures now land while writes may still sit staged and
+/// unacknowledged (sequential drains never flush, so injection genuinely
+/// exercises `discard_unacked` + acked-prefix availability; parallel
+/// drains flush at their quiescence barrier, exercising the settled
+/// path). Output must equal the synchronous run in every cell.
+#[test]
+fn recovery_grid_is_byte_identical_under_async_persistence() {
+    for batch_cap in [1usize, 8] {
+        for threads in [1usize, 2, 4] {
+            let sync_cfg =
+                ShardedConfig { workers: 4, two_stage: true, batch_cap, ..Default::default() };
+            let (clean_sync, _, _) = drive(&sync_cfg, 7, None);
+            let cfg = ShardedConfig {
+                threads,
+                persist_mode: PersistMode::Async { ack_every: 8 },
+                ..sync_cfg
+            };
+            let (clean_async, _, _) = drive(&cfg, 7, None);
+            assert_eq!(
+                clean_sync, clean_async,
+                "async clean run diverged: threads={threads} cap={batch_cap}"
+            );
+            let failures = [
+                Failure { shard: 0, epoch: 2, records_before: 0, presteps: 0 },
+                Failure { shard: 3, epoch: 1, records_before: RECORDS / 2, presteps: 0 },
+                Failure { shard: 2, epoch: 2, records_before: RECORDS / 2, presteps: 60 },
+            ];
+            for f in failures {
+                let (failed, stats, rep) = drive(&cfg, 7, Some(f));
+                assert!(rep.is_some());
+                assert_eq!(stats.recoveries, 1);
+                assert_eq!(
+                    clean_sync, failed,
+                    "async recovery diverged: threads={threads} cap={batch_cap} failure={f:?}"
+                );
+            }
+        }
+    }
 }
 
 /// Crashing every shard of the vertex still recovers (degenerates to the

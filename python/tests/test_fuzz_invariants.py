@@ -1,0 +1,205 @@
+"""Randomized model validation of the staged-persistence invariants the
+Rust fuzz oracle (rust/src/fuzz/oracle.rs) asserts after every recovery.
+
+The container cannot execute the Rust test-suite, so this file keeps the
+desk-check honest from the other side: a tiny executable model of the
+staged/acked/offered chain (ft/storage.rs + ft/harness.rs +
+ft/recovery.rs availability()) is driven over thousands of random
+histories, and the same invariants the Rust oracle checks are asserted
+on the model:
+
+  1. offered(p) is exactly the acked prefix of the mirror chain — every
+     offered checkpoint is durable (seq <= acked watermark), and nothing
+     acked is withheld;
+  2. acked(p) <= staged(p) at every step, and both are monotone outside
+     crashes;
+  3. the GC low watermark never passes the acked watermark — the monitor
+     learns of checkpoints only via pump (acked entries only), so GC can
+     never release state that recovery could still need;
+  4. discard_unacked (crash) leaves mirror == acked prefix and
+     staged == acked, and replayed history after the crash re-stages the
+     suffix with fresh (higher) sequence numbers.
+
+Stdlib only: run directly (``python3 python/tests/test_fuzz_invariants.py``)
+or under pytest.
+"""
+
+import random
+
+ACK_EVERY_CHOICES = (1, 2, 4, 16)
+N_HISTORIES = 2000
+N_STEPS = 120
+
+
+class ModelStore:
+    """Per-processor staged/acked watermark model of ft/storage.rs."""
+
+    def __init__(self, ack_every):
+        self.ack_every = ack_every
+        self.staged = 0  # next sequence number to assign
+        self.acked = 0   # watermark: seq <= acked are durable
+        self.pending = 0  # staged - acked, queued in the writer
+
+    def stage(self):
+        seq = self.staged + 1
+        self.staged = seq
+        self.pending += 1
+        return seq
+
+    def writer_drain_batch(self):
+        """Background writer applies up to ack_every ops, then acks."""
+        n = min(self.pending, self.ack_every)
+        self.pending -= n
+        self.acked += n
+
+    def flush(self):
+        """Staging barrier (Store::flush_staged)."""
+        self.pending = 0
+        self.acked = self.staged
+
+    def discard_unacked(self):
+        """Crash: queued-unapplied operations are dropped."""
+        self.pending = 0
+        self.staged = self.acked
+
+
+class ModelProc:
+    """Mirror chain + monitor view of one processor."""
+
+    def __init__(self, ack_every):
+        self.store = ModelStore(ack_every)
+        self.chain = []  # list of seq numbers, ascending (mirror of Xi records)
+        self.gc_watermark = 0  # number of chain entries the monitor released
+        self.monitor_seen = 0  # chain entries pumped to the monitor so far
+
+    def checkpoint(self):
+        self.chain.append(self.store.stage())
+
+    def offered(self):
+        """availability(): the acked prefix of the mirror chain."""
+        w = self.store.acked
+        k = 0
+        while k < len(self.chain) and self.chain[k] <= w:
+            k += 1
+        return self.chain[:k]
+
+    def pump_monitor(self):
+        """FtSystem::pump_monitor reports only acked Xi records."""
+        self.monitor_seen = len(self.offered())
+
+    def apply_gc(self, rng):
+        """Monitor releases some prefix of what it has seen."""
+        if self.monitor_seen > self.gc_watermark:
+            self.gc_watermark = rng.randint(self.gc_watermark, self.monitor_seen)
+
+    def crash(self):
+        """inject_failures: discard_unacked + mirror suffix truncation."""
+        self.store.discard_unacked()
+        self.chain = self.offered()
+
+
+def check_invariants(proc, tag):
+    store = proc.store
+    assert store.acked <= store.staged, f"{tag}: acked > staged"
+    assert store.staged - store.acked == store.pending, f"{tag}: pending gauge drift"
+
+    offered = proc.offered()
+    # Invariant 1: offered is a prefix of the mirror and entirely durable.
+    assert offered == proc.chain[: len(offered)], f"{tag}: offered not a mirror prefix"
+    assert all(s <= store.acked for s in offered), f"{tag}: offered an unacked checkpoint"
+    # ...and nothing acked is withheld: the first non-offered entry is unacked.
+    if len(offered) < len(proc.chain):
+        assert proc.chain[len(offered)] > store.acked, f"{tag}: withheld an acked checkpoint"
+    # Mirror chain sequence numbers ascend (chains ascend in frontier order;
+    # staging preserves per-processor FIFO, so seqs ascend too).
+    assert all(a < b for a, b in zip(proc.chain, proc.chain[1:])), f"{tag}: chain not ascending"
+
+    # Invariant 3: GC released <= monitor-seen <= offered <= durable.
+    assert proc.gc_watermark <= proc.monitor_seen, f"{tag}: GC ahead of monitor"
+    assert proc.monitor_seen <= len(offered), f"{tag}: monitor saw unacked state"
+    if proc.gc_watermark > 0:
+        released_top = proc.chain[proc.gc_watermark - 1]
+        assert released_top <= store.acked, f"{tag}: GC released past the acked watermark"
+
+
+def run_history(seed):
+    rng = random.Random(seed)
+    proc = ModelProc(rng.choice(ACK_EVERY_CHOICES))
+    acked_before = 0
+    for step in range(N_STEPS):
+        tag = f"seed {seed} step {step}"
+        op = rng.randrange(100)
+        if op < 45:
+            proc.checkpoint()
+        elif op < 70:
+            proc.store.writer_drain_batch()
+        elif op < 80:
+            proc.store.flush()
+        elif op < 88:
+            proc.pump_monitor()
+            proc.apply_gc(rng)
+        elif op < 96:
+            # Invariant 2: acked is monotone outside crashes...
+            assert proc.store.acked >= acked_before, f"{tag}: acked regressed without a crash"
+        else:
+            pre_offered = proc.offered()
+            pre_staged = proc.store.staged
+            proc.crash()
+            # Invariant 4: crash leaves exactly the acked prefix.
+            assert proc.chain == pre_offered, f"{tag}: crash kept unacked mirror entries"
+            assert proc.store.staged == proc.store.acked, f"{tag}: crash left staged != acked"
+            assert proc.store.pending == 0, f"{tag}: crash left queued ops"
+            # GC watermark must still be covered by the surviving chain.
+            assert proc.gc_watermark <= len(proc.chain), f"{tag}: GC released vanished state"
+            proc.monitor_seen = min(proc.monitor_seen, len(proc.chain))
+            # Replay re-stages the suffix with fresh sequence numbers.
+            for _ in range(rng.randrange(3)):
+                proc.checkpoint()
+                assert proc.chain[-1] > min(pre_staged, proc.store.acked), (
+                    f"{tag}: replayed checkpoint reused a stale sequence number"
+                )
+        acked_before = proc.store.acked
+        check_invariants(proc, tag)
+
+
+def test_staged_chain_invariants_over_random_histories():
+    for seed in range(N_HISTORIES):
+        run_history(seed)
+
+
+def test_sync_mode_keeps_watermarks_equal():
+    # Sync persistence = stage + immediate flush: offered is always the
+    # whole mirror, so a crash loses nothing from the chain.
+    rng = random.Random(7)
+    proc = ModelProc(1)
+    for step in range(200):
+        proc.checkpoint()
+        proc.store.flush()
+        assert proc.offered() == proc.chain, f"sync step {step}: withheld checkpoint"
+        if rng.randrange(10) == 0:
+            pre = list(proc.chain)
+            proc.crash()
+            assert proc.chain == pre, f"sync step {step}: crash lost acked state"
+        check_invariants(proc, f"sync step {step}")
+
+
+def test_gc_never_outruns_durability_even_when_pumped_eagerly():
+    # Pump + GC after every single stage: the monitor still only ever
+    # sees acked entries, so the released top stays durable throughout.
+    rng = random.Random(11)
+    proc = ModelProc(16)
+    for step in range(300):
+        proc.checkpoint()
+        proc.pump_monitor()
+        proc.apply_gc(rng)
+        if rng.randrange(4) == 0:
+            proc.store.writer_drain_batch()
+        check_invariants(proc, f"eager-gc step {step}")
+
+
+if __name__ == "__main__":
+    test_staged_chain_invariants_over_random_histories()
+    test_sync_mode_keeps_watermarks_equal()
+    test_gc_never_outruns_durability_even_when_pumped_eagerly()
+    print("ok: staged-chain invariants hold over "
+          f"{N_HISTORIES} random histories (+2 directed scenarios)")

@@ -36,6 +36,12 @@ COMMANDS:
   fig7      Run a worked rollback example.  --panel a|b|c (c)
   gc-demo   Drive the §4.2 GC monitor and print watermark advances.
             --epochs N (8)
+  fuzz      Seeded failure-simulation fuzzing: each seed generates a
+            dataflow, knobs, and a fault schedule, then checks the run
+            against a no-fault reference (see rust/src/fuzz/).
+            --seed N (1) --runs K (1) --steps S (5000000)
+            Consecutive seeds N..N+K; exit 1 lists each failing seed
+            (re-run with --seed <failing> --runs 1 to reproduce).
   selftest  Smoke-test all layers (engine, FT, recovery, kernels).
   help      Show this message.
 ";
@@ -111,6 +117,7 @@ pub fn run(raw: &[String]) -> i32 {
         "store" => cmd_store(&args),
         "fig7" => cmd_fig7(&args),
         "gc-demo" => cmd_gc_demo(&args),
+        "fuzz" => cmd_fuzz(&args),
         "selftest" => cmd_selftest(),
         "help" | "--help" | "-h" => {
             print!("{HELP}");
@@ -433,6 +440,47 @@ fn cmd_gc_demo(args: &Args) -> i32 {
         );
     }
     0
+}
+
+fn cmd_fuzz(args: &Args) -> i32 {
+    let seed = args.get_u64("seed", 1);
+    let runs = args.get_u64("runs", 1);
+    let steps = args.get_usize("steps", 5_000_000);
+    if runs == 0 {
+        eprintln!("--runs must be at least 1");
+        return 2;
+    }
+    let report = crate::fuzz::campaign(seed, runs, steps);
+    for v in &report.verdicts {
+        println!(
+            "seed {:>6} {} digest {:016x} recoveries {} | {} | {} | {}",
+            v.seed,
+            if v.pass { "PASS" } else { "FAIL" },
+            v.digest,
+            v.recoveries,
+            v.shape,
+            v.knobs,
+            v.faults
+        );
+        for viol in &v.violations {
+            println!("         - {viol}");
+        }
+    }
+    let failures = report.failures();
+    println!(
+        "fuzz: {}/{} seeds passed (campaign digest {:016x})",
+        report.verdicts.len() - failures.len(),
+        report.verdicts.len(),
+        report.digest()
+    );
+    if failures.is_empty() {
+        0
+    } else {
+        for v in &failures {
+            eprintln!("failing seed: {} (reproduce: falkirk fuzz --seed {} --runs 1)", v.seed, v.seed);
+        }
+        1
+    }
 }
 
 fn cmd_selftest() -> i32 {

@@ -26,13 +26,26 @@ impl FailureSchedule {
     }
 
     /// Random schedule: `n` crashes uniformly over `[0, horizon)` events
-    /// choosing victims from `candidates`.
+    /// choosing victims from `candidates`. An empty candidate set or a
+    /// zero horizon means "nothing can crash" and yields the empty
+    /// schedule — the fuzzer's generator reaches both corners routinely
+    /// (a topology with no eligible victims, a run too short to host a
+    /// crash), and they used to panic via `Rng::choose` / the old
+    /// `Rng::below` debug assertion.
     pub fn random(seed: u64, n: usize, horizon: u64, candidates: &[ProcId]) -> FailureSchedule {
+        if candidates.is_empty() || horizon == 0 {
+            return FailureSchedule::default();
+        }
         let mut rng = Rng::new(seed);
         let crashes = (0..n)
             .map(|_| (rng.below(horizon), *rng.choose(candidates)))
             .collect();
         FailureSchedule::new(crashes)
+    }
+
+    /// Whether any crashes remain to fire.
+    pub fn is_empty(&self) -> bool {
+        self.remaining() == 0
     }
 
     /// Victims due at-or-before virtual time `now` (consumed).
@@ -94,6 +107,34 @@ mod tests {
         let a = FailureSchedule::random(9, 5, 1000, &cands);
         let b = FailureSchedule::random(9, 5, 1000, &cands);
         assert_eq!(a.crashes, b.crashes);
+    }
+
+    /// Root cause (fuzzer seed-space corner): `random` with no eligible
+    /// victims called `Rng::choose(&[])` — a release-mode out-of-bounds
+    /// read. It must mean "no crashes", not "undefined behaviour".
+    #[test]
+    fn random_with_no_candidates_is_empty() {
+        let s = FailureSchedule::random(3, 5, 1000, &[]);
+        assert!(s.is_empty());
+        assert_eq!(s.remaining(), 0);
+    }
+
+    /// Root cause: a zero-event horizon fed `Rng::below(0)`, which
+    /// debug-asserted (and silently returned 0 in release, scheduling
+    /// every crash at event 0 of a run that has no events).
+    #[test]
+    fn random_with_zero_horizon_is_empty() {
+        let cands = [ProcId(0), ProcId(1)];
+        let mut s = FailureSchedule::random(3, 4, 0, &cands);
+        assert!(s.is_empty());
+        assert!(s.due(u64::MAX).is_empty());
+    }
+
+    #[test]
+    fn zero_crashes_is_empty() {
+        let cands = [ProcId(0)];
+        let s = FailureSchedule::random(1, 0, 100, &cands);
+        assert!(s.is_empty());
     }
 
     #[test]

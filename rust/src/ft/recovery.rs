@@ -416,19 +416,35 @@ impl FtSystem {
                     ft.drain_acked_marks(store.acked_seq(p.0));
                     ft.input_mark = shrunk.clone();
                     let key = Key { proc: p.0, kind: Kind::InputFrontier, tag: 0 };
-                    let seq = if shrunk.is_bottom() {
-                        store.stage_delete(key)
+                    let (seq, durable) = if shrunk.is_bottom() {
+                        (store.stage_delete(key), Frontier::Bottom)
                     } else {
-                        store
-                            .stage_put(key, shrunk.to_bytes())
-                            .expect("a marker frontier is never oversized")
+                        match store.stage_put(key, shrunk.to_bytes()) {
+                            Ok(seq) => (seq, shrunk.clone()),
+                            // The store refuses the shrunk marker (a
+                            // byte limit small enough to reject a
+                            // frontier blob — the same oversized-put
+                            // regime whose log refusals forced this
+                            // rollback in the first place). Deleting
+                            // the durable marker is always expressible
+                            // and strictly conservative: a cold restart
+                            // or crash-settle sees no marker and offers
+                            // ∅ for this source instead of a stale wide
+                            // frontier certifying truncated logs.
+                            Err(_) => {
+                                ft.storage_errors += 1;
+                                self.stats.storage_errors += 1;
+                                (store.stage_delete(key), Frontier::Bottom)
+                            }
+                        }
                     };
                     // The shrink rides the pending queue like any other
                     // marker version: if a later crash discards it
                     // unacked, the crash-settle intersection still lands
-                    // on the shrunk value — matching the truncated
-                    // mirrors below, which is what availability offers.
-                    ft.mark_pending.push((seq, shrunk));
+                    // on the shrunk (or deleted) value — matching the
+                    // truncated mirrors below, which is what
+                    // availability offers.
+                    ft.mark_pending.push((seq, durable));
                 }
             }
             // The chain ascends, so the kept set is a prefix. Per tag the
@@ -664,6 +680,55 @@ mod tests {
         assert_eq!(contents.len(), 2);
         assert_eq!(contents[0].1, vec![Record::kv(0, 7.0)]);
         assert_eq!(contents[1].1, vec![Record::kv(0, 10.0)]);
+    }
+
+    /// Root cause (fuzzer: oversized-put fault + forced source
+    /// rollback): the §3.6 reset shrinks a logging source's durable
+    /// input-frontier marker to the plan frontier with
+    /// `stage_put(..).expect("a marker frontier is never oversized")` —
+    /// but under a byte limit small enough to refuse a frontier blob
+    /// (the same limit whose log refusals force such rollbacks) the
+    /// `expect` panicked *mid-recovery*. The refusal must degrade:
+    /// delete the durable marker (always expressible, strictly
+    /// conservative — a restart then offers ∅ for the source) and count
+    /// a storage error.
+    #[test]
+    fn oversized_marker_shrink_degrades_to_delete() {
+        let (mut sys, src, _sum, _buf) = fig3_system();
+        for ep in 0..2u64 {
+            sys.advance_input(src, Time::epoch(ep));
+            sys.push_input(src, Time::epoch(ep), Record::Int(ep as i64 + 1));
+            sys.advance_input(src, Time::epoch(ep + 1));
+            sys.run_to_quiescence(1000);
+        }
+        let mark_key = Key { proc: src.0, kind: Kind::InputFrontier, tag: 0 };
+        assert!(sys.store.get(&mark_key).is_some(), "marker advanced while writable");
+        // The oversized-put regime arrives: every value is now refused.
+        sys.store.set_max_value_len(2);
+        // A plan that keeps the source at epoch 0 (downstream constraints
+        // can force this on non-failed sources when a persist gap voids
+        // their replay offer).
+        let plan = RollbackPlan {
+            f: vec![Frontier::upto_epoch(0), Frontier::Top, Frontier::Top],
+            f_n: vec![Frontier::upto_epoch(0), Frontier::Top, Frontier::Top],
+        };
+        let errors_before = sys.stats.storage_errors;
+        sys.apply_plan(&plan); // panicked before the fix
+        assert_eq!(
+            sys.ft[src.0 as usize].input_mark,
+            Frontier::upto_epoch(0),
+            "in-memory marker reflects the shrink"
+        );
+        assert!(sys.stats.storage_errors > errors_before, "refusal is counted");
+        sys.store.flush_staged();
+        assert!(
+            sys.store.get(&mark_key).is_none(),
+            "durable marker deleted: a stale wide marker must never certify truncated logs"
+        );
+        // A later crash settles the marker on the conservative ∅ offer.
+        sys.inject_failures(&[src]);
+        assert!(sys.ft[src.0 as usize].input_mark.is_bottom());
+        sys.recover();
     }
 
     /// Recovered output must equal the failure-free run (the refinement

@@ -1,0 +1,484 @@
+//! Seeded generation of random dataflow shapes and configuration knobs
+//! (fuzzer stage 1 — see the [module docs](crate::fuzz)).
+//!
+//! One [`Rng`] stream drives every choice, so a seed is a complete,
+//! replayable description of the run: the topology (operator vocabulary,
+//! shard width, optional two-input join, optional eager seq-domain
+//! tail), the per-processor policies, and the engine/storage knobs. The
+//! generated family deliberately brackets the hand-written suites
+//! (`bench_support::sharded`, `test_sharded_recovery`,
+//! `test_crash_restart`, `test_seq_replay`) so every fuzz run exercises
+//! machinery whose intended semantics an existing test already pins
+//! down — what the fuzzer adds is the *product* of the spaces, which no
+//! hand-written grid covers.
+
+use crate::engine::sharded::ProcFactory;
+use crate::engine::{Delivery, Record};
+use crate::ft::{FtSystem, PersistMode, Policy, Store};
+use crate::graph::sharding::{LogicalId, ShardPlan, ShardedBuilder};
+use crate::graph::Projection;
+use crate::operators::{Buffer, CountByKey, Filter, Join, Map, Source, SumByTime};
+use crate::time::TimeDomain;
+use crate::util::rng::Rng;
+use std::sync::Arc;
+
+/// Optional stage between the source and the sharded aggregation.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum MidKind {
+    /// Source feeds the aggregation directly.
+    None,
+    /// Rekeying map (`key*3+1`): the mid→agg bundle becomes a genuine
+    /// W×W cross-shard exchange.
+    MapRekey,
+    /// Drops odd keys: downstream sees a strict subset (exercises
+    /// frontiers completing with no records at some shards).
+    FilterHalf,
+}
+
+/// The sharded aggregation operator.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum AggKind {
+    /// Per-key sums per epoch ([`CountByKey`]).
+    CountByKey,
+    /// One total per epoch and shard ([`SumByTime`]).
+    SumByTime,
+}
+
+/// A randomly generated dataflow topology.
+///
+/// ```text
+///   src ───────────► [mid#0..W]? ──► agg#0..W ──► collect
+///   src2? ──► join#0..W ──────┘          └─(per-ckpt)─► etail?  (seq)
+/// ```
+#[derive(Clone, Debug)]
+pub struct Shape {
+    /// Shards per sharded stage (1, 2, 4 or 8).
+    pub workers: u32,
+    /// Optional rekey/filter stage (single-source shapes only).
+    pub mid: MidKind,
+    /// Two-input symmetric hash [`Join`] fed by a second source.
+    pub join: bool,
+    /// Aggregation operator of the sharded `agg` stage.
+    pub agg: AggKind,
+    /// Seq-domain eager consumer behind a per-checkpoint edge (the
+    /// `test_seq_replay` bridge pattern, sharded-upstream variant).
+    pub eager_tail: bool,
+    /// Input epochs to drive.
+    pub epochs: u64,
+    /// Records offered per source per epoch.
+    pub records_per_epoch: usize,
+    /// Key universe (keys cycle `0..keys`).
+    pub keys: u64,
+}
+
+impl Shape {
+    /// Draw a shape from the seed stream.
+    pub fn generate(rng: &mut Rng) -> Shape {
+        let join = rng.chance(0.25);
+        let workers = *rng.choose(&[1u32, 2, 4, 8]);
+        let mid = if join {
+            MidKind::None
+        } else {
+            *rng.choose(&[MidKind::None, MidKind::MapRekey, MidKind::FilterHalf])
+        };
+        let agg =
+            if rng.chance(0.25) { AggKind::SumByTime } else { AggKind::CountByKey };
+        let eager_tail = rng.chance(0.3);
+        let epochs = rng.range(2, 5);
+        // Join output is quadratic in per-key duplicates: keep its
+        // batches small so fuzz runs stay fast.
+        let records_per_epoch =
+            if join { 6 + rng.index(7) } else { 8 + rng.index(17) };
+        let keys = workers as u64 * (1 + rng.below(3));
+        Shape { workers, mid, join, agg, eager_tail, epochs, records_per_epoch, keys }
+    }
+
+    /// Compact single-line description (campaign logs, corpus records).
+    pub fn describe(&self) -> String {
+        format!(
+            "W={} mid={:?} join={} agg={:?} etail={} epochs={} recs={} keys={}",
+            self.workers,
+            self.mid,
+            self.join,
+            self.agg,
+            self.eager_tail,
+            self.epochs,
+            self.records_per_epoch,
+            self.keys
+        )
+    }
+}
+
+/// Randomly drawn engine/storage/policy knobs for one run.
+#[derive(Clone, Debug)]
+pub struct Knobs {
+    /// Channel coalescing cap.
+    pub batch_cap: usize,
+    /// Worker threads (1 = sequential engine; >1 = parallel executor,
+    /// crashes then land at drain boundaries only).
+    pub threads: usize,
+    /// Staged-writer discipline of the store.
+    pub persist_mode: PersistMode,
+    /// Virtual write cost.
+    pub write_cost: u64,
+    /// Durable file-backed WAL instead of the in-memory store. Forced
+    /// on by fault plans that need a cold restart.
+    pub durable: bool,
+    /// Group-commit threshold of the durable WAL.
+    pub flush_every_n: usize,
+    /// Policy of the `mid` stage (when present).
+    pub mid_policy: Policy,
+    /// Policy of the `join` stage (when present).
+    pub join_policy: Policy,
+    /// Policy of the `agg` shards.
+    pub agg_policy: Policy,
+    /// Policy of the `collect` buffer.
+    pub collect_policy: Policy,
+    /// Pump the §4.2 GC monitor every epoch.
+    pub gc: bool,
+}
+
+impl Knobs {
+    /// Draw knobs from the seed stream. `shape` constrains the policy
+    /// space: an eager seq tail hangs off a per-checkpoint edge, whose
+    /// φ counts only chain policies record — `agg` is then forced to a
+    /// logging lazy policy (`FullHistory` has no static projection for
+    /// such an edge; see `FAILURE_MODES.md`).
+    pub fn generate(rng: &mut Rng, shape: &Shape) -> Knobs {
+        let batch_cap = *rng.choose(&[1usize, 2, 8, 64]);
+        // Bias toward 1: only the sequential engine can crash mid-drain.
+        let threads = *rng.choose(&[1usize, 1, 2, 4]);
+        let persist_mode = if rng.chance(0.5) {
+            PersistMode::Sync
+        } else {
+            PersistMode::Async { ack_every: *rng.choose(&[1usize, 4, 16]) }
+        };
+        let write_cost = *rng.choose(&[0u64, 1, 10]);
+        let durable = rng.chance(0.4);
+        let flush_every_n = *rng.choose(&[1usize, 4, 8]);
+        let mid_policy = *rng.choose(&[
+            Policy::LogOutputs,
+            Policy::Lazy { every: 1, log_outputs: true },
+            Policy::FullHistory,
+        ]);
+        let join_policy = *rng.choose(&[
+            Policy::Lazy { every: 1, log_outputs: true },
+            Policy::FullHistory,
+        ]);
+        let every = 1 + rng.below(2);
+        let agg_policy = if shape.eager_tail {
+            Policy::Lazy { every, log_outputs: true }
+        } else {
+            *rng.choose(&[
+                Policy::Lazy { every, log_outputs: true },
+                Policy::Lazy { every, log_outputs: false },
+                Policy::FullHistory,
+            ])
+        };
+        let collect_policy = Policy::Lazy { every: 1, log_outputs: false };
+        let gc = rng.chance(0.3);
+        Knobs {
+            batch_cap,
+            threads,
+            persist_mode,
+            write_cost,
+            durable,
+            flush_every_n,
+            mid_policy,
+            join_policy,
+            agg_policy,
+            collect_policy,
+            gc,
+        }
+    }
+
+    /// The baseline the oracle compares against: record-at-a-time,
+    /// sequential, synchronous, in-memory — and the same policies, so
+    /// checkpoint cadence never influences what "correct output" means
+    /// (it must not, which is exactly what comparing across knobs
+    /// checks).
+    pub fn reference(&self) -> Knobs {
+        Knobs {
+            batch_cap: 1,
+            threads: 1,
+            persist_mode: PersistMode::Sync,
+            durable: false,
+            gc: false,
+            ..self.clone()
+        }
+    }
+
+    /// Compact single-line description (campaign logs, corpus records).
+    pub fn describe(&self) -> String {
+        format!(
+            "cap={} threads={} persist={:?} cost={} durable={} flush={} agg={:?} gc={}",
+            self.batch_cap,
+            self.threads,
+            self.persist_mode,
+            self.write_cost,
+            self.durable,
+            self.flush_every_n,
+            self.agg_policy,
+            self.gc
+        )
+    }
+}
+
+/// A built pipeline plus the logical handles the driver needs.
+pub struct Built {
+    pub sys: FtSystem,
+    pub plan: Arc<ShardPlan>,
+    /// External-input sources, in declaration order (`src`[, `src2`]).
+    pub sources: Vec<LogicalId>,
+    pub collect: LogicalId,
+    pub etail: Option<LogicalId>,
+    /// Policy per logical vertex, in add order (what the builder handed
+    /// [`FtSystem`]; the driver needs it to classify processors for
+    /// [`FtSystem::rebuild_monitor`]).
+    pub policies: Vec<Policy>,
+    /// Worker-group assignment for parallel drains.
+    pub groups: Vec<usize>,
+    pub threads: usize,
+}
+
+impl Built {
+    /// Drain to quiescence under the configured thread count.
+    pub fn run(&mut self, max_steps: usize) -> usize {
+        if self.threads > 1 {
+            self.sys.run_to_quiescence_parallel(&self.groups, self.threads, max_steps)
+        } else {
+            self.sys.run_to_quiescence(max_steps)
+        }
+    }
+
+    /// The policy of a physical processor (its logical vertex's).
+    pub fn policy_of(&self, p: crate::graph::ProcId) -> Policy {
+        self.policies[self.plan.logical_of(p).0 .0 as usize]
+    }
+
+    /// A fresh §4.2 GC monitor classified exactly as
+    /// [`FtSystem::rebuild_monitor`] documents: `stateless` = no durable
+    /// chain to track, `logs` = upstream logs its outputs.
+    pub fn monitor(&self) -> crate::ft::monitor::Monitor {
+        let (mut stateless, mut logs) = (Vec::new(), Vec::new());
+        for p in self.plan.topo.proc_ids() {
+            let pol = self.policy_of(p);
+            stateless.push(!pol.has_chain());
+            logs.push(pol.logs_outputs());
+        }
+        self.sys.rebuild_monitor(stateless, logs)
+    }
+}
+
+fn rekey(r: Record) -> Record {
+    match r {
+        Record::Kv { key, val } => Record::Kv { key: key * 3 + 1, val: val * 2.0 },
+        other => other,
+    }
+}
+
+fn keep_even(r: &Record) -> bool {
+    match r {
+        Record::Kv { key, .. } => key % 2 == 0,
+        _ => true,
+    }
+}
+
+/// Build the generated job against `store` (fresh system).
+pub fn build(shape: &Shape, knobs: &Knobs, store: Store) -> Built {
+    build_inner(shape, knobs, store, None)
+}
+
+/// Cold-restart the generated job from a reopened durable store; the
+/// caller resupplies external inputs beyond each source's recovered
+/// frontier (`report.plan.frontier(..)`), exactly as
+/// [`crate::bench_support::sharded::reopen_pipeline`] documents.
+pub fn reopen(
+    shape: &Shape,
+    knobs: &Knobs,
+    store: Store,
+) -> (Built, crate::ft::recovery::RecoveryReport) {
+    let mut report = None;
+    let b = build_inner(shape, knobs, store, Some(&mut report));
+    (b, report.expect("reopen produced a recovery report"))
+}
+
+fn build_inner(
+    shape: &Shape,
+    knobs: &Knobs,
+    store: Store,
+    reopen: Option<&mut Option<crate::ft::recovery::RecoveryReport>>,
+) -> Built {
+    store.set_persist_mode(knobs.persist_mode);
+    let mut b = ShardedBuilder::new();
+    let mut factories: Vec<ProcFactory> = Vec::new();
+    let mut policies: Vec<Policy> = Vec::new();
+
+    let src = b.add_proc("src", TimeDomain::EPOCH);
+    factories.push(Box::new(|_| Box::new(Source)));
+    policies.push(Policy::LogOutputs);
+    let mut sources = vec![src];
+
+    let prev = if shape.join {
+        let src2 = b.add_proc("src2", TimeDomain::EPOCH);
+        factories.push(Box::new(|_| Box::new(Source)));
+        policies.push(Policy::LogOutputs);
+        sources.push(src2);
+        let join = b.add_sharded("join", TimeDomain::EPOCH, shape.workers);
+        factories.push(Box::new(|_| Box::new(Join::default())));
+        policies.push(knobs.join_policy);
+        // Connect order fixes the ports: src is the left side.
+        b.connect(src, join, Projection::Identity);
+        b.connect(src2, join, Projection::Identity);
+        join
+    } else {
+        match shape.mid {
+            MidKind::None => src,
+            MidKind::MapRekey => {
+                let mid = b.add_sharded("mid", TimeDomain::EPOCH, shape.workers);
+                factories.push(Box::new(|_| Box::new(Map(rekey))));
+                policies.push(knobs.mid_policy);
+                b.connect(src, mid, Projection::Identity);
+                mid
+            }
+            MidKind::FilterHalf => {
+                let mid = b.add_sharded("mid", TimeDomain::EPOCH, shape.workers);
+                factories.push(Box::new(|_| Box::new(Filter(keep_even))));
+                policies.push(knobs.mid_policy);
+                b.connect(src, mid, Projection::Identity);
+                mid
+            }
+        }
+    };
+
+    let agg = b.add_sharded("agg", TimeDomain::EPOCH, shape.workers);
+    match shape.agg {
+        AggKind::CountByKey => {
+            factories.push(Box::new(|_| Box::new(CountByKey::default())))
+        }
+        AggKind::SumByTime => factories.push(Box::new(|_| Box::new(SumByTime::default()))),
+    }
+    policies.push(knobs.agg_policy);
+    b.connect(prev, agg, Projection::Identity);
+
+    let collect = b.add_proc("collect", TimeDomain::EPOCH);
+    factories.push(Box::new(|_| Box::new(Buffer::default())));
+    policies.push(knobs.collect_policy);
+    b.connect(agg, collect, Projection::Identity);
+
+    let mut etail = None;
+    if shape.eager_tail {
+        let et = b.add_proc("etail", TimeDomain::Seq);
+        factories.push(Box::new(|_| Box::new(Buffer::default())));
+        policies.push(Policy::Eager);
+        b.connect(agg, et, Projection::PerCheckpoint);
+        etail = Some(et);
+    }
+
+    let plan = Arc::new(b.build().expect("generated topology is well-formed"));
+    let sys = match reopen {
+        None => FtSystem::new_sharded_with_cap(
+            &plan,
+            factories,
+            &policies,
+            Delivery::Fifo,
+            store,
+            knobs.batch_cap,
+        ),
+        Some(slot) => {
+            let (sys, report) = FtSystem::reopen_sharded(
+                &plan,
+                factories,
+                &policies,
+                Delivery::Fifo,
+                store,
+                knobs.batch_cap,
+            );
+            *slot = Some(report);
+            sys
+        }
+    };
+    let threads = knobs.threads.max(1);
+    let groups = crate::engine::shard_groups(&plan, threads);
+    Built { sys, plan, sources, collect, etail, policies, groups, threads }
+}
+
+/// The deterministic record batch source `source` offers at epoch `ep`.
+/// Keys cycle `0..keys`; values are small integers so every downstream
+/// f64 aggregate is exact and order-independent (the property that makes
+/// byte-equality a sound oracle).
+pub fn epoch_batch(seed: u64, source: usize, ep: u64, shape: &Shape) -> Vec<Record> {
+    let mut rng = Rng::new(
+        seed ^ ep
+            .wrapping_mul(0x9E37_79B9_7F4A_7C15)
+            .wrapping_add(source as u64 * 0x517C_C1B7_2722_0A95),
+    );
+    (0..shape.records_per_epoch)
+        .map(|i| Record::kv((i as u64 % shape.keys) as i64, rng.below(50) as f64))
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shape_and_knobs_are_seed_deterministic() {
+        for seed in [0u64, 1, 7, 99] {
+            let mut a = Rng::new(seed);
+            let mut b = Rng::new(seed);
+            let sa = Shape::generate(&mut a);
+            let sb = Shape::generate(&mut b);
+            assert_eq!(sa.describe(), sb.describe());
+            let ka = Knobs::generate(&mut a, &sa);
+            let kb = Knobs::generate(&mut b, &sb);
+            assert_eq!(ka.describe(), kb.describe());
+        }
+    }
+
+    #[test]
+    fn eager_tail_forces_logging_chain_upstream() {
+        for seed in 0..200u64 {
+            let mut rng = Rng::new(seed);
+            let shape = Shape::generate(&mut rng);
+            let knobs = Knobs::generate(&mut rng, &shape);
+            if shape.eager_tail {
+                match knobs.agg_policy {
+                    Policy::Lazy { log_outputs, .. } => assert!(log_outputs),
+                    other => panic!("eager tail over non-chain agg policy {other:?}"),
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn generated_shapes_build_and_run_clean() {
+        for seed in [3u64, 17, 42] {
+            let mut rng = Rng::new(seed);
+            let shape = Shape::generate(&mut rng);
+            let knobs = Knobs::generate(&mut rng, &shape).reference();
+            let mut built = build(&shape, &knobs, Store::new(knobs.write_cost));
+            for ep in 0..shape.epochs {
+                for (i, &s) in built.sources.clone().iter().enumerate() {
+                    let sp = built.plan.proc(s, 0);
+                    built.sys.advance_input(sp, crate::time::Time::epoch(ep));
+                    for r in epoch_batch(seed, i, ep, &shape) {
+                        built.sys.push_input(sp, crate::time::Time::epoch(ep), r);
+                    }
+                    built.sys.advance_input(sp, crate::time::Time::epoch(ep + 1));
+                }
+                built.run(5_000_000);
+            }
+            for &s in &built.sources.clone() {
+                let sp = built.plan.proc(s, 0);
+                built.sys.close_input(sp);
+            }
+            built.run(5_000_000);
+            let out = crate::bench_support::sharded::canonical_output(
+                &built.sys,
+                built.plan.proc(built.collect, 0),
+            );
+            assert!(!out.is_empty(), "seed {seed} produced no output");
+        }
+    }
+}

@@ -1,0 +1,597 @@
+//! Seeded failure-simulation fuzzer (`falkirk fuzz`).
+//!
+//! One [`crate::util::rng::Rng`] seed deterministically drives three
+//! generators and a driver:
+//!
+//! 1. [`gen`] — a random dataflow over the existing operator vocabulary
+//!    ([`crate::operators::Map`]/[`crate::operators::Filter`]/
+//!    [`crate::operators::SumByTime`]/[`crate::operators::CountByKey`]/
+//!    [`crate::operators::Join`], sharded W ∈ {1,2,4,8}, optional
+//!    two-stage and eager seq-domain tail) plus random engine/storage
+//!    knobs (batch cap, threads, [`crate::ft::PersistMode`], WAL group
+//!    commit, per-vertex [`crate::ft::Policy`]).
+//! 2. [`schedule`] — a random fault plan over the [`crate::failure`]
+//!    machinery: multi-victim crashes in virtual event time behind a
+//!    [`crate::failure::DetectorModel`], cold crash-restarts
+//!    ([`crate::ft::FtSystem::reopen_sharded`]) with optionally torn WAL
+//!    tails, staged-unacked-tail discards, oversized-value limits, and a
+//!    second failure injected between a recovery and its drain.
+//! 3. [`oracle`] — structural invariants checked after every drain and
+//!    recovery (mirror ⊆ offered, GC ≤ acked, resident-byte
+//!    accounting, …).
+//!
+//! The headline check is the paper's own claim (§3–§4): after any
+//! sequence of failures and recoveries, the sink's canonical output is
+//! **byte-identical** to a no-fault reference run of the same seed —
+//! executed record-at-a-time, single-threaded, synchronously persisted,
+//! so the comparison simultaneously proves failure transparency *and*
+//! knob-independence. The one documented exception: a run whose
+//! oversized-value limit actually refused writes is only held to
+//! graceful degradation (structural invariants, bounded drains), since
+//! refused durability legitimately costs replay completeness — see
+//! `FAILURE_MODES.md` next to this module for the full catalog.
+//!
+//! Every run is bit-for-bit reproducible from its seed; failing seeds
+//! are recorded under `rust/tests/corpus/` and replayed by
+//! `test_fuzz_corpus` (see `ft/README.md` for the recording workflow).
+
+pub mod gen;
+pub mod oracle;
+pub mod schedule;
+
+pub use gen::{Knobs, Shape};
+pub use schedule::FaultPlan;
+
+use crate::bench_support::sharded::canonical_output;
+use crate::failure::FailureSchedule;
+use crate::ft::external::ExternalInput;
+use crate::ft::monitor::Monitor;
+use crate::ft::{FileBackendOptions, Store};
+use crate::graph::ProcId;
+use crate::time::Time;
+use crate::util::rng::Rng;
+use crate::util::tmp::TempDir;
+use std::path::Path;
+
+/// Everything one fuzz run decided and concluded.
+#[derive(Clone, Debug)]
+pub struct RunVerdict {
+    pub seed: u64,
+    pub pass: bool,
+    /// FNV-1a digest of the run's shape, knobs, faults, outputs, and
+    /// violations — the "same seed ⇒ same everything" fingerprint.
+    pub digest: u64,
+    pub shape: String,
+    pub knobs: String,
+    pub faults: String,
+    /// Recoveries performed (scheduled crashes, pause victims, doubles;
+    /// cold restarts count via their all-processors recovery).
+    pub recoveries: u64,
+    /// Oracle findings, empty on a pass. A panic in the run surfaces as
+    /// a single `panic: …` entry.
+    pub violations: Vec<String>,
+}
+
+/// A batch of [`RunVerdict`]s from consecutive seeds.
+#[derive(Clone, Debug, Default)]
+pub struct CampaignReport {
+    pub verdicts: Vec<RunVerdict>,
+}
+
+impl CampaignReport {
+    pub fn all_pass(&self) -> bool {
+        self.verdicts.iter().all(|v| v.pass)
+    }
+
+    pub fn failures(&self) -> Vec<&RunVerdict> {
+        self.verdicts.iter().filter(|v| !v.pass).collect()
+    }
+
+    /// Combined fingerprint over every verdict.
+    pub fn digest(&self) -> u64 {
+        let mut h = FNV_OFFSET;
+        for v in &self.verdicts {
+            fnv(&mut h, &v.seed.to_le_bytes());
+            fnv(&mut h, &v.digest.to_le_bytes());
+        }
+        h
+    }
+}
+
+const FNV_OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
+
+fn fnv(h: &mut u64, bytes: &[u8]) {
+    for &b in bytes {
+        *h ^= b as u64;
+        *h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+}
+
+/// Run `runs` consecutive seeds starting at `seed`. A panicking run is
+/// caught and reported as a failing verdict rather than aborting the
+/// campaign.
+pub fn campaign(seed: u64, runs: u64, max_steps: usize) -> CampaignReport {
+    let mut report = CampaignReport::default();
+    for k in 0..runs {
+        let s = seed.wrapping_add(k);
+        let verdict =
+            match std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| run_one(s, max_steps)))
+            {
+                Ok(v) => v,
+                Err(payload) => {
+                    let msg = payload
+                        .downcast_ref::<&str>()
+                        .map(|s| s.to_string())
+                        .or_else(|| payload.downcast_ref::<String>().cloned())
+                        .unwrap_or_else(|| "<non-string panic payload>".to_string());
+                    let mut h = FNV_OFFSET;
+                    fnv(&mut h, msg.as_bytes());
+                    RunVerdict {
+                        seed: s,
+                        pass: false,
+                        digest: h,
+                        shape: String::new(),
+                        knobs: String::new(),
+                        faults: String::new(),
+                        recoveries: 0,
+                        violations: vec![format!("panic: {msg}")],
+                    }
+                }
+            };
+        report.verdicts.push(verdict);
+    }
+    report
+}
+
+/// Execute one seed end to end: generate, run the no-fault reference,
+/// run the faulted execution, and judge it.
+pub fn run_one(seed: u64, max_steps: usize) -> RunVerdict {
+    let mut rng = Rng::new(seed);
+    let shape = Shape::generate(&mut rng);
+    let mut knobs = Knobs::generate(&mut rng, &shape);
+
+    // ---- Reference run (no faults; record-at-a-time, sequential,
+    // synchronous, in-memory; same shape, policies, and inputs). Its
+    // plan also tells the fault generator which processors exist.
+    let ref_knobs = knobs.reference();
+    let mut reference = gen::build(&shape, &ref_knobs, Store::new(ref_knobs.write_cost));
+    let candidates: Vec<ProcId> = reference.plan.topo.proc_ids().collect();
+    let faults = FaultPlan::generate(&mut rng, &shape, &candidates);
+    faults.reconcile(&mut knobs);
+
+    let mut violations: Vec<String> = Vec::new();
+    for ep in 0..shape.epochs {
+        offer_epoch(&mut reference, None, seed, ep, &shape);
+        let steps = reference.run(max_steps);
+        if steps >= max_steps {
+            violations.push(format!("reference: epoch {ep} drain did not quiesce"));
+        }
+    }
+    close_all(&mut reference);
+    reference.run(max_steps);
+    let ref_collect = canonical_output(&reference.sys, reference.plan.proc(reference.collect, 0));
+    let ref_etail = reference
+        .etail
+        .map(|e| canonical_output(&reference.sys, reference.plan.proc(e, 0)));
+    drop(reference);
+
+    // ---- Faulted run.
+    let mut d = Driver::new(seed, &shape, &knobs, &faults, max_steps);
+    d.drive();
+    violations.extend(d.violations);
+
+    let out_collect = canonical_output(&d.built.sys, d.built.plan.proc(d.built.collect, 0));
+    let out_etail =
+        d.built.etail.map(|e| canonical_output(&d.built.sys, d.built.plan.proc(e, 0)));
+
+    let storage_errors: u64 =
+        d.built.plan.topo.proc_ids().map(|p| d.built.sys.storage_errors(p)).sum();
+    let degraded = faults.oversize.is_some() && storage_errors > 0;
+    if degraded {
+        // Refused durable writes legitimately cost replay completeness;
+        // the run is held to graceful degradation only (structural
+        // invariants above, plus having drained at all).
+    } else {
+        if out_collect != ref_collect {
+            violations.push(format!(
+                "sink output diverges from no-fault reference ({} vs {} bytes)",
+                out_collect.len(),
+                ref_collect.len()
+            ));
+        }
+        if out_etail != ref_etail {
+            violations.push("eager seq tail diverges from no-fault reference".to_string());
+        }
+    }
+
+    let mut h = FNV_OFFSET;
+    fnv(&mut h, shape.describe().as_bytes());
+    fnv(&mut h, knobs.describe().as_bytes());
+    fnv(&mut h, faults.describe().as_bytes());
+    fnv(&mut h, &ref_collect);
+    fnv(&mut h, &out_collect);
+    if let Some(b) = &out_etail {
+        fnv(&mut h, b);
+    }
+    for v in &violations {
+        fnv(&mut h, v.as_bytes());
+    }
+
+    RunVerdict {
+        seed,
+        pass: violations.is_empty(),
+        digest: h,
+        shape: shape.describe(),
+        knobs: knobs.describe(),
+        faults: faults.describe(),
+        recoveries: d.recoveries,
+        violations,
+    }
+}
+
+/// Offer epoch `ep`'s batches to every source (and, when driving the
+/// faulted run, to its acknowledged-external-input services).
+fn offer_epoch(
+    built: &mut gen::Built,
+    mut exts: Option<&mut Vec<ExternalInput>>,
+    seed: u64,
+    ep: u64,
+    shape: &Shape,
+) {
+    for (i, &s) in built.sources.clone().iter().enumerate() {
+        let sp = built.plan.proc(s, 0);
+        let batch = gen::epoch_batch(seed, i, ep, shape);
+        if let Some(exts) = exts.as_deref_mut() {
+            exts[i].offer(Time::epoch(ep), batch.clone());
+        }
+        built.sys.advance_input(sp, Time::epoch(ep));
+        for r in batch {
+            built.sys.push_input(sp, Time::epoch(ep), r);
+        }
+        built.sys.advance_input(sp, Time::epoch(ep + 1));
+    }
+}
+
+fn close_all(built: &mut gen::Built) {
+    for &s in &built.sources.clone() {
+        let sp = built.plan.proc(s, 0);
+        built.sys.close_input(sp);
+    }
+}
+
+/// Chop `n` bytes off the newest WAL segment (the power-loss torn-tail
+/// model; [`crate::ft::backend_file::FileBackend`] repairs exactly this
+/// on reopen).
+fn torn_chop(dir: &Path, n: u64) {
+    let newest = std::fs::read_dir(dir)
+        .expect("reading WAL directory")
+        .filter_map(|e| e.ok())
+        .map(|e| e.path())
+        .filter(|p| p.extension().map(|x| x == "seg").unwrap_or(false))
+        .max();
+    let Some(seg) = newest else { return };
+    let len = std::fs::metadata(&seg).expect("segment metadata").len();
+    if len == 0 {
+        return;
+    }
+    let keep = len.saturating_sub(n.min(len));
+    let f = std::fs::OpenOptions::new().write(true).open(&seg).expect("opening segment");
+    f.set_len(keep).expect("truncating segment");
+}
+
+/// The faulted execution: owns the system, the external-input services,
+/// the live fault state, and the violation log.
+struct Driver<'a> {
+    seed: u64,
+    shape: &'a Shape,
+    knobs: &'a Knobs,
+    faults: &'a FaultPlan,
+    max_steps: usize,
+    built: gen::Built,
+    store: Store,
+    dir: Option<TempDir>,
+    exts: Vec<ExternalInput>,
+    mon: Option<Monitor>,
+    crashes: FailureSchedule,
+    double_pending: Option<ProcId>,
+    /// Epoch boundary inputs have been advanced to (resupply target).
+    next_ep: u64,
+    recoveries: u64,
+    violations: Vec<String>,
+}
+
+impl<'a> Driver<'a> {
+    fn new(
+        seed: u64,
+        shape: &'a Shape,
+        knobs: &'a Knobs,
+        faults: &'a FaultPlan,
+        max_steps: usize,
+    ) -> Driver<'a> {
+        let dir = knobs.durable.then(|| TempDir::new("fuzz"));
+        let store = match &dir {
+            Some(t) => Store::open_dir(
+                t.path(),
+                knobs.write_cost,
+                FileBackendOptions { flush_every_n: knobs.flush_every_n, ..Default::default() },
+            )
+            .expect("opening WAL store"),
+            None => Store::new(knobs.write_cost),
+        };
+        let built = gen::build(shape, knobs, store.clone());
+        let exts = built.sources.iter().map(|_| ExternalInput::new()).collect();
+        let mon = knobs.gc.then(|| built.monitor());
+        Driver {
+            seed,
+            shape,
+            knobs,
+            faults,
+            max_steps,
+            built,
+            store,
+            dir,
+            exts,
+            mon,
+            crashes: faults.crashes.clone(),
+            double_pending: faults.double_with,
+            next_ep: 0,
+            recoveries: 0,
+            violations: Vec::new(),
+        }
+    }
+
+    fn drive(&mut self) {
+        for ep in 0..self.shape.epochs {
+            if let Some(p) = &self.faults.pause {
+                if p.epoch == ep {
+                    self.store.pause_persistence();
+                }
+            }
+            if let Some(o) = &self.faults.oversize {
+                if o.from_epoch == ep {
+                    self.store.set_max_value_len(o.limit as u64);
+                }
+            }
+
+            offer_epoch(&mut self.built, Some(&mut self.exts), self.seed, ep, self.shape);
+            self.next_ep = ep + 1;
+            self.drain(ep);
+
+            if let Some(p) = self.faults.pause.clone() {
+                if p.epoch == ep {
+                    if let Some(v) = p.victim {
+                        self.crash_and_recover(vec![v]);
+                        self.drain(ep);
+                    }
+                    self.store.resume_persistence();
+                }
+            }
+
+            if let Some(m) = &mut self.mon {
+                for a in self.built.sys.pump_monitor(m) {
+                    self.built.sys.apply_gc(&a);
+                }
+            }
+
+            // Barrier before judging: sequential drains deliberately leave
+            // staged tails for the *crash* paths to catch, but the oracle
+            // reads the ack watermarks twice (inside availability() and
+            // again for the prefix) — an async writer advancing between
+            // the reads would fabricate timing-dependent violations.
+            self.store.flush_staged();
+            for v in oracle::structural_violations(&self.built.sys, self.mon.as_ref()) {
+                self.violations.push(format!("epoch {ep}: {v}"));
+            }
+
+            if let Some(r) = self.faults.restart.clone() {
+                if r.after_epoch == ep + 1 {
+                    self.cold_restart(r.torn_bytes, ep);
+                }
+            }
+        }
+
+        // The fault window is the driven epochs: scheduled crashes that
+        // have not fired by now are dropped, and the close-and-drain tail
+        // runs fault-free (matching the hand-written suites, which never
+        // crash a closed source).
+        close_all(&mut self.built);
+        let steps = self.built.run(self.max_steps);
+        if steps >= self.max_steps {
+            self.violations.push("final drain did not quiesce".to_string());
+        }
+        self.store.flush_staged();
+        for v in oracle::structural_violations(&self.built.sys, self.mon.as_ref()) {
+            self.violations.push(format!("final: {v}"));
+        }
+    }
+
+    /// Drain to quiescence, firing scheduled crashes. Only the
+    /// sequential engine can act mid-drain (the parallel executor
+    /// pauses, drains, and rolls back at batch boundaries — §4.4's
+    /// pause-the-world, which is exactly the drain boundary here).
+    fn drain(&mut self, ep: u64) {
+        let delay = self.faults.detector.confirmation_delay();
+        if self.built.threads > 1 {
+            loop {
+                let steps = self.built.run(self.max_steps);
+                if steps >= self.max_steps {
+                    self.violations.push(format!("epoch {ep}: drain did not quiesce"));
+                    return;
+                }
+                let now = self.built.sys.engine.events_processed().saturating_sub(delay);
+                let due = self.crashes.due(now);
+                if due.is_empty() {
+                    return;
+                }
+                self.crash_and_recover(due);
+            }
+        } else {
+            let mut steps = 0usize;
+            loop {
+                let now = self.built.sys.engine.events_processed().saturating_sub(delay);
+                let due = self.crashes.due(now);
+                if !due.is_empty() {
+                    self.crash_and_recover(due);
+                    continue;
+                }
+                if self.built.sys.step().is_none() {
+                    return;
+                }
+                steps += 1;
+                if steps >= self.max_steps {
+                    self.violations.push(format!("epoch {ep}: drain did not quiesce"));
+                    return;
+                }
+            }
+        }
+    }
+
+    /// §4.4 pause → solve → reset → replay, then §4.3 resupply of every
+    /// rolled-back source from its acknowledged external service — and,
+    /// once per run, the second failure injected right here, between a
+    /// recovery and its post-recovery drain.
+    fn crash_and_recover(&mut self, victims: Vec<ProcId>) {
+        self.built.sys.inject_failures(&victims);
+        let report = self.built.sys.recover();
+        self.recoveries += 1;
+        self.resupply(&report.plan);
+        if let Some(m) = &mut self.mon {
+            // Recovery may have truncated chains; the monitor's own
+            // availability is append-only, so rebuild it.
+            *m = self.built.monitor();
+        }
+        if let Some(v) = self.double_pending.take() {
+            self.built.sys.inject_failures(&[v]);
+            let report = self.built.sys.recover();
+            self.recoveries += 1;
+            self.resupply(&report.plan);
+            if let Some(m) = &mut self.mon {
+                *m = self.built.monitor();
+            }
+        }
+    }
+
+    fn resupply(&mut self, plan: &crate::ft::RollbackPlan) {
+        for (i, &s) in self.built.sources.clone().iter().enumerate() {
+            let sp = self.built.plan.proc(s, 0);
+            let f_src = plan.frontier(sp).clone();
+            if f_src.is_top() {
+                continue;
+            }
+            for (tm, recs) in self.exts[i].replay_from(&f_src) {
+                self.built.sys.advance_input(sp, tm);
+                for r in recs {
+                    self.built.sys.push_input(sp, tm, r);
+                }
+            }
+            self.built.sys.advance_input(sp, Time::epoch(self.next_ep));
+        }
+    }
+
+    /// Cold crash-restart: the process dies (buffered WAL tail with it),
+    /// the tail is optionally torn, and a fresh process reopens the
+    /// directory — `reopen_sharded` runs the all-processors-failed
+    /// recovery, after which the external services resupply everything
+    /// past the recovered frontiers.
+    fn cold_restart(&mut self, torn_bytes: u64, ep: u64) {
+        let dir = self.dir.as_ref().expect("restart requires a durable store");
+        // Replace the live system with a throwaway before dropping it.
+        let dead = std::mem::replace(
+            &mut self.built,
+            gen::build(self.shape, &self.knobs.reference(), Store::new(0)),
+        );
+        drop(dead);
+        self.store.simulate_crash();
+        if torn_bytes > 0 {
+            torn_chop(dir.path(), torn_bytes);
+        }
+        let store = Store::open_dir(
+            dir.path(),
+            self.knobs.write_cost,
+            FileBackendOptions {
+                flush_every_n: self.knobs.flush_every_n,
+                ..Default::default()
+            },
+        )
+        .expect("reopening WAL store");
+        let (built, report) = gen::reopen(self.shape, self.knobs, store.clone());
+        self.built = built;
+        self.store = store;
+        // The value limit is a property of the store *handle*, not the
+        // directory — re-impose it on the new one.
+        if let Some(o) = &self.faults.oversize {
+            if o.from_epoch <= ep {
+                self.store.set_max_value_len(o.limit as u64);
+            }
+        }
+        self.resupply(&report.plan);
+        self.drain(ep);
+        self.store.flush_staged();
+        for v in oracle::structural_violations(&self.built.sys, self.mon.as_ref()) {
+            self.violations.push(format!("post-restart epoch {ep}: {v}"));
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// The contract the corpus leans on: one seed fixes the shape, the
+    /// knobs, the fault plan, both executions, and the verdict.
+    #[test]
+    fn same_seed_same_digest() {
+        for seed in [1u64, 7, 23] {
+            let a = run_one(seed, 5_000_000);
+            let b = run_one(seed, 5_000_000);
+            assert_eq!(a.digest, b.digest, "seed {seed} verdict not reproducible");
+            assert_eq!(a.pass, b.pass);
+            assert_eq!(a.faults, b.faults);
+        }
+    }
+
+    /// A short slice of the development campaign stays green: every
+    /// violation here is a real regression in recovery, not fuzz noise.
+    #[test]
+    fn short_campaign_passes() {
+        let report = campaign(1, 10, 5_000_000);
+        for v in &report.verdicts {
+            assert!(
+                v.pass,
+                "seed {} failed: {:?}\n shape {}\n knobs {}\n faults {}",
+                v.seed, v.violations, v.shape, v.knobs, v.faults
+            );
+        }
+        assert_eq!(report.digest(), campaign(1, 10, 5_000_000).digest());
+    }
+
+    /// Generator coverage: across a modest seed range every fault kind
+    /// in the catalog is actually drawn — the campaign is not quietly
+    /// fuzzing a corner of the schedule space. (Each kind has ≥ 0.2
+    /// probability per seed, so 200 seeds miss one with probability
+    /// < 1e-19; a failure here means the generator changed.)
+    #[test]
+    fn fault_kinds_all_reachable() {
+        let (mut crash, mut multi, mut restart, mut torn, mut pausev, mut over, mut dbl) =
+            (false, false, false, false, false, false, false);
+        for seed in 0..200u64 {
+            let mut rng = Rng::new(seed);
+            let shape = Shape::generate(&mut rng);
+            let _knobs = Knobs::generate(&mut rng, &shape);
+            let cands: Vec<ProcId> = (0..6).map(ProcId).collect();
+            let plan = FaultPlan::generate(&mut rng, &shape, &cands);
+            crash |= !plan.crashes.is_empty();
+            multi |= plan.crashes.remaining() >= 2;
+            restart |= plan.restart.is_some();
+            torn |= plan.restart.as_ref().map_or(false, |r| r.torn_bytes > 0);
+            pausev |= plan.pause.as_ref().map_or(false, |p| p.victim.is_some());
+            over |= plan.oversize.is_some();
+            dbl |= plan.double_with.is_some();
+        }
+        assert!(
+            crash && multi && restart && torn && pausev && over && dbl,
+            "unreachable fault kind: crash={crash} multi={multi} restart={restart} \
+             torn={torn} pause-victim={pausev} oversize={over} double={dbl}"
+        );
+    }
+}

@@ -1,0 +1,196 @@
+//! Invariant checks the fuzzer asserts after every drain and every
+//! recovery (fuzzer stage 3 — see the [module docs](crate::fuzz)).
+//!
+//! The headline oracle — byte-equality of the sink against a no-fault
+//! reference run — lives in the driver, because it needs both runs in
+//! hand. This module holds the *structural* invariants, checkable on a
+//! single live [`FtSystem`]:
+//!
+//! 1. **Mirror shape** — every durable mirror and its tag vector are
+//!    parallel (`chain`/`chain_tags`, `log`/`log_tags`), and checkpoint
+//!    chain frontiers ascend (F*(p) is a chain, §3.4).
+//! 2. **Ack ordering** — per processor, the acknowledged staging
+//!    sequence never exceeds the staged one.
+//! 3. **Mirror ⊆ offered** — what [`FtSystem::availability`] offers the
+//!    solver for a non-failed chain processor is *exactly* its
+//!    acknowledged mirror prefix plus the live ⊤: every acked
+//!    checkpoint is offered (losing one would roll back further than
+//!    necessary), and nothing unacked is offered (offering one would
+//!    restore from a checkpoint a crash may not have persisted).
+//! 4. **GC ≤ acked** — the §4.2 monitor's low watermark for a chain
+//!    processor stays at or below its newest *acknowledged* checkpoint
+//!    frontier; the monitor must never authorize collecting state a
+//!    recovery could still need, nor run ahead of durability.
+//! 5. **Resident accounting** — the store's O(1) `resident_bytes`
+//!    counter agrees with a fresh scan of every processor's entries.
+//!
+//! Violations come back as strings (one per finding) rather than
+//! panics, so the campaign driver can attribute them to a seed and keep
+//! going.
+
+use crate::ft::harness::acked_prefix;
+use crate::ft::monitor::Monitor;
+use crate::ft::{Available, FtSystem};
+use crate::frontier::Frontier;
+
+/// Run every single-system structural invariant. `mon` is the campaign's
+/// GC monitor when the run drives one (invariant 4 needs it).
+pub fn structural_violations(sys: &FtSystem, mon: Option<&Monitor>) -> Vec<String> {
+    let mut v = Vec::new();
+    let avail = sys.availability();
+
+    for p in sys.topo.proc_ids() {
+        let i = p.0 as usize;
+        let ft = &sys.ft[i];
+
+        // 1. Mirror shape.
+        if ft.chain.len() != ft.chain_tags.len() {
+            v.push(format!(
+                "proc {}: chain mirror {} entries but {} tags",
+                p.0,
+                ft.chain.len(),
+                ft.chain_tags.len()
+            ));
+        }
+        if ft.log.len() != ft.log_tags.len() {
+            v.push(format!(
+                "proc {}: log mirror {} entries but {} tags",
+                p.0,
+                ft.log.len(),
+                ft.log_tags.len()
+            ));
+        }
+        for w in ft.chain.windows(2) {
+            if !w[0].meta.f.is_subset(&w[1].meta.f) {
+                v.push(format!(
+                    "proc {}: chain frontiers not ascending: {:?} ⊄ {:?}",
+                    p.0, w[0].meta.f, w[1].meta.f
+                ));
+            }
+        }
+
+        // 2. Ack ordering.
+        let (acked_w, staged_w) = (sys.store.acked_seq(p.0), sys.store.staged_seq(p.0));
+        if acked_w > staged_w {
+            v.push(format!(
+                "proc {}: acked seq {} ahead of staged seq {}",
+                p.0, acked_w, staged_w
+            ));
+        }
+
+        // 3. Offered chain == acked mirror prefix (+ live ⊤ when alive).
+        if ft.policy.has_chain() && ft.chain.len() == ft.chain_tags.len() {
+            let acked = acked_prefix(&ft.chain_tags, acked_w);
+            if let Available::Chain { chain: offered, .. } = &avail[i] {
+                let expect = if ft.failed { acked } else { acked + 1 };
+                if offered.len() != expect {
+                    v.push(format!(
+                        "proc {}: offers {} frontiers, expected {} (acked prefix {}{})",
+                        p.0,
+                        offered.len(),
+                        expect,
+                        acked,
+                        if ft.failed { "" } else { " + live ⊤" }
+                    ));
+                } else {
+                    for (k, meta) in offered.iter().take(acked).enumerate() {
+                        if meta.f != ft.chain[k].meta.f {
+                            v.push(format!(
+                                "proc {}: offered frontier {k} is {:?}, mirror has {:?}",
+                                p.0, meta.f, ft.chain[k].meta.f
+                            ));
+                        }
+                    }
+                    if !ft.failed && offered.last().map(|m| &m.f) != Some(&Frontier::Top) {
+                        v.push(format!("proc {}: live chain proc does not offer ⊤", p.0));
+                    }
+                }
+            } else {
+                v.push(format!("proc {}: chain policy but non-chain availability", p.0));
+            }
+
+            // 4. GC watermark ≤ newest acked checkpoint frontier.
+            if let Some(mon) = mon {
+                let ceiling = ft
+                    .chain
+                    .get(acked.wrapping_sub(1))
+                    .map(|c| c.meta.f.clone())
+                    .unwrap_or(Frontier::Bottom);
+                let wm = mon.low_watermark(p);
+                if !wm.is_subset(&ceiling) {
+                    v.push(format!(
+                        "proc {}: GC watermark {:?} above acked ceiling {:?}",
+                        p.0, wm, ceiling
+                    ));
+                }
+            }
+        }
+    }
+
+    // 5. Resident-byte accounting vs a fresh scan.
+    let scanned: u64 = sys
+        .store
+        .procs()
+        .into_iter()
+        .map(|p| sys.store.scan_entries(p).into_iter().map(|(_, n)| n).sum::<u64>())
+        .sum();
+    let resident = sys.store.resident_bytes();
+    if scanned != resident {
+        v.push(format!(
+            "store: resident_bytes {resident} disagrees with fresh scan {scanned}"
+        ));
+    }
+
+    v
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bench_support::sharded::{
+        canonical_output, epoch_records, pipeline, ShardedConfig,
+    };
+    use crate::ft::Policy;
+    use crate::time::Time;
+
+    fn cfg() -> ShardedConfig {
+        ShardedConfig {
+            workers: 2,
+            two_stage: true,
+            count_policy: Policy::Lazy { every: 1, log_outputs: true },
+            batch_cap: 4,
+            threads: 1,
+            ..Default::default()
+        }
+    }
+
+    /// A healthy pipeline must be violation-free at every epoch
+    /// boundary, after failure injection, and after recovery — the
+    /// oracle's false-positive rate is zero on the suites' own
+    /// workloads, which is what makes a fuzz violation meaningful.
+    #[test]
+    fn healthy_run_has_no_violations() {
+        let mut p = pipeline(&cfg());
+        let src = p.src_proc();
+        for ep in 0..3u64 {
+            p.sys.advance_input(src, Time::epoch(ep));
+            for r in epoch_records(5, ep, 16, 4) {
+                p.sys.push_input(src, Time::epoch(ep), r);
+            }
+            p.sys.advance_input(src, Time::epoch(ep + 1));
+            p.run(5_000_000);
+            let viol = structural_violations(&p.sys, None);
+            assert!(viol.is_empty(), "epoch {ep}: {viol:?}");
+        }
+
+        let victim = p.plan.proc(p.count, 0);
+        p.sys.inject_failures(&[victim]);
+        let viol = structural_violations(&p.sys, None);
+        assert!(viol.is_empty(), "post-injection: {viol:?}");
+        let _report = p.sys.recover();
+        p.run(5_000_000);
+        let viol = structural_violations(&p.sys, None);
+        assert!(viol.is_empty(), "post-recovery: {viol:?}");
+        assert!(!canonical_output(&p.sys, p.collect_proc()).is_empty());
+    }
+}

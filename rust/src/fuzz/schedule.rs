@@ -1,0 +1,233 @@
+//! Seeded generation of fault schedules (fuzzer stage 2 — see the
+//! [module docs](crate::fuzz)).
+//!
+//! This is where the previously example-only [`crate::failure`] types
+//! earn their keep: a [`FailureSchedule`] places multi-victim crashes in
+//! virtual event time, a [`DetectorModel`] delays when the driver is
+//! allowed to *act* on them (§4.4's "only when a failure detector
+//! confirms"), and the surrounding [`FaultPlan`] layers on the faults
+//! the schedule alone cannot express — cold restarts from the durable
+//! WAL, torn segment tails, staged-but-unacknowledged tail discards,
+//! oversized-value limits, and a second failure injected between a
+//! recovery and the drain that follows it.
+//!
+//! The catalog of what each fault means and which invariants it may
+//! legitimately weaken lives in `rust/src/fuzz/FAILURE_MODES.md`.
+
+use crate::failure::{DetectorModel, FailureSchedule};
+use crate::fuzz::gen::{Knobs, Shape};
+use crate::ft::PersistMode;
+use crate::graph::ProcId;
+use crate::util::rng::Rng;
+
+/// Cold crash-restart: drop the process after draining `after_epoch`,
+/// [`crate::ft::Store::simulate_crash`] the store (the buffered WAL tail
+/// dies), optionally chop the newest segment mid-record, then
+/// `reopen_sharded` against a fresh `Store::open_dir`.
+#[derive(Clone, Debug)]
+pub struct Restart {
+    /// Restart after this epoch has been offered and drained (1-based
+    /// into the run, always < `shape.epochs` so the run continues).
+    pub after_epoch: u64,
+    /// Chop this many bytes off the newest WAL segment before reopening
+    /// (0 = clean crash; >0 = torn tail, the power-loss model).
+    pub torn_bytes: u64,
+}
+
+/// Pause the staged-persistence writer for one epoch. With a `victim`,
+/// that processor is crashed at the end of the paused epoch — its
+/// staged-but-unacknowledged tail is discarded by
+/// [`crate::ft::FtSystem::inject_failures`] and recovery must fall back
+/// to the acked prefix (the async pipeline's "staged is not durable"
+/// window). Without one, the pause just drains late, exercising the
+/// ack-lag bookkeeping.
+#[derive(Clone, Debug)]
+pub struct Pause {
+    /// Pause before offering this epoch; resume after its drain.
+    pub epoch: u64,
+    /// Crash this processor at the paused epoch's drain boundary.
+    pub victim: Option<ProcId>,
+}
+
+/// Impose a store-level value-size limit from a given epoch on, making
+/// large checkpoint/log writes fail (counted, not fatal — the fix in
+/// [`crate::ft::recovery`] for the marker-shrink path came out of this
+/// fault).
+#[derive(Clone, Debug)]
+pub struct Oversize {
+    /// Apply `Store::set_max_value_len` just before this epoch.
+    pub from_epoch: u64,
+    /// The byte limit.
+    pub limit: usize,
+}
+
+/// Everything the driver will do to one run, drawn from the seed stream.
+#[derive(Clone, Debug)]
+pub struct FaultPlan {
+    /// Crashes in virtual event time (consumed via
+    /// [`FailureSchedule::due`] against the engine's processed-event
+    /// counter, shifted by the detector's confirmation delay).
+    pub crashes: FailureSchedule,
+    /// Human-readable copy of the schedule for logs/digests (the live
+    /// schedule is consumed as it fires).
+    pub crash_desc: String,
+    /// §4.4 failure detector: a crash at event `t` is acted on at
+    /// `t + confirmation_delay()`.
+    pub detector: DetectorModel,
+    /// Second victim, injected *after* a recovery completes and before
+    /// the post-recovery drain (the double-failure window).
+    pub double_with: Option<ProcId>,
+    pub restart: Option<Restart>,
+    pub pause: Option<Pause>,
+    pub oversize: Option<Oversize>,
+}
+
+impl FaultPlan {
+    /// Draw a fault plan. `candidates` is every physical processor (any
+    /// of them may crash — the solver owes a consistent frontier for an
+    /// arbitrary victim set). The horizon is a generous estimate of the
+    /// run's event count; crashes scheduled past the actual end simply
+    /// never fire.
+    pub fn generate(rng: &mut Rng, shape: &Shape, candidates: &[ProcId]) -> FaultPlan {
+        let horizon = shape.epochs * (shape.records_per_epoch as u64 + 4) * 8;
+        let n_crashes = rng.index(3);
+        let crashes = FailureSchedule::random(rng.next_u64(), n_crashes, horizon, candidates);
+        let crash_desc = format!("{crashes:?}");
+        let detector = if rng.chance(0.5) {
+            DetectorModel { heartbeat: 1 + rng.below(8), misses: 1 + rng.below(3) }
+        } else {
+            // Instant confirmation: act on the crash the step it happens.
+            DetectorModel { heartbeat: 0, misses: 0 }
+        };
+        let double_with = if !crashes.is_empty() && rng.chance(0.3) {
+            Some(*rng.choose(candidates))
+        } else {
+            None
+        };
+        let restart = (shape.epochs > 1 && rng.chance(0.35)).then(|| Restart {
+            after_epoch: rng.range(1, shape.epochs),
+            torn_bytes: if rng.chance(0.4) { 1 + rng.below(40) } else { 0 },
+        });
+        let pause = rng.chance(0.25).then(|| Pause {
+            epoch: rng.below(shape.epochs),
+            victim: (rng.chance(0.5) && !candidates.is_empty())
+                .then(|| *rng.choose(candidates)),
+        });
+        let oversize = rng.chance(0.2).then(|| Oversize {
+            from_epoch: rng.below(shape.epochs),
+            limit: 96 + rng.index(160) * 8,
+        });
+        FaultPlan { crashes, crash_desc, detector, double_with, restart, pause, oversize }
+    }
+
+    /// Make the knobs able to host this plan: a cold restart or torn
+    /// tail needs a durable file-backed store, and pausing the staged
+    /// writer only means anything under asynchronous persistence. A
+    /// restart also turns the GC monitor *off*: garbage collection is
+    /// sound against acknowledged durability, while the crash-restart
+    /// faults deliberately destroy acknowledged-but-unsynced bytes (the
+    /// group-commit buffer, a torn tail) — state the external service
+    /// would have been told it may forget (see `FAILURE_MODES.md`). The
+    /// reconciliation is deterministic, so it is part of the seed → run
+    /// mapping rather than a violation of it.
+    pub fn reconcile(&self, knobs: &mut Knobs) {
+        if self.restart.is_some() {
+            knobs.durable = true;
+            knobs.gc = false;
+        }
+        if self.pause.is_some() {
+            if let PersistMode::Sync = knobs.persist_mode {
+                knobs.persist_mode = PersistMode::Async { ack_every: 4 };
+            }
+        }
+    }
+
+    /// Whether this plan injects any fault at all (a fault-free run is a
+    /// valid draw: it doubles as the determinism check for the knobs).
+    pub fn is_quiet(&self) -> bool {
+        self.crashes.is_empty()
+            && self.restart.is_none()
+            && self.pause.as_ref().map_or(true, |p| p.victim.is_none())
+            && self.oversize.is_none()
+    }
+
+    /// Compact single-line description (campaign logs, corpus records).
+    pub fn describe(&self) -> String {
+        format!(
+            "crashes={} detector={} double={:?} restart={:?} pause={:?} oversize={:?}",
+            self.crash_desc,
+            self.detector.confirmation_delay(),
+            self.double_with,
+            self.restart.as_ref().map(|r| (r.after_epoch, r.torn_bytes)),
+            self.pause.as_ref().map(|p| (p.epoch, p.victim)),
+            self.oversize.as_ref().map(|o| (o.from_epoch, o.limit)),
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fuzz::gen;
+
+    fn plan_for(seed: u64) -> (Shape, FaultPlan) {
+        let mut rng = Rng::new(seed);
+        let shape = Shape::generate(&mut rng);
+        let _knobs = Knobs::generate(&mut rng, &shape);
+        let cands: Vec<ProcId> = (0..5).map(ProcId).collect();
+        let plan = FaultPlan::generate(&mut rng, &shape, &cands);
+        (shape, plan)
+    }
+
+    #[test]
+    fn fault_plans_are_seed_deterministic() {
+        for seed in [0u64, 1, 7, 42, 4096] {
+            let (_, a) = plan_for(seed);
+            let (_, b) = plan_for(seed);
+            assert_eq!(a.describe(), b.describe());
+        }
+    }
+
+    #[test]
+    fn restarts_stay_inside_the_run() {
+        for seed in 0..300u64 {
+            let (shape, plan) = plan_for(seed);
+            if let Some(r) = &plan.restart {
+                assert!(r.after_epoch >= 1 && r.after_epoch < shape.epochs);
+            }
+            if let Some(p) = &plan.pause {
+                assert!(p.epoch < shape.epochs);
+            }
+        }
+    }
+
+    #[test]
+    fn reconcile_forces_durability_and_async() {
+        for seed in 0..300u64 {
+            let mut rng = Rng::new(seed);
+            let shape = Shape::generate(&mut rng);
+            let mut knobs = gen::Knobs::generate(&mut rng, &shape);
+            let cands: Vec<ProcId> = (0..4).map(ProcId).collect();
+            let plan = FaultPlan::generate(&mut rng, &shape, &cands);
+            plan.reconcile(&mut knobs);
+            if plan.restart.is_some() {
+                assert!(knobs.durable);
+                assert!(!knobs.gc, "GC must be off when a restart can tear the WAL");
+            }
+            if plan.pause.is_some() {
+                assert!(matches!(knobs.persist_mode, PersistMode::Async { .. }));
+            }
+        }
+    }
+
+    /// The corner that used to panic end-to-end: a plan drawn against an
+    /// empty candidate set (degenerate topology) must be quiet, not UB.
+    #[test]
+    fn empty_candidates_yield_quiet_crash_schedule() {
+        let mut rng = Rng::new(9);
+        let shape = Shape::generate(&mut rng);
+        let plan = FaultPlan::generate(&mut rng, &shape, &[]);
+        assert!(plan.crashes.is_empty());
+        assert!(plan.double_with.is_none());
+    }
+}

@@ -49,6 +49,14 @@
 //!   monitor and recovery orchestration ([`ft`]);
 //! - baselines it subsumes: Chandy–Lamport snapshots, exactly-once /
 //!   at-least-once streaming, Spark-style RDD lineage ([`baselines`]);
+//! - a **seeded failure-simulation fuzzer** ([`fuzz`], `falkirk fuzz`):
+//!   one seed deterministically generates a dataflow shape, engine and
+//!   storage knobs, and a fault schedule over the [`failure`] machinery
+//!   (multi-victim crashes behind a detector model, cold crash-restarts
+//!   with torn WAL tails, staged-tail discards, oversized writes,
+//!   double failures), then asserts byte-equality against a no-fault
+//!   reference run plus structural invariants ([`fuzz::oracle`]);
+//!   failing seeds land in `rust/tests/corpus/` as regression tests;
 //! - an XLA/PJRT runtime that loads AOT-compiled JAX+Pallas analytics
 //!   kernels from `artifacts/*.hlo.txt` and runs them on the hot path of
 //!   stateful vertices ([`runtime`], [`operators::tensor`]).
@@ -70,6 +78,7 @@ pub mod operators;
 pub mod ft;
 pub mod baselines;
 pub mod failure;
+pub mod fuzz;
 pub mod runtime;
 pub mod coordinator;
 pub mod metrics;

@@ -42,20 +42,30 @@ impl Rng {
         self.s1.wrapping_add(y)
     }
 
-    /// Uniform in `[0, n)`. `n` must be nonzero.
+    /// Uniform in `[0, n)`; `below(0)` is 0 (the only value the
+    /// multiply-shift can produce for an empty range). Callers that mean
+    /// "pick one of n things" with a possibly-empty n should use
+    /// [`Rng::try_choose`] instead — indexing with the 0 would read out
+    /// of bounds.
+    ///
+    /// Degenerate inputs still consume one RNG step, so a schedule that
+    /// happens to request an empty range stays stream-compatible with
+    /// one that does not.
     pub fn below(&mut self, n: u64) -> u64 {
-        debug_assert!(n > 0);
         // Rejection-free multiply-shift; bias is negligible for our n.
         ((self.next_u64() as u128 * n as u128) >> 64) as u64
     }
 
-    /// Uniform usize in `[0, n)`.
+    /// Uniform usize in `[0, n)` (0 when `n == 0`; see [`Rng::below`]).
     pub fn index(&mut self, n: usize) -> usize {
         self.below(n as u64) as usize
     }
 
-    /// Uniform in `[lo, hi)` (u64).
+    /// Uniform in `[lo, hi)` (u64). `lo == hi` yields `lo` (empty range
+    /// collapses to its bound, identically in debug and release); `lo`
+    /// must not exceed `hi`.
     pub fn range(&mut self, lo: u64, hi: u64) -> u64 {
+        assert!(lo <= hi, "range({lo}, {hi}) is inverted");
         lo + self.below(hi - lo)
     }
 
@@ -77,9 +87,20 @@ impl Rng {
         }
     }
 
-    /// Pick a reference to a uniformly random element.
+    /// Pick a reference to a uniformly random element. Panics on an
+    /// empty slice (with a message, not a release-mode out-of-bounds
+    /// read via `below(0) → 0`); use [`Rng::try_choose`] when the slice
+    /// may be empty.
     pub fn choose<'a, T>(&mut self, xs: &'a [T]) -> &'a T {
-        &xs[self.index(xs.len())]
+        self.try_choose(xs).expect("Rng::choose on an empty slice")
+    }
+
+    /// Pick a reference to a uniformly random element, or `None` if the
+    /// slice is empty. Consumes one RNG step either way, so generators
+    /// stay stream-compatible across empty and non-empty inputs.
+    pub fn try_choose<'a, T>(&mut self, xs: &'a [T]) -> Option<&'a T> {
+        let i = self.index(xs.len());
+        xs.get(i)
     }
 }
 
@@ -132,6 +153,66 @@ mod tests {
         for &c in &counts {
             assert!((8_000..12_000).contains(&c), "bucket count {c} not ~10k");
         }
+    }
+
+    /// `below(0)` must be a total function: the fuzzer's schedule
+    /// generator asks for "uniformly below the remaining horizon" where
+    /// the horizon can legitimately be zero. The old `debug_assert`
+    /// made debug and release disagree (panic vs 0).
+    #[test]
+    fn below_zero_is_zero() {
+        let mut r = Rng::new(5);
+        for _ in 0..10 {
+            assert_eq!(r.below(0), 0);
+        }
+    }
+
+    /// An empty `range` collapses to its bound instead of diverging
+    /// between debug (underflow panic was never possible — `hi - lo`
+    /// is 0 — but `below` asserted) and release builds.
+    #[test]
+    fn range_empty_and_singleton() {
+        let mut r = Rng::new(6);
+        assert_eq!(r.range(9, 9), 9);
+        for _ in 0..100 {
+            assert_eq!(r.range(4, 5), 4);
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "inverted")]
+    fn range_inverted_panics() {
+        Rng::new(1).range(3, 2);
+    }
+
+    /// `choose` on an empty slice used to index out of bounds in
+    /// release builds (`below(0)` → 0 → `xs[0]`); it must be a clear
+    /// panic, and `try_choose` the non-panicking alternative.
+    #[test]
+    #[should_panic(expected = "empty slice")]
+    fn choose_empty_panics_with_message() {
+        let xs: [u32; 0] = [];
+        Rng::new(2).choose(&xs);
+    }
+
+    #[test]
+    fn try_choose_empty_is_none() {
+        let xs: [u32; 0] = [];
+        assert_eq!(Rng::new(2).try_choose(&xs), None);
+        let ys = [7u32];
+        assert_eq!(Rng::new(2).try_choose(&ys), Some(&7));
+    }
+
+    /// Degenerate draws still advance the stream — a generator that
+    /// consumed an empty-range draw stays aligned with one that did not
+    /// skip it.
+    #[test]
+    fn degenerate_draws_advance_stream() {
+        let mut a = Rng::new(13);
+        let mut b = Rng::new(13);
+        let _ = a.below(0);
+        let _ = b.below(10);
+        assert_eq!(a.next_u64(), b.next_u64());
     }
 
     #[test]

@@ -63,6 +63,17 @@ fn main() {
             "sharded output diverged at cap {cap}"
         );
     }
+    // …and across mailbox budgets: backpressure defers deliveries but
+    // must never change the bytes.
+    for mbox in [2usize, 64] {
+        let mut p = pipeline(&ShardedConfig { mailbox_cap: Some(mbox), ..shard_cfg(1) });
+        drive_workload(&mut p, 7, SHARD_EPOCHS, SHARD_RECORDS, SHARD_KEYS);
+        assert_eq!(
+            canonical_output(&p.sys, p.collect_proc()),
+            base_shard,
+            "sharded output diverged at mailbox_cap {mbox}"
+        );
+    }
     b.note("equivalence: outputs byte-identical across all caps (cap 1 = record-at-a-time)");
 
     // Fig. 1 workload.
@@ -83,5 +94,17 @@ fn main() {
             drive_workload(&mut p, 7, SHARD_EPOCHS, SHARD_RECORDS, SHARD_KEYS);
         });
     }
+    // Backpressure price: the same sharded workload at cap 8 under
+    // per-edge mailbox budgets (bounded peak queue residency) vs. the
+    // unbounded shard_W4_cap8 row above.
+    for mbox in [2usize, 64] {
+        let cfg = ShardedConfig { mailbox_cap: Some(mbox), ..shard_cfg(8) };
+        let records = (SHARD_EPOCHS * SHARD_RECORDS as u64) as f64;
+        b.run(&format!("shard_W4_cap8_mbox{mbox}"), records, || {
+            let mut p = pipeline(&cfg);
+            drive_workload(&mut p, 7, SHARD_EPOCHS, SHARD_RECORDS, SHARD_KEYS);
+        });
+    }
     b.note("ops/s = source records/sec end to end; larger caps amortize per-event scheduling, metadata and log writes");
+    b.note("shard_W4_cap8_mbox*: credit-based backpressure overhead — compare against shard_W4_cap8");
 }

@@ -83,8 +83,20 @@ fn main() {
             assert_eq!(tp.records, EPOCHS * RECORDS as u64);
         });
     }
+    // Credit-based backpressure at the scaling point: the T = 4 workload
+    // with per-edge mailbox budgets vs. the unbounded par_W8_T4 row.
+    for mbox in [2usize, 64] {
+        let c = ShardedConfig { mailbox_cap: Some(mbox), ..cfg(8, true, 4) };
+        let records = (EPOCHS as usize * RECORDS) as f64;
+        b.run(&format!("par_W8_T4_mbox{mbox}"), records, || {
+            let mut p = pipeline(&c);
+            let tp = drive_workload(&mut p, 7, EPOCHS, RECORDS, KEYS);
+            assert_eq!(tp.records, EPOCHS * RECORDS as u64);
+        });
+    }
     b.note(
         "engine/ft: ops/s = events/sec, single-threaded (exchange fan-out grows edges O(W^2)); \
          par_W8_T*: ops/s = records/sec at T worker threads — speedup = par_W8_T4 / par_W8_T1",
     );
+    b.note("par_W8_T4_mbox*: bounded mailboxes on the parallel drain — compare against par_W8_T4");
 }

@@ -9,6 +9,19 @@
 //!
 //! Benches are `harness = false` binaries that call [`bench_fn`] /
 //! [`Bencher::run`] and print a table; `cargo bench` runs them all.
+//!
+//! # Machine-readable output
+//!
+//! When the `FALKIRK_BENCH_JSON` environment variable names a file, every
+//! finished [`Bencher`] group additionally appends one JSON object on one
+//! line (the file is a JSON-Lines log; schema `falkirk-bench/1`) with the
+//! group name, per-bench `mean_ns`/`p50_ns`/`p95_ns`/`ops_per_sec`, and
+//! the free-form notes. `BENCH_throughput.json` at the repo root is the
+//! committed baseline in the same schema:
+//!
+//! ```text
+//! FALKIRK_BENCH_JSON=bench.jsonl cargo bench --bench bench_batch_throughput
+//! ```
 
 pub mod sharded;
 
@@ -38,7 +51,46 @@ pub struct BenchResult {
     pub units_per_iter: f64,
 }
 
+/// Escape a string for inclusion in a JSON string literal (hand-rolled:
+/// the offline registry has no serde).
+fn json_escape(s: &str) -> String {
+    let mut out = String::with_capacity(s.len() + 2);
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\r' => out.push_str("\\r"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out
+}
+
 impl BenchResult {
+    /// One result as a `falkirk-bench/1` JSON object.
+    pub fn json(&self) -> String {
+        let mean = self.ns.mean();
+        let ops = if self.units_per_iter > 0.0 && mean > 0.0 {
+            format!("{:.1}", self.units_per_iter / (mean / 1e9))
+        } else {
+            "null".to_string()
+        };
+        format!(
+            "{{\"name\":\"{}\",\"n\":{},\"mean_ns\":{:.1},\"p50_ns\":{:.1},\
+             \"p95_ns\":{:.1},\"units_per_iter\":{},\"ops_per_sec\":{}}}",
+            json_escape(&self.name),
+            self.ns.count(),
+            mean,
+            self.ns.p50(),
+            self.ns.p95(),
+            self.units_per_iter,
+            ops,
+        )
+    }
+
     pub fn line(&self) -> String {
         let mean = self.ns.mean();
         let rate = if self.units_per_iter > 0.0 && mean > 0.0 {
@@ -92,17 +144,17 @@ pub struct Bencher {
     cfg: BenchConfig,
     group: String,
     pub results: Vec<BenchResult>,
+    notes: Vec<String>,
 }
 
 impl Bencher {
     pub fn new(group: &str) -> Bencher {
-        println!("== {group} ==");
-        Bencher { cfg: BenchConfig::default(), group: group.to_string(), results: Vec::new() }
+        Bencher::with_config(group, BenchConfig::default())
     }
 
     pub fn with_config(group: &str, cfg: BenchConfig) -> Bencher {
         println!("== {group} ==");
-        Bencher { cfg, group: group.to_string(), results: Vec::new() }
+        Bencher { cfg, group: group.to_string(), results: Vec::new(), notes: Vec::new() }
     }
 
     pub fn run(&mut self, name: &str, units: f64, f: impl FnMut()) -> &BenchResult {
@@ -112,8 +164,46 @@ impl Bencher {
     }
 
     /// Print a free-form observation row (paper-shape checks).
-    pub fn note(&self, text: &str) {
+    pub fn note(&mut self, text: &str) {
         println!("note {}/{}", self.group, text);
+        self.notes.push(text.to_string());
+    }
+
+    /// The whole group as one `falkirk-bench/1` JSON document.
+    pub fn json(&self) -> String {
+        let results: Vec<String> = self.results.iter().map(|r| r.json()).collect();
+        let notes: Vec<String> =
+            self.notes.iter().map(|n| format!("\"{}\"", json_escape(n))).collect();
+        format!(
+            "{{\"schema\":\"falkirk-bench/1\",\"group\":\"{}\",\"provenance\":\"measured\",\
+             \"results\":[{}],\"notes\":[{}]}}",
+            json_escape(&self.group),
+            results.join(","),
+            notes.join(","),
+        )
+    }
+}
+
+/// Env-gated machine-readable emission (see the module docs): each group
+/// appends its JSON document as one line to `$FALKIRK_BENCH_JSON`.
+impl Drop for Bencher {
+    fn drop(&mut self) {
+        let Ok(path) = std::env::var("FALKIRK_BENCH_JSON") else { return };
+        if path.is_empty() {
+            return;
+        }
+        let doc = self.json();
+        let written = std::fs::OpenOptions::new()
+            .create(true)
+            .append(true)
+            .open(&path)
+            .and_then(|mut f| {
+                use std::io::Write;
+                writeln!(f, "{doc}")
+            });
+        if let Err(e) = written {
+            eprintln!("FALKIRK_BENCH_JSON: cannot write '{path}': {e}");
+        }
     }
 }
 

@@ -56,6 +56,12 @@ pub struct ShardedConfig {
     /// [`PersistMode::Async`] stages writes for the background writer
     /// thread and gates recovery availability on its ack watermarks.
     pub persist_mode: PersistMode,
+    /// Per-edge mailbox budget for credit-based backpressure (`None` =
+    /// unbounded, the pre-backpressure behavior). Bounds peak queue
+    /// residency on every data edge; see
+    /// [`crate::engine::Engine::set_mailbox_cap`]. A runtime knob, not
+    /// persisted state — `build_pipeline` re-applies it on reopen.
+    pub mailbox_cap: Option<usize>,
 }
 
 impl Default for ShardedConfig {
@@ -69,6 +75,7 @@ impl Default for ShardedConfig {
             batch_cap: 1,
             threads: 1,
             persist_mode: PersistMode::Sync,
+            mailbox_cap: None,
         }
     }
 }
@@ -161,7 +168,7 @@ fn build_pipeline(
     factories.push(Box::new(|_| Box::new(Buffer::default())));
     policies.push(cfg.collect_policy);
 
-    let sys = match reopen {
+    let mut sys = match reopen {
         None => FtSystem::new_sharded_with_cap(
             &plan,
             factories,
@@ -183,6 +190,7 @@ fn build_pipeline(
             sys
         }
     };
+    sys.set_mailbox_cap(cfg.mailbox_cap);
     let threads = cfg.threads.max(1);
     let groups = crate::engine::shard_groups(&plan, threads);
     ShardedPipeline { sys, plan, src, map, count, collect, threads, groups }

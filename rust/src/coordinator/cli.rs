@@ -20,7 +20,7 @@ COMMANDS:
             --epochs N (6) --queries N (4) --records N (32) --iters N (4)
             --window N (16) --keys N (8) --seed S (7) --write-cost C (10)
             --fail <proc> --fail-after E (2) --xla <true|false> (true)
-            --batch-cap B (1)
+            --batch-cap B (1) --mailbox-cap M (unbounded)
             --data-dir DIR --flush-every N (8)  # durable WAL store
             --persist-async --ack-every N (8)   # staged writer pipeline
   shard     Run the sharded keyed-aggregation job, optionally crashing
@@ -28,6 +28,9 @@ COMMANDS:
             --workers W (4) --epochs N (6) --records N (64) --keys N (16)
             --seed S (7) --two-stage <true|false> (false)
             --fail-shard S --fail-after E (2) --batch-cap B (1)
+            --mailbox-cap M  # per-edge record budget; credit-based
+                             # backpressure (default: unbounded;
+                             # --keys 1 makes a fully skewed hot-key load)
             --threads T (1)  # T>1 drains on the parallel engine
             --data-dir DIR --flush-every N (8)  # durable WAL store
             --persist-async --ack-every N (8)   # staged writer pipeline
@@ -45,6 +48,25 @@ COMMANDS:
   selftest  Smoke-test all layers (engine, FT, recovery, kernels).
   help      Show this message.
 ";
+
+/// Parse `--mailbox-cap` (absent = unbounded queues, the historical
+/// behavior).
+fn mailbox_cap_for(args: &Args) -> Result<Option<usize>, i32> {
+    match args.get("mailbox-cap") {
+        None => Ok(None),
+        Some(raw) => match raw.parse::<usize>() {
+            Ok(0) => {
+                eprintln!("--mailbox-cap must be at least 1");
+                Err(2)
+            }
+            Ok(n) => Ok(Some(n)),
+            Err(_) => {
+                eprintln!("--mailbox-cap '{raw}' is not a record count");
+                Err(2)
+            }
+        },
+    }
+}
 
 /// Resolve `--persist-async` / `--ack-every` into a [`PersistMode`].
 fn persist_mode_for(args: &Args) -> Result<crate::ft::PersistMode, i32> {
@@ -144,6 +166,10 @@ fn cmd_fig1(args: &Args) -> i32 {
         write_cost: args.get_u64("write-cost", 10),
         use_xla: args.get_str("xla", "true") == "true",
         batch_cap: args.get_usize("batch-cap", 1),
+        mailbox_cap: match mailbox_cap_for(args) {
+            Ok(m) => m,
+            Err(code) => return code,
+        },
         persist_mode: match persist_mode_for(args) {
             Ok(m) => m,
             Err(code) => return code,
@@ -214,11 +240,16 @@ fn cmd_shard(args: &Args) -> i32 {
         Ok(m) => m,
         Err(code) => return code,
     };
+    let mailbox_cap = match mailbox_cap_for(args) {
+        Ok(m) => m,
+        Err(code) => return code,
+    };
     let cfg = ShardedConfig {
         workers,
         two_stage,
         batch_cap,
         threads,
+        mailbox_cap,
         persist_mode,
         ..Default::default()
     };
@@ -265,11 +296,16 @@ fn cmd_shard(args: &Args) -> i32 {
         events: p.sys.engine.events_processed(),
         elapsed_secs: t0.elapsed().as_secs_f64(),
     };
+    let cap_str = match mailbox_cap {
+        Some(c) => c.to_string(),
+        None => "unbounded".to_string(),
+    };
     println!(
         "shard: W={workers} threads={threads} two_stage={two_stage} epochs={epochs} \
-         batch_cap={batch_cap}"
+         batch_cap={batch_cap} mailbox_cap={cap_str}"
     );
     println!("  events           {}", tp.events);
+    println!("  peak mailbox     {} records", p.sys.engine.peak_queue_records());
     println!("  events/sec       {:.0}", tp.events_per_sec());
     println!("  records/sec      {:.0}", tp.records_per_sec());
     println!("  log writes       {} batches / {} records", p.sys.stats.log_entries, p.sys.stats.log_records);

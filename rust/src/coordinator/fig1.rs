@@ -63,6 +63,11 @@ pub struct Fig1Config {
     pub use_xla: bool,
     /// Channel coalescing cap (1 = record-at-a-time).
     pub batch_cap: usize,
+    /// Per-edge mailbox budget for credit-based backpressure (`None` =
+    /// unbounded, the historical behavior). A runtime knob, not
+    /// persisted state — [`reopen`] re-applies it; see
+    /// [`crate::engine::Engine::set_mailbox_cap`].
+    pub mailbox_cap: Option<usize>,
     /// Persistence discipline of the store (sync ack-per-write vs. the
     /// asynchronous staged pipeline; see
     /// [`crate::ft::storage::PersistMode`]).
@@ -84,6 +89,7 @@ impl Default for Fig1Config {
             write_cost: 10,
             use_xla: true,
             batch_cap: 1,
+            mailbox_cap: None,
             persist_mode: crate::ft::PersistMode::Sync,
         }
     }
@@ -203,7 +209,7 @@ pub fn build_with_store(cfg: &Fig1Config, store: Store) -> Fig1App {
     store.set_persist_mode(cfg.persist_mode);
     let db_out = Arc::new(Mutex::new(ExternalOutput::new()));
     let parts = assemble(cfg, db_out.clone());
-    let sys = FtSystem::new_with_cap(
+    let mut sys = FtSystem::new_with_cap(
         parts.topo,
         parts.procs,
         parts.policies,
@@ -211,6 +217,7 @@ pub fn build_with_store(cfg: &Fig1Config, store: Store) -> Fig1App {
         store,
         cfg.batch_cap,
     );
+    sys.set_mailbox_cap(cfg.mailbox_cap);
     Fig1App {
         sys,
         q_src: parts.q_src,
@@ -236,7 +243,7 @@ pub fn reopen(
 ) -> (Fig1App, crate::ft::recovery::RecoveryReport) {
     store.set_persist_mode(cfg.persist_mode);
     let parts = assemble(cfg, db_out.clone());
-    let (sys, report) = FtSystem::reopen(
+    let (mut sys, report) = FtSystem::reopen(
         parts.topo,
         parts.procs,
         parts.policies,
@@ -244,6 +251,7 @@ pub fn reopen(
         store,
         cfg.batch_cap,
     );
+    sys.set_mailbox_cap(cfg.mailbox_cap);
     let app = Fig1App {
         sys,
         q_src: parts.q_src,

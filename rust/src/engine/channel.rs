@@ -42,11 +42,53 @@
 //! be queued, so a *second* failure during recovery would observe (and a
 //! full-history processor would record) different batch boundaries than
 //! the original run.
+//!
+//! # Zero-copy payloads and the CoW rules
+//!
+//! A [`Batch`]'s payload is an `Arc<Vec<Record>>` plus an `(off, len)`
+//! sub-range view. Cloning a batch is a reference-count bump; the queued
+//! copy, the capture-gated `EventReport` copy, the durable-log mirror
+//! copy and a replayed copy all alias **one** allocation. The paper's
+//! §3.3 replay contract only requires *value* equality of re-delivered
+//! batches, so sharing is free as long as delivery order and batch
+//! boundaries stay deterministic — and boundaries here are a function of
+//! enqueue order + `batch_cap` alone, never of sharing.
+//!
+//! Mutation follows copy-on-write, applied at the last moment:
+//!
+//! * **Coalescing** ([`Batch::absorb`]): appending to a uniquely-owned
+//!   full-range tail *moves* records in place; a tail aliased by a
+//!   capture/log mirror is first copied out (the mirror keeps the bytes
+//!   it logged — exactly the old deep-copy behavior, paid only when an
+//!   alias actually exists).
+//! * **Splitting** ([`Batch::split_at`]): a uniquely-owned batch splits
+//!   by `Vec::split_off` (moves); a shared batch splits into two
+//!   sub-range views of the same allocation.
+//! * **Delivery** ([`Batch::into_records`]): a uniquely-owned full-range
+//!   batch unwraps to its `Vec` (zero copies); a shared or partial view
+//!   clones just its visible slice.
+//!
+//! Net effect: with event-data capture off (no aliases are ever taken),
+//! the FIFO path from ingest to sink performs **zero** record clones —
+//! asserted by `tests/test_zero_copy.rs` against the thread-local clone
+//! counter in [`crate::engine::record`].
+//!
+//! # Bounded queues
+//!
+//! Every channel tracks its record high-water mark
+//! ([`Channel::peak_records`]). The channel itself never blocks a push —
+//! bounding is the *scheduler's* job: under a `mailbox_cap` the engine
+//! withholds delivery credit from a processor whose out-edge queues are
+//! at the cap (see the credit protocol in `engine/scheduler.rs` /
+//! `engine/parallel.rs` module docs), so queue growth is throttled at
+//! the producer while replay/recovery enqueues always land.
 
 use crate::engine::record::Record;
 use crate::time::{LexTime, Time};
 use crate::util::ser::{Decode, Encode, Reader, SerError, Writer};
 use std::collections::{BTreeMap, BTreeSet, VecDeque};
+use std::fmt;
+use std::sync::{Arc, OnceLock};
 
 /// A timed singleton message (the record-at-a-time view; conversions to
 /// and from [`Batch`] are free).
@@ -75,38 +117,153 @@ impl Decode for Message {
     }
 }
 
+/// The shared empty payload behind every capture-off stub batch, so
+/// stubs cost no allocation at all.
+fn empty_payload() -> Arc<Vec<Record>> {
+    static EMPTY: OnceLock<Arc<Vec<Record>>> = OnceLock::new();
+    EMPTY.get_or_init(|| Arc::new(Vec::new())).clone()
+}
+
 /// A batch of records at one logical time — the unit moved through
 /// channels, delivered to processors, logged, replayed, and shipped
 /// whole across worker-thread mailboxes (it is `Send`, so exchange edges
 /// between shard groups transfer batches by move, never by copy).
-#[derive(Clone, Debug, PartialEq)]
+///
+/// The payload is an `Arc`-shared `Vec<Record>` plus an `(off, len)`
+/// sub-range view: `Clone` is a reference-count bump, [`Batch::split_at`]
+/// on a shared payload yields two views of one allocation, and mutation
+/// is copy-on-write (see the module docs for the exact CoW rules).
+/// Equality, encoding and `Debug` all see only the visible slice, so the
+/// durable byte format is unchanged from the owned-`Vec` representation.
+#[derive(Clone)]
 pub struct Batch {
     pub time: Time,
-    pub data: Vec<Record>,
+    payload: Arc<Vec<Record>>,
+    off: usize,
+    len: usize,
 }
 
 impl Batch {
     pub fn new(time: Time, data: Vec<Record>) -> Batch {
-        Batch { time, data }
+        let len = data.len();
+        Batch { time, payload: Arc::new(data), off: 0, len }
     }
 
     /// A singleton batch.
     pub fn one(time: Time, r: Record) -> Batch {
-        Batch { time, data: vec![r] }
+        Batch::new(time, vec![r])
+    }
+
+    /// An empty batch (the capture-off stub in event reports). Allocates
+    /// nothing — all empties share one static payload.
+    pub fn empty(time: Time) -> Batch {
+        Batch { time, payload: empty_payload(), off: 0, len: 0 }
+    }
+
+    /// The visible records.
+    pub fn records(&self) -> &[Record] {
+        &self.payload[self.off..self.off + self.len]
     }
 
     /// Number of records carried.
     pub fn len(&self) -> usize {
-        self.data.len()
+        self.len
     }
 
     pub fn is_empty(&self) -> bool {
-        self.data.is_empty()
+        self.len == 0
+    }
+
+    /// Whether two batches alias the same payload allocation (regardless
+    /// of their view ranges). Diagnostic for the zero-copy tests.
+    pub fn shares_payload(&self, other: &Batch) -> bool {
+        Arc::ptr_eq(&self.payload, &other.payload)
     }
 
     /// Approximate in-memory payload size (metrics / storage accounting).
     pub fn approx_bytes(&self) -> usize {
-        self.data.iter().map(|r| r.approx_bytes()).sum()
+        self.records().iter().map(|r| r.approx_bytes()).sum()
+    }
+
+    /// Take ownership of the visible records. A uniquely-owned full-range
+    /// batch unwraps its `Vec` without touching any record; a shared or
+    /// partial view clones its slice (the aliases keep theirs).
+    pub fn into_records(self) -> Vec<Record> {
+        if self.off == 0 && self.len == self.payload.len() {
+            match Arc::try_unwrap(self.payload) {
+                Ok(v) => v,
+                Err(shared) => shared[..].to_vec(),
+            }
+        } else {
+            self.payload[self.off..self.off + self.len].to_vec()
+        }
+    }
+
+    /// Split into `[..at]` and `[at..]`. A uniquely-owned full-range
+    /// batch splits by move (`Vec::split_off`); a shared one splits into
+    /// two sub-range views of the same allocation. `at` must be a strict
+    /// interior point.
+    pub fn split_at(self, at: usize) -> (Batch, Batch) {
+        debug_assert!(0 < at && at < self.len, "split point must be interior");
+        let Batch { time, payload, off, len } = self;
+        if off == 0 && len == payload.len() {
+            match Arc::try_unwrap(payload) {
+                Ok(mut v) => {
+                    let rest = v.split_off(at);
+                    return (Batch::new(time, v), Batch::new(time, rest));
+                }
+                Err(p) => {
+                    let head = Batch { time, payload: p.clone(), off, len: at };
+                    let tail = Batch { time, payload: p, off: off + at, len: len - at };
+                    return (head, tail);
+                }
+            }
+        }
+        let head = Batch { time, payload: payload.clone(), off, len: at };
+        let tail = Batch { time, payload, off: off + at, len: len - at };
+        (head, tail)
+    }
+
+    /// Append `other`'s records (same time) to this batch. Records move
+    /// when both payloads are uniquely owned; a payload aliased by a
+    /// capture/log mirror is copied first (CoW — the mirror keeps exactly
+    /// the bytes it recorded).
+    pub fn absorb(&mut self, other: Batch) {
+        debug_assert_eq!(self.time, other.time, "absorb merges one logical time");
+        if other.is_empty() {
+            return;
+        }
+        if self.len == 0 {
+            *self = other;
+            return;
+        }
+        // CoW: make our payload a uniquely-owned full-range Vec.
+        if self.off != 0
+            || self.len != self.payload.len()
+            || Arc::get_mut(&mut self.payload).is_none()
+        {
+            let copy = self.payload[self.off..self.off + self.len].to_vec();
+            self.payload = Arc::new(copy);
+            self.off = 0;
+        }
+        let v = Arc::get_mut(&mut self.payload).expect("payload just made unique");
+        v.extend(other.into_records());
+        self.len = v.len();
+    }
+}
+
+impl PartialEq for Batch {
+    fn eq(&self, other: &Batch) -> bool {
+        self.time == other.time && self.records() == other.records()
+    }
+}
+
+impl fmt::Debug for Batch {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.debug_struct("Batch")
+            .field("time", &self.time)
+            .field("data", &self.records())
+            .finish()
     }
 }
 
@@ -119,8 +276,9 @@ impl From<Message> for Batch {
 impl Encode for Batch {
     fn encode(&self, w: &mut Writer) {
         self.time.encode(w);
-        w.varint(self.data.len() as u64);
-        for r in &self.data {
+        let rs = self.records();
+        w.varint(rs.len() as u64);
+        for r in rs {
             r.encode(w);
         }
     }
@@ -134,7 +292,7 @@ impl Decode for Batch {
         for _ in 0..n {
             data.push(Record::decode(r)?);
         }
-        Ok(Batch { time, data })
+        Ok(Batch::new(time, data))
     }
 }
 
@@ -180,6 +338,9 @@ pub struct Channel {
     /// Maximum records a coalesced batch may grow to. Cap 1 disables
     /// coalescing entirely (record-at-a-time).
     cap: usize,
+    /// High-water mark of queued records over the channel's lifetime —
+    /// the observable the bounded-backpressure tests assert on.
+    peak: usize,
 }
 
 impl Default for Channel {
@@ -202,11 +363,17 @@ impl Channel {
             records: 0,
             live: 0,
             cap: cap.max(1),
+            peak: 0,
         }
     }
 
     pub fn batch_cap(&self) -> usize {
         self.cap
+    }
+
+    /// High-water mark of queued records over the channel's lifetime.
+    pub fn peak_records(&self) -> usize {
+        self.peak
     }
 
     pub fn push(&mut self, m: Message) {
@@ -254,13 +421,13 @@ impl Channel {
     }
 
     /// Append one cap-sized chunk as a fresh queued batch.
-    fn append_chunk(&mut self, time: Time, chunk: Vec<Record>) {
+    fn append_chunk(&mut self, b: Batch) {
         let seq = self.next_seq;
         self.next_seq += 1;
-        self.records += chunk.len();
+        self.records += b.len();
         self.live += 1;
-        self.q.push_back((seq, Some(Batch::new(time, chunk))));
-        self.index_insert(seq, time);
+        self.index_insert(seq, b.time);
+        self.q.push_back((seq, Some(b)));
     }
 
     /// Enqueue a batch. The cap is the *delivery-unit size*: same-time
@@ -270,47 +437,68 @@ impl Channel {
     /// grouped their records. Only the tail is considered for merging, so
     /// FIFO arrival order is preserved exactly; under
     /// [`Delivery::Selective`] the merge is equally safe because a
-    /// batch's records all share one time.
+    /// batch's records all share one time. Merging and splitting follow
+    /// the zero-copy CoW rules (module docs): unique payloads move,
+    /// aliased ones copy or split into views.
     pub fn push_batch(&mut self, b: Batch) {
         if b.is_empty() {
             return;
         }
         let time = b.time;
-        let mut data = b.data;
+        let mut rest = Some(b);
         // Fill the tail batch first if it shares the time (the back entry
         // is live by the trim invariant; merging does not change its
         // time, so the index needs no update).
         if let Some((_, Some(tail))) = self.q.back_mut() {
             if tail.time == time && tail.len() < self.cap {
-                let take = (self.cap - tail.len()).min(data.len());
-                tail.data.extend(data.drain(..take));
-                self.records += take;
+                let b = rest.take().expect("just set");
+                let room = self.cap - tail.len();
+                if b.len() <= room {
+                    self.records += b.len();
+                    tail.absorb(b);
+                } else {
+                    let (head, remainder) = b.split_at(room);
+                    self.records += head.len();
+                    tail.absorb(head);
+                    rest = Some(remainder);
+                }
             }
         }
         // Remaining records form fresh batches of at most cap records.
-        while !data.is_empty() {
-            let take = self.cap.min(data.len());
-            let chunk: Vec<Record> = data.drain(..take).collect();
-            self.append_chunk(time, chunk);
+        while let Some(b) = rest.take() {
+            if b.len() > self.cap {
+                let (head, remainder) = b.split_at(self.cap);
+                self.append_chunk(head);
+                rest = Some(remainder);
+            } else {
+                self.append_chunk(b);
+            }
         }
+        self.peak = self.peak.max(self.records);
     }
 
     /// Replay enqueue (rollback's Q′, §3.6): split to the cap like a
     /// normal enqueue, but **never** merge into the queued tail — the
     /// replayed delivery boundaries must be a deterministic function of
     /// the logged batch alone, not of whatever happens to be queued (see
-    /// the module docs on second failures during recovery).
+    /// the module docs on second failures during recovery). Replays of a
+    /// shared log-mirror batch split into sub-range views of the mirror's
+    /// allocation.
     pub fn push_batch_replay(&mut self, b: Batch) {
         if b.is_empty() {
             return;
         }
-        let time = b.time;
-        let mut data = b.data;
-        while !data.is_empty() {
-            let take = self.cap.min(data.len());
-            let chunk: Vec<Record> = data.drain(..take).collect();
-            self.append_chunk(time, chunk);
+        let mut rest = Some(b);
+        while let Some(b) = rest.take() {
+            if b.len() > self.cap {
+                let (head, remainder) = b.split_at(self.cap);
+                self.append_chunk(head);
+                rest = Some(remainder);
+            } else {
+                self.append_chunk(b);
+            }
         }
+        self.peak = self.peak.max(self.records);
     }
 
     /// Total queued *records* across all batches.
@@ -421,8 +609,8 @@ mod tests {
         let mut c = Channel::new();
         c.push(msg(2, 1));
         c.push(msg(1, 2));
-        assert_eq!(c.pop(Delivery::Fifo).unwrap().data, vec![Record::Int(1)]);
-        assert_eq!(c.pop(Delivery::Fifo).unwrap().data, vec![Record::Int(2)]);
+        assert_eq!(c.pop(Delivery::Fifo).unwrap().records(), &[Record::Int(1)][..]);
+        assert_eq!(c.pop(Delivery::Fifo).unwrap().records(), &[Record::Int(2)][..]);
         assert!(c.pop(Delivery::Fifo).is_none());
     }
 
@@ -445,9 +633,9 @@ mod tests {
         assert_eq!(c.num_batches(), 2);
         assert_eq!(c.len(), 5);
         let b = c.pop(Delivery::Fifo).unwrap();
-        assert_eq!(b.data, vec![Record::Int(0), Record::Int(1), Record::Int(2)]);
+        assert_eq!(b.records(), &[Record::Int(0), Record::Int(1), Record::Int(2)][..]);
         let b = c.pop(Delivery::Fifo).unwrap();
-        assert_eq!(b.data, vec![Record::Int(3), Record::Int(4)]);
+        assert_eq!(b.records(), &[Record::Int(3), Record::Int(4)][..]);
     }
 
     #[test]
@@ -490,10 +678,10 @@ mod tests {
         ));
         // A normal push would have coalesced all three into one batch.
         assert_eq!(c.num_batches(), 2, "replay enqueue bypasses tail-coalescing");
-        assert_eq!(c.pop(Delivery::Fifo).unwrap().data, vec![Record::Int(1)]);
+        assert_eq!(c.pop(Delivery::Fifo).unwrap().records(), &[Record::Int(1)][..]);
         assert_eq!(
-            c.pop(Delivery::Fifo).unwrap().data,
-            vec![Record::Int(2), Record::Int(3)]
+            c.pop(Delivery::Fifo).unwrap().records(),
+            &[Record::Int(2), Record::Int(3)][..]
         );
         // …but splitting to the cap still applies: the delivery unit may
         // never exceed the cap.
@@ -516,10 +704,10 @@ mod tests {
         c.push(msg(1, 12));
         let b = c.pop(Delivery::Selective).unwrap();
         assert_eq!(b.time, Time::epoch(1));
-        assert_eq!(b.data, vec![Record::Int(12)]);
+        assert_eq!(b.records(), &[Record::Int(12)][..]);
         // Remaining deliver in arrival order among equal times.
-        assert_eq!(c.pop(Delivery::Selective).unwrap().data, vec![Record::Int(10)]);
-        assert_eq!(c.pop(Delivery::Selective).unwrap().data, vec![Record::Int(11)]);
+        assert_eq!(c.pop(Delivery::Selective).unwrap().records(), &[Record::Int(10)][..]);
+        assert_eq!(c.pop(Delivery::Selective).unwrap().records(), &[Record::Int(11)][..]);
     }
 
     #[test]
@@ -601,5 +789,85 @@ mod tests {
         let bytes = b.to_bytes();
         assert_eq!(Batch::from_bytes(&bytes).unwrap(), b);
         assert_eq!(Batch::from(Message::new(Time::epoch(1), Record::Unit)).len(), 1);
+    }
+
+    #[test]
+    fn clone_and_shared_split_alias_one_allocation() {
+        let b = Batch::new(Time::epoch(0), (0..6).map(Record::Int).collect());
+        let alias = b.clone();
+        assert!(alias.shares_payload(&b), "clone is an Arc bump");
+        // A shared batch splits into sub-range views of the same payload.
+        let (head, tail) = b.split_at(2);
+        assert!(head.shares_payload(&alias) && tail.shares_payload(&alias));
+        assert_eq!(head.records(), &[Record::Int(0), Record::Int(1)][..]);
+        assert_eq!(tail.len(), 4);
+        // Views encode/compare over the visible slice only.
+        assert_eq!(
+            Batch::from_bytes(&head.to_bytes()).unwrap().records(),
+            head.records()
+        );
+    }
+
+    #[test]
+    fn unique_batch_moves_through_split_and_delivery() {
+        use crate::engine::record::record_clones_on_this_thread;
+        let before = record_clones_on_this_thread();
+        let b = Batch::new(Time::epoch(0), (0..6).map(Record::Int).collect());
+        let (head, tail) = b.split_at(4);
+        assert_eq!(head.len() + tail.len(), 6);
+        let v = tail.into_records();
+        assert_eq!(v, vec![Record::Int(4), Record::Int(5)]);
+        assert_eq!(
+            record_clones_on_this_thread(),
+            before,
+            "unique payloads split and unwrap without cloning records"
+        );
+    }
+
+    #[test]
+    fn absorb_copies_only_when_aliased() {
+        use crate::engine::record::record_clones_on_this_thread;
+        // Unique + unique: pure moves.
+        let before = record_clones_on_this_thread();
+        let mut a = Batch::new(Time::epoch(0), vec![Record::Int(1)]);
+        a.absorb(Batch::one(Time::epoch(0), Record::Int(2)));
+        assert_eq!(record_clones_on_this_thread(), before, "unique absorb moves");
+        assert_eq!(a.records(), &[Record::Int(1), Record::Int(2)][..]);
+        // Aliased tail: CoW — the alias keeps its original bytes.
+        let alias = a.clone();
+        a.absorb(Batch::one(Time::epoch(0), Record::Int(3)));
+        assert!(!a.shares_payload(&alias), "CoW detached the mutated batch");
+        assert_eq!(alias.records(), &[Record::Int(1), Record::Int(2)][..]);
+        assert_eq!(a.len(), 3);
+    }
+
+    #[test]
+    fn coalescing_into_aliased_tail_preserves_the_alias() {
+        // A queued tail aliased by a capture mirror must not be mutated
+        // in place by later coalescing.
+        let mut c = Channel::with_cap(8);
+        let first = Batch::one(Time::epoch(0), Record::Int(1));
+        let mirror = first.clone(); // e.g. a durable-log mirror entry
+        c.push_batch(first);
+        c.push_batch(Batch::one(Time::epoch(0), Record::Int(2)));
+        assert_eq!(c.num_batches(), 1, "coalescing still merges");
+        assert_eq!(mirror.records(), &[Record::Int(1)][..], "mirror bytes intact");
+        let merged = c.pop(Delivery::Fifo).unwrap();
+        assert_eq!(merged.records(), &[Record::Int(1), Record::Int(2)][..]);
+    }
+
+    #[test]
+    fn peak_records_tracks_high_water() {
+        let mut c = Channel::with_cap(4);
+        assert_eq!(c.peak_records(), 0);
+        for v in 0..5 {
+            c.push(msg(0, v));
+        }
+        assert_eq!(c.peak_records(), 5);
+        while c.pop(Delivery::Fifo).is_some() {}
+        assert_eq!(c.len(), 0);
+        assert_eq!(c.peak_records(), 5, "peak is a lifetime high-water mark");
+        c.push(msg(1, 9));
+        assert_eq!(c.peak_records(), 5);
     }
 }

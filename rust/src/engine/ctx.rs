@@ -106,6 +106,30 @@ impl<'a> Ctx<'a> {
         self.staged.push((port, Batch::new(time, data)));
     }
 
+    /// Stage an already-built batch on `port` at the event time — the
+    /// zero-copy counterpart of [`Ctx::send_batch`] used by the sharded
+    /// exchange fan-out: the staged batch keeps its payload allocation
+    /// (callers alias it across destinations with an `Arc` bump), only
+    /// its time is restamped. Empty batches are dropped.
+    pub(crate) fn send_shared(&mut self, port: usize, mut b: Batch) {
+        if b.is_empty() {
+            return;
+        }
+        b.time = self.natural_time(port);
+        self.staged.push((port, b));
+    }
+
+    /// [`Ctx::send_shared`] with an explicit destination-domain time
+    /// (the `send_at` pass-through of the exchange fan-out).
+    pub(crate) fn send_shared_at(&mut self, port: usize, time: Time, mut b: Batch) {
+        if b.is_empty() {
+            return;
+        }
+        self.check_not_backwards(port, &time);
+        b.time = time;
+        self.staged.push((port, b));
+    }
+
     fn check_not_backwards(&self, port: usize, time: &Time) {
         if let Some(min) = self.summaries[port].apply(&self.event_time) {
             debug_assert!(

@@ -1,10 +1,12 @@
 //! The dataflow execution engine (substrate for the paper's Naiad
 //! implementation context, §4).
 //!
-//! - [`record`]: message payloads;
-//! - [`channel`]: per-edge **batch** queues ([`Batch`] = one time + a
-//!   record vector, coalesced up to a configurable `batch_cap`) with
-//!   §3.3 selective re-ordering on whole batches;
+//! - [`record`]: message payloads (with a thread-local clone counter the
+//!   zero-copy tests audit);
+//! - [`channel`]: per-edge **batch** queues ([`Batch`] = one time + an
+//!   `Arc`-shared record payload, coalesced up to a configurable
+//!   `batch_cap`; splits are sub-range views, mutation is copy-on-write)
+//!   with §3.3 selective re-ordering on whole batches;
 //! - [`processor`]: the operator trait (per-record `on_message` plus the
 //!   batch entry point `on_batch` with a default per-record shim) + the
 //!   time-partitioned state helper;
@@ -12,7 +14,8 @@
 //!   staging (`send_batch` / `send_batch_at`);
 //! - [`scheduler`]: the deterministic batch-at-a-time event loop and
 //!   failure/rollback primitives (`batch_cap = 1` is the original
-//!   record-at-a-time engine, bit for bit), plus the per-shard-group
+//!   record-at-a-time engine, bit for bit), credit-based backpressure
+//!   under an optional `mailbox_cap`, plus the per-shard-group
 //!   `Worker` loop extracted from it;
 //! - [`sharded`]: the multi-worker layer — per-shard sub-batch routing
 //!   over hash-exchange edge bundles, with determinism preserved;
@@ -31,7 +34,7 @@ pub mod sharded;
 pub use channel::{Batch, Channel, Delivery, Message};
 pub use ctx::Ctx;
 pub use processor::{Processor, Statefulness, TimeState};
-pub use record::Record;
+pub use record::{record_clones_on_this_thread, Record};
 pub use scheduler::{Engine, EventKind, EventReport};
 pub use sharded::{
     build_procs, shard_groups, shard_of_record, ProcFactory, ShardRouter, ShardedEngine,

@@ -44,11 +44,40 @@
 //! not, which is why the test suite compares *canonical* (per-time,
 //! order-quotiented) outputs — byte-identical to the sequential engine's.
 //!
+//! ## Credit-based backpressure
+//!
+//! With a mailbox budget set ([`Engine::set_mailbox_cap`]), workers gate
+//! delivery against a shared per-edge record-occupancy array (seeded at
+//! decompose, senders add at flush, owners subtract at pop; Relaxed —
+//! the signal is advisory). A worker *parks* an edge whose destination
+//! has a full out-queue and round-robins its other work; if only parked
+//! work remains it raises a flag and joins barrier A, so the parking
+//! invariant weakens to "no *ungated* deliverable batch". Credit
+//! refreshes naturally at barrier rounds: the decision pass sees queued
+//! mail (*continue*) or eligible notifications (*notify*, exempt from
+//! gating — progress announcements must flow for queues to drain)
+//! before it ever considers the parked flag, and the subsequent round
+//! re-reads occupancy that consumers have meanwhile drained.
+//!
+//! Deadlock safety: when the coordinator finds nothing else — no mail,
+//! no eligible notification — but parked work remains, it publishes a
+//! *force* round: each worker delivers **one** batch ignoring credit,
+//! then resumes gated delivery. Credit can defer work, never deny it,
+//! so every round makes global progress (mail drained, a notification
+//! fired, a forced batch delivered, or quiescence declared) and a full
+//! feedback loop cannot wedge the drain; the overshoot is bounded by
+//! one delivery's output per worker per forced round. Quiescence
+//! decisions are unchanged — *quiesce* requires the parked flag clear,
+//! so capped drains finish exactly when uncapped ones do.
+//!
 //! Failure handling composes by construction: a drain always recomposes
 //! the engine before returning (workers are parked and joined), so
 //! failure injection and the Fig. 6 solve/reset run against the ordinary
 //! sequential engine between drains — the pause-drain-rollback protocol
-//! described in `ft/README.md`.
+//! described in `ft/README.md`. Recovery's pause-drain is likewise
+//! never blocked by credit: replayed batches enqueue unconditionally
+//! (enqueues never block) and the forced round guarantees the drain
+//! completes — the "temporarily-lifted budget" of the recovery path.
 //!
 //! Under asynchronous persistence
 //! ([`crate::ft::storage::PersistMode::Async`]) the store's writer
@@ -90,6 +119,10 @@ impl EventObserver for NoopObserver {
 const DECISION_CONTINUE: u8 = 0;
 const DECISION_NOTIFY: u8 = 1;
 const DECISION_QUIESCE: u8 = 2;
+/// Forced-progress round: every deliverable edge in the system is
+/// credit-parked, so each worker delivers one batch ignoring credit
+/// (see the module docs).
+const DECISION_FORCE: u8 = 3;
 
 /// Cross-group mailboxes: one locked FIFO per group plus a global
 /// queued count the coordinator reads at barrier A to detect in-flight
@@ -164,6 +197,10 @@ struct Control {
     /// A worker panicked; the coordinator aborts the drain so everyone
     /// unwinds cleanly instead of deadlocking on the barrier.
     panicked: std::sync::atomic::AtomicBool,
+    /// Some worker parked at barrier A with credit-gated local work
+    /// remaining (only possible under a mailbox budget). Consumed by the
+    /// decision pass each round.
+    parked: std::sync::atomic::AtomicBool,
 }
 
 impl Control {
@@ -192,11 +229,16 @@ fn worker_loop<O: EventObserver>(w: &mut WorkerState, obs: &mut O, hub: &MailHub
             }
         }
         // Parking invariant: local channels are empty unless the step
-        // budget expired mid-drain.
+        // budget expired mid-drain or the remaining batches are
+        // credit-parked (mailbox budget set). Raise the parked flag so
+        // the coordinator knows quiescence is not yet warranted.
         debug_assert!(
-            !w.has_local_work() || !ctl.budget_left(),
+            !w.has_local_work() || !ctl.budget_left() || w.gating_active(),
             "worker parked with deliverable batches and budget remaining"
         );
+        if w.has_local_work() && ctl.budget_left() {
+            ctl.parked.store(true, Ordering::SeqCst);
+        }
         // Deposit deltas + pending snapshot, then park.
         {
             let mut dep = ctl.deposits.lock().unwrap();
@@ -207,6 +249,17 @@ fn worker_loop<O: EventObserver>(w: &mut WorkerState, obs: &mut O, hub: &MailHub
         match ctl.decision.load(Ordering::SeqCst) {
             DECISION_CONTINUE => continue,
             DECISION_QUIESCE => break,
+            DECISION_FORCE => {
+                // One batch past the budget, then back to gated delivery
+                // in the next message phase.
+                if ctl.budget_left() {
+                    let mut mail = |g: usize, e: EdgeId, b: Batch| hub.send(g, e, b);
+                    if let Some(rep) = w.deliver_forced(&mut mail) {
+                        ctl.events.fetch_add(1, Ordering::Relaxed);
+                        obs.on_event(&rep, w);
+                    }
+                }
+            }
             _ => {
                 let todo: Vec<(ProcId, Time)> = {
                     let mut el = ctl.eligible.lock().unwrap();
@@ -266,6 +319,10 @@ fn decide_round(
         }
     }
     tracker.apply(&all);
+    // Consume the parked flag every round — workers re-raise it whenever
+    // they park with credit-gated work, so a stale value never leaks into
+    // a later decision.
+    let parked = ctl.parked.swap(false, Ordering::SeqCst);
     if ctl.panicked.load(Ordering::SeqCst) || !ctl.budget_left() {
         return DECISION_QUIESCE;
     }
@@ -275,7 +332,7 @@ fn decide_round(
         return DECISION_CONTINUE;
     }
     if pendings.is_empty() {
-        return DECISION_QUIESCE;
+        return if parked { DECISION_FORCE } else { DECISION_QUIESCE };
     }
     // Global message quiescence: decide notifications against the
     // fully-merged tracker (the sequential phase-2 precondition).
@@ -297,6 +354,8 @@ fn decide_round(
     }
     if any {
         DECISION_NOTIFY
+    } else if parked {
+        DECISION_FORCE
     } else {
         DECISION_QUIESCE
     }
@@ -357,6 +416,7 @@ pub(crate) fn drive_parallel<O: EventObserver>(
         events: AtomicU64::new(0),
         max_steps: max_steps as u64,
         panicked: std::sync::atomic::AtomicBool::new(false),
+        parked: std::sync::atomic::AtomicBool::new(false),
     };
     {
         let (tracker, topo) = engine.coordinator_parts();

@@ -9,7 +9,10 @@
 //! sub-batches** — each record routed by [`shard_of_record`], record
 //! order preserved per destination — and each non-empty sub-batch ships
 //! as one unit through the exchange edge, so a W-wide exchange costs W
-//! channel enqueues per batch rather than one per record.
+//! channel enqueues per batch rather than one per record. Broadcast
+//! fan-out is zero-copy: every destination's sub-batch aliases the one
+//! staged payload allocation (`Arc` bumps), and keyed splits move
+//! records out of the staged batch rather than cloning them.
 //!
 //! [`ShardedEngine`] is the engine-level façade: the ordinary
 //! deterministic [`Engine`] running the physical topology, plus the
@@ -126,16 +129,29 @@ impl ShardRouter {
             };
             match route.partition {
                 Partition::Broadcast => {
+                    // Every destination aliases ONE payload allocation —
+                    // `clone` is an `Arc` bump, not a record copy.
                     for j in 0..route.fanout {
-                        send(ctx, route.base + j, batch.data.clone());
+                        let sub = batch.clone();
+                        if use_send {
+                            ctx.send_shared(route.base + j, sub);
+                        } else {
+                            ctx.send_shared_at(route.base + j, btime, sub);
+                        }
                     }
                 }
                 Partition::ByKey if route.fanout <= 1 => {
-                    send(ctx, route.base, batch.data);
+                    if use_send {
+                        ctx.send_shared(route.base, batch);
+                    } else {
+                        ctx.send_shared_at(route.base, btime, batch);
+                    }
                 }
                 Partition::ByKey => {
+                    // Keyed split: records move out of the (unshared)
+                    // staged batch — no clones on the exchange path.
                     let mut subs: Vec<Vec<Record>> = vec![Vec::new(); route.fanout];
-                    for r in batch.data {
+                    for r in batch.into_records() {
                         let j = shard_of_record(&r, route.fanout);
                         subs[j].push(r);
                     }

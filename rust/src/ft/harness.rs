@@ -52,7 +52,7 @@
 //! suffix is re-executed.
 
 use crate::engine::scheduler::WorkerState;
-use crate::engine::{Delivery, Engine, EventKind, EventReport, Processor, Record};
+use crate::engine::{Batch, Delivery, Engine, EventKind, EventReport, Processor, Record};
 use crate::frontier::Frontier;
 use crate::ft::meta::{CkptMeta, LogEntry, MetaRecord, StoredCheckpoint};
 use crate::ft::policy::Policy;
@@ -63,54 +63,76 @@ use crate::util::ser::{Decode, Encode, Reader, SerError};
 use std::collections::{BTreeMap, BTreeSet};
 use std::sync::Arc;
 
-/// One event of a recorded history H(p) (for [`Policy::FullHistory`]).
-/// A delivered batch is one history event — replay re-delivers it whole.
+/// What happened in one event of a recorded history H(p) (for
+/// [`Policy::FullHistory`]). A delivered batch is one history event —
+/// replay re-delivers it whole; `data` *aliases* the delivered payload
+/// (an `Arc` bump at capture time, not a deep copy).
 #[derive(Clone, Debug, PartialEq)]
-pub enum HistoryEvent {
-    Message { edge: EdgeId, time: Time, data: Vec<Record> },
+pub enum HistoryKind {
+    Message { edge: EdgeId, time: Time, data: Batch },
     Notification { time: Time },
     Input { time: Time, data: Record },
+}
+
+/// One event of a recorded history H(p), with the durable bookkeeping
+/// replay needs beyond the event itself: `sent_seq` counts the records
+/// this event sent on each per-checkpoint-projection out-edge (sends
+/// into sequence-number domains). The counts make `history_meta` exact —
+/// a full-history processor's φ on such an edge is the sum of counts
+/// over replayed events, which survives crashes where the volatile
+/// `sent_events` delta does not.
+#[derive(Clone, Debug, PartialEq)]
+pub struct HistoryEvent {
+    pub kind: HistoryKind,
+    /// (out-edge, records sent on it) while handling this event —
+    /// per-checkpoint-projection edges only; empty for most events.
+    pub sent_seq: Vec<(EdgeId, u64)>,
 }
 
 impl HistoryEvent {
     /// The logical time of the event.
     pub fn time(&self) -> Time {
-        match self {
-            HistoryEvent::Message { time, .. }
-            | HistoryEvent::Notification { time }
-            | HistoryEvent::Input { time, .. } => *time,
+        match &self.kind {
+            HistoryKind::Message { time, .. }
+            | HistoryKind::Notification { time }
+            | HistoryKind::Input { time, .. } => *time,
         }
     }
 }
 
 impl Encode for HistoryEvent {
     fn encode(&self, w: &mut crate::util::ser::Writer) {
-        match self {
-            HistoryEvent::Message { edge, time, data } => {
+        match &self.kind {
+            HistoryKind::Message { edge, time, data } => {
                 w.u8(0);
                 w.varint(edge.0 as u64);
                 time.encode(w);
                 w.varint(data.len() as u64);
-                for r in data {
+                for r in data.records() {
                     r.encode(w);
                 }
             }
-            HistoryEvent::Notification { time } => {
+            HistoryKind::Notification { time } => {
                 w.u8(1);
                 time.encode(w);
             }
-            HistoryEvent::Input { time, data } => {
+            HistoryKind::Input { time, data } => {
                 w.u8(2);
                 time.encode(w);
                 data.encode(w);
             }
+        }
+        w.varint(self.sent_seq.len() as u64);
+        for (e, n) in &self.sent_seq {
+            w.varint(e.0 as u64);
+            w.varint(*n);
         }
     }
 }
 
 impl Decode for HistoryEvent {
     fn decode(r: &mut Reader) -> Result<Self, SerError> {
-        match r.u8()? {
+        let kind = match r.u8()? {
             0 => {
                 let edge = EdgeId(r.varint()? as u32);
                 let time = Time::decode(r)?;
@@ -119,12 +141,18 @@ impl Decode for HistoryEvent {
                 for _ in 0..n {
                     data.push(Record::decode(r)?);
                 }
-                Ok(HistoryEvent::Message { edge, time, data })
+                HistoryKind::Message { edge, time, data: Batch::new(time, data) }
             }
-            1 => Ok(HistoryEvent::Notification { time: Time::decode(r)? }),
-            2 => Ok(HistoryEvent::Input { time: Time::decode(r)?, data: Record::decode(r)? }),
-            found => Err(SerError::BadTag { expected: 0, found, at: 0 }),
+            1 => HistoryKind::Notification { time: Time::decode(r)? },
+            2 => HistoryKind::Input { time: Time::decode(r)?, data: Record::decode(r)? },
+            found => return Err(SerError::BadTag { expected: 0, found, at: 0 }),
+        };
+        let ns = r.varint()? as usize;
+        let mut sent_seq = Vec::with_capacity(ns.min(1 << 12));
+        for _ in 0..ns {
+            sent_seq.push((EdgeId(r.varint()? as u32), r.varint()?));
         }
+        Ok(HistoryEvent { kind, sent_seq })
     }
 }
 
@@ -477,6 +505,11 @@ fn observe_event<V: FtView>(
     view: &V,
 ) {
     stats.events_observed += 1;
+    // The history entry (if any) is persisted *after* the sends loop so
+    // it can carry the event's per-checkpoint send counts. The reorder is
+    // safe: full-history is the only policy that records history and it
+    // never logs outputs, so no same-processor durable write interleaves.
+    let mut hist_kind: Option<HistoryKind> = None;
     let (proc, evt_time) = match &rep.kind {
         EventKind::Message { proc, edge, time, len, data } => {
             stats.records_observed += *len as u64;
@@ -489,8 +522,9 @@ fn observe_event<V: FtView>(
                     *len,
                     "full-history policies require event-data capture"
                 );
-                let ev = HistoryEvent::Message { edge: *edge, time: *time, data: data.clone() };
-                persist_history(store, ft, stats, proc.0, ev);
+                // Aliases the captured payload — an `Arc` bump.
+                hist_kind =
+                    Some(HistoryKind::Message { edge: *edge, time: *time, data: data.clone() });
             }
             (*proc, *time)
         }
@@ -499,8 +533,7 @@ fn observe_event<V: FtView>(
                 ft.notified_new.insert(LexTime(*time));
             }
             if ft.policy.records_history() {
-                let ev = HistoryEvent::Notification { time: *time };
-                persist_history(store, ft, stats, proc.0, ev);
+                hist_kind = Some(HistoryKind::Notification { time: *time });
             }
             ft.completions += 1;
             (*proc, *time)
@@ -510,8 +543,7 @@ fn observe_event<V: FtView>(
                 ft.input_new.insert(LexTime(*time));
             }
             if ft.policy.records_history() {
-                let ev = HistoryEvent::Input { time: *time, data: data.clone() };
-                persist_history(store, ft, stats, proc.0, ev);
+                hist_kind = Some(HistoryKind::Input { time: *time, data: data.clone() });
             }
             (*proc, *time)
         }
@@ -572,6 +604,23 @@ fn observe_event<V: FtView>(
             // all share one, so a single pair covers them.
             ft.discarded_new.entry(*e).or_default().push((evt_time, batch.time));
         }
+    }
+    // Persist the history entry with the event's per-checkpoint send
+    // counts riding along: `sent_events` is volatile (a crash clears it),
+    // so recovery rebuilds exact φ for per-checkpoint out-edges from
+    // these durable counts instead of panicking on a missing static
+    // projection.
+    if let Some(kind) = hist_kind {
+        let mut sent_seq: Vec<(EdgeId, u64)> = Vec::new();
+        for (e, batch) in &rep.sent {
+            if topo.projection(*e).is_per_checkpoint() {
+                match sent_seq.iter_mut().find(|(se, _)| se == e) {
+                    Some((_, n)) => *n += batch.len() as u64,
+                    None => sent_seq.push((*e, batch.len() as u64)),
+                }
+            }
+        }
+        persist_history(store, ft, stats, proc.0, HistoryEvent { kind, sent_seq });
     }
     // Policy triggers.
     match ft.policy {
@@ -888,6 +937,14 @@ impl FtSystem {
         FtSystem::reopen(plan.topo.clone(), procs, policies, delivery, store, batch_cap)
     }
 
+    /// Bound every data channel to roughly `cap` queued records with
+    /// credit-based backpressure (see [`Engine::set_mailbox_cap`]); `None`
+    /// restores unbounded mailboxes. Not persisted: callers must re-apply
+    /// after [`FtSystem::reopen`] / [`FtSystem::reopen_sharded`].
+    pub fn set_mailbox_cap(&mut self, cap: Option<usize>) {
+        self.engine.set_mailbox_cap(cap);
+    }
+
     /// Rebuild every processor's Table-1 mirrors from the durable store
     /// (one ranged key scan per processor).
     fn load_durable(&mut self) {
@@ -969,7 +1026,7 @@ impl FtSystem {
                 Policy::FullHistory => ft
                     .history
                     .iter()
-                    .filter(|e| matches!(e, HistoryEvent::Notification { .. }))
+                    .filter(|e| matches!(e.kind, HistoryKind::Notification { .. }))
                     .count() as u64,
                 Policy::Lazy { every, .. } => ft.chain.len() as u64 * every,
                 _ => 0,
@@ -1546,8 +1603,12 @@ mod tests {
         sys.run_to_quiescence(1000);
         let h = &sys.ft[sum.0 as usize].history;
         assert_eq!(h.len(), 2, "one message + one notification");
-        assert!(matches!(h[0], HistoryEvent::Message { .. }));
-        assert!(matches!(h[1], HistoryEvent::Notification { .. }));
+        assert!(matches!(h[0].kind, HistoryKind::Message { .. }));
+        assert!(matches!(h[1].kind, HistoryKind::Notification { .. }));
+        assert!(
+            h[0].sent_seq.is_empty(),
+            "identity-projection out-edges carry no per-checkpoint counts"
+        );
         assert!(!sys.store.keys_for(sum.0, Kind::HistoryEvent).is_empty());
     }
 

@@ -25,7 +25,7 @@ pub mod rollback;
 pub mod storage;
 
 pub use backend_file::{FileBackend, FileBackendOptions};
-pub use harness::{FtStats, FtSystem, HistoryEvent};
+pub use harness::{FtStats, FtSystem, HistoryEvent, HistoryKind};
 pub use meta::{CkptMeta, LogEntry, MetaRecord, StoredCheckpoint};
 pub use policy::Policy;
 pub use rollback::{choose_frontiers, verify_plan, Available, RollbackInput, RollbackPlan};

@@ -44,7 +44,7 @@
 
 use crate::engine::Batch;
 use crate::frontier::Frontier;
-use crate::ft::harness::{FtSystem, HistoryEvent};
+use crate::ft::harness::{FtSystem, HistoryEvent, HistoryKind};
 use crate::ft::meta::CkptMeta;
 use crate::ft::policy::Policy;
 use crate::ft::rollback::{choose_frontiers, Available, RollbackInput, RollbackPlan};
@@ -164,7 +164,7 @@ impl FtSystem {
                     (true, Policy::FullHistory) => {
                         let mut f = Frontier::Bottom;
                         for ev in &ft.history {
-                            if let HistoryEvent::Notification { time } = ev {
+                            if let HistoryKind::Notification { time } = &ev.kind {
                                 f.insert(*time);
                             }
                         }
@@ -233,29 +233,43 @@ impl FtSystem {
     /// Synthesize Ξ(p,f) for a failed full-history processor from its
     /// durable history: M̄ from the recorded deliveries inside `f`,
     /// N̄ = recorded notifications inside `f`, D̄ = ∅ (replay regenerates
-    /// sends, acting as a log), φ = static projection of `f`.
+    /// sends, acting as a log), φ = static projection of `f` — or, on
+    /// per-checkpoint (seq) out-edges, the exact watermark rebuilt from
+    /// the send counts each history event carries
+    /// ([`HistoryEvent::sent_seq`]): the volatile `sent_events` delta
+    /// died with the process, but replaying H@f regenerates exactly the
+    /// sends those durable counts record.
     fn history_meta(&self, p: ProcId, f: &Frontier) -> CkptMeta {
         let ft = &self.ft[p.0 as usize];
         let mut meta = CkptMeta::empty(self.topo.in_edges(p), self.topo.out_edges(p));
         meta.f = f.clone();
         for ev in &ft.history {
-            match ev {
-                HistoryEvent::Message { edge, time, .. } if f.contains(time) => {
+            match &ev.kind {
+                HistoryKind::Message { edge, time, .. } if f.contains(time) => {
                     let cur = meta.m_bar.get_mut(edge).unwrap();
                     cur.insert(*time);
                 }
-                HistoryEvent::Notification { time } if f.contains(time) => {
+                HistoryKind::Notification { time } if f.contains(time) => {
                     meta.n_bar.insert(*time);
                 }
                 _ => {}
             }
         }
         for &e in self.topo.out_edges(p) {
-            let fr = self
-                .topo
-                .projection(e)
-                .apply(f)
-                .expect("full-history processors need static out-projections");
+            let proj = self.topo.projection(e);
+            let fr = if proj.is_per_checkpoint() {
+                let count: u64 = ft
+                    .history
+                    .iter()
+                    .filter(|ev| f.contains(&ev.time()))
+                    .flat_map(|ev| ev.sent_seq.iter())
+                    .filter(|(se, _)| *se == e)
+                    .map(|(_, n)| *n)
+                    .sum();
+                Frontier::seq_watermarks([(e, count)])
+            } else {
+                proj.apply(f).expect("non-per-checkpoint projections are static")
+            };
             meta.phi.insert(e, fr);
             meta.d_bar.insert(e, Frontier::Bottom);
         }
@@ -341,7 +355,7 @@ impl FtSystem {
                 // the replayed notification frontier.
                 let mut done = Frontier::Bottom;
                 for ev in &self.ft[p.0 as usize].history {
-                    if let HistoryEvent::Notification { time } = ev {
+                    if let HistoryKind::Notification { time } = &ev.kind {
                         if fp.contains(time) {
                             done.insert(*time);
                         }
@@ -349,6 +363,19 @@ impl FtSystem {
                 }
                 self.engine.set_completed(p, done);
                 regen[p.0 as usize] = self.replay_history(p, &fp);
+                // Replay renumbered seq-domain sends from 1; live
+                // execution must continue where the regenerated virtual
+                // log left off or downstream dedup breaks.
+                for &e in self.topo.out_edges(p) {
+                    if self.topo.projection(e).is_per_checkpoint() {
+                        let c: u64 = regen[p.0 as usize]
+                            .iter()
+                            .filter(|(se, _, _)| *se == e)
+                            .map(|(_, _, b)| b.len() as u64)
+                            .sum();
+                        self.engine.set_seq_counter(e, c);
+                    }
+                }
                 report.restored_from_checkpoint += 1;
             } else if policy.has_chain() {
                 let (state, pending, phi_counts, n_bar) = {
@@ -571,27 +598,42 @@ impl FtSystem {
         let mut sends = Vec::new();
         let mut requested: Vec<Time> = Vec::new();
         let mut consumed: Vec<Time> = Vec::new();
+        // Sequence numbering restarts from the history's beginning, just
+        // like the original execution did (pre-increment to match
+        // `split_staged`: the first record gets `(e, 1)`).
+        let mut seq_counts: Vec<u64> = vec![0; out_edges.len()];
         for ev in events {
             let t = ev.time();
             let mut ctx = crate::engine::Ctx::new(t, &out_edges, &summaries, &seq_dst);
-            match &ev {
-                HistoryEvent::Message { edge, time, data } => {
+            match &ev.kind {
+                HistoryKind::Message { edge, time, data } => {
                     // Re-deliver the recorded batch whole — replay is
                     // byte-identical to the original delivery.
                     let port = self.topo.input_port(*edge);
-                    self.engine.proc_mut(p).on_batch(port, *time, data.clone(), &mut ctx);
+                    self.engine.proc_mut(p).on_batch(port, *time, data.records().to_vec(), &mut ctx);
                 }
-                HistoryEvent::Notification { time } => {
+                HistoryKind::Notification { time } => {
                     consumed.push(*time);
                     self.engine.proc_mut(p).on_notification(*time, &mut ctx);
                 }
-                HistoryEvent::Input { time, data } => {
+                HistoryKind::Input { time, data } => {
                     self.engine.proc_mut(p).on_input(*time, data.clone(), &mut ctx);
                 }
             }
             let (staged, notify) = ctx.into_parts();
             for (port, batch) in staged {
-                sends.push((out_edges[port], t, batch));
+                let e = out_edges[port];
+                if seq_dst[port] {
+                    // Mirror the engine flush: every record into a seq
+                    // domain carries its own `(e, s)` time.
+                    for r in batch.into_records() {
+                        let c = &mut seq_counts[port];
+                        *c += 1;
+                        sends.push((e, t, Batch::one(Time::seq(e, *c), r)));
+                    }
+                } else {
+                    sends.push((e, t, batch));
+                }
             }
             requested.extend(notify);
         }
@@ -613,7 +655,7 @@ mod tests {
     use super::*;
     use crate::engine::{Delivery, Processor, Record};
     use crate::graph::{GraphBuilder, Projection};
-    use crate::operators::{shared_vec, Buffer, Sink, Source, SumByTime};
+    use crate::operators::{shared_vec, Buffer, EpochToSeq, Sink, Source, SumByTime};
     use crate::ft::storage::Store;
     use crate::time::TimeDomain;
     use std::sync::Arc;
@@ -887,5 +929,76 @@ mod tests {
         assert_eq!(contents.len(), 2);
         assert_eq!(contents[0].1, vec![Record::kv(0, 5.0)]);
         assert_eq!(contents[1].1, vec![Record::kv(0, 9.0)]);
+    }
+
+    /// The lifted FAILURE_MODES exclusion: a `FullHistory` processor
+    /// whose out-edge projects `PerCheckpoint` (a seq-domain consumer).
+    /// `history_meta` derives the offer's φ for that edge from
+    /// `HistoryEvent::sent_seq` — the exact watermark replay regenerates
+    /// — `replay_history` renumbers the regenerated sends from 1 exactly
+    /// like the live flush, and `apply_plan` restores the engine's
+    /// per-edge counter to the regenerated total, so post-recovery sends
+    /// continue the numbering with no gap and no reuse.
+    #[test]
+    fn full_history_per_checkpoint_out_edge_recovers_exact_watermark() {
+        let mut g = GraphBuilder::new();
+        let src = g.add_proc("src", TimeDomain::EPOCH);
+        let bridge = g.add_proc("bridge", TimeDomain::EPOCH);
+        let probe = g.add_proc("probe", TimeDomain::Seq);
+        g.connect(src, bridge, Projection::Identity);
+        let seq_edge = g.connect(bridge, probe, Projection::PerCheckpoint);
+        let topo = Arc::new(g.build().unwrap());
+        let procs: Vec<Box<dyn Processor>> = vec![
+            Box::new(Source),
+            Box::new(EpochToSeq::default()),
+            Box::new(Buffer::default()),
+        ];
+        let mut sys = FtSystem::new(
+            topo,
+            procs,
+            vec![Policy::LogOutputs, Policy::FullHistory, Policy::Eager],
+            Delivery::Fifo,
+            Store::new(1),
+        );
+        let (src, bridge) = (ProcId(0), ProcId(1));
+        for ep in 0..2u64 {
+            sys.advance_input(src, Time::epoch(ep));
+            for v in 0..3i64 {
+                sys.push_input(src, Time::epoch(ep), Record::Int(ep as i64 * 10 + v));
+            }
+            sys.advance_input(src, Time::epoch(ep + 1));
+            sys.run_to_quiescence(10_000);
+        }
+        assert_eq!(sys.engine.seq_counter(seq_edge), 6);
+        sys.inject_failures(&[bridge]);
+        sys.recover();
+        // Both epochs were notified before the crash, so the whole
+        // history is retained and replay regenerates all six sends — the
+        // counter lands exactly where the live run left it.
+        assert_eq!(
+            sys.engine.seq_counter(seq_edge),
+            6,
+            "counter must be restored to the regenerated total"
+        );
+        // One more epoch: numbering continues at 7..9, and the eager
+        // probe (which deduplicated the regenerated 1..6) holds every
+        // sequence number exactly once.
+        sys.advance_input(src, Time::epoch(2));
+        for v in 0..3i64 {
+            sys.push_input(src, Time::epoch(2), Record::Int(20 + v));
+        }
+        sys.advance_input(src, Time::epoch(3));
+        sys.close_input(src);
+        sys.run_to_quiescence(10_000);
+        assert_eq!(sys.engine.seq_counter(seq_edge), 9);
+        let blob = sys.engine.proc(ProcId(2)).checkpoint_upto(&Frontier::Top);
+        let mut b = Buffer::default();
+        b.restore(&blob);
+        let seqs: Vec<u64> = b.contents().iter().map(|(t, _)| t.seq_of()).collect();
+        assert_eq!(
+            seqs,
+            (1..=9).collect::<Vec<u64>>(),
+            "seq consumer must observe every number exactly once, in order"
+        );
     }
 }

@@ -126,6 +126,10 @@ pub struct Knobs {
     pub durable: bool,
     /// Group-commit threshold of the durable WAL.
     pub flush_every_n: usize,
+    /// Per-edge queue budget for credit-based backpressure (`None` =
+    /// unbounded). Tiny caps (1–2) force constant parking/forced-round
+    /// traffic, which is exactly where gating bugs would hide.
+    pub mailbox_cap: Option<usize>,
     /// Policy of the `mid` stage (when present).
     pub mid_policy: Policy,
     /// Policy of the `join` stage (when present).
@@ -141,13 +145,17 @@ pub struct Knobs {
 impl Knobs {
     /// Draw knobs from the seed stream. `shape` constrains the policy
     /// space: an eager seq tail hangs off a per-checkpoint edge, whose
-    /// φ counts only chain policies record — `agg` is then forced to a
-    /// logging lazy policy (`FullHistory` has no static projection for
-    /// such an edge; see `FAILURE_MODES.md`).
+    /// φ must be reconstructible after a crash — `agg` is then a logging
+    /// lazy policy (φ per checkpoint) or `FullHistory` (exact φ rebuilt
+    /// from the per-event `sent_seq` counts; see `FAILURE_MODES.md`).
     pub fn generate(rng: &mut Rng, shape: &Shape) -> Knobs {
         let batch_cap = *rng.choose(&[1usize, 2, 8, 64]);
         // Bias toward 1: only the sequential engine can crash mid-drain.
         let threads = *rng.choose(&[1usize, 1, 2, 4]);
+        // Bias toward None (the pre-backpressure behavior), but make the
+        // pathological tiny budgets common enough to matter.
+        let mailbox_cap =
+            *rng.choose(&[None, None, Some(1usize), Some(2), Some(8), Some(64)]);
         let persist_mode = if rng.chance(0.5) {
             PersistMode::Sync
         } else {
@@ -167,7 +175,10 @@ impl Knobs {
         ]);
         let every = 1 + rng.below(2);
         let agg_policy = if shape.eager_tail {
-            Policy::Lazy { every, log_outputs: true }
+            *rng.choose(&[
+                Policy::Lazy { every, log_outputs: true },
+                Policy::FullHistory,
+            ])
         } else {
             *rng.choose(&[
                 Policy::Lazy { every, log_outputs: true },
@@ -184,6 +195,7 @@ impl Knobs {
             write_cost,
             durable,
             flush_every_n,
+            mailbox_cap,
             mid_policy,
             join_policy,
             agg_policy,
@@ -204,6 +216,7 @@ impl Knobs {
             persist_mode: PersistMode::Sync,
             durable: false,
             gc: false,
+            mailbox_cap: None,
             ..self.clone()
         }
     }
@@ -211,9 +224,10 @@ impl Knobs {
     /// Compact single-line description (campaign logs, corpus records).
     pub fn describe(&self) -> String {
         format!(
-            "cap={} threads={} persist={:?} cost={} durable={} flush={} agg={:?} gc={}",
+            "cap={} threads={} mbox={:?} persist={:?} cost={} durable={} flush={} agg={:?} gc={}",
             self.batch_cap,
             self.threads,
+            self.mailbox_cap,
             self.persist_mode,
             self.write_cost,
             self.durable,
@@ -376,7 +390,7 @@ fn build_inner(
     }
 
     let plan = Arc::new(b.build().expect("generated topology is well-formed"));
-    let sys = match reopen {
+    let mut sys = match reopen {
         None => FtSystem::new_sharded_with_cap(
             &plan,
             factories,
@@ -398,6 +412,8 @@ fn build_inner(
             sys
         }
     };
+    // Not persisted: re-applied here on both fresh builds and reopens.
+    sys.set_mailbox_cap(knobs.mailbox_cap);
     let threads = knobs.threads.max(1);
     let groups = crate::engine::shard_groups(&plan, threads);
     Built { sys, plan, sources, collect, etail, policies, groups, threads }
@@ -437,18 +453,47 @@ mod tests {
     }
 
     #[test]
-    fn eager_tail_forces_logging_chain_upstream() {
-        for seed in 0..200u64 {
+    fn eager_tail_admits_logging_chain_and_full_history() {
+        let (mut lazy, mut hist) = (0u32, 0u32);
+        for seed in 0..400u64 {
             let mut rng = Rng::new(seed);
             let shape = Shape::generate(&mut rng);
             let knobs = Knobs::generate(&mut rng, &shape);
             if shape.eager_tail {
                 match knobs.agg_policy {
-                    Policy::Lazy { log_outputs, .. } => assert!(log_outputs),
-                    other => panic!("eager tail over non-chain agg policy {other:?}"),
+                    Policy::Lazy { log_outputs, .. } => {
+                        assert!(log_outputs, "unlogged lazy cannot replay the seq tail");
+                        lazy += 1;
+                    }
+                    Policy::FullHistory => hist += 1,
+                    other => panic!("eager tail over non-replayable agg policy {other:?}"),
                 }
             }
         }
+        assert!(lazy > 0, "logging-lazy agg never drawn under an eager tail");
+        assert!(
+            hist > 0,
+            "FullHistory agg never drawn under an eager tail — the exclusion is lifted"
+        );
+    }
+
+    #[test]
+    fn mailbox_cap_knob_reaches_tiny_budgets() {
+        let mut tiny = 0u32;
+        let mut unbounded = 0u32;
+        for seed in 0..400u64 {
+            let mut rng = Rng::new(seed);
+            let shape = Shape::generate(&mut rng);
+            let knobs = Knobs::generate(&mut rng, &shape);
+            match knobs.mailbox_cap {
+                Some(c) if c <= 2 => tiny += 1,
+                None => unbounded += 1,
+                _ => {}
+            }
+            assert_eq!(knobs.reference().mailbox_cap, None, "oracle runs unbounded");
+        }
+        assert!(tiny > 0, "caps 1–2 must be generated");
+        assert!(unbounded > 0, "the pre-backpressure configuration must stay covered");
     }
 
     #[test]

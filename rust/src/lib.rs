@@ -6,15 +6,24 @@
 //! - a deterministic timely-dataflow-style execution engine with cyclic
 //!   graphs, structured logical times and notifications ([`engine`],
 //!   [`progress`], [`graph`], [`operators`]). The execution core is
-//!   **batch-at-a-time**: channels queue `Batch { time, data }` units
-//!   coalesced up to a configurable `batch_cap`, operators implement a
-//!   batch entry point (`on_batch`, with a per-record default shim), and
-//!   every layer above — Table-1 metadata, message logs, histories,
-//!   sharded exchange — moves at batch granularity. A batch of records
-//!   at one logical time is a *single event* under the rollback model
-//!   (every Table-1 structure is a frontier of times, blind to record
-//!   multiplicity within a time), so rollback semantics are unchanged
-//!   and `batch_cap = 1` reproduces record-at-a-time delivery exactly;
+//!   **batch-at-a-time** and **zero-copy**: channels queue [`engine::Batch`]
+//!   units — one time plus an `Arc`-shared record payload — coalesced up
+//!   to a configurable `batch_cap`; splits are sub-range views, mutation
+//!   is copy-on-write, and capture/log/history views alias the queued
+//!   allocation, so the capture-off FIFO path performs zero record
+//!   clones from ingestion to sink (audited by `tests/test_zero_copy.rs`).
+//!   Operators implement a batch entry point (`on_batch`, with a
+//!   per-record default shim), and every layer above — Table-1 metadata,
+//!   message logs, histories, sharded exchange — moves at batch
+//!   granularity. A batch of records at one logical time is a *single
+//!   event* under the rollback model (every Table-1 structure is a
+//!   frontier of times, blind to record multiplicity within a time), so
+//!   rollback semantics are unchanged and `batch_cap = 1` reproduces
+//!   record-at-a-time delivery exactly. Every queue is boundable:
+//!   an optional per-edge `mailbox_cap` applies credit-based
+//!   backpressure (`engine::scheduler` module docs; `--mailbox-cap` on
+//!   the CLI), deferring — never denying — deliveries, so bounded runs
+//!   produce byte-identical output;
 //! - a **sharded multi-worker layer**: logical vertices partition into W
 //!   worker shards connected by hash-exchange edges
 //!   ([`graph::sharding`], [`engine::sharded`]); each shard is a

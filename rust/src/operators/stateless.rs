@@ -29,8 +29,14 @@ impl Processor for Source {
     }
 
     fn on_input(&mut self, _t: Time, data: Record, ctx: &mut Ctx) {
-        for port in 0..ctx.num_outputs() {
+        // Clone only for fan-out; the last port takes the record by move
+        // (port order preserved, so flush order is unchanged).
+        let n = ctx.num_outputs();
+        for port in 0..n.saturating_sub(1) {
             ctx.send(port, data.clone());
+        }
+        if n > 0 {
+            ctx.send(n - 1, data);
         }
     }
 }

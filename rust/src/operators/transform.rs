@@ -48,9 +48,14 @@ impl Processor for EpochToSeq {
     fn on_notification(&mut self, t: Time, ctx: &mut Ctx) {
         if let Some(records) = self.buf.remove(&t) {
             // One staged batch per port; the engine splits it per record
-            // at flush, assigning each its own (e, s) sequence time.
-            for port in 0..ctx.num_outputs() {
+            // at flush, assigning each its own (e, s) sequence time. The
+            // last port takes the vector by move.
+            let n = ctx.num_outputs();
+            for port in 0..n.saturating_sub(1) {
                 ctx.send_batch(port, records.clone());
+            }
+            if n > 0 {
+                ctx.send_batch(n - 1, records);
             }
         }
     }

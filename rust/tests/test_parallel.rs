@@ -16,7 +16,7 @@ use falkirk::bench_support::sharded::{
 };
 use falkirk::engine::{Delivery, ProcFactory, Record, ShardedEngine};
 use falkirk::ft::PersistMode;
-use falkirk::graph::Projection;
+use falkirk::graph::{EdgeId, Projection};
 use falkirk::operators::{shared_vec, CountByKey, Sink, Source};
 use falkirk::time::{Time, TimeDomain};
 use falkirk::ShardedBuilder;
@@ -97,6 +97,113 @@ fn parallel_output_matches_sequential_under_async_persistence() {
                 assert_eq!(p.sys.ack_lag(), 0, "drain must end with a settled pipeline");
             }
         }
+    }
+}
+
+/// The backpressure grid: threads {1,2,4} × batch caps {1,8,64} ×
+/// mailbox caps {2,64,∞}. Credit can defer deliveries, never deny them,
+/// so a bounded hot path must reach quiescence in every cell and produce
+/// the same observable output as the unbounded sequential run — caps 1–2
+/// run the engine permanently gated (every round ends in parked or
+/// forced deliveries), which is exactly the regime the fuzz corpus seeds
+/// pin.
+#[test]
+fn output_is_invariant_under_mailbox_caps() {
+    let run = |threads: usize, batch_cap: usize, mailbox_cap: Option<usize>| -> Vec<u8> {
+        let mut p = pipeline(&ShardedConfig {
+            workers: 8,
+            two_stage: true,
+            batch_cap,
+            threads,
+            mailbox_cap,
+            ..Default::default()
+        });
+        let tp = drive_workload(&mut p, 11, EPOCHS, RECORDS, KEYS);
+        assert_eq!(tp.records, EPOCHS * RECORDS as u64);
+        assert!(
+            p.sys.engine.is_quiescent(),
+            "capped drain wedged: threads={threads} batch_cap={batch_cap} \
+             mailbox_cap={mailbox_cap:?}"
+        );
+        canonical_output(&p.sys, p.collect_proc())
+    };
+    let base = run(1, 8, None);
+    assert!(!base.is_empty());
+    for threads in [1usize, 2, 4] {
+        for batch_cap in [1usize, 8, 64] {
+            for mailbox_cap in [Some(2usize), Some(64), None] {
+                assert_eq!(
+                    base,
+                    run(threads, batch_cap, mailbox_cap),
+                    "output diverged: threads={threads} batch_cap={batch_cap} \
+                     mailbox_cap={mailbox_cap:?}"
+                );
+            }
+        }
+    }
+}
+
+/// Skewed-key stress: every record carries the same key, funnelling both
+/// whole epochs through one map shard and one count shard while the
+/// mailbox budget sits at a small fraction of the epoch size. Three
+/// obligations per cell: the drain completes (no deadlock — forced
+/// rounds release the hot feedback edge), the output is byte-identical
+/// to the unbounded run, and peak *interior* queue residency respects
+/// the credit bound — a gated delivery finds its destination's
+/// out-queues below the cap and overshoots by at most its own emission,
+/// with forced-round / advisory-occupancy slack on top — far below the
+/// epoch-sized pile-up an unbounded run could park on one edge.
+#[test]
+fn hot_key_slow_sink_is_bounded_and_deadlock_free() {
+    const HOT_RECORDS: usize = 512;
+    const CAP: usize = 4;
+    const BATCH: usize = 8;
+    let run = |mailbox_cap: Option<usize>, threads: usize| -> (Vec<u8>, usize) {
+        let mut p = pipeline(&ShardedConfig {
+            workers: 4,
+            two_stage: true,
+            batch_cap: BATCH,
+            threads,
+            mailbox_cap,
+            ..Default::default()
+        });
+        let src = p.src_proc();
+        for ep in 0..2u64 {
+            p.sys.advance_input(src, Time::epoch(ep));
+            for i in 0..HOT_RECORDS {
+                p.sys.push_input(src, Time::epoch(ep), Record::kv(0, (i % 10) as f64));
+            }
+            p.sys.advance_input(src, Time::epoch(ep + 1));
+            p.run(5_000_000);
+        }
+        p.sys.close_input(src);
+        p.run(5_000_000);
+        assert!(
+            p.sys.engine.is_quiescent(),
+            "hot-key drain wedged: threads={threads} mailbox_cap={mailbox_cap:?}"
+        );
+        // Interior residency only: external pushes land on the source's
+        // out-edges before any drain runs (input is never refused), so
+        // the budget governs every edge downstream of a gated delivery.
+        let topo = &p.plan.topo;
+        let interior_peak = (0..topo.num_edges() as u32)
+            .map(EdgeId)
+            .filter(|&e| topo.src(e) != src)
+            .map(|e| p.sys.engine.channel(e).peak_records())
+            .max()
+            .expect("pipeline has interior edges");
+        (canonical_output(&p.sys, p.collect_proc()), interior_peak)
+    };
+    let (base, _) = run(None, 1);
+    assert!(!base.is_empty());
+    for threads in [1usize, 4] {
+        let (out, peak) = run(Some(CAP), threads);
+        assert_eq!(out, base, "backpressure changed hot-key output (threads={threads})");
+        assert!(
+            peak <= CAP + 4 * BATCH,
+            "interior queue exceeded the credit bound: peak={peak} records \
+             (cap={CAP} batch={BATCH} threads={threads})"
+        );
     }
 }
 

@@ -119,11 +119,15 @@ impl ModelChannel {
             return;
         }
         let time = b.time;
-        let mut data = b.data;
+        // The model deep-copies freely — it is the *behavioral* reference
+        // (queue shapes and pop order), not the allocation reference.
+        let mut data = b.into_records();
         if let Some(tail) = self.q.last_mut() {
-            if tail.time == time && tail.data.len() < self.cap {
-                let take = (self.cap - tail.data.len()).min(data.len());
-                tail.data.extend(data.drain(..take));
+            if tail.time == time && tail.len() < self.cap {
+                let take = (self.cap - tail.len()).min(data.len());
+                let mut merged = tail.records().to_vec();
+                merged.extend(data.drain(..take));
+                *tail = Batch::new(time, merged);
             }
         }
         while !data.is_empty() {

@@ -66,7 +66,7 @@ impl Processor for SeqProbe {
     }
 }
 
-fn build() -> (FtSystem, ProcId, ProcId, ProcId, EdgeId, Arc<Mutex<Vec<u64>>>) {
+fn build(bridge_policy: Policy) -> (FtSystem, ProcId, ProcId, ProcId, EdgeId, Arc<Mutex<Vec<u64>>>) {
     let mut g = GraphBuilder::new();
     let src = g.add_proc("src", TimeDomain::EPOCH);
     let bridge = g.add_proc("bridge", TimeDomain::EPOCH);
@@ -83,11 +83,7 @@ fn build() -> (FtSystem, ProcId, ProcId, ProcId, EdgeId, Arc<Mutex<Vec<u64>>>) {
     let sys = FtSystem::new(
         topo,
         procs,
-        vec![
-            Policy::LogOutputs,
-            Policy::Lazy { every: 1, log_outputs: true },
-            Policy::Eager,
-        ],
+        vec![Policy::LogOutputs, bridge_policy, Policy::Eager],
         Delivery::Fifo,
         Store::new(1),
     );
@@ -98,7 +94,11 @@ fn build() -> (FtSystem, ProcId, ProcId, ProcId, EdgeId, Arc<Mutex<Vec<u64>>>) {
 /// inside epoch 2 (None = failure-free). Returns (observed seqs, final
 /// seq counter).
 fn run(victim: Option<(&str, usize)>) -> (Vec<u64>, u64) {
-    let (mut sys, src, bridge, probe, seq_edge, observed) = build();
+    run_with(Policy::Lazy { every: 1, log_outputs: true }, victim)
+}
+
+fn run_with(bridge_policy: Policy, victim: Option<(&str, usize)>) -> (Vec<u64>, u64) {
+    let (mut sys, src, bridge, probe, seq_edge, observed) = build(bridge_policy);
     for ep in 0..EPOCHS {
         sys.advance_input(src, Time::epoch(ep));
         for v in 0..PER_EPOCH {
@@ -108,12 +108,13 @@ fn run(victim: Option<(&str, usize)>) -> (Vec<u64>, u64) {
         if let Some((name, steps)) = victim {
             if ep == 2 {
                 sys.run_to_quiescence(steps);
-                let v = match name {
-                    "bridge" => bridge,
-                    "probe" => probe,
+                let victims = match name {
+                    "bridge" => vec![bridge],
+                    "probe" => vec![probe],
+                    "both" => vec![bridge, probe],
                     other => panic!("unknown victim {other}"),
                 };
-                sys.inject_failures(&[v]);
+                sys.inject_failures(&victims);
                 sys.recover();
             }
         }
@@ -162,5 +163,35 @@ fn probe_crash_preserves_seq_monotonicity_at_every_step() {
         let (seqs, counter) = run(Some(("probe", steps)));
         expect_contiguous(&seqs, &format!("probe crash after {steps} steps"));
         assert_eq!(counter, TOTAL, "counter unaffected by consumer crash (steps={steps})");
+    }
+}
+
+/// The lifted FAILURE_MODES exclusion, swept over every interleaving: a
+/// `FullHistory` bridge feeding the `PerCheckpoint` edge. Recovery
+/// derives the history offer's φ from `HistoryEvent::sent_seq`, replays
+/// the bridge's input history, renumbers the regenerated seq sends from
+/// 1 exactly like the live flush, and restores the engine counter to
+/// the regenerated total — the seq consumer must still observe
+/// 1..=TOTAL exactly once at every crash point.
+#[test]
+fn full_history_bridge_crash_preserves_seq_monotonicity_at_every_step() {
+    for steps in 0..16 {
+        let (seqs, counter) = run_with(Policy::FullHistory, Some(("bridge", steps)));
+        expect_contiguous(&seqs, &format!("FullHistory bridge crash after {steps} steps"));
+        assert_eq!(counter, TOTAL, "counter restored+resumed (steps={steps})");
+    }
+}
+
+/// Bridge and probe failing *together* under `FullHistory`: the probe's
+/// restored completed-times must deduplicate exactly the regenerated
+/// sends at or below its recovered frontier, and accept the rest — any
+/// off-by-one between the renumbered replay and the probe's frontier
+/// shows up as a gap or duplicate in the observation log.
+#[test]
+fn full_history_double_crash_stays_contiguous_at_every_step() {
+    for steps in 0..16 {
+        let (seqs, counter) = run_with(Policy::FullHistory, Some(("both", steps)));
+        expect_contiguous(&seqs, &format!("FullHistory double crash after {steps} steps"));
+        assert_eq!(counter, TOTAL, "counter restored+resumed (steps={steps})");
     }
 }

@@ -290,6 +290,53 @@ fn recovery_grid_is_byte_identical_under_async_persistence() {
     }
 }
 
+/// The backpressure recovery grid: threads {1,2,4} × batch caps
+/// {1,8,64} × mailbox caps {2,64,∞} under fault injection — recovered
+/// output must stay byte-identical to the unbounded failure-free run in
+/// every cell. Recovery's pause-drain runs with the budget logically
+/// lifted (replayed batches enqueue unconditionally; forced rounds
+/// guarantee the drain completes), so a crash landing on credit-parked
+/// edges must neither wedge nor perturb replay.
+#[test]
+fn recovery_grid_is_byte_identical_under_mailbox_caps() {
+    let (clean, _, _) = drive(
+        &ShardedConfig { workers: 4, two_stage: true, batch_cap: 8, ..Default::default() },
+        7,
+        None,
+    );
+    for threads in [1usize, 2, 4] {
+        for batch_cap in [1usize, 8, 64] {
+            for mailbox_cap in [Some(2usize), Some(64), None] {
+                let cfg = ShardedConfig {
+                    workers: 4,
+                    two_stage: true,
+                    batch_cap,
+                    threads,
+                    mailbox_cap,
+                    ..Default::default()
+                };
+                let failures = [
+                    // Epoch boundary: nothing in flight, queues settled.
+                    Failure { shard: 0, epoch: 2, records_before: 0, presteps: 0 },
+                    // Mid-epoch, mid-exchange: the crash lands while the
+                    // exchange (gated under a tiny cap) is partly drained.
+                    Failure { shard: 2, epoch: 2, records_before: RECORDS / 2, presteps: 60 },
+                ];
+                for f in failures {
+                    let (failed, stats, rep) = drive(&cfg, 7, Some(f));
+                    assert!(rep.is_some());
+                    assert_eq!(stats.recoveries, 1);
+                    assert_eq!(
+                        clean, failed,
+                        "output diverged: threads={threads} batch_cap={batch_cap} \
+                         mailbox_cap={mailbox_cap:?} failure={f:?}"
+                    );
+                }
+            }
+        }
+    }
+}
+
 /// Crashing every shard of the vertex still recovers (degenerates to the
 /// whole-vertex rollback a non-sharded system would do).
 #[test]

@@ -1,0 +1,135 @@
+//! Zero-copy hot path: clone accounting on FIFO delivery.
+//!
+//! `Batch` carries its records behind a shared `Arc` payload, so channel
+//! coalescing, splits, capture aliases and log writes never duplicate
+//! records; `Record::clone` is counted through a thread-local
+//! ([`falkirk::engine::record_clones_on_this_thread`]) precisely so
+//! these tests can assert the *absence* of copies instead of trusting
+//! the implementation's intent. The contract:
+//!
+//! - capture-off delivery (the production hot path): **zero** record
+//!   clones from channel to operator — unique batches move;
+//! - ingestion: exactly one clone per pushed record (the
+//!   `EventKind::Input` report copy), none in the downstream flush;
+//! - capture-on delivery (full-history runs): the report *aliases* the
+//!   payload (an `Arc` bump), and the only copy is the visible slice
+//!   handed to the operator;
+//! - sent-capture (the FT harness's logging view): report batches share
+//!   their payload allocation with the queued batches byte for byte.
+
+use falkirk::engine::{
+    record_clones_on_this_thread, Delivery, Engine, Processor, Record,
+};
+use falkirk::graph::{GraphBuilder, Projection};
+use falkirk::operators::{shared_vec, Map, Sink, Source};
+use falkirk::time::{Time, TimeDomain};
+use std::sync::Arc;
+
+const EPOCHS: u64 = 3;
+const RECORDS: i64 = 32;
+
+/// src → map → sink, plain engine (no FT harness), coalescing channels.
+fn build(batch_cap: usize) -> (Engine, falkirk::graph::ProcId) {
+    let mut g = GraphBuilder::new();
+    let src = g.add_proc("src", TimeDomain::EPOCH);
+    let map = g.add_proc("map", TimeDomain::EPOCH);
+    let sink = g.add_proc("sink", TimeDomain::EPOCH);
+    g.connect(src, map, Projection::Identity);
+    g.connect(map, sink, Projection::Identity);
+    let topo = Arc::new(g.build().unwrap());
+    let out = shared_vec();
+    let procs: Vec<Box<dyn Processor>> = vec![
+        Box::new(Source),
+        Box::new(Map(|r: Record| r)),
+        Box::new(Sink(out)),
+    ];
+    let eng = Engine::with_batch_cap(topo, procs, Delivery::Fifo, batch_cap);
+    (eng, src)
+}
+
+fn push_epochs(eng: &mut Engine, src: falkirk::graph::ProcId) -> u64 {
+    for ep in 0..EPOCHS {
+        eng.advance_input(src, Time::epoch(ep));
+        for v in 0..RECORDS {
+            eng.push_input(src, Time::epoch(ep), Record::Int(v));
+        }
+        eng.advance_input(src, Time::epoch(ep + 1));
+    }
+    eng.close_input(src);
+    EPOCHS * RECORDS as u64
+}
+
+/// The acceptance bar for the zero-copy pipeline: with capture off (the
+/// default), draining every queued batch through two operator hops
+/// performs **zero** `Record` clones — payloads move from ingestion to
+/// sink, at every coalescing cap.
+#[test]
+fn capture_off_fifo_delivery_is_clone_free() {
+    for batch_cap in [1usize, 8, 64] {
+        let (mut eng, src) = build(batch_cap);
+        let total = push_epochs(&mut eng, src);
+        let before = record_clones_on_this_thread();
+        let mut events = 0u64;
+        while eng.step().is_some() {
+            events += 1;
+        }
+        assert!(events >= total / batch_cap.max(1) as u64, "drain delivered the workload");
+        assert_eq!(
+            record_clones_on_this_thread(),
+            before,
+            "capture-off delivery must not clone records (batch_cap={batch_cap})"
+        );
+    }
+}
+
+/// Ingestion cost is exactly one clone per record — the copy placed in
+/// the `EventKind::Input` report — and the flush into the source's
+/// out-channel contributes none.
+#[test]
+fn ingestion_costs_exactly_the_report_copy() {
+    let (mut eng, src) = build(8);
+    eng.advance_input(src, Time::epoch(0));
+    let before = record_clones_on_this_thread();
+    for v in 0..RECORDS {
+        eng.push_input(src, Time::epoch(0), Record::Int(v));
+    }
+    assert_eq!(
+        record_clones_on_this_thread(),
+        before + RECORDS as u64,
+        "one report copy per pushed record, nothing else"
+    );
+}
+
+/// With data capture on (what full-history policies require), the report
+/// batch aliases the payload and the only per-delivery copy is the
+/// visible slice handed to the operator: clones == records delivered.
+#[test]
+fn capture_on_delivery_costs_exactly_the_operator_copy() {
+    let (mut eng, src) = build(8);
+    eng.set_event_data_capture(true);
+    let total = push_epochs(&mut eng, src);
+    let before = record_clones_on_this_thread();
+    while eng.step().is_some() {}
+    // Two hops (src→map, map→sink): each record is delivered twice.
+    assert_eq!(
+        record_clones_on_this_thread(),
+        before + 2 * total,
+        "capture-on delivery clones exactly the operator's visible slice"
+    );
+}
+
+/// Sent-capture (the FT harness's logging view): each report entry and
+/// the queued batch are two handles on one payload allocation — the log
+/// write path reads the same bytes the channel will later deliver,
+/// without a copy.
+#[test]
+fn sent_capture_report_aliases_queued_batch() {
+    let (mut eng, src) = build(8);
+    eng.set_sent_capture(true);
+    eng.advance_input(src, Time::epoch(0));
+    let rep = eng.push_input(src, Time::epoch(0), Record::Int(7));
+    let (e, sent) = &rep.sent[0];
+    let queued = eng.channel(*e).iter().next().expect("flush queued the batch");
+    assert!(sent.shares_payload(queued), "report and channel share one allocation");
+    assert_eq!(sent.records(), queued.records());
+}

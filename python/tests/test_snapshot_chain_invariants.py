@@ -1,0 +1,241 @@
+"""Randomized model validation of the content-addressed snapshot-chain
+invariants the Rust store asserts (rust/src/ft/storage.rs
+stage_put_snapshot / materialize_snapshot and rust/src/ft/harness.rs
+sweep_unreachable_snapshots).
+
+The container cannot execute the Rust test-suite, so this file keeps the
+desk-check honest from the other side: a tiny executable model of the
+chunked checkpoint representation is driven over thousands of random
+state histories (overwrites, appends, truncations), and the invariants
+the Rust suites assert are checked on the model:
+
+  1. materialization is lossless — walking a delta chain newest-to-
+     oldest with first-hash-wins per position reassembles the reference
+     state byte-identically, for every live chain entry, under Full and
+     Delta policies alike;
+  2. chain depth never exceeds max_chain — the forced-full bound caps
+     every materialization walk;
+  3. the reachability sweep is exact — after GC-prefix or crash-suffix
+     truncation it keeps a snapshot record iff some live entry's walk
+     touches it and a chunk iff a retained snapshot lists its hash, so
+     survivors still materialize and the store holds nothing else;
+  4. dedup accounting — a chunk whose hash is already resident is never
+     rewritten, so Delta durable bytes scale with the changed span
+     (an append-only epoch rewrites only the trailing chunks).
+
+Stdlib only: run directly
+(``python3 python/tests/test_snapshot_chain_invariants.py``) or under
+pytest.
+"""
+
+import random
+
+CHUNK = 8  # model's SNAPSHOT_CHUNK_BYTES; tiny so chains have many chunks
+MAX_CHAIN_CHOICES = (1, 2, 8)
+N_HISTORIES = 1500
+N_STEPS = 40
+
+
+def fnv1a(data):
+    """fnv1a-64, bit-compatible with rust/src/util (the chunk address)."""
+    h = 0xCBF29CE484222325
+    for b in data:
+        h ^= b
+        h = (h * 0x100000001B3) & 0xFFFFFFFFFFFFFFFF
+    return h
+
+
+def chunks_of(state):
+    """(pos, hash, bytes) for every CHUNK-sized span; final span ragged."""
+    out = []
+    for pos in range(0, max(1, (len(state) + CHUNK - 1) // CHUNK)):
+        span = bytes(state[pos * CHUNK : (pos + 1) * CHUNK])
+        out.append((pos, fnv1a(span), span))
+    return out
+
+
+class ModelStore:
+    """Chunk store + snapshot records of one processor."""
+
+    def __init__(self, max_chain):
+        self.max_chain = max_chain  # None models SnapshotPolicy::Full
+        self.chunks = {}  # hash -> bytes
+        self.snaps = {}  # tag -> (state_len, [(pos, hash)], prior_tag | None)
+        self.next_tag = 1
+        self.chunks_written = 0
+        self.chunks_reused = 0
+
+    def chain_depth(self, tag):
+        depth, seen = 0, set()
+        while tag is not None and tag not in seen:
+            seen.add(tag)
+            depth += 1
+            tag = self.snaps[tag][2]
+        return depth
+
+    def put_snapshot(self, state, last_acked):
+        """stage_put_snapshot: full listing, or a sparse delta on a base."""
+        tag = self.next_tag
+        self.next_tag += 1
+        all_chunks = chunks_of(state)
+        base = None
+        if (
+            self.max_chain is not None
+            and last_acked is not None
+            and self.chain_depth(last_acked) < self.max_chain
+        ):
+            base = last_acked
+        if base is None:
+            listed = [(p, h) for p, h, _ in all_chunks]
+        else:
+            base_state = self.materialize(base)
+            base_hashes = {p: h for p, h, _ in chunks_of(base_state)}
+            listed = [
+                (p, h) for p, h, _ in all_chunks if base_hashes.get(p) != h
+            ]
+        for p, h, span in all_chunks:
+            if (p, h) not in listed:
+                continue
+            if h in self.chunks:
+                self.chunks_reused += 1
+            else:
+                self.chunks[h] = span
+                self.chunks_written += 1
+        self.snaps[tag] = (len(state), listed, base)
+        return tag
+
+    def materialize(self, tag):
+        """Walk newest-to-oldest, first hash wins per position."""
+        state_len, _, _ = self.snaps[tag]
+        n = max(1, (state_len + CHUNK - 1) // CHUNK)
+        hashes = [None] * n
+        cur = tag
+        while cur is not None:
+            _, listed, prior = self.snaps[cur]
+            for p, h in listed:
+                if p < n and hashes[p] is None:
+                    hashes[p] = h
+            if all(h is not None for h in hashes):
+                break
+            assert prior is None or prior < cur, "chain must descend"
+            cur = prior
+        out = bytearray()
+        for p, h in enumerate(hashes):
+            assert h is not None, f"tag {tag}: position {p} unreachable"
+            span = self.chunks[h]
+            assert len(span) == min(CHUNK, state_len - p * CHUNK) or (
+                state_len == 0 and len(span) == 0
+            ), f"tag {tag}: chunk span mismatch at {p}"
+            out += span
+        return bytes(out[:state_len])
+
+    def sweep(self, live_tags):
+        """sweep_unreachable_snapshots: retain what live walks touch."""
+        reachable = set()
+        for t in live_tags:
+            while t is not None and t not in reachable:
+                reachable.add(t)
+                t = self.snaps[t][2]
+        self.snaps = {t: s for t, s in self.snaps.items() if t in reachable}
+        listed = {h for _, l, _ in self.snaps.values() for _, h in l}
+        self.chunks = {h: b for h, b in self.chunks.items() if h in listed}
+        return reachable
+
+
+def mutate(rng, state):
+    """One epoch of state evolution: overwrite, append, or truncate."""
+    op = rng.randrange(10)
+    if op < 5 and state:  # overwrite a span in place
+        at = rng.randrange(len(state))
+        for i in range(at, min(len(state), at + rng.randrange(1, 2 * CHUNK))):
+            state[i] = rng.randrange(256)
+    elif op < 9:  # append (the Buffer-collector shape: old chunks stable)
+        state += bytes(rng.randrange(256) for _ in range(rng.randrange(1, 3 * CHUNK)))
+    elif state:  # truncate
+        del state[rng.randrange(len(state)) :]
+    return state
+
+
+def run_history(seed):
+    rng = random.Random(seed)
+    max_chain = rng.choice((None,) + MAX_CHAIN_CHOICES)  # None = Full
+    store = ModelStore(max_chain)
+    state = bytearray(rng.randrange(256) for _ in range(rng.randrange(4 * CHUNK)))
+    chain = []  # live entries: (tag, reference bytes at checkpoint time)
+    for step in range(N_STEPS):
+        tag_msg = f"seed {seed} step {step} max_chain {max_chain}"
+        mutate(rng, state)
+        last = chain[-1][0] if chain else None
+        t = store.put_snapshot(state, last)
+        chain.append((t, bytes(state)))
+
+        # Invariant 2: the forced-full bound caps every walk.
+        for tg, _ in chain:
+            depth = store.chain_depth(tg)
+            bound = 1 if max_chain is None else max_chain
+            assert depth <= bound, f"{tag_msg}: tag {tg} depth {depth} > {bound}"
+
+        # Occasional truncation, then the reachability sweep.
+        if chain and rng.randrange(4) == 0:
+            if rng.randrange(2):  # GC: monitor drops a prefix
+                chain = chain[rng.randrange(len(chain)) :]
+            else:  # crash/repair: conservative suffix drop
+                chain = chain[: rng.randrange(len(chain)) + 1]
+            reachable = store.sweep([tg for tg, _ in chain])
+            # Invariant 3: exact — nothing beyond the reachable set stays.
+            assert set(store.snaps) == reachable, f"{tag_msg}: sweep kept orphans"
+            listed = {h for _, l, _ in store.snaps.values() for _, h in l}
+            assert set(store.chunks) == listed, f"{tag_msg}: chunk set != listed set"
+
+        # Invariant 1: every live entry still materializes byte-identically.
+        for tg, ref in chain:
+            got = store.materialize(tg)
+            assert got == ref, f"{tag_msg}: tag {tg} materialized {got!r} != {ref!r}"
+
+
+def test_snapshot_chain_invariants_over_random_histories():
+    for seed in range(N_HISTORIES):
+        run_history(seed)
+
+
+def test_append_only_delta_writes_only_the_tail():
+    # Invariant 4: with Delta and append-only growth, each checkpoint
+    # rewrites at most the previously-ragged boundary chunk plus the new
+    # tail — never the stable interior.
+    store = ModelStore(max_chain=8)
+    state = bytearray()
+    last = None
+    for step in range(64):
+        before = store.chunks_written
+        grown = bytes((step + i) % 256 for i in range(5))
+        state += grown
+        last = store.put_snapshot(state, last)
+        new_chunks = store.chunks_written - before
+        worst = (len(grown) + CHUNK - 1) // CHUNK + 1
+        assert new_chunks <= worst, (
+            f"append step {step}: wrote {new_chunks} chunks, tail bound {worst}"
+        )
+        assert store.materialize(last) == bytes(state)
+
+
+def test_full_policy_dedups_but_never_chains():
+    # Full relists everything each time; dedup still skips unchanged
+    # chunks, and no record carries a prior pointer.
+    store = ModelStore(max_chain=None)
+    state = bytearray(range(64))
+    t1 = store.put_snapshot(state, None)
+    state[0] ^= 0xFF  # dirty exactly one chunk
+    t2 = store.put_snapshot(state, t1)
+    assert store.snaps[t2][2] is None, "Full snapshot must not chain"
+    assert store.chunks_reused >= len(store.snaps[t2][1]) - 1, (
+        "unchanged chunks must dedup, not rewrite"
+    )
+    assert store.materialize(t2) == bytes(state)
+
+
+if __name__ == "__main__":
+    test_snapshot_chain_invariants_over_random_histories()
+    test_append_only_delta_writes_only_the_tail()
+    test_full_policy_dedups_but_never_chains()
+    print("ok: snapshot-chain invariants hold over "
+          f"{N_HISTORIES} random histories (+2 directed scenarios)")

@@ -5,13 +5,61 @@
 //! Expected shape: write-through (`flush1`) pays a syscall per record;
 //! wider group commit amortizes it toward (but never past) the
 //! in-memory backend; the recovery scan is linear in live log bytes.
+//!
+//! The `large_state_*` group measures the incremental-checkpoint win at
+//! scale: one million 8-byte keys (~8 MB of state), a thousand point
+//! updates per epoch, checkpointed as monolithic-equivalent `Full`
+//! listings vs `Delta { max_chain: 8 }` chains. Expected shape: staged
+//! bytes per checkpoint scale with the touched span under `Delta`
+//! (content-addressed dedup already spares unchanged *chunks* under
+//! `Full`; the delta additionally shrinks the listing record), and the
+//! cold reopen+materialize walks at most `max_chain` records.
 
 use falkirk::bench_support::{BenchConfig, Bencher};
-use falkirk::ft::{FileBackendOptions, Key, Kind, Store};
+use falkirk::ft::storage::{chunk_hashes, plan_snapshot, SnapshotBase};
+use falkirk::ft::{FileBackendOptions, Key, Kind, SnapshotPolicy, Store};
 use falkirk::util::tmp::TempDir;
 
 const N: u64 = 2_000;
 const PROCS: u64 = 8;
+
+const LARGE_KEYS: usize = 1_000_000;
+const CELL: usize = 8;
+const TOUCHED: usize = 1_000;
+
+/// One million 8-byte cells of keyed state, deterministically filled.
+fn large_state() -> Vec<u8> {
+    (0..LARGE_KEYS * CELL).map(|i| (i.wrapping_mul(31) % 251) as u8).collect()
+}
+
+/// One epoch of updates: `TOUCHED` point writes scattered over the key
+/// space (what a keyed operator dirties between checkpoints).
+fn touch(state: &mut [u8], epoch: u64) {
+    let stride = LARGE_KEYS / TOUCHED;
+    for k in 0..TOUCHED {
+        let key = (k * stride + epoch as usize * 7919) % LARGE_KEYS;
+        let at = key * CELL;
+        state[at] = state[at].wrapping_add(1).wrapping_add(epoch as u8);
+    }
+}
+
+/// Plan + stage one checkpoint of `state`; returns the diff base the
+/// next checkpoint chains on (what the harness tracks per processor).
+fn checkpoint_large(
+    s: &Store,
+    state: &[u8],
+    base: Option<&SnapshotBase>,
+    tag: u64,
+    policy: SnapshotPolicy,
+) -> SnapshotBase {
+    let snap = plan_snapshot(state, base, policy);
+    let walk = match snap.prior_snapshot {
+        Some(_) => base.expect("a delta always has a base").walk_len + 1,
+        None => 1,
+    };
+    s.stage_put_snapshot(0, tag, &snap, state).expect("checkpoint within limits");
+    SnapshotBase { tag, hashes: chunk_hashes(state), walk_len: walk }
+}
 
 fn fill(s: &Store, blob: &[u8]) {
     for tag in 0..N {
@@ -87,5 +135,44 @@ fn main() {
         assert!(s.backend_info().compactions > 0);
     });
 
+    // Incremental checkpoints at large state: Full vs Delta{8} on the
+    // same million-key workload — staged bytes per checkpoint, then the
+    // cold reopen + chain materialization a restart pays.
+    for (name, policy) in
+        [("full", SnapshotPolicy::Full), ("delta8", SnapshotPolicy::Delta { max_chain: 8 })]
+    {
+        let t = TempDir::new("bench-wal-snap");
+        let mut state = large_state();
+        let mut base: Option<SnapshotBase> = None;
+        let (mut tag, mut epoch) = (0u64, 0u64);
+        let s = Store::open_dir(
+            t.path(),
+            0,
+            FileBackendOptions { flush_every_n: 64, fsync: false, ..Default::default() },
+        )
+        .unwrap();
+        b.run(&format!("large_state_checkpoint/{name}"), LARGE_KEYS as f64, || {
+            touch(&mut state, epoch);
+            epoch += 1;
+            tag += 1;
+            base = Some(checkpoint_large(&s, &state, base.as_ref(), tag, policy));
+        });
+        let total_bytes = s.stats().bytes_written;
+        let (newest_tag, checkpoints) = (tag, epoch);
+        drop(s); // graceful: the buffered WAL tail flushes
+        b.run(&format!("large_state_reopen/{name}"), LARGE_KEYS as f64, || {
+            let s = Store::open_dir(t.path(), 0, FileBackendOptions::default()).unwrap();
+            let got = s.materialize_snapshot(0, newest_tag).expect("newest chain materializes");
+            assert_eq!(got.len(), LARGE_KEYS * CELL);
+        });
+        b.note(&format!(
+            "large_state/{name}: {checkpoints} checkpoints of {} bytes staged {total_bytes} \
+             durable bytes ({} per checkpoint)",
+            LARGE_KEYS * CELL,
+            total_bytes / checkpoints.max(1)
+        ));
+    }
+
     b.note("expected: file_flush1 ≪ file_flush64 ≤ mem on acked writes/sec");
+    b.note("expected: delta8 stages ~TOUCHED chunks/checkpoint ≪ full's listing");
 }

@@ -62,6 +62,12 @@ pub struct ShardedConfig {
     /// [`crate::engine::Engine::set_mailbox_cap`]. A runtime knob, not
     /// persisted state — `build_pipeline` re-applies it on reopen.
     pub mailbox_cap: Option<usize>,
+    /// Durable representation of checkpoint state: monolithic full
+    /// snapshots or content-addressed delta chains (see
+    /// [`crate::ft::SnapshotPolicy`]). Like `mailbox_cap`, a runtime
+    /// knob `build_pipeline` re-applies on reopen; chains already in the
+    /// store stay readable under either setting.
+    pub snapshot_policy: crate::ft::SnapshotPolicy,
 }
 
 impl Default for ShardedConfig {
@@ -76,6 +82,7 @@ impl Default for ShardedConfig {
             threads: 1,
             persist_mode: PersistMode::Sync,
             mailbox_cap: None,
+            snapshot_policy: crate::ft::SnapshotPolicy::Full,
         }
     }
 }
@@ -191,6 +198,7 @@ fn build_pipeline(
         }
     };
     sys.set_mailbox_cap(cfg.mailbox_cap);
+    sys.set_snapshot_policy(cfg.snapshot_policy);
     let threads = cfg.threads.max(1);
     let groups = crate::engine::shard_groups(&plan, threads);
     ShardedPipeline { sys, plan, src, map, count, collect, threads, groups }

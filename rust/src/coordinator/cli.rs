@@ -23,6 +23,8 @@ COMMANDS:
             --batch-cap B (1) --mailbox-cap M (unbounded)
             --data-dir DIR --flush-every N (8)  # durable WAL store
             --persist-async --ack-every N (8)   # staged writer pipeline
+            --snapshot-delta --snapshot-max-chain N (8)
+                             # content-addressed incremental checkpoints
   shard     Run the sharded keyed-aggregation job, optionally crashing
             one worker shard and recovering only its key range.
             --workers W (4) --epochs N (6) --records N (64) --keys N (16)
@@ -34,8 +36,12 @@ COMMANDS:
             --threads T (1)  # T>1 drains on the parallel engine
             --data-dir DIR --flush-every N (8)  # durable WAL store
             --persist-async --ack-every N (8)   # staged writer pipeline
+            --snapshot-delta --snapshot-max-chain N (8)
+                             # content-addressed incremental checkpoints
   store     Durable-store tooling.
-            inspect <dir>    # dump segment / key / byte counts of a WAL
+            inspect <dir>    # dump segment / key / byte counts of a WAL,
+                             # plus per-processor snapshot-chain depth,
+                             # chunk counts, and dedup-reused bytes
   fig7      Run a worked rollback example.  --panel a|b|c (c)
   gc-demo   Drive the §4.2 GC monitor and print watermark advances.
             --epochs N (8)
@@ -66,6 +72,26 @@ fn mailbox_cap_for(args: &Args) -> Result<Option<usize>, i32> {
             }
         },
     }
+}
+
+/// Resolve `--snapshot-delta` / `--snapshot-max-chain` into a
+/// [`crate::ft::SnapshotPolicy`]: absent = monolithic full snapshots
+/// (the historical behavior), `--snapshot-delta` = content-addressed
+/// delta chains with a forced-full walk bound.
+fn snapshot_policy_for(args: &Args) -> Result<crate::ft::SnapshotPolicy, i32> {
+    if !args.flag("snapshot-delta") {
+        if args.get("snapshot-max-chain").is_some() {
+            eprintln!("--snapshot-max-chain requires --snapshot-delta");
+            return Err(2);
+        }
+        return Ok(crate::ft::SnapshotPolicy::Full);
+    }
+    let max_chain = args.get_u64("snapshot-max-chain", 8);
+    if max_chain == 0 {
+        eprintln!("--snapshot-max-chain must be at least 1");
+        return Err(2);
+    }
+    Ok(crate::ft::SnapshotPolicy::Delta { max_chain })
 }
 
 /// Resolve `--persist-async` / `--ack-every` into a [`PersistMode`].
@@ -174,6 +200,10 @@ fn cmd_fig1(args: &Args) -> i32 {
             Ok(m) => m,
             Err(code) => return code,
         },
+        snapshot_policy: match snapshot_policy_for(args) {
+            Ok(p) => p,
+            Err(code) => return code,
+        },
     };
     let store = match store_for(args, cfg.write_cost) {
         Ok(s) => s,
@@ -188,6 +218,12 @@ fn cmd_fig1(args: &Args) -> i32 {
     println!("  storage writes   {} ({} bytes)", out.storage_writes, out.storage_bytes);
     if let crate::ft::PersistMode::Async { ack_every } = cfg.persist_mode {
         println!("  persist          async (ack_every {ack_every}), peak ack-lag {}", out.ack_lag);
+    }
+    if let crate::ft::SnapshotPolicy::Delta { max_chain } = cfg.snapshot_policy {
+        println!(
+            "  snapshots        delta (max_chain {max_chain}); chunks reused {} ({} bytes)",
+            out.chunks_reused, out.chunk_bytes_reused
+        );
     }
     if out.storage_errors > 0 {
         println!("  storage errors   {}", out.storage_errors);
@@ -244,6 +280,10 @@ fn cmd_shard(args: &Args) -> i32 {
         Ok(m) => m,
         Err(code) => return code,
     };
+    let snapshot_policy = match snapshot_policy_for(args) {
+        Ok(p) => p,
+        Err(code) => return code,
+    };
     let cfg = ShardedConfig {
         workers,
         two_stage,
@@ -251,6 +291,7 @@ fn cmd_shard(args: &Args) -> i32 {
         threads,
         mailbox_cap,
         persist_mode,
+        snapshot_policy,
         ..Default::default()
     };
     if let Some(s) = fail_shard {
@@ -316,6 +357,13 @@ fn cmd_shard(args: &Args) -> i32 {
         );
     }
     println!("  checkpoints      {}", p.sys.stats.checkpoints_taken);
+    if let crate::ft::SnapshotPolicy::Delta { max_chain } = snapshot_policy {
+        let st = p.sys.store.stats();
+        println!(
+            "  snapshots        delta (max_chain {max_chain}); chunks reused {} ({} bytes)",
+            st.chunks_reused, st.chunk_bytes_reused
+        );
+    }
     println!("  recoveries       {}", p.sys.stats.recoveries);
     println!("  replayed msgs    {}", p.sys.stats.messages_replayed);
     let out = canonical_output(&p.sys, p.collect_proc());
@@ -358,6 +406,8 @@ fn cmd_store(args: &Args) -> i32 {
                         Kind::LogEntry => "log entries",
                         Kind::HistoryEvent => "history events",
                         Kind::InputFrontier => "input markers",
+                        Kind::Chunk => "state chunks",
+                        Kind::Snapshot => "snapshot records",
                     };
                     let e = counts.entry(name).or_insert((0, 0));
                     e.0 += 1;
@@ -367,6 +417,7 @@ fn cmd_store(args: &Args) -> i32 {
             for (name, (n, bytes)) in counts {
                 println!("  {name:<16} {n} keys / {bytes} bytes");
             }
+            print_snapshot_chains(&store);
             0
         }
         other => {
@@ -376,6 +427,64 @@ fn cmd_store(args: &Args) -> i32 {
             );
             2
         }
+    }
+}
+
+/// Per-processor breakdown of the durable snapshot chains: how many
+/// snapshot records exist and how deep the newest chain walks, how many
+/// content-addressed chunks back them, and how many bytes the snapshot
+/// listings reference beyond what is stored once (the durable dedup
+/// win). Only `Kind::Snapshot` records are decoded — chunk sizes come
+/// from the index, so no chunk blob is read.
+fn print_snapshot_chains(store: &crate::ft::Store) {
+    use crate::ft::storage::chunk_span;
+    use crate::ft::{Kind, Snapshot};
+    use crate::util::ser::Decode;
+    for proc in store.procs() {
+        let mut records = std::collections::BTreeMap::new();
+        for key in store.keys_for(proc, Kind::Snapshot) {
+            let Some(bytes) = store.get(&key) else { continue };
+            if let Ok(snap) = Snapshot::from_bytes(&bytes) {
+                records.insert(key.tag, snap);
+            }
+        }
+        let Some(&newest) = records.keys().next_back() else { continue };
+        let (chunk_keys, chunk_bytes) = store
+            .scan_entries(proc)
+            .iter()
+            .filter(|(k, _)| k.kind == Kind::Chunk)
+            .fold((0u64, 0u64), |(n, b), (_, size)| (n + 1, b + size));
+        // Depth of the newest chain. Prior tags strictly decrease along
+        // a well-formed chain; stop at a non-decreasing pointer or a
+        // pruned base rather than looping.
+        let mut depth = 1u64;
+        let mut tag = newest;
+        while let Some(prior) =
+            records.get(&tag).and_then(|s| s.prior_snapshot).filter(|&p| p < tag)
+        {
+            if !records.contains_key(&prior) {
+                break;
+            }
+            depth += 1;
+            tag = prior;
+        }
+        // Bytes the listings cover, minus bytes stored once = bytes the
+        // content-addressed representation never re-wrote.
+        let listed: u64 = records
+            .values()
+            .map(|s| {
+                s.chunks
+                    .iter()
+                    .map(|&(pos, _)| chunk_span(pos as usize, s.state_len as usize).len() as u64)
+                    .sum::<u64>()
+            })
+            .sum();
+        println!(
+            "  proc {proc}: {} snapshot records (newest chain depth {depth}), \
+             {chunk_keys} chunks / {chunk_bytes} bytes, dedup-reused {} bytes",
+            records.len(),
+            listed.saturating_sub(chunk_bytes)
+        );
     }
 }
 

@@ -72,6 +72,12 @@ pub struct Fig1Config {
     /// asynchronous staged pipeline; see
     /// [`crate::ft::storage::PersistMode`]).
     pub persist_mode: crate::ft::PersistMode,
+    /// Durable representation of checkpoint state: monolithic full
+    /// snapshots or content-addressed delta chains (see
+    /// [`crate::ft::SnapshotPolicy`]). A runtime knob like
+    /// `mailbox_cap` — [`reopen`] re-applies it; the recorded chains in
+    /// the store remain readable either way.
+    pub snapshot_policy: crate::ft::SnapshotPolicy,
 }
 
 impl Default for Fig1Config {
@@ -91,6 +97,7 @@ impl Default for Fig1Config {
             batch_cap: 1,
             mailbox_cap: None,
             persist_mode: crate::ft::PersistMode::Sync,
+            snapshot_policy: crate::ft::SnapshotPolicy::Full,
         }
     }
 }
@@ -218,6 +225,7 @@ pub fn build_with_store(cfg: &Fig1Config, store: Store) -> Fig1App {
         cfg.batch_cap,
     );
     sys.set_mailbox_cap(cfg.mailbox_cap);
+    sys.set_snapshot_policy(cfg.snapshot_policy);
     Fig1App {
         sys,
         q_src: parts.q_src,
@@ -252,6 +260,7 @@ pub fn reopen(
         cfg.batch_cap,
     );
     sys.set_mailbox_cap(cfg.mailbox_cap);
+    sys.set_snapshot_policy(cfg.snapshot_policy);
     let app = Fig1App {
         sys,
         q_src: parts.q_src,
@@ -391,6 +400,12 @@ pub struct Fig1Outcome {
     pub storage_bytes: u64,
     /// Peak staged-minus-acked durable operations (0 in sync mode).
     pub ack_lag: u64,
+    /// Content-addressed chunks a snapshot listed but never re-wrote
+    /// (0 under [`crate::ft::SnapshotPolicy::Full`] with distinct
+    /// states; the dedup win under `Delta`).
+    pub chunks_reused: u64,
+    /// Bytes those reused chunks would have re-written.
+    pub chunk_bytes_reused: u64,
     /// Durable writes the store refused (oversized payloads).
     pub storage_errors: u64,
     pub events: u64,
@@ -530,6 +545,8 @@ pub fn run_with_store(cfg: &Fig1Config, store: Store) -> Fig1Outcome {
         storage_writes: st.writes,
         storage_bytes: st.bytes_written,
         ack_lag: app.sys.stats.ack_lag,
+        chunks_reused: st.chunks_reused,
+        chunk_bytes_reused: st.chunk_bytes_reused,
         storage_errors: app.sys.stats.storage_errors,
         events: app.sys.engine.events_processed(),
         recovery,

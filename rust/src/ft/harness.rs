@@ -54,9 +54,9 @@
 use crate::engine::scheduler::WorkerState;
 use crate::engine::{Batch, Delivery, Engine, EventKind, EventReport, Processor, Record};
 use crate::frontier::Frontier;
-use crate::ft::meta::{CkptMeta, LogEntry, MetaRecord, StoredCheckpoint};
-use crate::ft::policy::Policy;
-use crate::ft::storage::{Key, Kind, Store};
+use crate::ft::meta::{CkptMeta, LogEntry, MetaRecord, Snapshot, StoredCheckpoint};
+use crate::ft::policy::{Policy, SnapshotPolicy};
+use crate::ft::storage::{chunk_hashes, plan_snapshot, Key, Kind, SnapshotBase, Store};
 use crate::graph::{EdgeId, ProcId, Topology};
 use crate::time::{LexTime, Time};
 use crate::util::ser::{Decode, Encode, Reader, SerError};
@@ -223,10 +223,22 @@ pub(crate) struct ProcFt {
     /// F*(p): ascending chain of durable checkpoints (mirror).
     pub chain: Vec<StoredCheckpoint>,
     /// Storage tags + sequences of `chain` entries (parallel vector; one
-    /// tag keys both the `State` and `Meta` blob of a checkpoint; the
-    /// sequence is the Ξ write's — the state lands strictly earlier in
-    /// FIFO order, so an acked Ξ implies an acked state).
+    /// tag keys both the `Snapshot` record and the `Meta` blob of a
+    /// checkpoint; the sequence is the Ξ write's — the chunks and the
+    /// snapshot record land strictly earlier in FIFO order, so an acked
+    /// Ξ implies an acked, materializable state).
     pub chain_tags: Vec<TagSeq>,
+    /// Durable [`Snapshot`] records this processor still references,
+    /// keyed by tag — the in-memory face of the content-addressed
+    /// checkpoint representation. Holds every record reachable from a
+    /// live chain entry via `prior_snapshot` (a delta's base record
+    /// outlives its own chain entry for as long as anything chains to
+    /// it), which is exactly the GC retention rule
+    /// ([`sweep_unreachable_snapshots`]).
+    pub snapshots: BTreeMap<u64, Snapshot>,
+    /// How checkpoint states are represented durably (full snapshots vs
+    /// bounded delta chains); see [`SnapshotPolicy`].
+    pub snapshot_policy: SnapshotPolicy,
     /// Input-frontier marker intent (sources only): input times the
     /// processor has completely consumed with their resulting sends
     /// staged in the log — the §4.2 Ξ of a stateless logging source.
@@ -277,6 +289,8 @@ impl ProcFt {
             history_tags: Vec::new(),
             chain: Vec::new(),
             chain_tags: Vec::new(),
+            snapshots: BTreeMap::new(),
+            snapshot_policy: SnapshotPolicy::default(),
             input_mark: Frontier::Bottom,
             input_mark_acked: Frontier::Bottom,
             mark_pending: Vec::new(),
@@ -329,6 +343,35 @@ impl ProcFt {
             .last()
             .map(|c| c.meta.clone())
             .unwrap_or_else(|| CkptMeta::empty(in_edges, out_edges))
+    }
+
+    /// Snapshot records a materialization of snapshot `tag` walks (1 for
+    /// a full snapshot) — the quantity [`SnapshotPolicy::Delta`] bounds
+    /// with its forced-full rule. Prior tags strictly decrease along a
+    /// well-formed chain, so the walk terminates.
+    pub(crate) fn snapshot_walk_len(&self, tag: u64) -> u64 {
+        let mut len = 0u64;
+        let mut cur = Some(tag);
+        while let Some(t) = cur {
+            len += 1;
+            cur = self.snapshots.get(&t).and_then(|s| s.prior_snapshot);
+        }
+        len
+    }
+
+    /// The base a new delta checkpoint may diff against: the newest chain
+    /// entry whose Ξ write the store acknowledged under watermark `w`. An
+    /// *unacked* base would be unsound — a crash could discard it,
+    /// stranding every delta chained on it — so an all-unacked chain
+    /// yields `None` and the planner writes a full snapshot.
+    fn acked_snapshot_base(&self, w: u64) -> Option<SnapshotBase> {
+        let idx = acked_prefix(&self.chain_tags, w).checked_sub(1)?;
+        let tag = self.chain_tags[idx].tag;
+        Some(SnapshotBase {
+            tag,
+            hashes: chunk_hashes(&self.chain[idx].state),
+            walk_len: self.snapshot_walk_len(tag),
+        })
     }
 
     fn fresh_key(&mut self) -> u64 {
@@ -729,15 +772,24 @@ fn checkpoint_proc<V: FtView>(
     let stored = StoredCheckpoint { meta, state, pending_notify };
     // Persist state then Ξ (the §4.2 protocol: metadata reaches the
     // monitor only once everything is acknowledged — and in a WAL the
-    // state lands strictly earlier in append order, so a torn tail can
-    // lose the Ξ but never leave one without its state; under async
-    // staging, per-proc FIFO preserves exactly the same ordering).
+    // chunks and the snapshot record land strictly earlier in append
+    // order, so a torn tail can lose the Ξ but never leave one whose
+    // chain is missing a piece it wrote; under async staging, per-proc
+    // FIFO preserves exactly the same ordering). The state goes down
+    // content-addressed: a delta policy diffs against the newest *acked*
+    // checkpoint — an unacked base could be discarded by a crash,
+    // stranding the delta — and [`plan_snapshot`]'s walk-depth bound
+    // forces a full snapshot every `max_chain`-th checkpoint.
     let tag = ft.fresh_key();
-    let state_key = Key { proc: p.0, kind: Kind::State, tag };
-    if store.stage_put(state_key.clone(), stored.state.clone()).is_err() {
+    let base = match ft.snapshot_policy {
+        SnapshotPolicy::Full => None,
+        SnapshotPolicy::Delta { .. } => ft.acked_snapshot_base(store.acked_seq(p.0)),
+    };
+    let snap = plan_snapshot(&stored.state, base.as_ref(), ft.snapshot_policy);
+    if store.stage_put_snapshot(p.0, tag, &snap, &stored.state).is_err() {
         ft.storage_errors += 1;
         stats.storage_errors += 1;
-        return false; // nothing staged, nothing pruned — checkpoint skipped
+        return false; // refusal is atomic — nothing staged, nothing pruned
     }
     let rec =
         MetaRecord { meta: stored.meta.clone(), pending_notify: stored.pending_notify.clone() };
@@ -745,9 +797,12 @@ fn checkpoint_proc<V: FtView>(
     {
         Ok(seq) => seq,
         Err(_) => {
-            // Undo the orphan state blob (ordered after its put by the
-            // per-proc FIFO) and skip the checkpoint.
-            store.stage_delete(state_key);
+            // Undo the orphan snapshot record (ordered after its put by
+            // the per-proc FIFO) and skip the checkpoint. Chunks it
+            // staged stay resident: content-addressed blobs are shared
+            // with other snapshots, and the next reachability sweep
+            // collects any left unreferenced.
+            store.stage_delete(Key { proc: p.0, kind: Kind::Snapshot, tag });
             ft.storage_errors += 1;
             stats.storage_errors += 1;
             return false;
@@ -765,10 +820,52 @@ fn checkpoint_proc<V: FtView>(
     for v in ft.sent_events.values_mut() {
         v.retain(|t| !f.contains(t));
     }
+    ft.snapshots.insert(tag, snap);
     ft.chain.push(stored);
     ft.chain_tags.push(TagSeq { tag, seq: meta_seq });
     stats.checkpoints_taken += 1;
     true
+}
+
+/// Sweep `proc`'s content-addressed snapshot store down to what its
+/// surviving chain can still reach: a [`Snapshot`] record is retained
+/// iff some live chain entry's materialization walk touches it (a
+/// delta's base record must outlive its own chain entry), and a chunk is
+/// retained iff a retained snapshot lists its hash. Everything else is
+/// tombstoned. This is the §4.2 GC reachability rule under chunked
+/// checkpoints — run after every chain truncation (monitor GC, rollback,
+/// crash-discard, cold-reopen repair). Returns durable objects released.
+pub(crate) fn sweep_unreachable_snapshots(store: &Store, proc: u32, ft: &mut ProcFt) -> usize {
+    let mut reachable: BTreeSet<u64> = BTreeSet::new();
+    for ts in &ft.chain_tags {
+        let mut cur = Some(ts.tag);
+        while let Some(t) = cur {
+            if !reachable.insert(t) {
+                break; // shared chain suffix already walked
+            }
+            cur = ft.snapshots.get(&t).and_then(|s| s.prior_snapshot);
+        }
+    }
+    let mut released = 0usize;
+    let dead: Vec<u64> =
+        ft.snapshots.keys().filter(|t| !reachable.contains(t)).copied().collect();
+    for t in dead {
+        ft.snapshots.remove(&t);
+        store.delete(&Key { proc, kind: Kind::Snapshot, tag: t });
+        released += 1;
+    }
+    // A chunk survives iff a retained snapshot still lists its hash.
+    // (Deleting through the staging FIFO also evicts the chunk from the
+    // store's dedup index, so a later checkpoint re-writes it for real.)
+    let live: BTreeSet<u64> =
+        ft.snapshots.values().flat_map(|s| s.chunks.iter().map(|&(_, h)| h)).collect();
+    for k in store.keys_for(proc, Kind::Chunk) {
+        if !live.contains(&k.tag) {
+            store.delete(&k);
+            released += 1;
+        }
+    }
+    released
 }
 
 /// Per-worker FT observer for parallel drains: owns the [`ProcFt`]
@@ -945,19 +1042,46 @@ impl FtSystem {
         self.engine.set_mailbox_cap(cap);
     }
 
+    /// Set every processor's durable snapshot representation (full
+    /// snapshots vs bounded delta chains — see [`SnapshotPolicy`]).
+    /// Affects checkpoints taken from now on; earlier chain entries keep
+    /// the representation they were written with (both materialize the
+    /// same way). Not persisted: callers must re-apply after
+    /// [`FtSystem::reopen`] / [`FtSystem::reopen_sharded`].
+    pub fn set_snapshot_policy(&mut self, policy: SnapshotPolicy) {
+        for ft in &mut self.ft {
+            ft.snapshot_policy = policy;
+        }
+    }
+
     /// Rebuild every processor's Table-1 mirrors from the durable store
-    /// (one ranged key scan per processor).
+    /// (one ranged key scan per processor). Checkpoint states are
+    /// materialized from their content-addressed snapshot chains; an
+    /// entry whose chain is incomplete — possible when compaction
+    /// relocated cold records and a torn tail then destroyed one — is
+    /// dropped **together with every newer entry** (a later delta may
+    /// chain on the broken one), which is exactly the rollback a
+    /// slightly older crash would have forced. The §4.2 reachability
+    /// sweep then collects snapshot records and chunks nothing retained
+    /// references.
     fn load_durable(&mut self) {
         let store = self.store.clone();
         for p in self.topo.proc_ids() {
             let keys = store.scan_keys(p.0);
             let mut metas: BTreeMap<u64, MetaRecord> = BTreeMap::new();
-            let mut states: BTreeMap<u64, Vec<u8>> = BTreeMap::new();
+            let mut snaps: BTreeMap<u64, Snapshot> = BTreeMap::new();
             let mut logs: BTreeMap<u64, LogEntry> = BTreeMap::new();
             let mut hist: BTreeMap<u64, HistoryEvent> = BTreeMap::new();
             let mut mark = Frontier::Bottom;
             let mut next_key = 0u64;
             for k in keys {
+                if k.kind == Kind::Chunk {
+                    // Content-addressed: the tag is a hash, not a counter
+                    // value (folding it into `next_key` would wreck the
+                    // key sequence); contents are fetched during
+                    // materialization, not here.
+                    continue;
+                }
                 next_key = next_key.max(k.tag);
                 let blob = store.get(&k).expect("scanned key must resolve");
                 match k.kind {
@@ -966,9 +1090,17 @@ impl FtSystem {
                             .expect("corrupt Ξ record below the WAL checksum layer");
                         metas.insert(k.tag, rec);
                     }
-                    Kind::State => {
-                        states.insert(k.tag, blob);
+                    Kind::Snapshot => {
+                        let s = Snapshot::from_bytes(&blob).expect("corrupt snapshot record");
+                        snaps.insert(k.tag, s);
                     }
+                    Kind::State => {
+                        // A monolithic state blob: nothing on the
+                        // checkpoint path writes these anymore (the kind
+                        // remains valid for generic blobs) — an orphan.
+                        store.delete(&k);
+                    }
+                    Kind::Chunk => unreachable!("chunks skipped above"),
                     Kind::LogEntry => {
                         let le = LogEntry::from_bytes(&blob).expect("corrupt log entry");
                         logs.insert(k.tag, le);
@@ -984,30 +1116,42 @@ impl FtSystem {
                 }
             }
             let ft = &mut self.ft[p.0 as usize];
+            let mut broken = false;
             for (tag, rec) in metas {
-                // A Ξ without its state cannot survive (the state lands
-                // strictly earlier in WAL append order, and crashes lose
-                // only suffixes). An orphan *state* is just a checkpoint
-                // whose Ξ never became durable: unacknowledged, dropped.
-                let state = states
-                    .remove(&tag)
-                    .expect("durable Ξ record without its state blob");
-                debug_assert!(
-                    ft.chain.last().map(|c| c.meta.f.is_subset(&rec.meta.f)).unwrap_or(true),
-                    "reopened checkpoint chain must ascend"
-                );
-                ft.chain.push(StoredCheckpoint {
-                    meta: rec.meta,
-                    state,
-                    pending_notify: rec.pending_notify,
-                });
-                // Reopened entries are durable by definition: sequence 0
-                // sits at or below every ack watermark.
-                ft.chain_tags.push(TagSeq { tag, seq: 0 });
+                // Conservative repair: once one entry fails to
+                // materialize, it and everything newer is deleted — the
+                // chain ascends and later deltas may reference the hole.
+                if !broken {
+                    match store.materialize_snapshot(p.0, tag) {
+                        Some(state) => {
+                            debug_assert!(
+                                ft.chain
+                                    .last()
+                                    .map(|c| c.meta.f.is_subset(&rec.meta.f))
+                                    .unwrap_or(true),
+                                "reopened checkpoint chain must ascend"
+                            );
+                            ft.chain.push(StoredCheckpoint {
+                                meta: rec.meta,
+                                state,
+                                pending_notify: rec.pending_notify,
+                            });
+                            // Reopened entries are durable by definition:
+                            // sequence 0 sits at or below every watermark.
+                            ft.chain_tags.push(TagSeq { tag, seq: 0 });
+                        }
+                        None => broken = true,
+                    }
+                }
+                if broken {
+                    store.delete(&Key { proc: p.0, kind: Kind::Meta, tag });
+                }
             }
-            for tag in states.into_keys() {
-                store.delete(&Key { proc: p.0, kind: Kind::State, tag });
-            }
+            // Mirror every surviving snapshot record, then sweep: orphan
+            // records (a Ξ that never became durable, a repaired suffix)
+            // and unreferenced chunks are collected here.
+            ft.snapshots = snaps;
+            sweep_unreachable_snapshots(&store, p.0, ft);
             for (tag, le) in logs {
                 ft.log.push(le);
                 ft.log_tags.push(TagSeq { tag, seq: 0 });
@@ -1430,10 +1574,15 @@ impl FtSystem {
     /// Every mirror entry carries its storage tag, so exactly the doomed
     /// blobs are deleted — which a [`crate::ft::backend_file::FileBackend`]
     /// turns into tombstones and, past the dead-byte threshold, segment
-    /// compaction. Returns the number of durable objects released.
+    /// compaction. A dropped checkpoint's *snapshot record and chunks*
+    /// are not deleted by tag: a retained delta may still reach them via
+    /// its `prior_snapshot` chain, so the reachability sweep
+    /// ([`sweep_unreachable_snapshots`]) decides what actually dies.
+    /// Returns the number of durable objects released.
     pub fn apply_gc(&mut self, action: &crate::ft::monitor::GcAction) -> usize {
         match action {
             crate::ft::monitor::GcAction::DropCheckpointsBelow { proc, watermark } => {
+                let store = self.store.clone();
                 let ft = &mut self.ft[proc.0 as usize];
                 // Keep the newest checkpoint ⊆ watermark plus everything
                 // above it; drop older ones.
@@ -1442,16 +1591,16 @@ impl FtSystem {
                     .iter()
                     .rposition(|c| c.meta.f.is_subset(watermark))
                     .unwrap_or(0);
-                let dropped = keep_from;
+                let mut dropped = keep_from;
                 if dropped > 0 {
                     ft.chain.drain(..dropped);
                     // The monitor cursor counts reported *prefix* entries;
                     // GC drops from the front, so it slides down with it.
                     ft.chain_reported = ft.chain_reported.saturating_sub(dropped);
                     for ts in ft.chain_tags.drain(..dropped) {
-                        self.store.delete(&Key { proc: proc.0, kind: Kind::Meta, tag: ts.tag });
-                        self.store.delete(&Key { proc: proc.0, kind: Kind::State, tag: ts.tag });
+                        store.delete(&Key { proc: proc.0, kind: Kind::Meta, tag: ts.tag });
                     }
+                    dropped += sweep_unreachable_snapshots(&store, proc.0, ft);
                 }
                 dropped
             }
@@ -1674,7 +1823,7 @@ mod tests {
         let sum = sys.topology().find("sum").unwrap();
         drive_six(&mut sys, src);
         assert_eq!(sys.chain_len(sum), 7, "eager checkpoints once per event at cap 1");
-        assert_eq!(sys.store.keys_for(sum.0, Kind::State).len(), 7);
+        assert_eq!(sys.store.keys_for(sum.0, Kind::Snapshot).len(), 7);
         assert_eq!(sys.store.keys_for(sum.0, Kind::Meta).len(), 7);
 
         // Eager, cap 8: the six same-epoch records coalesce into one
@@ -1888,6 +2037,137 @@ mod tests {
         for ack_every in [1usize, 8, 64] {
             let async_img = drive(Some(PersistMode::Async { ack_every }));
             assert_eq!(sync_img, async_img, "ack_every {ack_every} changed the durable image");
+        }
+    }
+
+    /// Tentpole: under `SnapshotPolicy::Delta` checkpoints chain via
+    /// `prior_snapshot` against the last acked base, every `max_chain`-th
+    /// one is forced full, every chain entry materializes byte-identical
+    /// to the in-memory mirror, and GC's reachability sweep keeps a
+    /// retained delta's base record alive past its own chain entry's
+    /// death.
+    #[test]
+    fn delta_checkpoints_chain_and_survive_gc() {
+        // src(LogOutputs) → buffer(Lazy): Buffer retains everything, so
+        // selective checkpoints are non-empty and strictly growing — the
+        // shape delta chains exist for. Buffer requests no
+        // notifications, so checkpoints are driven explicitly.
+        let mut g = GraphBuilder::new();
+        let src = g.add_proc("src", TimeDomain::EPOCH);
+        let buf = g.add_proc("buffer", TimeDomain::EPOCH);
+        g.connect(src, buf, Projection::Identity);
+        let topo = Arc::new(g.build().unwrap());
+        let procs: Vec<Box<dyn Processor>> = vec![
+            Box::new(Source),
+            Box::new(crate::operators::Buffer::default()),
+        ];
+        let mut sys = FtSystem::new(
+            topo,
+            procs,
+            vec![Policy::LogOutputs, Policy::Lazy { every: 1_000_000, log_outputs: false }],
+            Delivery::Fifo,
+            Store::new(1),
+        );
+        sys.set_snapshot_policy(SnapshotPolicy::Delta { max_chain: 3 });
+        let buf = ProcId(1);
+        for ep in 0..6u64 {
+            sys.advance_input(src, Time::epoch(ep));
+            for v in 0..30i64 {
+                sys.push_input(src, Time::epoch(ep), Record::Int(ep as i64 * 100 + v));
+            }
+            sys.advance_input(src, Time::epoch(ep + 1));
+            sys.run_to_quiescence(10_000);
+            sys.checkpoint_now(buf, Frontier::upto_epoch(ep));
+        }
+        assert_eq!(sys.chain_len(buf), 6);
+        let ft = &sys.ft[buf.0 as usize];
+        assert!(
+            ft.chain.iter().all(|c| !c.state.is_empty()),
+            "buffer checkpoints must carry real state"
+        );
+        let walks: Vec<u64> =
+            ft.chain_tags.iter().map(|ts| ft.snapshot_walk_len(ts.tag)).collect();
+        assert_eq!(walks, vec![1, 2, 3, 1, 2, 3], "forced full every max_chain-th checkpoint");
+        // Every chain entry materializes byte-identically to its mirror.
+        for (ck, ts) in ft.chain.iter().zip(&ft.chain_tags) {
+            assert_eq!(
+                sys.store.materialize_snapshot(buf.0, ts.tag).as_ref(),
+                Some(&ck.state),
+                "chain materialization diverged from the in-memory mirror"
+            );
+        }
+        // GC below epoch 4: chain entries 0..4 drop, but the survivors
+        // (walks 2 and 3 of the second chain) still reach the
+        // forced-full base at index 3 — its snapshot record must
+        // survive its own chain entry.
+        let kept_base_tag = sys.ft[buf.0 as usize].chain_tags[3].tag;
+        let act = crate::ft::monitor::GcAction::DropCheckpointsBelow {
+            proc: buf,
+            watermark: Frontier::upto_epoch(4),
+        };
+        let released = sys.apply_gc(&act);
+        assert!(released >= 2, "old Ξ records and unreachable snapshots released");
+        sys.store.flush_staged();
+        let ft = &sys.ft[buf.0 as usize];
+        assert_eq!(ft.chain.len(), 2);
+        assert!(
+            ft.snapshots.contains_key(&kept_base_tag),
+            "a retained delta's base snapshot record outlives its chain entry"
+        );
+        assert!(
+            sys.store
+                .get(&Key { proc: buf.0, kind: Kind::Snapshot, tag: kept_base_tag })
+                .is_some(),
+            "base snapshot record still durable"
+        );
+        // And both survivors still materialize.
+        for (ck, ts) in ft.chain.iter().zip(&ft.chain_tags) {
+            assert_eq!(sys.store.materialize_snapshot(buf.0, ts.tag).as_ref(), Some(&ck.state));
+        }
+        // Failure + recovery after GC restores from the delta chain.
+        sys.inject_failures(&[buf]);
+        let rep = sys.recover();
+        assert!(rep.restored_from_checkpoint >= 1);
+        let blob = sys.engine.proc(buf).checkpoint_upto(&Frontier::Top);
+        let mut b = crate::operators::Buffer::default();
+        b.restore(&blob);
+        assert_eq!(b.contents().len(), 6, "all six epochs restored from the delta chain");
+    }
+
+    /// A snapshot policy switch affects new checkpoints only, and
+    /// delta-vs-full representation never changes what recovery restores.
+    #[test]
+    fn snapshot_policy_is_representation_only() {
+        let run = |policy: SnapshotPolicy| {
+            let (mut sys, src, out) = epoch_pipeline(vec![
+                Policy::LogOutputs,
+                Policy::Lazy { every: 1, log_outputs: true },
+                Policy::Ephemeral,
+            ]);
+            sys.set_snapshot_policy(policy);
+            let sum = sys.topology().find("sum").unwrap();
+            for ep in 0..4u64 {
+                sys.advance_input(src, Time::epoch(ep));
+                sys.push_input(src, Time::epoch(ep), Record::Int(ep as i64 + 1));
+                sys.advance_input(src, Time::epoch(ep + 1));
+                sys.run_to_quiescence(1000);
+                if ep == 2 {
+                    sys.inject_failures(&[sum]);
+                    sys.recover();
+                }
+            }
+            sys.close_input(src);
+            sys.run_to_quiescence(1000);
+            out.lock().unwrap().clone()
+        };
+        let full = run(SnapshotPolicy::Full);
+        assert!(!full.is_empty());
+        for max_chain in [1u64, 2, 8] {
+            assert_eq!(
+                full,
+                run(SnapshotPolicy::Delta { max_chain }),
+                "Delta{{max_chain: {max_chain}}} changed recovered output"
+            );
         }
     }
 

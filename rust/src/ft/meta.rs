@@ -140,9 +140,11 @@ impl Decode for StoredCheckpoint {
 
 /// The durable form of Ξ(p,f) — what a `Kind::Meta` blob holds: the
 /// solver-facing [`CkptMeta`] plus the pending-notification set a cold
-/// reopen needs to re-arm (the state payload S(p,f) lives in a separate
-/// `Kind::State` blob under the same tag, written *before* the Ξ so a
-/// torn WAL tail can lose the Ξ but never leave one without its state).
+/// reopen needs to re-arm (the state payload S(p,f) lives in a
+/// [`Snapshot`] record under the same tag plus its content-addressed
+/// chunks, all written *before* the Ξ so a torn WAL tail can lose the
+/// Ξ but never leave one without its state — and a reopen that does
+/// find an incomplete snapshot drops that chain suffix conservatively).
 #[derive(Clone, Debug, PartialEq)]
 pub struct MetaRecord {
     pub meta: CkptMeta,
@@ -168,6 +170,88 @@ impl Decode for MetaRecord {
             pending_notify.push(Time::decode(r)?);
         }
         Ok(MetaRecord { meta, pending_notify })
+    }
+}
+
+/// The durable form of a checkpoint's state payload under the
+/// content-addressed representation (see `ft/README.md`, "Incremental
+/// checkpoints and compaction"): the state S(p,f) is split into
+/// fixed-size chunks ([`crate::ft::storage::SNAPSHOT_CHUNK_BYTES`]),
+/// each stored once under its fnv1a hash as a `Kind::Chunk` blob, and
+/// the snapshot lists `(position, hash)` pairs naming the chunk
+/// occupying each position. A **full** snapshot lists every position
+/// and has `prior_snapshot = None`; a **delta** lists only the
+/// positions that changed since the base snapshot named by
+/// `prior_snapshot` (a `Kind::Snapshot` tag of the same processor) —
+/// materialization walks the prior chain newest→oldest, taking the
+/// first hash seen for each position.
+///
+/// Chunk identity is the 64-bit fnv1a of the chunk bytes. fnv1a is not
+/// collision-resistant; a colliding pair of distinct chunks within one
+/// processor's live state would alias silently. At 64 bits the
+/// birthday bound makes this negligible for the state sizes this crate
+/// targets, and the hash stays consistent with the WAL's record
+/// checksums — swap in a wider hash here if that ever changes.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Snapshot {
+    /// Total state length in bytes (chunk sizes are implied: every
+    /// position is a full chunk except the last).
+    pub state_len: u64,
+    /// `(position, fnv1a hash)` pairs, ascending by position.
+    pub chunks: Vec<(u64, u64)>,
+    /// Tag of the base snapshot this delta is against (`None` = full).
+    pub prior_snapshot: Option<u64>,
+}
+
+impl Snapshot {
+    /// Positions this snapshot itself lists (not the materialized
+    /// total — a delta lists only changed positions).
+    pub fn listed_chunks(&self) -> usize {
+        self.chunks.len()
+    }
+}
+
+impl Encode for Snapshot {
+    fn encode(&self, w: &mut Writer) {
+        w.varint(self.state_len);
+        w.varint(self.chunks.len() as u64);
+        for &(pos, hash) in &self.chunks {
+            w.varint(pos);
+            // Hashes are uniformly distributed — fixed 8-byte LE beats
+            // a varint (which would average >9 bytes) and keeps the
+            // record size exactly predictable.
+            for shift in (0..64).step_by(8) {
+                w.u8(((hash >> shift) & 0xff) as u8);
+            }
+        }
+        match self.prior_snapshot {
+            None => w.u8(0),
+            Some(t) => {
+                w.u8(1);
+                w.varint(t);
+            }
+        }
+    }
+}
+
+impl Decode for Snapshot {
+    fn decode(r: &mut Reader) -> Result<Self, SerError> {
+        let state_len = r.varint()?;
+        let n = r.varint()? as usize;
+        let mut chunks = Vec::with_capacity(n.min(1 << 16));
+        for _ in 0..n {
+            let pos = r.varint()?;
+            let mut hash = 0u64;
+            for shift in (0..64).step_by(8) {
+                hash |= (r.u8()? as u64) << shift;
+            }
+            chunks.push((pos, hash));
+        }
+        let prior_snapshot = match r.u8()? {
+            0 => None,
+            _ => Some(r.varint()?),
+        };
+        Ok(Snapshot { state_len, chunks, prior_snapshot })
     }
 }
 
@@ -255,6 +339,28 @@ mod tests {
         assert_eq!(le.records(), 2);
         let bytes = le.to_bytes();
         assert_eq!(LogEntry::from_bytes(&bytes).unwrap(), le);
+    }
+
+    #[test]
+    fn snapshot_roundtrip() {
+        // Full snapshot: every position listed, no prior.
+        let full = Snapshot {
+            state_len: 2500,
+            chunks: vec![(0, 0xdeadbeefdeadbeef), (1, 7), (2, u64::MAX)],
+            prior_snapshot: None,
+        };
+        assert_eq!(full.listed_chunks(), 3);
+        assert_eq!(Snapshot::from_bytes(&full.to_bytes()).unwrap(), full);
+        // Delta: sparse positions against a prior tag.
+        let delta = Snapshot {
+            state_len: 2500,
+            chunks: vec![(2, 0x0123456789abcdef)],
+            prior_snapshot: Some(41),
+        };
+        assert_eq!(Snapshot::from_bytes(&delta.to_bytes()).unwrap(), delta);
+        // Empty state is a valid (empty) snapshot.
+        let empty = Snapshot { state_len: 0, chunks: vec![], prior_snapshot: None };
+        assert_eq!(Snapshot::from_bytes(&empty.to_bytes()).unwrap(), empty);
     }
 
     #[test]

@@ -26,7 +26,7 @@ pub mod storage;
 
 pub use backend_file::{FileBackend, FileBackendOptions};
 pub use harness::{FtStats, FtSystem, HistoryEvent, HistoryKind};
-pub use meta::{CkptMeta, LogEntry, MetaRecord, StoredCheckpoint};
-pub use policy::Policy;
+pub use meta::{CkptMeta, LogEntry, MetaRecord, Snapshot, StoredCheckpoint};
+pub use policy::{Policy, SnapshotPolicy};
 pub use rollback::{choose_frontiers, verify_plan, Available, RollbackInput, RollbackPlan};
 pub use storage::{BackendInfo, Key, Kind, PersistMode, StorageBackend, StorageError, Store};

@@ -79,9 +79,57 @@ impl Policy {
     }
 }
 
+/// How a checkpoint's state payload is represented durably — orthogonal
+/// to [`Policy`], which decides *when* checkpoints are taken. Either
+/// way the state is split into content-addressed chunks
+/// ([`crate::ft::storage::SNAPSHOT_CHUNK_BYTES`]) and a
+/// [`crate::ft::meta::Snapshot`] record names them; chunk dedup means
+/// an unchanged chunk is never rewritten even under `Full`. What
+/// `Delta` adds is a *sparse* snapshot record chained to its base via
+/// `prior_snapshot`, so the record itself also scales with the delta.
+#[derive(Copy, Clone, Debug, PartialEq, Eq, Default)]
+pub enum SnapshotPolicy {
+    /// Every checkpoint's snapshot lists every chunk position
+    /// (materialization reads exactly one snapshot record).
+    #[default]
+    Full,
+    /// List only the chunk positions that changed since the last
+    /// *acked* snapshot, chaining via `prior_snapshot`. Every
+    /// checkpoint whose materialization walk would exceed `max_chain`
+    /// snapshot records is forced full, bounding recovery walk depth at
+    /// O(`max_chain`); `max_chain` ≤ 1 therefore degenerates to `Full`.
+    Delta {
+        /// Upper bound on the snapshot records one materialization
+        /// walks (clamped to ≥ 1).
+        max_chain: u64,
+    },
+}
+
+impl SnapshotPolicy {
+    /// The effective walk-depth bound (1 for `Full`).
+    pub fn max_chain(&self) -> u64 {
+        match self {
+            SnapshotPolicy::Full => 1,
+            SnapshotPolicy::Delta { max_chain } => (*max_chain).max(1),
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn snapshot_policy_chain_bound() {
+        assert_eq!(SnapshotPolicy::Full.max_chain(), 1);
+        assert_eq!(SnapshotPolicy::Delta { max_chain: 8 }.max_chain(), 8);
+        assert_eq!(
+            SnapshotPolicy::Delta { max_chain: 0 }.max_chain(),
+            1,
+            "degenerate bound clamps to Full behavior"
+        );
+        assert_eq!(SnapshotPolicy::default(), SnapshotPolicy::Full);
+    }
 
     #[test]
     fn classification() {

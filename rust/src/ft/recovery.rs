@@ -90,12 +90,18 @@ impl FtSystem {
         for &p in procs {
             let w = self.store.discard_unacked(p.0);
             self.engine.fail_proc(p);
+            let store = self.store.clone();
             let ft = &mut self.ft[p.0 as usize];
             ft.failed = true;
             let keep = crate::ft::harness::acked_prefix(&ft.chain_tags, w);
             ft.chain.truncate(keep);
             ft.chain_tags.truncate(keep);
             ft.chain_reported = ft.chain_reported.min(keep);
+            // The discarded tail's snapshot records (and any chunks only
+            // they referenced) die with it — exactly like any other
+            // unacked write; the sweep also clears the mirror entries so
+            // the next checkpoint's walk-length accounting stays honest.
+            crate::ft::harness::sweep_unreachable_snapshots(&store, p.0, ft);
             let keep = crate::ft::harness::acked_prefix(&ft.log_tags, w);
             ft.log.truncate(keep);
             ft.log_tags.truncate(keep);
@@ -475,17 +481,19 @@ impl FtSystem {
                 }
             }
             // The chain ascends, so the kept set is a prefix. Per tag the
-            // Ξ tombstone precedes the state tombstone, mirroring the
-            // write order: suffix loss can orphan a state (dropped on
-            // reopen), never a Ξ. Staged deletion keeps that ordering
-            // even against still-queued writes of the same processor.
+            // Ξ tombstone precedes the snapshot-record tombstones (the
+            // reachability sweep below), mirroring the write order:
+            // suffix loss can orphan a snapshot (collected on reopen),
+            // never leave a Ξ whose chain the sweep already gutted.
+            // Staged deletion keeps that ordering even against
+            // still-queued writes of the same processor.
             let keep = ft.chain.iter().take_while(|c| c.meta.f.is_subset(&fp)).count();
             for ts in ft.chain_tags.drain(keep..) {
                 store.delete(&Key { proc: p.0, kind: Kind::Meta, tag: ts.tag });
-                store.delete(&Key { proc: p.0, kind: Kind::State, tag: ts.tag });
             }
             ft.chain.truncate(keep);
             ft.chain_reported = ft.chain_reported.min(keep);
+            crate::ft::harness::sweep_unreachable_snapshots(&store, p.0, ft);
             crate::ft::harness::retain_with_tags(
                 &mut ft.log,
                 &mut ft.log_tags,

@@ -21,6 +21,14 @@
 //! batch solve (recovery, §4.4) and an incremental *increase* propagation
 //! (the §4.2 garbage-collection monitor, where adding checkpoints can
 //! only grow the solution) are provided.
+//!
+//! The solver sees only Ξ metadata ([`CkptMeta`]); how the chosen
+//! checkpoint's *state bytes* are durably represented — one full
+//! content-addressed snapshot record or a `prior_snapshot` delta chain
+//! ([`crate::ft::policy::SnapshotPolicy`]) — is invisible here. Rollback
+//! materializes the state by walking the chain
+//! ([`crate::ft::storage::Store::materialize_snapshot`]) after this
+//! solver has picked the frontier.
 
 use crate::frontier::Frontier;
 use crate::ft::meta::CkptMeta;

@@ -52,8 +52,31 @@
 //! persistence is [`Store::pause_persistence`]d (a testing hook), when
 //! they serve the applied prefix, which is exactly what a crash-time
 //! inspector wants to see.
+//!
+//! # Content-addressed checkpoint snapshots
+//!
+//! Checkpoint state rides the same pipeline in *chunked* form rather
+//! than as one monolithic blob: the state is split into
+//! [`SNAPSHOT_CHUNK_BYTES`]-sized chunks, each stored once under its
+//! fnv1a hash (`Kind::Chunk`), and a [`Snapshot`] record
+//! (`Kind::Snapshot`) lists the `(position, hash)` pairs — full, or as
+//! a delta chained to a prior snapshot via `prior_snapshot`.
+//! [`Store::stage_put_snapshot`] skips chunks already resident under
+//! their hash (`StorageStats::chunks_reused` counts the skips), so
+//! per-checkpoint durable bytes scale with the *change* between
+//! checkpoints, not total state size; [`Store::materialize_snapshot`]
+//! walks the chain newest→oldest to reassemble the bytes. The policy
+//! layer ([`crate::ft::policy::SnapshotPolicy`]) decides full vs delta
+//! and bounds the chain ([`plan_snapshot`]); the harness stages the
+//! snapshot before its Ξ, so per-proc FIFO keeps "acked Ξ ⇒ acked
+//! snapshot ⇒ acked chunks" — an unacked chain tail is discarded
+//! exactly like any other unacked write.
 
 use crate::ft::backend_file::{FileBackend, FileBackendOptions};
+use crate::ft::meta::Snapshot;
+use crate::ft::policy::SnapshotPolicy;
+use crate::util::hash::fnv1a;
+use crate::util::ser::{Decode, Encode};
 use std::collections::{BTreeMap, VecDeque};
 use std::ops::Bound;
 use std::path::Path;
@@ -80,7 +103,11 @@ pub struct Key {
 pub enum Kind {
     /// Checkpoint metadata Ξ(p,f) (a [`crate::ft::meta::MetaRecord`]).
     Meta,
-    /// Checkpoint state S(p,f).
+    /// Checkpoint state S(p,f) as one monolithic blob — the
+    /// pre-chunking representation. The checkpoint write path now
+    /// stores state as `Snapshot` + `Chunk` records instead; the kind
+    /// (and its on-disk code) remains valid for generic blobs and for
+    /// reading WALs written before the chunked representation.
     State,
     /// A logged message (one entry of L(e,·)).
     LogEntry,
@@ -92,6 +119,14 @@ pub enum Kind {
     /// *and* whose resulting sends are acknowledged in the log). One per
     /// processor, at tag 0, overwritten as the frontier advances.
     InputFrontier,
+    /// One content-addressed chunk of checkpoint state: the tag is the
+    /// fnv1a hash of the value bytes, so a chunk already resident under
+    /// its hash is never rewritten (see [`Store::stage_put_snapshot`]).
+    Chunk,
+    /// A [`crate::ft::meta::Snapshot`] record: the list of chunk
+    /// positions/hashes (full or delta) that materializes a checkpoint's
+    /// state S(p,f), written under the same tag as its `Kind::Meta` Ξ.
+    Snapshot,
 }
 
 impl Kind {
@@ -103,6 +138,8 @@ impl Kind {
             Kind::LogEntry => 2,
             Kind::HistoryEvent => 3,
             Kind::InputFrontier => 4,
+            Kind::Chunk => 5,
+            Kind::Snapshot => 6,
         }
     }
 
@@ -114,8 +151,84 @@ impl Kind {
             2 => Some(Kind::LogEntry),
             3 => Some(Kind::HistoryEvent),
             4 => Some(Kind::InputFrontier),
+            5 => Some(Kind::Chunk),
+            6 => Some(Kind::Snapshot),
             _ => None,
         }
+    }
+}
+
+// ----------------------------------------------------------------------
+// Content-addressed snapshot chunking.
+// ----------------------------------------------------------------------
+
+/// Fixed chunk size of the content-addressed checkpoint representation.
+/// Small enough that a point update to keyed state dirties O(1) chunks,
+/// large enough that per-chunk key overhead (~20 bytes of WAL record
+/// framing + snapshot listing) stays ~2% of payload.
+pub const SNAPSHOT_CHUNK_BYTES: usize = 1024;
+
+/// Number of chunk positions a state of `state_len` bytes occupies.
+pub fn chunk_count(state_len: usize) -> usize {
+    state_len.div_ceil(SNAPSHOT_CHUNK_BYTES)
+}
+
+/// Byte range of chunk position `pos` within a state of `state_len`
+/// bytes (the last chunk is short).
+pub fn chunk_span(pos: usize, state_len: usize) -> std::ops::Range<usize> {
+    let start = pos * SNAPSHOT_CHUNK_BYTES;
+    start..(start + SNAPSHOT_CHUNK_BYTES).min(state_len)
+}
+
+/// Per-position fnv1a hashes of `state`'s chunks.
+pub fn chunk_hashes(state: &[u8]) -> Vec<u64> {
+    state.chunks(SNAPSHOT_CHUNK_BYTES).map(fnv1a).collect()
+}
+
+/// The diff base for an incremental snapshot: the fully-resolved
+/// position→hash view of a prior (acked) snapshot plus the number of
+/// snapshot records a materialization of it walks.
+#[derive(Clone, Debug)]
+pub struct SnapshotBase {
+    /// Storage tag of the base snapshot (what `prior_snapshot` points
+    /// at).
+    pub tag: u64,
+    /// Per-position chunk hashes of the base's materialized state.
+    pub hashes: Vec<u64>,
+    /// Snapshot records a materialization of the base walks (≥ 1).
+    pub walk_len: u64,
+}
+
+/// Plan the [`Snapshot`] record for `state`: a delta against `base`
+/// when `policy` permits and the chain bound allows, a full snapshot
+/// otherwise (no base, `SnapshotPolicy::Full`, or the walk would
+/// exceed `max_chain` — the forced-full bound that keeps recovery walk
+/// depth O(`max_chain`)). A delta lists exactly the positions whose
+/// hash differs from the base view (including positions past the
+/// base's end when the state grew); an unchanged state yields a valid
+/// empty delta.
+pub fn plan_snapshot(state: &[u8], base: Option<&SnapshotBase>, policy: SnapshotPolicy) -> Snapshot {
+    let hashes = chunk_hashes(state);
+    let full = || Snapshot {
+        state_len: state.len() as u64,
+        chunks: hashes.iter().enumerate().map(|(p, &h)| (p as u64, h)).collect(),
+        prior_snapshot: None,
+    };
+    let (SnapshotPolicy::Delta { .. }, Some(base)) = (policy, base) else {
+        return full();
+    };
+    if base.walk_len + 1 > policy.max_chain() {
+        return full();
+    }
+    Snapshot {
+        state_len: state.len() as u64,
+        chunks: hashes
+            .iter()
+            .enumerate()
+            .filter(|&(p, &h)| base.hashes.get(p) != Some(&h))
+            .map(|(p, &h)| (p as u64, h))
+            .collect(),
+        prior_snapshot: Some(base.tag),
     }
 }
 
@@ -161,6 +274,14 @@ pub struct StorageStats {
     /// one processor charges only that processor's keys here — the
     /// regression guard for the range-bounded scan path.
     pub keys_scanned: u64,
+    /// Snapshot chunks a [`Store::stage_put_snapshot`] skipped because a
+    /// chunk with the same hash was already resident (or staged) for the
+    /// processor — the content-addressed dedup win.
+    pub chunks_reused: u64,
+    /// Payload bytes those skipped chunks would have written: with
+    /// `SnapshotPolicy::Delta`, per-checkpoint durable bytes scale with
+    /// the delta, and this counter is the proof.
+    pub chunk_bytes_reused: u64,
 }
 
 /// A write the backend refused (the write was *not* acknowledged and
@@ -406,6 +527,16 @@ struct Staging {
     done: Condvar,
     async_active: AtomicBool,
     value_limit: AtomicU64,
+    /// Content-addressed chunk index: `(proc, hash)` → staging sequence
+    /// of the chunk's newest put (0 = sync-applied or inherited from a
+    /// reopened backend). [`Store::stage_put_snapshot`] consults it to
+    /// skip rewriting resident chunks; [`Store::stage`] maintains it
+    /// centrally (chunk puts insert, chunk deletes remove) and
+    /// [`Store::discard_unacked`] rewinds entries above the surviving
+    /// watermark, so a dedup hit never references a chunk the durable
+    /// image lost. Decisions are made at *stage* time, which keeps the
+    /// durable image identical across `Sync` and `Async` modes.
+    dedup: Mutex<BTreeMap<(u32, u64), u64>>,
 }
 
 impl Staging {
@@ -572,11 +703,21 @@ impl Store {
     }
 
     /// A store over an arbitrary backend. The resident-byte counter is
-    /// seeded from the backend's live bytes (nonzero for a reopened WAL);
+    /// seeded from the backend's live bytes (nonzero for a reopened WAL),
+    /// the chunk-dedup index from a key scan of its resident
+    /// `Kind::Chunk` keys (so dedup survives a cold restart);
     /// persistence starts in [`PersistMode::Sync`].
-    pub fn with_backend(backend: Box<dyn StorageBackend>, write_cost: u64) -> Store {
+    pub fn with_backend(mut backend: Box<dyn StorageBackend>, write_cost: u64) -> Store {
         let resident = backend.info().live_bytes;
         let value_limit = backend.max_value_len().unwrap_or(u64::MAX);
+        let mut dedup = BTreeMap::new();
+        for proc in backend.procs() {
+            for key in backend.scan_keys(proc) {
+                if key.kind == Kind::Chunk {
+                    dedup.insert((proc, key.tag), 0u64);
+                }
+            }
+        }
         let inner = Arc::new(Mutex::new(Inner {
             backend,
             stats: StorageStats::default(),
@@ -599,6 +740,7 @@ impl Store {
             done: Condvar::new(),
             async_active: AtomicBool::new(false),
             value_limit: AtomicU64::new(value_limit),
+            dedup: Mutex::new(dedup),
         });
         let guard = Arc::new(WriterGuard {
             staging: staging.clone(),
@@ -688,6 +830,28 @@ impl Store {
         Ok(())
     }
 
+    /// Keep the chunk-dedup index in step with a successfully staged
+    /// operation: chunk puts insert their staging sequence, chunk
+    /// deletes (GC) remove the entry. Non-chunk operations never touch
+    /// the index mutex.
+    fn note_chunk(&self, op: &StagedOp, seq: u64) {
+        let key = match op {
+            StagedOp::Put { key, .. } | StagedOp::Delete { key } => key,
+        };
+        if key.kind != Kind::Chunk {
+            return;
+        }
+        let mut d = self.staging.dedup.lock().unwrap();
+        match op {
+            StagedOp::Put { .. } => {
+                d.insert((key.proc, key.tag), seq);
+            }
+            StagedOp::Delete { .. } => {
+                d.remove(&(key.proc, key.tag));
+            }
+        }
+    }
+
     /// Stage one operation: pre-check, then apply inline (Sync — the
     /// lock-free fast path: no sequencing, everything trivially acked,
     /// sequence 0 returned, which every watermark covers) or assign the
@@ -697,11 +861,12 @@ impl Store {
         self.pre_check(&op)?;
         if !self.staging.async_active.load(Ordering::Relaxed) {
             // Sync fast path: exactly the pre-pipeline cost — one backend
-            // lock, no staging-mutex traffic. (Switching modes barriers
-            // and asserts an empty queue, so nothing can be in flight
-            // here; concurrent writes racing a mode switch are unordered
-            // with it anyway.)
+            // lock, no staging-mutex traffic for non-chunk writes.
+            // (Switching modes barriers and asserts an empty queue, so
+            // nothing can be in flight here; concurrent writes racing a
+            // mode switch are unordered with it anyway.)
             self.inner.lock().unwrap().apply(&op);
+            self.note_chunk(&op, 0);
             return Ok(0);
         }
         let mut q = self.staging.q.lock().unwrap();
@@ -719,11 +884,13 @@ impl Store {
                 // sequencing bookkeeping exact.
                 drop(q);
                 self.inner.lock().unwrap().apply(&op);
+                self.note_chunk(&op, seq);
                 let mut q = self.staging.q.lock().unwrap();
                 Staging::ack(&mut q, proc, seq);
                 Ok(seq)
             }
             PersistMode::Async { .. } => {
+                self.note_chunk(&op, seq);
                 q.ops.push_back(QueuedOp { seq, op });
                 self.staging.work.notify_one();
                 Ok(seq)
@@ -754,6 +921,108 @@ impl Store {
     /// undoes.
     pub fn stage_delete(&self, key: Key) -> u64 {
         self.stage(StagedOp::Delete { key }).expect("deletes have no size to refuse")
+    }
+
+    /// Stage the durable form of one checkpoint state under the
+    /// content-addressed representation: every chunk `snapshot` lists
+    /// whose hash is not already resident (or staged) for `proc` is
+    /// written as a `Kind::Chunk` blob, then the encoded [`Snapshot`]
+    /// record itself under `Key { proc, Kind::Snapshot, tag }`. Skipped
+    /// chunks are counted in [`StorageStats::chunks_reused`] /
+    /// `chunk_bytes_reused` — the dedup win. Per-proc FIFO staging
+    /// orders every chunk before the record, so an acked snapshot
+    /// implies acked chunks; the caller stages its `Kind::Meta` Ξ after
+    /// this returns, extending the same implication to the checkpoint.
+    ///
+    /// Refusal is atomic: every blob is pre-checked against the value
+    /// limit first, so on `Err` nothing was staged. Returns the
+    /// snapshot record's staging sequence.
+    pub fn stage_put_snapshot(
+        &self,
+        proc: u32,
+        tag: u64,
+        snapshot: &Snapshot,
+        state: &[u8],
+    ) -> Result<u64, StorageError> {
+        debug_assert_eq!(state.len() as u64, snapshot.state_len);
+        let record = snapshot.to_bytes();
+        let limit = self.staging.value_limit.load(Ordering::Relaxed);
+        for len in snapshot
+            .chunks
+            .iter()
+            .map(|&(pos, _)| chunk_span(pos as usize, state.len()).len() as u64)
+            .chain(std::iter::once(record.len() as u64))
+        {
+            if len > limit {
+                return Err(StorageError::ValueTooLarge { size: len, max: limit });
+            }
+        }
+        for &(pos, hash) in &snapshot.chunks {
+            let span = chunk_span(pos as usize, state.len());
+            debug_assert_eq!(fnv1a(&state[span.clone()]), hash, "snapshot hash mismatch");
+            if self.staging.dedup.lock().unwrap().contains_key(&(proc, hash)) {
+                let mut g = self.inner.lock().unwrap();
+                g.stats.chunks_reused += 1;
+                g.stats.chunk_bytes_reused += span.len() as u64;
+                continue;
+            }
+            self.stage_put(Key { proc, kind: Kind::Chunk, tag: hash }, state[span].to_vec())?;
+        }
+        self.stage_put(Key { proc, kind: Kind::Snapshot, tag }, record)
+    }
+
+    /// Materialize the state bytes of snapshot `tag` of `proc` by
+    /// walking its `prior_snapshot` chain newest→oldest: each position
+    /// takes the hash from the *newest* snapshot listing it, then the
+    /// chunks are fetched by hash and concatenated in position order.
+    /// Returns `None` if any snapshot record or chunk along the walk is
+    /// missing, fails to decode, or has the wrong length — the
+    /// conservative-repair signal cold reopen uses to drop an
+    /// incomplete chain suffix instead of restoring torn state.
+    pub fn materialize_snapshot(&self, proc: u32, tag: u64) -> Option<Vec<u8>> {
+        let fetch = |t: u64| -> Option<Snapshot> {
+            Snapshot::from_bytes(&self.get(&Key { proc, kind: Kind::Snapshot, tag: t })?).ok()
+        };
+        let newest = fetch(tag)?;
+        let state_len = newest.state_len as usize;
+        let n = chunk_count(state_len);
+        let mut hashes: Vec<Option<u64>> = vec![None; n];
+        let mut filled = 0usize;
+        let (mut cur, mut cur_tag) = (newest, tag);
+        loop {
+            for &(pos, h) in &cur.chunks {
+                if let Some(slot) = hashes.get_mut(pos as usize) {
+                    if slot.is_none() {
+                        *slot = Some(h);
+                        filled += 1;
+                    }
+                }
+            }
+            if filled == n {
+                break;
+            }
+            // Unfilled positions left and no (valid) prior: the chain is
+            // incomplete. Prior tags strictly decrease along a
+            // well-formed chain (the base is an older checkpoint of the
+            // same processor), so a non-decreasing pointer would cycle —
+            // treat it as corruption.
+            let prior = cur.prior_snapshot?;
+            if prior >= cur_tag {
+                return None;
+            }
+            cur = fetch(prior)?;
+            cur_tag = prior;
+        }
+        let mut out = Vec::with_capacity(state_len);
+        for (pos, h) in hashes.iter().enumerate() {
+            let Some(h) = *h else { return None };
+            let bytes = self.get(&Key { proc, kind: Kind::Chunk, tag: h })?;
+            if bytes.len() != chunk_span(pos, state_len).len() {
+                return None;
+            }
+            out.extend_from_slice(&bytes);
+        }
+        Some(out)
     }
 
     /// Persist a blob; returns once acknowledged under the current
@@ -844,6 +1113,15 @@ impl Store {
             );
             *s = w;
         }
+        // Rewind the chunk-dedup index past the discarded suffix, so a
+        // later snapshot re-stages any chunk the durable image never got
+        // (entries at or below the watermark — including sync-mode 0 —
+        // are applied and stay deduplicable).
+        self.staging
+            .dedup
+            .lock()
+            .unwrap()
+            .retain(|&(p, _), &mut seq| p != proc || seq <= w);
         w
     }
 
@@ -1117,6 +1395,8 @@ mod tests {
             Kind::LogEntry,
             Kind::HistoryEvent,
             Kind::InputFrontier,
+            Kind::Chunk,
+            Kind::Snapshot,
         ] {
             assert_eq!(Kind::from_code(kind.code()), Some(kind));
         }
@@ -1280,6 +1560,216 @@ mod tests {
         assert!(s.stage_put(k(1, Kind::State, 0), vec![0; 8]).is_ok());
         s.flush_staged();
         assert_eq!(s.get(&k(1, Kind::State, 0)), Some(vec![0; 8]));
+    }
+
+    // ------------------------------------------------------------------
+    // Content-addressed snapshots.
+    // ------------------------------------------------------------------
+
+    /// A state whose chunks are position-distinct (so hashes differ).
+    fn patterned_state(chunks: usize) -> Vec<u8> {
+        (0..chunks * SNAPSHOT_CHUNK_BYTES).map(|i| (i % 251) as u8).collect()
+    }
+
+    #[test]
+    fn chunk_helpers_split_and_hash() {
+        assert_eq!(chunk_count(0), 0);
+        assert_eq!(chunk_count(1), 1);
+        assert_eq!(chunk_count(SNAPSHOT_CHUNK_BYTES), 1);
+        assert_eq!(chunk_count(SNAPSHOT_CHUNK_BYTES + 1), 2);
+        let state = patterned_state(2);
+        let hashes = chunk_hashes(&state);
+        assert_eq!(hashes.len(), 2);
+        assert_eq!(hashes[0], fnv1a(&state[chunk_span(0, state.len())]));
+        assert_eq!(hashes[1], fnv1a(&state[chunk_span(1, state.len())]));
+        // A short tail chunk spans only the remainder.
+        assert_eq!(chunk_span(1, SNAPSHOT_CHUNK_BYTES + 10).len(), 10);
+    }
+
+    /// Dedup: an unchanged chunk is never rewritten — within one
+    /// snapshot's successor, and across full snapshots too.
+    #[test]
+    fn snapshot_dedup_hits_and_misses() {
+        let s = Store::new(0);
+        let mut state = patterned_state(3);
+        let full = plan_snapshot(&state, None, SnapshotPolicy::Full);
+        assert_eq!(full.chunks.len(), 3);
+        s.stage_put_snapshot(7, 1, &full, &state).unwrap();
+        assert_eq!(s.stats().chunks_reused, 0, "first write: all misses");
+        assert_eq!(s.keys_for(7, Kind::Chunk).len(), 3);
+        // Unchanged state: a second full snapshot rewrites nothing.
+        let full2 = plan_snapshot(&state, None, SnapshotPolicy::Full);
+        s.stage_put_snapshot(7, 2, &full2, &state).unwrap();
+        let st = s.stats();
+        assert_eq!(st.chunks_reused, 3);
+        assert_eq!(st.chunk_bytes_reused, 3 * SNAPSHOT_CHUNK_BYTES as u64);
+        assert_eq!(s.keys_for(7, Kind::Chunk).len(), 3, "no new chunks");
+        // One dirtied chunk misses; the other two hit.
+        state[SNAPSHOT_CHUNK_BYTES] ^= 0xff;
+        let full3 = plan_snapshot(&state, None, SnapshotPolicy::Full);
+        s.stage_put_snapshot(7, 3, &full3, &state).unwrap();
+        assert_eq!(s.stats().chunks_reused, 5);
+        assert_eq!(s.keys_for(7, Kind::Chunk).len(), 4);
+        assert_eq!(s.materialize_snapshot(7, 3).unwrap(), state);
+        // Dedup is per-processor: the same bytes under another proc
+        // write their own chunks.
+        s.stage_put_snapshot(8, 1, &full3, &state).unwrap();
+        assert_eq!(s.keys_for(8, Kind::Chunk).len(), 3);
+    }
+
+    /// Delta planning lists only dirty positions, chains via
+    /// `prior_snapshot`, and is forced full once the walk would exceed
+    /// `max_chain`; materialization reassembles every link exactly.
+    #[test]
+    fn delta_chain_materializes_and_forces_full_at_max_chain() {
+        let s = Store::new(0);
+        let policy = SnapshotPolicy::Delta { max_chain: 2 };
+        let mut state = patterned_state(2);
+        state.extend_from_slice(&[42; 10]); // short tail chunk
+        let s1 = plan_snapshot(&state, None, policy);
+        assert!(s1.prior_snapshot.is_none(), "no base: full");
+        assert_eq!(s1.chunks.len(), 3);
+        s.stage_put_snapshot(4, 1, &s1, &state).unwrap();
+        // Delta against the full base lists only the dirty chunk.
+        let prev = state.clone();
+        state[0] = 9;
+        let base1 = SnapshotBase { tag: 1, hashes: chunk_hashes(&prev), walk_len: 1 };
+        let s2 = plan_snapshot(&state, Some(&base1), policy);
+        assert_eq!(s2.prior_snapshot, Some(1));
+        assert_eq!(s2.chunks.len(), 1);
+        assert_eq!(s2.chunks[0].0, 0);
+        s.stage_put_snapshot(4, 2, &s2, &state).unwrap();
+        assert_eq!(s.materialize_snapshot(4, 2).unwrap(), state);
+        // A third link would make the walk 3 > max_chain: forced full.
+        let prev2 = state.clone();
+        state[SNAPSHOT_CHUNK_BYTES] = 7;
+        let base2 = SnapshotBase { tag: 2, hashes: chunk_hashes(&prev2), walk_len: 2 };
+        let s3 = plan_snapshot(&state, Some(&base2), policy);
+        assert!(s3.prior_snapshot.is_none(), "forced full at max_chain");
+        assert_eq!(s3.chunks.len(), 3);
+        s.stage_put_snapshot(4, 3, &s3, &state).unwrap();
+        assert_eq!(s.materialize_snapshot(4, 3).unwrap(), state);
+        // An unchanged state under Delta is a valid *empty* delta.
+        let base3 = SnapshotBase { tag: 3, hashes: chunk_hashes(&state), walk_len: 1 };
+        let s4 = plan_snapshot(&state, Some(&base3), policy);
+        assert_eq!(s4.chunks.len(), 0);
+        assert_eq!(s4.prior_snapshot, Some(3));
+        s.stage_put_snapshot(4, 4, &s4, &state).unwrap();
+        assert_eq!(s.materialize_snapshot(4, 4).unwrap(), state);
+        // Growth: a delta lists positions past the base's end.
+        let prev4 = state.clone();
+        state.extend_from_slice(&patterned_state(1));
+        // Chain from the forced-full tag 3 (walk 1) — tag 4's own walk
+        // is already 2, so another link over it would be forced full.
+        let base4 = SnapshotBase { tag: 3, hashes: chunk_hashes(&prev4), walk_len: 1 };
+        let s5 = plan_snapshot(&state, Some(&base4), policy);
+        assert_eq!(s5.prior_snapshot, Some(3));
+        // The old short tail chunk changed shape AND a new chunk
+        // appeared past the old end.
+        assert!(s5.chunks.iter().any(|&(p, _)| p as usize >= chunk_count(prev4.len())));
+        s.stage_put_snapshot(4, 5, &s5, &state).unwrap();
+        assert_eq!(s.materialize_snapshot(4, 5).unwrap(), state);
+    }
+
+    /// An unacked chain tail dies with `discard_unacked` exactly like
+    /// any other unacked write, and the dedup index is rewound so
+    /// recovery can re-stage the same content for real.
+    #[test]
+    fn unacked_snapshot_chain_tail_is_discarded() {
+        let s = Store::new(0);
+        s.set_persist_mode(PersistMode::Async { ack_every: 8 });
+        let policy = SnapshotPolicy::Delta { max_chain: 8 };
+        let mut state = patterned_state(2);
+        let s1 = plan_snapshot(&state, None, policy);
+        s.stage_put_snapshot(9, 1, &s1, &state).unwrap();
+        s.flush_staged();
+        // Stage a delta while the writer is paused: it never acks.
+        s.pause_persistence();
+        let prev = state.clone();
+        state[0] = 0xaa;
+        let base = SnapshotBase { tag: 1, hashes: chunk_hashes(&prev), walk_len: 1 };
+        let s2 = plan_snapshot(&state, Some(&base), policy);
+        assert_eq!(s2.chunks.len(), 1);
+        s.stage_put_snapshot(9, 2, &s2, &state).unwrap();
+        let w = s.discard_unacked(9);
+        assert_eq!(w, 3, "acked prefix = 2 chunks + 1 snapshot record");
+        s.resume_persistence();
+        s.flush_staged();
+        // The unacked tail (new chunk + snapshot record) never landed.
+        assert_eq!(s.get(&Key { proc: 9, kind: Kind::Snapshot, tag: 2 }), None);
+        assert_eq!(s.keys_for(9, Kind::Chunk).len(), 2);
+        // The acked base still materializes.
+        assert_eq!(s.materialize_snapshot(9, 1).unwrap(), prev);
+        // The dedup index was rewound: re-staging the same delta under a
+        // fresh tag writes the discarded chunk for real (no false hit).
+        let s3 = s2.clone();
+        s.stage_put_snapshot(9, 3, &s3, &state).unwrap();
+        s.flush_staged();
+        assert_eq!(s.keys_for(9, Kind::Chunk).len(), 3);
+        assert_eq!(s.materialize_snapshot(9, 3).unwrap(), state);
+    }
+
+    /// Refusal (value-size pre-check) is atomic: nothing stages.
+    #[test]
+    fn snapshot_refusal_is_atomic() {
+        let s = Store::new(0);
+        s.set_max_value_len(16);
+        let state = patterned_state(1);
+        let snap = plan_snapshot(&state, None, SnapshotPolicy::Full);
+        assert!(s.stage_put_snapshot(3, 1, &snap, &state).is_err());
+        assert!(s.scan_keys(3).is_empty(), "refusal staged nothing");
+        assert_eq!(s.stats().chunks_reused, 0);
+    }
+
+    /// The dedup index is reseeded from a reopened WAL, so dedup works
+    /// across cold restarts.
+    #[test]
+    fn chunk_dedup_index_survives_reopen() {
+        let dir = crate::util::tmp::TempDir::new("snap-dedup");
+        let state = patterned_state(2);
+        {
+            let s =
+                Store::open_dir(dir.path(), 0, FileBackendOptions::default()).unwrap();
+            let snap = plan_snapshot(&state, None, SnapshotPolicy::Full);
+            s.stage_put_snapshot(2, 1, &snap, &state).unwrap();
+            s.sync();
+        }
+        let s = Store::open_dir(dir.path(), 0, FileBackendOptions::default()).unwrap();
+        let snap2 = plan_snapshot(&state, None, SnapshotPolicy::Full);
+        s.stage_put_snapshot(2, 2, &snap2, &state).unwrap();
+        let st = s.stats();
+        assert_eq!(st.chunks_reused, 2, "dedup index reseeded from the reopened WAL");
+        assert_eq!(s.materialize_snapshot(2, 2).unwrap(), state);
+    }
+
+    /// A broken chain (missing prior, missing chunk, wrong-length chunk)
+    /// materializes to `None`, never to wrong bytes.
+    #[test]
+    fn materialize_is_conservative_about_broken_chains() {
+        let s = Store::new(0);
+        let state = patterned_state(2);
+        let full = plan_snapshot(&state, None, SnapshotPolicy::Full);
+        s.stage_put_snapshot(5, 1, &full, &state).unwrap();
+        // A delta whose prior is missing.
+        let orphan = Snapshot {
+            state_len: state.len() as u64,
+            chunks: vec![],
+            prior_snapshot: Some(99),
+        };
+        s.put(Key { proc: 5, kind: Kind::Snapshot, tag: 100 }, orphan.to_bytes());
+        assert_eq!(s.materialize_snapshot(5, 100), None, "missing prior");
+        // A cycle-shaped prior pointer (non-decreasing tag) is refused.
+        let cyclic = Snapshot {
+            state_len: state.len() as u64,
+            chunks: vec![],
+            prior_snapshot: Some(101),
+        };
+        s.put(Key { proc: 5, kind: Kind::Snapshot, tag: 101 }, cyclic.to_bytes());
+        assert_eq!(s.materialize_snapshot(5, 101), None, "cyclic prior");
+        // A missing chunk breaks materialization.
+        let chunk_key = s.keys_for(5, Kind::Chunk)[0].clone();
+        s.delete(&chunk_key);
+        assert_eq!(s.materialize_snapshot(5, 1), None, "missing chunk");
     }
 
     /// Dropping the last handle drains the staging queue (graceful

@@ -14,7 +14,7 @@
 
 use crate::engine::sharded::ProcFactory;
 use crate::engine::{Delivery, Record};
-use crate::ft::{FtSystem, PersistMode, Policy, Store};
+use crate::ft::{FtSystem, PersistMode, Policy, SnapshotPolicy, Store};
 use crate::graph::sharding::{LogicalId, ShardPlan, ShardedBuilder};
 use crate::graph::Projection;
 use crate::operators::{Buffer, CountByKey, Filter, Join, Map, Source, SumByTime};
@@ -140,6 +140,11 @@ pub struct Knobs {
     pub collect_policy: Policy,
     /// Pump the §4.2 GC monitor every epoch.
     pub gc: bool,
+    /// Durable representation of checkpoint state: monolithic-equivalent
+    /// full snapshots vs. content-addressed delta chains. Must never
+    /// change observable output — exactly what comparing against the
+    /// (always-`Full`) reference checks.
+    pub snapshot: SnapshotPolicy,
 }
 
 impl Knobs {
@@ -188,6 +193,14 @@ impl Knobs {
         };
         let collect_policy = Policy::Lazy { every: 1, log_outputs: false };
         let gc = rng.chance(0.3);
+        // Delta{1} degenerates to Full through a different code path
+        // (per-checkpoint forced-full), so it stays in the pool.
+        let snapshot = *rng.choose(&[
+            SnapshotPolicy::Full,
+            SnapshotPolicy::Delta { max_chain: 1 },
+            SnapshotPolicy::Delta { max_chain: 2 },
+            SnapshotPolicy::Delta { max_chain: 8 },
+        ]);
         Knobs {
             batch_cap,
             threads,
@@ -201,6 +214,7 @@ impl Knobs {
             agg_policy,
             collect_policy,
             gc,
+            snapshot,
         }
     }
 
@@ -217,6 +231,7 @@ impl Knobs {
             durable: false,
             gc: false,
             mailbox_cap: None,
+            snapshot: SnapshotPolicy::Full,
             ..self.clone()
         }
     }
@@ -224,7 +239,7 @@ impl Knobs {
     /// Compact single-line description (campaign logs, corpus records).
     pub fn describe(&self) -> String {
         format!(
-            "cap={} threads={} mbox={:?} persist={:?} cost={} durable={} flush={} agg={:?} gc={}",
+            "cap={} threads={} mbox={:?} persist={:?} cost={} durable={} flush={} agg={:?} gc={} snap={:?}",
             self.batch_cap,
             self.threads,
             self.mailbox_cap,
@@ -233,7 +248,8 @@ impl Knobs {
             self.durable,
             self.flush_every_n,
             self.agg_policy,
-            self.gc
+            self.gc,
+            self.snapshot
         )
     }
 }
@@ -414,6 +430,7 @@ fn build_inner(
     };
     // Not persisted: re-applied here on both fresh builds and reopens.
     sys.set_mailbox_cap(knobs.mailbox_cap);
+    sys.set_snapshot_policy(knobs.snapshot);
     let threads = knobs.threads.max(1);
     let groups = crate::engine::shard_groups(&plan, threads);
     Built { sys, plan, sources, collect, etail, policies, groups, threads }
@@ -494,6 +511,30 @@ mod tests {
         }
         assert!(tiny > 0, "caps 1–2 must be generated");
         assert!(unbounded > 0, "the pre-backpressure configuration must stay covered");
+    }
+
+    #[test]
+    fn snapshot_policy_knob_covers_full_and_delta() {
+        let (mut full, mut delta) = (0u32, 0u32);
+        for seed in 0..400u64 {
+            let mut rng = Rng::new(seed);
+            let shape = Shape::generate(&mut rng);
+            let knobs = Knobs::generate(&mut rng, &shape);
+            match knobs.snapshot {
+                SnapshotPolicy::Full => full += 1,
+                SnapshotPolicy::Delta { max_chain } => {
+                    assert!(matches!(max_chain, 1 | 2 | 8));
+                    delta += 1;
+                }
+            }
+            assert_eq!(
+                knobs.reference().snapshot,
+                SnapshotPolicy::Full,
+                "oracle runs monolithic-equivalent Full snapshots"
+            );
+        }
+        assert!(full > 0, "Full must stay in the pool");
+        assert!(delta > 0, "delta chains must be generated");
     }
 
     #[test]

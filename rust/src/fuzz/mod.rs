@@ -517,6 +517,12 @@ impl<'a> Driver<'a> {
         let (built, report) = gen::reopen(self.shape, self.knobs, store.clone());
         self.built = built;
         self.store = store;
+        // A fresh process means a fresh §4.2 monitor: the old one's
+        // availability is append-only and tracks chains the reopen just
+        // rebuilt (and possibly conservatively truncated).
+        if self.mon.is_some() {
+            self.mon = Some(self.built.monitor());
+        }
         // The value limit is a property of the store *handle*, not the
         // directory — re-impose it on the new one.
         if let Some(o) = &self.faults.oversize {

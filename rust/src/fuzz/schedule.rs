@@ -123,17 +123,23 @@ impl FaultPlan {
     /// Make the knobs able to host this plan: a cold restart or torn
     /// tail needs a durable file-backed store, and pausing the staged
     /// writer only means anything under asynchronous persistence. A
-    /// restart also turns the GC monitor *off*: garbage collection is
-    /// sound against acknowledged durability, while the crash-restart
-    /// faults deliberately destroy acknowledged-but-unsynced bytes (the
-    /// group-commit buffer, a torn tail) — state the external service
-    /// would have been told it may forget (see `FAILURE_MODES.md`). The
-    /// reconciliation is deterministic, so it is part of the seed → run
-    /// mapping rather than a violation of it.
+    /// *torn-tail* restart also turns the GC monitor off: garbage
+    /// collection is sound against acknowledged durability, while a torn
+    /// tail deliberately destroys acknowledged-but-unsynced bytes —
+    /// state the external service would have been told it may forget
+    /// (see `FAILURE_MODES.md`). Clean cold restarts run with whatever
+    /// `gc` was drawn: reopen's conservative chain repair plus the
+    /// snapshot reachability sweep make a GC'd-then-crashed store a
+    /// recoverable one, and compaction folding the cold prefix into
+    /// per-processor snapshot records is itself machinery GC+restart
+    /// runs must exercise. The reconciliation is deterministic, so it is
+    /// part of the seed → run mapping rather than a violation of it.
     pub fn reconcile(&self, knobs: &mut Knobs) {
-        if self.restart.is_some() {
+        if let Some(r) = &self.restart {
             knobs.durable = true;
-            knobs.gc = false;
+            if r.torn_bytes > 0 {
+                knobs.gc = false;
+            }
         }
         if self.pause.is_some() {
             if let PersistMode::Sync = knobs.persist_mode {
@@ -209,10 +215,18 @@ mod tests {
             let mut knobs = gen::Knobs::generate(&mut rng, &shape);
             let cands: Vec<ProcId> = (0..4).map(ProcId).collect();
             let plan = FaultPlan::generate(&mut rng, &shape, &cands);
+            let gc_drawn = knobs.gc;
             plan.reconcile(&mut knobs);
-            if plan.restart.is_some() {
+            if let Some(r) = &plan.restart {
                 assert!(knobs.durable);
-                assert!(!knobs.gc, "GC must be off when a restart can tear the WAL");
+                if r.torn_bytes > 0 {
+                    assert!(!knobs.gc, "GC must be off when the restart tears the WAL");
+                } else {
+                    assert_eq!(
+                        knobs.gc, gc_drawn,
+                        "clean cold restarts keep the drawn GC knob (lifted restriction)"
+                    );
+                }
             }
             if plan.pause.is_some() {
                 assert!(matches!(knobs.persist_mode, PersistMode::Async { .. }));

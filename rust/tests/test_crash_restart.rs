@@ -14,7 +14,7 @@ use falkirk::engine::Record;
 use falkirk::frontier::Frontier;
 use falkirk::ft::external::ExternalInput;
 use falkirk::ft::monitor::GcAction;
-use falkirk::ft::{FileBackendOptions, PersistMode, Store};
+use falkirk::ft::{FileBackendOptions, Kind, PersistMode, Snapshot, SnapshotPolicy, Store};
 use falkirk::time::Time;
 use falkirk::util::rng::Rng;
 use falkirk::util::tmp::TempDir;
@@ -460,6 +460,234 @@ fn cold_restart_after_gc_compaction() {
         expected,
         "cold restart after compaction diverged"
     );
+}
+
+// ---------------------------------------------------------------------
+// Incremental content-addressed checkpoints: the same crash-restart
+// scenarios with checkpoint state stored as delta chains. The invariant
+// is representation-transparency — byte-identical observable output
+// versus the monolithic-Full in-memory reference, whichever snapshot
+// policy wrote the WAL and wherever the kill lands (mid-chain, or after
+// compaction has folded the cold WAL prefix).
+// ---------------------------------------------------------------------
+
+/// Durable `Kind::Snapshot` records of `store` that are deltas (carry a
+/// `prior_snapshot` base) — direct evidence the WAL holds a chain, not
+/// just monolithic-equivalent fulls.
+fn durable_delta_records(store: &Store) -> usize {
+    use falkirk::util::ser::Decode;
+    let mut n = 0;
+    for proc in store.procs() {
+        for key in store.keys_for(proc, Kind::Snapshot) {
+            let Some(bytes) = store.get(&key) else { continue };
+            if let Ok(snap) = Snapshot::from_bytes(&bytes) {
+                if snap.prior_snapshot.is_some() {
+                    n += 1;
+                }
+            }
+        }
+    }
+    n
+}
+
+/// Mid-chain kill: epochs 0..3 complete (so `Delta {2}` chains have
+/// built, hit the forced-full bound, and started a new delta on top),
+/// the process dies mid-drain of epoch 3, and the cold restart must
+/// materialize states by walking the surviving chains.
+fn delta_crash_restart_mid_chain(batch_cap: usize, flush_every_n: usize) {
+    let full_cfg = ShardedConfig { workers: 4, batch_cap, ..Default::default() };
+    let expected = expected_output(&full_cfg);
+    for policy in [SnapshotPolicy::Full, SnapshotPolicy::Delta { max_chain: 2 }] {
+        let cfg = ShardedConfig { snapshot_policy: policy, ..full_cfg.clone() };
+        let t = TempDir::new("crash-delta-chain");
+        let mut ext = ExternalInput::new();
+        {
+            let store = file_store(t.path(), flush_every_n);
+            let mut p = pipeline_with_store(&cfg, store.clone());
+            for ep in 0..3 {
+                offer_and_drive(&mut p, &mut ext, ep);
+            }
+            let src = p.src_proc();
+            let recs = epoch_records(SEED, 3, RECORDS, KEYS);
+            ext.offer(Time::epoch(3), recs.clone());
+            p.sys.advance_input(src, Time::epoch(3));
+            for r in recs {
+                p.sys.push_input(src, Time::epoch(3), r);
+            }
+            p.sys.advance_input(src, Time::epoch(4));
+            p.sys.run_to_quiescence(40); // mid-drain
+            drop(p);
+            store.simulate_crash();
+        }
+
+        let store = file_store(t.path(), flush_every_n);
+        let deltas = durable_delta_records(&store);
+        match policy {
+            SnapshotPolicy::Full => assert_eq!(
+                deltas, 0,
+                "Full policy must never write a chained snapshot record"
+            ),
+            SnapshotPolicy::Delta { .. } => assert!(
+                deltas > 0,
+                "Delta policy left no durable chain to recover from — the kill \
+                 missed the representation this test exists to cover"
+            ),
+        }
+        let (mut p, report) = reopen_pipeline(&cfg, store);
+        let src = p.src_proc();
+        let f_src = report.plan.frontier(src).clone();
+        for (tm, recs) in ext.replay_from(&f_src) {
+            p.sys.advance_input(src, tm);
+            for r in recs {
+                p.sys.push_input(src, tm, r);
+            }
+        }
+        p.sys.advance_input(src, Time::epoch(4));
+        p.run(5_000_000);
+        for ep in 4..EPOCHS {
+            offer_and_drive(&mut p, &mut ext, ep);
+        }
+        let src = p.src_proc();
+        p.sys.close_input(src);
+        p.run(5_000_000);
+        assert_eq!(
+            canonical_output(&p.sys, p.collect_proc()),
+            expected,
+            "mid-chain cold restart (cap {batch_cap}, {policy:?}) diverged from Full"
+        );
+    }
+}
+
+/// Post-compaction kill: GC tombstones push segments over the dead-byte
+/// threshold, compaction folds the surviving cold prefix into per-
+/// processor fold records, and only then does the process die. The cold
+/// restart replays folds, repairs whatever chain suffix the crash tore,
+/// and must still be byte-identical — and its reopen scan must touch
+/// O(live state) keys, not O(history).
+fn delta_crash_restart_post_compaction(batch_cap: usize) {
+    let full_cfg = ShardedConfig { workers: 4, batch_cap, ..Default::default() };
+    let expected = expected_output(&full_cfg);
+    for policy in [SnapshotPolicy::Full, SnapshotPolicy::Delta { max_chain: 2 }] {
+        let cfg = ShardedConfig { snapshot_policy: policy, ..full_cfg.clone() };
+        let t = TempDir::new("crash-delta-compact");
+        let mut ext = ExternalInput::new();
+        {
+            let store = Store::open_dir(
+                t.path(),
+                1,
+                FileBackendOptions {
+                    flush_every_n: 1,
+                    segment_bytes: 2048, // rotate often so compaction has prey
+                    compact_ratio: 0.4,
+                    fsync: false,
+                },
+            )
+            .unwrap();
+            let mut p = pipeline_with_store(&cfg, store.clone());
+            let collect = p.collect_proc();
+            for ep in 0..4 {
+                offer_and_drive(&mut p, &mut ext, ep);
+                p.sys.checkpoint_now(collect, Frontier::upto_epoch(ep));
+                if ep >= 2 {
+                    let wm = Frontier::upto_epoch(ep - 2);
+                    let topo = p.sys.topology();
+                    let src = p.src_proc();
+                    let mut actions = vec![GcAction::DropCheckpointsBelow {
+                        proc: collect,
+                        watermark: wm.clone(),
+                    }];
+                    for e in topo.out_edges(src) {
+                        actions.push(GcAction::DropLogWithin {
+                            proc: src,
+                            edge: *e,
+                            watermark: wm.clone(),
+                        });
+                    }
+                    for s in 0..4 {
+                        let cp = p.plan.proc(p.count, s);
+                        actions.push(GcAction::DropCheckpointsBelow {
+                            proc: cp,
+                            watermark: wm.clone(),
+                        });
+                        for e in topo.out_edges(cp) {
+                            actions.push(GcAction::DropLogWithin {
+                                proc: cp,
+                                edge: *e,
+                                watermark: wm.clone(),
+                            });
+                        }
+                    }
+                    for a in &actions {
+                        p.sys.apply_gc(a);
+                    }
+                }
+            }
+            assert!(
+                store.backend_info().compactions > 0,
+                "GC tombstones must have triggered compaction before the kill: {:?}",
+                store.backend_info()
+            );
+            drop(p);
+            store.simulate_crash(); // the post-compaction kill
+        }
+
+        let store = file_store(t.path(), 1);
+        let live = store.backend_info().live_keys;
+        store.reset_stats();
+        let (mut p, report) = reopen_pipeline(&cfg, store.clone());
+        // Reopen walks the live index a bounded number of times (per-kind
+        // range scans per processor) — O(live keys), never O(written
+        // history). Dead keys are gone from the index post-compaction, so
+        // a regression that re-reads history shows up as a scan count far
+        // above this bound.
+        let scanned = store.stats().keys_scanned;
+        assert!(
+            scanned <= 8 * live + 64,
+            "cold reopen scanned {scanned} keys against {live} live — \
+             not O(live state) ({policy:?})"
+        );
+        let src = p.src_proc();
+        let f_src = report.plan.frontier(src).clone();
+        for (tm, recs) in ext.replay_from(&f_src) {
+            p.sys.advance_input(src, tm);
+            for r in recs {
+                p.sys.push_input(src, tm, r);
+            }
+        }
+        p.sys.advance_input(src, Time::epoch(4));
+        p.run(5_000_000);
+        for ep in 4..EPOCHS {
+            offer_and_drive(&mut p, &mut ext, ep);
+        }
+        let src = p.src_proc();
+        p.sys.close_input(src);
+        p.run(5_000_000);
+        assert_eq!(
+            canonical_output(&p.sys, p.collect_proc()),
+            expected,
+            "post-compaction cold restart (cap {batch_cap}, {policy:?}) diverged from Full"
+        );
+    }
+}
+
+#[test]
+fn delta_chain_cold_restart_mid_chain_cap1() {
+    delta_crash_restart_mid_chain(1, 1);
+}
+
+#[test]
+fn delta_chain_cold_restart_mid_chain_cap8() {
+    delta_crash_restart_mid_chain(8, 8);
+}
+
+#[test]
+fn delta_chain_cold_restart_post_compaction_cap1() {
+    delta_crash_restart_post_compaction(1);
+}
+
+#[test]
+fn delta_chain_cold_restart_post_compaction_cap8() {
+    delta_crash_restart_post_compaction(8);
 }
 
 // ---------------------------------------------------------------------

@@ -7,8 +7,15 @@ use falkirk::ft::{FileBackendOptions, Key, Kind, Store};
 use falkirk::util::rng::Rng;
 use falkirk::util::tmp::TempDir;
 
-const KINDS: [Kind; 5] =
-    [Kind::Meta, Kind::State, Kind::LogEntry, Kind::HistoryEvent, Kind::InputFrontier];
+const KINDS: [Kind; 7] = [
+    Kind::Meta,
+    Kind::State,
+    Kind::LogEntry,
+    Kind::HistoryEvent,
+    Kind::InputFrontier,
+    Kind::Chunk,
+    Kind::Snapshot,
+];
 
 fn random_blob(rng: &mut Rng) -> Vec<u8> {
     let n = rng.below(200) as usize;

@@ -1,0 +1,444 @@
+"""Schema checker for falkirk's machine-readable observability exports.
+
+Three formats, all hand-rolled on the Rust side (rust/src/metrics/json.rs
+has no serde), so this file is the executable contract that keeps them
+honest from the consumer's side:
+
+  1. ``falkirk-trace/1`` JSON lines (``FALKIRK_TRACE_JSON=file``,
+     rust/src/trace/mod.rs) — one header object, then one event object
+     per line. A file appended across runs (the fuzzer flushes one
+     sorted batch per system generation, each with a fresh clock
+     origin) contains several monotone *segments*; timestamps may step
+     backwards only at a segment boundary.
+  2. ``falkirk-metrics/1`` / ``falkirk-store/1`` single-document
+     summaries (``--metrics-json``, ``store inspect --json``,
+     rust/src/coordinator/cli.rs).
+  3. Chrome ``trace_event`` JSON Array Format (``falkirk trace
+     convert``, rust/src/trace/convert.rs).
+
+Beyond well-formedness, every complete recovery timeline found in a
+trace is structurally validated: the ``solver``, ``rollback``, and
+``replay`` phases must nest inside the enclosing ``recovery`` span,
+replay must begin at or after rollback ends, per-processor
+``rollback_proc`` instants must sit inside the rollback span and agree
+with the span's ``procs_rolled_back`` counter, and a ``detect`` instant
+must precede the span in the same segment.
+
+Usage (CI smoke, after generating the files with the CLI)::
+
+    python3 python/tests/test_trace_schema.py \
+        --trace trace.jsonl --expect-recovery trace.jsonl \
+        --monotone trace.jsonl --metrics metrics.json \
+        --chrome trace.chrome.json
+
+With no arguments, runs the embedded self-test on synthetic documents.
+Stdlib only; also runnable under pytest.
+"""
+
+import json
+import sys
+
+TRACE_SCHEMA = "falkirk-trace/1"
+DOC_SCHEMAS = ("falkirk-metrics/1", "falkirk-store/1")
+U64_MAX = 2**64 - 1
+RECOVERY_PHASES = ("solver", "rollback", "replay")
+
+
+class SchemaError(Exception):
+    """A document violated the schema contract."""
+
+
+def _err(path, msg):
+    raise SchemaError("%s: %s" % (path, msg))
+
+
+def _is_u64(v):
+    return isinstance(v, int) and not isinstance(v, bool) and 0 <= v <= U64_MAX
+
+
+def _parse_line(path, lineno, line):
+    try:
+        obj = json.loads(line)
+    except ValueError as e:
+        _err(path, "line %d: not JSON (%s)" % (lineno, e))
+    if not isinstance(obj, dict):
+        _err(path, "line %d: not a JSON object" % lineno)
+    return obj
+
+
+def _check_event(path, lineno, ev):
+    for key in ("ts_ns", "dur_ns", "tid", "cat", "name"):
+        if key not in ev:
+            _err(path, "line %d: event missing '%s'" % (lineno, key))
+    for key in ("ts_ns", "dur_ns", "tid"):
+        if not _is_u64(ev[key]):
+            _err(path, "line %d: '%s' is not a u64" % (lineno, key))
+    if ev["ts_ns"] + ev["dur_ns"] > U64_MAX:
+        _err(path, "line %d: span end overflows u64" % lineno)
+    for key in ("cat", "name"):
+        if not isinstance(ev[key], str) or not ev[key]:
+            _err(path, "line %d: '%s' is not a non-empty string" % (lineno, key))
+    args = ev.get("args", {})
+    if not isinstance(args, dict):
+        _err(path, "line %d: 'args' is not an object" % lineno)
+    for k, v in args.items():
+        if not isinstance(k, str) or not _is_u64(v):
+            _err(path, "line %d: arg %r is not a str -> u64 pair" % (lineno, k))
+
+
+def load_trace(path, text):
+    """Parse a falkirk-trace/1 file into monotone segments of events.
+
+    Returns a list of segments; each segment is a list of event dicts
+    whose ``ts_ns`` are non-decreasing. A new segment starts at every
+    header line and at every backwards timestamp step (one flushed,
+    sorted batch per segment).
+    """
+    lines = [l for l in text.splitlines() if l.strip()]
+    if not lines:
+        _err(path, "empty trace file")
+    segments = []
+    seg = None
+    for lineno, line in enumerate(lines, 1):
+        obj = _parse_line(path, lineno, line)
+        if "schema" in obj:
+            if obj["schema"] != TRACE_SCHEMA:
+                _err(path, "line %d: schema %r, want %r"
+                     % (lineno, obj["schema"], TRACE_SCHEMA))
+            seg = None
+            continue
+        if lineno == 1:
+            _err(path, "first line is not a %s header" % TRACE_SCHEMA)
+        _check_event(path, lineno, obj)
+        if seg is None or obj["ts_ns"] < seg[-1]["ts_ns"]:
+            seg = []
+            segments.append(seg)
+        seg.append(obj)
+    return segments
+
+
+def _end_ns(ev):
+    return ev["ts_ns"] + ev["dur_ns"]
+
+
+def _contains(parent, child):
+    return parent["ts_ns"] <= child["ts_ns"] and _end_ns(child) <= _end_ns(parent)
+
+
+def check_recovery_timelines(path, segments):
+    """Validate every recovery timeline; return the enclosing spans."""
+    spans = []
+    for seg in segments:
+        rec = [e for e in seg if e["cat"] == "recovery"]
+        detects = [e for e in rec if e["name"] == "detect"]
+        for span in rec:
+            if span["name"] != "recovery" or span["dur_ns"] == 0:
+                continue
+            where = "recovery span at ts=%d" % span["ts_ns"]
+            inner = [e for e in rec if e is not span and _contains(span, e)]
+            phases = {}
+            for name in RECOVERY_PHASES:
+                found = [e for e in inner if e["name"] == name]
+                if len(found) != 1:
+                    _err(path, "%s: %d '%s' phases, want exactly 1"
+                         % (where, len(found), name))
+                phases[name] = found[0]
+            if _end_ns(phases["rollback"]) > phases["replay"]["ts_ns"]:
+                _err(path, "%s: replay begins before rollback ends" % where)
+            per_proc = [e for e in inner if e["name"] == "rollback_proc"]
+            for e in per_proc:
+                if not _contains(phases["rollback"], e):
+                    _err(path, "%s: rollback_proc instant outside the "
+                               "rollback span" % where)
+            claimed = span.get("args", {}).get("procs_rolled_back")
+            if claimed != len(per_proc):
+                _err(path, "%s: span claims procs_rolled_back=%r but %d "
+                           "rollback_proc instants" % (where, claimed, len(per_proc)))
+            if not any(d["ts_ns"] <= span["ts_ns"] for d in detects):
+                _err(path, "%s: no detect instant precedes it" % where)
+            spans.append(span)
+    return spans
+
+
+def check_trace(path, text):
+    """Full trace-file check; returns (segments, recovery spans)."""
+    segments = load_trace(path, text)
+    return segments, check_recovery_timelines(path, segments)
+
+
+def _check_histogram(path, h, field):
+    if not isinstance(h, dict):
+        _err(path, "'%s' is not an object" % field)
+    for key in ("count", "p50_ns", "p99_ns", "max_ns"):
+        if not _is_u64(h.get(key)):
+            _err(path, "'%s.%s' is not a u64" % (field, key))
+    if not isinstance(h.get("mean_ns"), (int, float)) or isinstance(h.get("mean_ns"), bool):
+        _err(path, "'%s.mean_ns' is not a number" % field)
+    if h["count"] > 0 and not h["p50_ns"] <= h["p99_ns"] <= h["max_ns"]:
+        _err(path, "'%s' percentiles are not ordered" % field)
+
+
+def check_metrics(path, text):
+    """Validate a falkirk-metrics/1 or falkirk-store/1 document."""
+    try:
+        doc = json.loads(text)
+    except ValueError as e:
+        _err(path, "not JSON (%s)" % e)
+    if not isinstance(doc, dict):
+        _err(path, "not a JSON object")
+    schema = doc.get("schema")
+    if schema not in DOC_SCHEMAS:
+        _err(path, "schema %r, want one of %r" % (schema, DOC_SCHEMAS))
+
+    if schema == "falkirk-store/1":
+        if not isinstance(doc.get("backend"), dict):
+            _err(path, "'backend' is not an object")
+        for field in ("kinds", "snapshot_chains"):
+            if not isinstance(doc.get(field), list):
+                _err(path, "'%s' is not an array" % field)
+        return doc
+
+    if not isinstance(doc.get("command"), str) or not doc["command"]:
+        _err(path, "'command' is not a non-empty string")
+    if "epoch_wall" in doc:
+        _check_histogram(path, doc["epoch_wall"], "epoch_wall")
+    if "counters" in doc:
+        if not isinstance(doc["counters"], dict):
+            _err(path, "'counters' is not an object")
+        for k, v in doc["counters"].items():
+            if not _is_u64(v):
+                _err(path, "counter %r is not a u64" % k)
+    if "recovery" in doc:
+        rec = doc["recovery"]
+        if not isinstance(rec, dict):
+            _err(path, "'recovery' is not an object")
+        if not isinstance(rec.get("victim"), str):
+            _err(path, "'recovery.victim' is not a string")
+        for key in ("replayed", "restored_from_checkpoint", "reset_to_empty",
+                    "untouched"):
+            if not _is_u64(rec.get(key)):
+                _err(path, "'recovery.%s' is not a u64" % key)
+    if "verdicts" in doc:
+        if not isinstance(doc["verdicts"], list):
+            _err(path, "'verdicts' is not an array")
+        for i, v in enumerate(doc["verdicts"]):
+            if not isinstance(v, dict) or not isinstance(v.get("pass"), bool) \
+                    or not _is_u64(v.get("seed")):
+                _err(path, "verdict %d is malformed" % i)
+    return doc
+
+
+def check_chrome(path, text):
+    """Validate a Chrome trace_event JSON Array Format document."""
+    try:
+        doc = json.loads(text)
+    except ValueError as e:
+        _err(path, "not JSON (%s)" % e)
+    evs = doc.get("traceEvents") if isinstance(doc, dict) else None
+    if not isinstance(evs, list):
+        _err(path, "'traceEvents' is not an array")
+    for i, ev in enumerate(evs):
+        where = "traceEvents[%d]" % i
+        if not isinstance(ev, dict):
+            _err(path, "%s is not an object" % where)
+        for key in ("name", "cat"):
+            if not isinstance(ev.get(key), str):
+                _err(path, "%s.%s is not a string" % (where, key))
+        for key in ("pid", "tid"):
+            if not _is_u64(ev.get(key)):
+                _err(path, "%s.%s is not a u64" % (where, key))
+        if not isinstance(ev.get("ts"), (int, float)):
+            _err(path, "%s.ts is not a number" % where)
+        ph = ev.get("ph")
+        if ph == "X":
+            if not isinstance(ev.get("dur"), (int, float)) or ev["dur"] < 0:
+                _err(path, "%s: complete event without a valid dur" % where)
+        elif ph == "i":
+            if ev.get("s") != "t":
+                _err(path, "%s: instant without thread scope" % where)
+        else:
+            _err(path, "%s.ph is %r, want 'X' or 'i'" % (where, ph))
+    return len(evs)
+
+
+# ---------------------------------------------------------------------------
+# Embedded self-test (runs when invoked with no file arguments).
+
+def _header():
+    return json.dumps({"schema": TRACE_SCHEMA, "clock": "mono_ns"})
+
+
+def _ev(ts, dur, cat, name, tid=0, args=None):
+    return json.dumps({"ts_ns": ts, "dur_ns": dur, "tid": tid, "cat": cat,
+                       "name": name, "args": args or {}})
+
+
+def _good_trace():
+    lines = [
+        _header(),
+        _ev(5, 0, "engine", "deliver", tid=1, args={"proc": 3, "records": 8}),
+        _ev(10, 0, "recovery", "detect", args={"procs": 1}),
+        _ev(20, 100, "recovery", "recovery",
+            args={"replayed": 4, "procs_rolled_back": 1,
+                  "replayed_total": 4, "rolled_back_total": 1}),
+        _ev(20, 10, "recovery", "solver", args={"procs": 7}),
+        _ev(35, 30, "recovery", "rollback", args={"procs": 1}),
+        _ev(40, 0, "recovery", "rollback_proc", args={"proc": 3}),
+        _ev(70, 40, "recovery", "replay", args={"records": 4}),
+        # Second flushed batch: clock origin resets (new segment).
+        _ev(2, 0, "ft", "checkpoint", args={"proc": 1, "bytes": 64}),
+    ]
+    return "\n".join(lines) + "\n"
+
+
+def _expect_error(fn, what):
+    try:
+        fn()
+    except SchemaError:
+        return
+    raise AssertionError("accepted %s" % what)
+
+
+def self_test():
+    segs, spans = check_trace("good", _good_trace())
+    assert len(segs) == 2, segs
+    assert len(spans) == 1
+    assert [e["name"] for e in segs[0]] == \
+        ["deliver", "detect", "recovery", "solver", "rollback",
+         "rollback_proc", "replay"]
+
+    _expect_error(lambda: check_trace("t", _ev(0, 0, "a", "b") + "\n"),
+                  "a trace without a header")
+    _expect_error(lambda: check_trace(
+        "t", _header() + "\n" + '{"ts_ns": -1, "dur_ns": 0, "tid": 0, '
+        '"cat": "a", "name": "b", "args": {}}\n'), "a negative timestamp")
+    # Replay starting inside the rollback span is a malformed timeline.
+    bad = "\n".join([
+        _header(),
+        _ev(0, 0, "recovery", "detect", args={"procs": 1}),
+        _ev(10, 100, "recovery", "recovery", args={"procs_rolled_back": 0}),
+        _ev(10, 5, "recovery", "solver"),
+        _ev(20, 40, "recovery", "rollback"),
+        _ev(30, 20, "recovery", "replay"),
+    ]) + "\n"
+    _expect_error(lambda: check_trace("t", bad), "replay inside rollback")
+    # procs_rolled_back must equal the rollback_proc instant count.
+    bad = "\n".join([
+        _header(),
+        _ev(0, 0, "recovery", "detect", args={"procs": 1}),
+        _ev(10, 100, "recovery", "recovery", args={"procs_rolled_back": 2}),
+        _ev(10, 5, "recovery", "solver"),
+        _ev(20, 10, "recovery", "rollback"),
+        _ev(25, 0, "recovery", "rollback_proc", args={"proc": 0}),
+        _ev(40, 10, "recovery", "replay"),
+    ]) + "\n"
+    _expect_error(lambda: check_trace("t", bad), "a per-proc count mismatch")
+
+    good_metrics = json.dumps({
+        "schema": "falkirk-metrics/1", "command": "fig1", "seed": 7,
+        "epoch_wall": {"count": 4, "mean_ns": 10.5, "p50_ns": 9,
+                       "p99_ns": 20, "max_ns": 21},
+        "counters": {"responses": 96, "storage_errors": 0},
+        "recovery": {"victim": "rank_store", "replayed": 3,
+                     "restored_from_checkpoint": 1, "reset_to_empty": 0,
+                     "untouched": 6},
+    })
+    check_metrics("m", good_metrics)
+    check_metrics("m", json.dumps({
+        "schema": "falkirk-metrics/1", "command": "fuzz", "seed": 7,
+        "verdicts": [{"seed": 7, "pass": True, "digest": "00ff",
+                      "recoveries": 2, "violations": 0}],
+    }))
+    check_metrics("m", json.dumps({
+        "schema": "falkirk-store/1", "dir": "/tmp/s",
+        "backend": {"name": "wal", "segments": 1},
+        "kinds": [], "snapshot_chains": [],
+    }))
+    _expect_error(lambda: check_metrics("m", json.dumps({"schema": "nope"})),
+                  "an unknown schema")
+    _expect_error(lambda: check_metrics("m", json.dumps({
+        "schema": "falkirk-metrics/1", "command": "fig1",
+        "epoch_wall": {"count": 1, "mean_ns": 1, "p50_ns": 9, "p99_ns": 5,
+                       "max_ns": 9}})), "unordered percentiles")
+    _expect_error(lambda: check_metrics("m", json.dumps({
+        "schema": "falkirk-metrics/1", "command": "fig1",
+        "counters": {"x": -1}})), "a negative counter")
+
+    good_chrome = json.dumps({"traceEvents": [
+        {"name": "recovery", "cat": "recovery", "pid": 1, "tid": 0,
+         "ts": 0.02, "ph": "X", "dur": 0.1, "args": {}},
+        {"name": "detect", "cat": "recovery", "pid": 1, "tid": 0,
+         "ts": 0.01, "ph": "i", "s": "t", "args": {}},
+    ], "displayTimeUnit": "ns"})
+    assert check_chrome("c", good_chrome) == 2
+    _expect_error(lambda: check_chrome("c", json.dumps({"traceEvents": [
+        {"name": "x", "cat": "c", "pid": 1, "tid": 0, "ts": 0, "ph": "B"},
+    ]})), "an unsupported phase")
+
+    print("test_trace_schema: self-test OK "
+          "(trace segmentation, timeline nesting, metrics, chrome)")
+
+
+# Pytest entry points.
+def test_self():
+    self_test()
+
+
+def _read(path):
+    with open(path, "r") as f:
+        return f.read()
+
+
+def main(argv):
+    if len(argv) <= 1:
+        self_test()
+        return 0
+    i, checked = 1, 0
+    traces = {}
+    while i < len(argv):
+        flag = argv[i]
+        if flag not in ("--trace", "--metrics", "--chrome", "--monotone",
+                        "--expect-recovery"):
+            sys.stderr.write("unknown argument %r\n" % flag)
+            return 2
+        if i + 1 >= len(argv):
+            sys.stderr.write("%s needs a file argument\n" % flag)
+            return 2
+        path = argv[i + 1]
+        i += 2
+        try:
+            if flag == "--trace":
+                segs, spans = check_trace(path, _read(path))
+                traces[path] = (segs, spans)
+                n = sum(len(s) for s in segs)
+                print("%s: %d events in %d segment(s), %d recovery "
+                      "timeline(s)" % (path, n, len(segs), len(spans)))
+            elif flag == "--monotone":
+                segs, _ = traces.get(path) or check_trace(path, _read(path))
+                if len(segs) > 1:
+                    _err(path, "expected a single monotone segment, "
+                               "found %d" % len(segs))
+            elif flag == "--expect-recovery":
+                _, spans = traces.get(path) or check_trace(path, _read(path))
+                if not spans:
+                    _err(path, "expected at least one complete recovery "
+                               "timeline, found none")
+            elif flag == "--metrics":
+                doc = check_metrics(path, _read(path))
+                print("%s: valid %s document" % (path, doc["schema"]))
+            else:
+                n = check_chrome(path, _read(path))
+                print("%s: valid chrome trace (%d events)" % (path, n))
+            checked += 1
+        except SchemaError as e:
+            sys.stderr.write("FAIL %s\n" % e)
+            return 1
+        except OSError as e:
+            sys.stderr.write("FAIL %s: %s\n" % (path, e))
+            return 1
+    print("test_trace_schema: %d check(s) passed" % checked)
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv))

@@ -25,6 +25,7 @@
 
 pub mod sharded;
 
+use crate::metrics::json::{JsonArr, JsonObj};
 use crate::util::stats::{fmt_ns, fmt_rate, Summary};
 use std::time::Instant;
 
@@ -51,44 +52,24 @@ pub struct BenchResult {
     pub units_per_iter: f64,
 }
 
-/// Escape a string for inclusion in a JSON string literal (hand-rolled:
-/// the offline registry has no serde).
-fn json_escape(s: &str) -> String {
-    let mut out = String::with_capacity(s.len() + 2);
-    for c in s.chars() {
-        match c {
-            '"' => out.push_str("\\\""),
-            '\\' => out.push_str("\\\\"),
-            '\n' => out.push_str("\\n"),
-            '\r' => out.push_str("\\r"),
-            '\t' => out.push_str("\\t"),
-            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
-            c => out.push(c),
-        }
-    }
-    out
-}
-
 impl BenchResult {
-    /// One result as a `falkirk-bench/1` JSON object.
+    /// One result as a `falkirk-bench/1` JSON object (emitted via the
+    /// shared [`crate::metrics::json`] builder).
     pub fn json(&self) -> String {
         let mean = self.ns.mean();
-        let ops = if self.units_per_iter > 0.0 && mean > 0.0 {
-            format!("{:.1}", self.units_per_iter / (mean / 1e9))
+        let mut o = JsonObj::new();
+        o.str_field("name", &self.name)
+            .u64_field("n", self.ns.count() as u64)
+            .raw_field("mean_ns", &format!("{mean:.1}"))
+            .raw_field("p50_ns", &format!("{:.1}", self.ns.p50()))
+            .raw_field("p95_ns", &format!("{:.1}", self.ns.p95()))
+            .f64_field("units_per_iter", self.units_per_iter);
+        if self.units_per_iter > 0.0 && mean > 0.0 {
+            o.raw_field("ops_per_sec", &format!("{:.1}", self.units_per_iter / (mean / 1e9)));
         } else {
-            "null".to_string()
-        };
-        format!(
-            "{{\"name\":\"{}\",\"n\":{},\"mean_ns\":{:.1},\"p50_ns\":{:.1},\
-             \"p95_ns\":{:.1},\"units_per_iter\":{},\"ops_per_sec\":{}}}",
-            json_escape(&self.name),
-            self.ns.count(),
-            mean,
-            self.ns.p50(),
-            self.ns.p95(),
-            self.units_per_iter,
-            ops,
-        )
+            o.raw_field("ops_per_sec", "null");
+        }
+        o.finish()
     }
 
     pub fn line(&self) -> String {
@@ -171,16 +152,21 @@ impl Bencher {
 
     /// The whole group as one `falkirk-bench/1` JSON document.
     pub fn json(&self) -> String {
-        let results: Vec<String> = self.results.iter().map(|r| r.json()).collect();
-        let notes: Vec<String> =
-            self.notes.iter().map(|n| format!("\"{}\"", json_escape(n))).collect();
-        format!(
-            "{{\"schema\":\"falkirk-bench/1\",\"group\":\"{}\",\"provenance\":\"measured\",\
-             \"results\":[{}],\"notes\":[{}]}}",
-            json_escape(&self.group),
-            results.join(","),
-            notes.join(","),
-        )
+        let mut results = JsonArr::new();
+        for r in &self.results {
+            results.push_raw(&r.json());
+        }
+        let mut notes = JsonArr::new();
+        for n in &self.notes {
+            notes.push_str(n);
+        }
+        let mut o = JsonObj::new();
+        o.str_field("schema", "falkirk-bench/1")
+            .str_field("group", &self.group)
+            .str_field("provenance", "measured")
+            .raw_field("results", &results.finish())
+            .raw_field("notes", &notes.finish());
+        o.finish()
     }
 }
 

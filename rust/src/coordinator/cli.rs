@@ -9,7 +9,9 @@
 //! ```
 
 use crate::coordinator::fig1::{run as run_fig1, Fig1Config};
+use crate::metrics::json::{JsonArr, JsonObj};
 use crate::util::cli::Args;
+use crate::util::stats::LogHistogram;
 
 const HELP: &str = "falkirk — rollback recovery for dataflow systems (Isard & Abadi, 2015)
 
@@ -25,6 +27,7 @@ COMMANDS:
             --persist-async --ack-every N (8)   # staged writer pipeline
             --snapshot-delta --snapshot-max-chain N (8)
                              # content-addressed incremental checkpoints
+            --metrics-json FILE  # end-of-run falkirk-metrics/1 summary
   shard     Run the sharded keyed-aggregation job, optionally crashing
             one worker shard and recovering only its key range.
             --workers W (4) --epochs N (6) --records N (64) --keys N (16)
@@ -38,10 +41,20 @@ COMMANDS:
             --persist-async --ack-every N (8)   # staged writer pipeline
             --snapshot-delta --snapshot-max-chain N (8)
                              # content-addressed incremental checkpoints
+            --metrics-json FILE  # end-of-run falkirk-metrics/1 summary
   store     Durable-store tooling.
-            inspect <dir>    # dump segment / key / byte counts of a WAL,
+            inspect <dir> [--json]
+                             # dump segment / key / byte counts of a WAL,
                              # plus per-processor snapshot-chain depth,
-                             # chunk counts, and dedup-reused bytes
+                             # chunk counts, and dedup-reused bytes;
+                             # --json emits one falkirk-store/1 document
+  trace     Trace-file tooling. Set FALKIRK_TRACE_JSON=FILE on any fig1 /
+            shard / fuzz run to capture a falkirk-trace/1 JSON-lines
+            trace (epochs, deliveries, barriers, checkpoints, WAL and
+            ack watermarks, and the recovery timeline: detect -> solver
+            -> rollback -> replay).
+            convert <file> [--out F]  # re-emit as Chrome trace_event
+                                      # JSON for chrome://tracing
   fig7      Run a worked rollback example.  --panel a|b|c (c)
   gc-demo   Drive the §4.2 GC monitor and print watermark advances.
             --epochs N (8)
@@ -49,6 +62,7 @@ COMMANDS:
             dataflow, knobs, and a fault schedule, then checks the run
             against a no-fault reference (see rust/src/fuzz/).
             --seed N (1) --runs K (1) --steps S (5000000)
+            --metrics-json FILE  # end-of-run falkirk-metrics/1 summary
             Consecutive seeds N..N+K; exit 1 lists each failing seed
             (re-run with --seed <failing> --runs 1 to reproduce).
   selftest  Smoke-test all layers (engine, FT, recovery, kernels).
@@ -155,6 +169,40 @@ fn store_for(args: &Args, write_cost: u64) -> Result<crate::ft::Store, i32> {
     }
 }
 
+/// Schema tag of the `--metrics-json` end-of-run summary documents.
+const METRICS_SCHEMA: &str = "falkirk-metrics/1";
+
+/// A [`LogHistogram`] as one JSON object (ns-valued percentiles).
+fn histogram_json(h: &LogHistogram) -> String {
+    let mut o = JsonObj::new();
+    o.u64_field("count", h.count())
+        .f64_field("mean_ns", h.mean())
+        .u64_field("p50_ns", h.p50())
+        .u64_field("p99_ns", h.p99())
+        .u64_field("max_ns", h.max());
+    o.finish()
+}
+
+/// Write a finished `falkirk-metrics/1` document where `--metrics-json`
+/// points (no-op when the option is absent).
+fn emit_metrics(args: &Args, doc: String) -> Result<(), i32> {
+    let Some(path) = args.get("metrics-json") else { return Ok(()) };
+    std::fs::write(path, doc + "\n").map_err(|e| {
+        eprintln!("cannot write --metrics-json '{path}': {e}");
+        1
+    })
+}
+
+/// Append a run's trace where [`crate::trace::ENV_TRACE_JSON`] points
+/// (no-op when the tracer was not attached).
+fn flush_trace(trace: &Option<(crate::trace::Tracer, String)>) -> Result<(), i32> {
+    let Some((tr, path)) = trace else { return Ok(()) };
+    tr.append_json_lines(path).map_err(|e| {
+        eprintln!("cannot append trace to '{path}' ({}): {e}", crate::trace::ENV_TRACE_JSON);
+        1
+    })
+}
+
 /// Entry point; returns the process exit code.
 pub fn run(raw: &[String]) -> i32 {
     let args = Args::parse(raw);
@@ -163,6 +211,7 @@ pub fn run(raw: &[String]) -> i32 {
         "fig1" => cmd_fig1(&args),
         "shard" => cmd_shard(&args),
         "store" => cmd_store(&args),
+        "trace" => cmd_trace(&args),
         "fig7" => cmd_fig7(&args),
         "gc-demo" => cmd_gc_demo(&args),
         "fuzz" => cmd_fuzz(&args),
@@ -209,7 +258,12 @@ fn cmd_fig1(args: &Args) -> i32 {
         Ok(s) => s,
         Err(code) => return code,
     };
-    let out = crate::coordinator::fig1::run_with_store(&cfg, store);
+    let trace = crate::trace::Tracer::from_env();
+    let out = crate::coordinator::fig1::run_traced(
+        &cfg,
+        store,
+        trace.as_ref().map(|(t, _)| t.clone()),
+    );
     println!("fig1: kernels = {}", if out.used_xla { "XLA artifacts" } else { "reference (run `make artifacts`)" });
     println!("  responses        {}", out.responses);
     println!("  db commits       {}  (duplicates suppressed: {})", out.db_commits, out.db_duplicates);
@@ -238,6 +292,52 @@ fn cmd_fig1(args: &Args) -> i32 {
         println!("    restored/reset/⊤   {}/{}/{}", rec.restored, rec.reset_to_empty, rec.untouched);
         println!("    client redelivered {}", rec.input_redeliveries);
         println!("    re-quiesce events  {}", rec.requiesce_events);
+    }
+    let mut epoch_h = LogHistogram::new();
+    for &ns in &out.epoch_wall_ns {
+        epoch_h.record(ns);
+    }
+    let mut counters = JsonObj::new();
+    counters
+        .u64_field("responses", out.responses as u64)
+        .u64_field("db_commits", out.db_commits as u64)
+        .u64_field("db_duplicates", out.db_duplicates)
+        .u64_field("checkpoints", out.checkpoints)
+        .u64_field("log_entries", out.log_entries)
+        .u64_field("storage_writes", out.storage_writes)
+        .u64_field("storage_bytes", out.storage_bytes)
+        .u64_field("ack_lag_peak", out.ack_lag)
+        .u64_field("chunks_reused", out.chunks_reused)
+        .u64_field("chunk_bytes_reused", out.chunk_bytes_reused)
+        .u64_field("storage_errors", out.storage_errors)
+        .u64_field("events", out.events);
+    let mut doc = JsonObj::new();
+    doc.str_field("schema", METRICS_SCHEMA)
+        .str_field("command", "fig1")
+        .u64_field("seed", cfg.seed)
+        .u64_field("epochs", cfg.epochs)
+        .bool_field("used_xla", out.used_xla)
+        .f64_field("elapsed_ms", out.elapsed_ms)
+        .raw_field("epoch_wall", &histogram_json(&epoch_h))
+        .raw_field("counters", &counters.finish());
+    if let Some(rec) = &out.recovery {
+        let mut r = JsonObj::new();
+        r.str_field("victim", &rec.victim)
+            .f64_field("recover_wall_us", rec.recover_wall_us)
+            .u64_field("replayed", rec.replayed as u64)
+            .u64_field("dropped", rec.dropped as u64)
+            .u64_field("restored_from_checkpoint", rec.restored as u64)
+            .u64_field("reset_to_empty", rec.reset_to_empty as u64)
+            .u64_field("untouched", rec.untouched as u64)
+            .u64_field("input_redeliveries", rec.input_redeliveries)
+            .u64_field("requiesce_events", rec.requiesce_events);
+        doc.raw_field("recovery", &r.finish());
+    }
+    if let Err(code) = emit_metrics(args, doc.finish()) {
+        return code;
+    }
+    if let Err(code) = flush_trace(&trace) {
+        return code;
     }
     0
 }
@@ -304,9 +404,14 @@ fn cmd_shard(args: &Args) -> i32 {
         Ok(s) => s,
         Err(code) => return code,
     };
+    let trace = crate::trace::Tracer::from_env();
     let mut p = crate::bench_support::sharded::pipeline_with_store(&cfg, store);
+    p.sys.set_tracer(trace.as_ref().map(|(t, _)| t.clone()));
+    let mut epoch_h = LogHistogram::new();
     let t0 = std::time::Instant::now();
     for ep in 0..epochs {
+        let t_epoch = std::time::Instant::now();
+        let trace_t0 = trace.as_ref().map(|(t, _)| t.now_ns());
         drive_epoch(&mut p, seed, ep, records, keys);
         if let Some(s) = fail_shard {
             if ep == fail_after {
@@ -327,6 +432,10 @@ fn cmd_shard(args: &Args) -> i32 {
                     rep.replayed
                 );
             }
+        }
+        epoch_h.record(t_epoch.elapsed().as_nanos() as u64);
+        if let (Some((tr, _)), Some(ts)) = (&trace, trace_t0) {
+            tr.span(0, "driver", "epoch", ts, &[("epoch", ep)]);
         }
     }
     let src = p.src_proc();
@@ -371,6 +480,38 @@ fn cmd_shard(args: &Args) -> i32 {
     // batch caps iff the observable output is identical.
     let h = crate::util::hash::fnv1a(&out);
     println!("  output bytes     {} (fnv1a {h:016x})", out.len());
+    let mut counters = JsonObj::new();
+    counters
+        .u64_field("records", tp.records)
+        .u64_field("events", tp.events)
+        .u64_field("peak_mailbox_records", p.sys.engine.peak_queue_records() as u64)
+        .u64_field("log_entries", p.sys.stats.log_entries)
+        .u64_field("log_records", p.sys.stats.log_records)
+        .u64_field("checkpoints", p.sys.stats.checkpoints_taken)
+        .u64_field("ack_lag_peak", p.sys.stats.ack_lag)
+        .u64_field("storage_errors", p.sys.stats.storage_errors)
+        .u64_field("recoveries", p.sys.stats.recoveries)
+        .u64_field("messages_replayed", p.sys.stats.messages_replayed)
+        .u64_field("output_bytes", out.len() as u64);
+    let mut doc = JsonObj::new();
+    doc.str_field("schema", METRICS_SCHEMA)
+        .str_field("command", "shard")
+        .u64_field("seed", seed)
+        .u64_field("epochs", epochs)
+        .u64_field("workers", workers as u64)
+        .u64_field("threads", threads as u64)
+        .f64_field("elapsed_secs", tp.elapsed_secs)
+        .f64_field("records_per_sec", tp.records_per_sec())
+        .f64_field("events_per_sec", tp.events_per_sec())
+        .raw_field("epoch_wall", &histogram_json(&epoch_h))
+        .raw_field("counters", &counters.finish())
+        .str_field("output_fnv1a", &format!("{h:016x}"));
+    if let Err(code) = emit_metrics(args, doc.finish()) {
+        return code;
+    }
+    if let Err(code) = flush_trace(&trace) {
+        return code;
+    }
     0
 }
 
@@ -387,13 +528,6 @@ fn cmd_store(args: &Args) -> i32 {
                 Err(code) => return code,
             };
             let info = store.backend_info();
-            println!("store {dir} ({}):", info.name);
-            println!("  segments         {}", info.segments);
-            println!("  file bytes       {}", info.file_bytes);
-            println!("  live keys        {}", info.live_keys);
-            println!("  live bytes       {}", info.live_bytes);
-            println!("  dead bytes       {}", info.dead_bytes);
-            println!("  compactions      {}", info.compactions);
             // Per-kind breakdown over the processors actually present.
             // Sizes come from the index — no blob reads.
             use crate::ft::Kind;
@@ -414,20 +548,82 @@ fn cmd_store(args: &Args) -> i32 {
                     e.1 += size;
                 }
             }
+            let chains = snapshot_chain_rows(&store);
+            if args.flag("json") {
+                let mut backend = JsonObj::new();
+                backend
+                    .str_field("name", &info.name)
+                    .u64_field("segments", info.segments as u64)
+                    .u64_field("file_bytes", info.file_bytes as u64)
+                    .u64_field("live_keys", info.live_keys as u64)
+                    .u64_field("live_bytes", info.live_bytes as u64)
+                    .u64_field("dead_bytes", info.dead_bytes as u64)
+                    .u64_field("compactions", info.compactions as u64);
+                let mut kinds = JsonArr::new();
+                for (name, (n, bytes)) in &counts {
+                    let mut k = JsonObj::new();
+                    k.str_field("kind", name).u64_field("keys", *n).u64_field("bytes", *bytes);
+                    kinds.push_raw(&k.finish());
+                }
+                let mut arr = JsonArr::new();
+                for c in &chains {
+                    let mut o = JsonObj::new();
+                    o.u64_field("proc", c.proc.0 as u64)
+                        .u64_field("snapshots", c.records)
+                        .u64_field("newest_chain_depth", c.depth)
+                        .u64_field("chunks", c.chunk_keys)
+                        .u64_field("chunk_bytes", c.chunk_bytes)
+                        .u64_field("dedup_reused_bytes", c.dedup_reused);
+                    arr.push_raw(&o.finish());
+                }
+                let mut doc = JsonObj::new();
+                doc.str_field("schema", "falkirk-store/1")
+                    .str_field("dir", dir)
+                    .raw_field("backend", &backend.finish())
+                    .raw_field("kinds", &kinds.finish())
+                    .raw_field("snapshot_chains", &arr.finish());
+                println!("{}", doc.finish());
+                return 0;
+            }
+            println!("store {dir} ({}):", info.name);
+            println!("  segments         {}", info.segments);
+            println!("  file bytes       {}", info.file_bytes);
+            println!("  live keys        {}", info.live_keys);
+            println!("  live bytes       {}", info.live_bytes);
+            println!("  dead bytes       {}", info.dead_bytes);
+            println!("  compactions      {}", info.compactions);
             for (name, (n, bytes)) in counts {
                 println!("  {name:<16} {n} keys / {bytes} bytes");
             }
-            print_snapshot_chains(&store);
+            for c in &chains {
+                println!(
+                    "  proc {}: {} snapshot records (newest chain depth {}), \
+                     {} chunks / {} bytes, dedup-reused {} bytes",
+                    c.proc, c.records, c.depth, c.chunk_keys, c.chunk_bytes, c.dedup_reused
+                );
+            }
             0
         }
         other => {
             eprintln!(
-                "unknown store subcommand {:?}\nusage: falkirk store inspect <dir>",
+                "unknown store subcommand {:?}\nusage: falkirk store inspect <dir> [--json]",
                 other.unwrap_or("<none>")
             );
             2
         }
     }
+}
+
+/// One processor's durable snapshot-chain summary (see
+/// [`snapshot_chain_rows`]); rendered as text by `store inspect` and as
+/// one `snapshot_chains` element by `store inspect --json`.
+struct ChainRow {
+    proc: crate::graph::ProcId,
+    records: u64,
+    depth: u64,
+    chunk_keys: u64,
+    chunk_bytes: u64,
+    dedup_reused: u64,
 }
 
 /// Per-processor breakdown of the durable snapshot chains: how many
@@ -436,10 +632,11 @@ fn cmd_store(args: &Args) -> i32 {
 /// listings reference beyond what is stored once (the durable dedup
 /// win). Only `Kind::Snapshot` records are decoded — chunk sizes come
 /// from the index, so no chunk blob is read.
-fn print_snapshot_chains(store: &crate::ft::Store) {
+fn snapshot_chain_rows(store: &crate::ft::Store) -> Vec<ChainRow> {
     use crate::ft::storage::chunk_span;
     use crate::ft::{Kind, Snapshot};
     use crate::util::ser::Decode;
+    let mut rows = Vec::new();
     for proc in store.procs() {
         let mut records = std::collections::BTreeMap::new();
         for key in store.keys_for(proc, Kind::Snapshot) {
@@ -479,12 +676,61 @@ fn print_snapshot_chains(store: &crate::ft::Store) {
                     .sum::<u64>()
             })
             .sum();
-        println!(
-            "  proc {proc}: {} snapshot records (newest chain depth {depth}), \
-             {chunk_keys} chunks / {chunk_bytes} bytes, dedup-reused {} bytes",
-            records.len(),
-            listed.saturating_sub(chunk_bytes)
-        );
+        rows.push(ChainRow {
+            proc,
+            records: records.len() as u64,
+            depth,
+            chunk_keys,
+            chunk_bytes,
+            dedup_reused: listed.saturating_sub(chunk_bytes),
+        });
+    }
+    rows
+}
+
+fn cmd_trace(args: &Args) -> i32 {
+    let pos = args.positional();
+    match pos.get(1).map(|s| s.as_str()) {
+        Some("convert") => {
+            let Some(file) = pos.get(2) else {
+                eprintln!("usage: falkirk trace convert <file> [--out F]");
+                return 2;
+            };
+            let text = match std::fs::read_to_string(file) {
+                Ok(t) => t,
+                Err(e) => {
+                    eprintln!("cannot read trace '{file}': {e}");
+                    return 2;
+                }
+            };
+            let (doc, stats) = match crate::trace::convert::to_chrome(&text) {
+                Ok(x) => x,
+                Err(e) => {
+                    eprintln!("cannot convert '{file}': {e}");
+                    return 2;
+                }
+            };
+            let out_path = args
+                .get("out")
+                .map(|s| s.to_string())
+                .unwrap_or_else(|| format!("{file}.chrome.json"));
+            if let Err(e) = std::fs::write(&out_path, doc + "\n") {
+                eprintln!("cannot write '{out_path}': {e}");
+                return 1;
+            }
+            println!(
+                "trace: {} events ({} spans, {} instants) -> {out_path}",
+                stats.events, stats.spans, stats.instants
+            );
+            0
+        }
+        other => {
+            eprintln!(
+                "unknown trace subcommand {:?}\nusage: falkirk trace convert <file> [--out F]",
+                other.unwrap_or("<none>")
+            );
+            2
+        }
     }
 }
 
@@ -618,6 +864,28 @@ fn cmd_fuzz(args: &Args) -> i32 {
         report.verdicts.len(),
         report.digest()
     );
+    let mut verdicts = JsonArr::new();
+    for v in &report.verdicts {
+        let mut o = JsonObj::new();
+        o.u64_field("seed", v.seed)
+            .bool_field("pass", v.pass)
+            .str_field("digest", &format!("{:016x}", v.digest))
+            .u64_field("recoveries", v.recoveries as u64)
+            .u64_field("violations", v.violations.len() as u64);
+        verdicts.push_raw(&o.finish());
+    }
+    let mut doc = JsonObj::new();
+    doc.str_field("schema", METRICS_SCHEMA)
+        .str_field("command", "fuzz")
+        .u64_field("seed", seed)
+        .u64_field("runs", runs)
+        .u64_field("passed", (report.verdicts.len() - failures.len()) as u64)
+        .u64_field("failed", failures.len() as u64)
+        .str_field("campaign_digest", &format!("{:016x}", report.digest()))
+        .raw_field("verdicts", &verdicts.finish());
+    if let Err(code) = emit_metrics(args, doc.finish()) {
+        return code;
+    }
     if failures.is_empty() {
         0
     } else {

@@ -413,6 +413,10 @@ pub struct Fig1Outcome {
     pub recovery: Option<RecoverySummary>,
     pub used_xla: bool,
     pub elapsed_ms: f64,
+    /// Wall time each epoch took to drive to quiescence, in
+    /// nanoseconds, in epoch order (feeds the `--metrics-json`
+    /// percentile summary).
+    pub epoch_wall_ns: Vec<u64>,
 }
 
 /// Recovery measurements for EXPERIMENTS.md.
@@ -438,15 +442,31 @@ pub fn run(cfg: &Fig1Config) -> Fig1Outcome {
 
 /// [`run`] against a caller-provided (e.g. durable) store.
 pub fn run_with_store(cfg: &Fig1Config, store: Store) -> Fig1Outcome {
+    run_traced(cfg, store, None)
+}
+
+/// [`run_with_store`] with an optional tracer attached to the system for
+/// the whole run. Each epoch becomes an `"epoch"` span on the driving
+/// thread; the recovery timeline (detect → solver → rollback → replay)
+/// nests inside whichever epoch injected the failure.
+pub fn run_traced(
+    cfg: &Fig1Config,
+    store: Store,
+    tracer: Option<crate::trace::Tracer>,
+) -> Fig1Outcome {
     let t_start = std::time::Instant::now();
     let mut app = build_with_store(cfg, store);
+    app.sys.set_tracer(tracer.clone());
     let mut rng = Rng::new(cfg.seed);
     let mut q_ext = ExternalInput::new();
     let mut d_ext = ExternalInput::new();
     let words = ["one", "two", "three", "four", "five", "six", "seven", "eight"];
     let mut recovery = None;
+    let mut epoch_wall_ns = Vec::with_capacity(cfg.epochs as usize);
 
     for ep in 0..cfg.epochs {
+        let t_epoch = std::time::Instant::now();
+        let trace_t0 = tracer.as_ref().map(|tr| tr.now_ns());
         let t = Time::epoch(ep);
         // Offer this epoch's batches to the external services.
         let queries: Vec<Record> = (0..cfg.queries_per_epoch)
@@ -525,6 +545,10 @@ pub fn run_with_store(cfg: &Fig1Config, store: Store) -> Fig1Outcome {
                 });
             }
         }
+        epoch_wall_ns.push(t_epoch.elapsed().as_nanos() as u64);
+        if let (Some(tr), Some(t0)) = (&tracer, trace_t0) {
+            tr.span(0, "driver", "epoch", t0, &[("epoch", ep)]);
+        }
     }
     app.sys.close_input(app.q_src);
     app.sys.close_input(app.d_src);
@@ -552,6 +576,7 @@ pub fn run_with_store(cfg: &Fig1Config, store: Store) -> Fig1Outcome {
         recovery,
         used_xla: app.used_xla,
         elapsed_ms: t_start.elapsed().as_nanos() as f64 / 1e6,
+        epoch_wall_ns,
     }
 }
 

@@ -93,6 +93,7 @@ use crate::engine::scheduler::{Engine, EventReport, WorkerState};
 use crate::graph::{EdgeId, ProcId, Topology};
 use crate::progress::{ProgressDeltas, ProgressTracker};
 use crate::time::Time;
+use crate::trace::Tracer;
 use std::collections::VecDeque;
 use std::panic::{catch_unwind, resume_unwind, AssertUnwindSafe};
 use std::sync::atomic::{AtomicU64, AtomicU8, Ordering};
@@ -238,12 +239,17 @@ fn worker_loop<O: EventObserver>(w: &mut WorkerState, obs: &mut O, hub: &MailHub
         );
         if w.has_local_work() && ctl.budget_left() {
             ctl.parked.store(true, Ordering::SeqCst);
+            w.trace_instant("parallel", "stall", &[("group", w.group as u64)]);
         }
-        // Deposit deltas + pending snapshot, then park.
+        // Deposit deltas + pending snapshot, then park. The barrier is
+        // where buffered trace events merge into the shared sink — the
+        // worker is synchronizing anyway, so tracing adds no extra
+        // cross-thread traffic to the message phase.
         {
             let mut dep = ctl.deposits.lock().unwrap();
             dep[w.group] = Some((w.take_deltas(), w.pending_snapshot()));
         }
+        w.flush_trace();
         ctl.barrier.wait(); // A: every worker parked; coordinator decides.
         ctl.barrier.wait(); // B: decision published.
         match ctl.decision.load(Ordering::SeqCst) {
@@ -367,7 +373,9 @@ fn coordinator_loop(
     group_of: &[usize],
     hub: &MailHub,
     ctl: &Control,
+    tracer: Option<&Tracer>,
 ) {
+    let mut round: u64 = 0;
     loop {
         ctl.barrier.wait(); // A: workers parked, all sends visible.
         // A coordinator panic between the barriers (an engine-invariant
@@ -385,6 +393,14 @@ fn coordinator_loop(
             }
         };
         ctl.decision.store(decision, Ordering::SeqCst);
+        if let Some(tr) = tracer {
+            // decision: 0=continue 1=notify 2=quiesce 3=force.
+            tr.instant(0, "parallel", "barrier_round", &[
+                ("round", round),
+                ("decision", decision as u64),
+            ]);
+        }
+        round += 1;
         ctl.barrier.wait(); // B
         if decision == DECISION_QUIESCE {
             break;
@@ -406,6 +422,7 @@ pub(crate) fn drive_parallel<O: EventObserver>(
 ) -> usize {
     assert_eq!(observers.len(), ngroups, "one observer per worker group");
     let before = engine.events_processed();
+    let tracer = engine.tracer().cloned();
     let mut workers = engine.decompose(group_of, ngroups);
     let hub = MailHub::new(ngroups);
     let ctl = Control {
@@ -425,7 +442,7 @@ pub(crate) fn drive_parallel<O: EventObserver>(
                 let (hub, ctl) = (&hub, &ctl);
                 s.spawn(move || worker_main(w, obs, hub, ctl));
             }
-            coordinator_loop(tracker, &topo, group_of, &hub, &ctl);
+            coordinator_loop(tracker, &topo, group_of, &hub, &ctl, tracer.as_ref());
         });
     }
     engine.recompose(workers);

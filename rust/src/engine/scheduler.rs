@@ -77,6 +77,7 @@ use crate::frontier::Frontier;
 use crate::graph::{EdgeId, ProcId, Topology};
 use crate::progress::{ProgressDeltas, ProgressTracker, Summary};
 use crate::time::{LexTime, Time};
+use crate::trace::{TraceBuf, Tracer};
 use std::collections::BTreeSet;
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::Arc;
@@ -217,6 +218,11 @@ pub struct Engine {
     /// (costs one clone per sent batch; off by default — the FT harness
     /// turns it on because logging and D̄ maintenance read them).
     capture_sent: bool,
+    /// Structured-trace sink (`None` by default — the hot path pays one
+    /// branch, same gating discipline as the capture flags above).
+    /// Delivery events record on logical thread 0; decomposed workers
+    /// inherit the sink through per-worker [`TraceBuf`]s.
+    tracer: Option<Tracer>,
     /// Engine state is on loan to parallel workers (set by
     /// [`Engine::decompose`], cleared by [`Engine::recompose`]). Only
     /// observable after a panic aborted a drain mid-flight; the mutating
@@ -282,6 +288,7 @@ impl Engine {
             delivery,
             capture_data: false,
             capture_sent: false,
+            tracer: None,
             on_loan: false,
             cursor: 0,
             events: 0,
@@ -344,6 +351,19 @@ impl Engine {
     /// the batch's time.
     pub fn set_sent_capture(&mut self, on: bool) {
         self.capture_sent = on;
+    }
+
+    /// Attach (or detach) a structured-trace sink. With a tracer, each
+    /// batch delivery records a `deliver` instant (edge + record count)
+    /// and credit stalls record `gating_stall` instants; without one the
+    /// scheduler pays a single `Option` branch per site.
+    pub fn set_tracer(&mut self, tracer: Option<Tracer>) {
+        self.tracer = tracer;
+    }
+
+    /// The attached trace sink, if any.
+    pub fn tracer(&self) -> Option<&Tracer> {
+        self.tracer.as_ref()
     }
 
     /// Guard against using an engine whose state is on loan to parallel
@@ -487,6 +507,9 @@ impl Engine {
         let sent = self.flush(p, staged, notify);
         self.cursor = (ei + 1) % self.channels.len();
         self.events += 1;
+        if let Some(tr) = &self.tracer {
+            tr.instant(0, "engine", "deliver", &[("edge", e.0 as u64), ("records", len as u64)]);
+        }
         Some(EventReport {
             kind: EventKind::Message { proc: p, edge: e, time, len, data: report_data },
             sent,
@@ -518,6 +541,11 @@ impl Engine {
             }
         }
         if parked {
+            // Every deliverable edge was credit-parked: record the stall
+            // before force-delivering (credit defers, never denies).
+            if let Some(tr) = &self.tracer {
+                tr.instant(0, "engine", "gating_stall", &[]);
+            }
             for i in 0..ne {
                 let ei = (self.cursor + i) % ne;
                 if self.channels[ei].is_empty() {
@@ -768,6 +796,7 @@ impl Engine {
                 delivery: self.delivery,
                 capture_data: self.capture_data,
                 capture_sent: self.capture_sent,
+                trace: self.tracer.as_ref().map(|t| TraceBuf::new(t.clone(), g as u32 + 1)),
                 mailbox_cap: self.mailbox_cap,
                 occupancy: occupancy.clone(),
                 proc_ids: Vec::new(),
@@ -869,6 +898,10 @@ pub(crate) struct WorkerState {
     delivery: Delivery,
     capture_data: bool,
     capture_sent: bool,
+    /// Per-worker trace buffer (`tid = group + 1`): plain `Vec` pushes
+    /// on the worker thread, merged into the shared sink at barriers
+    /// ([`WorkerState::flush_trace`]) and on drop (the recompose path).
+    trace: Option<TraceBuf>,
     /// Engine-level per-edge queue budget, if any.
     mailbox_cap: Option<usize>,
     /// Shared per-edge record occupancy, globally indexed — present iff a
@@ -936,6 +969,27 @@ impl WorkerState {
     /// Take the accumulated tracker deltas for a barrier flush.
     pub(crate) fn take_deltas(&mut self) -> ProgressDeltas {
         std::mem::take(&mut self.deltas)
+    }
+
+    /// Merge this worker's buffered trace events into the shared sink —
+    /// called at the barrier rounds where the worker already
+    /// synchronizes (and again on drop, which covers recompose).
+    pub(crate) fn flush_trace(&mut self) {
+        if let Some(tb) = self.trace.as_mut() {
+            tb.flush();
+        }
+    }
+
+    /// Record an instant on this worker's trace buffer, if tracing.
+    pub(crate) fn trace_instant(
+        &mut self,
+        cat: &'static str,
+        name: &'static str,
+        args: &[(&'static str, u64)],
+    ) {
+        if let Some(tb) = self.trace.as_mut() {
+            tb.instant(cat, name, args);
+        }
     }
 
     /// Snapshot of nonempty pending-notification sets, for the
@@ -1014,6 +1068,9 @@ impl WorkerState {
         let sent = self.flush(p, staged, notify, mail);
         self.cursor = (li + 1) % self.edge_ids.len();
         self.events += 1;
+        if let Some(tb) = self.trace.as_mut() {
+            tb.instant("engine", "deliver", &[("edge", e.0 as u64), ("records", len as u64)]);
+        }
         Some(EventReport {
             kind: EventKind::Message { proc: p, edge: e, time, len, data: report_data },
             sent,

@@ -205,6 +205,9 @@ pub struct FileBackend {
     /// panic and open performed no on-disk repair.
     read_only: bool,
     crashed: bool,
+    /// Capture-gated structured tracer ([`crate::trace`]): segment
+    /// rotations and compactions record "wal" events through it.
+    tracer: Option<crate::trace::Tracer>,
 }
 
 fn seg_name(id: u64) -> String {
@@ -377,6 +380,7 @@ impl FileBackend {
             in_compaction: false,
             read_only: !repair,
             crashed: false,
+            tracer: None,
         };
 
         for (i, &id) in ids.iter().enumerate() {
@@ -641,6 +645,9 @@ impl FileBackend {
         self.flush();
         self.writer = None;
         self.active += 1;
+        if let Some(tr) = &self.tracer {
+            tr.instant(0, "wal", "wal_rotate", &[("segment", self.active)]);
+        }
     }
 
     /// Read a record's payload. Flushes first if the record is still in
@@ -788,12 +795,17 @@ impl FileBackend {
         if self.dir_dirty {
             self.fsync_dir();
         }
+        let reclaimed: u64 = victims.iter().filter_map(|id| self.segs.get(id)).map(|s| s.flushed_len).sum();
+        let n_victims = victims.len() as u64;
         for id in victims {
             self.segs.remove(&id);
             self.dirty_segs.remove(&id);
             self.readers.remove(&id);
             let _ = std::fs::remove_file(self.dir.join(seg_name(id)));
             self.compactions += 1;
+        }
+        if let Some(tr) = &self.tracer {
+            tr.instant(0, "wal", "wal_compact", &[("segments", n_victims), ("bytes", reclaimed)]);
         }
         // The removals changed the directory; power-loss durability of
         // the new shape is re-established on the next fsync.
@@ -989,6 +1001,10 @@ impl StorageBackend for FileBackend {
 
     fn compact(&mut self) {
         self.maybe_compact();
+    }
+
+    fn set_tracer(&mut self, tracer: Option<crate::trace::Tracer>) {
+        self.tracer = tracer;
     }
 
     fn simulate_crash(&mut self) {

@@ -527,6 +527,7 @@ fn persist_history(
             ft.storage_errors += 1;
             ft.persist_gap = true;
             stats.storage_errors += 1;
+            store.trace_instant("storage", "storage_refused", &[("proc", proc as u64)]);
             UNACKABLE
         }
     };
@@ -639,6 +640,7 @@ fn observe_event<V: FtView>(
                     ft.storage_errors += 1;
                     ft.persist_gap = true;
                     stats.storage_errors += 1;
+                    store.trace_instant("storage", "storage_refused", &[("proc", proc.0 as u64)]);
                     ft.discarded_new.entry(*e).or_default().push((evt_time, batch.time));
                 }
             }
@@ -789,6 +791,7 @@ fn checkpoint_proc<V: FtView>(
     if store.stage_put_snapshot(p.0, tag, &snap, &stored.state).is_err() {
         ft.storage_errors += 1;
         stats.storage_errors += 1;
+        store.trace_instant("storage", "storage_refused", &[("proc", p.0 as u64)]);
         return false; // refusal is atomic — nothing staged, nothing pruned
     }
     let rec =
@@ -805,6 +808,7 @@ fn checkpoint_proc<V: FtView>(
             store.stage_delete(Key { proc: p.0, kind: Kind::Snapshot, tag });
             ft.storage_errors += 1;
             stats.storage_errors += 1;
+            store.trace_instant("storage", "storage_refused", &[("proc", p.0 as u64)]);
             return false;
         }
     };
@@ -821,6 +825,11 @@ fn checkpoint_proc<V: FtView>(
         v.retain(|t| !f.contains(t));
     }
     ft.snapshots.insert(tag, snap);
+    store.trace_instant(
+        "ft",
+        "checkpoint",
+        &[("proc", p.0 as u64), ("bytes", stored.state.len() as u64)],
+    );
     ft.chain.push(stored);
     ft.chain_tags.push(TagSeq { tag, seq: meta_seq });
     stats.checkpoints_taken += 1;
@@ -946,6 +955,23 @@ impl FtSystem {
         }
         engine.set_sent_capture(true);
         FtSystem { engine, ft, store, topo, stats: FtStats::default() }
+    }
+
+    /// Attach (or detach) a structured tracer ([`crate::trace`]) to the
+    /// whole stack at once: the engine records delivery/stall/barrier
+    /// events, the store records checkpoint/ack/refusal/WAL events, and
+    /// the recovery path records its detect → solver → rollback → replay
+    /// timeline. `None` (the default) restores the zero-instrumentation
+    /// hot path.
+    pub fn set_tracer(&mut self, tracer: Option<crate::trace::Tracer>) {
+        self.engine.set_tracer(tracer.clone());
+        self.store.set_tracer(tracer);
+    }
+
+    /// The attached tracer, if any (the recovery path records through
+    /// this; shared with the engine by [`FtSystem::set_tracer`]).
+    pub fn tracer(&self) -> Option<&crate::trace::Tracer> {
+        self.engine.tracer()
     }
 
     /// Build a **sharded** system from a [`ShardPlan`]: one wrapped
@@ -1356,6 +1382,7 @@ impl FtSystem {
                 Err(_) => {
                     ft.storage_errors += 1;
                     self.stats.storage_errors += 1;
+                    store.trace_instant("storage", "storage_refused", &[("proc", p.0 as u64)]);
                 }
             }
         }

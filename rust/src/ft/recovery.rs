@@ -87,6 +87,12 @@ impl FtSystem {
     /// [`crate::ft::storage::PersistMode::Sync`] the watermark always
     /// equals the staged sequence and nothing is truncated.
     pub fn inject_failures(&mut self, procs: &[ProcId]) {
+        // The recovery timeline's opening event: failure detection. The
+        // detector model is external (tests/fuzzer inject directly), so
+        // detection time is injection time.
+        if let Some(tr) = self.tracer() {
+            tr.instant(0, "recovery", "detect", &[("procs", procs.len() as u64)]);
+        }
         for &p in procs {
             let w = self.store.discard_unacked(p.0);
             self.engine.fail_proc(p);
@@ -287,11 +293,21 @@ impl FtSystem {
     pub fn recover(&mut self) -> RecoveryReport {
         assert!(self.any_failed(), "recover() without failures");
         self.note_ack_lag();
+        // Recovery timeline: one enclosing "recovery" span wrapping the
+        // "solver" span here and the "rollback"/"replay" spans recorded
+        // by `apply_plan` (complete-event spans close child-first; the
+        // export re-sorts by start time, longest first).
+        let tracer = self.tracer().cloned();
+        let t_recovery = tracer.as_ref().map(|t| t.now_ns());
+        let t_solver = t_recovery;
         let avail = self.availability();
         let plan = {
             let input = RollbackInput { topo: &self.topo, avail: &avail };
             choose_frontiers(&input)
         };
+        if let (Some(tr), Some(t0)) = (&tracer, t_solver) {
+            tr.span(0, "recovery", "solver", t0, &[("procs", plan.f.len() as u64)]);
+        }
         let report = self.apply_plan(&plan);
         for ft in &mut self.ft {
             ft.failed = false;
@@ -301,6 +317,23 @@ impl FtSystem {
         self.stats.procs_rolled_back +=
             (report.restored_from_checkpoint + report.reset_to_empty) as u64;
         self.stats.procs_untouched += report.untouched as u64;
+        if let (Some(tr), Some(t0)) = (&tracer, t_recovery) {
+            tr.span(
+                0,
+                "recovery",
+                "recovery",
+                t0,
+                &[
+                    ("replayed", report.replayed as u64),
+                    ("replayed_total", self.stats.messages_replayed),
+                    (
+                        "procs_rolled_back",
+                        (report.restored_from_checkpoint + report.reset_to_empty) as u64,
+                    ),
+                    ("rolled_back_total", self.stats.procs_rolled_back),
+                ],
+            );
+        }
         report
     }
 
@@ -316,6 +349,9 @@ impl FtSystem {
             untouched: 0,
         };
 
+        let tracer = self.tracer().cloned();
+        let t_rollback = tracer.as_ref().map(|t| t.now_ns());
+
         // Phase 1: restore processor states and collect replay sources.
         // `regen[p]` holds history-regenerated sends for full-history
         // processors (their virtual log).
@@ -326,6 +362,9 @@ impl FtSystem {
             if fp.is_top() {
                 report.untouched += 1;
                 continue;
+            }
+            if let Some(tr) = &tracer {
+                tr.instant(0, "recovery", "rollback_proc", &[("proc", p.0 as u64)]);
             }
             // Cancel all pending notifications; restores re-arm them.
             self.engine.cancel_pending(p, |_| true);
@@ -467,6 +506,11 @@ impl FtSystem {
                             Err(_) => {
                                 ft.storage_errors += 1;
                                 self.stats.storage_errors += 1;
+                                store.trace_instant(
+                                    "storage",
+                                    "storage_refused",
+                                    &[("proc", p.0 as u64)],
+                                );
                                 (store.stage_delete(key), Frontier::Bottom)
                             }
                         }
@@ -546,6 +590,26 @@ impl FtSystem {
             }
         }
 
+        // Rollback = phases 1–2 (state restores + channel reconciliation);
+        // replay = phase 3. The span boundary is the point where undone
+        // work stops and re-execution begins.
+        if let (Some(tr), Some(t0)) = (&tracer, t_rollback) {
+            tr.span(
+                0,
+                "recovery",
+                "rollback",
+                t0,
+                &[
+                    (
+                        "procs",
+                        (report.restored_from_checkpoint + report.reset_to_empty) as u64,
+                    ),
+                    ("dropped", report.dropped as u64),
+                ],
+            );
+        }
+        let t_replay = tracer.as_ref().map(|t| t.now_ns());
+
         // Phase 3: replay Q′(e) = L(p, f(p)) @̸ f(dst(e)).
         for p in self.topo.proc_ids() {
             let fp = plan.f[p.0 as usize].clone();
@@ -575,6 +639,9 @@ impl FtSystem {
                 report.replayed += batch.len();
                 self.engine.replay_batch(e, batch);
             }
+        }
+        if let (Some(tr), Some(t0)) = (&tracer, t_replay) {
+            tr.span(0, "recovery", "replay", t0, &[("records", report.replayed as u64)]);
         }
         report
     }

@@ -75,6 +75,7 @@
 use crate::ft::backend_file::{FileBackend, FileBackendOptions};
 use crate::ft::meta::Snapshot;
 use crate::ft::policy::SnapshotPolicy;
+use crate::trace::Tracer;
 use crate::util::hash::fnv1a;
 use crate::util::ser::{Decode, Encode};
 use std::collections::{BTreeMap, VecDeque};
@@ -398,6 +399,11 @@ pub trait StorageBackend: Send {
     /// Rewrite storage to drop dead records (no-op where meaningless).
     fn compact(&mut self) {}
 
+    /// Attach (or detach) a structured tracer. Backends with interesting
+    /// internal events (WAL segment rotation, compaction) record them
+    /// through it; the default ignores it.
+    fn set_tracer(&mut self, _tracer: Option<Tracer>) {}
+
     /// Testing hook: die as a crash would — the unflushed group-commit
     /// tail is lost and nothing further is written (not even on drop).
     fn simulate_crash(&mut self) {}
@@ -537,6 +543,13 @@ struct Staging {
     /// image lost. Decisions are made at *stage* time, which keeps the
     /// durable image identical across `Sync` and `Async` modes.
     dedup: Mutex<BTreeMap<(u32, u64), u64>>,
+    /// Capture-gated structured tracer (see [`crate::trace`]): the FT
+    /// layer records checkpoint / refused-write / ack-watermark events
+    /// through the store so both the sequential path and per-worker
+    /// observers share one sink. `None` (the default) costs one mutex
+    /// lock per *cold-path* event site and nothing on the staging fast
+    /// path, which never touches it.
+    tracer: Mutex<Option<Tracer>>,
 }
 
 impl Staging {
@@ -641,6 +654,12 @@ fn writer_loop(staging: Arc<Staging>, inner: Weak<Mutex<Inner>>) {
         }
         q.in_flight = 0;
         staging.done.notify_all();
+        drop(q);
+        if let Some(tr) = staging.tracer.lock().unwrap().as_ref() {
+            for qo in &batch {
+                tr.instant(0, "storage", "ack", &[("proc", qo.op.proc() as u64), ("seq", qo.seq)]);
+            }
+        }
     }
 }
 
@@ -741,6 +760,7 @@ impl Store {
             async_active: AtomicBool::new(false),
             value_limit: AtomicU64::new(value_limit),
             dedup: Mutex::new(dedup),
+            tracer: Mutex::new(None),
         });
         let guard = Arc::new(WriterGuard {
             staging: staging.clone(),
@@ -771,6 +791,31 @@ impl Store {
     ) -> std::io::Result<Store> {
         let backend = FileBackend::open_read_only(dir.as_ref(), opts)?;
         Ok(Store::with_backend(Box::new(backend), 0))
+    }
+
+    /// Attach (or detach) a structured tracer: storage-layer events —
+    /// ack-watermark movement from the writer thread, snapshot
+    /// chain walks, plus the FT layer's checkpoint / refused-write
+    /// instants recorded via [`Store::trace_instant`] — flow into it.
+    /// Forwarded to the backend so WAL rotation/compaction trace too.
+    pub fn set_tracer(&self, tracer: Option<Tracer>) {
+        *self.staging.tracer.lock().unwrap() = tracer.clone();
+        self.inner.lock().unwrap().backend.set_tracer(tracer);
+    }
+
+    /// Record one instant event on the attached tracer (no-op when
+    /// tracing is off). The store is the FT layer's shared trace sink:
+    /// per-worker observers and the sequential path both hold a store
+    /// handle, so cold-path events route through here.
+    pub(crate) fn trace_instant(
+        &self,
+        cat: &'static str,
+        name: &'static str,
+        args: &[(&'static str, u64)],
+    ) {
+        if let Some(tr) = self.staging.tracer.lock().unwrap().as_ref() {
+            tr.instant(0, cat, name, args);
+        }
     }
 
     /// The current persistence mode.
@@ -988,6 +1033,7 @@ impl Store {
         let n = chunk_count(state_len);
         let mut hashes: Vec<Option<u64>> = vec![None; n];
         let mut filled = 0usize;
+        let mut depth: u64 = 1;
         let (mut cur, mut cur_tag) = (newest, tag);
         loop {
             for &(pos, h) in &cur.chunks {
@@ -1012,7 +1058,9 @@ impl Store {
             }
             cur = fetch(prior)?;
             cur_tag = prior;
+            depth += 1;
         }
+        self.trace_instant("storage", "chain_walk", &[("proc", proc as u64), ("depth", depth)]);
         let mut out = Vec::with_capacity(state_len);
         for (pos, h) in hashes.iter().enumerate() {
             let Some(h) = *h else { return None };

@@ -298,6 +298,16 @@ struct Driver<'a> {
     next_ep: u64,
     recoveries: u64,
     violations: Vec<String>,
+    /// Every faulted run is traced (oracle invariant 6: the trace and
+    /// the FT counters must reconcile); a fresh tracer per system
+    /// generation — [`Driver::cold_restart`] reconciles and replaces it.
+    tracer: crate::trace::Tracer,
+    /// [`crate::trace::ENV_TRACE_JSON`] target, when set: each
+    /// generation's events are appended there at reconcile points.
+    trace_path: Option<String>,
+    /// Counter snapshot at tracer attach (reopen's internal recovery
+    /// runs before the tracer can attach, so totals are delta-based).
+    base: oracle::CounterBase,
 }
 
 impl<'a> Driver<'a> {
@@ -318,7 +328,12 @@ impl<'a> Driver<'a> {
             .expect("opening WAL store"),
             None => Store::new(knobs.write_cost),
         };
-        let built = gen::build(shape, knobs, store.clone());
+        let mut built = gen::build(shape, knobs, store.clone());
+        let tracer = crate::trace::Tracer::new();
+        built.sys.set_tracer(Some(tracer.clone()));
+        let base = oracle::CounterBase::snapshot(&built.sys);
+        let trace_path =
+            std::env::var(crate::trace::ENV_TRACE_JSON).ok().filter(|p| !p.is_empty());
         let exts = built.sources.iter().map(|_| ExternalInput::new()).collect();
         let mon = knobs.gc.then(|| built.monitor());
         Driver {
@@ -337,6 +352,9 @@ impl<'a> Driver<'a> {
             next_ep: 0,
             recoveries: 0,
             violations: Vec::new(),
+            tracer,
+            trace_path,
+            base,
         }
     }
 
@@ -403,6 +421,14 @@ impl<'a> Driver<'a> {
         for v in oracle::structural_violations(&self.built.sys, self.mon.as_ref()) {
             self.violations.push(format!("final: {v}"));
         }
+        for v in oracle::counter_violations(&self.tracer, &self.built.sys, &self.base) {
+            self.violations.push(format!("final: {v}"));
+        }
+        if let Some(path) = &self.trace_path {
+            if let Err(e) = self.tracer.append_json_lines(path) {
+                eprintln!("fuzz seed {}: cannot append trace to '{path}': {e}", self.seed);
+            }
+        }
     }
 
     /// Drain to quiescence, firing scheduled crashes. Only the
@@ -454,6 +480,7 @@ impl<'a> Driver<'a> {
         self.built.sys.inject_failures(&victims);
         let report = self.built.sys.recover();
         self.recoveries += 1;
+        self.check_recovery_trace(&report);
         self.resupply(&report.plan);
         if let Some(m) = &mut self.mon {
             // Recovery may have truncated chains; the monitor's own
@@ -464,10 +491,21 @@ impl<'a> Driver<'a> {
             self.built.sys.inject_failures(&[v]);
             let report = self.built.sys.recover();
             self.recoveries += 1;
+            self.check_recovery_trace(&report);
             self.resupply(&report.plan);
             if let Some(m) = &mut self.mon {
                 *m = self.built.monitor();
             }
+        }
+    }
+
+    /// Oracle invariant 6a: the recovery that just completed must have
+    /// left a `"recovery"` span whose counts match its report and the
+    /// live counters.
+    fn check_recovery_trace(&mut self, report: &crate::ft::recovery::RecoveryReport) {
+        let n = self.recoveries;
+        for v in oracle::recovery_span_violations(&self.tracer, report, &self.built.sys) {
+            self.violations.push(format!("recovery {n}: {v}"));
         }
     }
 
@@ -495,6 +533,17 @@ impl<'a> Driver<'a> {
     /// past the recovered frontiers.
     fn cold_restart(&mut self, torn_bytes: u64, ep: u64) {
         let dir = self.dir.as_ref().expect("restart requires a durable store");
+        // The dying generation's trace must already reconcile with its
+        // counters (oracle invariant 6b) — settle the account before
+        // the system and its stats go away.
+        for v in oracle::counter_violations(&self.tracer, &self.built.sys, &self.base) {
+            self.violations.push(format!("pre-restart epoch {ep}: {v}"));
+        }
+        if let Some(path) = &self.trace_path {
+            if let Err(e) = self.tracer.append_json_lines(path) {
+                eprintln!("fuzz seed {}: cannot append trace to '{path}': {e}", self.seed);
+            }
+        }
         // Replace the live system with a throwaway before dropping it.
         let dead = std::mem::replace(
             &mut self.built,
@@ -517,6 +566,12 @@ impl<'a> Driver<'a> {
         let (built, report) = gen::reopen(self.shape, self.knobs, store.clone());
         self.built = built;
         self.store = store;
+        // A fresh process gets a fresh tracer; the reopen's internal
+        // recovery ran before it could attach, so the counter base is
+        // re-snapshotted rather than zeroed.
+        self.tracer = crate::trace::Tracer::new();
+        self.built.sys.set_tracer(Some(self.tracer.clone()));
+        self.base = oracle::CounterBase::snapshot(&self.built.sys);
         // A fresh process means a fresh §4.2 monitor: the old one's
         // availability is append-only and tracks chains the reopen just
         // rebuilt (and possibly conservatively truncated).

@@ -24,14 +24,27 @@
 //! 5. **Resident accounting** — the store's O(1) `resident_bytes`
 //!    counter agrees with a fresh scan of every processor's entries.
 //!
+//! 6. **Trace/counter consistency** — every faulted run carries a
+//!    [`Tracer`]; after each recovery the newest `"recovery"` span must
+//!    agree with the [`RecoveryReport`] it described and the cumulative
+//!    [`FtSystem`] counters at its close
+//!    ([`recovery_span_violations`]), and at end of run the trace's
+//!    totals (replayed messages, rolled-back processors, refused
+//!    writes, checkpoints) must reconcile with the `FtStats` deltas
+//!    since the tracer attached ([`counter_violations`]) — the
+//!    observability layer and the counters are two recordings of one
+//!    execution and must never disagree.
+//!
 //! Violations come back as strings (one per finding) rather than
 //! panics, so the campaign driver can attribute them to a seed and keep
 //! going.
 
 use crate::ft::harness::acked_prefix;
 use crate::ft::monitor::Monitor;
+use crate::ft::recovery::RecoveryReport;
 use crate::ft::{Available, FtSystem};
 use crate::frontier::Frontier;
+use crate::trace::Tracer;
 
 /// Run every single-system structural invariant. `mon` is the campaign's
 /// GC monitor when the run drives one (invariant 4 needs it).
@@ -144,6 +157,115 @@ pub fn structural_violations(sys: &FtSystem, mon: Option<&Monitor>) -> Vec<Strin
     v
 }
 
+/// Snapshot of the reconcilable [`crate::ft::FtStats`] counters at the
+/// moment a tracer attaches to a system; [`counter_violations`] holds
+/// the trace to the *deltas* from here (a cold restart rebuilds the
+/// system and attaches a fresh tracer after its reopen-recovery already
+/// ran, so absolute totals would not line up).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct CounterBase {
+    pub messages_replayed: u64,
+    pub procs_rolled_back: u64,
+    pub storage_errors: u64,
+    pub checkpoints_taken: u64,
+}
+
+impl CounterBase {
+    pub fn snapshot(sys: &FtSystem) -> CounterBase {
+        CounterBase {
+            messages_replayed: sys.stats.messages_replayed,
+            procs_rolled_back: sys.stats.procs_rolled_back,
+            storage_errors: sys.stats.storage_errors,
+            checkpoints_taken: sys.stats.checkpoints_taken,
+        }
+    }
+}
+
+/// Invariant 6a, checked immediately after each in-process recovery:
+/// the newest traced `"recovery"` span carries the same counts as the
+/// [`RecoveryReport`] the recovery returned, and its running totals
+/// match the live [`FtSystem`] counters at span close.
+pub fn recovery_span_violations(
+    tracer: &Tracer,
+    report: &RecoveryReport,
+    sys: &FtSystem,
+) -> Vec<String> {
+    let mut v = Vec::new();
+    let evs = tracer.events();
+    let Some(span) = evs
+        .iter()
+        .filter(|e| e.cat == "recovery" && e.name == "recovery" && e.dur_ns > 0)
+        .max_by_key(|e| e.ts_ns)
+    else {
+        v.push("completed recovery left no recovery span in the trace".to_string());
+        return v;
+    };
+    let rolled = (report.restored_from_checkpoint + report.reset_to_empty) as u64;
+    for (key, want) in [
+        ("replayed", report.replayed as u64),
+        ("procs_rolled_back", rolled),
+        ("replayed_total", sys.stats.messages_replayed),
+        ("rolled_back_total", sys.stats.procs_rolled_back),
+    ] {
+        match span.arg(key) {
+            Some(got) if got == want => {}
+            got => v.push(format!(
+                "recovery span arg '{key}' is {got:?}, counters say {want}"
+            )),
+        }
+    }
+    v
+}
+
+/// Invariant 6b, checked at end of run: trace-derived totals reconcile
+/// with the [`crate::ft::FtStats`] deltas since `base` — each replayed
+/// message and rolled-back processor is claimed by exactly one traced
+/// recovery span, and each refused write / taken checkpoint left
+/// exactly one instant event.
+pub fn counter_violations(tracer: &Tracer, sys: &FtSystem, base: &CounterBase) -> Vec<String> {
+    let mut v = Vec::new();
+    let evs = tracer.events();
+    let spans: Vec<_> = evs
+        .iter()
+        .filter(|e| e.cat == "recovery" && e.name == "recovery" && e.dur_ns > 0)
+        .collect();
+    let span_sum =
+        |key: &str| spans.iter().map(|e| e.arg(key).unwrap_or(0)).sum::<u64>();
+    let instants = |cat: &str, name: &str| {
+        evs.iter().filter(|e| e.cat == cat && e.name == name).count() as u64
+    };
+    let checks = [
+        (
+            "replayed messages (recovery spans)",
+            span_sum("replayed"),
+            sys.stats.messages_replayed - base.messages_replayed,
+        ),
+        (
+            "rolled-back processors (recovery spans)",
+            span_sum("procs_rolled_back"),
+            sys.stats.procs_rolled_back - base.procs_rolled_back,
+        ),
+        (
+            "refused writes (storage_refused instants)",
+            instants("storage", "storage_refused"),
+            sys.stats.storage_errors - base.storage_errors,
+        ),
+        (
+            "checkpoints (checkpoint instants)",
+            instants("ft", "checkpoint"),
+            sys.stats.checkpoints_taken - base.checkpoints_taken,
+        ),
+    ];
+    for (what, traced, counted) in checks {
+        if traced != counted {
+            v.push(format!(
+                "trace/counter mismatch: {what} traced {traced}, counters say {counted}"
+            ));
+        }
+    }
+    v
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -192,5 +314,33 @@ mod tests {
         let viol = structural_violations(&p.sys, None);
         assert!(viol.is_empty(), "post-recovery: {viol:?}");
         assert!(!canonical_output(&p.sys, p.collect_proc()).is_empty());
+    }
+
+    /// Trace/counter consistency on a healthy traced run: the recovery
+    /// span agrees with its own report, and the end-of-run trace totals
+    /// reconcile with the `FtStats` deltas.
+    #[test]
+    fn traced_run_reconciles_counters() {
+        let mut p = pipeline(&cfg());
+        let tracer = crate::trace::Tracer::new();
+        p.sys.set_tracer(Some(tracer.clone()));
+        let base = CounterBase::snapshot(&p.sys);
+        let src = p.src_proc();
+        for ep in 0..3u64 {
+            p.sys.advance_input(src, Time::epoch(ep));
+            for r in epoch_records(5, ep, 16, 4) {
+                p.sys.push_input(src, Time::epoch(ep), r);
+            }
+            p.sys.advance_input(src, Time::epoch(ep + 1));
+            p.run(5_000_000);
+        }
+        let victim = p.plan.proc(p.count, 0);
+        p.sys.inject_failures(&[victim]);
+        let report = p.sys.recover();
+        let viol = recovery_span_violations(&tracer, &report, &p.sys);
+        assert!(viol.is_empty(), "per-recovery: {viol:?}");
+        p.run(5_000_000);
+        let viol = counter_violations(&tracer, &p.sys, &base);
+        assert!(viol.is_empty(), "totals: {viol:?}");
     }
 }

@@ -68,7 +68,17 @@
 //!   failing seeds land in `rust/tests/corpus/` as regression tests;
 //! - an XLA/PJRT runtime that loads AOT-compiled JAX+Pallas analytics
 //!   kernels from `artifacts/*.hlo.txt` and runs them on the hot path of
-//!   stateful vertices ([`runtime`], [`operators::tensor`]).
+//!   stateful vertices ([`runtime`], [`operators::tensor`]);
+//! - a capture-gated **observability layer** ([`trace`], [`metrics`]):
+//!   an `Arc`-shared structured tracer recording epoch/delivery/barrier
+//!   events and a nested **recovery timeline** (detect → solver →
+//!   rollback → replay) as `falkirk-trace/1` JSON-lines
+//!   (`FALKIRK_TRACE_JSON=file`, convertible to chrome://tracing via
+//!   `falkirk trace convert`), per-worker lock-free event buffers merged
+//!   at barriers, and a `--metrics-json` end-of-run summary
+//!   (`falkirk-metrics/1`) with log2-histogram latency percentiles
+//!   ([`util::stats::LogHistogram`]). Tracing off = one `Option` branch
+//!   per site, same discipline the zero-copy audit enforces.
 //!
 //! Python (`python/compile/`) is build-time only: it lowers the L2 JAX
 //! model (which calls the L1 Pallas kernels) to HLO text once; the Rust
@@ -91,6 +101,7 @@ pub mod fuzz;
 pub mod runtime;
 pub mod coordinator;
 pub mod metrics;
+pub mod trace;
 pub mod bench_support;
 
 pub use crate::frontier::Frontier;

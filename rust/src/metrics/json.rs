@@ -1,0 +1,194 @@
+//! Hand-rolled JSON emission (the offline registry has no serde).
+//!
+//! One escaping routine and two tiny builders shared by every
+//! machine-readable writer in the crate: the `falkirk-bench/1` emitter
+//! ([`crate::bench_support`]), the `falkirk-trace/1` event writer
+//! ([`crate::trace`]), the `falkirk-metrics/1` end-of-run summaries
+//! (`--metrics-json` on the CLI) and `falkirk store inspect --json`.
+//! Before this module each of those carried its own `json_escape` —
+//! the duplication is exactly what a missed control-character case
+//! would have hidden.
+//!
+//! The builders emit *objects* and *arrays* only — values are written
+//! through typed methods (`str_field`, `u64_field`, `f64_field`) or as
+//! pre-rendered raw JSON (`raw_field`, for nesting one builder's
+//! output inside another). Non-finite floats serialize as `null`,
+//! which keeps every emitted document parseable by a strict reader.
+
+/// Escape a string for inclusion in a JSON string literal.
+pub fn escape(s: &str) -> String {
+    let mut out = String::with_capacity(s.len() + 2);
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\r' => out.push_str("\\r"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out
+}
+
+/// Render an f64 as a JSON value: non-finite becomes `null`.
+pub fn f64_value(v: f64) -> String {
+    if v.is_finite() {
+        format!("{v}")
+    } else {
+        "null".to_string()
+    }
+}
+
+/// Incremental JSON object builder (insertion order preserved).
+#[derive(Debug)]
+pub struct JsonObj {
+    buf: String,
+    any: bool,
+}
+
+impl Default for JsonObj {
+    fn default() -> Self {
+        JsonObj::new()
+    }
+}
+
+impl JsonObj {
+    pub fn new() -> JsonObj {
+        JsonObj { buf: String::from("{"), any: false }
+    }
+
+    fn key(&mut self, k: &str) {
+        if self.any {
+            self.buf.push(',');
+        }
+        self.any = true;
+        self.buf.push('"');
+        self.buf.push_str(&escape(k));
+        self.buf.push_str("\":");
+    }
+
+    pub fn str_field(&mut self, k: &str, v: &str) -> &mut Self {
+        self.key(k);
+        self.buf.push('"');
+        self.buf.push_str(&escape(v));
+        self.buf.push('"');
+        self
+    }
+
+    pub fn u64_field(&mut self, k: &str, v: u64) -> &mut Self {
+        self.key(k);
+        self.buf.push_str(&v.to_string());
+        self
+    }
+
+    pub fn f64_field(&mut self, k: &str, v: f64) -> &mut Self {
+        self.key(k);
+        self.buf.push_str(&f64_value(v));
+        self
+    }
+
+    pub fn bool_field(&mut self, k: &str, v: bool) -> &mut Self {
+        self.key(k);
+        self.buf.push_str(if v { "true" } else { "false" });
+        self
+    }
+
+    /// Splice pre-rendered JSON (a nested object/array from another
+    /// builder) as the value.
+    pub fn raw_field(&mut self, k: &str, raw: &str) -> &mut Self {
+        self.key(k);
+        self.buf.push_str(raw);
+        self
+    }
+
+    pub fn finish(mut self) -> String {
+        self.buf.push('}');
+        self.buf
+    }
+}
+
+/// Incremental JSON array builder.
+#[derive(Debug)]
+pub struct JsonArr {
+    buf: String,
+    any: bool,
+}
+
+impl Default for JsonArr {
+    fn default() -> Self {
+        JsonArr::new()
+    }
+}
+
+impl JsonArr {
+    pub fn new() -> JsonArr {
+        JsonArr { buf: String::from("["), any: false }
+    }
+
+    fn sep(&mut self) {
+        if self.any {
+            self.buf.push(',');
+        }
+        self.any = true;
+    }
+
+    pub fn push_str(&mut self, v: &str) -> &mut Self {
+        self.sep();
+        self.buf.push('"');
+        self.buf.push_str(&escape(v));
+        self.buf.push('"');
+        self
+    }
+
+    pub fn push_raw(&mut self, raw: &str) -> &mut Self {
+        self.sep();
+        self.buf.push_str(raw);
+        self
+    }
+
+    pub fn finish(mut self) -> String {
+        self.buf.push(']');
+        self.buf
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn escape_covers_control_and_quote_cases() {
+        assert_eq!(escape("plain"), "plain");
+        assert_eq!(escape("a\"b\\c"), "a\\\"b\\\\c");
+        assert_eq!(escape("x\n\r\ty"), "x\\n\\r\\ty");
+        assert_eq!(escape("\u{1}"), "\\u0001");
+    }
+
+    #[test]
+    fn object_builder_orders_and_types_fields() {
+        let mut o = JsonObj::new();
+        o.str_field("name", "a\"b").u64_field("n", 7).f64_field("x", 1.5);
+        o.bool_field("ok", true).f64_field("bad", f64::NAN);
+        assert_eq!(
+            o.finish(),
+            "{\"name\":\"a\\\"b\",\"n\":7,\"x\":1.5,\"ok\":true,\"bad\":null}"
+        );
+    }
+
+    #[test]
+    fn arrays_and_nesting() {
+        let mut a = JsonArr::new();
+        a.push_str("x").push_raw("{\"k\":1}");
+        let mut o = JsonObj::new();
+        o.raw_field("items", &a.finish());
+        assert_eq!(o.finish(), "{\"items\":[\"x\",{\"k\":1}]}");
+    }
+
+    #[test]
+    fn empty_builders_are_valid_json() {
+        assert_eq!(JsonObj::new().finish(), "{}");
+        assert_eq!(JsonArr::new().finish(), "[]");
+    }
+}

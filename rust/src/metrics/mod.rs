@@ -1,15 +1,23 @@
 //! Lightweight metrics: named counters and timers for the coordinator,
-//! examples and benches.
+//! examples and benches, plus the crate-wide JSON emission helper
+//! ([`json`]) that the `falkirk-bench/1`, `falkirk-trace/1` and
+//! `falkirk-metrics/1` writers share.
+
+pub mod json;
 
 use crate::util::stats::Summary;
 use std::collections::BTreeMap;
 use std::time::Instant;
 
-/// A registry of counters and latency summaries.
+/// A registry of counters and latency summaries. Keys are
+/// `&'static str` — metric names are compiled-in identifiers, so
+/// recording on a hot path allocates nothing for the key (the map
+/// entry itself is created once per distinct name); `BTreeMap` keeps
+/// the report deterministically ordered.
 #[derive(Default)]
 pub struct Metrics {
-    counters: BTreeMap<String, u64>,
-    timers: BTreeMap<String, Summary>,
+    counters: BTreeMap<&'static str, u64>,
+    timers: BTreeMap<&'static str, Summary>,
 }
 
 impl Metrics {
@@ -17,8 +25,8 @@ impl Metrics {
         Metrics::default()
     }
 
-    pub fn inc(&mut self, name: &str, by: u64) {
-        *self.counters.entry(name.to_string()).or_insert(0) += by;
+    pub fn inc(&mut self, name: &'static str, by: u64) {
+        *self.counters.entry(name).or_insert(0) += by;
     }
 
     pub fn counter(&self, name: &str) -> u64 {
@@ -26,12 +34,12 @@ impl Metrics {
     }
 
     /// Record a duration sample (nanoseconds).
-    pub fn record_ns(&mut self, name: &str, ns: f64) {
-        self.timers.entry(name.to_string()).or_default().add(ns);
+    pub fn record_ns(&mut self, name: &'static str, ns: f64) {
+        self.timers.entry(name).or_default().add(ns);
     }
 
     /// Time a closure into the named summary.
-    pub fn time<T>(&mut self, name: &str, f: impl FnOnce() -> T) -> T {
+    pub fn time<T>(&mut self, name: &'static str, f: impl FnOnce() -> T) -> T {
         let t0 = Instant::now();
         let out = f();
         self.record_ns(name, t0.elapsed().as_nanos() as f64);

@@ -1,0 +1,324 @@
+//! `falkirk trace convert` — re-emit a `falkirk-trace/1` JSON-lines
+//! file in Chrome `trace_event` format (the JSON Array Format), so a
+//! captured run opens directly in chrome://tracing / Perfetto as a
+//! flamegraph: spans become `"ph":"X"` complete events, instants
+//! become `"ph":"i"` thread-scoped marks, timestamps land in
+//! microseconds as the format requires.
+//!
+//! The input parser is deliberately minimal: it accepts exactly the
+//! shape [`crate::trace::Tracer::json_lines`] emits (flat objects with
+//! string and unsigned-integer fields plus one flat `args` object) —
+//! hand-rolled because the offline registry has no serde, and shared
+//! with the Python schema checker's expectations
+//! (`python/tests/test_trace_schema.py`).
+
+use crate::metrics::json::{JsonArr, JsonObj};
+use crate::trace::SCHEMA;
+
+/// One parsed `falkirk-trace/1` line.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Line {
+    /// The file header: `{"schema":"falkirk-trace/1",...}`.
+    Header { schema: String },
+    /// An event line.
+    Event(LineEvent),
+}
+
+/// An event as read back from a trace file (owned strings — the
+/// `&'static str` identities of [`crate::trace::TraceEvent`] exist
+/// only in the emitting process).
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct LineEvent {
+    pub ts_ns: u64,
+    pub dur_ns: u64,
+    pub tid: u64,
+    pub cat: String,
+    pub name: String,
+    pub args: Vec<(String, u64)>,
+}
+
+/// Cursor over one line's bytes.
+struct P<'a> {
+    s: &'a [u8],
+    i: usize,
+}
+
+impl<'a> P<'a> {
+    fn new(s: &'a str) -> P<'a> {
+        P { s: s.as_bytes(), i: 0 }
+    }
+
+    fn ws(&mut self) {
+        while self.i < self.s.len() && (self.s[self.i] as char).is_ascii_whitespace() {
+            self.i += 1;
+        }
+    }
+
+    fn peek(&mut self) -> Option<u8> {
+        self.ws();
+        self.s.get(self.i).copied()
+    }
+
+    fn expect(&mut self, c: u8) -> Result<(), String> {
+        self.ws();
+        if self.s.get(self.i) == Some(&c) {
+            self.i += 1;
+            Ok(())
+        } else {
+            Err(format!("expected '{}' at byte {}", c as char, self.i))
+        }
+    }
+
+    fn string(&mut self) -> Result<String, String> {
+        self.expect(b'"')?;
+        let mut out = String::new();
+        loop {
+            let Some(&b) = self.s.get(self.i) else {
+                return Err("unterminated string".to_string());
+            };
+            self.i += 1;
+            match b {
+                b'"' => return Ok(out),
+                b'\\' => {
+                    let Some(&e) = self.s.get(self.i) else {
+                        return Err("dangling escape".to_string());
+                    };
+                    self.i += 1;
+                    match e {
+                        b'"' => out.push('"'),
+                        b'\\' => out.push('\\'),
+                        b'n' => out.push('\n'),
+                        b'r' => out.push('\r'),
+                        b't' => out.push('\t'),
+                        b'u' => {
+                            let hex = self
+                                .s
+                                .get(self.i..self.i + 4)
+                                .ok_or("truncated \\u escape")?;
+                            self.i += 4;
+                            let code = u32::from_str_radix(
+                                std::str::from_utf8(hex).map_err(|_| "bad \\u escape")?,
+                                16,
+                            )
+                            .map_err(|_| "bad \\u escape")?;
+                            out.push(char::from_u32(code).unwrap_or('\u{fffd}'));
+                        }
+                        other => return Err(format!("unknown escape '\\{}'", other as char)),
+                    }
+                }
+                b => out.push(b as char),
+            }
+        }
+    }
+
+    fn number(&mut self) -> Result<u64, String> {
+        self.ws();
+        let start = self.i;
+        while self.i < self.s.len() && self.s[self.i].is_ascii_digit() {
+            self.i += 1;
+        }
+        if self.i == start {
+            return Err(format!("expected a number at byte {start}"));
+        }
+        std::str::from_utf8(&self.s[start..self.i])
+            .ok()
+            .and_then(|t| t.parse().ok())
+            .ok_or_else(|| "number out of range".to_string())
+    }
+
+    /// A flat `{"key":u64,...}` object (the `args` value).
+    fn flat_obj(&mut self) -> Result<Vec<(String, u64)>, String> {
+        self.expect(b'{')?;
+        let mut out = Vec::new();
+        if self.peek() == Some(b'}') {
+            self.i += 1;
+            return Ok(out);
+        }
+        loop {
+            let k = self.string()?;
+            self.expect(b':')?;
+            out.push((k, self.number()?));
+            match self.peek() {
+                Some(b',') => self.i += 1,
+                Some(b'}') => {
+                    self.i += 1;
+                    return Ok(out);
+                }
+                _ => return Err("malformed args object".to_string()),
+            }
+        }
+    }
+}
+
+/// Parse one `falkirk-trace/1` line (header or event).
+pub fn parse_line(line: &str) -> Result<Line, String> {
+    let mut p = P::new(line);
+    p.expect(b'{')?;
+    let mut schema = None;
+    let mut ev = LineEvent::default();
+    let mut is_event = false;
+    if p.peek() == Some(b'}') {
+        return Err("empty object".to_string());
+    }
+    loop {
+        let key = p.string()?;
+        p.expect(b':')?;
+        match key.as_str() {
+            "schema" => schema = Some(p.string()?),
+            "clock" => {
+                p.string()?;
+            }
+            "ts_ns" => {
+                ev.ts_ns = p.number()?;
+                is_event = true;
+            }
+            "dur_ns" => ev.dur_ns = p.number()?,
+            "tid" => ev.tid = p.number()?,
+            "cat" => ev.cat = p.string()?,
+            "name" => ev.name = p.string()?,
+            "args" => ev.args = p.flat_obj()?,
+            other => return Err(format!("unknown field '{other}'")),
+        }
+        match p.peek() {
+            Some(b',') => p.i += 1,
+            Some(b'}') => break,
+            _ => return Err("malformed object".to_string()),
+        }
+    }
+    match schema {
+        Some(s) => Ok(Line::Header { schema: s }),
+        None if is_event => Ok(Line::Event(ev)),
+        None => Err("line is neither a header nor an event".to_string()),
+    }
+}
+
+/// Conversion outcome (reported by the CLI).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct ConvertStats {
+    pub events: usize,
+    pub spans: usize,
+    pub instants: usize,
+}
+
+/// Convert `falkirk-trace/1` text to a Chrome `trace_event` JSON
+/// document. The first line must be the schema header.
+pub fn to_chrome(input: &str) -> Result<(String, ConvertStats), String> {
+    let mut lines = input.lines().filter(|l| !l.trim().is_empty());
+    match lines.next().map(parse_line) {
+        Some(Ok(Line::Header { schema })) if schema == SCHEMA => {}
+        Some(Ok(Line::Header { schema })) => {
+            return Err(format!("unsupported schema '{schema}' (want '{SCHEMA}')"));
+        }
+        Some(Ok(Line::Event(_))) | None => {
+            return Err(format!("missing '{SCHEMA}' header line"));
+        }
+        Some(Err(e)) => return Err(format!("line 1: {e}")),
+    }
+    let mut stats = ConvertStats::default();
+    let mut arr = JsonArr::new();
+    for (n, line) in lines.enumerate() {
+        let ev = match parse_line(line).map_err(|e| format!("line {}: {e}", n + 2))? {
+            Line::Header { .. } => continue, // concatenated runs: tolerate repeats
+            Line::Event(ev) => ev,
+        };
+        stats.events += 1;
+        let mut args = JsonObj::new();
+        for (k, v) in &ev.args {
+            args.u64_field(k, *v);
+        }
+        let mut o = JsonObj::new();
+        o.str_field("name", &ev.name)
+            .str_field("cat", &ev.cat)
+            .u64_field("pid", 1)
+            .u64_field("tid", ev.tid)
+            .f64_field("ts", ev.ts_ns as f64 / 1e3);
+        if ev.dur_ns > 0 {
+            stats.spans += 1;
+            o.str_field("ph", "X").f64_field("dur", ev.dur_ns as f64 / 1e3);
+        } else {
+            stats.instants += 1;
+            o.str_field("ph", "i").str_field("s", "t");
+        }
+        o.raw_field("args", &args.finish());
+        arr.push_raw(&o.finish());
+    }
+    let mut doc = JsonObj::new();
+    doc.raw_field("traceEvents", &arr.finish()).str_field("displayTimeUnit", "ns");
+    Ok((doc.finish(), stats))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::trace::Tracer;
+
+    #[test]
+    fn parses_what_the_tracer_emits() {
+        let t = Tracer::new();
+        t.instant(2, "engine", "deliver", &[("edge", 3), ("records", 8)]);
+        let t0 = t.begin();
+        t.span(0, "recovery", "recovery", t0, &[("replayed", 5)]);
+        let text = t.json_lines();
+        let mut lines = text.lines();
+        assert_eq!(
+            parse_line(lines.next().unwrap()).unwrap(),
+            Line::Header { schema: SCHEMA.to_string() }
+        );
+        let mut names = Vec::new();
+        for l in lines {
+            match parse_line(l).unwrap() {
+                Line::Event(ev) => names.push(ev.name),
+                Line::Header { .. } => panic!("unexpected second header"),
+            }
+        }
+        names.sort();
+        assert_eq!(names, vec!["deliver", "recovery"]);
+    }
+
+    #[test]
+    fn string_unescaping_round_trips() {
+        match parse_line("{\"schema\":\"a\\\"b\\\\c\\n\\u0041\"}").unwrap() {
+            Line::Header { schema } => assert_eq!(schema, "a\"b\\c\nA"),
+            other => panic!("parsed {other:?}"),
+        }
+    }
+
+    #[test]
+    fn chrome_output_has_complete_and_instant_phases() {
+        let t = Tracer::new();
+        let t0 = t.begin();
+        t.instant(1, "ft", "checkpoint", &[("proc", 2)]);
+        t.span(0, "run", "epoch", t0, &[("ep", 0)]);
+        let (doc, stats) = to_chrome(&t.json_lines()).unwrap();
+        assert_eq!(stats.events, 2);
+        assert_eq!(stats.spans, 1);
+        assert_eq!(stats.instants, 1);
+        assert!(doc.starts_with("{\"traceEvents\":["));
+        assert!(doc.contains("\"ph\":\"X\""));
+        assert!(doc.contains("\"ph\":\"i\""));
+        assert!(doc.contains("\"name\":\"checkpoint\""));
+    }
+
+    #[test]
+    fn rejects_missing_or_foreign_headers() {
+        assert!(to_chrome("").is_err());
+        assert!(to_chrome("{\"schema\":\"other/9\"}\n").is_err());
+        let t = Tracer::new();
+        t.instant(0, "run", "epoch", &[]);
+        let headerless: String =
+            t.json_lines().lines().skip(1).map(|l| format!("{l}\n")).collect();
+        assert!(to_chrome(&headerless).is_err());
+    }
+
+    #[test]
+    fn concatenated_runs_convert_as_one_stream() {
+        let t1 = Tracer::new();
+        t1.instant(0, "run", "epoch", &[("ep", 0)]);
+        let t2 = Tracer::new();
+        t2.instant(0, "run", "epoch", &[("ep", 1)]);
+        let mut text = t1.json_lines();
+        text.push_str(&t2.json_lines()); // repeated header mid-file
+        let (_, stats) = to_chrome(&text).unwrap();
+        assert_eq!(stats.events, 2);
+    }
+}

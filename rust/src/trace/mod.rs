@@ -1,0 +1,381 @@
+//! Capture-gated structured tracing (`falkirk-trace/1`).
+//!
+//! A [`Tracer`] is a cloneable handle on one shared event sink plus a
+//! monotonic clock origin. Every instrumented layer — the engines, the
+//! FT harness, the staging pipeline, the WAL backend, recovery — holds
+//! an `Option<Tracer>` that is `None` by default, so the hot path pays
+//! exactly one branch when tracing is off (the same gating discipline
+//! as the engine's `capture_data` / `capture_sent` flags, audited by
+//! `rust/tests/test_zero_copy.rs`).
+//!
+//! Two recording paths:
+//!
+//! - **cold paths** (recovery phases, checkpoints, WAL rotation and
+//!   compaction, ack-watermark publication) push events straight into
+//!   the shared sink — one short mutex hold per event;
+//! - **hot paths** (the parallel workers' delivery loops) record into a
+//!   per-worker [`TraceBuf`] — a plain `Vec` push, no shared state —
+//!   and merge it into the sink at the barrier rounds where the worker
+//!   already synchronizes (`engine/parallel.rs`).
+//!
+//! Events are *complete* records: an instant has `dur_ns = 0`, a span
+//! carries its duration and is pushed when it closes. Nested spans
+//! (e.g. the recovery timeline's solver/rollback/replay inside the
+//! enclosing recovery span) are therefore pushed child-first;
+//! [`Tracer::events`] and the JSON-lines writer re-sort by start time
+//! (ties broken longest-first) so exported order is monotone and an
+//! enclosing span precedes its children.
+//!
+//! # Export
+//!
+//! - `FALKIRK_TRACE_JSON=file` — the CLI commands attach a tracer and
+//!   append the run's events to `file` as JSON lines (schema
+//!   `falkirk-trace/1`: one header object, then one event object per
+//!   line). See [`Tracer::append_json_lines`].
+//! - `falkirk trace convert <file>` — re-emit a `falkirk-trace/1` file
+//!   in Chrome `trace_event` format for chrome://tracing ([`convert`]).
+//! - `--metrics-json` on `falkirk fig1` / `shard` / `fuzz` — an
+//!   end-of-run `falkirk-metrics/1` summary (assembled by the CLI from
+//!   [`crate::util::stats::LogHistogram`] and the FT counters).
+//!
+//! The recovery timeline (detection → solver → rollback → replay, with
+//! per-processor undone/replayed counts) is documented in
+//! `ft/README.md` § Observability; its schema invariants are validated
+//! by `python/tests/test_trace_schema.py`.
+
+pub mod convert;
+
+use crate::metrics::json::JsonObj;
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
+
+/// Schema tag of the JSON-lines trace format.
+pub const SCHEMA: &str = "falkirk-trace/1";
+
+/// Environment variable naming the JSON-lines trace output file.
+pub const ENV_TRACE_JSON: &str = "FALKIRK_TRACE_JSON";
+
+/// One trace event: an instant (`dur_ns == 0`) or a completed span.
+/// Names and categories are `&'static str` — instrumentation sites are
+/// compiled in, so recording never allocates for identity, only for
+/// the (small, bounded) argument vector.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct TraceEvent {
+    /// Start, in nanoseconds since the tracer was created (monotonic).
+    pub ts_ns: u64,
+    /// Duration; 0 for instant events.
+    pub dur_ns: u64,
+    /// Logical thread: 0 = the driving thread, `g + 1` = parallel
+    /// worker group `g`.
+    pub tid: u32,
+    /// Category (one per instrumented layer: `engine`, `parallel`,
+    /// `ft`, `storage`, `wal`, `recovery`, `driver`).
+    pub cat: &'static str,
+    pub name: &'static str,
+    /// Counted measurements attached to the event.
+    pub args: Vec<(&'static str, u64)>,
+}
+
+impl TraceEvent {
+    /// End timestamp (`ts_ns + dur_ns`, saturating).
+    pub fn end_ns(&self) -> u64 {
+        self.ts_ns.saturating_add(self.dur_ns)
+    }
+
+    /// Look up an argument by key.
+    pub fn arg(&self, key: &str) -> Option<u64> {
+        self.args.iter().find(|(k, _)| *k == key).map(|&(_, v)| v)
+    }
+
+    /// Interval containment: does this span cover `other` entirely?
+    pub fn contains(&self, other: &TraceEvent) -> bool {
+        self.ts_ns <= other.ts_ns && other.end_ns() <= self.end_ns()
+    }
+
+    /// The event as one `falkirk-trace/1` JSON object (one line).
+    pub fn json(&self) -> String {
+        let mut args = JsonObj::new();
+        for (k, v) in &self.args {
+            args.u64_field(k, *v);
+        }
+        let mut o = JsonObj::new();
+        o.u64_field("ts_ns", self.ts_ns)
+            .u64_field("dur_ns", self.dur_ns)
+            .u64_field("tid", self.tid as u64)
+            .str_field("cat", self.cat)
+            .str_field("name", self.name)
+            .raw_field("args", &args.finish());
+        o.finish()
+    }
+}
+
+struct TracerInner {
+    start: Instant,
+    events: Mutex<Vec<TraceEvent>>,
+}
+
+/// Cloneable handle on one trace sink (see the module docs).
+#[derive(Clone)]
+pub struct Tracer {
+    inner: Arc<TracerInner>,
+}
+
+impl Default for Tracer {
+    fn default() -> Self {
+        Tracer::new()
+    }
+}
+
+impl Tracer {
+    pub fn new() -> Tracer {
+        Tracer {
+            inner: Arc::new(TracerInner {
+                start: Instant::now(),
+                events: Mutex::new(Vec::new()),
+            }),
+        }
+    }
+
+    /// A tracer plus the output path when [`ENV_TRACE_JSON`] names a
+    /// file, `None` otherwise — the CLI's one-line opt-in.
+    pub fn from_env() -> Option<(Tracer, String)> {
+        match std::env::var(ENV_TRACE_JSON) {
+            Ok(path) if !path.is_empty() => Some((Tracer::new(), path)),
+            _ => None,
+        }
+    }
+
+    /// Nanoseconds since this tracer was created (monotonic).
+    pub fn now_ns(&self) -> u64 {
+        self.inner.start.elapsed().as_nanos() as u64
+    }
+
+    /// Open a span: record the start timestamp, pass it back to
+    /// [`Tracer::span`] at close.
+    pub fn begin(&self) -> u64 {
+        self.now_ns()
+    }
+
+    pub fn push(&self, ev: TraceEvent) {
+        self.inner.events.lock().unwrap().push(ev);
+    }
+
+    /// Record an instant event on logical thread `tid`.
+    pub fn instant(&self, tid: u32, cat: &'static str, name: &'static str, args: &[(&'static str, u64)]) {
+        self.push(TraceEvent {
+            ts_ns: self.now_ns(),
+            dur_ns: 0,
+            tid,
+            cat,
+            name,
+            args: args.to_vec(),
+        });
+    }
+
+    /// Close a span opened at `t0_ns` (from [`Tracer::begin`]).
+    pub fn span(
+        &self,
+        tid: u32,
+        cat: &'static str,
+        name: &'static str,
+        t0_ns: u64,
+        args: &[(&'static str, u64)],
+    ) {
+        let now = self.now_ns();
+        self.push(TraceEvent {
+            ts_ns: t0_ns,
+            dur_ns: now.saturating_sub(t0_ns),
+            tid,
+            cat,
+            name,
+            args: args.to_vec(),
+        });
+    }
+
+    /// Events recorded so far (a merge point for incremental readers,
+    /// e.g. the fuzzer's counter-reconciliation oracle).
+    pub fn len(&self) -> usize {
+        self.inner.events.lock().unwrap().len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// A sorted snapshot: ascending start time, ties longest-first, so
+    /// an enclosing span sorts before the spans it contains.
+    pub fn events(&self) -> Vec<TraceEvent> {
+        let mut v = self.inner.events.lock().unwrap().clone();
+        v.sort_by(|a, b| a.ts_ns.cmp(&b.ts_ns).then(b.dur_ns.cmp(&a.dur_ns)));
+        v
+    }
+
+    /// The whole trace as `falkirk-trace/1` JSON lines: one header
+    /// object, then one event object per line, start-time sorted.
+    pub fn json_lines(&self) -> String {
+        let mut header = JsonObj::new();
+        header.str_field("schema", SCHEMA).str_field("clock", "mono_ns");
+        let mut out = header.finish();
+        out.push('\n');
+        for ev in self.events() {
+            out.push_str(&ev.json());
+            out.push('\n');
+        }
+        out
+    }
+
+    /// Append this trace to `path` (creating it if needed). The header
+    /// line is written only when the file is new or empty, so several
+    /// runs (e.g. consecutive fuzz seeds) share one well-formed file.
+    pub fn append_json_lines(&self, path: &str) -> std::io::Result<()> {
+        use std::io::Write;
+        let mut f = std::fs::OpenOptions::new().create(true).append(true).open(path)?;
+        let fresh = f.metadata()?.len() == 0;
+        let body = self.json_lines();
+        let text = if fresh {
+            body.as_str()
+        } else {
+            // Skip the header line on append.
+            body.split_once('\n').map(|(_, rest)| rest).unwrap_or("")
+        };
+        f.write_all(text.as_bytes())
+    }
+}
+
+/// Per-worker event buffer for the parallel hot path: plain `Vec`
+/// pushes on the worker thread, merged into the shared sink at the
+/// barriers where the worker already synchronizes (or on drop, which
+/// covers the recompose path).
+pub struct TraceBuf {
+    tracer: Tracer,
+    tid: u32,
+    events: Vec<TraceEvent>,
+}
+
+impl TraceBuf {
+    pub fn new(tracer: Tracer, tid: u32) -> TraceBuf {
+        TraceBuf { tracer, tid, events: Vec::new() }
+    }
+
+    pub fn begin(&self) -> u64 {
+        self.tracer.now_ns()
+    }
+
+    pub fn instant(&mut self, cat: &'static str, name: &'static str, args: &[(&'static str, u64)]) {
+        self.events.push(TraceEvent {
+            ts_ns: self.tracer.now_ns(),
+            dur_ns: 0,
+            tid: self.tid,
+            cat,
+            name,
+            args: args.to_vec(),
+        });
+    }
+
+    pub fn span(&mut self, cat: &'static str, name: &'static str, t0_ns: u64, args: &[(&'static str, u64)]) {
+        let now = self.tracer.now_ns();
+        self.events.push(TraceEvent {
+            ts_ns: t0_ns,
+            dur_ns: now.saturating_sub(t0_ns),
+            tid: self.tid,
+            cat,
+            name,
+            args: args.to_vec(),
+        });
+    }
+
+    /// Merge everything buffered into the shared sink (the barrier
+    /// hand-off). Cheap when empty.
+    pub fn flush(&mut self) {
+        if self.events.is_empty() {
+            return;
+        }
+        let mut sink = self.tracer.inner.events.lock().unwrap();
+        sink.append(&mut self.events);
+    }
+}
+
+impl Drop for TraceBuf {
+    fn drop(&mut self) {
+        self.flush();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn instants_and_spans_round_trip() {
+        let t = Tracer::new();
+        let t0 = t.begin();
+        t.instant(0, "ft", "checkpoint", &[("proc", 3), ("bytes", 128)]);
+        t.span(0, "recovery", "recovery", t0, &[("replayed", 5)]);
+        let evs = t.events();
+        assert_eq!(evs.len(), 2);
+        // The span opened first (t0) and covers the instant.
+        assert_eq!(evs[0].name, "recovery");
+        assert!(evs[0].dur_ns > 0);
+        assert_eq!(evs[0].arg("replayed"), Some(5));
+        assert_eq!(evs[1].name, "checkpoint");
+        assert_eq!(evs[1].dur_ns, 0);
+        assert!(evs[0].contains(&evs[1]));
+    }
+
+    #[test]
+    fn sorted_snapshot_is_start_time_monotone_parent_first() {
+        let t = Tracer::new();
+        // Push out of order, as span-close recording naturally does.
+        t.push(TraceEvent { ts_ns: 10, dur_ns: 5, tid: 0, cat: "c", name: "child", args: vec![] });
+        t.push(TraceEvent { ts_ns: 10, dur_ns: 50, tid: 0, cat: "c", name: "parent", args: vec![] });
+        t.push(TraceEvent { ts_ns: 5, dur_ns: 0, tid: 0, cat: "c", name: "first", args: vec![] });
+        let evs = t.events();
+        assert_eq!(
+            evs.iter().map(|e| e.name).collect::<Vec<_>>(),
+            vec!["first", "parent", "child"]
+        );
+        assert!(evs.windows(2).all(|w| w[0].ts_ns <= w[1].ts_ns));
+    }
+
+    #[test]
+    fn json_lines_have_header_then_events() {
+        let t = Tracer::new();
+        t.instant(2, "engine", "deliver", &[("edge", 1), ("records", 8)]);
+        let text = t.json_lines();
+        let lines: Vec<&str> = text.lines().collect();
+        assert_eq!(lines.len(), 2);
+        assert!(lines[0].contains("\"schema\":\"falkirk-trace/1\""));
+        assert!(lines[1].contains("\"cat\":\"engine\""));
+        assert!(lines[1].contains("\"args\":{\"edge\":1,\"records\":8}"));
+    }
+
+    #[test]
+    fn worker_buffer_merges_at_flush() {
+        let t = Tracer::new();
+        let mut buf = TraceBuf::new(t.clone(), 3);
+        buf.instant("parallel", "stall", &[("edge", 2)]);
+        let t0 = buf.begin();
+        buf.span("engine", "deliver", t0, &[("records", 4)]);
+        assert_eq!(t.len(), 0, "buffered events are local until the barrier");
+        buf.flush();
+        assert_eq!(t.len(), 2);
+        assert!(t.events().iter().all(|e| e.tid == 3));
+    }
+
+    #[test]
+    fn append_writes_header_once() {
+        let dir = crate::util::tmp::TempDir::new("trace");
+        let path = dir.path().join("t.jsonl");
+        let path = path.to_str().unwrap().to_string();
+        let t1 = Tracer::new();
+        t1.instant(0, "run", "epoch", &[("ep", 0)]);
+        t1.append_json_lines(&path).unwrap();
+        let t2 = Tracer::new();
+        t2.instant(0, "run", "epoch", &[("ep", 1)]);
+        t2.append_json_lines(&path).unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        let headers = text.lines().filter(|l| l.contains("\"schema\"")).count();
+        assert_eq!(headers, 1, "one header per file, however many runs append");
+        assert_eq!(text.lines().count(), 3);
+    }
+}

@@ -69,6 +69,85 @@ impl Summary {
     }
 }
 
+/// Fixed-bucket log2 histogram of `u64` samples (typically latencies
+/// in nanoseconds): 64 buckets, sample `v` lands in bucket
+/// `floor(log2(max(v,1)))`, so recording is branch-free O(1) with no
+/// allocation — safe to keep on hot paths, unlike [`Summary`], which
+/// retains every sample. Percentiles come back as the upper bound of
+/// the bucket the nearest rank falls in (clamped to the observed
+/// maximum): exact to within a factor of 2, which is what p50/p99
+/// latency reporting needs.
+#[derive(Clone, Debug)]
+pub struct LogHistogram {
+    buckets: [u64; 64],
+    count: u64,
+    sum: u128,
+    max: u64,
+}
+
+impl Default for LogHistogram {
+    fn default() -> Self {
+        LogHistogram { buckets: [0; 64], count: 0, sum: 0, max: 0 }
+    }
+}
+
+impl LogHistogram {
+    pub fn new() -> LogHistogram {
+        LogHistogram::default()
+    }
+
+    fn bucket_of(v: u64) -> usize {
+        63 - (v | 1).leading_zeros() as usize
+    }
+
+    pub fn record(&mut self, v: u64) {
+        self.buckets[Self::bucket_of(v)] += 1;
+        self.count += 1;
+        self.sum += v as u128;
+        self.max = self.max.max(v);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count
+    }
+
+    pub fn max(&self) -> u64 {
+        self.max
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.count == 0 {
+            return 0.0;
+        }
+        self.sum as f64 / self.count as f64
+    }
+
+    /// Percentile in `[0, 100]` by nearest rank over the buckets.
+    pub fn percentile(&self, p: f64) -> u64 {
+        if self.count == 0 {
+            return 0;
+        }
+        let rank = ((p / 100.0) * self.count as f64).ceil().max(1.0) as u64;
+        let mut seen = 0u64;
+        for (i, &n) in self.buckets.iter().enumerate() {
+            seen += n;
+            if seen >= rank.min(self.count) {
+                let upper = if i >= 63 { u64::MAX } else { (1u64 << (i + 1)) - 1 };
+                return upper.min(self.max);
+            }
+        }
+        self.max
+    }
+
+    pub fn p50(&self) -> u64 {
+        self.percentile(50.0)
+    }
+
+    pub fn p99(&self) -> u64 {
+        self.percentile(99.0)
+    }
+}
+
 /// Format a nanosecond quantity human-readably.
 pub fn fmt_ns(ns: f64) -> String {
     if ns < 1e3 {
@@ -124,6 +203,32 @@ mod tests {
             s.add(7.0);
         }
         assert!(s.stddev().abs() < 1e-12);
+    }
+
+    #[test]
+    fn log_histogram_buckets_and_percentiles() {
+        let mut h = LogHistogram::new();
+        assert_eq!(h.p50(), 0);
+        for v in 1..=100u64 {
+            h.record(v);
+        }
+        assert_eq!(h.count(), 100);
+        assert_eq!(h.max(), 100);
+        // Rank 50 falls in bucket [32,64): upper bound 63.
+        assert_eq!(h.p50(), 63);
+        // Rank 99 falls in bucket [64,128): clamped to the observed max.
+        assert_eq!(h.p99(), 100);
+        assert!((h.mean() - 50.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn log_histogram_handles_extremes() {
+        let mut h = LogHistogram::new();
+        h.record(0);
+        h.record(u64::MAX);
+        assert_eq!(h.count(), 2);
+        assert_eq!(h.percentile(0.0), 1); // bucket 0 upper bound
+        assert_eq!(h.percentile(100.0), u64::MAX);
     }
 
     #[test]

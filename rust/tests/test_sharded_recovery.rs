@@ -452,3 +452,98 @@ fn double_failure_during_recovery_is_transparent() {
         }
     }
 }
+
+/// Observability satellite: a traced kill-and-recover run emits a
+/// complete, well-nested recovery timeline — detection precedes the
+/// enclosing `recovery` span; `solver`, `rollback`, and `replay` nest
+/// inside it; replay strictly follows rollback; per-processor rollback
+/// instants match the Fig. 6 plan exactly; and the span counters agree
+/// with the [`RecoveryReport`]. Also pins the export-order contract
+/// (start-time monotone) and that attaching a tracer does not perturb
+/// the observable output.
+#[test]
+fn traced_recovery_emits_well_nested_timeline() {
+    use falkirk::trace::Tracer;
+    let cfg = ShardedConfig { workers: 4, ..Default::default() };
+    let seed = 7;
+    let (clean, _, _) = drive(&cfg, seed, None);
+    let mut p = pipeline(&cfg);
+    let tracer = Tracer::new();
+    p.sys.set_tracer(Some(tracer.clone()));
+    let src = p.src_proc();
+    for ep in 0..2u64 {
+        drive_epoch(&mut p, seed, ep, RECORDS, KEYS);
+    }
+
+    // Open epoch 2, push half the batch, crash count#2 mid-epoch.
+    let recs = epoch_records(seed, 2, RECORDS, KEYS);
+    p.sys.advance_input(src, Time::epoch(2));
+    for r in &recs[..RECORDS / 2] {
+        p.sys.push_input(src, Time::epoch(2), r.clone());
+    }
+    let victim = p.plan.proc(p.count, 2);
+    p.sys.inject_failures(&[victim]);
+    let rep = p.sys.recover();
+
+    let evs = tracer.events();
+    // Export order is monotone in start time (the sorted-snapshot
+    // contract the Python schema checker also enforces on files).
+    assert!(evs.windows(2).all(|w| w[0].ts_ns <= w[1].ts_ns), "events sorted by start");
+    // The driven epochs left engine and FT events behind.
+    assert!(evs.iter().any(|e| e.cat == "engine" && e.name == "deliver"), "deliveries traced");
+    let checkpoints = evs.iter().filter(|e| e.cat == "ft" && e.name == "checkpoint").count();
+    assert_eq!(checkpoints as u64, p.sys.stats.checkpoints_taken, "one instant per checkpoint");
+
+    let find = |name: &str| {
+        evs.iter().filter(|e| e.cat == "recovery" && e.name == name).collect::<Vec<_>>()
+    };
+    let (detect, recovery, solver, rollback, replay) =
+        (find("detect"), find("recovery"), find("solver"), find("rollback"), find("replay"));
+    assert_eq!(
+        (detect.len(), recovery.len(), solver.len(), rollback.len(), replay.len()),
+        (1, 1, 1, 1, 1),
+        "one timeline per recovery"
+    );
+    assert_eq!(detect[0].arg("procs"), Some(1), "one failure detected");
+
+    // Nesting: detection precedes the recovery span; every phase is
+    // contained in it; replay strictly follows rollback.
+    assert!(detect[0].ts_ns <= recovery[0].ts_ns, "detect precedes recovery");
+    for phase in [solver[0], rollback[0], replay[0]] {
+        assert!(recovery[0].contains(phase), "{} nests inside recovery", phase.name);
+    }
+    assert!(rollback[0].end_ns() <= replay[0].ts_ns, "replay follows rollback");
+
+    // Per-processor rollback instants match the Fig. 6 plan exactly:
+    // one per non-⊤ frontier, inside the rollback span.
+    let per_proc = find("rollback_proc");
+    assert_eq!(per_proc.len(), rep.plan.rolled_back().len());
+    assert_eq!(per_proc.len(), 1);
+    assert_eq!(per_proc[0].arg("proc"), Some(victim.0 as u64));
+    assert!(rollback[0].contains(per_proc[0]), "per-proc rollback inside the rollback span");
+
+    // Span counters agree with the report.
+    assert_eq!(solver[0].arg("procs"), Some(rep.plan.f.len() as u64));
+    assert_eq!(replay[0].arg("records"), Some(rep.replayed as u64));
+    assert_eq!(recovery[0].arg("replayed"), Some(rep.replayed as u64));
+    assert_eq!(
+        recovery[0].arg("procs_rolled_back"),
+        Some((rep.restored_from_checkpoint + rep.reset_to_empty) as u64)
+    );
+    assert_eq!(recovery[0].arg("replayed_total"), Some(p.sys.stats.messages_replayed));
+    assert_eq!(recovery[0].arg("rolled_back_total"), Some(p.sys.stats.procs_rolled_back));
+
+    // Finish the run: the traced execution's observable output is
+    // byte-identical to the untraced failure-free one.
+    for r in &recs[RECORDS / 2..] {
+        p.sys.push_input(src, Time::epoch(2), r.clone());
+    }
+    p.sys.advance_input(src, Time::epoch(3));
+    p.run(5_000_000);
+    for ep in 3..EPOCHS {
+        drive_epoch(&mut p, seed, ep, RECORDS, KEYS);
+    }
+    p.sys.close_input(src);
+    p.run(5_000_000);
+    assert_eq!(clean, canonical_output(&p.sys, p.collect_proc()), "tracing is observation-only");
+}

@@ -1,0 +1,168 @@
+//! Recovery-path bench: §4.4 rollback/replay latency and cold-reopen
+//! wall time, sequential vs. decomposed on the worker pool.
+//!
+//! Two groups of rows over the grid W ∈ {4, 8} × T ∈ {1, 4} ×
+//! snapshot ∈ {Full, Delta{8}}:
+//!
+//! - `recover_…`: the two-stage sharded job is driven through `EPOCHS`
+//!   closed epochs plus one *open* in-flight epoch (pushed, never
+//!   closed), so the source log holds an undelivered suffix. Each
+//!   iteration injects a two-shard failure (count#0 and count#2 —
+//!   distinct shard groups at T = 4, so the parallel path genuinely
+//!   restores and replays on ≥ 2 workers), runs `FtSystem::recover`
+//!   (T = 1) or `FtSystem::recover_parallel` (T = 4), and drains back to
+//!   quiescence. Rollback returns the victims to their newest checkpoint
+//!   and replay re-sends the open epoch's logged records into their key
+//!   ranges, so the cycle is a fixed point: every iteration performs the
+//!   identical failure→recovered-quiescence cycle, and ops/s is
+//!   recoveries/sec. The T4/T1 ratio is the parallel-recovery speedup.
+//! - `reopen_…`: the same job is driven against a durable WAL directory
+//!   and dropped mid-flight (buffered tail discarded via
+//!   `simulate_crash`); each iteration cold-restarts from the directory
+//!   (`FtSystem::reopen_sharded_parallel` via
+//!   `bench_support::sharded::reopen_pipeline`), which scans every
+//!   per-proc key range, materializes snapshot chains (delta rows walk
+//!   `prior_snapshot` links), and runs the everyone-crashed recovery —
+//!   fanned across T workers. The first reopen deletes whatever orphans
+//!   the crash left, so warmup absorbs it and sampled iterations reopen
+//!   a stable store.
+//!
+//! The sequential and parallel paths are byte-identical in output (the
+//! `test_sharded_recovery` grids pin that); this bench prices them.
+
+use falkirk::bench_support::sharded::{
+    drive_epoch, epoch_records, pipeline_with_store, reopen_pipeline, ShardedConfig,
+};
+use falkirk::bench_support::{BenchConfig, Bencher};
+use falkirk::ft::{FileBackendOptions, SnapshotPolicy, Store};
+use falkirk::time::Time;
+use falkirk::util::tmp::TempDir;
+
+const EPOCHS: u64 = 4;
+const RECORDS: usize = 256;
+const KEYS: u64 = 64;
+const FAIL_SHARDS: [usize; 2] = [0, 2];
+
+fn cfg(workers: u32, threads: usize, snapshot: SnapshotPolicy) -> ShardedConfig {
+    ShardedConfig {
+        workers,
+        two_stage: true,
+        threads,
+        snapshot_policy: snapshot,
+        ..Default::default()
+    }
+}
+
+fn snap_tag(s: SnapshotPolicy) -> &'static str {
+    match s {
+        SnapshotPolicy::Full => "full",
+        SnapshotPolicy::Delta { .. } => "delta8",
+    }
+}
+
+fn main() {
+    let mut b = Bencher::with_config(
+        "recovery",
+        BenchConfig { warmup_iters: 1, sample_iters: 5 },
+    );
+
+    let grid = [SnapshotPolicy::Full, SnapshotPolicy::Delta { max_chain: 8 }];
+    for snapshot in grid {
+        for workers in [4u32, 8] {
+            for threads in [1usize, 4] {
+                let c = cfg(workers, threads, snapshot);
+
+                // ---- recovery latency: prepared state with an open
+                // in-flight epoch; per-iteration recovery cycle.
+                let mut p = pipeline_with_store(&c, Store::new(c.write_cost));
+                for ep in 0..EPOCHS {
+                    drive_epoch(&mut p, 7, ep, RECORDS, KEYS);
+                }
+                let src = p.src_proc();
+                p.sys.advance_input(src, Time::epoch(EPOCHS));
+                for r in epoch_records(7, EPOCHS, RECORDS, KEYS) {
+                    p.sys.push_input(src, Time::epoch(EPOCHS), r);
+                }
+                p.run(10_000_000);
+                let victims: Vec<_> =
+                    FAIL_SHARDS.iter().map(|&s| p.plan.proc(p.count, s)).collect();
+                let name =
+                    format!("recover_W{workers}_T{threads}_{}", snap_tag(snapshot));
+                b.run(&name, 1.0, || {
+                    p.sys.inject_failures(&victims);
+                    let rep = if p.threads > 1 {
+                        p.sys.recover_parallel(&p.groups, p.threads)
+                    } else {
+                        p.sys.recover()
+                    };
+                    assert_eq!(
+                        rep.plan.rolled_back().len(),
+                        victims.len(),
+                        "exactly the two failed shards roll back"
+                    );
+                    assert!(rep.replayed > 0, "the open epoch's suffix replays");
+                    p.run(10_000_000);
+                });
+                if threads > 1 {
+                    assert!(
+                        p.sys.stats.recovery_parallelism >= 2,
+                        "parallel recovery must restore on >= 2 workers"
+                    );
+                    assert!(
+                        p.sys.stats.replay_workers >= 1,
+                        "parallel recovery must replay on >= 1 worker"
+                    );
+                }
+                drop(p);
+
+                // ---- cold-reopen wall: drive a durable run, crash the
+                // process, reopen per iteration.
+                let dir = TempDir::new("bench-recovery");
+                let store = Store::open_dir(
+                    dir.path(),
+                    c.write_cost,
+                    FileBackendOptions::default(),
+                )
+                .expect("opening WAL store");
+                let mut p = pipeline_with_store(&c, store.clone());
+                for ep in 0..EPOCHS {
+                    drive_epoch(&mut p, 7, ep, RECORDS, KEYS);
+                }
+                drop(p);
+                store.simulate_crash();
+                drop(store);
+                let name =
+                    format!("reopen_W{workers}_T{threads}_{}", snap_tag(snapshot));
+                b.run(&name, 1.0, || {
+                    let store = Store::open_dir(
+                        dir.path(),
+                        c.write_cost,
+                        FileBackendOptions::default(),
+                    )
+                    .expect("reopening WAL store");
+                    let (p, rep) = reopen_pipeline(&c, store);
+                    assert!(
+                        rep.restored_from_checkpoint + rep.reset_to_empty > 0,
+                        "cold reopen recovers every processor"
+                    );
+                    drop(p);
+                });
+            }
+        }
+    }
+
+    b.note(
+        "recover_*: ops/s = complete failure->recovered-quiescence cycles/sec \
+         (count#0 and count#2 fail — distinct shard groups at T=4); speedup = \
+         recover_W8_T4_* over recover_W8_T1_*",
+    );
+    b.note(
+        "reopen_*: ops/s = cold restarts/sec from the same durable WAL \
+         (per-proc key scans + chain materialization + everyone-crashed \
+         recovery, fanned across T workers at T > 1)",
+    );
+    b.note(
+        "delta8 rows materialize checkpoint chains by prior_snapshot walk; \
+         compare against their full twins for the delta read amplification",
+    );
+}

@@ -125,10 +125,13 @@ pub fn pipeline_with_store(cfg: &ShardedConfig, store: Store) -> ShardedPipeline
 
 /// Cold-restart the job from a reopened durable store: rebuilds the same
 /// plan/factories/policies and hands them to
-/// [`FtSystem::reopen_sharded`], which reloads the Table-1 mirrors and
-/// runs the all-processors-failed recovery. The caller resupplies
-/// external inputs beyond the source's recovered frontier
-/// (`report.plan.frontier(src)`) and keeps driving.
+/// [`FtSystem::reopen_sharded_parallel`], which reloads the Table-1
+/// mirrors and runs the all-processors-failed recovery — at
+/// `cfg.threads > 1` the per-proc key-range scans, chain
+/// materializations and the recovery itself fan out across the worker
+/// pool; at 1 it is the sequential [`FtSystem::reopen_sharded`] path.
+/// The caller resupplies external inputs beyond the source's recovered
+/// frontier (`report.plan.frontier(src)`) and keeps driving.
 pub fn reopen_pipeline(
     cfg: &ShardedConfig,
     store: Store,
@@ -185,13 +188,14 @@ fn build_pipeline(
             cfg.batch_cap,
         ),
         Some(slot) => {
-            let (sys, report) = FtSystem::reopen_sharded(
+            let (sys, report) = FtSystem::reopen_sharded_parallel(
                 &plan,
                 factories,
                 &policies,
                 Delivery::Fifo,
                 store,
                 cfg.batch_cap,
+                cfg.threads.max(1),
             );
             *slot = Some(report);
             sys

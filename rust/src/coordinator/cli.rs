@@ -29,14 +29,16 @@ COMMANDS:
                              # content-addressed incremental checkpoints
             --metrics-json FILE  # end-of-run falkirk-metrics/1 summary
   shard     Run the sharded keyed-aggregation job, optionally crashing
-            one worker shard and recovering only its key range.
+            worker shards and recovering only their key ranges.
             --workers W (4) --epochs N (6) --records N (64) --keys N (16)
             --seed S (7) --two-stage <true|false> (false)
-            --fail-shard S --fail-after E (2) --batch-cap B (1)
+            --fail-shard S[,S..] --fail-after E (2) --batch-cap B (1)
             --mailbox-cap M  # per-edge record budget; credit-based
                              # backpressure (default: unbounded;
                              # --keys 1 makes a fully skewed hot-key load)
-            --threads T (1)  # T>1 drains on the parallel engine
+            --threads T (1)  # T>1 drains AND recovers on the parallel
+                             # engine (failing shards in different shard
+                             # groups exercises parallel rollback)
             --data-dir DIR --flush-every N (8)  # durable WAL store
             --persist-async --ack-every N (8)   # staged writer pipeline
             --snapshot-delta --snapshot-max-chain N (8)
@@ -352,15 +354,23 @@ fn cmd_shard(args: &Args) -> i32 {
     let two_stage = args.get_str("two-stage", "false") == "true";
     let batch_cap = args.get_usize("batch-cap", 1);
     let threads = args.get_usize("threads", 1);
-    let fail_shard = match args.get("fail-shard") {
-        None => None,
-        Some(raw) => match raw.parse::<usize>() {
-            Ok(s) => Some(s),
-            Err(_) => {
-                eprintln!("--fail-shard '{raw}' is not a shard index");
-                return 2;
+    // One shard index or a comma-separated list: failing shards in
+    // different shard groups is what exercises parallel recovery.
+    let fail_shards: Vec<usize> = match args.get("fail-shard") {
+        None => Vec::new(),
+        Some(raw) => {
+            let mut out = Vec::new();
+            for part in raw.split(',') {
+                match part.trim().parse::<usize>() {
+                    Ok(s) => out.push(s),
+                    Err(_) => {
+                        eprintln!("--fail-shard '{part}' is not a shard index");
+                        return 2;
+                    }
+                }
             }
-        },
+            out
+        }
     };
     let fail_after = args.get_u64("fail-after", 2);
 
@@ -394,7 +404,7 @@ fn cmd_shard(args: &Args) -> i32 {
         snapshot_policy,
         ..Default::default()
     };
-    if let Some(s) = fail_shard {
+    for &s in &fail_shards {
         if s >= workers as usize {
             eprintln!("--fail-shard {s} out of range (workers = {workers})");
             return 2;
@@ -413,25 +423,36 @@ fn cmd_shard(args: &Args) -> i32 {
         let t_epoch = std::time::Instant::now();
         let trace_t0 = trace.as_ref().map(|(t, _)| t.now_ns());
         drive_epoch(&mut p, seed, ep, records, keys);
-        if let Some(s) = fail_shard {
-            if ep == fail_after {
-                let victim = p.plan.proc(p.count, s);
-                p.sys.inject_failures(&[victim]);
-                let rep = p.sys.recover();
-                println!("crash count#{s} after epoch {ep}:");
-                for sh in 0..workers as usize {
-                    println!(
-                        "  f(count#{sh}) = {}",
-                        rep.plan.frontier(p.plan.proc(p.count, sh))
-                    );
-                }
+        if !fail_shards.is_empty() && ep == fail_after {
+            let victims: Vec<crate::graph::ProcId> =
+                fail_shards.iter().map(|&s| p.plan.proc(p.count, s)).collect();
+            p.sys.inject_failures(&victims);
+            // T > 1 runs the §3.6 reset and replay decomposed onto the
+            // same shard groups as the drains; T = 1 is the sequential
+            // path. Byte-identical either way (checksum below).
+            let rep = if threads > 1 {
+                p.sys.recover_parallel(&p.groups, threads)
+            } else {
+                p.sys.recover()
+            };
+            let names: Vec<String> =
+                fail_shards.iter().map(|s| format!("count#{s}")).collect();
+            println!("crash {} after epoch {ep}:", names.join(", "));
+            for sh in 0..workers as usize {
                 println!(
-                    "  rolled back {} of {} processors, replayed {} logged messages",
-                    rep.plan.rolled_back().len(),
-                    p.plan.topo.num_procs(),
-                    rep.replayed
+                    "  f(count#{sh}) = {}",
+                    rep.plan.frontier(p.plan.proc(p.count, sh))
                 );
             }
+            println!(
+                "  rolled back {} of {} processors, replayed {} logged messages \
+                 (restore lanes {}, replay lanes {})",
+                rep.plan.rolled_back().len(),
+                p.plan.topo.num_procs(),
+                rep.replayed,
+                p.sys.stats.recovery_parallelism,
+                p.sys.stats.replay_workers
+            );
         }
         epoch_h.record(t_epoch.elapsed().as_nanos() as u64);
         if let (Some((tr, _)), Some(ts)) = (&trace, trace_t0) {
@@ -492,6 +513,8 @@ fn cmd_shard(args: &Args) -> i32 {
         .u64_field("storage_errors", p.sys.stats.storage_errors)
         .u64_field("recoveries", p.sys.stats.recoveries)
         .u64_field("messages_replayed", p.sys.stats.messages_replayed)
+        .u64_field("recovery_parallelism", p.sys.stats.recovery_parallelism)
+        .u64_field("replay_workers", p.sys.stats.replay_workers)
         .u64_field("output_bytes", out.len() as u64);
     let mut doc = JsonObj::new();
     doc.str_field("schema", METRICS_SCHEMA)

@@ -72,12 +72,18 @@
 //!
 //! Failure handling composes by construction: a drain always recomposes
 //! the engine before returning (workers are parked and joined), so
-//! failure injection and the Fig. 6 solve/reset run against the ordinary
-//! sequential engine between drains — the pause-drain-rollback protocol
-//! described in `ft/README.md`. Recovery's pause-drain is likewise
-//! never blocked by credit: replayed batches enqueue unconditionally
-//! (enqueues never block) and the forced round guarantees the drain
-//! completes — the "temporarily-lifted budget" of the recovery path.
+//! failure injection, availability assembly and the Fig. 6 solve run
+//! against the ordinary sequential engine between drains — the
+//! pause-drain-parallel-rollback protocol described in `ft/README.md`.
+//! The §3.6 *reset and replay themselves* then run decomposed again:
+//! `ft::recovery::apply_plan_parallel` re-loans the engine to the same
+//! shard groups, each worker restores its own rolled-back processors
+//! and replays its own logs, and cross-group replay traffic rides a
+//! fresh `MailHub` drained through `WorkerState::accept_replay`
+//! after a single barrier. Recovery's drains are likewise never blocked
+//! by credit: replayed batches enqueue unconditionally (enqueues never
+//! block) and the forced round guarantees the drain completes — the
+//! "temporarily-lifted budget" of the recovery path.
 //!
 //! Under asynchronous persistence
 //! ([`crate::ft::storage::PersistMode::Async`]) the store's writer
@@ -129,23 +135,45 @@ const DECISION_FORCE: u8 = 3;
 /// queued count the coordinator reads at barrier A to detect in-flight
 /// exchange traffic. Each edge has a single source processor (hence a
 /// single sending worker), so per-edge FIFO order is preserved
-/// end-to-end.
-struct MailHub {
+/// end-to-end. `pub(crate)` because parallel recovery
+/// (`ft::recovery::apply_plan_parallel`) reuses the same exchange for
+/// cross-group replay traffic.
+pub(crate) struct MailHub {
     boxes: Vec<Mutex<VecDeque<(EdgeId, Batch)>>>,
     queued: AtomicU64,
 }
 
 impl MailHub {
-    fn new(ngroups: usize) -> MailHub {
+    pub(crate) fn new(ngroups: usize) -> MailHub {
         MailHub {
             boxes: (0..ngroups).map(|_| Mutex::new(VecDeque::new())).collect(),
             queued: AtomicU64::new(0),
         }
     }
 
-    fn send(&self, group: usize, e: EdgeId, b: Batch) {
+    pub(crate) fn send(&self, group: usize, e: EdgeId, b: Batch) {
         self.boxes[group].lock().unwrap().push_back((e, b));
         self.queued.fetch_add(1, Ordering::SeqCst);
+    }
+
+    /// Move all queued *replayed* mail for `group` into the worker's
+    /// channels through the coalescing-bypass path
+    /// ([`WorkerState::accept_replay`]) — the parallel rollback drains
+    /// its exchange with this after the replay barrier, keeping
+    /// `push_batch_replay`'s deterministic batch boundaries end to end.
+    pub(crate) fn drain_replay_into(&self, group: usize, w: &mut WorkerState) -> usize {
+        let drained: Vec<(EdgeId, Batch)> = {
+            let mut q = self.boxes[group].lock().unwrap();
+            q.drain(..).collect()
+        };
+        let n = drained.len();
+        if n > 0 {
+            self.queued.fetch_sub(n as u64, Ordering::SeqCst);
+            for (e, b) in drained {
+                w.accept_replay(e, b);
+            }
+        }
+        n
     }
 
     /// Move all queued mail for `group` into the worker's channels.

@@ -768,7 +768,10 @@ impl Engine {
     /// counters (it only advances the counters of its own processors'
     /// out-edges, which [`Engine::recompose`] merges back). The engine
     /// keeps the tracker, the input capabilities and parked placeholder
-    /// processors until recomposition.
+    /// processors until recomposition. Decomposition serves both clean
+    /// parallel drains (`engine/parallel.rs`) and parallel recovery
+    /// (`ft::recovery`'s `apply_plan_parallel` runs the §3.6 reset and
+    /// replay on the decomposed workers, not just post-drain).
     pub(crate) fn decompose(&mut self, group_of: &[usize], ngroups: usize) -> Vec<WorkerState> {
         assert_eq!(group_of.len(), self.procs.len(), "one group per processor");
         assert!(group_of.iter().all(|&g| g < ngroups), "group index out of range");
@@ -961,6 +964,15 @@ impl WorkerState {
         self.channels[li].push_batch(b);
     }
 
+    /// Accept a cross-group *replayed* batch through the coalescing-bypass
+    /// path (the parallel rollback's Q′(e), matching
+    /// [`Engine::replay_batch`]'s boundary determinism). The sending
+    /// worker already recorded the send in its deltas.
+    pub(crate) fn accept_replay(&mut self, e: EdgeId, b: Batch) {
+        let li = self.edge_local[e.0 as usize].expect("edge owned by this worker") as usize;
+        self.channels[li].push_batch_replay(b);
+    }
+
     /// Whether any local channel holds a deliverable batch.
     pub(crate) fn has_local_work(&self) -> bool {
         self.channels.iter().any(|c| !c.is_empty())
@@ -1150,6 +1162,119 @@ impl WorkerState {
         self.deltas.cap_release(p, t);
         self.events += 1;
         Some(EventReport { kind: EventKind::Notification { proc: p, time: t }, sent })
+    }
+
+    // ------------------------------------------------------------------
+    // Recovery primitives: the decomposed counterparts of the engine's
+    // rollback API (`ft::recovery::apply_plan_parallel` runs §3.6 reset
+    // and replay on the workers themselves). Each mirrors the sequential
+    // primitive exactly, with tracker updates batched into the deltas —
+    // `Engine::recompose` merges and applies them, so the cross-worker
+    // net is what reaches the tracker.
+    // ------------------------------------------------------------------
+
+    /// Mutable access to an owned processor (checkpoint restore / reset).
+    pub(crate) fn proc_dyn(&mut self, p: ProcId) -> &mut dyn Processor {
+        let li = self.li(p);
+        &mut *self.procs[li]
+    }
+
+    /// Drop every pending notification request at an owned processor,
+    /// releasing the capabilities into the deltas — the worker-side
+    /// `Engine::cancel_pending(p, |_| true)`.
+    pub(crate) fn cancel_pending_all(&mut self, p: ProcId) {
+        let li = self.li(p);
+        for lt in std::mem::take(&mut self.pending[li]) {
+            self.deltas.cap_release(p, lt.0);
+        }
+    }
+
+    /// Re-arm pending notification requests restored from checkpoint
+    /// metadata — the worker-side [`Engine::restore_pending`].
+    pub(crate) fn restore_pending_times(&mut self, p: ProcId, times: Vec<Time>) {
+        let li = self.li(p);
+        for t in times {
+            if self.pending[li].insert(LexTime(t)) {
+                self.deltas.cap_acquire(p, t);
+            }
+        }
+    }
+
+    /// The completed-time frontier of an owned processor.
+    pub(crate) fn completed_of(&self, p: ProcId) -> &Frontier {
+        &self.completed[self.li(p)]
+    }
+
+    /// Reset an owned processor's completed-time frontier (recovery
+    /// restores it from the chosen checkpoint's N̄).
+    pub(crate) fn set_completed_of(&mut self, p: ProcId, f: Frontier) {
+        let li = self.li(p);
+        self.completed[li] = f;
+    }
+
+    /// Reset a sequence counter of an owned processor's out-edge
+    /// (rollback: re-executed sends reuse the undone sequence numbers).
+    /// Only owned out-edges reach the engine at recompose.
+    pub(crate) fn set_seq_counter(&mut self, e: EdgeId, v: u64) {
+        self.seq_counters[e.0 as usize] = v;
+    }
+
+    /// Discard queued batches on an owned edge whose time satisfies
+    /// `drop`, recording removals in the deltas (and the shared occupancy
+    /// gauge). Returns records dropped — the worker-side
+    /// [`Engine::discard_from_channel`].
+    pub(crate) fn discard_where<F: FnMut(&Time) -> bool>(&mut self, e: EdgeId, mut drop: F) -> u64 {
+        let li = self.edge_local[e.0 as usize].expect("edge owned by this worker") as usize;
+        let removed = self.channels[li].retain_where(|b| !drop(&b.time));
+        let mut dropped = 0u64;
+        for b in &removed {
+            self.deltas.messages_removed(e, b.time, b.len());
+            if let Some(occ) = self.occupancy.as_deref() {
+                occ[e.0 as usize].fetch_sub(b.len(), Ordering::Relaxed);
+            }
+            dropped += b.len() as u64;
+        }
+        dropped
+    }
+
+    /// Send a replayed batch from an owned source processor: the
+    /// worker-side [`Engine::replay_batch`], with off-group destinations
+    /// routed through `mail` (delivered via
+    /// [`WorkerState::accept_replay`] so the coalescing bypass holds
+    /// end to end).
+    pub(crate) fn replay_send(
+        &mut self,
+        e: EdgeId,
+        b: Batch,
+        mail: &mut dyn FnMut(usize, EdgeId, Batch),
+    ) {
+        self.deltas.messages_sent(e, b.time, b.len());
+        if let Some(occ) = self.occupancy.as_deref() {
+            occ[e.0 as usize].fetch_add(b.len(), Ordering::Relaxed);
+        }
+        match self.edge_local[e.0 as usize] {
+            Some(li) => self.channels[li as usize].push_batch_replay(b),
+            None => mail(self.edge_group[e.0 as usize], e, b),
+        }
+    }
+
+    /// Record a span on this worker's trace buffer, if tracing; returns
+    /// the begin timestamp from [`WorkerState::trace_begin`].
+    pub(crate) fn trace_begin(&self) -> u64 {
+        self.trace.as_ref().map(|tb| tb.begin()).unwrap_or(0)
+    }
+
+    /// Close a span opened with [`WorkerState::trace_begin`].
+    pub(crate) fn trace_span(
+        &mut self,
+        cat: &'static str,
+        name: &'static str,
+        t0_ns: u64,
+        args: &[(&'static str, u64)],
+    ) {
+        if let Some(tb) = self.trace.as_mut() {
+            tb.span(cat, name, t0_ns, args);
+        }
     }
 
     /// Worker-side flush: identical send expansion to the sequential

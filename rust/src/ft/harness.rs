@@ -274,7 +274,7 @@ pub(crate) struct ProcFt {
 }
 
 impl ProcFt {
-    fn new(policy: Policy) -> ProcFt {
+    pub(crate) fn new(policy: Policy) -> ProcFt {
         ProcFt {
             policy,
             delivered_new: BTreeMap::new(),
@@ -381,14 +381,31 @@ impl ProcFt {
 }
 
 /// The engine state a metadata observation needs to read about the
-/// event's processor: checkpoint state, pending notification requests.
-/// Implemented by the sequential [`Engine`] and by the parallel
-/// [`WorkerState`] (which owns the processor outright during a drain).
+/// event's processor — plus the *restore hooks* the §4.4 rollback uses
+/// to put that state back. Implemented by the sequential [`Engine`] and
+/// by the parallel [`WorkerState`] (which owns the processor outright
+/// during a drain — and, since recovery itself runs decomposed, during
+/// a rollback too). The hooks mirror the engine's recovery primitives
+/// exactly; the worker impl batches tracker effects into its deltas,
+/// which `Engine::recompose` merges and applies.
 pub(crate) trait FtView {
     /// Selective checkpoint state S(p, f).
     fn proc_state(&self, p: ProcId, f: &Frontier) -> Vec<u8>;
     /// Pending notification requests at `p`.
     fn proc_pending(&self, p: ProcId) -> Vec<Time>;
+    /// Mutable operator access (checkpoint restore / §3.6 reset).
+    fn proc_restore(&mut self, p: ProcId) -> &mut dyn Processor;
+    /// Drop every pending notification request at `p`, releasing the
+    /// capabilities.
+    fn cancel_all_pending(&mut self, p: ProcId);
+    /// Re-arm pending requests restored from checkpoint metadata.
+    fn restore_pending(&mut self, p: ProcId, times: Vec<Time>);
+    /// The completed-time frontier at `p`.
+    fn completed(&self, p: ProcId) -> Frontier;
+    /// Reset the completed-time frontier (from the checkpoint's N̄).
+    fn set_completed(&mut self, p: ProcId, f: Frontier);
+    /// Reset the sequence counter of one of `p`'s out-edges.
+    fn set_seq_counter(&mut self, e: EdgeId, v: u64);
 }
 
 impl FtView for Engine {
@@ -399,6 +416,30 @@ impl FtView for Engine {
     fn proc_pending(&self, p: ProcId) -> Vec<Time> {
         self.pending_notifications(p)
     }
+
+    fn proc_restore(&mut self, p: ProcId) -> &mut dyn Processor {
+        self.proc_mut(p)
+    }
+
+    fn cancel_all_pending(&mut self, p: ProcId) {
+        self.cancel_pending(p, |_| true);
+    }
+
+    fn restore_pending(&mut self, p: ProcId, times: Vec<Time>) {
+        Engine::restore_pending(self, p, times);
+    }
+
+    fn completed(&self, p: ProcId) -> Frontier {
+        Engine::completed(self, p).clone()
+    }
+
+    fn set_completed(&mut self, p: ProcId, f: Frontier) {
+        Engine::set_completed(self, p, f);
+    }
+
+    fn set_seq_counter(&mut self, e: EdgeId, v: u64) {
+        Engine::set_seq_counter(self, e, v);
+    }
 }
 
 impl FtView for WorkerState {
@@ -408,6 +449,30 @@ impl FtView for WorkerState {
 
     fn proc_pending(&self, p: ProcId) -> Vec<Time> {
         self.pending_of(p)
+    }
+
+    fn proc_restore(&mut self, p: ProcId) -> &mut dyn Processor {
+        self.proc_dyn(p)
+    }
+
+    fn cancel_all_pending(&mut self, p: ProcId) {
+        self.cancel_pending_all(p);
+    }
+
+    fn restore_pending(&mut self, p: ProcId, times: Vec<Time>) {
+        self.restore_pending_times(p, times);
+    }
+
+    fn completed(&self, p: ProcId) -> Frontier {
+        self.completed_of(p).clone()
+    }
+
+    fn set_completed(&mut self, p: ProcId, f: Frontier) {
+        self.set_completed_of(p, f);
+    }
+
+    fn set_seq_counter(&mut self, e: EdgeId, v: u64) {
+        WorkerState::set_seq_counter(self, e, v);
     }
 }
 
@@ -443,6 +508,16 @@ pub struct FtStats {
     /// [`crate::ft::storage::PersistMode::Sync`]). A snapshot maximum,
     /// not an additive counter.
     pub ack_lag: u64,
+    /// Peak number of worker groups that restored ≥1 rolled-back
+    /// processor concurrently in a single recovery (1 for the sequential
+    /// path). A snapshot maximum — the structural assertion that
+    /// recovery actually ran in parallel where wall-clock can't be
+    /// measured.
+    pub recovery_parallelism: u64,
+    /// Peak number of worker groups that replayed ≥1 logged/history
+    /// record concurrently in a single recovery (1 for the sequential
+    /// path when anything replayed). A snapshot maximum.
+    pub replay_workers: u64,
 }
 
 impl FtStats {
@@ -462,6 +537,8 @@ impl FtStats {
         self.procs_untouched += o.procs_untouched;
         self.storage_errors += o.storage_errors;
         self.ack_lag = self.ack_lag.max(o.ack_lag);
+        self.recovery_parallelism = self.recovery_parallelism.max(o.recovery_parallelism);
+        self.replay_workers = self.replay_workers.max(o.replay_workers);
     }
 }
 
@@ -877,6 +954,120 @@ pub(crate) fn sweep_unreachable_snapshots(store: &Store, proc: u32, ft: &mut Pro
     released
 }
 
+/// Rebuild one processor's Table-1 mirrors from its durable key range
+/// (the per-proc body of [`FtSystem::load_durable`], extracted so the
+/// parallel cold restart can fan processors across a thread pool — the
+/// scan touches only `Key{proc,..}` keys and this processor's `ProcFt`,
+/// so concurrent loads are disjoint by construction). Checkpoint states
+/// are materialized from their content-addressed snapshot chains; an
+/// entry whose chain is incomplete is dropped together with every newer
+/// entry, exactly as documented on [`FtSystem::load_durable`].
+fn load_proc_durable(store: &Store, p: ProcId, ft: &mut ProcFt) {
+    let keys = store.scan_keys(p.0);
+    let mut metas: BTreeMap<u64, MetaRecord> = BTreeMap::new();
+    let mut snaps: BTreeMap<u64, Snapshot> = BTreeMap::new();
+    let mut logs: BTreeMap<u64, LogEntry> = BTreeMap::new();
+    let mut hist: BTreeMap<u64, HistoryEvent> = BTreeMap::new();
+    let mut mark = Frontier::Bottom;
+    let mut next_key = 0u64;
+    for k in keys {
+        if k.kind == Kind::Chunk {
+            // Content-addressed: the tag is a hash, not a counter
+            // value (folding it into `next_key` would wreck the
+            // key sequence); contents are fetched during
+            // materialization, not here.
+            continue;
+        }
+        next_key = next_key.max(k.tag);
+        let blob = store.get(&k).expect("scanned key must resolve");
+        match k.kind {
+            Kind::Meta => {
+                let rec = MetaRecord::from_bytes(&blob)
+                    .expect("corrupt Ξ record below the WAL checksum layer");
+                metas.insert(k.tag, rec);
+            }
+            Kind::Snapshot => {
+                let s = Snapshot::from_bytes(&blob).expect("corrupt snapshot record");
+                snaps.insert(k.tag, s);
+            }
+            Kind::State => {
+                // A monolithic state blob: nothing on the
+                // checkpoint path writes these anymore (the kind
+                // remains valid for generic blobs) — an orphan.
+                store.delete(&k);
+            }
+            Kind::Chunk => unreachable!("chunks skipped above"),
+            Kind::LogEntry => {
+                let le = LogEntry::from_bytes(&blob).expect("corrupt log entry");
+                logs.insert(k.tag, le);
+            }
+            Kind::HistoryEvent => {
+                let ev = HistoryEvent::from_bytes(&blob).expect("corrupt history event");
+                hist.insert(k.tag, ev);
+            }
+            Kind::InputFrontier => {
+                mark = Frontier::from_bytes(&blob).expect("corrupt input marker");
+            }
+        }
+    }
+    let mut broken = false;
+    for (tag, rec) in metas {
+        // Conservative repair: once one entry fails to
+        // materialize, it and everything newer is deleted — the
+        // chain ascends and later deltas may reference the hole.
+        if !broken {
+            match store.materialize_snapshot(p.0, tag) {
+                Some(state) => {
+                    debug_assert!(
+                        ft.chain.last().map(|c| c.meta.f.is_subset(&rec.meta.f)).unwrap_or(true),
+                        "reopened checkpoint chain must ascend"
+                    );
+                    ft.chain.push(StoredCheckpoint {
+                        meta: rec.meta,
+                        state,
+                        pending_notify: rec.pending_notify,
+                    });
+                    // Reopened entries are durable by definition:
+                    // sequence 0 sits at or below every watermark.
+                    ft.chain_tags.push(TagSeq { tag, seq: 0 });
+                }
+                None => broken = true,
+            }
+        }
+        if broken {
+            store.delete(&Key { proc: p.0, kind: Kind::Meta, tag });
+        }
+    }
+    // Mirror every surviving snapshot record, then sweep: orphan
+    // records (a Ξ that never became durable, a repaired suffix)
+    // and unreferenced chunks are collected here.
+    ft.snapshots = snaps;
+    sweep_unreachable_snapshots(store, p.0, ft);
+    for (tag, le) in logs {
+        ft.log.push(le);
+        ft.log_tags.push(TagSeq { tag, seq: 0 });
+    }
+    for (tag, ev) in hist {
+        ft.history.push(ev);
+        ft.history_tags.push(TagSeq { tag, seq: 0 });
+    }
+    ft.input_mark = mark.clone();
+    ft.input_mark_acked = mark;
+    ft.next_key = next_key;
+    // Best-effort cadence counter: a lazy processor checkpointed
+    // once per `every` completions, so this restores the trigger
+    // phase (never output-visible; exact for `every = 1`).
+    ft.completions = match ft.policy {
+        Policy::FullHistory => ft
+            .history
+            .iter()
+            .filter(|e| matches!(e.kind, HistoryKind::Notification { .. }))
+            .count() as u64,
+        Policy::Lazy { every, .. } => ft.chain.len() as u64 * every,
+        _ => 0,
+    };
+}
+
 /// Per-worker FT observer for parallel drains: owns the [`ProcFt`]
 /// entries of its shard group, shares the store handle, and accumulates
 /// private stats merged back after the join.
@@ -1060,6 +1251,63 @@ impl FtSystem {
         FtSystem::reopen(plan.topo.clone(), procs, policies, delivery, store, batch_cap)
     }
 
+    /// [`FtSystem::reopen`] with the whole pipeline fanned across
+    /// `threads` workers: the per-proc key-range scans and snapshot-chain
+    /// materializations run on a scoped thread pool
+    /// ([`FtSystem::load_durable_parallel`]), and the everyone-crashed
+    /// recovery runs decomposed onto the shard groups
+    /// ([`FtSystem::recover_parallel`]). `group_of` maps each processor
+    /// to its shard group, exactly as for
+    /// [`FtSystem::run_to_quiescence_parallel`]. Output is
+    /// byte-identical to the sequential reopen; `threads <= 1` *is* the
+    /// sequential reopen.
+    #[allow(clippy::too_many_arguments)]
+    pub fn reopen_parallel(
+        topo: Arc<Topology>,
+        procs: Vec<Box<dyn Processor>>,
+        policies: Vec<Policy>,
+        delivery: Delivery,
+        store: Store,
+        batch_cap: usize,
+        group_of: &[usize],
+        threads: usize,
+    ) -> (FtSystem, crate::ft::recovery::RecoveryReport) {
+        let mut sys = FtSystem::new_with_cap(topo, procs, policies, delivery, store, batch_cap);
+        sys.load_durable_parallel(threads);
+        let all: Vec<ProcId> = sys.topo.proc_ids().collect();
+        sys.inject_failures(&all);
+        let report = sys.recover_parallel(group_of, threads);
+        (sys, report)
+    }
+
+    /// [`FtSystem::reopen_sharded`] on the worker pool: shard groups are
+    /// derived from the plan ([`crate::engine::shard_groups`], the same
+    /// mapping a parallel drain uses) and the reopen pipeline fans
+    /// across them — see [`FtSystem::reopen_parallel`].
+    pub fn reopen_sharded_parallel(
+        plan: &Arc<crate::graph::sharding::ShardPlan>,
+        factories: Vec<crate::engine::sharded::ProcFactory>,
+        logical_policies: &[Policy],
+        delivery: Delivery,
+        store: Store,
+        batch_cap: usize,
+        threads: usize,
+    ) -> (FtSystem, crate::ft::recovery::RecoveryReport) {
+        let procs = crate::engine::sharded::build_procs(plan, factories);
+        let policies = plan.expand_per_proc(logical_policies);
+        let group_of = crate::engine::shard_groups(plan, threads.max(1));
+        FtSystem::reopen_parallel(
+            plan.topo.clone(),
+            procs,
+            policies,
+            delivery,
+            store,
+            batch_cap,
+            &group_of,
+            threads,
+        )
+    }
+
     /// Bound every data channel to roughly `cap` queued records with
     /// credit-based backpressure (see [`Engine::set_mailbox_cap`]); `None`
     /// restores unbounded mailboxes. Not persisted: callers must re-apply
@@ -1093,115 +1341,48 @@ impl FtSystem {
     fn load_durable(&mut self) {
         let store = self.store.clone();
         for p in self.topo.proc_ids() {
-            let keys = store.scan_keys(p.0);
-            let mut metas: BTreeMap<u64, MetaRecord> = BTreeMap::new();
-            let mut snaps: BTreeMap<u64, Snapshot> = BTreeMap::new();
-            let mut logs: BTreeMap<u64, LogEntry> = BTreeMap::new();
-            let mut hist: BTreeMap<u64, HistoryEvent> = BTreeMap::new();
-            let mut mark = Frontier::Bottom;
-            let mut next_key = 0u64;
-            for k in keys {
-                if k.kind == Kind::Chunk {
-                    // Content-addressed: the tag is a hash, not a counter
-                    // value (folding it into `next_key` would wreck the
-                    // key sequence); contents are fetched during
-                    // materialization, not here.
-                    continue;
-                }
-                next_key = next_key.max(k.tag);
-                let blob = store.get(&k).expect("scanned key must resolve");
-                match k.kind {
-                    Kind::Meta => {
-                        let rec = MetaRecord::from_bytes(&blob)
-                            .expect("corrupt Ξ record below the WAL checksum layer");
-                        metas.insert(k.tag, rec);
-                    }
-                    Kind::Snapshot => {
-                        let s = Snapshot::from_bytes(&blob).expect("corrupt snapshot record");
-                        snaps.insert(k.tag, s);
-                    }
-                    Kind::State => {
-                        // A monolithic state blob: nothing on the
-                        // checkpoint path writes these anymore (the kind
-                        // remains valid for generic blobs) — an orphan.
-                        store.delete(&k);
-                    }
-                    Kind::Chunk => unreachable!("chunks skipped above"),
-                    Kind::LogEntry => {
-                        let le = LogEntry::from_bytes(&blob).expect("corrupt log entry");
-                        logs.insert(k.tag, le);
-                    }
-                    Kind::HistoryEvent => {
-                        let ev =
-                            HistoryEvent::from_bytes(&blob).expect("corrupt history event");
-                        hist.insert(k.tag, ev);
-                    }
-                    Kind::InputFrontier => {
-                        mark = Frontier::from_bytes(&blob).expect("corrupt input marker");
-                    }
-                }
-            }
-            let ft = &mut self.ft[p.0 as usize];
-            let mut broken = false;
-            for (tag, rec) in metas {
-                // Conservative repair: once one entry fails to
-                // materialize, it and everything newer is deleted — the
-                // chain ascends and later deltas may reference the hole.
-                if !broken {
-                    match store.materialize_snapshot(p.0, tag) {
-                        Some(state) => {
-                            debug_assert!(
-                                ft.chain
-                                    .last()
-                                    .map(|c| c.meta.f.is_subset(&rec.meta.f))
-                                    .unwrap_or(true),
-                                "reopened checkpoint chain must ascend"
-                            );
-                            ft.chain.push(StoredCheckpoint {
-                                meta: rec.meta,
-                                state,
-                                pending_notify: rec.pending_notify,
-                            });
-                            // Reopened entries are durable by definition:
-                            // sequence 0 sits at or below every watermark.
-                            ft.chain_tags.push(TagSeq { tag, seq: 0 });
-                        }
-                        None => broken = true,
-                    }
-                }
-                if broken {
-                    store.delete(&Key { proc: p.0, kind: Kind::Meta, tag });
-                }
-            }
-            // Mirror every surviving snapshot record, then sweep: orphan
-            // records (a Ξ that never became durable, a repaired suffix)
-            // and unreferenced chunks are collected here.
-            ft.snapshots = snaps;
-            sweep_unreachable_snapshots(&store, p.0, ft);
-            for (tag, le) in logs {
-                ft.log.push(le);
-                ft.log_tags.push(TagSeq { tag, seq: 0 });
-            }
-            for (tag, ev) in hist {
-                ft.history.push(ev);
-                ft.history_tags.push(TagSeq { tag, seq: 0 });
-            }
-            ft.input_mark = mark.clone();
-            ft.input_mark_acked = mark;
-            ft.next_key = next_key;
-            // Best-effort cadence counter: a lazy processor checkpointed
-            // once per `every` completions, so this restores the trigger
-            // phase (never output-visible; exact for `every = 1`).
-            ft.completions = match ft.policy {
-                Policy::FullHistory => ft
-                    .history
-                    .iter()
-                    .filter(|e| matches!(e.kind, HistoryKind::Notification { .. }))
-                    .count() as u64,
-                Policy::Lazy { every, .. } => ft.chain.len() as u64 * every,
-                _ => 0,
-            };
+            load_proc_durable(&store, p, &mut self.ft[p.0 as usize]);
         }
+    }
+
+    /// [`FtSystem::load_durable`] fanned across a scoped thread pool:
+    /// processors are dealt round-robin to `threads` workers, and each
+    /// worker scans and rebuilds its processors' mirrors concurrently.
+    /// Safe without locks: key ranges are per-proc disjoint
+    /// (`Key{proc,..}`), the store's index is read-only during the scan
+    /// (the only writes are orphan deletions inside the caller-owned
+    /// range), and each `ProcFt` mirror has exactly one loading worker —
+    /// so reopen wall time scales with the largest processor's range,
+    /// not the sum.
+    fn load_durable_parallel(&mut self, threads: usize) {
+        if threads <= 1 || self.ft.len() <= 1 {
+            return self.load_durable();
+        }
+        let store = self.store.clone();
+        let lanes = threads.min(self.ft.len());
+        let mut buckets: Vec<Vec<(ProcId, &mut ProcFt)>> =
+            (0..lanes).map(|_| Vec::new()).collect();
+        for (pi, ft) in self.ft.iter_mut().enumerate() {
+            buckets[pi % lanes].push((ProcId(pi as u32), ft));
+        }
+        std::thread::scope(|s| {
+            let handles: Vec<_> = buckets
+                .into_iter()
+                .map(|bucket| {
+                    let store = store.clone();
+                    s.spawn(move || {
+                        for (p, ft) in bucket {
+                            load_proc_durable(&store, p, ft);
+                        }
+                    })
+                })
+                .collect();
+            for h in handles {
+                if let Err(e) = h.join() {
+                    std::panic::resume_unwind(e);
+                }
+            }
+        });
     }
 
     pub fn topology(&self) -> &Topology {

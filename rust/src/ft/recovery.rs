@@ -22,34 +22,44 @@
 //! logs/replay (valid checkpoints are complete, so nothing inside `f`
 //! can have been in flight).
 //!
-//! **Pause-drain-rollback under parallel execution.** When the system
-//! runs multi-threaded ([`FtSystem::run_to_quiescence_parallel`]), every
+//! **Pause-drain-parallel-rollback.** When the system runs
+//! multi-threaded ([`FtSystem::run_to_quiescence_parallel`]), every
 //! drain recomposes the engine before returning: workers park at the
 //! final barrier, their channels, processors, per-shard FT metadata and
 //! progress deltas all merge back, and the threads join — and the
 //! **persistence writer settles too**: the drain ends with a staging
 //! barrier ([`crate::ft::storage::Store::flush_staged`]), so the store
 //! image matches the mirrors whenever workers are parked. Failure
-//! injection and this module's solve/reset therefore always execute
-//! against the ordinary sequential engine — the Fig. 6 plan is computed
-//! and applied "while workers are parked", with no concurrent mutation
-//! possible by construction. A failure injected *between* staging
-//! barriers (sequential drains do not flush) additionally discards the
-//! failed processors' staged-but-unacknowledged writes, rolling them
-//! back to the ack watermark — see [`FtSystem::inject_failures`]. Replays enqueue through the
-//! coalescing-bypass path ([`crate::engine::Engine::replay_batch`]), so
-//! the rebuilt queues have batch boundaries that are a deterministic
-//! function of the durable log — a *second* failure during recovery (or
-//! the next parallel drain) observes the same boundaries as the first.
+//! injection, availability assembly and the Fig. 6 solve always execute
+//! against the composed sequential engine — the plan is computed "while
+//! workers are parked", with no concurrent mutation possible by
+//! construction. The §3.6 *reset and replay themselves* then run either
+//! sequentially ([`FtSystem::recover`]) or decomposed back onto the
+//! shard-group workers ([`FtSystem::recover_parallel`]): each group
+//! restores its own rolled-back processors and replays its own logs
+//! concurrently — per-processor volatile and durable state is disjoint
+//! by construction, so the two paths produce byte-identical results.
+//! A failure injected *between* staging barriers (sequential drains do
+//! not flush) additionally discards the failed processors'
+//! staged-but-unacknowledged writes, rolling them back to the ack
+//! watermark — see [`FtSystem::inject_failures`]. Replays enqueue
+//! through the coalescing-bypass path
+//! ([`crate::engine::Engine::replay_batch`] / the workers'
+//! `accept_replay`), so the rebuilt queues have batch
+//! boundaries that are a deterministic function of the durable log — a
+//! *second* failure during recovery (or the next parallel drain)
+//! observes the same boundaries as the first.
 
+use crate::engine::parallel::MailHub;
+use crate::engine::scheduler::WorkerState;
 use crate::engine::Batch;
 use crate::frontier::Frontier;
-use crate::ft::harness::{FtSystem, HistoryEvent, HistoryKind};
+use crate::ft::harness::{FtStats, FtSystem, FtView, HistoryEvent, HistoryKind, ProcFt};
 use crate::ft::meta::CkptMeta;
 use crate::ft::policy::Policy;
 use crate::ft::rollback::{choose_frontiers, Available, RollbackInput, RollbackPlan};
-use crate::ft::storage::{Key, Kind};
-use crate::graph::ProcId;
+use crate::ft::storage::{Key, Kind, Store};
+use crate::graph::{EdgeId, ProcId, Topology};
 use crate::progress::Summary;
 use crate::time::Time;
 use crate::util::ser::Encode;
@@ -291,12 +301,41 @@ impl FtSystem {
     /// §4.4 recovery: solve for consistent frontiers and apply the §3.6
     /// reset. Panics if called with no failures (nothing to do).
     pub fn recover(&mut self) -> RecoveryReport {
+        self.recover_with(None)
+    }
+
+    /// §4.4 recovery on the parallel worker pool. The solve still runs
+    /// against the composed engine (availability and φ read the live
+    /// mirrors and counters), but the §3.6 reset and replay fan out
+    /// across the shard-group workers: the engine decomposes exactly as
+    /// for a parallel drain, each group restores its own rolled-back
+    /// processors (checkpoint restore, snapshot-chain materialization,
+    /// mirror truncation) and replays its own logs concurrently, and
+    /// cross-group replay traffic rides the mailbox exchange. Falls back
+    /// to the sequential path at `threads <= 1`. The recovered state is
+    /// byte-identical to [`FtSystem::recover`]'s by construction:
+    /// per-processor state and durable `Key{proc,..}` ranges are
+    /// disjoint, every edge has a single sending worker (per-edge replay
+    /// order is the log order), and
+    /// [`crate::engine::Channel::push_batch_replay`] boundaries depend
+    /// only on the log and the cap — see `ft/README.md`.
+    pub fn recover_parallel(&mut self, group_of: &[usize], threads: usize) -> RecoveryReport {
+        if threads <= 1 {
+            return self.recover();
+        }
+        self.recover_with(Some((group_of, threads)))
+    }
+
+    fn recover_with(&mut self, par: Option<(&[usize], usize)>) -> RecoveryReport {
         assert!(self.any_failed(), "recover() without failures");
         self.note_ack_lag();
         // Recovery timeline: one enclosing "recovery" span wrapping the
-        // "solver" span here and the "rollback"/"replay" spans recorded
-        // by `apply_plan` (complete-event spans close child-first; the
-        // export re-sorts by start time, longest first).
+        // "solver" span here and the rollback/replay spans recorded by
+        // the plan application (complete-event spans close child-first;
+        // the export re-sorts by start time, longest first). The
+        // sequential path records one tid-0 "rollback"/"replay" pair;
+        // the parallel path records per-worker sub-spans on the worker
+        // tids instead.
         let tracer = self.tracer().cloned();
         let t_recovery = tracer.as_ref().map(|t| t.now_ns());
         let t_solver = t_recovery;
@@ -308,15 +347,29 @@ impl FtSystem {
         if let (Some(tr), Some(t0)) = (&tracer, t_solver) {
             tr.span(0, "recovery", "solver", t0, &[("procs", plan.f.len() as u64)]);
         }
-        let report = self.apply_plan(&plan);
+        let report = match par {
+            Some((group_of, ngroups)) => self.apply_plan_parallel(&plan, group_of, ngroups),
+            None => self.apply_plan(&plan),
+        };
         for ft in &mut self.ft {
             ft.failed = false;
         }
+        let rolled = (report.restored_from_checkpoint + report.reset_to_empty) as u64;
         self.stats.recoveries += 1;
         self.stats.messages_replayed += report.replayed as u64;
-        self.stats.procs_rolled_back +=
-            (report.restored_from_checkpoint + report.reset_to_empty) as u64;
+        self.stats.procs_rolled_back += rolled;
         self.stats.procs_untouched += report.untouched as u64;
+        if par.is_none() {
+            // The sequential path is one restore/replay lane; the
+            // parallel path records its group fan-out inside
+            // `apply_plan_parallel`, where ownership is known.
+            if rolled > 0 {
+                self.stats.recovery_parallelism = self.stats.recovery_parallelism.max(1);
+            }
+            if report.replayed > 0 {
+                self.stats.replay_workers = self.stats.replay_workers.max(1);
+            }
+        }
         if let (Some(tr), Some(t0)) = (&tracer, t_recovery) {
             tr.span(
                 0,
@@ -326,10 +379,7 @@ impl FtSystem {
                 &[
                     ("replayed", report.replayed as u64),
                     ("replayed_total", self.stats.messages_replayed),
-                    (
-                        "procs_rolled_back",
-                        (report.restored_from_checkpoint + report.reset_to_empty) as u64,
-                    ),
+                    ("procs_rolled_back", rolled),
                     ("rolled_back_total", self.stats.procs_rolled_back),
                 ],
             );
@@ -357,6 +407,8 @@ impl FtSystem {
         // processors (their virtual log).
         let n = self.topo.num_procs();
         let mut regen: Vec<Vec<(crate::graph::EdgeId, Time, Batch)>> = vec![Vec::new(); n];
+        let topo = self.topo.clone();
+        let store = self.store.clone();
         for p in self.topo.proc_ids() {
             let fp = plan.f[p.0 as usize].clone();
             if fp.is_top() {
@@ -366,205 +418,20 @@ impl FtSystem {
             if let Some(tr) = &tracer {
                 tr.instant(0, "recovery", "rollback_proc", &[("proc", p.0 as u64)]);
             }
-            // Cancel all pending notifications; restores re-arm them.
-            self.engine.cancel_pending(p, |_| true);
-            // Completed-time frontier: intersect the live one with the
-            // restored frontier (chain restores below overwrite it with
-            // the checkpoint's durable N̄ — the live one is ∅ for failed
-            // processors).
-            let new_completed = if fp.is_bottom() {
-                Frontier::Bottom
-            } else {
-                self.engine.completed(p).intersect(&fp)
-            };
-            self.engine.set_completed(p, new_completed);
-            let policy = self.ft[p.0 as usize].policy;
-            if fp.is_bottom() {
-                self.engine.proc_mut(p).reset();
-                // Re-executed sends must reuse sequence numbers from the
-                // beginning, or downstream dedup (and the paper's (e,s)
-                // time identity) breaks.
-                for &e in self.topo.out_edges(p) {
-                    if self.topo.projection(e).is_per_checkpoint() && !policy.logs_outputs() {
-                        self.engine.set_seq_counter(e, 0);
-                    } else if self.topo.projection(e).is_per_checkpoint() {
-                        // Logging processors replay 1..k from the log and
-                        // continue at k+1 — but a log truncated to ∅ holds
-                        // nothing, so restart numbering too.
-                        self.engine.set_seq_counter(e, 0);
-                    }
-                }
-                report.reset_to_empty += 1;
-            } else if policy.records_history() {
-                // Replay recomputes state and notifications; completed =
-                // the replayed notification frontier.
-                let mut done = Frontier::Bottom;
-                for ev in &self.ft[p.0 as usize].history {
-                    if let HistoryKind::Notification { time } = &ev.kind {
-                        if fp.contains(time) {
-                            done.insert(*time);
-                        }
-                    }
-                }
-                self.engine.set_completed(p, done);
-                regen[p.0 as usize] = self.replay_history(p, &fp);
-                // Replay renumbered seq-domain sends from 1; live
-                // execution must continue where the regenerated virtual
-                // log left off or downstream dedup breaks.
-                for &e in self.topo.out_edges(p) {
-                    if self.topo.projection(e).is_per_checkpoint() {
-                        let c: u64 = regen[p.0 as usize]
-                            .iter()
-                            .filter(|(se, _, _)| *se == e)
-                            .map(|(_, _, b)| b.len() as u64)
-                            .sum();
-                        self.engine.set_seq_counter(e, c);
-                    }
-                }
-                report.restored_from_checkpoint += 1;
-            } else if policy.has_chain() {
-                let (state, pending, phi_counts, n_bar) = {
-                    let ft = &self.ft[p.0 as usize];
-                    let ck = ft
-                        .chain
-                        .iter()
-                        .find(|c| c.meta.f == fp)
-                        .unwrap_or_else(|| panic!("plan frontier {fp} not in chain of {p}"));
-                    let counts: Vec<(crate::graph::EdgeId, u64)> = ck
-                        .meta
-                        .phi
-                        .iter()
-                        .filter(|(e, _)| self.topo.projection(**e).is_per_checkpoint())
-                        .map(|(e, fr)| (*e, fr.watermark(*e)))
-                        .collect();
-                    (ck.state.clone(), ck.pending_notify.clone(), counts, ck.meta.n_bar.clone())
-                };
-                self.engine.proc_mut(p).restore(&state);
-                self.engine.restore_pending(p, pending);
-                self.engine.set_completed(p, n_bar);
-                for (e, c) in phi_counts {
-                    self.engine.set_seq_counter(e, c);
-                }
-                report.restored_from_checkpoint += 1;
-            } else {
-                // Stateless at a mid frontier: nothing to restore — but a
-                // logging processor kept there (e.g. a source at its
-                // input-frontier marker) must resume per-checkpoint (seq)
-                // out-edge numbering where its durable log left off.
-                self.engine.proc_mut(p).reset();
-                if policy.logs_outputs() {
-                    for &e in self.topo.out_edges(p) {
-                        if self.topo.projection(e).is_per_checkpoint() {
-                            let count: u64 = self.ft[p.0 as usize]
-                                .log
-                                .iter()
-                                .filter(|le| le.edge == e && fp.contains(&le.event_time))
-                                .map(|le| le.records() as u64)
-                                .sum();
-                            self.engine.set_seq_counter(e, count);
-                        }
-                    }
-                }
-                report.reset_to_empty += 1;
-            }
-            // FT bookkeeping reset (F*'(p), H'(p), log truncation, delta
-            // pruning). Every mirror entry carries its storage tag, so
-            // truncation deletes exactly the undone durable blobs — the
-            // store stays an image of the mirrors, which is what makes a
-            // *second* cold reopen (or one after an in-process recovery)
-            // see consistent state.
-            let store = self.store.clone();
-            let ft = &mut self.ft[p.0 as usize];
-            // The input-frontier marker shrinks with the rollback. It
-            // must land in the WAL *before* the tombstones of the log
-            // entries it certified: the WAL loses only suffixes, so
-            // marker-then-tombstones can leave (at worst) a narrow
-            // marker with stale entries behind it — harmless, they are
-            // re-truncated on reopen — while the reverse order could
-            // leave a wide marker certifying deleted entries.
-            if !ft.input_mark.is_bottom() {
-                let shrunk = ft.input_mark.intersect(&fp);
-                if shrunk != ft.input_mark {
-                    ft.drain_acked_marks(store.acked_seq(p.0));
-                    ft.input_mark = shrunk.clone();
-                    let key = Key { proc: p.0, kind: Kind::InputFrontier, tag: 0 };
-                    let (seq, durable) = if shrunk.is_bottom() {
-                        (store.stage_delete(key), Frontier::Bottom)
-                    } else {
-                        match store.stage_put(key, shrunk.to_bytes()) {
-                            Ok(seq) => (seq, shrunk.clone()),
-                            // The store refuses the shrunk marker (a
-                            // byte limit small enough to reject a
-                            // frontier blob — the same oversized-put
-                            // regime whose log refusals forced this
-                            // rollback in the first place). Deleting
-                            // the durable marker is always expressible
-                            // and strictly conservative: a cold restart
-                            // or crash-settle sees no marker and offers
-                            // ∅ for this source instead of a stale wide
-                            // frontier certifying truncated logs.
-                            Err(_) => {
-                                ft.storage_errors += 1;
-                                self.stats.storage_errors += 1;
-                                store.trace_instant(
-                                    "storage",
-                                    "storage_refused",
-                                    &[("proc", p.0 as u64)],
-                                );
-                                (store.stage_delete(key), Frontier::Bottom)
-                            }
-                        }
-                    };
-                    // The shrink rides the pending queue like any other
-                    // marker version: if a later crash discards it
-                    // unacked, the crash-settle intersection still lands
-                    // on the shrunk (or deleted) value — matching the
-                    // truncated mirrors below, which is what
-                    // availability offers.
-                    ft.mark_pending.push((seq, durable));
-                }
-            }
-            // The chain ascends, so the kept set is a prefix. Per tag the
-            // Ξ tombstone precedes the snapshot-record tombstones (the
-            // reachability sweep below), mirroring the write order:
-            // suffix loss can orphan a snapshot (collected on reopen),
-            // never leave a Ξ whose chain the sweep already gutted.
-            // Staged deletion keeps that ordering even against
-            // still-queued writes of the same processor.
-            let keep = ft.chain.iter().take_while(|c| c.meta.f.is_subset(&fp)).count();
-            for ts in ft.chain_tags.drain(keep..) {
-                store.delete(&Key { proc: p.0, kind: Kind::Meta, tag: ts.tag });
-            }
-            ft.chain.truncate(keep);
-            ft.chain_reported = ft.chain_reported.min(keep);
-            crate::ft::harness::sweep_unreachable_snapshots(&store, p.0, ft);
-            crate::ft::harness::retain_with_tags(
-                &mut ft.log,
-                &mut ft.log_tags,
-                |le| fp.contains(&le.event_time),
-                |ts| store.delete(&Key { proc: p.0, kind: Kind::LogEntry, tag: ts.tag }),
+            let (outcome, sends) = rollback_proc_on(
+                &mut self.engine,
+                &topo,
+                &store,
+                &mut self.ft[p.0 as usize],
+                &mut self.stats,
+                p,
+                &fp,
             );
-            crate::ft::harness::retain_with_tags(
-                &mut ft.history,
-                &mut ft.history_tags,
-                |ev| fp.contains(&ev.time()),
-                |ts| store.delete(&Key { proc: p.0, kind: Kind::HistoryEvent, tag: ts.tag }),
-            );
-            for times in ft.delivered_new.values_mut() {
-                times.retain(|lt| fp.contains(&lt.0));
+            match outcome {
+                RestoreOutcome::Restored => report.restored_from_checkpoint += 1,
+                RestoreOutcome::Reset => report.reset_to_empty += 1,
             }
-            ft.notified_new.retain(|lt| fp.contains(&lt.0));
-            ft.input_new.retain(|lt| fp.contains(&lt.0));
-            for pairs in ft.discarded_new.values_mut() {
-                pairs.retain(|(evt, _)| fp.contains(evt));
-            }
-            for v in ft.sent_events.values_mut() {
-                v.retain(|t| fp.contains(t));
-            }
-            if fp.is_bottom() {
-                // Initial state: nothing was ever sent.
-                ft.sent_total.clear();
-            }
+            regen[p.0 as usize] = sends;
         }
 
         // Phase 2: channel reconciliation.
@@ -646,83 +513,587 @@ impl FtSystem {
         report
     }
 
-    /// Reset a full-history processor to H(p)@f by replaying the filtered
-    /// history through the operator. Returns the regenerated sends
-    /// (virtual log for Q′). Notification requests regenerated by the
-    /// replay that were not consumed by replayed notifications are
-    /// re-armed.
-    fn replay_history(
+    /// Apply a rollback plan on the worker pool. The engine decomposes
+    /// into the same shard groups as a parallel drain; every group then
+    /// restores its own rolled-back processors (phase 1), reconciles its
+    /// own inbound channels (phase 2) and replays its own logs/history
+    /// (phase 3) concurrently, with cross-group replay traffic riding a
+    /// fresh [`MailHub`] that each worker drains after a single barrier
+    /// — so every replayed batch is in a channel or a mailbox before
+    /// anyone delivers. Safe without locks because per-processor state
+    /// is disjoint by construction: each proc (operator, pending set,
+    /// completed frontier, out-edge counters, `ProcFt` mirror, durable
+    /// `Key{proc,..}` range) has exactly one owning worker, each edge
+    /// exactly one sending and one receiving worker, and the store
+    /// serializes its own staging internally. Phase-2 decisions need the
+    /// composed engine (`phi_runtime` at ⊤ reads live sequence counters
+    /// and chain markers), so they are precomputed before decomposing
+    /// and applied per edge by the owner.
+    pub(crate) fn apply_plan_parallel(
         &mut self,
-        p: ProcId,
-        f: &Frontier,
-    ) -> Vec<(crate::graph::EdgeId, Time, Batch)> {
-        self.engine.proc_mut(p).reset();
-        let events: Vec<HistoryEvent> = self.ft[p.0 as usize]
-            .history
-            .iter()
-            .filter(|ev| f.contains(&ev.time()))
-            .cloned()
-            .collect();
-        let out_edges = self.topo.out_edges(p).to_vec();
-        let summaries: Vec<Summary> =
-            out_edges.iter().map(|&e| Summary::of(self.topo.projection(e))).collect();
-        let seq_dst: Vec<bool> = out_edges
-            .iter()
-            .map(|&e| self.topo.domain(self.topo.dst(e)) == crate::time::TimeDomain::Seq)
-            .collect();
-        let mut sends = Vec::new();
-        let mut requested: Vec<Time> = Vec::new();
-        let mut consumed: Vec<Time> = Vec::new();
-        // Sequence numbering restarts from the history's beginning, just
-        // like the original execution did (pre-increment to match
-        // `split_staged`: the first record gets `(e, 1)`).
-        let mut seq_counts: Vec<u64> = vec![0; out_edges.len()];
-        for ev in events {
-            let t = ev.time();
-            let mut ctx = crate::engine::Ctx::new(t, &out_edges, &summaries, &seq_dst);
-            match &ev.kind {
-                HistoryKind::Message { edge, time, data } => {
-                    // Re-deliver the recorded batch whole — replay is
-                    // byte-identical to the original delivery.
-                    let port = self.topo.input_port(*edge);
-                    self.engine.proc_mut(p).on_batch(port, *time, data.records().to_vec(), &mut ctx);
-                }
-                HistoryKind::Notification { time } => {
-                    consumed.push(*time);
-                    self.engine.proc_mut(p).on_notification(*time, &mut ctx);
-                }
-                HistoryKind::Input { time, data } => {
-                    self.engine.proc_mut(p).on_input(*time, data.clone(), &mut ctx);
-                }
-            }
-            let (staged, notify) = ctx.into_parts();
-            for (port, batch) in staged {
-                let e = out_edges[port];
-                if seq_dst[port] {
-                    // Mirror the engine flush: every record into a seq
-                    // domain carries its own `(e, s)` time.
-                    for r in batch.into_records() {
-                        let c = &mut seq_counts[port];
-                        *c += 1;
-                        sends.push((e, t, Batch::one(Time::seq(e, *c), r)));
+        plan: &RollbackPlan,
+        group_of: &[usize],
+        ngroups: usize,
+    ) -> RecoveryReport {
+        use std::panic::{catch_unwind, resume_unwind, AssertUnwindSafe};
+
+        let np = self.topo.num_procs();
+        assert_eq!(group_of.len(), np, "one group per processor");
+        let mut report = RecoveryReport {
+            plan: plan.clone(),
+            replayed: 0,
+            dropped: 0,
+            restored_from_checkpoint: 0,
+            reset_to_empty: 0,
+            untouched: plan.f.iter().filter(|f| f.is_top()).count(),
+        };
+
+        // Phase-2 channel decisions, precomputed against the composed
+        // engine (same per-edge cases as the sequential `apply_plan`).
+        let actions: Vec<EdgeAction> = self
+            .topo
+            .edge_ids()
+            .map(|e| {
+                let f_src = &plan.f[self.topo.src(e).0 as usize];
+                let f_dst = &plan.f[self.topo.dst(e).0 as usize];
+                if f_dst.is_top() {
+                    if f_src.is_top() {
+                        EdgeAction::Untouched
+                    } else {
+                        EdgeAction::KeepWithin(self.phi_runtime(e, f_src))
                     }
                 } else {
-                    sends.push((e, t, batch));
+                    EdgeAction::DropAll
+                }
+            })
+            .collect();
+
+        let topo = self.topo.clone();
+        let store = self.store.clone();
+
+        // Decompose exactly like a parallel drain: the engine loans each
+        // group its processors, channels and counters; the FT harness
+        // loans each group its `ProcFt` mirrors.
+        let engine_workers = self.engine.decompose(group_of, ngroups);
+        struct Group {
+            ws: WorkerState,
+            ft: Vec<Option<ProcFt>>,
+            stats: FtStats,
+            restored: usize,
+            reset: usize,
+            replayed: usize,
+            dropped: usize,
+        }
+        let mut groups: Vec<Group> = engine_workers
+            .into_iter()
+            .map(|ws| Group {
+                ws,
+                ft: (0..np).map(|_| None).collect(),
+                stats: FtStats::default(),
+                restored: 0,
+                reset: 0,
+                replayed: 0,
+                dropped: 0,
+            })
+            .collect();
+        for (pi, ft) in self.ft.iter_mut().enumerate() {
+            groups[group_of[pi]].ft[pi] =
+                Some(std::mem::replace(ft, ProcFt::new(Policy::Ephemeral)));
+        }
+
+        let hub = MailHub::new(ngroups);
+        let barrier = std::sync::Barrier::new(ngroups);
+        let mut panic_payload: Option<Box<dyn std::any::Any + Send>> = None;
+        std::thread::scope(|s| {
+            let mut handles = Vec::new();
+            for g in groups.iter_mut() {
+                let hub = &hub;
+                let barrier = &barrier;
+                let topo = &topo;
+                let actions = &actions;
+                let store = store.clone();
+                handles.push(s.spawn(move || {
+                    // Phases run under catch_unwind so a panicking worker
+                    // still reaches the barrier (its peers would deadlock
+                    // otherwise); the payload re-raises after recompose.
+                    let r1 = catch_unwind(AssertUnwindSafe(|| {
+                        let t0 = g.ws.trace_begin();
+                        let mut regen: Vec<Vec<(EdgeId, Time, Batch)>> =
+                            (0..topo.num_procs()).map(|_| Vec::new()).collect();
+                        // Phase 1: restore this group's rolled-back procs.
+                        for p in topo.proc_ids() {
+                            let pi = p.0 as usize;
+                            if !g.ws.owns(p) || plan.f[pi].is_top() {
+                                continue;
+                            }
+                            let fp = plan.f[pi].clone();
+                            g.ws.trace_instant(
+                                "recovery",
+                                "rollback_proc",
+                                &[("proc", pi as u64)],
+                            );
+                            let ft = g.ft[pi].as_mut().expect("proc loaned to its owner group");
+                            let (outcome, sends) = rollback_proc_on(
+                                &mut g.ws,
+                                topo,
+                                &store,
+                                ft,
+                                &mut g.stats,
+                                p,
+                                &fp,
+                            );
+                            match outcome {
+                                RestoreOutcome::Restored => g.restored += 1,
+                                RestoreOutcome::Reset => g.reset += 1,
+                            }
+                            regen[pi] = sends;
+                        }
+                        // Phase 2: reconcile this group's inbound channels.
+                        let mut dropped = 0u64;
+                        for e in topo.edge_ids() {
+                            if group_of[topo.dst(e).0 as usize] != g.ws.group {
+                                continue;
+                            }
+                            match &actions[e.0 as usize] {
+                                EdgeAction::Untouched => {}
+                                EdgeAction::KeepWithin(keep) => {
+                                    dropped += g.ws.discard_where(e, |t| !keep.contains(t));
+                                }
+                                EdgeAction::DropAll => {
+                                    dropped += g.ws.discard_where(e, |_| true);
+                                }
+                            }
+                        }
+                        g.dropped = dropped as usize;
+                        if g.restored + g.reset > 0 || dropped > 0 {
+                            g.ws.trace_span(
+                                "recovery",
+                                "rollback",
+                                t0,
+                                &[("procs", (g.restored + g.reset) as u64), ("dropped", dropped)],
+                            );
+                        }
+                        // Phase 3: replay Q′ from this group's sources
+                        // (including untouched ⊤ sources feeding
+                        // rolled-back destinations). Per-edge order is the
+                        // log order — one sending worker per edge.
+                        let t1 = g.ws.trace_begin();
+                        for p in topo.proc_ids() {
+                            let pi = p.0 as usize;
+                            if !g.ws.owns(p) || plan.f[pi].is_bottom() {
+                                continue;
+                            }
+                            let fp = &plan.f[pi];
+                            let ft = g.ft[pi].as_ref().expect("proc loaned to its owner group");
+                            let entries: Vec<(EdgeId, Time, Batch)> = ft
+                                .log
+                                .iter()
+                                .map(|le| (le.edge, le.event_time, le.batch.clone()))
+                                .chain(std::mem::take(&mut regen[pi]))
+                                .collect();
+                            for (e, evt, batch) in entries {
+                                if !fp.is_top() && !fp.contains(&evt) {
+                                    continue;
+                                }
+                                let f_dst = &plan.f[topo.dst(e).0 as usize];
+                                if f_dst.is_top() {
+                                    continue;
+                                }
+                                if f_dst.contains(&batch.time) {
+                                    continue;
+                                }
+                                g.replayed += batch.len();
+                                g.ws.replay_send(e, batch, &mut |dg, e, b| hub.send(dg, e, b));
+                            }
+                        }
+                        t1
+                    }));
+                    // Replay barrier: every cross-group send is in a
+                    // mailbox before anyone drains. Reached even on panic
+                    // or the peers would deadlock.
+                    barrier.wait();
+                    match r1 {
+                        Ok(t1) => catch_unwind(AssertUnwindSafe(|| {
+                            hub.drain_replay_into(g.ws.group, &mut g.ws);
+                            if g.replayed > 0 {
+                                g.ws.trace_span(
+                                    "recovery",
+                                    "replay",
+                                    t1,
+                                    &[("records", g.replayed as u64)],
+                                );
+                            }
+                            g.ws.flush_trace();
+                        }))
+                        .err(),
+                        Err(e) => Some(e),
+                    }
+                }));
+            }
+            for h in handles {
+                let payload = match h.join() {
+                    Ok(p) => p,
+                    Err(p) => Some(p),
+                };
+                if panic_payload.is_none() {
+                    panic_payload = payload;
                 }
             }
-            requested.extend(notify);
+        });
+
+        // Merge back: counters and mirrors first, then the engine itself
+        // (recompose applies the batched tracker deltas — the cross-worker
+        // net of cancels, restores, discards and replays). On a worker
+        // panic everything still merges before the payload re-raises, so
+        // the system is structurally consistent for postmortems.
+        let mut groups_restoring = 0u64;
+        let mut groups_replaying = 0u64;
+        let mut engine_workers = Vec::with_capacity(ngroups);
+        for mut g in groups {
+            if g.restored + g.reset > 0 {
+                groups_restoring += 1;
+            }
+            if g.replayed > 0 {
+                groups_replaying += 1;
+            }
+            report.restored_from_checkpoint += g.restored;
+            report.reset_to_empty += g.reset;
+            report.replayed += g.replayed;
+            report.dropped += g.dropped;
+            self.stats.merge(&g.stats);
+            for (pi, slot) in g.ft.iter_mut().enumerate() {
+                if let Some(ft) = slot.take() {
+                    self.ft[pi] = ft;
+                }
+            }
+            engine_workers.push(g.ws);
         }
-        // Re-arm unconsumed notification requests.
-        for t in consumed {
-            if let Some(i) = requested.iter().position(|x| *x == t) {
-                requested.swap_remove(i);
+        self.engine.recompose(engine_workers);
+        if let Some(p) = panic_payload {
+            resume_unwind(p);
+        }
+        self.stats.recovery_parallelism = self.stats.recovery_parallelism.max(groups_restoring);
+        self.stats.replay_workers = self.stats.replay_workers.max(groups_replaying);
+        report
+    }
+}
+
+/// Precomputed per-edge channel reconciliation (phase 2) — decided
+/// against the composed engine, applied by the edge's owning worker.
+enum EdgeAction {
+    /// Neither endpoint moved: the queue is untouched.
+    Untouched,
+    /// Destination stays at ⊤: keep only times fixed by the source's
+    /// rollback (`φ(e)(f(src))`); the source re-executes the rest.
+    KeepWithin(Frontier),
+    /// Destination restored below ⊤: the queue is rebuilt purely from
+    /// replay.
+    DropAll,
+}
+
+/// What a per-processor rollback did (phase 1).
+enum RestoreOutcome {
+    /// Restored from a durable checkpoint (chain entry or full history).
+    Restored,
+    /// Reset to the initial state (∅, or stateless at a mid frontier).
+    Reset,
+}
+
+/// Phase 1 of the §3.6 reset for one rolled-back processor (`f(p) < ⊤`),
+/// generic over the engine view so it runs identically against the
+/// composed sequential [`crate::engine::Engine`] and a decomposed
+/// [`WorkerState`] during parallel recovery. Everything it touches is
+/// owned by exactly one worker — the operator, its pending set,
+/// completed frontier and out-edge sequence counters live on the
+/// owning [`WorkerState`]; the `ProcFt` mirror and the durable
+/// `Key{proc,..}` range are per-proc disjoint — so concurrent per-proc
+/// rollbacks share nothing but the store handle, which serializes its
+/// own staging. Restores operator state, re-arms pending
+/// notifications, resets sequence counters, truncates the durable
+/// mirrors, and returns the history-regenerated virtual log for
+/// phase 3.
+fn rollback_proc_on<V: FtView>(
+    view: &mut V,
+    topo: &Topology,
+    store: &Store,
+    ft: &mut ProcFt,
+    stats: &mut FtStats,
+    p: ProcId,
+    fp: &Frontier,
+) -> (RestoreOutcome, Vec<(EdgeId, Time, Batch)>) {
+    // Cancel all pending notifications; restores re-arm them.
+    view.cancel_all_pending(p);
+    // Completed-time frontier: intersect the live one with the restored
+    // frontier (chain restores below overwrite it with the checkpoint's
+    // durable N̄ — the live one is ∅ for failed processors).
+    let new_completed = if fp.is_bottom() {
+        Frontier::Bottom
+    } else {
+        view.completed(p).intersect(fp)
+    };
+    view.set_completed(p, new_completed);
+    let policy = ft.policy;
+    let mut regen: Vec<(EdgeId, Time, Batch)> = Vec::new();
+    let outcome;
+    if fp.is_bottom() {
+        view.proc_restore(p).reset();
+        // Re-executed sends must reuse sequence numbers from the
+        // beginning, or downstream dedup (and the paper's (e,s) time
+        // identity) breaks. Logging processors replay 1..k from the log
+        // and continue at k+1 — but a log truncated to ∅ holds nothing,
+        // so they restart numbering too.
+        for &e in topo.out_edges(p) {
+            if topo.projection(e).is_per_checkpoint() {
+                view.set_seq_counter(e, 0);
             }
         }
-        requested.sort_by_key(|t| crate::time::LexTime(*t));
-        requested.dedup();
-        self.engine.restore_pending(p, requested);
-        sends
+        outcome = RestoreOutcome::Reset;
+    } else if policy.records_history() {
+        // Replay recomputes state and notifications; completed = the
+        // replayed notification frontier.
+        let mut done = Frontier::Bottom;
+        for ev in &ft.history {
+            if let HistoryKind::Notification { time } = &ev.kind {
+                if fp.contains(time) {
+                    done.insert(*time);
+                }
+            }
+        }
+        view.set_completed(p, done);
+        regen = replay_history_on(view, topo, ft, p, fp);
+        // Replay renumbered seq-domain sends from 1; live execution must
+        // continue where the regenerated virtual log left off or
+        // downstream dedup breaks.
+        for &e in topo.out_edges(p) {
+            if topo.projection(e).is_per_checkpoint() {
+                let c: u64 = regen
+                    .iter()
+                    .filter(|(se, _, _)| *se == e)
+                    .map(|(_, _, b)| b.len() as u64)
+                    .sum();
+                view.set_seq_counter(e, c);
+            }
+        }
+        outcome = RestoreOutcome::Restored;
+    } else if policy.has_chain() {
+        let (state, pending, phi_counts, n_bar) = {
+            let ck = ft
+                .chain
+                .iter()
+                .find(|c| c.meta.f == *fp)
+                .unwrap_or_else(|| panic!("plan frontier {fp} not in chain of {p}"));
+            let counts: Vec<(EdgeId, u64)> = ck
+                .meta
+                .phi
+                .iter()
+                .filter(|(e, _)| topo.projection(**e).is_per_checkpoint())
+                .map(|(e, fr)| (*e, fr.watermark(*e)))
+                .collect();
+            (ck.state.clone(), ck.pending_notify.clone(), counts, ck.meta.n_bar.clone())
+        };
+        view.proc_restore(p).restore(&state);
+        view.restore_pending(p, pending);
+        view.set_completed(p, n_bar);
+        for (e, c) in phi_counts {
+            view.set_seq_counter(e, c);
+        }
+        outcome = RestoreOutcome::Restored;
+    } else {
+        // Stateless at a mid frontier: nothing to restore — but a
+        // logging processor kept there (e.g. a source at its
+        // input-frontier marker) must resume per-checkpoint (seq)
+        // out-edge numbering where its durable log left off.
+        view.proc_restore(p).reset();
+        if policy.logs_outputs() {
+            for &e in topo.out_edges(p) {
+                if topo.projection(e).is_per_checkpoint() {
+                    let count: u64 = ft
+                        .log
+                        .iter()
+                        .filter(|le| le.edge == e && fp.contains(&le.event_time))
+                        .map(|le| le.records() as u64)
+                        .sum();
+                    view.set_seq_counter(e, count);
+                }
+            }
+        }
+        outcome = RestoreOutcome::Reset;
     }
+    // FT bookkeeping reset (F*'(p), H'(p), log truncation, delta
+    // pruning). Every mirror entry carries its storage tag, so
+    // truncation deletes exactly the undone durable blobs — the
+    // store stays an image of the mirrors, which is what makes a
+    // *second* cold reopen (or one after an in-process recovery)
+    // see consistent state.
+    //
+    // The input-frontier marker shrinks with the rollback. It
+    // must land in the WAL *before* the tombstones of the log
+    // entries it certified: the WAL loses only suffixes, so
+    // marker-then-tombstones can leave (at worst) a narrow
+    // marker with stale entries behind it — harmless, they are
+    // re-truncated on reopen — while the reverse order could
+    // leave a wide marker certifying deleted entries.
+    if !ft.input_mark.is_bottom() {
+        let shrunk = ft.input_mark.intersect(fp);
+        if shrunk != ft.input_mark {
+            ft.drain_acked_marks(store.acked_seq(p.0));
+            ft.input_mark = shrunk.clone();
+            let key = Key { proc: p.0, kind: Kind::InputFrontier, tag: 0 };
+            let (seq, durable) = if shrunk.is_bottom() {
+                (store.stage_delete(key), Frontier::Bottom)
+            } else {
+                match store.stage_put(key, shrunk.to_bytes()) {
+                    Ok(seq) => (seq, shrunk.clone()),
+                    // The store refuses the shrunk marker (a
+                    // byte limit small enough to reject a
+                    // frontier blob — the same oversized-put
+                    // regime whose log refusals forced this
+                    // rollback in the first place). Deleting
+                    // the durable marker is always expressible
+                    // and strictly conservative: a cold restart
+                    // or crash-settle sees no marker and offers
+                    // ∅ for this source instead of a stale wide
+                    // frontier certifying truncated logs.
+                    Err(_) => {
+                        ft.storage_errors += 1;
+                        stats.storage_errors += 1;
+                        store.trace_instant(
+                            "storage",
+                            "storage_refused",
+                            &[("proc", p.0 as u64)],
+                        );
+                        (store.stage_delete(key), Frontier::Bottom)
+                    }
+                }
+            };
+            // The shrink rides the pending queue like any other
+            // marker version: if a later crash discards it
+            // unacked, the crash-settle intersection still lands
+            // on the shrunk (or deleted) value — matching the
+            // truncated mirrors below, which is what
+            // availability offers.
+            ft.mark_pending.push((seq, durable));
+        }
+    }
+    // The chain ascends, so the kept set is a prefix. Per tag the
+    // Ξ tombstone precedes the snapshot-record tombstones (the
+    // reachability sweep below), mirroring the write order:
+    // suffix loss can orphan a snapshot (collected on reopen),
+    // never leave a Ξ whose chain the sweep already gutted.
+    // Staged deletion keeps that ordering even against
+    // still-queued writes of the same processor.
+    let keep = ft.chain.iter().take_while(|c| c.meta.f.is_subset(fp)).count();
+    for ts in ft.chain_tags.drain(keep..) {
+        store.delete(&Key { proc: p.0, kind: Kind::Meta, tag: ts.tag });
+    }
+    ft.chain.truncate(keep);
+    ft.chain_reported = ft.chain_reported.min(keep);
+    crate::ft::harness::sweep_unreachable_snapshots(store, p.0, ft);
+    crate::ft::harness::retain_with_tags(
+        &mut ft.log,
+        &mut ft.log_tags,
+        |le| fp.contains(&le.event_time),
+        |ts| store.delete(&Key { proc: p.0, kind: Kind::LogEntry, tag: ts.tag }),
+    );
+    crate::ft::harness::retain_with_tags(
+        &mut ft.history,
+        &mut ft.history_tags,
+        |ev| fp.contains(&ev.time()),
+        |ts| store.delete(&Key { proc: p.0, kind: Kind::HistoryEvent, tag: ts.tag }),
+    );
+    for times in ft.delivered_new.values_mut() {
+        times.retain(|lt| fp.contains(&lt.0));
+    }
+    ft.notified_new.retain(|lt| fp.contains(&lt.0));
+    ft.input_new.retain(|lt| fp.contains(&lt.0));
+    for pairs in ft.discarded_new.values_mut() {
+        pairs.retain(|(evt, _)| fp.contains(evt));
+    }
+    for v in ft.sent_events.values_mut() {
+        v.retain(|t| fp.contains(t));
+    }
+    if fp.is_bottom() {
+        // Initial state: nothing was ever sent.
+        ft.sent_total.clear();
+    }
+    (outcome, regen)
+}
+
+/// Reset a full-history processor to H(p)@f by replaying the filtered
+/// history through the operator — generic over the engine view like
+/// [`rollback_proc_on`] (the replay touches only the processor itself
+/// and its own mirror). Returns the regenerated sends (virtual log for
+/// Q′). Notification requests regenerated by the replay that were not
+/// consumed by replayed notifications are re-armed.
+fn replay_history_on<V: FtView>(
+    view: &mut V,
+    topo: &Topology,
+    ft: &ProcFt,
+    p: ProcId,
+    f: &Frontier,
+) -> Vec<(EdgeId, Time, Batch)> {
+    view.proc_restore(p).reset();
+    let events: Vec<HistoryEvent> =
+        ft.history.iter().filter(|ev| f.contains(&ev.time())).cloned().collect();
+    let out_edges = topo.out_edges(p).to_vec();
+    let summaries: Vec<Summary> =
+        out_edges.iter().map(|&e| Summary::of(topo.projection(e))).collect();
+    let seq_dst: Vec<bool> = out_edges
+        .iter()
+        .map(|&e| topo.domain(topo.dst(e)) == crate::time::TimeDomain::Seq)
+        .collect();
+    let mut sends = Vec::new();
+    let mut requested: Vec<Time> = Vec::new();
+    let mut consumed: Vec<Time> = Vec::new();
+    // Sequence numbering restarts from the history's beginning, just
+    // like the original execution did (pre-increment to match
+    // `split_staged`: the first record gets `(e, 1)`).
+    let mut seq_counts: Vec<u64> = vec![0; out_edges.len()];
+    for ev in events {
+        let t = ev.time();
+        let mut ctx = crate::engine::Ctx::new(t, &out_edges, &summaries, &seq_dst);
+        match &ev.kind {
+            HistoryKind::Message { edge, time, data } => {
+                // Re-deliver the recorded batch whole — replay is
+                // byte-identical to the original delivery.
+                let port = topo.input_port(*edge);
+                view.proc_restore(p).on_batch(port, *time, data.records().to_vec(), &mut ctx);
+            }
+            HistoryKind::Notification { time } => {
+                consumed.push(*time);
+                view.proc_restore(p).on_notification(*time, &mut ctx);
+            }
+            HistoryKind::Input { time, data } => {
+                view.proc_restore(p).on_input(*time, data.clone(), &mut ctx);
+            }
+        }
+        let (staged, notify) = ctx.into_parts();
+        for (port, batch) in staged {
+            let e = out_edges[port];
+            if seq_dst[port] {
+                // Mirror the engine flush: every record into a seq
+                // domain carries its own `(e, s)` time.
+                for r in batch.into_records() {
+                    let c = &mut seq_counts[port];
+                    *c += 1;
+                    sends.push((e, t, Batch::one(Time::seq(e, *c), r)));
+                }
+            } else {
+                sends.push((e, t, batch));
+            }
+        }
+        requested.extend(notify);
+    }
+    // Re-arm unconsumed notification requests.
+    for t in consumed {
+        if let Some(i) = requested.iter().position(|x| *x == t) {
+            requested.swap_remove(i);
+        }
+    }
+    requested.sort_by_key(|t| crate::time::LexTime(*t));
+    requested.dedup();
+    view.restore_pending(p, requested);
+    sends
 }
 
 #[cfg(test)]

@@ -150,6 +150,24 @@ impl RollbackPlan {
             .map(|(i, _)| ProcId(i as u32))
             .collect()
     }
+
+    /// Distinct shard groups among the rolled-back processors under the
+    /// given proc→group assignment — the restore parallelism a parallel
+    /// recovery ([`crate::ft::FtSystem::recover_parallel`]) can achieve
+    /// for this plan (its `FtStats::recovery_parallelism` gauge records
+    /// exactly this when every group restores concurrently).
+    pub fn rollback_groups(&self, group_of: &[usize]) -> usize {
+        let mut groups: Vec<usize> = self
+            .f
+            .iter()
+            .enumerate()
+            .filter(|(_, f)| !f.is_top())
+            .map(|(i, _)| group_of[i])
+            .collect();
+        groups.sort_unstable();
+        groups.dedup();
+        groups.len()
+    }
 }
 
 /// Evaluate φ(d)(g) for edge `d` given the *source's* chosen frontier `g`:

@@ -666,6 +666,16 @@ fn writer_loop(staging: Arc<Staging>, inner: Weak<Mutex<Inner>>) {
 /// Durable store with ack semantics. Cloneable handle; the backend
 /// serializes its own access through the handle's lock, and the staging
 /// queue (see the module docs) serializes acknowledgement order.
+///
+/// The handle is `Send + Sync`, which is what lets both parallel drains
+/// and parallel recovery share one store: every durable key is scoped to
+/// a processor (`Key { proc, .. }`) and every processor has exactly one
+/// owning worker, so concurrent scans, staged writes and deletions from
+/// different workers touch disjoint key ranges — the lock only orders
+/// physically interleaved operations, it never arbitrates a logical
+/// conflict. During a parallel cold restart the index is effectively
+/// read-only: the only writes are orphan deletions inside the scanning
+/// worker's own per-proc range.
 #[derive(Clone)]
 pub struct Store {
     inner: Arc<Mutex<Inner>>,

@@ -114,8 +114,9 @@ impl Shape {
 pub struct Knobs {
     /// Channel coalescing cap.
     pub batch_cap: usize,
-    /// Worker threads (1 = sequential engine; >1 = parallel executor,
-    /// crashes then land at drain boundaries only).
+    /// Worker threads (1 = sequential engine; >1 = parallel executor —
+    /// crashes land mid-drain between bounded slices, and recovery and
+    /// cold reopen then run decomposed on the worker pool).
     pub threads: usize,
     /// Staged-writer discipline of the store.
     pub persist_mode: PersistMode,
@@ -155,7 +156,8 @@ impl Knobs {
     /// from the per-event `sent_seq` counts; see `FAILURE_MODES.md`).
     pub fn generate(rng: &mut Rng, shape: &Shape) -> Knobs {
         let batch_cap = *rng.choose(&[1usize, 2, 8, 64]);
-        // Bias toward 1: only the sequential engine can crash mid-drain.
+        // Bias toward 1 (the reference shape), but keep the parallel
+        // engine — and with it parallel recovery — well represented.
         let threads = *rng.choose(&[1usize, 1, 2, 4]);
         // Bias toward None (the pre-backpressure behavior), but make the
         // pathological tiny budgets common enough to matter.
@@ -416,13 +418,17 @@ fn build_inner(
             knobs.batch_cap,
         ),
         Some(slot) => {
-            let (sys, report) = FtSystem::reopen_sharded(
+            // T > 1 fans the key-range scans, chain materializations and
+            // the everyone-crashed recovery across the worker pool;
+            // T = 1 is the sequential reopen. Byte-identical either way.
+            let (sys, report) = FtSystem::reopen_sharded_parallel(
                 &plan,
                 factories,
                 &policies,
                 Delivery::Fifo,
                 store,
                 knobs.batch_cap,
+                knobs.threads.max(1),
             );
             *slot = Some(report);
             sys

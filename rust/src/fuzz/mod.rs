@@ -431,25 +431,38 @@ impl<'a> Driver<'a> {
         }
     }
 
-    /// Drain to quiescence, firing scheduled crashes. Only the
-    /// sequential engine can act mid-drain (the parallel executor
-    /// pauses, drains, and rolls back at batch boundaries — §4.4's
-    /// pause-the-world, which is exactly the drain boundary here).
+    /// Drain to quiescence, firing scheduled crashes. The sequential
+    /// engine checks the schedule before every step; the parallel
+    /// executor runs the drain in bounded slices and fires due crashes
+    /// between them, so faults land genuinely *mid-drain* (queues
+    /// non-empty, epoch in flight) and recovery itself then runs
+    /// decomposed on the worker pool
+    /// ([`crate::ft::FtSystem::recover_parallel`]).
     fn drain(&mut self, ep: u64) {
         let delay = self.faults.detector.confirmation_delay();
         if self.built.threads > 1 {
+            // Fixed slice budget — no RNG draws, so fault schedules stay
+            // a pure function of the seed and old corpus entries keep
+            // their meaning.
+            const MID_DRAIN_BUDGET: usize = 24;
+            let mut total = 0usize;
             loop {
-                let steps = self.built.run(self.max_steps);
-                if steps >= self.max_steps {
+                let budget = MID_DRAIN_BUDGET.min(self.max_steps);
+                let steps = self.built.run(budget);
+                total += steps;
+                let now = self.built.sys.engine.events_processed().saturating_sub(delay);
+                let due = self.crashes.due(now);
+                if !due.is_empty() {
+                    self.crash_and_recover(due);
+                    continue;
+                }
+                if steps < budget {
+                    return; // quiesced, nothing due
+                }
+                if total >= self.max_steps {
                     self.violations.push(format!("epoch {ep}: drain did not quiesce"));
                     return;
                 }
-                let now = self.built.sys.engine.events_processed().saturating_sub(delay);
-                let due = self.crashes.due(now);
-                if due.is_empty() {
-                    return;
-                }
-                self.crash_and_recover(due);
             }
         } else {
             let mut steps = 0usize;
@@ -478,7 +491,7 @@ impl<'a> Driver<'a> {
     /// recovery and its post-recovery drain.
     fn crash_and_recover(&mut self, victims: Vec<ProcId>) {
         self.built.sys.inject_failures(&victims);
-        let report = self.built.sys.recover();
+        let report = self.recover_now();
         self.recoveries += 1;
         self.check_recovery_trace(&report);
         self.resupply(&report.plan);
@@ -489,13 +502,25 @@ impl<'a> Driver<'a> {
         }
         if let Some(v) = self.double_pending.take() {
             self.built.sys.inject_failures(&[v]);
-            let report = self.built.sys.recover();
+            let report = self.recover_now();
             self.recoveries += 1;
             self.check_recovery_trace(&report);
             self.resupply(&report.plan);
             if let Some(m) = &mut self.mon {
                 *m = self.built.monitor();
             }
+        }
+    }
+
+    /// Run one recovery on whichever engine the knobs selected: the
+    /// multi-threaded driver rolls back and replays decomposed on the
+    /// worker pool, the sequential one stays on the tid-0 path. Both
+    /// produce byte-identical state, which the output digest checks.
+    fn recover_now(&mut self) -> crate::ft::recovery::RecoveryReport {
+        if self.built.threads > 1 {
+            self.built.sys.recover_parallel(&self.built.groups, self.built.threads)
+        } else {
+            self.built.sys.recover()
         }
     }
 

@@ -83,6 +83,53 @@ fn drive(
     (out, p.sys.stats.clone(), report)
 }
 
+/// Drive the workload with a fixed two-shard mid-epoch failure (count#0
+/// and count#3 — distinct shard groups at T ∈ {2, 4}, so the decomposed
+/// path restores on ≥ 2 workers), recovering on the engine the
+/// `decomposed` flag selects: `FtSystem::recover` (sequential) or
+/// `FtSystem::recover_parallel` over the drain's own shard groups
+/// (which itself degenerates to the sequential path at T = 1).
+fn drive_two_shard_failure(
+    cfg: &ShardedConfig,
+    seed: u64,
+    decomposed: bool,
+) -> (Vec<u8>, FtStats, RecoveryReport) {
+    const FAIL_SHARDS: [usize; 2] = [0, 3];
+    let mut p = pipeline(cfg);
+    let src = p.src_proc();
+    for ep in 0..2u64 {
+        drive_epoch(&mut p, seed, ep, RECORDS, KEYS);
+    }
+    // Open epoch 2, push half the batch, step partway into the exchange,
+    // crash both shards, recover, resume.
+    let recs = epoch_records(seed, 2, RECORDS, KEYS);
+    p.sys.advance_input(src, Time::epoch(2));
+    for r in &recs[..RECORDS / 2] {
+        p.sys.push_input(src, Time::epoch(2), r.clone());
+    }
+    p.run(60);
+    let victims: Vec<_> = FAIL_SHARDS.iter().map(|&s| p.plan.proc(p.count, s)).collect();
+    p.sys.inject_failures(&victims);
+    let report = if decomposed {
+        let (groups, threads) = (p.groups.clone(), p.threads);
+        p.sys.recover_parallel(&groups, threads)
+    } else {
+        p.sys.recover()
+    };
+    for r in &recs[RECORDS / 2..] {
+        p.sys.push_input(src, Time::epoch(2), r.clone());
+    }
+    p.sys.advance_input(src, Time::epoch(3));
+    p.run(5_000_000);
+    for ep in 3..EPOCHS {
+        drive_epoch(&mut p, seed, ep, RECORDS, KEYS);
+    }
+    p.sys.close_input(src);
+    p.run(5_000_000);
+    let out = canonical_output(&p.sys, p.collect_proc());
+    (out, p.sys.stats.clone(), report)
+}
+
 /// The deterministic fault-injection grid: recovered output must be
 /// byte-identical to the failure-free run in every cell.
 #[test]
@@ -399,6 +446,68 @@ fn recovery_grid_is_byte_identical_under_parallel_execution() {
     }
 }
 
+/// The §4.4 decomposed-recovery grid: the same two-shard failure
+/// recovered by `recover_parallel` — rollback partitioned across the
+/// shard-group workers, replay fanned through the per-group mailboxes —
+/// must be byte-identical to the sequentially recovered run and to the
+/// failure-free run in every cell of threads {1, 2, 4} × batch caps
+/// {1, 8} × checkpoint policies {Lazy, FullHistory}. At T ≥ 2 the two
+/// victims (count#0, count#3) land in distinct shard groups, so the
+/// `recovery_parallelism` gauge must report ≥ 2 restoring workers; at
+/// T = 1 the decomposed entry point degenerates to the sequential path
+/// and the gauge stays 1.
+#[test]
+fn parallel_recovery_grid_is_byte_identical_to_sequential() {
+    let policies = [Policy::Lazy { every: 1, log_outputs: true }, Policy::FullHistory];
+    for count_policy in policies {
+        let base =
+            ShardedConfig { workers: 4, two_stage: true, count_policy, ..Default::default() };
+        let (clean, _, _) = drive(&base, 7, None);
+        // Sequential baseline: the identical failure recovered by
+        // `FtSystem::recover` on the single-threaded engine.
+        let (seq_out, seq_stats, seq_rep) = drive_two_shard_failure(&base, 7, false);
+        assert_eq!(seq_rep.plan.rolled_back().len(), 2, "both victims roll back");
+        assert!(seq_rep.replayed > 0, "the in-flight epoch replays");
+        assert_eq!(seq_stats.recovery_parallelism, 1, "sequential recovery reports one worker");
+        assert_eq!(clean, seq_out, "sequential recovery diverged: {count_policy:?}");
+        for threads in [1usize, 2, 4] {
+            for batch_cap in [1usize, 8] {
+                let cfg = ShardedConfig { threads, batch_cap, ..base.clone() };
+                let (out, stats, rep) = drive_two_shard_failure(&cfg, 7, true);
+                assert_eq!(
+                    rep.plan.rolled_back().len(),
+                    2,
+                    "both victims roll back: threads={threads} cap={batch_cap}"
+                );
+                assert!(rep.replayed > 0, "replay reached the victims' key ranges");
+                assert_eq!(stats.recoveries, 1);
+                assert_eq!(
+                    seq_out, out,
+                    "decomposed recovery diverged from sequential: threads={threads} \
+                     cap={batch_cap} {count_policy:?}"
+                );
+                if threads >= 2 {
+                    assert!(
+                        stats.recovery_parallelism >= 2,
+                        "two victims in distinct groups must restore on >= 2 workers: \
+                         threads={threads} cap={batch_cap} (got {})",
+                        stats.recovery_parallelism
+                    );
+                    assert!(
+                        stats.replay_workers >= 1,
+                        "at least one worker must replay: threads={threads} cap={batch_cap}"
+                    );
+                } else {
+                    assert_eq!(
+                        stats.recovery_parallelism, 1,
+                        "T=1 degenerates to the sequential path"
+                    );
+                }
+            }
+        }
+    }
+}
+
 /// Regression for the replay coalescing bypass: a *second* failure
 /// injected immediately after recovery — while the first recovery's
 /// replayed batches are still queued, undelivered — must recover to
@@ -535,6 +644,134 @@ fn traced_recovery_emits_well_nested_timeline() {
 
     // Finish the run: the traced execution's observable output is
     // byte-identical to the untraced failure-free one.
+    for r in &recs[RECORDS / 2..] {
+        p.sys.push_input(src, Time::epoch(2), r.clone());
+    }
+    p.sys.advance_input(src, Time::epoch(3));
+    p.run(5_000_000);
+    for ep in 3..EPOCHS {
+        drive_epoch(&mut p, seed, ep, RECORDS, KEYS);
+    }
+    p.sys.close_input(src);
+    p.run(5_000_000);
+    assert_eq!(clean, canonical_output(&p.sys, p.collect_proc()), "tracing is observation-only");
+}
+
+/// Observability satellite, decomposed edition: a traced two-shard
+/// kill-and-recover at T = 4 emits the *per-worker* recovery timeline.
+/// The coordinator (tid 0) still owns the single enclosing `recovery`
+/// span and the `solver` span; the rollback work appears as per-worker
+/// `rollback` sub-spans on the worker tids (group + 1), one per shard
+/// group that restores — with victims count#0 and count#3 that is
+/// exactly groups 0 and 3. Every worker sub-span and every per-processor
+/// `rollback_proc` instant must nest inside the coordinator's recovery
+/// span, replay on a worker must follow that worker's rollback, and the
+/// `recovery_parallelism` / `replay_workers` gauges must agree with the
+/// span census. The traced, decomposed-recovered run stays
+/// byte-identical to the sequential failure-free one.
+#[test]
+fn traced_parallel_recovery_emits_per_worker_timeline() {
+    use falkirk::trace::Tracer;
+    let seed = 7;
+    let seq_cfg = ShardedConfig { workers: 4, ..Default::default() };
+    let (clean, _, _) = drive(&seq_cfg, seed, None);
+    let cfg = ShardedConfig { threads: 4, ..seq_cfg };
+    let mut p = pipeline(&cfg);
+    let tracer = Tracer::new();
+    p.sys.set_tracer(Some(tracer.clone()));
+    let src = p.src_proc();
+    for ep in 0..2u64 {
+        drive_epoch(&mut p, seed, ep, RECORDS, KEYS);
+    }
+
+    // Open epoch 2, push half the batch, step partway into the exchange,
+    // then crash count#0 and count#3 — shard groups 0 and 3 at T = 4.
+    let recs = epoch_records(seed, 2, RECORDS, KEYS);
+    p.sys.advance_input(src, Time::epoch(2));
+    for r in &recs[..RECORDS / 2] {
+        p.sys.push_input(src, Time::epoch(2), r.clone());
+    }
+    p.run(60);
+    let victims = [p.plan.proc(p.count, 0), p.plan.proc(p.count, 3)];
+    p.sys.inject_failures(&victims);
+    let (groups, threads) = (p.groups.clone(), p.threads);
+    let rep = p.sys.recover_parallel(&groups, threads);
+    assert_eq!(rep.plan.rolled_back().len(), 2, "both victims roll back");
+    assert!(rep.replayed > 0, "the in-flight epoch replays");
+
+    let evs = tracer.events();
+    assert!(evs.windows(2).all(|w| w[0].ts_ns <= w[1].ts_ns), "events sorted by start");
+    let find = |name: &str| {
+        evs.iter().filter(|e| e.cat == "recovery" && e.name == name).collect::<Vec<_>>()
+    };
+    let (detect, recovery, solver) = (find("detect"), find("recovery"), find("solver"));
+    assert_eq!(
+        (detect.len(), recovery.len(), solver.len()),
+        (1, 1, 1),
+        "one coordinator timeline per recovery"
+    );
+    assert_eq!(detect[0].arg("procs"), Some(2), "two failures detected");
+    assert_eq!(recovery[0].tid, 0, "the enclosing recovery span belongs to the coordinator");
+    assert_eq!(solver[0].tid, 0, "the Fig. 6 solve runs on the coordinator");
+    assert!(recovery[0].contains(solver[0]), "solver nests inside recovery");
+
+    // Rollback decomposes onto the workers: exactly one `rollback`
+    // sub-span per restoring shard group (groups 0 and 3 → tids 1 and
+    // 4), each nested in the coordinator's recovery span, together
+    // accounting for both restored processors.
+    let rollback = find("rollback");
+    assert_eq!(rollback.len(), 2, "one rollback sub-span per restoring worker");
+    for rb in &rollback {
+        assert!(rb.tid >= 1, "rollback runs on a worker tid, not the coordinator");
+        assert!(recovery[0].contains(rb), "worker rollback nests inside recovery");
+    }
+    let rb_tids: Vec<u32> = rollback.iter().map(|e| e.tid).collect();
+    assert!(rb_tids.contains(&1) && rb_tids.contains(&4), "groups 0 and 3 restore");
+    let restored: u64 = rollback.iter().filter_map(|e| e.arg("procs")).sum();
+    assert_eq!(restored, 2, "the worker sub-spans account for both victims");
+
+    // Per-processor rollback instants: one per victim, emitted by the
+    // owning worker, inside the recovery span.
+    let per_proc = find("rollback_proc");
+    assert_eq!(per_proc.len(), rep.plan.rolled_back().len());
+    let mut instant_procs: Vec<u64> = per_proc.iter().filter_map(|e| e.arg("proc")).collect();
+    instant_procs.sort_unstable();
+    let mut victim_ids: Vec<u64> = victims.iter().map(|v| v.0 as u64).collect();
+    victim_ids.sort_unstable();
+    assert_eq!(instant_procs, victim_ids, "one instant per victim, from its owner");
+    for i in &per_proc {
+        assert!(i.tid >= 1, "instants come from the owning worker");
+        assert!(recovery[0].contains(i), "instants land inside the recovery span");
+    }
+
+    // Replay fans out on the workers too: here only group 0 owns a
+    // replaying source (the logical `src`), and its records tally to the
+    // report. On any one worker, replay follows that worker's rollback.
+    let replay = find("replay");
+    assert!(!replay.is_empty(), "at least one worker replays");
+    let replayed: u64 = replay.iter().filter_map(|e| e.arg("records")).sum();
+    assert_eq!(replayed, rep.replayed as u64, "worker replay spans tally to the report");
+    for rp in &replay {
+        assert!(rp.tid >= 1, "replay runs on a worker tid");
+        assert!(recovery[0].contains(rp), "worker replay nests inside recovery");
+        for rb in &rollback {
+            if rb.tid == rp.tid {
+                assert!(rb.end_ns() <= rp.ts_ns, "per-worker replay follows its rollback");
+            }
+        }
+    }
+
+    // The gauges agree with the span census.
+    assert_eq!(p.sys.stats.recovery_parallelism, 2, "two workers restored in parallel");
+    assert!(p.sys.stats.replay_workers >= 1, "at least one worker replayed");
+    assert_eq!(recovery[0].arg("replayed"), Some(rep.replayed as u64));
+    assert_eq!(
+        recovery[0].arg("procs_rolled_back"),
+        Some((rep.restored_from_checkpoint + rep.reset_to_empty) as u64)
+    );
+
+    // Finish the run: decomposed recovery under tracing is still
+    // byte-identical to the sequential failure-free run.
     for r in &recs[RECORDS / 2..] {
         p.sys.push_input(src, Time::epoch(2), r.clone());
     }
